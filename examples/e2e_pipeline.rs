@@ -1,0 +1,130 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Exercises every layer in composition:
+//!   L1/L2 — the Pallas distance + assembly kernels inside the JAX block
+//!           program, AOT-lowered to `artifacts/*.hlo.txt` at build time
+//!   runtime — PJRT CPU client loads + compiles the HLO text
+//!   L3   — the coordinator shards the Circle test set, runs blocks
+//!           through per-worker executors with backpressure, and merges
+//!
+//! It then cross-checks the XLA result against the pure-Rust engine and
+//! the O(2ⁿ) brute force (on a subsample), checks the axioms, and prints
+//! the headline table recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline
+
+use std::path::Path;
+use stiknn::coordinator::{run_job_with_engine, ValuationJob};
+use stiknn::data::load_dataset;
+use stiknn::report::table::Table;
+use stiknn::runtime::{Engine, Manifest};
+use stiknn::shapley::{axioms, sti_exact};
+use stiknn::util::timer::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let manifest = Manifest::load(artifacts)?;
+    println!(
+        "loaded manifest: {} artifacts ({} sti, {} knn_shapley)\n",
+        manifest.artifacts.len(),
+        manifest.of_program("sti").len(),
+        manifest.of_program("knn_shapley").len()
+    );
+
+    // The paper's headline workload: Circle, n=600, k=5 (Fig. 3 shape).
+    let ds = load_dataset("circle", 600, 150, 42).unwrap();
+    let k = 5;
+    println!(
+        "workload: {} n={} t={} d={} k={k}",
+        ds.name,
+        ds.n_train(),
+        ds.n_test(),
+        ds.d
+    );
+
+    let mut table = Table::new(&[
+        "engine", "workers", "blocks", "wall", "test-pts/s", "max|Δ| vs rust@1",
+    ]);
+
+    // Reference: single-threaded pure Rust.
+    let job = ValuationJob::new(k).with_workers(1).with_block_size(32);
+    let reference = run_job_with_engine(&ds, &job, artifacts)?;
+    table.row(&[
+        "rust".into(),
+        "1".into(),
+        reference.blocks.to_string(),
+        fmt_duration(reference.elapsed),
+        format!("{:.0}", reference.throughput),
+        "0".into(),
+    ]);
+
+    for workers in [2usize, 4] {
+        let job = ValuationJob::new(k).with_workers(workers).with_block_size(32);
+        let res = run_job_with_engine(&ds, &job, artifacts)?;
+        table.row(&[
+            "rust".into(),
+            workers.to_string(),
+            res.blocks.to_string(),
+            fmt_duration(res.elapsed),
+            format!("{:.0}", res.throughput),
+            format!("{:.1e}", res.phi.max_abs_diff(&reference.phi)),
+        ]);
+    }
+
+    for workers in [1usize, 2] {
+        let job = ValuationJob::new(k)
+            .with_engine(Engine::Xla)
+            .with_workers(workers);
+        let res = run_job_with_engine(&ds, &job, artifacts)?;
+        let delta = res.phi.max_abs_diff(&reference.phi);
+        table.row(&[
+            "xla (AOT artifact)".into(),
+            workers.to_string(),
+            res.blocks.to_string(),
+            fmt_duration(res.elapsed),
+            format!("{:.0}", res.throughput),
+            format!("{:.1e}", delta),
+        ]);
+        anyhow::ensure!(delta < 5e-4, "XLA/rust divergence {delta}");
+    }
+
+    println!("\n{}", table.render());
+
+    // Axioms on the final matrix (the §3.2 structural claims).
+    let reports = axioms::check_all(
+        &reference.phi, &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+        k, 1e-9,
+    );
+    println!("axioms:\n{}", axioms::format_reports(&reports));
+    anyhow::ensure!(axioms::all_hold(&reports), "axiom violation");
+
+    // Exactness vs the O(2ⁿ) baseline on a subsample (n=14 is enumerable).
+    let sub = ds.retain_train(&(0..14).collect::<Vec<_>>());
+    let t0 = std::time::Instant::now();
+    let exact = sti_exact::sti_exact(
+        &sub.train_x, &sub.train_y, sub.d, &sub.test_x[..20 * sub.d], &sub.test_y[..20], 5,
+    );
+    let exact_time = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let fast = stiknn::shapley::sti_knn(
+        &sub.train_x, &sub.train_y, sub.d, &sub.test_x[..20 * sub.d], &sub.test_y[..20],
+        &stiknn::shapley::StiParams::new(5),
+    );
+    let fast_time = t1.elapsed();
+    let err = exact.max_abs_diff(&fast);
+    println!(
+        "exactness vs O(2ⁿ) brute force (n=14, t=20): max|Δ| = {err:.2e}; \
+         brute {} vs STI-KNN {} ({}x speedup at toy scale)",
+        fmt_duration(exact_time),
+        fmt_duration(fast_time),
+        (exact_time.as_secs_f64() / fast_time.as_secs_f64()) as u64,
+    );
+    anyhow::ensure!(err < 1e-12, "fast algorithm is not exact");
+
+    println!("\ne2e_pipeline OK — record the table above in EXPERIMENTS.md §E2E");
+    Ok(())
+}

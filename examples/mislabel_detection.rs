@@ -1,0 +1,46 @@
+//! Fig. 5 reproduction: mislabeled points behave like the opposite class.
+//!
+//! Flips 5% of the Circle training labels, recomputes the interaction
+//! matrix, and detects the flips from row patterns (a point whose row
+//! correlates better with the other class's template is suspicious).
+//!
+//!     cargo run --release --example mislabel_detection
+
+use stiknn::analysis::mislabel::{auc, mislabel_scores, top_prevalence_recall};
+use stiknn::data::{corrupt, load_dataset};
+use stiknn::report::table::Table;
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+
+fn main() {
+    let k = 5;
+    let mut table = Table::new(&["dataset", "flip%", "AUC", "top-prev recall"]);
+    for (name, flip) in [
+        ("circle", 0.05),
+        ("circle", 0.10),
+        ("moon", 0.05),
+        ("moon", 0.10),
+    ] {
+        let mut ds = load_dataset(name, 600, 150, 7).unwrap();
+        let truth = corrupt::flip_labels(&mut ds, flip, 0xF11F ^ flip.to_bits());
+        let phi = sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(k),
+        );
+        let rep = mislabel_scores(&phi, &ds.train_y, ds.classes);
+        let a = auc(&rep.margins, &truth);
+        let r = top_prevalence_recall(&rep.margins, &truth);
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}%", flip * 100.0),
+            format!("{a:.3}"),
+            format!("{r:.3}"),
+        ]);
+    }
+    println!("mislabel detection from STI interaction patterns (paper Fig. 5):\n");
+    println!("{}", table.render());
+    println!(
+        "interpretation: AUC ≈ 1 means flipped points' interaction rows\n\
+         pattern-match the opposite class, which is exactly the paper's\n\
+         visual claim in Fig. 5 (right panel)."
+    );
+}

@@ -1,0 +1,28 @@
+//! Perf probe for the §Perf pass: isolates the STI-KNN hot path at the
+//! shapes the optimization log tracks. Not a paper experiment.
+//!
+//!     cargo run --release --example perf_probe
+
+use stiknn::data::load_dataset;
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+
+fn main() {
+    for (n, t, k, reps) in [(600usize, 300usize, 5usize, 5u32), (1600, 64, 5, 3)] {
+        let ds = load_dataset("circle", n, t, 5).unwrap();
+        let params = StiParams::new(k);
+        // warmup
+        let _ = sti_knn(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &params);
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(sti_knn(
+                &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &params,
+            ));
+        }
+        let per = t0.elapsed() / reps;
+        let cells = (n * n / 2) as f64 * t as f64;
+        println!(
+            "n={n} t={t} k={k}: {per:?}/run  {:.2} ns/pair-cell",
+            per.as_nanos() as f64 / cells
+        );
+    }
+}

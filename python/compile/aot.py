@@ -1,0 +1,152 @@
+"""AOT entry point: lower the L2 programs to HLO text + a JSON manifest.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the
+artifacts via `HloModuleProto::from_text_file` and compiles them on the
+PJRT CPU client. Python never runs on the request path.
+
+Interchange format is HLO **text**, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact grid
+-------------
+One artifact per (program, n, d, b, k). The interaction program has a
+fixed train-set size n (the coefficients of Eq. 6/7 depend on n, so train
+padding would change the answer — test-block padding is handled by the
+mask input instead). The default grid covers the paper's experiment
+shapes (Circle = 600 train points, 2-D, k ∈ {5, 9, 20}) plus smaller
+shapes used by the integration tests and the engine benches.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (n, d, b, k) grid for the `sti` program; the same (n, d, b) shapes are
+# reused for the `knn_shapley` baseline program with its own k.
+DEFAULT_GRID = [
+    # integration-test shapes
+    ("sti", 32, 2, 8, 3),
+    ("sti", 64, 2, 16, 5),
+    ("knn_shapley", 64, 2, 16, 5),
+    # engine-bench shapes
+    ("sti", 128, 8, 32, 5),
+    ("sti", 256, 8, 32, 5),
+    # paper Circle dataset (Figs. 3, 7): 300+300 train points, 2-D
+    ("sti", 600, 2, 32, 5),
+    ("sti", 600, 2, 32, 9),
+    ("sti", 600, 2, 32, 20),
+    # unbalanced Circle (Fig. 4): 60+300
+    ("sti", 360, 2, 32, 5),
+    ("knn_shapley", 600, 2, 32, 5),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (ids reassigned on parse)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(program: str, n: int, d: int, b: int, k: int) -> str:
+    """Lower one (program, shape) instance to HLO text."""
+    if program == "sti":
+        fn = model.make_sti_fn(k=k, interpret=True)
+    elif program == "knn_shapley":
+        fn = model.make_knn_shapley_fn(k=k, interpret=True)
+    else:
+        raise ValueError(f"unknown program {program!r}")
+    args = (
+        jax.ShapeDtypeStruct((n, d), jnp.float32),  # train_x
+        jax.ShapeDtypeStruct((n,), jnp.int32),      # train_y
+        jax.ShapeDtypeStruct((b, d), jnp.float32),  # test_x
+        jax.ShapeDtypeStruct((b,), jnp.int32),      # test_y
+        jax.ShapeDtypeStruct((b,), jnp.float32),    # mask
+    )
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def artifact_name(program: str, n: int, d: int, b: int, k: int) -> str:
+    return f"{program}_n{n}_d{d}_b{b}_k{k}"
+
+
+def build(out_dir: str, grid=None, force: bool = False) -> dict:
+    grid = grid or DEFAULT_GRID
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for program, n, d, b, k in grid:
+        name = artifact_name(program, n, d, b, k)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        if force or not os.path.exists(path):
+            text = lower_program(program, n, d, b, k)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {fname} ({len(text)} chars)", file=sys.stderr)
+        with open(path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()[:16]
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "program": program,
+                "n": n,
+                "d": d,
+                "b": b,
+                "k": k,
+                "sha256_16": digest,
+                "inputs": [
+                    {"name": "train_x", "shape": [n, d], "dtype": "f32"},
+                    {"name": "train_y", "shape": [n], "dtype": "i32"},
+                    {"name": "test_x", "shape": [b, d], "dtype": "f32"},
+                    {"name": "test_y", "shape": [b], "dtype": "i32"},
+                    {"name": "mask", "shape": [b], "dtype": "f32"},
+                ],
+                "outputs": (
+                    [
+                        {"name": "phi_sum", "shape": [n, n], "dtype": "f32"},
+                        {"name": "weight", "shape": [1], "dtype": "f32"},
+                    ]
+                    if program == "sti"
+                    else [
+                        {"name": "s_sum", "shape": [n], "dtype": "f32"},
+                        {"name": "weight", "shape": [1], "dtype": "f32"},
+                    ]
+                ),
+            }
+        )
+    manifest = {"version": 1, "interchange": "hlo-text", "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts -> {out_dir}/manifest.json",
+          file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="re-lower even if present")
+    args = ap.parse_args()
+    build(args.out_dir, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernel: tiled pairwise squared-euclidean distances.
+
+Computes ``D[p, i] = ||test_x[p] - train_x[i]||^2`` for a block of test
+points against the full training set, decomposed MXU-style as
+
+    D = ||t||^2 ⊕ ||x||^2 − 2 · T Xᵀ
+
+so the inner loop is a matmul that maps onto the TPU MXU systolic array
+(the paper's hot substrate is rank computation; on GPU one would use a
+threadblock-tiled GEMM — on TPU the equivalent is BlockSpec tiles feeding
+the 128×128 MXU, with the rank-1 norm corrections on the VPU).
+
+The kernel is tiled over (test-tile, train-tile); the feature dimension d
+is kept whole inside a tile (d ≤ a few thousand fits VMEM comfortably:
+a 128×d f32 tile at d=4096 is 2 MiB ≪ 16 MiB VMEM).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated analytically (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. 128 matches both the MXU edge and the f32 VPU lane tiling
+# (8×128); test blocks are usually ≤ 64 so the row tile clamps to b.
+ROW_TILE = 128
+COL_TILE = 128
+
+
+def _dist_kernel(t_ref, x_ref, t2_ref, x2_ref, o_ref):
+    """One (row_tile × col_tile) output tile.
+
+    t_ref:  (TR, d)  test-point features for this row tile
+    x_ref:  (TC, d)  train-point features for this column tile
+    t2_ref: (TR, 1)  precomputed ||t||^2
+    x2_ref: (1, TC)  precomputed ||x||^2
+    o_ref:  (TR, TC) output distances
+    """
+    # MXU: −2 · T Xᵀ.  Accumulate in f32 regardless of input dtype.
+    cross = jax.lax.dot_general(
+        t_ref[...],
+        x_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # VPU: rank-1 corrections.
+    o_ref[...] = t2_ref[...] + x2_ref[...] - 2.0 * cross
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pairwise_sq_dists(test_x, train_x, *, interpret=True):
+    """Pairwise squared euclidean distances, shape (b, n), f32.
+
+    Pads b and n up to the tile grid, runs the Pallas kernel, slices back.
+    The norms ||t||², ||x||² are computed once outside the kernel (they are
+    O(bd + nd), negligible next to the O(bnd) cross term) and streamed in
+    per tile.
+    """
+    b, d = test_x.shape
+    n, d2 = train_x.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    test_x = test_x.astype(jnp.float32)
+    train_x = train_x.astype(jnp.float32)
+
+    rt = min(ROW_TILE, max(8, b))
+    ct = min(COL_TILE, max(8, n))
+    tp = _pad_to(test_x, rt, 0)
+    xp = _pad_to(train_x, ct, 0)
+    bp, np_ = tp.shape[0], xp.shape[0]
+
+    t2 = jnp.sum(tp * tp, axis=1, keepdims=True)          # (bp, 1)
+    x2 = jnp.sum(xp * xp, axis=1, keepdims=True).T        # (1, np)
+
+    grid = (bp // rt, np_ // ct)
+    out = pl.pallas_call(
+        _dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((ct, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((rt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, ct), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((rt, ct), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, np_), jnp.float32),
+        interpret=interpret,
+    )(tp, xp, t2, x2)
+    return out[:b, :n]

@@ -1,0 +1,185 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels and the full pipeline.
+
+Everything in this module is a *correctness reference*:
+
+- :func:`ref_pairwise_sq_dists`     — oracle for ``kernels.distance``
+- :func:`ref_assembly`              — oracle for ``kernels.sti``
+- :func:`alg1_superdiagonal`        — loop-faithful Algorithm 1 (lines 3-10)
+- :func:`alg1_matrix_one_test`      — loop-faithful Algorithm 1 (full matrix,
+  one test point), the gold standard the vectorized model is tested against
+- :func:`ref_sti_block`             — full-pipeline reference for a test block
+- :func:`valuation_u`               — Eq. (2) of the paper (used by the
+  brute-force Eq. (3) oracle in the tests)
+
+The loop-faithful functions intentionally mirror the paper's pseudocode
+(1-based indexing in comments) rather than being vectorized, so that any
+disagreement between the production path and the paper is attributable.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1)/(2): the KNN valuation function
+# ---------------------------------------------------------------------------
+
+def valuation_u(labels_sorted, y_test, subset, k):
+    """Eq. (2): u_{y_test}(S) for S a set of *sorted-order* indices (0-based).
+
+    ``labels_sorted`` are the train labels ordered from nearest to farthest
+    from the test point; ``subset`` selects which train points are present.
+    Only the ``min(k, |S|)`` nearest members of S vote.
+    """
+    members = sorted(subset)
+    hits = sum(
+        1 for idx in members[: min(k, len(members))] if labels_sorted[idx] == y_test
+    )
+    return hits / k
+
+
+# ---------------------------------------------------------------------------
+# Kernel oracles
+# ---------------------------------------------------------------------------
+
+def ref_pairwise_sq_dists(test_x, train_x):
+    """Squared euclidean distances, shape (b, n). Oracle for distance kernel."""
+    test_x = np.asarray(test_x, dtype=np.float64)
+    train_x = np.asarray(train_x, dtype=np.float64)
+    t2 = (test_x**2).sum(axis=1)[:, None]
+    x2 = (train_x**2).sum(axis=1)[None, :]
+    cross = test_x @ train_x.T
+    return t2 + x2 - 2.0 * cross
+
+
+def ref_assembly(ranks, colvals, diag, mask):
+    """Oracle for the STI assembly kernel.
+
+    Inputs are per-test-point, in ORIGINAL train order:
+      ranks   (b, n) — rank of train point i in the distance sort for test p
+      colvals (b, n) — superdiagonal value c_p at that point's own rank
+      diag    (b, n) — main-term value u_p(i) (label match / k)
+      mask    (b,)   — 1.0 for valid test points, 0.0 for padding
+
+    Output (n, n): sum over p of mask_p * M_p where
+      M_p[i, j] = diag_p[i]                    if i == j
+                  colvals_p[i] if ranks_p[i] > ranks_p[j] else colvals_p[j]
+    (i.e. the column value of whichever point is *farther* from the test
+    point — Eq. (8): within a column of the sorted-order upper triangle all
+    entries are equal, so the off-diagonal entry is c[max(rank_i, rank_j)].)
+    """
+    ranks = np.asarray(ranks)
+    colvals = np.asarray(colvals, dtype=np.float64)
+    diag = np.asarray(diag, dtype=np.float64)
+    mask = np.asarray(mask, dtype=np.float64)
+    b, n = ranks.shape
+    out = np.zeros((n, n), dtype=np.float64)
+    for p in range(b):
+        ri = ranks[p][:, None]
+        rj = ranks[p][None, :]
+        m = np.where(ri > rj, colvals[p][:, None], colvals[p][None, :])
+        np.fill_diagonal(m, diag[p])
+        out += mask[p] * m
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loop-faithful Algorithm 1
+# ---------------------------------------------------------------------------
+
+def alg1_superdiagonal(u, k):
+    """Lines 3-10 of Algorithm 1 for one test point.
+
+    ``u`` is the per-point valuation in sorted order (u[j] ∈ {0, 1/k}),
+    0-based.  Returns ``c`` of length n+1, 1-based: ``c[j] = φ_{j-1,j}``
+    for j = 2..n (c[0], c[1] unused, kept NaN).
+    """
+    u = np.asarray(u, dtype=np.float64)
+    n = u.shape[0]
+    if n < 2:
+        raise ValueError("Algorithm 1 needs n >= 2")
+    if k > n:
+        raise ValueError(f"Algorithm 1 is exact only for k <= n (k={k}, n={n})")
+    c = np.full(n + 1, np.nan)
+    # Line 3: φ_{n-1,n} = -2(n-k)/(n(n-1)) u(α_n)
+    c[n] = -2.0 * (n - k) / (n * (n - 1)) * u[n - 1]
+    # Lines 4-10: for j = n down to 3, compute φ_{j-2,j-1} from φ_{j-1,j}
+    for j in range(n, 2, -1):
+        if j > k + 1:
+            c[j - 1] = c[j] + 2.0 * (j - k - 1) / ((j - 2) * (j - 1)) * (
+                u[j - 1] - u[j - 2]
+            )
+        else:
+            c[j - 1] = c[j]
+    return c
+
+
+def alg1_matrix_one_test(labels_sorted, y_test, k, include_diag=True):
+    """Full Algorithm 1 matrix for one test point, in SORTED order.
+
+    Off-diagonal entries follow lines 11-14 (column equality, Eq. 8);
+    the diagonal carries the main term φ_ii(u) = u(i) (Eq. 4/5) when
+    ``include_diag`` is set, else zeros.
+    """
+    labels_sorted = np.asarray(labels_sorted)
+    n = labels_sorted.shape[0]
+    u = np.where(labels_sorted == y_test, 1.0 / k, 0.0)
+    c = alg1_superdiagonal(u, k)
+    phi = np.zeros((n, n), dtype=np.float64)
+    for j in range(2, n + 1):  # 1-based column
+        for i in range(1, j):  # 1-based row, upper triangle
+            phi[i - 1, j - 1] = c[j]
+            phi[j - 1, i - 1] = c[j]
+    if include_diag:
+        np.fill_diagonal(phi, u)
+    return phi
+
+
+def ref_sti_block(train_x, train_y, test_x, test_y, mask, k):
+    """Full-pipeline reference: (phi_sum, weight) for a block of test points.
+
+    ``phi_sum`` is the UNNORMALIZED sum over valid test points of the
+    per-test matrices, scattered back into original train order; ``weight``
+    is the number of valid test points.  The caller divides (Eq. 9).
+    """
+    train_x = np.asarray(train_x, dtype=np.float64)
+    train_y = np.asarray(train_y)
+    test_x = np.asarray(test_x, dtype=np.float64)
+    test_y = np.asarray(test_y)
+    mask = np.asarray(mask, dtype=np.float64)
+    n = train_x.shape[0]
+    dists = ref_pairwise_sq_dists(test_x, train_x)
+    phi_sum = np.zeros((n, n), dtype=np.float64)
+    for p in range(test_x.shape[0]):
+        if mask[p] == 0.0:
+            continue
+        order = np.argsort(dists[p], kind="stable")
+        m_sorted = alg1_matrix_one_test(train_y[order], test_y[p], k)
+        inv = np.argsort(order)
+        phi_sum += mask[p] * m_sorted[np.ix_(inv, inv)]
+    return phi_sum, float(mask.sum())
+
+
+# ---------------------------------------------------------------------------
+# KNN-Shapley (Jia et al. 2019) — per-point values, used as oracle for the
+# baseline program emitted alongside the interaction artifact.
+# ---------------------------------------------------------------------------
+
+def knn_shapley_one_test(labels_sorted, y_test, k):
+    """Exact per-point Shapley values for the KNN valuation, one test point.
+
+    Recursion from Jia et al. (2019), Theorem 1 (0-based arrays, 1-based
+    math in comments):
+      s_{α_n}  = 1[y_{α_n} = y]/n
+      s_{α_i}  = s_{α_{i+1}} + (1[y_{α_i}=y] − 1[y_{α_{i+1}}=y])/k · min(k,i)/i
+    Returns values in SORTED order.
+    """
+    labels_sorted = np.asarray(labels_sorted)
+    n = labels_sorted.shape[0]
+    match = (labels_sorted == y_test).astype(np.float64)
+    s = np.zeros(n, dtype=np.float64)
+    s[n - 1] = match[n - 1] / n
+    for i in range(n - 1, 0, -1):  # 1-based i = n-1 .. 1
+        s[i - 1] = s[i] + (match[i - 1] - match[i]) / k * min(k, i) / i
+    return s

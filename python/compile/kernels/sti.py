@@ -1,0 +1,121 @@
+"""Layer-1 Pallas kernel: STI interaction-matrix assembly + accumulation.
+
+This is the paper's O(t·n²) hot loop. For each test point p the full n×n
+pair-interaction matrix (in ORIGINAL train order) is
+
+    M_p[i, j] = diag_p[i]                                   if i == j
+                colvals_p[i]  if ranks_p[i] > ranks_p[j]    else colvals_p[j]
+
+where ``ranks_p[i]`` is the position of train point i in the distance sort
+for test p and ``colvals_p[i]`` is the superdiagonal value c at that
+position (Algorithm 1 lines 3–10, vectorized as a reversed cumsum in L2).
+Eq. (8) of the paper (column equality in sorted order) is exactly what
+makes the off-diagonal entry a *select* between the two points' own column
+values — the farther point's column wins.
+
+The kernel computes  OUT[i, j] = Σ_p mask_p · M_p[i, j]  tiled over the
+(n×n) output. Per output tile it loops over the test-block dimension with
+all operands resident in VMEM:
+
+    VMEM per tile ≈ TILE² · 4 B (out) + 3 · b · TILE · 4 B (ranks/colvals/
+    diag slices) — at TILE=256, b=64: 256 KiB + 192 KiB ≪ 16 MiB.
+
+Everything is a VPU select/FMA — no MXU — so the roofline is memory-bound;
+the tiling keeps each output tile's working set in VMEM with a single
+HBM write per tile (see DESIGN.md §8 for the estimate).
+
+``interpret=True``: CPU image cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _assembly_kernel(ri_ref, rj_ref, ci_ref, cj_ref, di_ref, mask_ref, o_ref):
+    """One (TI × TJ) tile of the accumulated interaction matrix.
+
+    ri_ref:   (b, TI) ranks for the row slice      (original order)
+    rj_ref:   (b, TJ) ranks for the column slice
+    ci_ref:   (b, TI) column values for the row slice
+    cj_ref:   (b, TJ) column values for the column slice
+    di_ref:   (b, TI) diagonal (main-term) values for the row slice
+    mask_ref: (b, 1)  test-point validity weights
+    o_ref:    (TI, TJ)
+
+    The diagonal is handled inside the same kernel: where the global row
+    index equals the global column index we substitute the main term.
+    Global indices are reconstructed from the grid position.
+    """
+    ti = o_ref.shape[0]
+    tj = o_ref.shape[1]
+    gi = pl.program_id(0) * ti + jax.lax.broadcasted_iota(jnp.int32, (ti, tj), 0)
+    gj = pl.program_id(1) * tj + jax.lax.broadcasted_iota(jnp.int32, (ti, tj), 1)
+    on_diag = gi == gj
+
+    ri = ri_ref[...]          # (b, TI)
+    rj = rj_ref[...]          # (b, TJ)
+    ci = ci_ref[...]
+    cj = cj_ref[...]
+    di = di_ref[...]
+    w = mask_ref[...]         # (b, 1)
+
+    # Broadcast to (b, TI, TJ): farther point's column value wins.
+    farther_i = ri[:, :, None] > rj[:, None, :]
+    off = jnp.where(farther_i, ci[:, :, None], cj[:, None, :])
+    val = jnp.where(on_diag[None, :, :], di[:, :, None], off)
+    o_ref[...] = jnp.sum(val * w[:, :, None], axis=0)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def assemble_accumulate(ranks, colvals, diag, mask, *, interpret=True, tile=TILE):
+    """OUT[i,j] = Σ_p mask_p · M_p[i,j]; see module docstring.
+
+    ranks   (b, n) int32 — unique per row (a permutation of 0..n-1)
+    colvals (b, n) f32
+    diag    (b, n) f32
+    mask    (b,)   f32
+    returns (n, n) f32
+    """
+    b, n = ranks.shape
+    t = min(tile, max(8, n))
+    rp = _pad_to(ranks.astype(jnp.int32), t, 1)
+    # Padded columns get rank -1 so they never win the "farther" select —
+    # harmless, as padded outputs are sliced away anyway.
+    if rp.shape[1] != n:
+        rp = rp.at[:, n:].set(-1)
+    cp = _pad_to(colvals.astype(jnp.float32), t, 1)
+    dp = _pad_to(diag.astype(jnp.float32), t, 1)
+    npad = rp.shape[1]
+    grid = (npad // t, npad // t)
+    out = pl.pallas_call(
+        _assembly_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, t), lambda i, j: (0, i)),
+            pl.BlockSpec((b, t), lambda i, j: (0, j)),
+            pl.BlockSpec((b, t), lambda i, j: (0, i)),
+            pl.BlockSpec((b, t), lambda i, j: (0, j)),
+            pl.BlockSpec((b, t), lambda i, j: (0, i)),
+            pl.BlockSpec((b, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((npad, npad), jnp.float32),
+        interpret=interpret,
+    )(rp, rp, cp, cp, dp, mask.astype(jnp.float32).reshape(b, 1))
+    return out[:n, :n]

@@ -1,0 +1,157 @@
+"""Layer-2 JAX compute graph: the STI-KNN pipeline for a block of test points.
+
+This is the vectorized form of Algorithm 1 (Belaid et al. 2023):
+
+  1. pairwise distances test-block × train set      (Pallas, kernels.distance)
+  2. per-test argsort → ranks                        (XLA sort)
+  3. sorted label-match vector  u_j ∈ {0, 1/k}       (gather + compare)
+  4. superdiagonal as a reversed cumulative sum      (Eq. 6/7 → cumsum)
+  5. per-point column value in original order        (gather at own rank)
+  6. O(b·n²) matrix assembly + masked accumulation   (Pallas, kernels.sti)
+
+The block program returns the UNNORMALIZED sum over valid test points plus
+the summed weight, so the Rust coordinator can merge partial results from
+many blocks exactly (Eq. 9 linearity over the test set is what makes the
+whole pipeline shard-parallel).
+
+The reversed-cumsum reformulation of lines 3–10 of Algorithm 1: with
+g(j) = 2(j−k−1)/((j−2)(j−1))·(u_j − u_{j−1}) for j > k+1 (else 0), the
+superdiagonal is
+
+    c_j := φ_{j−1,j} = φ_{n−1,n} + Σ_{m=j+1..n} g(m),   j = 2..n,
+
+which is `phi_last + reverse_exclusive_cumsum(g)` — O(n) with no
+sequential dependency chain beyond the scan XLA lowers cumsum to.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distance as distance_kernel
+from .kernels import sti as sti_kernel
+
+
+def superdiagonal_batch(u_sorted, k):
+    """Vectorized Algorithm-1 lines 3–10 for a batch.
+
+    u_sorted: (b, n) f32, entries in {0, 1/k}, sorted nearest-first.
+    Returns c: (b, n) f32 where c[:, j-1] (0-based j-1) = φ_{j−1,j} for the
+    1-based column j = 2..n stored at index j−1; index 0 duplicates column 2
+    (φ_{1,2}) so that `c[:, rank]` is the "own column value" of the point
+    with that rank (rank 0's column value is never used off-diagonally as
+    the max-rank of a pair is ≥ 1).
+    """
+    b, n = u_sorted.shape
+    phi_last_only = -2.0 * (n - k) / (n * (n - 1.0)) * u_sorted[:, -1:]
+    if n == 2:
+        # Single column (φ_{1,2} = φ_{n−1,n}); duplicate for rank 0.
+        return jnp.concatenate([phi_last_only, phi_last_only], axis=1)
+    j = jnp.arange(3, n + 1, dtype=jnp.float32)          # 1-based j = 3..n
+    coef = jnp.where(j > k + 1, 2.0 * (j - k - 1) / ((j - 2.0) * (j - 1.0)), 0.0)
+    # g[:, m] corresponds to 1-based j = m+3: uses u_j − u_{j−1} = u0[j−1]−u0[j−2]
+    g = coef[None, :] * (u_sorted[:, 2:] - u_sorted[:, 1:-1])   # (b, n-2)
+    phi_last = -2.0 * (n - k) / (n * (n - 1.0)) * u_sorted[:, -1:]  # (b, 1)
+    # c for column j (1-based, j=2..n): phi_last + sum_{m=j+1..n} g(m).
+    # reverse-exclusive cumsum over g gives, at position of column j,
+    # the sum of g for m > j.
+    tail = jnp.cumsum(g[:, ::-1], axis=1)[:, ::-1]       # (b, n-2): Σ_{m≥j} g(m)
+    col = jnp.concatenate(
+        [tail + phi_last, phi_last], axis=1
+    )                                                    # (b, n-1): columns 2..n
+    # Prepend a copy for rank-0 (column "1" has no upper-triangle entries).
+    return jnp.concatenate([col[:, :1], col], axis=1)    # (b, n)
+
+
+def sti_block(train_x, train_y, test_x, test_y, mask, *, k, interpret=True):
+    """STI-KNN partial result for one test block.
+
+    train_x (n, d) f32 · train_y (n,) i32 · test_x (b, d) f32 ·
+    test_y (b,) i32 · mask (b,) f32 (1 = valid, 0 = padding)
+
+    Returns (phi_sum (n,n) f32, weight (1,) f32): sum over valid test
+    points of the per-test interaction matrix (diagonal = main terms
+    φ_ii(u) = u(i)), and the number of valid points.
+    """
+    n = train_x.shape[0]
+    if k > n:
+        raise ValueError(f"STI-KNN requires k <= n (k={k}, n={n})")
+
+    dists = distance_kernel.pairwise_sq_dists(test_x, train_x, interpret=interpret)
+    order = jnp.argsort(dists, axis=1, stable=True)       # (b, n) nearest-first
+    ranks = jnp.argsort(order, axis=1, stable=True)       # (b, n) rank of point i
+
+    labels_sorted = jnp.take_along_axis(
+        jnp.broadcast_to(train_y[None, :], order.shape), order, axis=1
+    )
+    u_sorted = jnp.where(labels_sorted == test_y[:, None], 1.0 / k, 0.0).astype(
+        jnp.float32
+    )
+
+    c = superdiagonal_batch(u_sorted, k)                  # (b, n) by rank
+    colvals = jnp.take_along_axis(c, ranks, axis=1)       # (b, n) original order
+    diag = jnp.where(train_y[None, :] == test_y[:, None], 1.0 / k, 0.0).astype(
+        jnp.float32
+    )                                                     # u(i), original order
+
+    phi_sum = sti_kernel.assemble_accumulate(
+        ranks, colvals, diag, mask, interpret=interpret
+    )
+    weight = jnp.sum(mask, dtype=jnp.float32).reshape(1)
+    return phi_sum, weight
+
+
+def knn_shapley_block(train_x, train_y, test_x, test_y, mask, *, k, interpret=True):
+    """Per-point KNN-Shapley (Jia et al. 2019) partial sums for a test block.
+
+    The baseline the paper compares complexity against. Recursion (sorted
+    order, 1-based):  s_n = 1[y_n=y]/n,
+    s_i = s_{i+1} + (1[y_i=y] − 1[y_{i+1}=y]) / k · min(k, i) / i
+    — again a reversed cumulative sum.
+
+    Returns (s_sum (n,) f32, weight (1,) f32), original train order.
+    """
+    n = train_x.shape[0]
+    dists = distance_kernel.pairwise_sq_dists(test_x, train_x, interpret=interpret)
+    order = jnp.argsort(dists, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    labels_sorted = jnp.take_along_axis(
+        jnp.broadcast_to(train_y[None, :], order.shape), order, axis=1
+    )
+    match = (labels_sorted == test_y[:, None]).astype(jnp.float32)  # (b, n)
+
+    i = jnp.arange(1, n, dtype=jnp.float32)               # 1-based i = 1..n-1
+    step = (match[:, :-1] - match[:, 1:]) / k * jnp.minimum(k, i) / i  # (b, n-1)
+    s_last = match[:, -1:] / n
+    tail = jnp.cumsum(step[:, ::-1], axis=1)[:, ::-1]      # Σ_{m≥i} step(m)
+    s_sorted = jnp.concatenate([tail + s_last, s_last], axis=1)       # (b, n)
+
+    s_orig = jnp.take_along_axis(s_sorted, ranks, axis=1)
+    s_sum = jnp.sum(s_orig * mask[:, None], axis=0)
+    weight = jnp.sum(mask, dtype=jnp.float32).reshape(1)
+    return s_sum, weight
+
+
+def make_sti_fn(k, interpret=True):
+    """Close over static parameters so jax.jit sees only array args."""
+
+    @functools.wraps(sti_block)
+    def fn(train_x, train_y, test_x, test_y, mask):
+        return sti_block(
+            train_x, train_y, test_x, test_y, mask, k=k, interpret=interpret
+        )
+
+    return fn
+
+
+def make_knn_shapley_fn(k, interpret=True):
+    @functools.wraps(knn_shapley_block)
+    def fn(train_x, train_y, test_x, test_y, mask):
+        return knn_shapley_block(
+            train_x, train_y, test_x, test_y, mask, k=k, interpret=interpret
+        )
+
+    return fn

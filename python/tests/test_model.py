@@ -1,0 +1,215 @@
+"""L2 model tests: the vectorized STI-KNN pipeline vs the loop-faithful
+Algorithm 1 reference, plus the paper's structural properties (axioms,
+column equality, Corollary 1).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def _dataset(rng, n, b, d, classes=2):
+    tx = rng.normal(scale=2.0, size=(n, d)).astype(np.float32)
+    ty = rng.integers(0, classes, size=n).astype(np.int32)
+    sx = rng.normal(scale=2.0, size=(b, d)).astype(np.float32)
+    sy = rng.integers(0, classes, size=b).astype(np.int32)
+    mask = (rng.random(b) > 0.25).astype(np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    return tx, ty, sx, sy, mask
+
+
+class TestSuperdiagonal:
+    @given(n=st.integers(2, 50), kk=st.integers(1, 50), seed=st.integers(0, 10**6))
+    def test_matches_loop_faithful(self, n, kk, seed):
+        k = min(kk, n)
+        rng = np.random.default_rng(seed)
+        u = np.where(rng.random(n) < 0.5, 1.0 / k, 0.0).astype(np.float32)
+        got = np.asarray(model.superdiagonal_batch(jnp.array(u[None, :]), k))[0]
+        want_c = ref.alg1_superdiagonal(u, k)  # 1-based, c[j] for j=2..n
+        # model layout: index r (rank, 0-based) -> c_{r+1}; index 0 dups c_2
+        for rank in range(1, n):
+            assert got[rank] == pytest.approx(want_c[rank + 1], abs=1e-6), (
+                f"rank {rank}: {got[rank]} vs {want_c[rank + 1]}"
+            )
+        assert got[0] == pytest.approx(want_c[2], abs=1e-6)
+
+
+class TestStiBlock:
+    @given(
+        n=st.integers(2, 40),
+        b=st.integers(1, 10),
+        d=st.integers(1, 5),
+        kk=st.integers(1, 40),
+        classes=st.integers(2, 4),
+        seed=st.integers(0, 10**6),
+    )
+    def test_matches_reference_pipeline(self, n, b, d, kk, classes, seed):
+        k = min(kk, n)
+        rng = np.random.default_rng(seed)
+        tx, ty, sx, sy, mask = _dataset(rng, n, b, d, classes)
+        phi, w = model.sti_block(
+            jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+            jnp.array(mask), k=k,
+        )
+        want, want_w = ref.ref_sti_block(tx, ty, sx, sy, mask, k)
+        assert float(w[0]) == pytest.approx(want_w)
+        np.testing.assert_allclose(np.asarray(phi), want, rtol=1e-4, atol=1e-5)
+
+    def test_k_greater_than_n_rejected(self):
+        rng = np.random.default_rng(0)
+        tx, ty, sx, sy, mask = _dataset(rng, 5, 2, 2)
+        with pytest.raises(ValueError, match="k <= n"):
+            model.sti_block(
+                jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+                jnp.array(mask), k=6,
+            )
+
+    def test_efficiency_axiom_per_test_point(self):
+        """Upper triangle incl. diagonal sums to u_{y_test}(N) exactly
+        (the precise form of the paper's efficiency claim, DESIGN.md §1)."""
+        rng = np.random.default_rng(42)
+        n, k = 15, 4
+        tx, ty, sx, sy, _ = _dataset(rng, n, 6, 3)
+        for p in range(6):
+            mask = np.zeros(6, dtype=np.float32)
+            mask[p] = 1.0
+            phi, _ = model.sti_block(
+                jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+                jnp.array(mask), k=k,
+            )
+            phi = np.asarray(phi, dtype=np.float64)
+            d = ref.ref_pairwise_sq_dists(sx[p : p + 1], tx)[0]
+            order = np.argsort(d, kind="stable")
+            v_n = ref.valuation_u(list(ty[order]), sy[p], set(range(n)), k)
+            assert np.triu(phi).sum() == pytest.approx(v_n, abs=1e-5)
+
+    def test_column_equality_single_test_point(self):
+        """Eq. (8): for one test point, in sorted order every upper-triangle
+        column is constant."""
+        rng = np.random.default_rng(1)
+        n, k = 12, 3
+        tx, ty, sx, sy, _ = _dataset(rng, n, 1, 2)
+        mask = np.ones(1, dtype=np.float32)
+        phi, _ = model.sti_block(
+            jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+            jnp.array(mask), k=k,
+        )
+        phi = np.asarray(phi)
+        d = ref.ref_pairwise_sq_dists(sx, tx)[0]
+        order = np.argsort(d, kind="stable")
+        m_sorted = phi[np.ix_(order, order)]
+        for j in range(1, n):
+            col = m_sorted[:j, j]
+            np.testing.assert_allclose(col, col[0], atol=1e-6)
+
+    def test_symmetry(self):
+        rng = np.random.default_rng(2)
+        tx, ty, sx, sy, mask = _dataset(rng, 25, 8, 3)
+        phi, _ = model.sti_block(
+            jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+            jnp.array(mask), k=5,
+        )
+        phi = np.asarray(phi)
+        np.testing.assert_allclose(phi, phi.T, atol=1e-6)
+
+    def test_main_terms_nonnegative(self):
+        rng = np.random.default_rng(3)
+        tx, ty, sx, sy, mask = _dataset(rng, 20, 10, 2)
+        phi, _ = model.sti_block(
+            jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+            jnp.array(mask), k=5,
+        )
+        assert (np.diag(np.asarray(phi)) >= -1e-7).all()
+
+    def test_block_linearity(self):
+        """Eq. (9): the block result equals the sum of single-point results —
+        the property the coordinator's shard-merge relies on."""
+        rng = np.random.default_rng(4)
+        n, b, k = 18, 5, 3
+        tx, ty, sx, sy, _ = _dataset(rng, n, b, 2)
+        mask = np.ones(b, dtype=np.float32)
+        whole, w = model.sti_block(
+            jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+            jnp.array(mask), k=k,
+        )
+        acc = np.zeros((n, n))
+        for p in range(b):
+            m = np.zeros(b, dtype=np.float32)
+            m[p] = 1.0
+            part, _ = model.sti_block(
+                jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+                jnp.array(m), k=k,
+            )
+            acc += np.asarray(part, dtype=np.float64)
+        np.testing.assert_allclose(np.asarray(whole), acc, rtol=1e-4, atol=1e-5)
+
+
+class TestKnnShapleyBlock:
+    @given(
+        n=st.integers(2, 40),
+        b=st.integers(1, 10),
+        kk=st.integers(1, 40),
+        seed=st.integers(0, 10**6),
+    )
+    def test_matches_loop_reference(self, n, b, kk, seed):
+        k = min(kk, n)
+        rng = np.random.default_rng(seed)
+        tx, ty, sx, sy, mask = _dataset(rng, n, b, 3)
+        s, w = model.knn_shapley_block(
+            jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+            jnp.array(mask), k=k,
+        )
+        d = ref.ref_pairwise_sq_dists(sx, tx)
+        want = np.zeros(n)
+        for p in range(b):
+            if mask[p] == 0:
+                continue
+            order = np.argsort(d[p], kind="stable")
+            sv = ref.knn_shapley_one_test(ty[order], sy[p], k)
+            want += sv[np.argsort(order)]
+        np.testing.assert_allclose(np.asarray(s), want, rtol=1e-4, atol=1e-5)
+
+    def test_per_test_efficiency(self):
+        """Per-point Shapley values sum to u_{y_test}(N) for each test point."""
+        rng = np.random.default_rng(9)
+        n, k = 20, 5
+        tx, ty, sx, sy, _ = _dataset(rng, n, 4, 2)
+        for p in range(4):
+            mask = np.zeros(4, dtype=np.float32)
+            mask[p] = 1.0
+            s, _ = model.knn_shapley_block(
+                jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+                jnp.array(mask), k=k,
+            )
+            d = ref.ref_pairwise_sq_dists(sx[p : p + 1], tx)[0]
+            order = np.argsort(d, kind="stable")
+            v_n = ref.valuation_u(list(ty[order]), sy[p], set(range(n)), k)
+            assert float(np.asarray(s).sum()) == pytest.approx(v_n, abs=1e-5)
+
+
+class TestCorollary1:
+    def test_std_inversely_proportional_to_k(self):
+        """Corollary 1: std of the STI values shrinks as k grows."""
+        rng = np.random.default_rng(17)
+        n, b = 60, 16
+        tx, ty, sx, sy, _ = _dataset(rng, n, b, 2)
+        mask = np.ones(b, dtype=np.float32)
+        stds = []
+        for k in (3, 6, 12, 24):
+            phi, w = model.sti_block(
+                jnp.array(tx), jnp.array(ty), jnp.array(sx), jnp.array(sy),
+                jnp.array(mask), k=k,
+            )
+            m = np.asarray(phi) / float(w[0])
+            stds.append(m[np.triu_indices(n, 1)].std())
+        assert stds == sorted(stds, reverse=True), f"std not decreasing in k: {stds}"

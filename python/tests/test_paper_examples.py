@@ -1,0 +1,135 @@
+"""Golden tests straight from the paper's worked examples (§2.1, §2.2).
+
+These pin the valuation function (Eqs. 1-2), the brute-force STI (Eq. 3)
+and Algorithm 1 to the numbers printed in the paper — and document the one
+place the paper's own arithmetic is inconsistent (Fig. 2, see
+DESIGN.md §1 and EXPERIMENTS.md).
+"""
+
+import itertools
+import math
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def brute_phi(labels_sorted, y_test, i, j, k):
+    """Eq. (3), one test point, 0-based sorted indices, i != j."""
+    n = len(labels_sorted)
+    rest = [p for p in range(n) if p not in (i, j)]
+    acc = 0.0
+    for s in range(0, n - 1):
+        coeff = 1.0 / math.comb(n - 1, s)
+        for S in itertools.combinations(rest, s):
+            S = set(S)
+            acc += coeff * (
+                ref.valuation_u(labels_sorted, y_test, S | {i, j}, k)
+                - ref.valuation_u(labels_sorted, y_test, S | {i}, k)
+                - ref.valuation_u(labels_sorted, y_test, S | {j}, k)
+                + ref.valuation_u(labels_sorted, y_test, S, k)
+            )
+    return 2.0 / n * acc
+
+
+class TestFig1:
+    """§2.1: k=3, one test point, 4 train points sorted by distance with
+    labels (matching, non-matching, matching, matching) — the figure
+    shows v(N) = 2/3 and the listed singleton/triple values
+    (u({1,3,4}) = 3/3 forces points 1, 3, 4 to all match y_test)."""
+
+    labels = [1, 0, 1, 1]  # label 1 == y_test
+    y = 1
+    k = 3
+
+    def test_v_full_train_set(self):
+        assert ref.valuation_u(self.labels, self.y, {0, 1, 2, 3}, self.k) == pytest.approx(2 / 3)
+
+    def test_v_singletons(self):
+        assert ref.valuation_u(self.labels, self.y, {0}, self.k) == pytest.approx(1 / 3)
+        assert ref.valuation_u(self.labels, self.y, {1}, self.k) == pytest.approx(0.0)
+
+    def test_v_triple(self):
+        # u({1,3,4}) = 3/3 (1-based) -> 0-based {0,2,3}
+        assert ref.valuation_u(self.labels, self.y, {0, 2, 3}, self.k) == pytest.approx(1.0)
+
+    def test_only_k_nearest_vote(self):
+        # adding the 4th point does not change the score: min(k, s) voting
+        assert ref.valuation_u(self.labels, self.y, {0, 1, 2}, self.k) == pytest.approx(
+            ref.valuation_u(self.labels, self.y, {0, 1, 2, 3}, self.k)
+        )
+
+
+class TestFig2:
+    """§2.2: the paper's interaction example claims φ_{1,2} = 1/6 for k=2,
+    n=4, via intermediate I-terms. An exhaustive search over all 2^4 binary
+    labelings x 2 test labels shows NO labeling reproduces all printed
+    I-terms (e.g. "I = 1/2 − 1/2 − 2/2 + 1/2 = 1/2" is not internally
+    consistent arithmetic). We therefore pin (a) that inconsistency, and
+    (b) that for EVERY labeling, Algorithm 1 equals brute-force Eq. (3) —
+    which is the substantive claim of the section."""
+
+    def test_no_labeling_matches_printed_terms(self):
+        k = 2
+        consistent = []
+        for labels in itertools.product([0, 1], repeat=4):
+            for y in (0, 1):
+                checks = [
+                    (ref.valuation_u(labels, y, {0, 1, 2, 3}, k), 0.5),   # v(S∪{i,j}), S={3,4}
+                    (ref.valuation_u(labels, y, {0, 2, 3}, k), 0.5),      # v(S∪{i})
+                    (ref.valuation_u(labels, y, {1, 2, 3}, k), 0.0),      # v(S∪{j})
+                    (ref.valuation_u(labels, y, {2, 3}, k), 0.5),         # v(S)
+                    (ref.valuation_u(labels, y, {0, 1, 2}, k), 0.5),      # S={3}
+                    (ref.valuation_u(labels, y, {0, 2}, k), 0.0),
+                    (ref.valuation_u(labels, y, {1, 2}, k), 0.5),
+                    (ref.valuation_u(labels, y, {2}, k), 0.0),
+                ]
+                if all(abs(a - b) < 1e-12 for a, b in checks):
+                    consistent.append((labels, y))
+        assert consistent == [], (
+            "the paper's Fig. 2 I-terms unexpectedly became satisfiable"
+        )
+
+    def test_algorithm1_equals_bruteforce_for_all_fig2_labelings(self):
+        k = 2
+        for labels in itertools.product([0, 1], repeat=4):
+            for y in (0, 1):
+                m = ref.alg1_matrix_one_test(list(labels), y, k, include_diag=False)
+                for i in range(4):
+                    for j in range(4):
+                        if i != j:
+                            assert m[i, j] == pytest.approx(
+                                brute_phi(list(labels), y, i, j, k), abs=1e-12
+                            )
+
+
+class TestEq6LastTerm:
+    """Eq. (6): φ_{n-1,n} = −2(n−k)/(n(n−1))·u(α_n)."""
+
+    @pytest.mark.parametrize("n,k", [(4, 2), (6, 3), (8, 5), (5, 5)])
+    def test_matches_bruteforce(self, n, k):
+        rng = np.random.default_rng(n * 31 + k)
+        labels = list(rng.integers(0, 2, size=n))
+        y = 1
+        expected = brute_phi(labels, y, n - 2, n - 1, k)
+        u_n = (1.0 / k) if labels[n - 1] == y else 0.0
+        closed = -2.0 * (n - k) / (n * (n - 1)) * u_n
+        assert closed == pytest.approx(expected, abs=1e-12)
+
+
+class TestEfficiencyAxiom:
+    """§3.2: the sum of the STI values equals the test score. The precise
+    statement (verified against brute force): the UPPER TRIANGLE INCLUDING
+    THE DIAGONAL sums to v(N) − v(∅) = v(N)."""
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_upper_triangle_sums_to_vN(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(4, 9))
+        k = int(rng.integers(1, n + 1))
+        labels = list(rng.integers(0, 2, size=n))
+        y = int(rng.integers(0, 2))
+        m = ref.alg1_matrix_one_test(labels, y, k)
+        v_n = ref.valuation_u(labels, y, set(range(n)), k)
+        assert np.triu(m).sum() == pytest.approx(v_n, abs=1e-12)

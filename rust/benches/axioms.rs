@@ -1,0 +1,40 @@
+//! SEC3.2-AX — axiom-verification sweep: efficiency / symmetry /
+//! main-term positivity / centering, checked on every Table-1 twin, plus
+//! the cost of a full check.
+//!
+//!     cargo bench --bench axioms
+
+use stiknn::bench::{quick, Suite};
+use stiknn::data::{load_dataset, registry_names};
+use stiknn::report::table::Table;
+use stiknn::shapley::axioms::{all_hold, check_all};
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+
+fn main() {
+    let k = 5;
+    let mut suite = Suite::new("axiom checks (n=200, t=50, k=5)").with_config(quick());
+    let mut table = Table::new(&["dataset", "efficiency |Δ|", "centering |Δ|", "all axioms"]);
+    for name in registry_names() {
+        let ds = load_dataset(name, 200, 50, 21).unwrap();
+        let phi = sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(k),
+        );
+        let mut reports = Vec::new();
+        suite.bench(&format!("axioms {name}"), || {
+            reports = check_all(
+                &phi, &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, k, 1e-9,
+            );
+        });
+        let eff = reports.iter().find(|r| r.name == "efficiency").unwrap();
+        let cen = reports.iter().find(|r| r.name == "centering").unwrap();
+        table.row(&[
+            name.to_string(),
+            format!("{:.1e}", (eff.observed - eff.expected).abs()),
+            format!("{:.1e}", (cen.observed - cen.expected).abs()),
+            if all_hold(&reports) { "PASS".into() } else { "FAIL".into() },
+        ]);
+    }
+    println!("{}", suite.render());
+    println!("\naxiom results across the registry (EXPERIMENTS.md SEC3.2-AX):\n{}", table.render());
+}

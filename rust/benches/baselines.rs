@@ -1,0 +1,65 @@
+//! Baseline comparison (§1 + §3.2): STI-KNN (pair interactions, O(t·n²))
+//! vs KNN-Shapley (per-point, O(t·n log n)) vs LOO (per-point, closed
+//! form) vs Monte-Carlo STI at several sampling budgets — wall time and,
+//! for MC, the accuracy-vs-budget tradeoff against the exact matrix.
+//!
+//!     cargo bench --bench baselines
+
+use stiknn::bench::{quick, Suite};
+use stiknn::data::load_dataset;
+use stiknn::report::table::Table;
+use stiknn::shapley::loo::loo;
+use stiknn::shapley::mc_sti::mc_sti;
+use stiknn::shapley::knn_shapley::knn_shapley;
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+
+fn main() {
+    let k = 5;
+    let n = 600;
+    let t = 100;
+    let ds = load_dataset("circle", n, t, 11).unwrap();
+
+    let mut suite = Suite::new(&format!("baselines (n={n}, t={t}, k={k})")).with_config(quick());
+    suite.bench("sti_knn (pair interactions)", || {
+        sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(k),
+        )
+    });
+    suite.bench("knn_shapley (per point)", || {
+        knn_shapley(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, k)
+    });
+    suite.bench("loo (per point)", || {
+        loo(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, k)
+    });
+    println!("{}", suite.render());
+
+    // MC accuracy-vs-budget on a small instance where exact MC work is
+    // feasible (the alternative a practitioner would run without Alg. 1)
+    let small = load_dataset("circle", 16, 12, 3).unwrap();
+    let exact = sti_knn(
+        &small.train_x, &small.train_y, small.d, &small.test_x, &small.test_y,
+        &StiParams::new(3),
+    );
+    let mut mc_suite = Suite::new("monte-carlo STI (n=16, t=12, k=3)").with_config(quick());
+    let mut table = Table::new(&["samples/size", "max|err| vs exact", "mean wall"]);
+    for budget in [2usize, 8, 32, 128] {
+        let m = mc_suite.bench(&format!("mc budget={budget}"), || {
+            mc_sti(
+                &small.train_x, &small.train_y, small.d, &small.test_x,
+                &small.test_y, 3, budget, 99,
+            )
+        });
+        let est = mc_sti(
+            &small.train_x, &small.train_y, small.d, &small.test_x, &small.test_y,
+            3, budget, 99,
+        );
+        table.row(&[
+            budget.to_string(),
+            format!("{:.2e}", est.max_abs_diff(&exact)),
+            stiknn::util::timer::fmt_duration(m.mean),
+        ]);
+    }
+    println!("{}", mc_suite.render());
+    println!("\nMC accuracy vs budget (exactness is the paper's selling point):\n{}", table.render());
+}

@@ -1,0 +1,59 @@
+//! Engine comparison: pure-Rust Algorithm 1 vs the AOT XLA artifact
+//! (L1 Pallas + L2 JAX compiled through PJRT) on artifact shapes —
+//! same numbers, different substrates (EXPERIMENTS.md §E2E / §Perf).
+//!
+//! Requires `make artifacts`.
+//!
+//!     cargo bench --bench engines
+
+use std::path::Path;
+use stiknn::bench::{quick, Suite};
+use stiknn::report::table::Table;
+use stiknn::runtime::{executor_for, Manifest};
+use stiknn::shapley::sti_knn::{sti_knn_partial, StiParams};
+use stiknn::util::rng::Rng;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    let Ok(manifest) = Manifest::load(dir) else {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    };
+
+    let mut suite = Suite::new("engines on artifact shapes").with_config(quick());
+    let mut table = Table::new(&["shape", "rust", "xla", "xla/rust", "max|Δ|"]);
+
+    for spec in manifest.of_program("sti") {
+        let (n, d, b, k) = (spec.n, spec.d, spec.b, spec.k);
+        let mut rng = Rng::new(7);
+        let tx: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let ty: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let sx: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let sy: Vec<i32> = (0..b).map(|_| rng.below(2) as i32).collect();
+
+        let params = StiParams::new(k);
+        let mr = suite.bench(&format!("rust {}", spec.name), || {
+            sti_knn_partial(&tx, &ty, d, &sx, &sy, &params)
+        });
+        let rust_secs = mr.mean_secs();
+
+        let exec = executor_for(&manifest, "sti", n, d, k).unwrap();
+        let mx = suite.bench(&format!("xla  {}", spec.name), || {
+            exec.run_block(&tx, &ty, &sx, &sy).unwrap()
+        });
+        let xla_secs = mx.mean_secs();
+
+        let (phi_r, _) = sti_knn_partial(&tx, &ty, d, &sx, &sy, &params);
+        let (phi_x, _) = exec.run_block(&tx, &ty, &sx, &sy).unwrap();
+
+        table.row(&[
+            format!("n={n} d={d} b={b} k={k}"),
+            stiknn::util::timer::fmt_duration(mr.mean),
+            stiknn::util::timer::fmt_duration(mx.mean),
+            format!("{:.1}x", xla_secs / rust_secs),
+            format!("{:.1e}", phi_r.max_abs_diff(&phi_x)),
+        ]);
+    }
+    println!("{}", suite.render());
+    println!("\nengine comparison per block (EXPERIMENTS.md §Perf L2):\n{}", table.render());
+}

@@ -1,0 +1,80 @@
+//! FIG3/FIG4/FIG5 — regenerate the paper's §4 figures: interaction-matrix
+//! block statistics on the balanced Circle, the unbalanced (subsampled)
+//! Circle, and the mislabeled Circle, with the wall time for each.
+//!
+//!     cargo bench --bench figures
+
+use stiknn::analysis::mislabel::{auc, mislabel_scores};
+use stiknn::analysis::redundancy::{class_block_mean_abs, interaction_breakdown};
+use stiknn::analysis::structure::block_structure;
+use stiknn::bench::{quick, Suite};
+use stiknn::data::{corrupt, load_dataset};
+use stiknn::report::table::Table;
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+
+fn main() {
+    let k = 5;
+    let mut suite = Suite::new("figure regeneration (circle n=600, t=150, k=5)")
+        .with_config(quick());
+
+    // FIG3 — balanced circle
+    let ds = load_dataset("circle", 600, 150, 42).unwrap();
+    let phi3 = sti_knn(
+        &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &StiParams::new(k),
+    );
+    suite.bench("fig3 balanced circle", || {
+        sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(k),
+        )
+    });
+
+    // FIG4 — unbalanced circle (class 0 subsampled 300 -> 60)
+    let ds4 = corrupt::subsample_class(&ds, 0, 60, 3);
+    let phi4 = sti_knn(
+        &ds4.train_x, &ds4.train_y, ds4.d, &ds4.test_x, &ds4.test_y,
+        &StiParams::new(k),
+    );
+    suite.bench("fig4 unbalanced circle", || {
+        sti_knn(
+            &ds4.train_x, &ds4.train_y, ds4.d, &ds4.test_x, &ds4.test_y,
+            &StiParams::new(k),
+        )
+    });
+
+    // FIG5 — mislabeled circle
+    let mut ds5 = load_dataset("circle", 600, 150, 42).unwrap();
+    let truth = corrupt::flip_labels(&mut ds5, 0.05, 13);
+    let phi5 = sti_knn(
+        &ds5.train_x, &ds5.train_y, ds5.d, &ds5.test_x, &ds5.test_y,
+        &StiParams::new(k),
+    );
+    suite.bench("fig5 mislabeled circle", || {
+        sti_knn(
+            &ds5.train_x, &ds5.train_y, ds5.d, &ds5.test_x, &ds5.test_y,
+            &StiParams::new(k),
+        )
+    });
+
+    println!("{}", suite.render());
+
+    // the figures' content, as numbers
+    let b3 = interaction_breakdown(&phi3, &ds.train_y);
+    let blocks3 = block_structure(&phi3, &ds.train_y, 2);
+    let mut t = Table::new(&["figure", "statistic", "value"]);
+    t.row(&["FIG3".into(), "in-class mean |phi|".into(), format!("{:.3e}", b3.in_class)]);
+    t.row(&["FIG3".into(), "out-class mean |phi|".into(), format!("{:.3e}", b3.out_class)]);
+    t.row(&["FIG3".into(), "block (0,0)".into(), format!("{:+.3e}", blocks3.get(0, 0))]);
+    t.row(&["FIG3".into(), "block (0,1)".into(), format!("{:+.3e}", blocks3.get(0, 1))]);
+    t.row(&["FIG3".into(), "block (1,1)".into(), format!("{:+.3e}", blocks3.get(1, 1))]);
+
+    let full_blue = class_block_mean_abs(&phi3, &ds.train_y, 0);
+    let sub_blue = class_block_mean_abs(&phi4, &ds4.train_y, 0);
+    t.row(&["FIG4".into(), "class-0 |phi| balanced".into(), format!("{:.3e}", full_blue)]);
+    t.row(&["FIG4".into(), "class-0 |phi| subsampled".into(), format!("{:.3e}", sub_blue)]);
+    t.row(&["FIG4".into(), "amplification".into(), format!("{:.2}x", sub_blue / full_blue)]);
+
+    let rep = mislabel_scores(&phi5, &ds5.train_y, ds5.classes);
+    t.row(&["FIG5".into(), "mislabel AUC".into(), format!("{:.3}", auc(&rep.margins, &truth))]);
+    println!("\nfigure statistics (EXPERIMENTS.md FIG3/FIG4/FIG5):\n{}", t.render());
+}

@@ -1,0 +1,43 @@
+//! FIG7–FIG10 — the Appendix-B figure pairs themselves: for each figure's
+//! (dataset, k1, k2) compute both matrices at the paper's full dataset
+//! sizes and report the flattened correlation the caption claims,
+//! plus regeneration cost.
+//!
+//!     cargo bench --bench figures_k
+
+use stiknn::analysis::ksens::k_sensitivity;
+use stiknn::bench::{quick, Suite};
+use stiknn::data::load_dataset;
+use stiknn::report::table::Table;
+
+fn main() {
+    let mut suite = Suite::new("appendix-B figure pairs (registry-default sizes)")
+        .with_config(quick());
+    let mut table = Table::new(&[
+        "figure", "dataset", "k1", "k2", "r (paper method)", "r (offdiag)", "paper claim",
+    ]);
+    for (fig, name, k1, k2) in [
+        ("Fig. 7", "circle", 9usize, 20usize),
+        ("Fig. 8", "moon", 3, 7),
+        ("Fig. 9", "click", 5, 15),
+        ("Fig. 10", "monksv2", 3, 4),
+    ] {
+        let ds = load_dataset(name, 0, 0, 42).unwrap();
+        let mut rep = None;
+        suite.bench(&format!("{fig} {name} k={k1},{k2}"), || {
+            rep = Some(k_sensitivity(&ds, &[k1, k2]));
+        });
+        let rep = rep.unwrap();
+        table.row(&[
+            fig.to_string(),
+            name.to_string(),
+            k1.to_string(),
+            k2.to_string(),
+            format!("{:.4}", rep.min_correlation),
+            format!("{:.4}", rep.min_correlation_offdiag),
+            "> 0.99".to_string(),
+        ]);
+    }
+    println!("{}", suite.render());
+    println!("\nfigure-pair correlations (EXPERIMENTS.md FIG7-10):\n{}", table.render());
+}

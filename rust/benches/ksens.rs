@@ -1,0 +1,31 @@
+//! SEC3.2-K — k-sensitivity sweep cost and results across the Table-1
+//! registry (Figs. 7–10 + the §3.2 correlation claim).
+//!
+//!     cargo bench --bench ksens
+
+use stiknn::analysis::ksens::k_sensitivity;
+use stiknn::bench::{quick, Suite};
+use stiknn::data::load_dataset;
+use stiknn::report::table::Table;
+
+fn main() {
+    let ks = [3usize, 5, 9, 15, 20];
+    let mut suite = Suite::new("k-sensitivity sweeps (n=300, t=80)").with_config(quick());
+    let mut table = Table::new(&["dataset", "min r (paper)", "min r (offdiag)", "std ratio k3/k20"]);
+    for name in ["circle", "moon", "click", "monksv2"] {
+        let ds = load_dataset(name, 300, 80, 42).unwrap();
+        let mut rep = None;
+        suite.bench(&format!("ksens {name}"), || {
+            rep = Some(k_sensitivity(&ds, &ks));
+        });
+        let rep = rep.unwrap();
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", rep.min_correlation),
+            format!("{:.4}", rep.min_correlation_offdiag),
+            format!("{:.2}", rep.stds[0] / rep.stds[ks.len() - 1]),
+        ]);
+    }
+    println!("{}", suite.render());
+    println!("\nk-insensitivity results (EXPERIMENTS.md SEC3.2-K):\n{}", table.render());
+}

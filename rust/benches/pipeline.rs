@@ -1,0 +1,39 @@
+//! L3 coordinator throughput: worker/block-size sweep on the end-to-end
+//! valuation pipeline (rust engine) — the scaling behaviour the perf pass
+//! optimizes (EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench pipeline
+
+use stiknn::bench::{quick, Suite};
+use stiknn::coordinator::{run_job, ValuationJob};
+use stiknn::data::load_dataset;
+use stiknn::report::table::Table;
+
+fn main() {
+    let ds = load_dataset("circle", 600, 300, 5).unwrap();
+    let k = 5;
+
+    let mut suite = Suite::new("pipeline (circle n=600, t=300, k=5)").with_config(quick());
+    let mut table = Table::new(&["workers", "block", "mean wall", "speedup vs 1 worker"]);
+    let mut base = None;
+    for workers in [1usize, 2, 4, 8] {
+        for block in [8usize, 32] {
+            let job = ValuationJob::new(k).with_workers(workers).with_block_size(block);
+            let m = suite.bench(&format!("workers={workers} block={block}"), || {
+                run_job(&ds, &job).unwrap()
+            });
+            let secs = m.mean_secs();
+            if workers == 1 && block == 32 {
+                base = Some(secs);
+            }
+            table.row(&[
+                workers.to_string(),
+                block.to_string(),
+                stiknn::util::timer::fmt_duration(m.mean),
+                base.map(|b| format!("{:.2}x", b / secs)).unwrap_or_default(),
+            ]);
+        }
+    }
+    println!("{}", suite.render());
+    println!("\nscaling table (EXPERIMENTS.md §Perf L3):\n{}", table.render());
+}

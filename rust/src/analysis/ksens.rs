@@ -1,0 +1,142 @@
+//! k-sensitivity analysis (§3.2, Appendix B, Figs. 7–10): the paper's
+//! claim that the KNN parameter k has negligible effect on the *shape* of
+//! the interaction matrix — Pearson correlation between flattened STI
+//! matrices > 0.99 for all 3 ≤ k₁, k₂ ≤ 20 — while the *scale* changes
+//! (Corollary 1: std inversely related to k).
+
+use crate::data::Dataset;
+use crate::shapley::sti_knn::{sti_knn, StiParams};
+use crate::util::matrix::Matrix;
+use crate::util::stats;
+
+/// Pairwise correlation report over a k-grid for one dataset.
+#[derive(Clone, Debug)]
+pub struct KSensReport {
+    pub dataset: String,
+    pub ks: Vec<usize>,
+    /// Pearson r between FULL flattened matrices (incl. diagonal — the
+    /// paper's Appendix-B methodology: "the correlation between matrices
+    /// (flattened)"), pairwise over `ks` × `ks`.
+    pub correlations: Matrix,
+    /// Pearson r between strict-upper-triangle entries only — the
+    /// stricter variant that excludes the main terms (which are
+    /// proportional across k and inflate the full-matrix correlation);
+    /// reported alongside in EXPERIMENTS.md.
+    pub correlations_offdiag: Matrix,
+    /// std of strict-upper-triangle entries per k (Corollary 1).
+    pub stds: Vec<f64>,
+    /// min over pairs, full-matrix (paper methodology).
+    pub min_correlation: f64,
+    /// min over pairs, off-diagonal only.
+    pub min_correlation_offdiag: f64,
+}
+
+/// Compute STI matrices for each k and correlate them pairwise.
+pub fn k_sensitivity(ds: &Dataset, ks: &[usize]) -> KSensReport {
+    assert!(!ks.is_empty());
+    let mut flats: Vec<Vec<f64>> = Vec::with_capacity(ks.len());
+    let mut uppers: Vec<Vec<f64>> = Vec::with_capacity(ks.len());
+    for &k in ks {
+        let m = sti_knn(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(k),
+        );
+        flats.push(m.data().to_vec());
+        uppers.push(m.upper_triangle_entries());
+    }
+    let stds: Vec<f64> = uppers.iter().map(|m| stats::std(m)).collect();
+    let correlate = |sets: &[Vec<f64>]| -> (Matrix, f64) {
+        let mut corr = Matrix::zeros(ks.len(), ks.len());
+        let mut min_r = f64::INFINITY;
+        for i in 0..ks.len() {
+            for j in 0..ks.len() {
+                let r = if i == j {
+                    1.0
+                } else {
+                    stats::pearson(&sets[i], &sets[j])
+                };
+                corr.set(i, j, r);
+                if i != j && r < min_r {
+                    min_r = r;
+                }
+            }
+        }
+        if ks.len() == 1 {
+            min_r = 1.0;
+        }
+        (corr, min_r)
+    };
+    let (correlations, min_correlation) = correlate(&flats);
+    let (correlations_offdiag, min_correlation_offdiag) = correlate(&uppers);
+    KSensReport {
+        dataset: ds.name.clone(),
+        ks: ks.to_vec(),
+        correlations,
+        correlations_offdiag,
+        stds,
+        min_correlation,
+        min_correlation_offdiag,
+    }
+}
+
+impl KSensReport {
+    /// The paper's acceptance criterion.
+    pub fn passes_paper_threshold(&self) -> bool {
+        self.min_correlation > 0.99
+    }
+
+    /// Corollary-1 check: stds non-increasing as k grows (ks must be
+    /// passed in ascending order).
+    pub fn stds_decreasing(&self) -> bool {
+        self.stds.windows(2).all(|w| w[1] <= w[0] * 1.05)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_dataset;
+
+    #[test]
+    fn circle_correlations_above_paper_threshold() {
+        // paper methodology (full flattened matrices, Appendix B) at a
+        // reduced scale; the full n=600 sweep lives in examples/k_sensitivity
+        let ds = load_dataset("circle", 150, 40, 3).unwrap();
+        let rep = k_sensitivity(&ds, &[3, 5, 9, 15, 20]);
+        assert!(
+            rep.passes_paper_threshold(),
+            "min corr {} ≤ 0.99",
+            rep.min_correlation
+        );
+        // the stricter off-diagonal variant is lower but still high at
+        // paper scale (~0.98 at n=600, see EXPERIMENTS.md); here we only
+        // pin that it is meaningfully positive
+        assert!(rep.min_correlation_offdiag > 0.5,
+                "offdiag corr {}", rep.min_correlation_offdiag);
+    }
+
+    #[test]
+    fn corollary1_std_decreases_with_k() {
+        let ds = load_dataset("circle", 150, 40, 3).unwrap();
+        let rep = k_sensitivity(&ds, &[3, 6, 12, 20]);
+        assert!(rep.stds_decreasing(), "stds {:?}", rep.stds);
+        assert!(rep.stds[0] > rep.stds[3], "stds {:?}", rep.stds);
+    }
+
+    #[test]
+    fn correlation_matrix_is_symmetric_with_unit_diag() {
+        let ds = load_dataset("moon", 80, 20, 5).unwrap();
+        let rep = k_sensitivity(&ds, &[3, 7]);
+        assert_eq!(rep.correlations.get(0, 0), 1.0);
+        assert!(
+            (rep.correlations.get(0, 1) - rep.correlations.get(1, 0)).abs() < 1e-12
+        );
+        // full-matrix correlation dominates the off-diagonal one (the
+        // proportional main terms can only raise it)
+        assert!(rep.min_correlation >= rep.min_correlation_offdiag - 1e-9);
+    }
+}

@@ -1,0 +1,193 @@
+//! Mislabel detection from interaction patterns (§4, Fig. 5): "Mislabeled
+//! points behave like the opposite class ... their pattern corresponds
+//! more to the opposite class."
+//!
+//! Operationalization: for each training point i, compare its interaction
+//! row φ_{i,·} against the mean interaction row of each class (templates
+//! built excluding i). A point whose row correlates better with another
+//! class's template than its own class's is flagged. Scores are
+//! margin-based so the caller can sweep thresholds / compute AUC.
+
+use crate::util::matrix::Matrix;
+use crate::util::stats;
+
+/// Per-point suspicion report.
+#[derive(Clone, Debug)]
+pub struct MislabelReport {
+    /// suspicion margin per train point: corr(best other class) −
+    /// corr(own class); > 0 means the point patterns with another class.
+    pub margins: Vec<f64>,
+    /// indices flagged (margin > 0), sorted by decreasing margin.
+    pub flagged: Vec<usize>,
+}
+
+/// Compute suspicion margins from an averaged interaction matrix and the
+/// (possibly corrupted) train labels.
+pub fn mislabel_scores(phi: &Matrix, train_y: &[i32], classes: usize) -> MislabelReport {
+    let n = train_y.len();
+    assert_eq!(phi.rows(), n);
+    // class templates: mean row per class, EXCLUDING diagonal entries —
+    // the main terms φ_jj are orders of magnitude larger than the
+    // interactions and would otherwise dominate every correlation
+    let mut templates = vec![vec![0.0f64; n]; classes];
+    let mut tcounts = vec![vec![0usize; n]; classes];
+    let mut counts = vec![0usize; classes];
+    for i in 0..n {
+        let c = train_y[i] as usize;
+        counts[c] += 1;
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            templates[c][j] += phi.get(i, j);
+            tcounts[c][j] += 1;
+        }
+    }
+    for (t, tc) in templates.iter_mut().zip(&tcounts) {
+        for (v, &cnt) in t.iter_mut().zip(tc) {
+            if cnt > 0 {
+                *v /= cnt as f64;
+            }
+        }
+    }
+    // margins: best-other-class correlation minus own-class correlation.
+    // The diagonal and the point's own column are excluded (main terms are
+    // label-dependent and would leak).
+    let mut margins = vec![0.0f64; n];
+    for i in 0..n {
+        let row: Vec<f64> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| phi.get(i, j))
+            .collect();
+        let mut own = f64::NAN;
+        let mut best_other = f64::NEG_INFINITY;
+        for (c, t) in templates.iter().enumerate() {
+            if counts[c] == 0 {
+                continue;
+            }
+            let tv: Vec<f64> = (0..n).filter(|&j| j != i).map(|j| t[j]).collect();
+            let r = stats::pearson(&row, &tv);
+            let r = if r.is_nan() { 0.0 } else { r };
+            if c == train_y[i] as usize {
+                own = r;
+            } else if r > best_other {
+                best_other = r;
+            }
+        }
+        margins[i] = best_other - own;
+    }
+    let mut flagged: Vec<usize> = (0..n).filter(|&i| margins[i] > 0.0).collect();
+    flagged.sort_by(|&a, &b| margins[b].partial_cmp(&margins[a]).unwrap());
+    MislabelReport { margins, flagged }
+}
+
+/// Precision/recall of a flag set against ground-truth flipped indices.
+pub fn precision_recall(flagged: &[usize], truth: &[usize]) -> (f64, f64) {
+    if flagged.is_empty() {
+        return (f64::NAN, 0.0);
+    }
+    let truth_set: std::collections::HashSet<_> = truth.iter().collect();
+    let tp = flagged.iter().filter(|i| truth_set.contains(i)).count() as f64;
+    (
+        tp / flagged.len() as f64,
+        if truth.is_empty() {
+            f64::NAN
+        } else {
+            tp / truth.len() as f64
+        },
+    )
+}
+
+/// Recall within the top-m ranked margins, m = |truth| ("precision@k" with
+/// k = prevalence — the detection metric valuation papers report when the
+/// contamination rate is known).
+pub fn top_prevalence_recall(margins: &[f64], truth: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return f64::NAN;
+    }
+    let mut idx: Vec<usize> = (0..margins.len()).collect();
+    idx.sort_by(|&a, &b| margins[b].partial_cmp(&margins[a]).unwrap());
+    let top: std::collections::HashSet<usize> = idx.into_iter().take(truth.len()).collect();
+    truth.iter().filter(|i| top.contains(i)).count() as f64 / truth.len() as f64
+}
+
+/// ROC AUC of margin scores against ground truth (probability a flipped
+/// point outranks a clean one).
+pub fn auc(margins: &[f64], truth: &[usize]) -> f64 {
+    let truth_set: std::collections::HashSet<_> = truth.iter().copied().collect();
+    let mut pos = Vec::new();
+    let mut neg = Vec::new();
+    for (i, &m) in margins.iter().enumerate() {
+        if truth_set.contains(&i) {
+            pos.push(m);
+        } else {
+            neg.push(m);
+        }
+    }
+    if pos.is_empty() || neg.is_empty() {
+        return f64::NAN;
+    }
+    let mut wins = 0.0;
+    for &p in &pos {
+        for &q in &neg {
+            if p > q {
+                wins += 1.0;
+            } else if p == q {
+                wins += 0.5;
+            }
+        }
+    }
+    wins / (pos.len() * neg.len()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corrupt, load_dataset};
+    use crate::shapley::sti_knn::{sti_knn, StiParams};
+
+    #[test]
+    fn detects_flipped_circle_points() {
+        let mut ds = load_dataset("circle", 160, 60, 7).unwrap();
+        let truth = corrupt::flip_labels(&mut ds, 0.05, 13);
+        let phi = sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(5),
+        );
+        let rep = mislabel_scores(&phi, &ds.train_y, ds.classes);
+        let a = auc(&rep.margins, &truth);
+        assert!(a > 0.9, "mislabel AUC too low: {a}");
+        let r = top_prevalence_recall(&rep.margins, &truth);
+        assert!(r > 0.5, "top-prevalence recall too low: {r}");
+    }
+
+    #[test]
+    fn clean_dataset_flags_little() {
+        let ds = load_dataset("circle", 160, 60, 7).unwrap();
+        let phi = sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(5),
+        );
+        let rep = mislabel_scores(&phi, &ds.train_y, ds.classes);
+        assert!(
+            rep.flagged.len() < ds.n_train() / 10,
+            "flagged {} of {} clean points",
+            rep.flagged.len(),
+            ds.n_train()
+        );
+    }
+
+    #[test]
+    fn precision_recall_arithmetic() {
+        let (p, r) = precision_recall(&[1, 2, 3, 4], &[2, 4, 9]);
+        assert!((p - 0.5).abs() < 1e-12);
+        assert!((r - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_of_perfect_separation_is_one() {
+        let margins = vec![0.9, -0.5, 0.8, -0.3];
+        assert_eq!(auc(&margins, &[0, 2]), 1.0);
+        assert_eq!(auc(&margins, &[1, 3]), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Analysis suite over computed interaction matrices — the paper's §3.2
+//! and §4 experiments as reusable components.
+
+pub mod acquisition;
+pub mod ksens;
+pub mod mislabel;
+pub mod redundancy;
+pub mod removal;
+pub mod structure;
+
+pub use ksens::{k_sensitivity, KSensReport};
+pub use mislabel::{mislabel_scores, MislabelReport};
+pub use structure::block_structure;

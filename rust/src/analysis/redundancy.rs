@@ -1,0 +1,118 @@
+//! Redundancy analysis (§4, Fig. 4): "Redundancy decreases in-class
+//! interaction" — subsampling one class (fewer, less redundant points)
+//! must *increase* the per-pair in-class interaction magnitude, because
+//! the efficiency budget (≈ a_test) is split across fewer pairs.
+
+use crate::util::matrix::Matrix;
+use crate::util::stats;
+
+/// Mean |interaction| split by pair type.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InteractionBreakdown {
+    /// mean |φ_ij| over pairs with equal labels (i < j)
+    pub in_class: f64,
+    /// mean |φ_ij| over pairs with different labels (i < j)
+    pub out_class: f64,
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+/// Decompose the strict upper triangle by pair label equality.
+pub fn interaction_breakdown(phi: &Matrix, train_y: &[i32]) -> InteractionBreakdown {
+    let n = train_y.len();
+    assert_eq!(phi.rows(), n);
+    let mut in_vals = Vec::new();
+    let mut out_vals = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = phi.get(i, j).abs();
+            if train_y[i] == train_y[j] {
+                in_vals.push(v);
+            } else {
+                out_vals.push(v);
+            }
+        }
+    }
+    InteractionBreakdown {
+        in_class: stats::mean(&in_vals),
+        out_class: stats::mean(&out_vals),
+        n_in: in_vals.len(),
+        n_out: out_vals.len(),
+    }
+}
+
+/// Mean |φ| within one class's block.
+pub fn class_block_mean_abs(phi: &Matrix, train_y: &[i32], class: i32) -> f64 {
+    let idx: Vec<usize> = (0..train_y.len())
+        .filter(|&i| train_y[i] == class)
+        .collect();
+    let mut vals = Vec::new();
+    for (a, &i) in idx.iter().enumerate() {
+        for &j in &idx[a + 1..] {
+            vals.push(phi.get(i, j).abs());
+        }
+    }
+    stats::mean(&vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corrupt, load_dataset};
+    use crate::shapley::sti_knn::{sti_knn, StiParams};
+
+    #[test]
+    fn in_class_dominates_out_class_on_circle() {
+        // §4 Fig. 3: same-class points interact heavily (negatively),
+        // cross-class pairs interact less. Measured at paper scale
+        // (n=600): in/out ≈ 1.9× (EXPERIMENTS.md FIG3 — the paper's
+        // "almost do not interact" is qualitative; the cluster structure
+        // is what reproduces).
+        let ds = load_dataset("circle", 600, 150, 3).unwrap();
+        let phi = sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(5),
+        );
+        let b = interaction_breakdown(&phi, &ds.train_y);
+        assert!(
+            b.in_class > 1.5 * b.out_class,
+            "in {} vs out {}",
+            b.in_class,
+            b.out_class
+        );
+    }
+
+    #[test]
+    fn subsampling_raises_per_pair_interaction() {
+        // §4 Fig. 4: fewer (less redundant) blue points -> larger per-pair
+        // in-class interaction magnitude for that class
+        let ds = load_dataset("circle", 300, 80, 9).unwrap();
+        let k = 5;
+        let phi_full = sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(k),
+        );
+        let full_blue = class_block_mean_abs(&phi_full, &ds.train_y, 0);
+
+        let sub = corrupt::subsample_class(&ds, 0, 30, 3);
+        let phi_sub = sti_knn(
+            &sub.train_x, &sub.train_y, sub.d, &sub.test_x, &sub.test_y,
+            &StiParams::new(k),
+        );
+        let sub_blue = class_block_mean_abs(&phi_sub, &sub.train_y, 0);
+        assert!(
+            sub_blue > 1.5 * full_blue,
+            "subsampled {} vs full {}",
+            sub_blue,
+            full_blue
+        );
+    }
+
+    #[test]
+    fn breakdown_counts_pairs() {
+        let phi = Matrix::zeros(4, 4);
+        let b = interaction_breakdown(&phi, &[0, 0, 1, 1]);
+        assert_eq!(b.n_in, 2); // (0,1), (2,3)
+        assert_eq!(b.n_out, 4);
+    }
+}

@@ -1,0 +1,116 @@
+//! Point-removal experiments — the data-valuation use cases the paper's
+//! introduction motivates (training-set summarization / cleaning):
+//! remove points in value order and track test accuracy.
+
+use crate::data::Dataset;
+use crate::knn::KnnClassifier;
+
+/// Accuracy curve from removing train points in the given order.
+/// Returns accuracy after removing 0, step, 2·step, ... points
+/// (keeping at least `min_keep`).
+pub fn removal_curve(
+    ds: &Dataset,
+    removal_order: &[usize],
+    step: usize,
+    min_keep: usize,
+    k: usize,
+) -> Vec<(usize, f64)> {
+    assert_eq!(removal_order.len(), ds.n_train());
+    assert!(step >= 1);
+    let mut removed: std::collections::HashSet<usize> = Default::default();
+    let mut out = Vec::new();
+    let mut cursor = 0usize;
+    loop {
+        let keep: Vec<usize> = (0..ds.n_train()).filter(|i| !removed.contains(i)).collect();
+        if keep.len() < min_keep.max(k) {
+            break;
+        }
+        let sub = ds.retain_train(&keep);
+        let acc = KnnClassifier::new(&sub.train_x, &sub.train_y, sub.d, k)
+            .accuracy(&ds.test_x, &ds.test_y);
+        out.push((removed.len(), acc));
+        // remove the next `step`
+        let mut added = 0;
+        while added < step && cursor < removal_order.len() {
+            removed.insert(removal_order[cursor]);
+            cursor += 1;
+            added += 1;
+        }
+        if added == 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// Order train indices by a value vector, ascending (lowest value first —
+/// "remove harmful/useless points first").
+pub fn order_by_value_asc(values: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+    idx
+}
+
+/// Order descending (highest value first — adversarial removal).
+pub fn order_by_value_desc(values: &[f64]) -> Vec<usize> {
+    let mut idx = order_by_value_asc(values);
+    idx.reverse();
+    idx
+}
+
+/// Area under the removal curve (higher = accuracy retained longer).
+pub fn curve_area(curve: &[(usize, f64)]) -> f64 {
+    if curve.len() < 2 {
+        return f64::NAN;
+    }
+    let mut area = 0.0;
+    for w in curve.windows(2) {
+        let dx = (w[1].0 - w[0].0) as f64;
+        area += dx * (w[0].1 + w[1].1) / 2.0;
+    }
+    area / (curve.last().unwrap().0 - curve[0].0) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corrupt, load_dataset};
+    use crate::shapley::knn_shapley::knn_shapley;
+
+    #[test]
+    fn removing_low_value_first_beats_high_value_first() {
+        // the classic data-valuation sanity check (Ghorbani & Zou 2019):
+        // dropping low-Shapley points preserves accuracy; dropping
+        // high-Shapley points destroys it
+        let mut ds = load_dataset("circle", 120, 50, 3).unwrap();
+        corrupt::flip_labels(&mut ds, 0.1, 5); // give low-value points to find
+        let k = 5;
+        let vals = knn_shapley(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, k);
+        let low_first = removal_curve(&ds, &order_by_value_asc(&vals), 10, 30, k);
+        let high_first = removal_curve(&ds, &order_by_value_desc(&vals), 10, 30, k);
+        let a_low = curve_area(&low_first);
+        let a_high = curve_area(&high_first);
+        assert!(
+            a_low > a_high + 0.05,
+            "low-first area {a_low} vs high-first {a_high}"
+        );
+    }
+
+    #[test]
+    fn curve_starts_at_full_accuracy_and_tracks_removals() {
+        let ds = load_dataset("moon", 60, 30, 1).unwrap();
+        let vals = vec![0.0; 60];
+        let curve = removal_curve(&ds, &order_by_value_asc(&vals), 15, 10, 3);
+        assert_eq!(curve[0].0, 0);
+        for w in curve.windows(2) {
+            assert_eq!(w[1].0 - w[0].0, 15);
+        }
+    }
+
+    #[test]
+    fn order_helpers() {
+        let v = [0.3, -1.0, 2.0];
+        assert_eq!(order_by_value_asc(&v), vec![1, 0, 2]);
+        assert_eq!(order_by_value_desc(&v), vec![2, 0, 1]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Micro/bench harness (no criterion in the offline image): warmup,
+//! adaptive iteration count, mean/median/p99 and throughput reporting.
+//! Used by every target under `rust/benches/` (`harness = false`).
+
+use crate::report::table::Table;
+use crate::util::timer::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Minimum total measurement time per benchmark.
+    pub min_time: Duration,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+    pub warmup_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            min_time: Duration::from_millis(300),
+            max_iters: 1000,
+            warmup_iters: 2,
+        }
+    }
+}
+
+/// Quick config for slow end-to-end benches.
+pub fn quick() -> BenchConfig {
+    BenchConfig {
+        min_time: Duration::from_millis(100),
+        max_iters: 20,
+        warmup_iters: 1,
+    }
+}
+
+/// A suite collects measurements and renders a table at the end.
+pub struct Suite {
+    pub title: String,
+    config: BenchConfig,
+    results: Vec<Measurement>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        Suite {
+            title: title.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Measure a closure. The closure's return value is black-boxed to
+    /// keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.config.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.config.min_time && samples.len() < self.config.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            median: samples[samples.len() / 2],
+            p99: samples[(samples.len() * 99) / 100],
+            min: samples[0],
+        };
+        eprintln!(
+            "  {name}: mean {} (median {}, p99 {}, {} iters)",
+            fmt_duration(m.mean),
+            fmt_duration(m.median),
+            fmt_duration(m.p99),
+            m.iters
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Render the suite as an aligned table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["benchmark", "mean", "median", "p99", "min", "iters"]);
+        for m in &self.results {
+            t.row(&[
+                m.name.clone(),
+                fmt_duration(m.mean),
+                fmt_duration(m.median),
+                fmt_duration(m.p99),
+                fmt_duration(m.min),
+                m.iters.to_string(),
+            ]);
+        }
+        format!("\n== {} ==\n{}", self.title, t.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut s = Suite::new("test").with_config(BenchConfig {
+            min_time: Duration::from_millis(5),
+            max_iters: 50,
+            warmup_iters: 1,
+        });
+        let m = s.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(m.iters >= 1);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.min <= m.median && m.median <= m.p99);
+        let table = s.render();
+        assert!(table.contains("spin"));
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut s = Suite::new("cap").with_config(BenchConfig {
+            min_time: Duration::from_secs(10),
+            max_iters: 3,
+            warmup_iters: 0,
+        });
+        s.bench("noop", || 1);
+        assert_eq!(s.results()[0].iters, 3);
+    }
+}

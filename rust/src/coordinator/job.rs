@@ -1,0 +1,140 @@
+//! Valuation job and result types, plus the sharding plan.
+
+use crate::data::Dataset;
+use crate::knn::distance::Metric;
+use crate::runtime::Engine;
+use crate::util::matrix::Matrix;
+use std::time::Duration;
+
+/// A complete valuation request against one dataset.
+#[derive(Clone, Debug)]
+pub struct ValuationJob {
+    pub k: usize,
+    pub engine: Engine,
+    /// Test points per shard (block). For the XLA engine this is clamped
+    /// to the artifact's baked block size.
+    pub block_size: usize,
+    pub workers: usize,
+    pub metric: Metric,
+    /// Bounded-queue capacity as a multiple of `workers` (backpressure).
+    pub queue_factor: usize,
+}
+
+impl ValuationJob {
+    pub fn new(k: usize) -> Self {
+        ValuationJob {
+            k,
+            engine: Engine::Rust,
+            block_size: 32,
+            workers: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4),
+            metric: Metric::SqEuclidean,
+            queue_factor: 2,
+        }
+    }
+
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_block_size(mut self, block: usize) -> Self {
+        self.block_size = block.max(1);
+        self
+    }
+
+    /// Shard the test set into [lo, hi) block ranges.
+    pub fn plan_shards(&self, n_test: usize) -> Vec<(usize, usize)> {
+        assert!(n_test > 0, "empty test set");
+        let b = self.block_size.max(1);
+        (0..n_test.div_ceil(b))
+            .map(|i| (i * b, ((i + 1) * b).min(n_test)))
+            .collect()
+    }
+}
+
+/// The outcome of a valuation job.
+#[derive(Clone, Debug)]
+pub struct ValuationResult {
+    /// Averaged interaction matrix (Eq. 9), diagonal = main terms.
+    pub phi: Matrix,
+    /// Number of test points contributing.
+    pub weight: f64,
+    /// Blocks processed.
+    pub blocks: usize,
+    pub elapsed: Duration,
+    /// Test points per second.
+    pub throughput: f64,
+    pub engine: Engine,
+}
+
+impl ValuationResult {
+    /// Average interaction of the strict upper triangle (summary stat the
+    /// examples print).
+    pub fn mean_offdiag(&self) -> f64 {
+        let ut = self.phi.upper_triangle_entries();
+        crate::util::stats::mean(&ut)
+    }
+}
+
+/// A unit of work: one test-block range of the dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// The partial result a worker produces for one shard.
+pub struct PartialResult {
+    pub index: usize,
+    pub phi_sum: Matrix,
+    pub weight: f64,
+}
+
+/// Helper: the shard list for a dataset under this job.
+pub fn shards_for(job: &ValuationJob, ds: &Dataset) -> Vec<Shard> {
+    job.plan_shards(ds.n_test())
+        .into_iter()
+        .enumerate()
+        .map(|(index, (lo, hi))| Shard { index, lo, hi })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_test_set_without_overlap() {
+        let job = ValuationJob::new(3).with_block_size(8);
+        for n_test in [1usize, 7, 8, 9, 64, 65] {
+            let shards = job.plan_shards(n_test);
+            assert_eq!(shards[0].0, 0);
+            assert_eq!(shards.last().unwrap().1, n_test);
+            for w in shards.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap/overlap at {w:?}");
+            }
+            assert!(shards.iter().all(|&(lo, hi)| hi - lo <= 8 && hi > lo));
+        }
+    }
+
+    #[test]
+    fn builder_clamps() {
+        let job = ValuationJob::new(5).with_workers(0).with_block_size(0);
+        assert_eq!(job.workers, 1);
+        assert_eq!(job.block_size, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty test set")]
+    fn empty_test_set_panics() {
+        ValuationJob::new(3).plan_shards(0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Deterministic merge of per-shard partial sums.
+//!
+//! Eq. (9) is linear over the test set, so the global matrix is
+//! Σ_blocks phi_sum / Σ_blocks weight. Floating-point addition is not
+//! associative, so to make results bit-identical regardless of worker
+//! count and completion order the merger buffers partials and reduces
+//! them in block-index order.
+
+use super::job::PartialResult;
+use crate::util::matrix::Matrix;
+
+/// Accumulates partial results and produces the final averaged matrix.
+pub struct Merger {
+    expected: usize,
+    slots: Vec<Option<PartialResult>>,
+}
+
+impl Merger {
+    pub fn new(expected_blocks: usize) -> Self {
+        Merger {
+            expected: expected_blocks,
+            slots: (0..expected_blocks).map(|_| None).collect(),
+        }
+    }
+
+    /// Deposit one shard's partial result. Panics on duplicate or
+    /// out-of-range indices (pipeline invariant violations).
+    pub fn push(&mut self, partial: PartialResult) {
+        let idx = partial.index;
+        assert!(idx < self.expected, "shard index {idx} out of range");
+        assert!(
+            self.slots[idx].is_none(),
+            "shard {idx} delivered twice — pipeline bug"
+        );
+        self.slots[idx] = Some(partial);
+    }
+
+    pub fn received(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.received() == self.expected
+    }
+
+    /// Reduce in block-index order → (averaged matrix, total weight).
+    /// Panics if any shard is missing.
+    pub fn finalize(self) -> (Matrix, f64) {
+        assert!(self.expected > 0, "no shards");
+        let mut acc: Option<Matrix> = None;
+        let mut weight = 0.0f64;
+        for (i, slot) in self.slots.into_iter().enumerate() {
+            let p = slot.unwrap_or_else(|| panic!("shard {i} missing at finalize"));
+            weight += p.weight;
+            match &mut acc {
+                None => acc = Some(p.phi_sum),
+                Some(m) => m.add_assign(&p.phi_sum),
+            }
+        }
+        let mut m = acc.unwrap();
+        assert!(weight > 0.0, "zero total weight");
+        m.scale(1.0 / weight);
+        (m, weight)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn partial(index: usize, v: f64, w: f64) -> PartialResult {
+        PartialResult {
+            index,
+            phi_sum: Matrix::from_vec(2, 2, vec![v, 0.0, 0.0, v]),
+            weight: w,
+        }
+    }
+
+    #[test]
+    fn merge_is_weighted_average() {
+        let mut m = Merger::new(2);
+        m.push(partial(0, 2.0, 2.0));
+        m.push(partial(1, 4.0, 2.0));
+        let (phi, w) = m.finalize();
+        assert_eq!(w, 4.0);
+        assert_eq!(phi.get(0, 0), 1.5); // (2+4)/4
+    }
+
+    #[test]
+    fn merge_order_independent_bitwise() {
+        // adversarial magnitudes where naive arrival-order summation differs
+        let vals = [1e16, 1.0, -1e16, 3.0, 1e-8, 7.0];
+        let build = |order: &[usize]| {
+            let mut m = Merger::new(vals.len());
+            for &i in order {
+                m.push(partial(i, vals[i], 1.0));
+            }
+            m.finalize().0.get(0, 0).to_bits()
+        };
+        let a = build(&[0, 1, 2, 3, 4, 5]);
+        let b = build(&[5, 3, 1, 0, 2, 4]);
+        let c = build(&[2, 4, 0, 5, 1, 3]);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    #[should_panic(expected = "delivered twice")]
+    fn duplicate_shard_detected() {
+        let mut m = Merger::new(2);
+        m.push(partial(0, 1.0, 1.0));
+        m.push(partial(0, 1.0, 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "missing at finalize")]
+    fn missing_shard_detected() {
+        let mut m = Merger::new(2);
+        m.push(partial(1, 1.0, 1.0));
+        let _ = m.finalize();
+    }
+
+    #[test]
+    fn completeness_tracking() {
+        let mut m = Merger::new(3);
+        assert!(!m.is_complete());
+        m.push(partial(1, 1.0, 1.0));
+        assert_eq!(m.received(), 1);
+        m.push(partial(0, 1.0, 1.0));
+        m.push(partial(2, 1.0, 1.0));
+        assert!(m.is_complete());
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the streaming data-valuation pipeline.
+//!
+//! A valuation job shards the test set into blocks, feeds them through a
+//! bounded work queue (backpressure) to a pool of workers, and merges the
+//! per-block partial sums deterministically (Eq. 9 linearity over the
+//! test set makes the merge an exact weighted sum — results are
+//! bit-identical regardless of worker count or arrival order because the
+//! merger sums in block-index order).
+//!
+//! * [`pool`]    — thread pool + bounded channel substrate
+//! * [`job`]     — job/result types and sharding plan
+//! * [`merge`]   — deterministic partial-sum reduction
+//! * [`pipeline`] — the orchestrator wiring it all together
+//! * [`progress`] — atomic counters / throughput metrics
+
+pub mod job;
+pub mod merge;
+pub mod pipeline;
+pub mod pool;
+pub mod progress;
+
+pub use job::{ValuationJob, ValuationResult};
+pub use pipeline::{run_job, run_job_with_engine};

@@ -1,0 +1,246 @@
+//! The orchestrator: shard → bounded queue → worker pool → deterministic
+//! merge.
+//!
+//! Engine dispatch:
+//! * `Engine::Rust` — each worker runs the pure-Rust Algorithm 1 on its
+//!   shard (scales linearly with cores; see benches/pipeline.rs).
+//! * `Engine::Xla`  — each worker owns a [`StiExecutor`] compiled from the
+//!   matching AOT artifact (one PJRT client per worker; the CPU plugin
+//!   serializes execution per client, so per-worker clients are what
+//!   gives real parallelism).
+
+use super::job::{shards_for, PartialResult, Shard, ValuationJob, ValuationResult};
+use super::merge::Merger;
+use super::pool::{run_workers, Bounded};
+
+use super::progress::{Progress, ThroughputMeter};
+use crate::data::Dataset;
+use crate::runtime::{executor_for, Engine, Manifest, StiExecutor};
+use crate::shapley::sti_knn::{sti_knn_partial, StiParams};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Run a valuation job with the pure-Rust engine (no artifacts needed).
+pub fn run_job(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    anyhow::ensure!(job.engine == Engine::Rust, "use run_job_with_engine for XLA");
+    run_rust(ds, job)
+}
+
+/// Run a valuation job with either engine; `artifacts_dir` is only read
+/// for `Engine::Xla`.
+pub fn run_job_with_engine(
+    ds: &Dataset,
+    job: &ValuationJob,
+    artifacts_dir: &Path,
+) -> Result<ValuationResult> {
+    match job.engine {
+        Engine::Rust => run_rust(ds, job),
+        Engine::Xla => run_xla(ds, job, artifacts_dir),
+    }
+}
+
+fn run_rust(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    let params = StiParams {
+        k: job.k,
+        metric: job.metric,
+    };
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let shards = shards_for(job, ds);
+    let merger = Mutex::new(Merger::new(shards.len()));
+    let queue: Bounded<Shard> = Bounded::new(job.workers * job.queue_factor.max(1));
+
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for shard in &shards {
+                if queue.send(*shard).is_err() {
+                    break;
+                }
+            }
+            queue.close();
+        });
+        run_workers(&queue, job.workers, |_w, shard: Shard| {
+            let t0 = std::time::Instant::now();
+            let (tx, ty) = ds.test_slice(shard.lo, shard.hi);
+            let (phi_sum, weight) =
+                sti_knn_partial(&ds.train_x, &ds.train_y, ds.d, tx, ty, &params);
+            progress.record_block(shard.hi - shard.lo, t0.elapsed().as_nanos() as u64);
+            merger.lock().unwrap().push(PartialResult {
+                index: shard.index,
+                phi_sum,
+                weight,
+            });
+        });
+    });
+
+    let (phi, weight) = merger.into_inner().unwrap().finalize();
+    let elapsed = meter.elapsed();
+    Ok(ValuationResult {
+        phi,
+        weight,
+        blocks: shards.len(),
+        elapsed,
+        throughput: meter.rate(progress.points()),
+        engine: Engine::Rust,
+    })
+}
+
+fn run_xla(ds: &Dataset, job: &ValuationJob, artifacts_dir: &Path) -> Result<ValuationResult> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    // Bind the job to the artifact's baked block size.
+    let spec = manifest
+        .find("sti", ds.n_train(), ds.d, job.k)
+        .with_context(|| {
+            format!(
+                "no sti artifact for (n={}, d={}, k={}); run `make artifacts` \
+                 with this shape in DEFAULT_GRID or use --engine rust",
+                ds.n_train(),
+                ds.d,
+                job.k
+            )
+        })?;
+    let block = spec.b;
+    let job = job.clone().with_block_size(block);
+
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let shards = shards_for(&job, ds);
+    let merger = Mutex::new(Merger::new(shards.len()));
+    let queue: Bounded<Shard> = Bounded::new(job.workers * job.queue_factor.max(1));
+
+    let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+
+    // The xla crate's PJRT handles are !Send (Rc internally), so each
+    // worker thread constructs — and keeps — its own client + compiled
+    // executable; only Shards and PartialResults cross thread boundaries.
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for shard in &shards {
+                if queue.send(*shard).is_err() {
+                    break;
+                }
+            }
+            queue.close();
+        });
+        for _w in 0..job.workers {
+            let queue = &queue;
+            let manifest = &manifest;
+            let merger = &merger;
+            let errors = &errors;
+            let progress = &progress;
+            let job = &job;
+            s.spawn(move || {
+                let exec: StiExecutor =
+                    match executor_for(manifest, "sti", ds.n_train(), ds.d, job.k) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            errors.lock().unwrap().push(e);
+                            queue.close();
+                            return;
+                        }
+                    };
+                while let Some(shard) = queue.recv() {
+                    let t0 = std::time::Instant::now();
+                    let (tx, ty) = ds.test_slice(shard.lo, shard.hi);
+                    match exec.run_block(&ds.train_x, &ds.train_y, tx, ty) {
+                        Ok((phi_sum, weight)) => {
+                            progress.record_block(
+                                shard.hi - shard.lo,
+                                t0.elapsed().as_nanos() as u64,
+                            );
+                            merger.lock().unwrap().push(PartialResult {
+                                index: shard.index,
+                                phi_sum,
+                                weight,
+                            });
+                        }
+                        Err(e) => {
+                            errors.lock().unwrap().push(e.context(format!(
+                                "shard {} [{}, {})",
+                                shard.index, shard.lo, shard.hi
+                            )));
+                            queue.close(); // fail fast: stop feeding workers
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let errs = errors.into_inner().unwrap();
+    if let Some(e) = errs.into_iter().next() {
+        return Err(e);
+    }
+    let (phi, weight) = merger.into_inner().unwrap().finalize();
+    let elapsed = meter.elapsed();
+    Ok(ValuationResult {
+        phi,
+        weight,
+        blocks: shards.len(),
+        elapsed,
+        throughput: meter.rate(progress.points()),
+        engine: Engine::Xla,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_dataset;
+    use crate::shapley::sti_knn::sti_knn;
+
+    #[test]
+    fn pipeline_equals_single_threaded_reference() {
+        let ds = load_dataset("moon", 60, 23, 5).unwrap();
+        let reference = sti_knn(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(5),
+        );
+        for workers in [1usize, 2, 4] {
+            for block in [1usize, 7, 16, 64] {
+                let job = ValuationJob::new(5)
+                    .with_workers(workers)
+                    .with_block_size(block);
+                let res = run_job(&ds, &job).unwrap();
+                assert_eq!(res.weight, 23.0);
+                assert!(
+                    res.phi.max_abs_diff(&reference) < 1e-12,
+                    "workers={workers} block={block}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_bit_deterministic_across_worker_counts() {
+        let ds = load_dataset("click", 80, 17, 9).unwrap();
+        let run = |workers| {
+            let job = ValuationJob::new(3).with_workers(workers).with_block_size(4);
+            run_job(&ds, &job).unwrap().phi
+        };
+        let a = run(1);
+        let b = run(3);
+        let c = run(8);
+        // bitwise equality, not approximate
+        assert_eq!(a.data().len(), b.data().len());
+        for i in 0..a.data().len() {
+            assert_eq!(a.data()[i].to_bits(), b.data()[i].to_bits());
+            assert_eq!(b.data()[i].to_bits(), c.data()[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn throughput_and_blocks_reported() {
+        let ds = load_dataset("cpu", 50, 10, 2).unwrap();
+        let job = ValuationJob::new(3).with_workers(2).with_block_size(3);
+        let res = run_job(&ds, &job).unwrap();
+        assert_eq!(res.blocks, 4); // ceil(10/3)
+        assert!(res.throughput > 0.0);
+        assert!(res.elapsed.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Concurrency substrate: a bounded MPMC channel and a scoped worker pool
+//! (no tokio/rayon in the offline image).
+//!
+//! The bounded channel provides the pipeline's backpressure: producers
+//! block once `capacity` items are in flight, so a slow engine (e.g. the
+//! XLA executor) throttles shard production instead of ballooning memory.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// A bounded multi-producer multi-consumer queue. `None` from `recv`
+/// means the channel is closed and drained.
+pub struct Bounded<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+    /// high-water mark, for the backpressure invariant tests
+    peak: usize,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Bounded {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::with_capacity(capacity),
+                closed: false,
+                peak: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking send. Returns Err(item) if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        while g.queue.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(item);
+        }
+        g.queue.push_back(item);
+        let len = g.queue.len();
+        if len > g.peak {
+            g.peak = len;
+        }
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; `None` once closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.queue.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the channel: senders fail, receivers drain then get `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Highest queue occupancy observed (backpressure invariant: ≤ capacity).
+    pub fn peak(&self) -> usize {
+        self.inner.lock().unwrap().peak
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Run `worker` on `threads` scoped threads, each pulling from `queue`
+/// until it drains. The closure receives (worker_index, item).
+pub fn run_workers<T: Send, F>(queue: &Bounded<T>, threads: usize, worker: F)
+where
+    F: Fn(usize, T) + Sync,
+{
+    assert!(threads >= 1);
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let worker = &worker;
+            s.spawn(move || {
+                while let Some(item) = queue.recv() {
+                    worker(w, item);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = Bounded::new(4);
+        q.send(1).unwrap();
+        q.send(2).unwrap();
+        q.close();
+        assert_eq!(q.recv(), Some(1));
+        assert_eq!(q.recv(), Some(2));
+        assert_eq!(q.recv(), None);
+    }
+
+    #[test]
+    fn send_after_close_fails() {
+        let q: Bounded<u32> = Bounded::new(1);
+        q.close();
+        assert_eq!(q.send(9), Err(9));
+    }
+
+    #[test]
+    fn backpressure_bounds_occupancy() {
+        let q = std::sync::Arc::new(Bounded::new(2));
+        let total = 100;
+        let consumed = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let qp = q.clone();
+            s.spawn(move || {
+                for i in 0..total {
+                    qp.send(i).unwrap();
+                }
+                qp.close();
+            });
+            while q.recv().is_some() {
+                consumed.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(consumed.load(Ordering::Relaxed), total);
+        assert!(q.peak() <= 2, "peak {} exceeded capacity", q.peak());
+    }
+
+    #[test]
+    fn workers_process_everything_exactly_once() {
+        let q = Bounded::new(8);
+        let seen = Mutex::new(vec![0usize; 200]);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..200 {
+                    q.send(i).unwrap();
+                }
+                q.close();
+            });
+            s.spawn(|| {
+                run_workers(&q, 4, |_w, i: usize| {
+                    seen.lock().unwrap()[i] += 1;
+                });
+            });
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn multiple_consumers_drain() {
+        let q = std::sync::Arc::new(Bounded::new(3));
+        let count = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let q = q.clone();
+                let count = &count;
+                s.spawn(move || {
+                    while q.recv().is_some() {
+                        count.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            for i in 0..50 {
+                q.send(i).unwrap();
+            }
+            q.close();
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 50);
+    }
+}

@@ -1,0 +1,114 @@
+//! Pipeline metrics: atomic counters sampled by the orchestrator, giving
+//! throughput (test points/s) and per-phase accounting without locks on
+//! the hot path.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Shared progress state between workers and the orchestrator.
+#[derive(Default)]
+pub struct Progress {
+    blocks_done: AtomicUsize,
+    points_done: AtomicUsize,
+    /// Cumulative busy time across workers, nanoseconds.
+    busy_ns: AtomicU64,
+}
+
+impl Progress {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one finished block of `points` test points that took `ns`
+    /// busy-nanoseconds.
+    pub fn record_block(&self, points: usize, ns: u64) {
+        self.blocks_done.fetch_add(1, Ordering::Relaxed);
+        self.points_done.fetch_add(points, Ordering::Relaxed);
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.blocks_done.load(Ordering::Relaxed)
+    }
+
+    pub fn points(&self) -> usize {
+        self.points_done.load(Ordering::Relaxed)
+    }
+
+    /// Mean busy time per test point in nanoseconds (0 if none yet).
+    pub fn ns_per_point(&self) -> f64 {
+        let pts = self.points();
+        if pts == 0 {
+            return 0.0;
+        }
+        self.busy_ns.load(Ordering::Relaxed) as f64 / pts as f64
+    }
+}
+
+/// Wall-clock throughput helper for the orchestrator.
+pub struct ThroughputMeter {
+    start: Instant,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        ThroughputMeter {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> std::time::Duration {
+        self.start.elapsed()
+    }
+
+    /// Points per second at this instant.
+    pub fn rate(&self, points: usize) -> f64 {
+        let secs = self.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        points as f64 / secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_across_threads() {
+        let p = Progress::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..25 {
+                        p.record_block(8, 1000);
+                    }
+                });
+            }
+        });
+        assert_eq!(p.blocks(), 100);
+        assert_eq!(p.points(), 800);
+        assert!((p.ns_per_point() - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_progress_is_zero() {
+        let p = Progress::new();
+        assert_eq!(p.ns_per_point(), 0.0);
+        assert_eq!(p.points(), 0);
+    }
+
+    #[test]
+    fn meter_rate_positive() {
+        let m = ThroughputMeter::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(m.rate(100) > 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Dataset corruption tools for the paper's §4 experiments:
+//! label flips (Fig. 5, "mislabeled points behave like the opposite
+//! class"), class subsampling (Fig. 4, redundancy/unbalance), and
+//! duplicate injection (the symmetry-axiom redundancy discussion).
+
+use super::dataset::Dataset;
+use crate::util::rng::Rng;
+
+/// Flip the labels of `fraction` of the training points (uniformly chosen)
+/// to a different uniformly-chosen class. Returns the flipped indices —
+/// the ground truth the mislabel-detection experiment scores against.
+pub fn flip_labels(ds: &mut Dataset, fraction: f64, seed: u64) -> Vec<usize> {
+    assert!((0.0..=1.0).contains(&fraction));
+    let n = ds.n_train();
+    let n_flip = ((n as f64 * fraction).round() as usize).min(n);
+    let mut rng = Rng::new(seed);
+    let mut flipped = rng.sample_indices(n, n_flip);
+    flipped.sort_unstable();
+    for &i in &flipped {
+        let old = ds.train_y[i];
+        let mut new = rng.below(ds.classes) as i32;
+        while new == old && ds.classes > 1 {
+            new = rng.below(ds.classes) as i32;
+        }
+        ds.train_y[i] = new;
+    }
+    flipped
+}
+
+/// Subsample one class of the training set down to `keep` points (Fig. 4's
+/// unbalanced-circle construction). Returns the retained dataset.
+pub fn subsample_class(ds: &Dataset, class: i32, keep: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let class_idx: Vec<usize> = (0..ds.n_train())
+        .filter(|&i| ds.train_y[i] == class)
+        .collect();
+    assert!(keep <= class_idx.len(), "cannot keep {keep} of {}", class_idx.len());
+    let kept: std::collections::HashSet<usize> = rng
+        .sample_indices(class_idx.len(), keep)
+        .into_iter()
+        .map(|p| class_idx[p])
+        .collect();
+    let keep_all: Vec<usize> = (0..ds.n_train())
+        .filter(|i| ds.train_y[*i] != class || kept.contains(i))
+        .collect();
+    ds.retain_train(&keep_all)
+}
+
+/// Append `copies` near-duplicates of training point `idx` (feature jitter
+/// `eps`), for the redundancy experiment: "Redundancy decreases in-class
+/// interaction" (§4).
+pub fn duplicate_point(ds: &mut Dataset, idx: usize, copies: usize, eps: f64, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let row: Vec<f32> = ds.train_row(idx).to_vec();
+    let label = ds.train_y[idx];
+    for _ in 0..copies {
+        for &v in &row {
+            ds.train_x.push(v + (eps * rng.normal()) as f32);
+        }
+        ds.train_y.push(label);
+    }
+    ds.validate();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn base() -> Dataset {
+        synth::dataset_from_points("c", synth::circle(60, 0.05, 0.5, 3), 20, 2, 3)
+    }
+
+    #[test]
+    fn flip_labels_flips_exactly_fraction() {
+        let mut ds = base();
+        let orig = ds.train_y.clone();
+        let flipped = flip_labels(&mut ds, 0.1, 9);
+        assert_eq!(flipped.len(), (ds.n_train() as f64 * 0.1).round() as usize);
+        for (i, (&a, &b)) in orig.iter().zip(&ds.train_y).enumerate() {
+            if flipped.contains(&i) {
+                assert_ne!(a, b, "index {i} reported flipped but unchanged");
+            } else {
+                assert_eq!(a, b, "index {i} changed but not reported");
+            }
+        }
+        ds.validate();
+    }
+
+    #[test]
+    fn flip_zero_fraction_is_noop() {
+        let mut ds = base();
+        let orig = ds.train_y.clone();
+        assert!(flip_labels(&mut ds, 0.0, 1).is_empty());
+        assert_eq!(ds.train_y, orig);
+    }
+
+    #[test]
+    fn subsample_class_keeps_exact_count() {
+        let ds = base();
+        let before = ds.train_class_counts();
+        let sub = subsample_class(&ds, 0, 10, 5);
+        let after = sub.train_class_counts();
+        assert_eq!(after[0], 10);
+        assert_eq!(after[1], before[1]);
+        sub.validate();
+    }
+
+    #[test]
+    fn duplicate_point_appends_jittered_copies() {
+        let mut ds = base();
+        let n0 = ds.n_train();
+        duplicate_point(&mut ds, 3, 5, 1e-3, 7);
+        assert_eq!(ds.n_train(), n0 + 5);
+        let orig = ds.train_row(3).to_vec();
+        for c in 0..5 {
+            let row = ds.train_row(n0 + c);
+            let dist: f32 = row
+                .iter()
+                .zip(&orig)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            assert!(dist < 1e-3, "copy {c} too far: {dist}");
+            assert_eq!(ds.train_y[n0 + c], ds.train_y[3]);
+        }
+    }
+}

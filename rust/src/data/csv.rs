@@ -1,0 +1,128 @@
+//! Minimal CSV I/O: export interaction matrices / value vectors for
+//! external plotting, and load labeled feature tables (numeric features,
+//! last column = integer class label).
+
+use crate::util::matrix::Matrix;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Write a matrix as CSV (no header).
+pub fn write_matrix(path: &Path, m: &Matrix) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for i in 0..m.rows() {
+        let row: Vec<String> = m.row(i).iter().map(|v| format!("{v:.9e}")).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write (index, value) rows with a header.
+pub fn write_values(path: &Path, header: &str, values: &[f64]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "index,{header}")?;
+    for (i, v) in values.iter().enumerate() {
+        writeln!(f, "{i},{v:.9e}")?;
+    }
+    Ok(())
+}
+
+/// Read a numeric CSV with the last column as integer label.
+/// Returns (features row-major, labels, d). Skips a header row if the
+/// first field of the first line is not numeric.
+pub fn read_labeled(path: &Path) -> std::io::Result<(Vec<f32>, Vec<i32>, usize)> {
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut xs: Vec<f32> = Vec::new();
+    let mut ys: Vec<i32> = Vec::new();
+    let mut d = 0usize;
+    for (lineno, line) in f.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() < 2 {
+            return Err(bad(lineno, "need at least one feature and a label"));
+        }
+        if lineno == 0 && fields[0].trim().parse::<f64>().is_err() {
+            continue; // header
+        }
+        let row_d = fields.len() - 1;
+        if d == 0 {
+            d = row_d;
+        } else if row_d != d {
+            return Err(bad(lineno, "inconsistent column count"));
+        }
+        for v in &fields[..row_d] {
+            xs.push(
+                v.trim()
+                    .parse::<f32>()
+                    .map_err(|e| bad(lineno, &format!("feature: {e}")))?,
+            );
+        }
+        ys.push(
+            fields[row_d]
+                .trim()
+                .parse::<f32>()
+                .map_err(|e| bad(lineno, &format!("label: {e}")))? as i32,
+        );
+    }
+    Ok((xs, ys, d))
+}
+
+fn bad(lineno: usize, msg: &str) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("csv line {}: {msg}", lineno + 1),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("stiknn_csv_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn matrix_roundtrips_via_read_labeled_shape() {
+        let p = tmp("m.csv");
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        write_matrix(&p, &m).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("1.000000000e0,"));
+    }
+
+    #[test]
+    fn values_file_has_header() {
+        let p = tmp("v.csv");
+        write_values(&p, "shapley", &[0.5, -0.25]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some("index,shapley"));
+        assert_eq!(lines.count(), 2);
+    }
+
+    #[test]
+    fn read_labeled_with_header_and_without() {
+        let p = tmp("d.csv");
+        std::fs::write(&p, "x1,x2,label\n1.0,2.0,0\n3.0,4.0,1\n").unwrap();
+        let (xs, ys, d) = read_labeled(&p).unwrap();
+        assert_eq!((xs, ys, d), (vec![1.0, 2.0, 3.0, 4.0], vec![0, 1], 2));
+
+        std::fs::write(&p, "1.5,0\n2.5,1\n").unwrap();
+        let (xs, ys, d) = read_labeled(&p).unwrap();
+        assert_eq!((xs, ys, d), (vec![1.5, 2.5], vec![0, 1], 1));
+    }
+
+    #[test]
+    fn read_labeled_rejects_ragged_rows() {
+        let p = tmp("bad.csv");
+        std::fs::write(&p, "1.0,2.0,0\n3.0,1\n").unwrap();
+        assert!(read_labeled(&p).is_err());
+    }
+}

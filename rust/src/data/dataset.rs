@@ -1,0 +1,193 @@
+//! The dataset container shared by every engine and the coordinator.
+
+/// A labeled dataset split into train and test parts. Features are
+/// row-major f32 (the dtype of the XLA artifacts); labels are i32 class
+/// ids 0..classes.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub d: usize,
+    pub classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// Panics if any internal invariant is broken (shape mismatches,
+    /// out-of-range labels). Called by generators and loaders.
+    pub fn validate(&self) {
+        assert_eq!(
+            self.train_x.len(),
+            self.train_y.len() * self.d,
+            "{}: train shape",
+            self.name
+        );
+        assert_eq!(
+            self.test_x.len(),
+            self.test_y.len() * self.d,
+            "{}: test shape",
+            self.name
+        );
+        assert!(self.classes >= 2, "{}: needs >= 2 classes", self.name);
+        for &y in self.train_y.iter().chain(&self.test_y) {
+            assert!(
+                (0..self.classes as i32).contains(&y),
+                "{}: label {y} out of range",
+                self.name
+            );
+        }
+        assert!(
+            self.train_x.iter().chain(&self.test_x).all(|v| v.is_finite()),
+            "{}: non-finite feature",
+            self.name
+        );
+    }
+
+    /// The i-th training feature row.
+    pub fn train_row(&self, i: usize) -> &[f32] {
+        &self.train_x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The p-th test feature row.
+    pub fn test_row(&self, p: usize) -> &[f32] {
+        &self.test_x[p * self.d..(p + 1) * self.d]
+    }
+
+    /// Per-class counts over the training labels.
+    pub fn train_class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &y in &self.train_y {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+
+    /// A copy restricted to `test_range` of the test set (coordinator
+    /// sharding helper; train part is shared by clone).
+    pub fn test_slice(&self, lo: usize, hi: usize) -> (&[f32], &[i32]) {
+        (&self.test_x[lo * self.d..hi * self.d], &self.test_y[lo..hi])
+    }
+
+    /// Keep only the selected training indices (used by the
+    /// summarization/removal experiments). Preserves order.
+    pub fn retain_train(&self, keep: &[usize]) -> Dataset {
+        let mut out = self.clone();
+        out.train_x = Vec::with_capacity(keep.len() * self.d);
+        out.train_y = Vec::with_capacity(keep.len());
+        for &i in keep {
+            out.train_x.extend_from_slice(self.train_row(i));
+            out.train_y.push(self.train_y[i]);
+        }
+        out.name = format!("{}[{} kept]", self.name, keep.len());
+        out
+    }
+
+    /// Paper's matrix ordering (§4): indices sorted by class, then by
+    /// feature 0, then feature 1... Returns the permutation to apply to
+    /// train indices before rendering interaction heatmaps.
+    pub fn paper_display_order(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.n_train()).collect();
+        idx.sort_by(|&a, &b| {
+            self.train_y[a].cmp(&self.train_y[b]).then_with(|| {
+                let ra = self.train_row(a);
+                let rb = self.train_row(b);
+                for (x, y) in ra.iter().zip(rb) {
+                    match x.partial_cmp(y) {
+                        Some(std::cmp::Ordering::Equal) | None => continue,
+                        Some(o) => return o,
+                    }
+                }
+                std::cmp::Ordering::Equal
+            })
+        });
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "tiny".into(),
+            d: 2,
+            classes: 2,
+            train_x: vec![0.0, 0.0, 1.0, 0.0, 0.5, 1.0],
+            train_y: vec![0, 1, 0],
+            test_x: vec![0.1, 0.1],
+            test_y: vec![0],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_consistent() {
+        tiny().validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "label")]
+    fn validate_rejects_bad_label() {
+        let mut ds = tiny();
+        ds.train_y[0] = 7;
+        ds.validate();
+    }
+
+    #[test]
+    fn rows_and_counts() {
+        let ds = tiny();
+        assert_eq!(ds.train_row(1), &[1.0, 0.0]);
+        assert_eq!(ds.test_row(0), &[0.1, 0.1]);
+        assert_eq!(ds.train_class_counts(), vec![2, 1]);
+    }
+
+    #[test]
+    fn retain_train_keeps_selection_in_order() {
+        let ds = tiny();
+        let sub = ds.retain_train(&[2, 0]);
+        assert_eq!(sub.train_y, vec![0, 0]);
+        assert_eq!(sub.train_row(0), &[0.5, 1.0]);
+        sub.validate();
+    }
+
+    #[test]
+    fn paper_display_order_sorts_class_then_features() {
+        let ds = Dataset {
+            name: "o".into(),
+            d: 1,
+            classes: 2,
+            train_x: vec![5.0, 1.0, 3.0, 2.0],
+            train_y: vec![1, 0, 0, 1],
+            test_x: vec![],
+            test_y: vec![],
+        };
+        // class 0: indices 1 (x=1), 2 (x=3); class 1: 3 (x=2), 0 (x=5)
+        assert_eq!(ds.paper_display_order(), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn test_slice_views() {
+        let ds = Dataset {
+            name: "s".into(),
+            d: 2,
+            classes: 2,
+            train_x: vec![0.0; 4],
+            train_y: vec![0, 1],
+            test_x: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            test_y: vec![0, 1, 0],
+        };
+        let (x, y) = ds.test_slice(1, 3);
+        assert_eq!(x, &[3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(y, &[1, 0]);
+    }
+}

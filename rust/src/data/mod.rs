@@ -1,0 +1,14 @@
+//! Dataset substrate: containers, synthetic generators (including twins of
+//! every dataset in the paper's Table 1 — see DESIGN.md §5 for the
+//! substitution rationale), splits, corruption (mislabeling/redundancy for
+//! Figs. 4–5), and CSV I/O.
+
+pub mod corrupt;
+pub mod csv;
+pub mod dataset;
+pub mod registry;
+pub mod split;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use registry::{load_dataset, registry_names, DatasetSpec};

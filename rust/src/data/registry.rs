@@ -1,0 +1,173 @@
+//! The evaluation-dataset registry: deterministic synthetic *twins* of
+//! every dataset in the paper's Table 1.
+//!
+//! The image has no network access, so OpenML downloads are replaced by
+//! generators that match each dataset's published schema (features,
+//! classes, class balance) and a plausible cluster structure — STI-KNN
+//! consumes only (distance ranks, labels), so any dataset with comparable
+//! geometry exercises the identical code path (DESIGN.md §5). Circle and
+//! Moon are generated from the same parametric families scikit-learn uses
+//! (the paper's own source for them). FashionMNIST is represented by
+//! 32-dim "feature extractor output" clusters, matching the paper's
+//! pretrained-extractor setup.
+
+use super::dataset::Dataset;
+use super::synth;
+
+/// Twin specification: the real dataset's schema plus generator knobs.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// OpenML id or citation in the paper's Table 1 ("-" for sklearn).
+    pub source: &'static str,
+    pub d: usize,
+    pub classes: usize,
+    /// Default train size used by the experiments.
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Class weights (imbalance), cluster count, separation, noise, flip.
+    pub class_weights: &'static [f64],
+    pub clusters_per_class: usize,
+    pub sep: f64,
+    pub noise: f64,
+    pub flip: f64,
+}
+
+/// All 16 Table-1 datasets.
+pub const REGISTRY: &[DatasetSpec] = &[
+    DatasetSpec { name: "apsfailure",  source: "openml.org/d/41138", d: 20, classes: 2, n_train: 600, n_test: 150, class_weights: &[0.98, 0.02], clusters_per_class: 2, sep: 4.0, noise: 1.0, flip: 0.02 },
+    DatasetSpec { name: "cpu",          source: "openml.org/d/761",  d: 8,  classes: 2, n_train: 600, n_test: 150, class_weights: &[0.5, 0.5],   clusters_per_class: 1, sep: 3.0, noise: 1.0, flip: 0.05 },
+    DatasetSpec { name: "circle",       source: "sklearn make_circles", d: 2, classes: 2, n_train: 600, n_test: 150, class_weights: &[0.5, 0.5], clusters_per_class: 1, sep: 0.0, noise: 0.05, flip: 0.0 },
+    DatasetSpec { name: "click",        source: "openml.org/d/1218", d: 9,  classes: 2, n_train: 600, n_test: 150, class_weights: &[0.83, 0.17], clusters_per_class: 3, sep: 2.0, noise: 1.0, flip: 0.15 },
+    DatasetSpec { name: "creditcard",   source: "openml.org/d/31",   d: 20, classes: 2, n_train: 600, n_test: 150, class_weights: &[0.7, 0.3],  clusters_per_class: 2, sep: 2.5, noise: 1.0, flip: 0.1 },
+    DatasetSpec { name: "fashionmnist", source: "Xiao et al. 2017 (extractor features)", d: 32, classes: 10, n_train: 600, n_test: 150, class_weights: &[0.1; 10], clusters_per_class: 1, sep: 6.0, noise: 1.0, flip: 0.02 },
+    DatasetSpec { name: "flower",       source: "openml.org/d/43839", d: 16, classes: 5, n_train: 600, n_test: 150, class_weights: &[0.2; 5], clusters_per_class: 1, sep: 5.0, noise: 1.0, flip: 0.03 },
+    DatasetSpec { name: "monksv2",      source: "openml.org/d/334",  d: 6,  classes: 2, n_train: 400, n_test: 100, class_weights: &[0.66, 0.34], clusters_per_class: 4, sep: 2.0, noise: 0.8, flip: 0.1 },
+    DatasetSpec { name: "moon",         source: "sklearn make_moons", d: 2, classes: 2, n_train: 600, n_test: 150, class_weights: &[0.5, 0.5], clusters_per_class: 1, sep: 0.0, noise: 0.08, flip: 0.0 },
+    DatasetSpec { name: "phoneme",      source: "openml.org/d/1489", d: 5,  classes: 2, n_train: 600, n_test: 150, class_weights: &[0.71, 0.29], clusters_per_class: 2, sep: 2.5, noise: 1.0, flip: 0.08 },
+    DatasetSpec { name: "planes2d",     source: "openml.org/d/727",  d: 10, classes: 2, n_train: 600, n_test: 150, class_weights: &[0.5, 0.5], clusters_per_class: 1, sep: 2.0, noise: 1.0, flip: 0.1 },
+    DatasetSpec { name: "pol",          source: "openml.org/d/722",  d: 26, classes: 2, n_train: 600, n_test: 150, class_weights: &[0.5, 0.5], clusters_per_class: 2, sep: 3.5, noise: 1.0, flip: 0.05 },
+    DatasetSpec { name: "steelplates",  source: "openml.org/d/40982", d: 27, classes: 7, n_train: 600, n_test: 150, class_weights: &[0.35, 0.1, 0.2, 0.04, 0.03, 0.2, 0.08], clusters_per_class: 1, sep: 4.5, noise: 1.0, flip: 0.05 },
+    DatasetSpec { name: "tictactoe",    source: "openml.org/d/50",   d: 9,  classes: 2, n_train: 600, n_test: 150, class_weights: &[0.65, 0.35], clusters_per_class: 4, sep: 2.0, noise: 0.8, flip: 0.05 },
+    DatasetSpec { name: "transfusion",  source: "openml.org/d/1464", d: 4,  classes: 2, n_train: 500, n_test: 125, class_weights: &[0.76, 0.24], clusters_per_class: 1, sep: 2.0, noise: 1.0, flip: 0.12 },
+    DatasetSpec { name: "wind",         source: "openml.org/d/847",  d: 14, classes: 2, n_train: 600, n_test: 150, class_weights: &[0.53, 0.47], clusters_per_class: 1, sep: 2.5, noise: 1.0, flip: 0.08 },
+];
+
+/// Names of all registered datasets (Table-1 order).
+pub fn registry_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.name).collect()
+}
+
+pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
+    REGISTRY.iter().find(|s| s.name == name)
+}
+
+/// Instantiate a registered dataset (deterministic per (name, seed)).
+/// `n_train`/`n_test` of 0 use the spec defaults.
+pub fn load_dataset(name: &str, n_train: usize, n_test: usize, seed: u64) -> Option<Dataset> {
+    let s = spec(name)?;
+    let n_train = if n_train == 0 { s.n_train } else { n_train };
+    let n_test = if n_test == 0 { s.n_test } else { n_test };
+    let ds = match s.name {
+        "circle" => {
+            let total = n_train + n_test;
+            let pts = synth::circle(total.div_ceil(2), s.noise, 0.5, seed);
+            synth::dataset_from_points("circle", pts, n_test, 2, seed)
+        }
+        "moon" => {
+            let total = n_train + n_test;
+            let pts = synth::moon(total.div_ceil(2), s.noise, seed);
+            synth::dataset_from_points("moon", pts, n_test, 2, seed)
+        }
+        _ => {
+            let (xs, ys) = synth::gaussian_classes(
+                n_train + n_test,
+                s.d,
+                s.classes,
+                s.clusters_per_class,
+                s.sep,
+                s.noise,
+                s.flip,
+                s.class_weights,
+                seed,
+            );
+            let mut ds = Dataset {
+                name: s.name.to_string(),
+                d: s.d,
+                classes: s.classes,
+                train_x: xs[n_test * s.d..].to_vec(),
+                train_y: ys[n_test..].to_vec(),
+                test_x: xs[..n_test * s.d].to_vec(),
+                test_y: ys[..n_test].to_vec(),
+            };
+            // Guarantee every class appears in train (tiny-split edge case).
+            for c in 0..s.classes as i32 {
+                if !ds.train_y.contains(&c) {
+                    ds.train_y[0] = c;
+                }
+            }
+            ds.validate();
+            ds
+        }
+    };
+    Some(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_16_table1_datasets() {
+        assert_eq!(REGISTRY.len(), 16);
+        for name in [
+            "apsfailure", "cpu", "circle", "click", "creditcard", "fashionmnist",
+            "flower", "monksv2", "moon", "phoneme", "planes2d", "pol",
+            "steelplates", "tictactoe", "transfusion", "wind",
+        ] {
+            assert!(spec(name).is_some(), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn load_all_datasets_validates() {
+        for s in REGISTRY {
+            let ds = load_dataset(s.name, 120, 30, 7).unwrap();
+            ds.validate();
+            assert_eq!(ds.d, s.d, "{}", s.name);
+            assert_eq!(ds.classes, s.classes, "{}", s.name);
+            assert_eq!(ds.n_test(), 30);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = load_dataset("click", 100, 20, 3).unwrap();
+        let b = load_dataset("click", 100, 20, 3).unwrap();
+        let c = load_dataset("click", 100, 20, 4).unwrap();
+        assert_eq!(a.train_x, b.train_x);
+        assert_ne!(a.train_x, c.train_x);
+    }
+
+    #[test]
+    fn imbalanced_specs_produce_imbalance() {
+        let ds = load_dataset("apsfailure", 500, 100, 11).unwrap();
+        let counts = ds.train_class_counts();
+        assert!(
+            counts[0] > counts[1] * 5,
+            "apsfailure should be heavily imbalanced: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(load_dataset("nope", 10, 5, 1).is_none());
+    }
+
+    #[test]
+    fn default_sizes_from_spec() {
+        let ds = load_dataset("transfusion", 0, 0, 1).unwrap();
+        assert_eq!(ds.n_train(), 500);
+        assert_eq!(ds.n_test(), 125);
+    }
+}

@@ -1,0 +1,106 @@
+//! Train/test split utilities, incl. the paper's 80/20 recommendation
+//! (§3.2 cites Gholamy et al. for it when discussing the effect of t).
+
+use super::dataset::Dataset;
+use crate::util::rng::Rng;
+
+/// Re-split a dataset's pooled points into a new (train, test) partition
+/// with the given test fraction, shuffled deterministically.
+pub fn resplit(ds: &Dataset, test_fraction: f64, seed: u64) -> Dataset {
+    assert!((0.0..1.0).contains(&test_fraction) && test_fraction > 0.0);
+    let d = ds.d;
+    let total = ds.n_train() + ds.n_test();
+    let mut xs: Vec<f32> = Vec::with_capacity(total * d);
+    let mut ys: Vec<i32> = Vec::with_capacity(total);
+    xs.extend_from_slice(&ds.train_x);
+    xs.extend_from_slice(&ds.test_x);
+    ys.extend_from_slice(&ds.train_y);
+    ys.extend_from_slice(&ds.test_y);
+
+    let mut rng = Rng::new(seed);
+    let idx = rng.permutation(total);
+    let n_test = ((total as f64 * test_fraction).round() as usize).clamp(1, total - 1);
+    let mut out = Dataset {
+        name: format!("{}[{}% test]", ds.name, (test_fraction * 100.0) as u32),
+        d,
+        classes: ds.classes,
+        train_x: Vec::with_capacity((total - n_test) * d),
+        train_y: Vec::with_capacity(total - n_test),
+        test_x: Vec::with_capacity(n_test * d),
+        test_y: Vec::with_capacity(n_test),
+    };
+    for (pos, &i) in idx.iter().enumerate() {
+        let row = &xs[i * d..(i + 1) * d];
+        if pos < n_test {
+            out.test_x.extend_from_slice(row);
+            out.test_y.push(ys[i]);
+        } else {
+            out.train_x.extend_from_slice(row);
+            out.train_y.push(ys[i]);
+        }
+    }
+    out.validate();
+    out
+}
+
+/// Stratified K-fold indices over `labels`: each fold has (approximately)
+/// the full class distribution. Returns `folds` vectors of indices.
+pub fn stratified_folds(labels: &[i32], folds: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(folds >= 2);
+    let mut rng = Rng::new(seed);
+    let mut by_class: std::collections::BTreeMap<i32, Vec<usize>> = Default::default();
+    for (i, &y) in labels.iter().enumerate() {
+        by_class.entry(y).or_default().push(i);
+    }
+    let mut out = vec![Vec::new(); folds];
+    for (_, mut idx) in by_class {
+        rng.shuffle(&mut idx);
+        for (pos, i) in idx.into_iter().enumerate() {
+            out[pos % folds].push(i);
+        }
+    }
+    for fold in &mut out {
+        fold.sort_unstable();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn resplit_8020_sizes() {
+        let ds = synth::dataset_from_points("c", synth::circle(100, 0.05, 0.5, 1), 40, 2, 1);
+        let re = resplit(&ds, 0.2, 5);
+        assert_eq!(re.n_test(), 40); // 20% of 200
+        assert_eq!(re.n_train(), 160);
+        re.validate();
+    }
+
+    #[test]
+    fn resplit_preserves_point_multiset() {
+        let ds = synth::dataset_from_points("c", synth::circle(30, 0.05, 0.5, 2), 10, 2, 2);
+        let re = resplit(&ds, 0.5, 9);
+        let mut a: Vec<i32> = ds.train_y.iter().chain(&ds.test_y).copied().collect();
+        let mut b: Vec<i32> = re.train_y.iter().chain(&re.test_y).copied().collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stratified_folds_cover_everything_once() {
+        let labels = vec![0, 0, 0, 0, 1, 1, 1, 1, 1, 1];
+        let folds = stratified_folds(&labels, 3, 7);
+        let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        // each fold has both classes
+        for f in &folds {
+            assert!(f.iter().any(|&i| labels[i] == 0));
+            assert!(f.iter().any(|&i| labels[i] == 1));
+        }
+    }
+}

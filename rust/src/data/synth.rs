@@ -1,0 +1,278 @@
+//! Synthetic dataset generators.
+//!
+//! `circle` and `moon` reproduce scikit-learn's `make_circles` /
+//! `make_moons` parametric forms (the paper's §4 and Appendix B datasets);
+//! `blobs`, `xor` and `spiral` provide additional geometry; and
+//! `tabular_twin` generates class-clustered tabular data with a given
+//! schema — the substitution substrate for the paper's OpenML datasets
+//! (DESIGN.md §5).
+
+use super::dataset::Dataset;
+use crate::util::rng::Rng;
+use std::f64::consts::PI;
+
+/// Two concentric circles (binary). `factor` is the inner/outer radius
+/// ratio, `noise` the gaussian feature noise — scikit-learn defaults
+/// mirrored (factor 0.5, noise 0.08 in the paper's plots' visual range).
+pub fn circle(n_per_class: usize, noise: f64, factor: f64, seed: u64) -> Vec<(f32, f32, i32)> {
+    assert!((0.0..1.0).contains(&factor));
+    let mut rng = Rng::new(seed);
+    let mut pts = Vec::with_capacity(2 * n_per_class);
+    for i in 0..n_per_class {
+        let theta = 2.0 * PI * i as f64 / n_per_class as f64;
+        // outer circle = class 0
+        pts.push((
+            (theta.cos() + noise * rng.normal()) as f32,
+            (theta.sin() + noise * rng.normal()) as f32,
+            0,
+        ));
+        // inner circle = class 1
+        pts.push((
+            (factor * theta.cos() + noise * rng.normal()) as f32,
+            (factor * theta.sin() + noise * rng.normal()) as f32,
+            1,
+        ));
+    }
+    pts
+}
+
+/// Two interleaving half-moons (binary), scikit-learn `make_moons` form.
+pub fn moon(n_per_class: usize, noise: f64, seed: u64) -> Vec<(f32, f32, i32)> {
+    let mut rng = Rng::new(seed);
+    let mut pts = Vec::with_capacity(2 * n_per_class);
+    for i in 0..n_per_class {
+        let t = PI * i as f64 / (n_per_class.max(2) - 1) as f64;
+        pts.push((
+            (t.cos() + noise * rng.normal()) as f32,
+            (t.sin() + noise * rng.normal()) as f32,
+            0,
+        ));
+        pts.push((
+            (1.0 - t.cos() + noise * rng.normal()) as f32,
+            (0.5 - t.sin() + noise * rng.normal()) as f32,
+            1,
+        ));
+    }
+    pts
+}
+
+/// Two-armed XOR checkerboard (binary), 2-D.
+pub fn xor(n_per_class: usize, seed: u64) -> Vec<(f32, f32, i32)> {
+    let mut rng = Rng::new(seed);
+    let mut pts = Vec::with_capacity(2 * n_per_class);
+    for _ in 0..n_per_class {
+        // class 0: quadrants (+,+) and (−,−); class 1: the others
+        let (sx, sy) = if rng.bool(0.5) { (1.0, 1.0) } else { (-1.0, -1.0) };
+        pts.push((
+            (sx * (0.3 + rng.f64())) as f32,
+            (sy * (0.3 + rng.f64())) as f32,
+            0,
+        ));
+        let (sx, sy) = if rng.bool(0.5) { (1.0, -1.0) } else { (-1.0, 1.0) };
+        pts.push((
+            (sx * (0.3 + rng.f64())) as f32,
+            (sy * (0.3 + rng.f64())) as f32,
+            1,
+        ));
+    }
+    pts
+}
+
+/// Two interleaved spirals (binary), 2-D.
+pub fn spiral(n_per_class: usize, noise: f64, seed: u64) -> Vec<(f32, f32, i32)> {
+    let mut rng = Rng::new(seed);
+    let mut pts = Vec::with_capacity(2 * n_per_class);
+    for i in 0..n_per_class {
+        let r = i as f64 / n_per_class as f64 * 3.0;
+        let t = 1.75 * r * 2.0 * PI / 3.0;
+        for (cls, phase) in [(0i32, 0.0f64), (1, PI)] {
+            pts.push((
+                (r * (t + phase).cos() + noise * rng.normal()) as f32,
+                (r * (t + phase).sin() + noise * rng.normal()) as f32,
+                cls,
+            ));
+        }
+    }
+    pts
+}
+
+/// Gaussian class clusters in `d` dimensions — the tabular/embedding twin
+/// generator (DESIGN.md §5). Each class gets `clusters_per_class` centers
+/// drawn on a sphere of radius `sep`; points are normal around a random
+/// center. `flip` fraction of labels is randomized to set the Bayes floor
+/// (real tabular sets are not separable; Click/CreditCard etc. have
+/// substantial class overlap).
+#[allow(clippy::too_many_arguments)]
+pub fn gaussian_classes(
+    n: usize,
+    d: usize,
+    classes: usize,
+    clusters_per_class: usize,
+    sep: f64,
+    noise: f64,
+    flip: f64,
+    class_weights: &[f64],
+    seed: u64,
+) -> (Vec<f32>, Vec<i32>) {
+    assert!(classes >= 2 && d >= 1 && clusters_per_class >= 1);
+    assert_eq!(class_weights.len(), classes);
+    let mut rng = Rng::new(seed);
+    // class centers
+    let mut centers = Vec::with_capacity(classes * clusters_per_class);
+    for _ in 0..classes * clusters_per_class {
+        let mut c: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let norm = c.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-9);
+        for v in &mut c {
+            *v *= sep / norm;
+        }
+        centers.push(c);
+    }
+    // cumulative weights for class sampling
+    let total: f64 = class_weights.iter().sum();
+    let mut cum = Vec::with_capacity(classes);
+    let mut acc = 0.0;
+    for w in class_weights {
+        acc += w / total;
+        cum.push(acc);
+    }
+    let mut xs = Vec::with_capacity(n * d);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let r = rng.f64();
+        let mut cls = cum.iter().position(|&c| r < c).unwrap_or(classes - 1);
+        let center = &centers[cls * clusters_per_class + rng.below(clusters_per_class)];
+        for v in center {
+            xs.push((v + noise * rng.normal()) as f32);
+        }
+        if flip > 0.0 && rng.bool(flip) {
+            cls = rng.below(classes);
+        }
+        ys.push(cls as i32);
+    }
+    (xs, ys)
+}
+
+/// Assemble a [`Dataset`] from 2-D labeled points with a deterministic
+/// shuffled train/test split.
+pub fn dataset_from_points(
+    name: &str,
+    pts: Vec<(f32, f32, i32)>,
+    n_test: usize,
+    classes: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xD15E_A5E5);
+    let mut idx: Vec<usize> = (0..pts.len()).collect();
+    rng.shuffle(&mut idx);
+    assert!(n_test < pts.len(), "test split larger than dataset");
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    let mut ds = Dataset {
+        name: name.to_string(),
+        d: 2,
+        classes,
+        train_x: Vec::with_capacity(train_idx.len() * 2),
+        train_y: Vec::with_capacity(train_idx.len()),
+        test_x: Vec::with_capacity(n_test * 2),
+        test_y: Vec::with_capacity(n_test),
+    };
+    for &i in train_idx {
+        ds.train_x.extend_from_slice(&[pts[i].0, pts[i].1]);
+        ds.train_y.push(pts[i].2);
+    }
+    for &i in test_idx {
+        ds.test_x.extend_from_slice(&[pts[i].0, pts[i].1]);
+        ds.test_y.push(pts[i].2);
+    }
+    ds.validate();
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::KnnClassifier;
+
+    #[test]
+    fn circle_radii_separate_classes() {
+        let pts = circle(100, 0.02, 0.5, 1);
+        for (x, y, c) in &pts {
+            let r = ((x * x + y * y) as f64).sqrt();
+            if *c == 0 {
+                assert!(r > 0.8, "outer point at r={r}");
+            } else {
+                assert!(r < 0.7, "inner point at r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn circle_is_deterministic_per_seed() {
+        assert_eq!(circle(10, 0.1, 0.5, 7), circle(10, 0.1, 0.5, 7));
+        assert_ne!(circle(10, 0.1, 0.5, 7), circle(10, 0.1, 0.5, 8));
+    }
+
+    #[test]
+    fn moon_classes_balanced() {
+        let pts = moon(50, 0.05, 3);
+        let c1 = pts.iter().filter(|p| p.2 == 1).count();
+        assert_eq!(c1, 50);
+        assert_eq!(pts.len(), 100);
+    }
+
+    #[test]
+    fn knn_separates_low_noise_circle() {
+        let ds = dataset_from_points("circle", circle(120, 0.05, 0.5, 5), 40, 2, 5);
+        let knn = KnnClassifier::new(&ds.train_x, &ds.train_y, 2, 5);
+        let acc = knn.accuracy(&ds.test_x, &ds.test_y);
+        assert!(acc > 0.95, "accuracy {acc}");
+    }
+
+    #[test]
+    fn knn_separates_moons_and_spiral() {
+        for (name, pts) in [
+            ("moon", moon(120, 0.05, 9)),
+            ("spiral", spiral(150, 0.02, 9)),
+        ] {
+            let ds = dataset_from_points(name, pts, 50, 2, 9);
+            let knn = KnnClassifier::new(&ds.train_x, &ds.train_y, 2, 5);
+            let acc = knn.accuracy(&ds.test_x, &ds.test_y);
+            assert!(acc > 0.9, "{name} accuracy {acc}");
+        }
+    }
+
+    #[test]
+    fn xor_requires_nonlinear_boundary_but_knn_handles_it() {
+        let ds = dataset_from_points("xor", xor(150, 11), 60, 2, 11);
+        let knn = KnnClassifier::new(&ds.train_x, &ds.train_y, 2, 5);
+        assert!(knn.accuracy(&ds.test_x, &ds.test_y) > 0.9);
+    }
+
+    #[test]
+    fn gaussian_classes_respect_weights_and_shapes() {
+        let (xs, ys) = gaussian_classes(1000, 8, 3, 2, 4.0, 1.0, 0.0, &[0.6, 0.3, 0.1], 13);
+        assert_eq!(xs.len(), 8000);
+        assert_eq!(ys.len(), 1000);
+        let c0 = ys.iter().filter(|&&y| y == 0).count();
+        let c2 = ys.iter().filter(|&&y| y == 2).count();
+        assert!(c0 > 500 && c0 < 700, "class 0 count {c0}");
+        assert!(c2 < 180, "class 2 count {c2}");
+    }
+
+    #[test]
+    fn label_flips_lower_separability() {
+        let mk = |flip: f64| {
+            let (xs, ys) = gaussian_classes(400, 4, 2, 1, 5.0, 1.0, flip, &[0.5, 0.5], 21);
+            let (tx, ty) = (xs[..600].to_vec(), ys[..150].to_vec());
+            let (sx, sy) = (xs[600..800].to_vec(), ys[150..200].to_vec());
+            KnnClassifier::new(&tx, &ty, 4, 5).accuracy(&sx, &sy)
+        };
+        assert!(mk(0.0) > mk(0.4) + 0.1, "flipping should cost accuracy");
+    }
+
+    #[test]
+    fn dataset_split_sizes() {
+        let ds = dataset_from_points("c", circle(50, 0.1, 0.5, 1), 30, 2, 1);
+        assert_eq!(ds.n_test(), 30);
+        assert_eq!(ds.n_train(), 70);
+    }
+}

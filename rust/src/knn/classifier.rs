@@ -1,0 +1,163 @@
+//! The KNN classifier itself: majority-vote prediction and test metrics.
+//!
+//! Used by (a) the efficiency-axiom checks (a_test in §3.2), (b) the data
+//! summarization example (accuracy after pruning), and (c) the mislabel
+//! experiments.
+
+use super::distance::{argsort_by_distance, distances, Metric};
+
+/// A K-nearest-neighbor classifier over borrowed training data.
+pub struct KnnClassifier<'a> {
+    train_x: &'a [f32],
+    train_y: &'a [i32],
+    d: usize,
+    k: usize,
+    metric: Metric,
+}
+
+impl<'a> KnnClassifier<'a> {
+    pub fn new(train_x: &'a [f32], train_y: &'a [i32], d: usize, k: usize) -> Self {
+        assert_eq!(train_x.len(), train_y.len() * d, "train shape mismatch");
+        assert!(k >= 1, "k must be >= 1");
+        KnnClassifier {
+            train_x,
+            train_y,
+            d,
+            k,
+            metric: Metric::SqEuclidean,
+        }
+    }
+
+    pub fn with_metric(mut self, metric: Metric) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    /// Majority vote among the k nearest; ties break toward the smaller
+    /// class id (deterministic).
+    pub fn predict(&self, query: &[f32]) -> i32 {
+        let dists = distances(query, self.train_x, self.d, self.metric);
+        let order = argsort_by_distance(&dists);
+        let take = order.len().min(self.k);
+        let mut counts: std::collections::BTreeMap<i32, usize> = Default::default();
+        for &idx in &order[..take] {
+            *counts.entry(self.train_y[idx]).or_insert(0) += 1;
+        }
+        counts
+            .into_iter()
+            .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+            .map(|(label, _)| label)
+            .expect("empty training set")
+    }
+
+    /// Classification accuracy over a test set (t×d row-major).
+    pub fn accuracy(&self, test_x: &[f32], test_y: &[i32]) -> f64 {
+        assert_eq!(test_x.len(), test_y.len() * self.d);
+        if test_y.is_empty() {
+            return f64::NAN;
+        }
+        let hits = test_x
+            .chunks_exact(self.d)
+            .zip(test_y)
+            .filter(|(q, &y)| self.predict(q) == y)
+            .count();
+        hits as f64 / test_y.len() as f64
+    }
+
+    /// The paper's likelihood test score (Eqs. 1–2): mean over test points
+    /// of (#label-matching neighbors among the k nearest)/k. This is the
+    /// a_test that the STI efficiency axiom constrains.
+    pub fn likelihood(&self, test_x: &[f32], test_y: &[i32]) -> f64 {
+        assert_eq!(test_x.len(), test_y.len() * self.d);
+        if test_y.is_empty() {
+            return f64::NAN;
+        }
+        let mut acc = 0.0;
+        for (q, &y) in test_x.chunks_exact(self.d).zip(test_y) {
+            let dists = distances(q, self.train_x, self.d, self.metric);
+            let order = argsort_by_distance(&dists);
+            let take = order.len().min(self.k);
+            let hits = order[..take]
+                .iter()
+                .filter(|&&i| self.train_y[i] == y)
+                .count();
+            acc += hits as f64 / self.k as f64;
+        }
+        acc / test_y.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (Vec<f32>, Vec<i32>) {
+        // two tight clusters: class 0 near origin, class 1 near (10, 10)
+        let x = vec![
+            0.0, 0.0, 0.5, 0.0, 0.0, 0.5, // class 0
+            10.0, 10.0, 10.5, 10.0, 10.0, 10.5, // class 1
+        ];
+        let y = vec![0, 0, 0, 1, 1, 1];
+        (x, y)
+    }
+
+    #[test]
+    fn predicts_nearest_cluster() {
+        let (x, y) = toy();
+        let knn = KnnClassifier::new(&x, &y, 2, 3);
+        assert_eq!(knn.predict(&[0.1, 0.1]), 0);
+        assert_eq!(knn.predict(&[9.9, 10.1]), 1);
+    }
+
+    #[test]
+    fn perfect_accuracy_on_separated_clusters() {
+        let (x, y) = toy();
+        let knn = KnnClassifier::new(&x, &y, 2, 3);
+        let test_x = vec![0.2, 0.2, 10.2, 10.2];
+        let test_y = vec![0, 1];
+        assert_eq!(knn.accuracy(&test_x, &test_y), 1.0);
+        assert_eq!(knn.likelihood(&test_x, &test_y), 1.0);
+    }
+
+    #[test]
+    fn likelihood_counts_fractional_votes() {
+        // train: 2 points of class 0, 1 of class 1, all equidistant-ish
+        let x = vec![1.0, 0.0, -1.0, 0.0, 0.0, 1.0];
+        let y = vec![0, 0, 1];
+        let knn = KnnClassifier::new(&x, &y, 2, 3);
+        // test at origin with label 0: 2 of 3 neighbors match -> 2/3
+        assert!((knn.likelihood(&[0.0, 0.0], &[0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_larger_than_train_set_is_clamped_in_voting() {
+        let x = vec![0.0, 0.0, 1.0, 1.0];
+        let y = vec![0, 1];
+        let knn = KnnClassifier::new(&x, &y, 2, 5);
+        // votes: one 0, one 1 -> tie breaks to smaller class id
+        assert_eq!(knn.predict(&[0.4, 0.4]), 0);
+        // likelihood: 1 matching of k=5 -> 1/5
+        assert!((knn.likelihood(&[0.0, 0.0], &[0]) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tie_break_is_deterministic() {
+        let x = vec![0.0, 0.0, 2.0, 0.0];
+        let y = vec![1, 0];
+        let knn = KnnClassifier::new(&x, &y, 2, 2);
+        // equidistant from (1, 0): counts equal; smaller class id wins
+        assert_eq!(knn.predict(&[1.0, 0.0]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "train shape mismatch")]
+    fn shape_validation() {
+        let x = vec![0.0f32; 5];
+        let y = vec![0, 1];
+        KnnClassifier::new(&x, &y, 2, 1);
+    }
+}

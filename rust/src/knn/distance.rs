@@ -1,0 +1,174 @@
+//! Distance metrics and neighbor ordering.
+//!
+//! The paper's pipeline only ever consumes the *ranking* of train points
+//! by distance to a test point (KNN is rank-based), so everything
+//! downstream is metric-agnostic; squared euclidean is the default and
+//! matches the L1 Pallas kernel.
+
+/// Supported distance metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Squared euclidean (monotone in euclidean — identical ranking).
+    SqEuclidean,
+    /// L1 / cityblock.
+    Manhattan,
+    /// 1 − cosine similarity (undefined for zero vectors; returns 1).
+    Cosine,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "euclidean" | "sqeuclidean" | "l2" => Some(Metric::SqEuclidean),
+            "manhattan" | "l1" => Some(Metric::Manhattan),
+            "cosine" => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+
+    /// Distance between two feature slices of equal length.
+    #[inline]
+    pub fn dist(&self, a: &[f32], b: &[f32]) -> f64 {
+        match self {
+            Metric::SqEuclidean => {
+                let mut acc = 0.0f64;
+                for (x, y) in a.iter().zip(b) {
+                    let d = (*x - *y) as f64;
+                    acc += d * d;
+                }
+                acc
+            }
+            Metric::Manhattan => {
+                let mut acc = 0.0f64;
+                for (x, y) in a.iter().zip(b) {
+                    acc += ((*x - *y) as f64).abs();
+                }
+                acc
+            }
+            Metric::Cosine => {
+                let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+                for (x, y) in a.iter().zip(b) {
+                    dot += (*x as f64) * (*y as f64);
+                    na += (*x as f64) * (*x as f64);
+                    nb += (*y as f64) * (*y as f64);
+                }
+                if na == 0.0 || nb == 0.0 {
+                    1.0
+                } else {
+                    1.0 - dot / (na.sqrt() * nb.sqrt())
+                }
+            }
+        }
+    }
+}
+
+/// Distances from `query` (length d) to all rows of `points` (n×d,
+/// row-major). Output length n.
+pub fn distances(query: &[f32], points: &[f32], d: usize, metric: Metric) -> Vec<f64> {
+    assert_eq!(query.len(), d);
+    assert_eq!(points.len() % d, 0, "points not a multiple of d");
+    points
+        .chunks_exact(d)
+        .map(|row| metric.dist(query, row))
+        .collect()
+}
+
+/// Distances from `query` into a caller-provided buffer (hot-path variant
+/// that avoids per-test allocation).
+pub fn distances_into(
+    query: &[f32],
+    points: &[f32],
+    d: usize,
+    metric: Metric,
+    out: &mut [f64],
+) {
+    assert_eq!(query.len(), d);
+    assert_eq!(out.len() * d, points.len());
+    for (o, row) in out.iter_mut().zip(points.chunks_exact(d)) {
+        *o = metric.dist(query, row);
+    }
+}
+
+/// Stable argsort of train points by ascending distance: `order[a]` is the
+/// original index of the a-th nearest point. Ties break by original index
+/// (stability), matching `np.argsort(kind="stable")` on the python side —
+/// required for bit-identical cross-engine results.
+pub fn argsort_by_distance(dists: &[f64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..dists.len()).collect();
+    order.sort_by(|&a, &b| {
+        dists[a]
+            .partial_cmp(&dists[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+/// Inverse permutation: `ranks[original] = sorted position`.
+pub fn invert_permutation(order: &[usize]) -> Vec<usize> {
+    let mut ranks = vec![0usize; order.len()];
+    for (pos, &orig) in order.iter().enumerate() {
+        ranks[orig] = pos;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqeuclidean_known() {
+        assert_eq!(Metric::SqEuclidean.dist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn manhattan_known() {
+        assert_eq!(Metric::Manhattan.dist(&[1.0, -1.0], &[-2.0, 3.0]), 7.0);
+    }
+
+    #[test]
+    fn cosine_orthogonal_and_parallel() {
+        assert!((Metric::Cosine.dist(&[1.0, 0.0], &[0.0, 2.0]) - 1.0).abs() < 1e-12);
+        assert!(Metric::Cosine.dist(&[1.0, 1.0], &[2.0, 2.0]).abs() < 1e-12);
+        assert_eq!(Metric::Cosine.dist(&[0.0, 0.0], &[1.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn distances_rowwise() {
+        let pts = [0.0f32, 0.0, 1.0, 0.0, 0.0, 2.0];
+        let d = distances(&[0.0, 0.0], &pts, 2, Metric::SqEuclidean);
+        assert_eq!(d, vec![0.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn distances_into_matches() {
+        let pts = [0.0f32, 0.0, 1.0, 0.0, 0.0, 2.0];
+        let mut buf = vec![0.0; 3];
+        distances_into(&[0.0, 0.0], &pts, 2, Metric::SqEuclidean, &mut buf);
+        assert_eq!(buf, distances(&[0.0, 0.0], &pts, 2, Metric::SqEuclidean));
+    }
+
+    #[test]
+    fn argsort_stable_on_ties() {
+        let order = argsort_by_distance(&[2.0, 1.0, 1.0, 0.5]);
+        assert_eq!(order, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn invert_permutation_roundtrip() {
+        let order = vec![2, 0, 3, 1];
+        let ranks = invert_permutation(&order);
+        assert_eq!(ranks, vec![1, 3, 0, 2]);
+        for (pos, &orig) in order.iter().enumerate() {
+            assert_eq!(ranks[orig], pos);
+        }
+    }
+
+    #[test]
+    fn metric_parse() {
+        assert_eq!(Metric::parse("l2"), Some(Metric::SqEuclidean));
+        assert_eq!(Metric::parse("cosine"), Some(Metric::Cosine));
+        assert_eq!(Metric::parse("nope"), None);
+    }
+}

@@ -1,0 +1,10 @@
+//! KNN model substrate: distance metrics, neighbor ordering, the
+//! classifier, and the paper's valuation function (Eqs. 1–2).
+
+pub mod classifier;
+pub mod distance;
+pub mod valuation;
+
+pub use classifier::KnnClassifier;
+pub use distance::{argsort_by_distance, distances, Metric};
+pub use valuation::{likelihood_score, u_single, u_subset};

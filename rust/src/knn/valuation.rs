@@ -1,0 +1,145 @@
+//! The paper's valuation function (Eqs. 1–2): the test score of a KNN
+//! model trained on a subset S is the likelihood of the right label,
+//!
+//!   v(S)          = (1/t) Σ_{y_test}  u_{y_test}(S)                (Eq. 1)
+//!   u_{y_test}(S) = (1/k) Σ_{i=1..min(k,|S|)} 1[y_i = y_test]      (Eq. 2)
+//!
+//! where members of S vote in order of distance to the test point.
+//! These are the primitives the brute-force Eq. (3) oracle and the
+//! Monte-Carlo estimator train/test "the model" with — for KNN, training
+//! is free and scoring is rank counting, which is what makes exhaustive
+//! subset enumeration feasible at small n.
+
+/// u_{y_test}(S) for S given as sorted-order member ranks (ascending).
+///
+/// `match_sorted[r]` = 1 iff the train point at rank r has the test label.
+/// `members` must be sorted ascending (nearest member first).
+pub fn u_subset(match_sorted: &[bool], members: &[usize], k: usize) -> f64 {
+    debug_assert!(members.windows(2).all(|w| w[0] < w[1]), "members not sorted");
+    let take = members.len().min(k);
+    let hits = members[..take]
+        .iter()
+        .filter(|&&r| match_sorted[r])
+        .count();
+    hits as f64 / k as f64
+}
+
+/// u_{y_test}(S) for S given as a bitmask over ranks (bit r = rank r
+/// present). Fast path for the exhaustive Eq. (3) enumeration, n ≤ 64.
+pub fn u_subset_mask(match_bits: u64, subset: u64, k: usize) -> f64 {
+    let mut remaining = subset;
+    let mut hits = 0usize;
+    let mut taken = 0usize;
+    while remaining != 0 && taken < k {
+        let r = remaining.trailing_zeros() as u64;
+        if (match_bits >> r) & 1 == 1 {
+            hits += 1;
+        }
+        remaining &= remaining - 1;
+        taken += 1;
+    }
+    hits as f64 / k as f64
+}
+
+/// u_{y_test}({i}) for a singleton (Eq. 5): 1[y_i = y_test]/k.
+#[inline]
+pub fn u_single(label_matches: bool, k: usize) -> f64 {
+    if label_matches {
+        1.0 / k as f64
+    } else {
+        0.0
+    }
+}
+
+/// v(N) over a full train set for one test point: fraction of the k
+/// nearest whose label matches, divided by k (Eq. 2 with S = N).
+pub fn u_full(match_sorted: &[bool], k: usize) -> f64 {
+    let take = match_sorted.len().min(k);
+    match_sorted[..take].iter().filter(|&&m| m).count() as f64 / k as f64
+}
+
+/// Eq. (1): the likelihood test score of the full train set, averaged over
+/// test points. `match_sorted_per_test[p]` is the match vector for test
+/// point p in ITS distance order.
+pub fn likelihood_score(match_sorted_per_test: &[Vec<bool>], k: usize) -> f64 {
+    if match_sorted_per_test.is_empty() {
+        return f64::NAN;
+    }
+    match_sorted_per_test
+        .iter()
+        .map(|m| u_full(m, k))
+        .sum::<f64>()
+        / match_sorted_per_test.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §2.1 worked example: k=3, labels (by distance) match/­miss/match/match.
+    /// (u({1,3,4}) = 3/3 in the paper forces points 1, 3, 4 to match.)
+    const FIG1: [bool; 4] = [true, false, true, true];
+
+    #[test]
+    fn fig1_full_train_set() {
+        assert!((u_full(&FIG1, 3) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig1_singletons() {
+        assert!((u_subset(&FIG1, &[0], 3) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(u_subset(&FIG1, &[1], 3), 0.0);
+    }
+
+    #[test]
+    fn fig1_triple() {
+        // {1,3,4} 1-based = ranks {0,2,3}
+        assert!((u_subset(&FIG1, &[0, 2, 3], 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn only_k_nearest_members_vote() {
+        let m = [true, true, true, true];
+        assert!((u_subset(&m, &[0, 1, 2, 3], 2) - 1.0).abs() < 1e-12);
+        // farther members are ignored once k are taken
+        let m2 = [false, false, true, true];
+        assert_eq!(u_subset(&m2, &[0, 1, 2, 3], 2), 0.0);
+    }
+
+    #[test]
+    fn mask_and_list_agree() {
+        let match_sorted = [true, false, true, true, false, true];
+        let match_bits = match_sorted
+            .iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &m)| acc | ((m as u64) << i));
+        for subset in 0u64..(1 << 6) {
+            let members: Vec<usize> = (0..6).filter(|&r| (subset >> r) & 1 == 1).collect();
+            for k in 1..=6 {
+                assert_eq!(
+                    u_subset(&match_sorted, &members, k),
+                    u_subset_mask(match_bits, subset, k),
+                    "subset={subset:b} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn u_single_matches_eq5() {
+        assert_eq!(u_single(true, 4), 0.25);
+        assert_eq!(u_single(false, 4), 0.0);
+    }
+
+    #[test]
+    fn likelihood_score_averages() {
+        let per_test = vec![vec![true, true], vec![false, false]];
+        assert!((likelihood_score(&per_test, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_subset_scores_zero() {
+        assert_eq!(u_subset(&FIG1, &[], 3), 0.0);
+        assert_eq!(u_subset_mask(0b1011, 0, 3), 0.0);
+    }
+}

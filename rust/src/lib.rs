@@ -1,0 +1,33 @@
+//! # stiknn — exact pair-interaction Data Shapley for KNN in O(t·n²)
+//!
+//! Production-grade reproduction of Belaid, ElMekki, Rabus & Hüllermeier
+//! (2023), *"Optimizing Data Shapley Interaction Calculation from O(2ⁿ)
+//! to O(tn²) for KNN models"* (STI-KNN), as a three-layer Rust + JAX +
+//! Pallas system: Pallas kernels (L1) and the JAX pipeline (L2) are AOT
+//! compiled to HLO artifacts at build time; this crate (L3) loads them via
+//! PJRT and coordinates sharded valuation jobs — Python never runs on the
+//! request path.
+//!
+//! Quick start:
+//! ```no_run
+//! use stiknn::data::load_dataset;
+//! use stiknn::shapley::{sti_knn, StiParams};
+//!
+//! let ds = load_dataset("circle", 120, 30, 42).unwrap();
+//! let phi = sti_knn(&ds.train_x, &ds.train_y, ds.d,
+//!                   &ds.test_x, &ds.test_y, &StiParams::new(5));
+//! println!("interaction of points 0,1: {}", phi.get(0, 1));
+//! ```
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for reproduction results.
+
+pub mod analysis;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod knn;
+pub mod report;
+pub mod runtime;
+pub mod shapley;
+pub mod util;

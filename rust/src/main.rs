@@ -1,0 +1,287 @@
+//! `stiknn` CLI — the L3 entry point.
+//!
+//! Subcommands:
+//!   value     compute the STI-KNN interaction matrix for a dataset
+//!   analyze   interaction heatmap + axiom checks + block structure (§4)
+//!   ksens     k-sensitivity sweep (§3.2, Figs. 7–10)
+//!   mislabel  flip labels and detect them from interaction patterns (Fig. 5)
+//!   datasets  list the Table-1 dataset registry
+//!   artifacts list the AOT artifact manifest
+//!
+//! Every command accepts `--engine rust|xla` where applicable; XLA uses
+//! the AOT artifacts under --artifacts (default: artifacts/).
+
+use std::path::{Path, PathBuf};
+
+use stiknn::analysis::ksens::k_sensitivity;
+use stiknn::analysis::mislabel::{auc, mislabel_scores, precision_recall, top_prevalence_recall};
+use stiknn::analysis::structure::block_structure;
+use stiknn::coordinator::{run_job_with_engine, ValuationJob};
+use stiknn::data::{corrupt, csv, load_dataset, registry_names};
+use stiknn::report::heatmap::render_heatmap;
+use stiknn::report::table::Table;
+use stiknn::runtime::{Engine, Manifest};
+use stiknn::shapley::axioms;
+use stiknn::util::cli::{Args, Command};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("value") => cmd_value(&argv[1..]),
+        Some("analyze") => cmd_analyze(&argv[1..]),
+        Some("ksens") => cmd_ksens(&argv[1..]),
+        Some("mislabel") => cmd_mislabel(&argv[1..]),
+        Some("datasets") => cmd_datasets(),
+        Some("artifacts") => cmd_artifacts(&argv[1..]),
+        Some("--help") | Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "stiknn — exact pair-interaction Data Shapley for KNN in O(t·n²)\n\n\
+         subcommands:\n\
+           value      compute the interaction matrix (CSV out)\n\
+           analyze    heatmap + axioms + class-block structure\n\
+           ksens      k-sensitivity sweep (paper §3.2)\n\
+           mislabel   mislabel-detection experiment (paper Fig. 5)\n\
+           datasets   list the dataset registry (paper Table 1)\n\
+           artifacts  list the AOT artifact manifest\n\n\
+         run `stiknn <subcommand> --help` for options"
+    );
+}
+
+fn common_opts(cmd: Command) -> Command {
+    cmd.opt("dataset", "dataset name (see `stiknn datasets`)", "circle")
+        .opt("n-train", "training points (0 = registry default)", "0")
+        .opt("n-test", "test points (0 = registry default)", "0")
+        .opt("k", "KNN parameter", "5")
+        .opt("seed", "dataset seed", "42")
+        .opt("engine", "rust | xla", "rust")
+        .opt("workers", "worker threads (0 = all cores)", "0")
+        .opt("block", "test points per shard", "32")
+        .opt("artifacts", "artifacts directory", "artifacts")
+}
+
+fn parse_common(args: &Args) -> anyhow::Result<(stiknn::data::Dataset, ValuationJob, PathBuf)> {
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let k: usize = args.require("k")?;
+    let engine = Engine::parse(&args.get_or("engine", "rust"))
+        .ok_or_else(|| anyhow::anyhow!("--engine must be rust or xla"))?;
+    let workers: usize = args.require("workers")?;
+    let block: usize = args.require("block")?;
+    let ds = load_dataset(&name, n_train, n_test, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
+    let mut job = ValuationJob::new(k).with_engine(engine).with_block_size(block);
+    if workers > 0 {
+        job = job.with_workers(workers);
+    }
+    Ok((ds, job, PathBuf::from(args.get_or("artifacts", "artifacts"))))
+}
+
+fn cmd_value(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new("value", "compute the STI-KNN interaction matrix"))
+        .opt("out", "output CSV path ('-' to skip)", "phi.csv");
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let (ds, job, artifacts) = parse_common(&args)?;
+    let res = run_job_with_engine(&ds, &job, &artifacts)?;
+    println!(
+        "dataset={} n={} t={} k={} engine={:?} workers={}",
+        ds.name,
+        ds.n_train(),
+        ds.n_test(),
+        job.k,
+        job.engine,
+        job.workers
+    );
+    println!(
+        "blocks={} elapsed={:?} throughput={:.1} test-points/s",
+        res.blocks, res.elapsed, res.throughput
+    );
+    println!(
+        "phi: mean offdiag={:+.4e} trace={:+.4e} upper-sum={:+.4e}",
+        res.mean_offdiag(),
+        res.phi.diagonal().iter().sum::<f64>(),
+        res.phi.upper_triangle_sum()
+    );
+    let out = args.get_or("out", "phi.csv");
+    if out != "-" {
+        csv::write_matrix(Path::new(&out), &res.phi)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new(
+        "analyze",
+        "heatmap + axiom checks + block structure (paper §4)",
+    ))
+    .opt("cells", "heatmap size in characters", "48");
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let (ds, job, artifacts) = parse_common(&args)?;
+    let res = run_job_with_engine(&ds, &job, &artifacts)?;
+    let order = ds.paper_display_order();
+    let cells: usize = args.require("cells")?;
+    // display the off-diagonal structure (the paper's figures): the main
+    // terms are orders of magnitude larger and would wash out the blocks
+    let mut display = res.phi.clone();
+    for i in 0..display.rows() {
+        display.set(i, i, 0.0);
+    }
+    println!("{}", render_heatmap(&display, Some(&order), cells));
+    let reports = axioms::check_all(
+        &res.phi,
+        &ds.train_x,
+        &ds.train_y,
+        ds.d,
+        &ds.test_x,
+        &ds.test_y,
+        job.k,
+        if job.engine == Engine::Xla { 1e-3 } else { 1e-9 },
+    );
+    println!("axioms (§3.2):\n{}", axioms::format_reports(&reports));
+    let blocks = block_structure(&res.phi, &ds.train_y, ds.classes);
+    let mut t = Table::new(&["class pair", "mean interaction"]);
+    for a in 0..ds.classes {
+        for b in a..ds.classes {
+            t.row(&[format!("({a},{b})"), format!("{:+.4e}", blocks.get(a, b))]);
+        }
+    }
+    println!("class-block structure (Fig. 3):\n{}", t.render());
+    Ok(())
+}
+
+fn cmd_ksens(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new(
+        "ksens",
+        "Pearson correlation of STI matrices across k (paper §3.2)",
+    ))
+    .opt("ks", "comma-separated k values", "3,5,9,15,20");
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let (ds, _job, _) = parse_common(&args)?;
+    let ks: Vec<usize> = args
+        .get_or("ks", "3,5,9,15,20")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let rep = k_sensitivity(&ds, &ks);
+    let mut t = Table::new(&["k", "std(phi offdiag)"]);
+    for (i, &k) in ks.iter().enumerate() {
+        t.row(&[k.to_string(), format!("{:.4e}", rep.stds[i])]);
+    }
+    println!("{}", t.render());
+    println!(
+        "min pairwise Pearson r: full-matrix {:.5} (paper methodology), offdiag {:.5}",
+        rep.min_correlation, rep.min_correlation_offdiag
+    );
+    println!(
+        "paper threshold (> 0.99): {}",
+        if rep.passes_paper_threshold() { "PASS" } else { "FAIL" }
+    );
+    Ok(())
+}
+
+fn cmd_mislabel(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = common_opts(Command::new(
+        "mislabel",
+        "flip labels, recompute STI, detect flips from patterns (Fig. 5)",
+    ))
+    .opt("flip", "fraction of train labels to flip", "0.05");
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let (mut ds, job, artifacts) = parse_common(&args)?;
+    let flip: f64 = args.require("flip")?;
+    let seed: u64 = args.require("seed")?;
+    let truth = corrupt::flip_labels(&mut ds, flip, seed ^ 0xF11F);
+    let res = run_job_with_engine(&ds, &job, &artifacts)?;
+    let rep = mislabel_scores(&res.phi, &ds.train_y, ds.classes);
+    let (prec, rec) = precision_recall(&rep.flagged, &truth);
+    println!(
+        "flipped {} of {} train points; flagged {}",
+        truth.len(),
+        ds.n_train(),
+        rep.flagged.len()
+    );
+    println!(
+        "precision={prec:.3} recall={rec:.3} AUC={:.3} top-prevalence recall={:.3}",
+        auc(&rep.margins, &truth),
+        top_prevalence_recall(&rep.margins, &truth)
+    );
+    Ok(())
+}
+
+fn cmd_datasets() -> anyhow::Result<()> {
+    let mut t = Table::new(&["name", "d", "classes", "n_train", "n_test", "source (paper Table 1)"]);
+    for name in registry_names() {
+        let s = stiknn::data::registry::spec(name).unwrap();
+        t.row(&[
+            s.name.to_string(),
+            s.d.to_string(),
+            s.classes.to_string(),
+            s.n_train.to_string(),
+            s.n_test.to_string(),
+            s.source.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
+    let dir = argv
+        .iter()
+        .position(|a| a == "--artifacts")
+        .and_then(|i| argv.get(i + 1))
+        .map(|s| s.as_str())
+        .unwrap_or("artifacts");
+    let manifest = Manifest::load(Path::new(dir))?;
+    let mut t = Table::new(&["name", "program", "n", "d", "b", "k", "file"]);
+    for a in &manifest.artifacts {
+        t.row(&[
+            a.name.clone(),
+            a.program.clone(),
+            a.n.to_string(),
+            a.d.to_string(),
+            a.b.to_string(),
+            a.k.to_string(),
+            a.file.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn wants_help(argv: &[String]) -> bool {
+    argv.iter().any(|a| a == "--help" || a == "-h")
+}

@@ -1,0 +1,126 @@
+//! ASCII heatmap renderer for interaction matrices — the terminal
+//! equivalent of the paper's Figs. 3–5 and 7–10. Downsamples the matrix
+//! to a character grid and maps values through a symmetric diverging
+//! ramp (negative → '#', zero → ' ', positive → '+' side), with the scale
+//! printed so figures are comparable across k (Corollary 1's effect is
+//! visible as a scale change, not a pattern change).
+
+use crate::util::matrix::Matrix;
+
+const NEG_RAMP: [char; 5] = ['·', '-', '=', '%', '#'];
+const POS_RAMP: [char; 5] = ['·', ':', '*', 'o', '@'];
+
+/// Render `m` as an ASCII heatmap of at most `max_cells` columns/rows.
+/// `perm` optionally reorders rows/cols first (the paper's class-then-
+/// feature display order).
+pub fn render_heatmap(m: &Matrix, perm: Option<&[usize]>, max_cells: usize) -> String {
+    assert!(m.rows() == m.cols() && m.rows() > 0);
+    let view = match perm {
+        Some(p) => m.permuted(p),
+        None => m.clone(),
+    };
+    let n = view.rows();
+    let cells = n.min(max_cells.max(4));
+    // bucket means
+    let mut grid = vec![vec![0.0f64; cells]; cells];
+    for (gi, row) in grid.iter_mut().enumerate() {
+        let ilo = gi * n / cells;
+        let ihi = ((gi + 1) * n / cells).max(ilo + 1);
+        for (gj, cell) in row.iter_mut().enumerate() {
+            let jlo = gj * n / cells;
+            let jhi = ((gj + 1) * n / cells).max(jlo + 1);
+            let mut acc = 0.0;
+            let mut cnt = 0usize;
+            for i in ilo..ihi {
+                for j in jlo..jhi {
+                    acc += view.get(i, j);
+                    cnt += 1;
+                }
+            }
+            *cell = acc / cnt as f64;
+        }
+    }
+    let scale = grid
+        .iter()
+        .flatten()
+        .map(|v| v.abs())
+        .fold(0.0f64, f64::max);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "interaction heatmap {n}×{n} (cells {cells}×{cells}, |max| = {scale:.3e})\n"
+    ));
+    out.push_str(&format!("  neg: {} … pos: {}\n", NEG_RAMP[4], POS_RAMP[4]));
+    for row in &grid {
+        out.push(' ');
+        for &v in row {
+            out.push(bucket_char(v, scale));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn bucket_char(v: f64, scale: f64) -> char {
+    if scale == 0.0 {
+        return ' ';
+    }
+    let t = (v / scale).clamp(-1.0, 1.0);
+    let mag = (t.abs() * 4.999) as usize;
+    if t.abs() < 0.04 {
+        ' '
+    } else if t < 0.0 {
+        NEG_RAMP[mag]
+    } else {
+        POS_RAMP[mag]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_expected_dimensions() {
+        let mut m = Matrix::zeros(10, 10);
+        m.set(0, 0, -1.0);
+        m.set(9, 9, 1.0);
+        let s = render_heatmap(&m, None, 10);
+        let grid_lines: Vec<&str> = s.lines().skip(2).collect();
+        assert_eq!(grid_lines.len(), 10);
+        assert!(grid_lines.iter().all(|l| l.len() == 11));
+    }
+
+    #[test]
+    fn negative_and_positive_use_different_ramps() {
+        let mut m = Matrix::zeros(4, 4);
+        m.set(0, 0, -5.0);
+        m.set(3, 3, 5.0);
+        let s = render_heatmap(&m, None, 4);
+        assert!(s.contains('#'));
+        assert!(s.contains('@'));
+    }
+
+    #[test]
+    fn downsamples_large_matrices() {
+        let m = Matrix::zeros(500, 500);
+        let s = render_heatmap(&m, None, 40);
+        assert!(s.lines().count() <= 43);
+    }
+
+    #[test]
+    fn permutation_reorders_display() {
+        let mut m = Matrix::zeros(2, 2);
+        m.set(0, 0, -1.0);
+        let straight = render_heatmap(&m, None, 2);
+        let flipped = render_heatmap(&m, Some(&[1, 0]), 2);
+        assert_ne!(straight, flipped);
+    }
+
+    #[test]
+    fn zero_matrix_is_blank() {
+        let m = Matrix::zeros(6, 6);
+        let s = render_heatmap(&m, None, 6);
+        let body: String = s.lines().skip(2).collect();
+        assert!(body.trim().is_empty());
+    }
+}

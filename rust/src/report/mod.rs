@@ -1,0 +1,8 @@
+//! Reporting: ASCII heatmaps (the terminal stand-in for the paper's
+//! matplotlib figures), aligned tables, and experiment-record helpers.
+
+pub mod heatmap;
+pub mod table;
+
+pub use heatmap::render_heatmap;
+pub use table::Table;

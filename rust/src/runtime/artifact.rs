@@ -1,0 +1,171 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The manifest enumerates each AOT-lowered program with its
+//! baked shapes; the runtime picks an artifact by (program, n, d, k) and
+//! pads the test block up to the artifact's block size `b` using the mask
+//! input. Train size n must match exactly — Algorithm 1's coefficients
+//! depend on n, so train padding would change the answer (DESIGN.md §2).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled program instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub program: String,
+    pub n: usize,
+    pub d: usize,
+    pub b: usize,
+    pub k: usize,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        if root.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("{path:?}: unsupported interchange format");
+        }
+        let mut artifacts = Vec::new();
+        for entry in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{path:?}: missing artifacts array"))?
+        {
+            let get_s = |k: &str| -> Result<String> {
+                Ok(entry
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{path:?}: artifact missing '{k}'"))?
+                    .to_string())
+            };
+            let get_n = |k: &str| -> Result<usize> {
+                entry
+                    .get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{path:?}: artifact missing '{k}'"))
+            };
+            let spec = ArtifactSpec {
+                name: get_s("name")?,
+                file: get_s("file")?,
+                program: get_s("program")?,
+                n: get_n("n")?,
+                d: get_n("d")?,
+                b: get_n("b")?,
+                k: get_n("k")?,
+            };
+            if !dir.join(&spec.file).exists() {
+                bail!("artifact file missing: {:?}", dir.join(&spec.file));
+            }
+            artifacts.push(spec);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Find an artifact matching (program, n, d, k) exactly. When several
+    /// block sizes exist, prefers the largest block ≤ a hint, else the
+    /// largest available.
+    pub fn find(&self, program: &str, n: usize, d: usize, k: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.program == program && a.n == n && a.d == d && a.k == k)
+            .max_by_key(|a| a.b)
+    }
+
+    /// All artifacts of a given program type.
+    pub fn of_program(&self, program: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.program == program)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("stiknn_manifest_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const GOOD: &str = r#"{
+      "version": 1, "interchange": "hlo-text",
+      "artifacts": [
+        {"name": "sti_n32_d2_b8_k3", "file": "a.hlo.txt", "program": "sti",
+         "n": 32, "d": 2, "b": 8, "k": 3},
+        {"name": "sti_n32_d2_b16_k3", "file": "b.hlo.txt", "program": "sti",
+         "n": 32, "d": 2, "b": 16, "k": 3}
+      ]
+    }"#;
+
+    #[test]
+    fn load_and_find() {
+        let dir = tmpdir("good");
+        write_manifest(&dir, GOOD);
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "HloModule y").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        // prefers the larger block
+        let found = m.find("sti", 32, 2, 3).unwrap();
+        assert_eq!(found.b, 16);
+        assert!(m.find("sti", 33, 2, 3).is_none());
+        assert!(m.find("knn_shapley", 32, 2, 3).is_none());
+        assert_eq!(m.of_program("sti").len(), 2);
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = tmpdir("missing");
+        write_manifest(&dir, GOOD);
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule x").unwrap();
+        // b.hlo.txt absent
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn bad_interchange_rejected() {
+        let dir = tmpdir("badfmt");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"interchange":"proto","artifacts":[]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn absent_manifest_mentions_make_artifacts() {
+        let dir = tmpdir("absent");
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

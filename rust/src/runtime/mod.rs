@@ -1,0 +1,20 @@
+//! XLA/PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them on the
+//! PJRT CPU client from the Rust hot path — Python never runs at request
+//! time.
+//!
+//! * [`artifact`] — the `artifacts/manifest.json` registry and shape
+//!   matching.
+//! * [`executor`] — compiled-executable cache plus the typed entry points
+//!   ([`executor::StiExecutor`]) that marshal datasets into XLA literals,
+//!   handle test-block padding via the mask input, and unmarshal the
+//!   partial-sum outputs.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use executor::{executor_for, Engine, StiExecutor};
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

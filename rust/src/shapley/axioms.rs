@@ -1,0 +1,178 @@
+//! Axiom checkers for computed interaction matrices — the §3.2 structural
+//! claims as executable checks, used by the test suite, the examples and
+//! the `axioms` bench:
+//!
+//! * efficiency: Σ_{i≤j} φ_ij = a_test (upper triangle INCLUDING the
+//!   diagonal — the precise form of the paper's claim, DESIGN.md §1)
+//! * symmetry: φ_ij = φ_ji
+//! * positivity of main terms: φ_ii ≥ 0 (likelihood valuation)
+//! * approximate centering: mean(φ) = a_test/n² ≈ 0
+
+use crate::knn::KnnClassifier;
+use crate::util::matrix::Matrix;
+
+/// Result of checking one axiom.
+#[derive(Clone, Debug)]
+pub struct AxiomReport {
+    pub name: &'static str,
+    pub holds: bool,
+    pub observed: f64,
+    pub expected: f64,
+    pub tolerance: f64,
+}
+
+impl AxiomReport {
+    fn new(name: &'static str, observed: f64, expected: f64, tol: f64) -> Self {
+        AxiomReport {
+            name,
+            holds: (observed - expected).abs() <= tol,
+            observed,
+            expected,
+            tolerance: tol,
+        }
+    }
+}
+
+/// Check all §3.2 axioms of an averaged STI matrix against its dataset.
+pub fn check_all(
+    phi: &Matrix,
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+    tol: f64,
+) -> Vec<AxiomReport> {
+    let n = train_y.len();
+    assert_eq!(phi.rows(), n);
+    let a_test = KnnClassifier::new(train_x, train_y, d, k).likelihood(test_x, test_y);
+
+    let mut out = Vec::new();
+
+    // Efficiency (upper triangle incl. diagonal sums to a_test).
+    out.push(AxiomReport::new(
+        "efficiency",
+        phi.upper_triangle_sum(),
+        a_test,
+        tol,
+    ));
+
+    // Symmetry (max asymmetry must be ~0).
+    let max_asym = (0..n)
+        .flat_map(|i| ((i + 1)..n).map(move |j| (i, j)))
+        .map(|(i, j)| (phi.get(i, j) - phi.get(j, i)).abs())
+        .fold(0.0, f64::max);
+    out.push(AxiomReport::new("symmetry", max_asym, 0.0, tol));
+
+    // Main-term positivity (min diagonal entry ≥ 0).
+    let min_diag = phi.diagonal().into_iter().fold(f64::INFINITY, f64::min);
+    out.push(AxiomReport {
+        name: "main_terms_nonnegative",
+        holds: min_diag >= -tol,
+        observed: min_diag,
+        expected: 0.0,
+        tolerance: tol,
+    });
+
+    // Centering: the paper states mean(φ) = a_test/n² ≈ 0; the exact
+    // identity (the paper's proof overlooks that the symmetric matrix
+    // double-counts off-diagonal pairs) is
+    //   Σ_all φ = 2·Σ_{i≤j} φ − Σ_i φ_ii = 2·a_test − trace,
+    // so mean(φ) = (2·a_test − trace)/n² — still O(1/n²)-small, which is
+    // the substantive claim. We check the exact identity.
+    let trace: f64 = phi.diagonal().iter().sum();
+    out.push(AxiomReport::new(
+        "centering",
+        phi.mean(),
+        (2.0 * a_test - trace) / (n * n) as f64,
+        tol,
+    ));
+
+    out
+}
+
+/// True iff every axiom holds.
+pub fn all_hold(reports: &[AxiomReport]) -> bool {
+    reports.iter().all(|r| r.holds)
+}
+
+/// Render the reports as aligned text rows (for examples / CLI output).
+pub fn format_reports(reports: &[AxiomReport]) -> String {
+    let mut s = String::new();
+    for r in reports {
+        s.push_str(&format!(
+            "  {:<24} {}  observed={:+.6e} expected={:+.6e} (tol {:.1e})\n",
+            r.name,
+            if r.holds { "OK  " } else { "FAIL" },
+            r.observed,
+            r.expected,
+            r.tolerance
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::sti_knn::{sti_knn, StiParams};
+    use crate::util::rng::Rng;
+
+    fn random_problem(seed: u64, n: usize, t: usize, d: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+            (0..n).map(|_| rng.below(2) as i32).collect(),
+            (0..t * d).map(|_| rng.normal() as f32).collect(),
+            (0..t).map(|_| rng.below(2) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn all_axioms_hold_for_sti_knn() {
+        for seed in 0..5u64 {
+            let (tx, ty, sx, sy) = random_problem(seed, 25, 9, 2);
+            let phi = sti_knn(&tx, &ty, 2, &sx, &sy, &StiParams::new(5));
+            let reports = check_all(&phi, &tx, &ty, 2, &sx, &sy, 5, 1e-9);
+            assert!(
+                all_hold(&reports),
+                "seed {seed}:\n{}",
+                format_reports(&reports)
+            );
+        }
+    }
+
+    #[test]
+    fn efficiency_detects_corruption() {
+        let (tx, ty, sx, sy) = random_problem(9, 12, 4, 2);
+        let mut phi = sti_knn(&tx, &ty, 2, &sx, &sy, &StiParams::new(3));
+        phi.add_at(0, 5, 0.25); // corrupt one upper-triangle entry
+        let reports = check_all(&phi, &tx, &ty, 2, &sx, &sy, 3, 1e-9);
+        let eff = reports.iter().find(|r| r.name == "efficiency").unwrap();
+        assert!(!eff.holds);
+        let sym = reports.iter().find(|r| r.name == "symmetry").unwrap();
+        assert!(!sym.holds);
+    }
+
+    #[test]
+    fn centering_shrinks_with_n() {
+        // mean(φ) = (2·a_test − trace)/n² — quadratically small in n
+        let (tx, ty, sx, sy) = random_problem(3, 40, 6, 2);
+        let phi = sti_knn(&tx, &ty, 2, &sx, &sy, &StiParams::new(5));
+        let a_test = KnnClassifier::new(&tx, &ty, 2, 5).likelihood(&sx, &sy);
+        let trace: f64 = phi.diagonal().iter().sum();
+        assert!((phi.mean() - (2.0 * a_test - trace) / 1600.0).abs() < 1e-12);
+        // |mean| ≤ (2·a_test + trace)/n² ~ 1/(n·k): vanishes with n
+        assert!(phi.mean().abs() < 5e-3);
+    }
+
+    #[test]
+    fn format_is_stable() {
+        let (tx, ty, sx, sy) = random_problem(1, 10, 3, 2);
+        let phi = sti_knn(&tx, &ty, 2, &sx, &sy, &StiParams::new(3));
+        let text = format_reports(&check_all(&phi, &tx, &ty, 2, &sx, &sy, 3, 1e-9));
+        assert!(text.contains("efficiency"));
+        assert!(text.contains("OK"));
+    }
+}

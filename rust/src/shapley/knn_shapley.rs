@@ -1,0 +1,172 @@
+//! KNN-Shapley (Jia et al. 2019): exact *per-point* Shapley values in
+//! O(t·n log n) — the baseline whose complexity the paper discusses in
+//! §3.2 ("The baseline algorithm's complexity considering t").
+//!
+//! Recursion for one test point (train points sorted nearest-first,
+//! 1-based in the comments):
+//!
+//!   s_{α_n} = 1[y_{α_n} = y_test] / n
+//!   s_{α_i} = s_{α_{i+1}} + (1[y_{α_i}=y] − 1[y_{α_{i+1}}=y]) / k · min(k,i)/i
+
+use crate::knn::distance::{argsort_by_distance, distances_into, Metric};
+
+/// Per-point Shapley values for one test point, SORTED order.
+pub fn knn_shapley_one_test_sorted(labels_sorted: &[i32], y_test: i32, k: usize) -> Vec<f64> {
+    let n = labels_sorted.len();
+    assert!(n >= 1 && k >= 1);
+    let mtch = |r: usize| -> f64 {
+        if labels_sorted[r] == y_test {
+            1.0
+        } else {
+            0.0
+        }
+    };
+    let mut s = vec![0.0f64; n];
+    s[n - 1] = mtch(n - 1) / n as f64;
+    for i in (1..n).rev() {
+        // 1-based index of the nearer point is `i`, its 0-based slot i-1
+        s[i - 1] = s[i]
+            + (mtch(i - 1) - mtch(i)) / k as f64 * (k.min(i) as f64) / i as f64;
+    }
+    s
+}
+
+/// Averaged per-point Shapley values over a test set, ORIGINAL train
+/// order. O(t·n log n).
+pub fn knn_shapley(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+) -> Vec<f64> {
+    let (sum, w) = knn_shapley_partial(train_x, train_y, d, test_x, test_y, k);
+    sum.into_iter().map(|v| v / w).collect()
+}
+
+/// Unnormalized partial sums (coordinator work unit), ORIGINAL order.
+pub fn knn_shapley_partial(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+) -> (Vec<f64>, f64) {
+    let n = train_y.len();
+    assert!(!test_y.is_empty(), "empty test set");
+    assert_eq!(train_x.len(), n * d);
+    assert_eq!(test_x.len(), test_y.len() * d);
+    let mut acc = vec![0.0f64; n];
+    let mut dists = vec![0.0f64; n];
+    let mut labels_sorted = vec![0i32; n];
+    for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        distances_into(q, train_x, d, Metric::SqEuclidean, &mut dists);
+        let order = argsort_by_distance(&dists);
+        for (r, &o) in order.iter().enumerate() {
+            labels_sorted[r] = train_y[o];
+        }
+        let s = knn_shapley_one_test_sorted(&labels_sorted, y, k);
+        for (r, &o) in order.iter().enumerate() {
+            acc[o] += s[r];
+        }
+    }
+    (acc, test_y.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::valuation::u_subset;
+    use crate::util::rng::Rng;
+
+    /// Brute-force per-point Shapley: φ_i = Σ_S |S|!(n-|S|-1)!/n! ·
+    /// (v(S∪i) − v(S)) — the definition KNN-Shapley shortcuts.
+    fn brute_shapley(labels_sorted: &[i32], y: i32, k: usize) -> Vec<f64> {
+        let n = labels_sorted.len();
+        let match_sorted: Vec<bool> = labels_sorted.iter().map(|&l| l == y).collect();
+        let mut fact = vec![1.0f64; n + 1];
+        for i in 1..=n {
+            fact[i] = fact[i - 1] * i as f64;
+        }
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let rest: Vec<usize> = (0..n).filter(|&p| p != i).collect();
+            let mut acc = 0.0;
+            for mask in 0u64..(1 << (n - 1)) {
+                let mut members: Vec<usize> = Vec::new();
+                for (b, &p) in rest.iter().enumerate() {
+                    if (mask >> b) & 1 == 1 {
+                        members.push(p);
+                    }
+                }
+                members.sort_unstable();
+                let s = members.len();
+                let v_without = u_subset(&match_sorted, &members, k);
+                let mut with: Vec<usize> = members.clone();
+                with.push(i);
+                with.sort_unstable();
+                let v_with = u_subset(&match_sorted, &with, k);
+                acc += fact[s] * fact[n - s - 1] / fact[n] * (v_with - v_without);
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    #[test]
+    fn recursion_matches_bruteforce() {
+        let mut rng = Rng::new(11);
+        for n in 2..8usize {
+            for k in 1..=n {
+                let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+                let fast = knn_shapley_one_test_sorted(&labels, 1, k);
+                let brute = brute_shapley(&labels, 1, k);
+                for (a, b) in fast.iter().zip(&brute) {
+                    assert!(
+                        (a - b).abs() < 1e-12,
+                        "n={n} k={k} labels={labels:?}: {fast:?} vs {brute:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn values_sum_to_v_n() {
+        // per-point efficiency: Σ_i s_i = v(N)
+        let labels = [1, 0, 1, 1, 0, 0, 1];
+        for k in 1..=7usize {
+            let s = knn_shapley_one_test_sorted(&labels, 1, k);
+            let v_n = labels.iter().take(k).filter(|&&l| l == 1).count() as f64 / k as f64;
+            assert!((s.iter().sum::<f64>() - v_n).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn matching_points_get_higher_values() {
+        let labels = [1, 0, 1, 0];
+        let s = knn_shapley_one_test_sorted(&labels, 1, 2);
+        assert!(s[0] > s[1]);
+        assert!(s[2] > s[3]);
+    }
+
+    #[test]
+    fn averaged_values_original_order() {
+        let mut rng = Rng::new(5);
+        let n = 12;
+        let d = 2;
+        let t = 4;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let vals = knn_shapley(&train_x, &train_y, d, &test_x, &test_y, 3);
+        assert_eq!(vals.len(), n);
+        // efficiency on the average: Σ_i φ_i = mean_p v_p(N)
+        let knn = crate::knn::KnnClassifier::new(&train_x, &train_y, d, 3);
+        let v_n = knn.likelihood(&test_x, &test_y);
+        assert!((vals.iter().sum::<f64>() - v_n).abs() < 1e-12);
+    }
+}

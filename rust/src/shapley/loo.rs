@@ -1,0 +1,111 @@
+//! Leave-one-out (LOO) valuation — the §1 strawman the Shapley family
+//! improves on: value(i) = v(N) − v(N \ {i}).
+//!
+//! For the KNN valuation this has a closed form per test point: removing
+//! train point i changes u only if i is among the k nearest, in which
+//! case the (k+1)-th point slides into the neighborhood:
+//!
+//!   Δ_i = (1[y_i = y] − 1[y_{α_{k+1}} = y]) / k   if rank(i) < k
+//!         0                                        otherwise
+//! (when n ≤ k every point already votes and the replacement term is 0).
+
+use crate::knn::distance::{argsort_by_distance, distances_into, Metric};
+
+/// LOO values averaged over the test set, ORIGINAL train order. O(t·n log n).
+pub fn loo(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+) -> Vec<f64> {
+    let n = train_y.len();
+    let t = test_y.len();
+    assert!(t > 0 && k >= 1);
+    assert_eq!(train_x.len(), n * d);
+    let mut acc = vec![0.0f64; n];
+    let mut dists = vec![0.0f64; n];
+    for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        distances_into(q, train_x, d, Metric::SqEuclidean, &mut dists);
+        let order = argsort_by_distance(&dists);
+        let kk = k.min(n);
+        // label-match of the replacement point (rank k, 0-based), if any
+        let repl = if n > k {
+            (train_y[order[k]] == y) as i32 as f64
+        } else {
+            0.0
+        };
+        for &o in order.iter().take(kk) {
+            let mi = (train_y[o] == y) as i32 as f64;
+            acc[o] += (mi - repl) / k as f64;
+        }
+    }
+    for v in &mut acc {
+        *v /= t as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::KnnClassifier;
+
+    /// Direct v(N) − v(N\{i}) via the classifier's likelihood — the
+    /// definition, O(t·n²), used to validate the closed form.
+    fn loo_direct(
+        train_x: &[f32],
+        train_y: &[i32],
+        d: usize,
+        test_x: &[f32],
+        test_y: &[i32],
+        k: usize,
+    ) -> Vec<f64> {
+        let n = train_y.len();
+        let full = KnnClassifier::new(train_x, train_y, d, k).likelihood(test_x, test_y);
+        (0..n)
+            .map(|i| {
+                let mut tx: Vec<f32> = Vec::with_capacity((n - 1) * d);
+                let mut ty: Vec<i32> = Vec::with_capacity(n - 1);
+                for j in 0..n {
+                    if j != i {
+                        tx.extend_from_slice(&train_x[j * d..(j + 1) * d]);
+                        ty.push(train_y[j]);
+                    }
+                }
+                full - KnnClassifier::new(&tx, &ty, d, k).likelihood(test_x, test_y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn closed_form_matches_direct() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for (n, k, t) in [(8usize, 3usize, 4usize), (12, 5, 3), (6, 6, 2), (5, 2, 5)] {
+            let d = 2;
+            let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+            let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+            let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+            let fast = loo(&train_x, &train_y, d, &test_x, &test_y, k);
+            let direct = loo_direct(&train_x, &train_y, d, &test_x, &test_y, k);
+            for (a, b) in fast.iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-12, "n={n} k={k}: {fast:?} vs {direct:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn far_points_have_zero_loo() {
+        // a point never in any test point's k-neighborhood has LOO 0 —
+        // the known blind spot of LOO that motivates Shapley (§1)
+        let train_x = [0.0f32, 0.1, 0.2, 100.0];
+        let train_y = [1, 1, 0, 1];
+        let test_x = [0.05f32];
+        let test_y = [1];
+        let vals = loo(&train_x, &train_y, 1, &test_x, &test_y, 2);
+        assert_eq!(vals[3], 0.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Monte-Carlo STI estimator — the accuracy-vs-budget baseline for the
+//! ablation benches (what practitioners would run on a model where no
+//! closed form exists, and what the O(2ⁿ) column of the paper's headline
+//! claim degrades to under a fixed compute budget).
+//!
+//! Eq. (3) regrouped by subset size:
+//!   φ_ij = (2/n) Σ_{s=0}^{n−2} C(n−2,s)/C(n−1,s) · E_{|S|=s}[Δ_ij(S)]
+//!        = (2/n) Σ_s (n−1−s)/(n−1) · E_s[Δ],
+//! so we estimate E_s[Δ] with `samples_per_size` uniform draws of S per
+//! size (exact enumeration is used when C(n−2,s) ≤ samples_per_size).
+
+use crate::knn::distance::{argsort_by_distance, distances_into, Metric};
+use crate::knn::valuation::u_subset_mask;
+use crate::shapley::sti_exact::binom;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// MC estimate of φ_ij for one test point, sorted order.
+pub fn mc_pair_interaction(
+    match_bits: u64,
+    n: usize,
+    i: usize,
+    j: usize,
+    k: usize,
+    samples_per_size: usize,
+    rng: &mut Rng,
+) -> f64 {
+    assert!(i != j && i < n && j < n && n >= 2 && n <= 64);
+    let rest: Vec<usize> = (0..n).filter(|&p| p != i && p != j).collect();
+    let m = rest.len();
+    let bit_i = 1u64 << i;
+    let bit_j = 1u64 << j;
+    let delta = |subset: u64| -> f64 {
+        u_subset_mask(match_bits, subset | bit_i | bit_j, k)
+            - u_subset_mask(match_bits, subset | bit_i, k)
+            - u_subset_mask(match_bits, subset | bit_j, k)
+            + u_subset_mask(match_bits, subset, k)
+    };
+    let mut acc = 0.0;
+    for s in 0..=m {
+        let size_weight = (n as f64 - 1.0 - s as f64) / (n as f64 - 1.0);
+        if size_weight == 0.0 {
+            continue;
+        }
+        let total = binom(m, s);
+        let est = if total <= samples_per_size as f64 {
+            // exact enumeration of this size stratum
+            let mut sum = 0.0;
+            let mut count = 0usize;
+            enumerate_combinations(&rest, s, &mut |subset| {
+                sum += delta(subset);
+                count += 1;
+            });
+            if count == 0 {
+                0.0
+            } else {
+                sum / count as f64
+            }
+        } else {
+            let mut sum = 0.0;
+            for _ in 0..samples_per_size {
+                let picks = rng.sample_indices(m, s);
+                let subset = picks.iter().fold(0u64, |a, &p| a | (1u64 << rest[p]));
+                sum += delta(subset);
+            }
+            sum / samples_per_size as f64
+        };
+        acc += size_weight * est;
+    }
+    2.0 / n as f64 * acc
+}
+
+fn enumerate_combinations(items: &[usize], s: usize, f: &mut impl FnMut(u64)) {
+    fn rec(items: &[usize], s: usize, start: usize, cur: u64, f: &mut impl FnMut(u64)) {
+        if s == 0 {
+            f(cur);
+            return;
+        }
+        for idx in start..=items.len().saturating_sub(s) {
+            rec(items, s - 1, idx + 1, cur | (1u64 << items[idx]), f);
+        }
+    }
+    rec(items, s, 0, 0, f);
+}
+
+/// MC-estimated STI matrix averaged over a test set, ORIGINAL order.
+pub fn mc_sti(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+    samples_per_size: usize,
+    seed: u64,
+) -> Matrix {
+    let n = train_y.len();
+    let t = test_y.len();
+    assert!(t > 0 && n <= 64);
+    let mut rng = Rng::new(seed);
+    let mut acc = Matrix::zeros(n, n);
+    let mut dists = vec![0.0f64; n];
+    for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        distances_into(q, train_x, d, Metric::SqEuclidean, &mut dists);
+        let order = argsort_by_distance(&dists);
+        let bits = order
+            .iter()
+            .enumerate()
+            .fold(0u64, |a, (r, &o)| a | (((train_y[o] == y) as u64) << r));
+        for a in 0..n {
+            let ua = if (bits >> a) & 1 == 1 { 1.0 / k as f64 } else { 0.0 };
+            acc.add_at(order[a], order[a], ua);
+            for b in (a + 1)..n {
+                let v = mc_pair_interaction(bits, n, a, b, k, samples_per_size, &mut rng);
+                acc.add_at(order[a], order[b], v);
+                acc.add_at(order[b], order[a], v);
+            }
+        }
+    }
+    acc.scale(1.0 / t as f64);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::sti_exact::{pair_interaction_masked, sti_weight};
+
+    #[test]
+    fn exhaustive_budget_equals_exact() {
+        // samples_per_size >= C(n-2, s) everywhere -> exact enumeration
+        let labels = [1, 0, 1, 1, 0, 1];
+        let bits = 0b101101u64;
+        let n = labels.len();
+        let mut rng = Rng::new(1);
+        for (i, j) in [(0, 1), (1, 4), (3, 5)] {
+            let exact = pair_interaction_masked(bits, n, i, j, 2, sti_weight, 0);
+            let mc = mc_pair_interaction(bits, n, i, j, 2, 1 << 12, &mut rng);
+            assert!((exact - mc).abs() < 1e-12, "({i},{j}): {exact} vs {mc}");
+        }
+    }
+
+    #[test]
+    fn sampled_estimate_converges() {
+        let labels = [1i32, 0, 1, 1, 0, 1, 0, 0, 1, 1, 0, 1];
+        let n = labels.len();
+        let bits = labels
+            .iter()
+            .enumerate()
+            .fold(0u64, |a, (r, &l)| a | (((l == 1) as u64) << r));
+        let exact = pair_interaction_masked(bits, n, 2, 9, 3, sti_weight, 0);
+        let mut errs = Vec::new();
+        for budget in [2usize, 1 << 12] {
+            let mut rng = Rng::new(99);
+            // average several replicates to smooth sampling noise
+            let reps = 20;
+            let mean: f64 = (0..reps)
+                .map(|_| mc_pair_interaction(bits, n, 2, 9, 3, budget, &mut rng))
+                .sum::<f64>()
+                / reps as f64;
+            errs.push((mean - exact).abs());
+        }
+        // the 2^12 budget exceeds every stratum size C(10, s) ≤ 252, so the
+        // estimator degrades to exact enumeration
+        assert!(errs[1] < 1e-12, "exhaustive budget should be exact: {errs:?}");
+        assert!(errs[0] < 0.05, "low-budget estimate too noisy: {errs:?}");
+    }
+
+    #[test]
+    fn full_matrix_symmetric() {
+        let train_x = [0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let train_y = [1, 0, 1, 0, 1, 0];
+        let test_x = [0.5f32, 4.5];
+        let test_y = [1, 0];
+        let m = mc_sti(&train_x, &train_y, 1, &test_x, &test_y, 2, 8, 5);
+        assert!(m.is_symmetric(1e-12));
+    }
+}

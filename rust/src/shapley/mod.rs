@@ -1,0 +1,14 @@
+//! Data-Shapley engines: the paper's O(tn²) STI-KNN (Algorithm 1), the
+//! O(2ⁿ) brute-force baseline it replaces (Eq. 3), the per-point
+//! KNN-Shapley baseline (Jia et al. 2019), the SII variant (§3.2), a
+//! Monte-Carlo estimator, leave-one-out, and the axiom checkers.
+
+pub mod axioms;
+pub mod knn_shapley;
+pub mod loo;
+pub mod mc_sti;
+pub mod sii;
+pub mod sti_exact;
+pub mod sti_knn;
+
+pub use sti_knn::{sti_knn, sti_knn_partial, StiParams};

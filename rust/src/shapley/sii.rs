@@ -1,0 +1,182 @@
+//! SII-KNN: the paper's §3.2 extension — "The obtained result for STI
+//! could be applied to SII [Grabisch & Roubens 1999] ... The only
+//! difference would be in the coefficient."
+//!
+//! The whole Appendix-A derivation only uses the fact that the size weight
+//! w(s) factors out of the subset sums, so the same recursion structure
+//! holds with SII weights w(s) = s!(n−s−2)!/(n−1)! = 1/((n−1)·C(n−2,s)):
+//!
+//!   last term:  φ_{n−1,n} = −u(α_n)/(n−1)                (paper, §3.2)
+//!   recursion:  φ_{j−2,j−1} = φ_{j−1,j} + D(j)·(u(α_j) − u(α_{j−1}))
+//!   columns:    unchanged (Eq. 8's proof is weight-independent)
+//!
+//! where, following Appendix A.2 with SII weights,
+//!
+//!   D(j) = [j > k+1] · C(j−3, k−1) · Σ_{s=k−1}^{n−3} (w(s) + w(s+1)) ·
+//!            C(n−j, s−k+1)
+//!
+//! (for STI this sum telescopes to the closed form 2(j−k−1)/((j−2)(j−1));
+//! for SII we evaluate it numerically in O(n) per j — still O(n²) overall
+//! per test point, dominated by the assembly anyway.)
+
+use crate::knn::distance::{argsort_by_distance, distances_into, Metric};
+use crate::shapley::sti_exact::{binom, sii_weight};
+use crate::util::matrix::Matrix;
+
+/// D(j) for the SII recursion (1-based j, 3 ≤ j ≤ n).
+fn sii_d(n: usize, j: usize, k: usize) -> f64 {
+    if j <= k + 1 {
+        return 0.0;
+    }
+    let lead = binom(j - 3, k - 1);
+    if lead == 0.0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for s in (k - 1)..=(n - 3) {
+        let c = binom(n - j, s - (k - 1));
+        if c == 0.0 {
+            continue;
+        }
+        acc += (sii_weight(n, s) + sii_weight(n, s + 1)) * c;
+    }
+    lead * acc
+}
+
+/// SII superdiagonal by rank (same layout as the STI engine: c[r] is the
+/// column value of the point at rank r; c[0] duplicates c[1]).
+fn sii_superdiagonal(u_sorted: &[f64], k: usize, c: &mut [f64]) {
+    let n = u_sorted.len();
+    let nf = n as f64;
+    // General last term: −w(k−1)·C(n−2,k−1)·u(α_n) = −u(α_n)/(n−1), but the
+    // s = k−1 stratum only exists for k ≤ n−1; at k = n every Δ vanishes
+    // (u is fully linear), so the whole matrix is the zero interaction.
+    // (The STI analogue needs no guard — Eq. 6's (n−k) factor is the guard.)
+    c[n - 1] = if k < n {
+        -u_sorted[n - 1] / (nf - 1.0)
+    } else {
+        0.0
+    };
+    for j in (3..=n).rev() {
+        c[j - 2] = c[j - 1] + sii_d(n, j, k) * (u_sorted[j - 1] - u_sorted[j - 2]);
+    }
+    if n >= 2 {
+        c[0] = c[1.min(n - 1)];
+    }
+}
+
+/// SII pair-interaction matrix for one test point, SORTED order; diagonal
+/// carries the main terms u(i) (same convention as the STI engine).
+pub fn sii_one_test_sorted(labels_sorted: &[i32], y_test: i32, k: usize) -> Matrix {
+    let n = labels_sorted.len();
+    assert!(n >= 2, "need >= 2 train points");
+    assert!(k >= 1 && k <= n, "SII-KNN requires 1 <= k <= n");
+    let inv_k = 1.0 / k as f64;
+    let u: Vec<f64> = labels_sorted
+        .iter()
+        .map(|&l| if l == y_test { inv_k } else { 0.0 })
+        .collect();
+    let mut c = vec![0.0; n];
+    sii_superdiagonal(&u, k, &mut c);
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        m.set(i, i, u[i]);
+        for j in (i + 1)..n {
+            m.set(i, j, c[j]);
+            m.set(j, i, c[j]);
+        }
+    }
+    m
+}
+
+/// Averaged SII matrix over a test set, ORIGINAL order; O(t·n²).
+pub fn sii_knn(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+) -> Matrix {
+    let n = train_y.len();
+    let t = test_y.len();
+    assert!(t > 0, "empty test set");
+    let mut acc = Matrix::zeros(n, n);
+    let mut dists = vec![0.0f64; n];
+    let mut labels_sorted = vec![0i32; n];
+    for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        distances_into(q, train_x, d, Metric::SqEuclidean, &mut dists);
+        let order = argsort_by_distance(&dists);
+        for (r, &o) in order.iter().enumerate() {
+            labels_sorted[r] = train_y[o];
+        }
+        let m_sorted = sii_one_test_sorted(&labels_sorted, y, k);
+        for a in 0..n {
+            for b in 0..n {
+                acc.add_at(order[a], order[b], m_sorted.get(a, b));
+            }
+        }
+    }
+    acc.scale(1.0 / t as f64);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::sti_exact::{exact_one_test_sorted, sii_weight};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fast_sii_matches_bruteforce() {
+        let mut rng = Rng::new(23);
+        for n in 3..9usize {
+            for k in 1..=n {
+                let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+                let y = rng.below(2) as i32;
+                let fast = sii_one_test_sorted(&labels, y, k);
+                let exact = exact_one_test_sorted(&labels, y, k, sii_weight);
+                assert!(
+                    fast.max_abs_diff(&exact) < 1e-12,
+                    "n={n} k={k} labels={labels:?} y={y}: err={:.3e}",
+                    fast.max_abs_diff(&exact)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn last_term_closed_form() {
+        // §3.2: φ_{n-1,n} = −u(α_n)/(n−1)
+        let labels = [0, 1, 1, 0, 1];
+        let m = sii_one_test_sorted(&labels, 1, 2);
+        assert!((m.get(3, 4) + 0.5 / 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn column_equality_holds_for_sii_too() {
+        let labels = [1, 0, 0, 1, 1, 0];
+        let m = sii_one_test_sorted(&labels, 1, 2);
+        for j in 1..labels.len() {
+            for i in 0..j {
+                assert_eq!(m.get(i, j), m.get(0, j));
+            }
+        }
+    }
+
+    #[test]
+    fn sti_and_sii_rank_points_consistently() {
+        // different coefficients, same qualitative structure: strong
+        // correlation between the two indices' off-diagonals
+        let mut rng = Rng::new(31);
+        let n = 12;
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let sti = crate::shapley::sti_knn::sti_one_test_sorted(&labels, 1, 3);
+        let sii = sii_one_test_sorted(&labels, 1, 3);
+        let r = crate::util::stats::pearson(
+            &sti.upper_triangle_entries(),
+            &sii.upper_triangle_entries(),
+        );
+        assert!(r > 0.9, "STI/SII correlation {r}");
+    }
+}

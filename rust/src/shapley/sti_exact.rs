@@ -1,0 +1,275 @@
+//! Brute-force Shapley-Taylor interaction (Eq. 3) — the O(2ⁿ) baseline the
+//! paper replaces, kept as ground truth for every fast engine:
+//!
+//!   φ_ij = (2/n) Σ_{S ⊆ N\{i,j}} 1/C(n−1,|S|) ·
+//!            (v(S∪{i,j}) − v(S∪{i}) − v(S∪{j}) + v(S))
+//!
+//! Implemented over subset bitmasks with the KNN valuation (Eq. 2) as an
+//! O(k) popcount-style walk. Also provides the Lemma-1 variant that
+//! restricts the size sum to s ≥ k−1 (the smaller sizes cancel exactly —
+//! itself a tested invariant), and the generalized-weight form used to
+//! cross-validate the SII engine.
+
+use crate::knn::valuation::u_subset_mask;
+use crate::util::matrix::Matrix;
+
+/// Guard: 2^n subset enumerations with n above this would run for hours.
+pub const MAX_EXACT_N: usize = 22;
+
+/// C(n, k) as f64 (exact for the small n used here).
+pub fn binom(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+/// Interaction weight as a function of subset size s, defining the index:
+/// STI uses (2/n)·1/C(n−1,s); SII uses s!(n−s−2)!/(n−1)!.
+pub type WeightFn = fn(n: usize, s: usize) -> f64;
+
+/// STI weight (Eq. 3): (2/n)·1/C(n−1,s).
+pub fn sti_weight(n: usize, s: usize) -> f64 {
+    2.0 / n as f64 / binom(n - 1, s)
+}
+
+/// SII weight (Grabisch & Roubens): s!(n−s−2)!/(n−1)! = 1/((n−1)·C(n−2,s)).
+pub fn sii_weight(n: usize, s: usize) -> f64 {
+    1.0 / ((n - 1) as f64 * binom(n - 2, s))
+}
+
+/// Exact pair interaction for one (i, j) under an arbitrary size weight,
+/// one test point. Inputs are in SORTED order (nearest-first);
+/// `match_bits` bit r = 1 iff the rank-r train point's label matches.
+/// `min_s` restricts the subset sizes (0 for the full Eq. 3; k−1 for the
+/// Lemma-1 restricted sum).
+pub fn pair_interaction_masked(
+    match_bits: u64,
+    n: usize,
+    i: usize,
+    j: usize,
+    k: usize,
+    weight: WeightFn,
+    min_s: usize,
+) -> f64 {
+    assert!(i != j && i < n && j < n);
+    assert!(n <= MAX_EXACT_N, "exact STI limited to n <= {MAX_EXACT_N}");
+    // Enumerate subsets of the n-2 "rest" positions.
+    let rest: Vec<usize> = (0..n).filter(|&p| p != i && p != j).collect();
+    let m = rest.len();
+    let bit_i = 1u64 << i;
+    let bit_j = 1u64 << j;
+    let mut acc = 0.0f64;
+    for mask in 0u64..(1u64 << m) {
+        let s = mask.count_ones() as usize;
+        if s < min_s {
+            continue;
+        }
+        // expand compact mask -> positions
+        let mut subset = 0u64;
+        let mut mm = mask;
+        while mm != 0 {
+            let b = mm.trailing_zeros() as usize;
+            subset |= 1u64 << rest[b];
+            mm &= mm - 1;
+        }
+        let delta = u_subset_mask(match_bits, subset | bit_i | bit_j, k)
+            - u_subset_mask(match_bits, subset | bit_i, k)
+            - u_subset_mask(match_bits, subset | bit_j, k)
+            + u_subset_mask(match_bits, subset, k);
+        if delta != 0.0 {
+            acc += weight(n, s) * delta;
+        }
+    }
+    acc
+}
+
+fn match_bits_of(labels_sorted: &[i32], y_test: i32) -> u64 {
+    labels_sorted
+        .iter()
+        .enumerate()
+        .fold(0u64, |acc, (r, &l)| acc | (((l == y_test) as u64) << r))
+}
+
+/// Full exact STI matrix for one test point, sorted order, diagonal =
+/// main terms φ_ii = v({i}) − v(∅) (Eq. 4).
+pub fn sti_exact_one_test_sorted(labels_sorted: &[i32], y_test: i32, k: usize) -> Matrix {
+    exact_one_test_sorted(labels_sorted, y_test, k, sti_weight)
+}
+
+/// Generalized-weight variant (used for SII cross-validation).
+pub fn exact_one_test_sorted(
+    labels_sorted: &[i32],
+    y_test: i32,
+    k: usize,
+    weight: WeightFn,
+) -> Matrix {
+    let n = labels_sorted.len();
+    let bits = match_bits_of(labels_sorted, y_test);
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        let ui = if (bits >> i) & 1 == 1 { 1.0 / k as f64 } else { 0.0 };
+        m.set(i, i, ui);
+        for j in (i + 1)..n {
+            let v = pair_interaction_masked(bits, n, i, j, k, weight, 0);
+            m.set(i, j, v);
+            m.set(j, i, v);
+        }
+    }
+    m
+}
+
+/// Exact STI matrix averaged over a test set, in ORIGINAL train order —
+/// the end-to-end O(2ⁿ) baseline (used by the scaling bench and the
+/// equivalence tests). O(t·n²·2ⁿ).
+pub fn sti_exact(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+) -> Matrix {
+    use crate::knn::distance::{argsort_by_distance, distances, Metric};
+    let n = train_y.len();
+    assert!(n <= MAX_EXACT_N, "exact STI limited to n <= {MAX_EXACT_N}");
+    let t = test_y.len();
+    assert!(t > 0);
+    let mut acc = Matrix::zeros(n, n);
+    for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        let dists = distances(q, train_x, d, Metric::SqEuclidean);
+        let order = argsort_by_distance(&dists);
+        let labels_sorted: Vec<i32> = order.iter().map(|&o| train_y[o]).collect();
+        let m_sorted = sti_exact_one_test_sorted(&labels_sorted, y, k);
+        // scatter back: acc[order[a]][order[b]] += m_sorted[a][b]
+        for a in 0..n {
+            for b in 0..n {
+                acc.add_at(order[a], order[b], m_sorted.get(a, b));
+            }
+        }
+    }
+    acc.scale(1.0 / t as f64);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binom_values() {
+        assert_eq!(binom(5, 2), 10.0);
+        assert_eq!(binom(6, 0), 1.0);
+        assert_eq!(binom(4, 5), 0.0);
+        assert_eq!(binom(20, 10), 184_756.0);
+    }
+
+    #[test]
+    fn weights_match_closed_forms() {
+        // STI: (2/n)/C(n-1,s); SII: 1/((n-1) C(n-2,s))
+        assert!((sti_weight(4, 2) - 2.0 / 4.0 / 3.0).abs() < 1e-15);
+        assert!((sii_weight(4, 0) - 1.0 / 3.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn lemma1_restricted_sum_equals_full_sum() {
+        // sizes s < k-1 cancel exactly (Lemma 1)
+        let labels = [1, 0, 1, 1, 0, 1];
+        let bits = super::match_bits_of(&labels, 1);
+        let n = labels.len();
+        for k in 2..=4usize {
+            for (i, j) in [(0, 1), (2, 5), (4, 5)] {
+                let full = pair_interaction_masked(bits, n, i, j, k, sti_weight, 0);
+                let restricted =
+                    pair_interaction_masked(bits, n, i, j, k, sti_weight, k - 1);
+                assert!(
+                    (full - restricted).abs() < 1e-14,
+                    "k={k} ({i},{j}): {full} vs {restricted}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eq6_closed_form_for_last_pair() {
+        // φ_{n-1,n} = -2(n-k)/(n(n-1))·u(α_n) for random labelings
+        let cases: [(&[i32], i32, usize); 3] =
+            [(&[1, 0, 1, 1], 1, 2), (&[0, 0, 1, 0, 1], 0, 3), (&[1, 1, 1], 1, 1)];
+        for (labels, y, k) in cases {
+            let n = labels.len();
+            let bits = super::match_bits_of(labels, y);
+            let got = pair_interaction_masked(bits, n, n - 2, n - 1, k, sti_weight, 0);
+            let u_n = if labels[n - 1] == y { 1.0 / k as f64 } else { 0.0 };
+            let want = -2.0 * (n as f64 - k as f64) / (n as f64 * (n as f64 - 1.0)) * u_n;
+            assert!((got - want).abs() < 1e-14, "labels={labels:?} k={k}");
+        }
+    }
+
+    #[test]
+    fn sii_last_pair_closed_form() {
+        // §3.2: for SII, φ_{n-1,n} = -u(α_n)/(n-1)
+        let labels = [0, 1, 0, 1, 1];
+        let n = labels.len();
+        let k = 2;
+        let bits = super::match_bits_of(&labels, 1);
+        let got = pair_interaction_masked(bits, n, n - 2, n - 1, k, sii_weight, 0);
+        let u_n = 1.0 / k as f64; // last label matches
+        assert!((got + u_n / (n as f64 - 1.0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn matrix_is_symmetric_and_diag_is_main_term() {
+        let labels = [1, 0, 0, 1];
+        let m = sti_exact_one_test_sorted(&labels, 1, 2);
+        assert!(m.is_symmetric(1e-15));
+        assert_eq!(m.get(0, 0), 0.5);
+        assert_eq!(m.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn efficiency_upper_triangle_sums_to_v_n() {
+        // Σ_{i<=j} φ_ij = v(N) − v(∅) = u(N) exactly (DESIGN.md §1)
+        let labels = [1, 0, 1, 1, 0];
+        for k in 1..=5usize {
+            let m = sti_exact_one_test_sorted(&labels, 1, k);
+            let v_n: f64 = labels
+                .iter()
+                .take(k)
+                .filter(|&&l| l == 1)
+                .count() as f64
+                / k as f64;
+            assert!(
+                (m.upper_triangle_sum() - v_n).abs() < 1e-12,
+                "k={k}: {} vs {v_n}",
+                m.upper_triangle_sum()
+            );
+        }
+    }
+
+    #[test]
+    fn averaged_exact_matrix_original_order() {
+        // 1-D geometry where sort orders differ per test point
+        let train_x = [0.0f32, 1.0, 2.0, 3.0];
+        let train_y = [1, 0, 1, 0];
+        let test_x = [0.1f32, 2.9];
+        let test_y = [1, 0];
+        let m = sti_exact(&train_x, &train_y, 1, &test_x, &test_y, 2);
+        assert!(m.is_symmetric(1e-15));
+        // efficiency holds on average too: mean of per-test v(N)
+        let v0 = 0.5; // test 0 (y=1): nearest 2 = {0:1, 1:0} -> 1 match /2
+        let v1 = 0.5; // test 1 (y=0): nearest 2 = {3:0, 2:1} -> 1 match /2
+        assert!((m.upper_triangle_sum() - (v0 + v1) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "exact STI limited")]
+    fn refuses_large_n() {
+        let labels = vec![1i32; MAX_EXACT_N + 1];
+        sti_exact_one_test_sorted(&labels, 1, 3);
+    }
+}

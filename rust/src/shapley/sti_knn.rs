@@ -1,0 +1,381 @@
+//! STI-KNN (Algorithm 1): exact pair-interaction Shapley-Taylor values for
+//! KNN models in O(t·n²) — the paper's contribution.
+//!
+//! Per test point (1-based indices as in the paper, train points sorted
+//! nearest-first):
+//!
+//!   line 3:    φ_{n−1,n} = −2(n−k)/(n(n−1))·u(α_n)                 (Eq. 6)
+//!   lines 4-10: φ_{j−2,j−1} = φ_{j−1,j} + [j > k+1]·
+//!                 2(j−k−1)/((j−2)(j−1))·(u(α_j) − u(α_{j−1}))      (Eq. 7)
+//!   lines 11-14: all upper-triangle entries of column j equal φ_{j−1,j}
+//!                                                                  (Eq. 8)
+//!   diagonal:  φ_ii = v({i}) − v(∅) = u(i)                         (Eq. 4/5)
+//!   main:      average over test points                            (Eq. 9)
+//!
+//! The per-test assembly is expressed exactly like the L1 Pallas kernel
+//! (DESIGN.md §2): with `rank[i]` the sorted position of train point i and
+//! `colval[i]` the superdiagonal value at that position,
+//!
+//!   Φ[i,j] += colval[ if rank[i] > rank[j] { i } else { j } ]   (i ≠ j)
+//!
+//! accumulated over the upper triangle only (the matrix is symmetric) and
+//! mirrored once at the end — this keeps the O(n²) inner loop allocation-
+//! free and sequential over the output rows.
+
+use crate::knn::distance::{argsort_by_distance, distances_into, Metric};
+use crate::util::matrix::Matrix;
+
+/// Parameters for an STI-KNN run.
+#[derive(Clone, Copy, Debug)]
+pub struct StiParams {
+    /// KNN neighborhood size. Must satisfy 1 ≤ k ≤ n: Algorithm 1's
+    /// closed forms are exact only on that domain (DESIGN.md §1).
+    pub k: usize,
+    pub metric: Metric,
+}
+
+impl StiParams {
+    pub fn new(k: usize) -> Self {
+        StiParams {
+            k,
+            metric: Metric::SqEuclidean,
+        }
+    }
+
+    fn validate(&self, n: usize) {
+        assert!(self.k >= 1, "k must be >= 1");
+        assert!(
+            self.k <= n,
+            "STI-KNN is exact only for k <= n (k={}, n={}); see DESIGN.md §1",
+            self.k,
+            n
+        );
+        assert!(n >= 2, "need at least 2 training points for interactions");
+    }
+}
+
+/// Test points prepared per batch before the O(n²) sweep (§Perf): the
+/// assembly loop is memory-bound on the n×n accumulator if it streams the
+/// whole matrix once per test point, so we batch `BATCH` test points'
+/// (rank, column-value) rows and sweep the accumulator ONCE per batch,
+/// iterating the batch in the middle loop — the accumulator row stays in
+/// L1/L2 across all test points of the batch (measured 0.81 → 0.27
+/// ns/pair-cell at n=600; see EXPERIMENTS.md §Perf).
+const BATCH: usize = 64;
+
+/// Reusable scratch buffers for the batched hot loop.
+struct Scratch {
+    dists: Vec<f64>,
+    c: Vec<f64>,
+    /// rank as f64, BATCH rows of n — f64 operands let LLVM lower the
+    /// inner select to vcmppd + vblendvpd + vaddpd
+    rankf: Vec<f64>,
+    /// per-point column values pre-scaled by the test weight, BATCH×n
+    colval: Vec<f64>,
+}
+
+impl Scratch {
+    fn new(n: usize) -> Self {
+        Scratch {
+            dists: vec![0.0; n],
+            c: vec![0.0; n],
+            rankf: vec![0.0; BATCH * n],
+            colval: vec![0.0; BATCH * n],
+        }
+    }
+}
+
+/// Lines 3–10 of Algorithm 1: the superdiagonal, indexed by RANK.
+///
+/// `u_sorted[r]` is u(α_{r+1}) (0-based rank r). Output `c[r]` is the
+/// column value of the point at rank r, i.e. φ_{r,r+1} in 1-based paper
+/// terms c[r] = φ_{(r+1)−1,(r+1)}; c[0] duplicates c[1] (column 1 has no
+/// upper-triangle entries, the value is never used for a pair).
+fn superdiagonal_into(u_sorted: &[f64], k: usize, c: &mut [f64]) {
+    let n = u_sorted.len();
+    debug_assert!(n >= 2 && c.len() == n);
+    let nf = n as f64;
+    let kf = k as f64;
+    // Eq. (6)
+    c[n - 1] = -2.0 * (nf - kf) / (nf * (nf - 1.0)) * u_sorted[n - 1];
+    // Eq. (7), j = n down to 3 (1-based); c index r = j-2 gets φ_{j-2,j-1}
+    for j in (3..=n).rev() {
+        let jf = j as f64;
+        let prev = c[j - 1];
+        c[j - 2] = if j > k + 1 {
+            prev + 2.0 * (jf - kf - 1.0) / ((jf - 2.0) * (jf - 1.0))
+                * (u_sorted[j - 1] - u_sorted[j - 2])
+        } else {
+            prev
+        };
+    }
+    if n >= 2 {
+        c[0] = c[1.min(n - 1)];
+    }
+}
+
+/// Phase 1 for one test point: distances → ranks → superdiagonal →
+/// scatter (rankf, w·colval) into batch slot `slot`; the diagonal main
+/// term is accumulated directly (it is O(n), not worth batching).
+#[allow(clippy::too_many_arguments)]
+fn prepare_one_test(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: i32,
+    params: &StiParams,
+    w: f64,
+    slot: usize,
+    scratch: &mut Scratch,
+    acc: &mut Matrix,
+) {
+    let n = train_y.len();
+    let k = params.k;
+
+    distances_into(test_x, train_x, d, params.metric, &mut scratch.dists);
+    let order = argsort_by_distance(&scratch.dists);
+
+    // u in sorted order (reuse c as the temp buffer), then the
+    // superdiagonal by rank (Eq. 6/7).
+    let inv_k = 1.0 / k as f64;
+    let rank_row = &mut scratch.rankf[slot * n..(slot + 1) * n];
+    let col_row = &mut scratch.colval[slot * n..(slot + 1) * n];
+    for (r, &orig) in order.iter().enumerate() {
+        col_row[r] = if train_y[orig] == test_y { inv_k } else { 0.0 };
+    }
+    superdiagonal_into(&col_row[..n], k, &mut scratch.c);
+
+    // Scatter to original order; pre-scale column values by the test
+    // weight so the O(n²) loop is a pure select-add.
+    for (r, &orig) in order.iter().enumerate() {
+        rank_row[orig] = r as f64;
+        col_row[orig] = w * scratch.c[r];
+    }
+    // diagonal main terms (Eq. 4/5)
+    for i in 0..n {
+        if train_y[i] == test_y {
+            acc.add_at(i, i, w * inv_k);
+        }
+    }
+}
+
+/// Phase 2: the O(batch·n²) upper-triangle assembly (the Pallas-kernel
+/// twin). The batch is the MIDDLE loop so each accumulator row stays hot
+/// across all test points of the batch; the inner select is branchless
+/// over f64 operands and auto-vectorizes (AVX-512 via target-cpu=native).
+fn sweep_batch(scratch: &Scratch, batch: usize, n: usize, acc: &mut Matrix) {
+    // (A 2-row-blocked variant that shares operand streams between
+    // adjacent rows was tried and reverted: −8% at n=600 but +10% at
+    // n=1600 — see EXPERIMENTS.md §Perf iteration log.)
+    for i in 0..n {
+        let row = acc.row_mut(i);
+        for p in 0..batch {
+            let rankf = &scratch.rankf[p * n..(p + 1) * n];
+            let colval = &scratch.colval[p * n..(p + 1) * n];
+            let rif = rankf[i];
+            let wci = colval[i];
+            for j in (i + 1)..n {
+                let v = if rankf[j] < rif { wci } else { colval[j] };
+                row[j] += v;
+            }
+        }
+    }
+}
+
+/// Copy the accumulated upper triangle into the lower triangle.
+fn mirror_lower(m: &mut Matrix) {
+    let n = m.rows();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = m.get(i, j);
+            m.set(j, i, v);
+        }
+    }
+}
+
+/// Partial (unnormalized) STI-KNN over a slice of the test set: returns
+/// (Σ_p Φ(u_p), weight = number of test points). This is the unit of work
+/// the coordinator shards and merges (Eq. 9 linearity).
+pub fn sti_knn_partial(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+) -> (Matrix, f64) {
+    let n = train_y.len();
+    params.validate(n);
+    assert_eq!(train_x.len(), n * d, "train shape mismatch");
+    assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
+    let mut acc = Matrix::zeros(n, n);
+    let mut scratch = Scratch::new(n);
+    let mut slot = 0usize;
+    for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        prepare_one_test(
+            train_x, train_y, d, q, y, params, 1.0, slot, &mut scratch, &mut acc,
+        );
+        slot += 1;
+        if slot == BATCH {
+            sweep_batch(&scratch, slot, n, &mut acc);
+            slot = 0;
+        }
+    }
+    if slot > 0 {
+        sweep_batch(&scratch, slot, n, &mut acc);
+    }
+    mirror_lower(&mut acc);
+    (acc, test_y.len() as f64)
+}
+
+/// The full STI-KNN interaction matrix, averaged over the test set
+/// (Eq. 9). Diagonal carries the main terms φ_ii (Eq. 4). O(t·n²).
+pub fn sti_knn(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+) -> Matrix {
+    assert!(!test_y.is_empty(), "empty test set");
+    let (mut acc, w) = sti_knn_partial(train_x, train_y, d, test_x, test_y, params);
+    acc.scale(1.0 / w);
+    acc
+}
+
+/// Single-test-point matrix (sorted-order inputs), exposed for tests and
+/// the analysis suite: labels already ordered nearest-first.
+pub fn sti_one_test_sorted(labels_sorted: &[i32], y_test: i32, k: usize) -> Matrix {
+    let n = labels_sorted.len();
+    StiParams::new(k).validate(n);
+    let inv_k = 1.0 / k as f64;
+    let u: Vec<f64> = labels_sorted
+        .iter()
+        .map(|&l| if l == y_test { inv_k } else { 0.0 })
+        .collect();
+    let mut c = vec![0.0; n];
+    superdiagonal_into(&u, k, &mut c);
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        m.set(i, i, u[i]);
+        for j in (i + 1)..n {
+            m.set(i, j, c[j]);
+            m.set(j, i, c[j]);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::sti_exact;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_bruteforce_small_cases() {
+        let mut rng = Rng::new(7);
+        for n in 3..9usize {
+            for k in 1..=n {
+                let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+                let y = rng.below(2) as i32;
+                let fast = sti_one_test_sorted(&labels, y, k);
+                let exact = sti_exact::sti_exact_one_test_sorted(&labels, y, k);
+                assert!(
+                    fast.max_abs_diff(&exact) < 1e-12,
+                    "n={n} k={k} labels={labels:?} y={y}: {:.3e}",
+                    fast.max_abs_diff(&exact)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eq6_last_term() {
+        // all-matching labels: φ_{n-1,n} = -2(n-k)/(n(n-1))·(1/k)
+        let n = 6;
+        let k = 2;
+        let m = sti_one_test_sorted(&vec![1; n], 1, k);
+        let expect = -2.0 * (n as f64 - k as f64) / (n as f64 * (n - 1) as f64) / k as f64;
+        assert!((m.get(n - 2, n - 1) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn column_equality_sorted_order() {
+        let labels = [1, 0, 0, 1, 1, 0, 1];
+        let m = sti_one_test_sorted(&labels, 1, 3);
+        for j in 1..labels.len() {
+            for i in 0..j {
+                assert_eq!(m.get(i, j), m.get(0, j), "column {j} not constant");
+            }
+        }
+    }
+
+    #[test]
+    fn close_points_share_value_below_k_plus_1() {
+        // lines 5-9: for j <= k+1 the recursion copies (KNN cannot
+        // distinguish points that are always among the k nearest)
+        let labels = [1, 0, 1, 0, 1, 0];
+        let k = 4;
+        let m = sti_one_test_sorted(&labels, 1, k);
+        // columns 2..=k+1 (1-based) all equal column k+2's predecessor chain
+        let c2 = m.get(0, 1);
+        for j in 2..=k {
+            assert_eq!(m.get(0, j), c2, "column {} differs", j + 1);
+        }
+    }
+
+    #[test]
+    fn averaged_matrix_is_symmetric_with_nonneg_diagonal() {
+        let mut rng = Rng::new(42);
+        let n = 20;
+        let d = 3;
+        let t = 7;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let m = sti_knn(&train_x, &train_y, d, &test_x, &test_y, &StiParams::new(5));
+        assert!(m.is_symmetric(0.0));
+        assert!(m.diagonal().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn partial_linearity_matches_full() {
+        // Eq. (9): summing two disjoint partials == one full run.
+        let mut rng = Rng::new(3);
+        let n = 15;
+        let d = 2;
+        let t = 6;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(3) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(3) as i32).collect();
+        let params = StiParams::new(4);
+
+        let (mut a, wa) =
+            sti_knn_partial(&train_x, &train_y, d, &test_x[..3 * d], &test_y[..3], &params);
+        let (b, wb) =
+            sti_knn_partial(&train_x, &train_y, d, &test_x[3 * d..], &test_y[3..], &params);
+        a.add_assign(&b);
+        a.scale(1.0 / (wa + wb));
+        let full = sti_knn(&train_x, &train_y, d, &test_x, &test_y, &params);
+        assert!(a.max_abs_diff(&full) < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "k <= n")]
+    fn k_greater_than_n_is_rejected() {
+        sti_one_test_sorted(&[1, 0, 1], 1, 4);
+    }
+
+    #[test]
+    fn n_equals_2_minimal_case() {
+        let m = sti_one_test_sorted(&[1, 1], 1, 1);
+        // φ_{1,2} = -2(2-1)/(2·1)·u(α_2) = -1·1 = -1
+        assert!((m.get(0, 1) + 1.0).abs() < 1e-15);
+        assert_eq!(m.get(0, 0), 1.0); // main term u(1) = 1/k = 1
+    }
+}

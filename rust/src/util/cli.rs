@@ -1,0 +1,253 @@
+//! Declarative command-line parsing substrate (no clap in the offline
+//! image). Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options with defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification for one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed argument set for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| CliError(format!("--{name}={s}: {e}"))),
+        }
+    }
+
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        self.parse_as::<T>(name)?
+            .ok_or_else(|| CliError(format!("missing required option --{name}")))
+    }
+}
+
+/// A command: name, help, options. Parse an argv slice against it.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let d = match (o.is_flag, o.default) {
+                (true, _) => " (flag)".to_string(),
+                (false, Some(d)) => format!(" (default: {d})"),
+                (false, None) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+
+    /// Parse argv (not including the subcommand name itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{key} takes no value")));
+                    }
+                    args.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // check required
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !args.values.contains_key(o.name) {
+                return Err(CliError(format!(
+                    "missing required option --{}\n\n{}",
+                    o.name,
+                    self.usage()
+                )));
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("value", "compute data values")
+            .opt("dataset", "dataset name", "circle")
+            .opt("k", "KNN parameter", "5")
+            .req("out", "output path")
+            .flag("verbose", "log more")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&["--out", "x.csv"])).unwrap();
+        assert_eq!(a.get("dataset"), Some("circle"));
+        assert_eq!(a.require::<usize>("k").unwrap(), 5);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = cmd()
+            .parse(&argv(&["--k=9", "--verbose", "--out=o", "--dataset", "moon"]))
+            .unwrap();
+        assert_eq!(a.require::<usize>("k").unwrap(), 9);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("dataset"), Some("moon"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = cmd().parse(&argv(&[])).unwrap_err();
+        assert!(e.0.contains("--out"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = cmd().parse(&argv(&["--out=o", "--bogus", "1"])).unwrap_err();
+        assert!(e.0.contains("bogus"));
+    }
+
+    #[test]
+    fn bad_parse_type_errors() {
+        let a = cmd().parse(&argv(&["--out=o", "--k", "abc"])).unwrap();
+        assert!(a.require::<usize>("k").is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["--out=o", "extra1", "extra2"])).unwrap();
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn usage_mentions_all_options() {
+        let u = cmd().usage();
+        for name in ["dataset", "k", "out", "verbose"] {
+            assert!(u.contains(name));
+        }
+    }
+}

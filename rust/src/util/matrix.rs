@@ -1,0 +1,249 @@
+//! Dense row-major f64 matrix — the interaction-matrix container.
+//!
+//! Deliberately minimal: the library only needs construction, indexed
+//! access, elementwise combination, triangle reductions and (for the
+//! analysis suite) row extraction. No linear algebra beyond that.
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] += v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Two adjacent mutable rows (i, i+1) — used by the 2-row-blocked
+    /// assembly sweep in `shapley::sti_knn` (§Perf).
+    #[inline]
+    pub fn rows2_mut(&mut self, i: usize) -> (&mut [f64], &mut [f64]) {
+        debug_assert!(i + 1 < self.rows);
+        let (a, b) = self.data[i * self.cols..].split_at_mut(self.cols);
+        (a, &mut b[..self.cols])
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// self += other (elementwise).
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += w * other.
+    pub fn add_scaled(&mut self, other: &Matrix, w: f64) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += w * b;
+        }
+    }
+
+    /// self *= s (elementwise).
+    pub fn scale(&mut self, s: f64) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Mean of all entries.
+    pub fn mean(&self) -> f64 {
+        self.sum() / (self.rows * self.cols) as f64
+    }
+
+    /// Sum over the upper triangle INCLUDING the diagonal (the quantity the
+    /// STI efficiency axiom constrains — see DESIGN.md §1).
+    pub fn upper_triangle_sum(&self) -> f64 {
+        assert_eq!(self.rows, self.cols, "square only");
+        let mut acc = 0.0;
+        for i in 0..self.rows {
+            for j in i..self.cols {
+                acc += self.get(i, j);
+            }
+        }
+        acc
+    }
+
+    /// Strict upper-triangle entries (i < j), flattened.
+    pub fn upper_triangle_entries(&self) -> Vec<f64> {
+        assert_eq!(self.rows, self.cols, "square only");
+        let mut out = Vec::with_capacity(self.rows * (self.rows - 1) / 2);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                out.push(self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Diagonal entries.
+    pub fn diagonal(&self) -> Vec<f64> {
+        assert_eq!(self.rows, self.cols, "square only");
+        (0..self.rows).map(|i| self.get(i, i)).collect()
+    }
+
+    /// Max |a - b| over entries.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Max |a| over entries.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|a| a.abs()).fold(0.0, f64::max)
+    }
+
+    /// Is the matrix symmetric within `tol`?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self.get(i, j) - self.get(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Reorder rows and columns by `perm` (out[i][j] = self[perm[i]][perm[j]]).
+    pub fn permuted(&self, perm: &[usize]) -> Matrix {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(perm.len(), self.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(i, j, self.get(perm[i], perm[j]));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+    }
+
+    #[test]
+    fn add_scaled_and_scale() {
+        let mut a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0]);
+        a.add_scaled(&b, 0.5);
+        assert_eq!(a.data(), &[6.0, 12.0, 18.0, 24.0]);
+        a.scale(2.0);
+        assert_eq!(a.get(0, 0), 12.0);
+    }
+
+    #[test]
+    fn upper_triangle_sum_includes_diagonal() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 99.0, 3.0]);
+        assert_eq!(m.upper_triangle_sum(), 6.0);
+    }
+
+    #[test]
+    fn upper_triangle_entries_strict() {
+        let m = Matrix::from_vec(3, 3, vec![0.0, 1.0, 2.0, 9.0, 0.0, 3.0, 9.0, 9.0, 0.0]);
+        assert_eq!(m.upper_triangle_entries(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn symmetry_check() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(m.is_symmetric(0.0));
+        let m2 = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.5, 1.0]);
+        assert!(!m2.is_symmetric(0.1));
+        assert!(m2.is_symmetric(1.0));
+    }
+
+    #[test]
+    fn permuted_reorders_rows_and_cols() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = m.permuted(&[1, 0]);
+        assert_eq!(p.data(), &[4.0, 3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_validates_shape() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built in-repo (the offline image vendors only the
+//! `xla` crate closure — no clap/serde/rand/proptest/criterion), see
+//! DESIGN.md §3.
+
+pub mod cli;
+pub mod json;
+pub mod matrix;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

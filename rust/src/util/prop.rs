@@ -1,0 +1,166 @@
+//! Property-based testing harness (no proptest in the offline image).
+//!
+//! A property is a closure over a [`Gen`] that panics on violation. The
+//! runner executes it for many seeds; on failure it re-runs with the same
+//! seed under decreasing `size` to report the smallest reproduction it
+//! can find (size-based shrinking: generators are asked for smaller
+//! structures rather than shrinking produced values — simpler, and in
+//! practice small sizes reproduce rank/ordering bugs reliably).
+
+use super::rng::Rng;
+
+/// Generation context handed to properties: a PRNG plus a size budget.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive, biased toward the low end as `size`
+    /// shrinks.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = (hi - lo).min(self.size.max(1));
+        lo + self.rng.below(span + 1)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    /// Vector of labels in 0..classes.
+    pub fn labels(&mut self, n: usize, classes: usize) -> Vec<i32> {
+        (0..n).map(|_| self.rng.below(classes) as i32).collect()
+    }
+
+    /// n×d feature matrix with standard-normal entries, flattened row-major.
+    pub fn features(&mut self, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| self.rng.normal() as f32).collect()
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` for `cases` seeds at the default size. Panics with the
+/// smallest discovered failing (seed, size) and the original panic text.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    if let Some(f) = check_quiet(cases, 24, &prop) {
+        panic!(
+            "property '{name}' failed: seed={} size={} — {}\n\
+             reproduce with: Gen {{ rng: Rng::new({}), size: {} }}",
+            f.seed, f.size, f.message, f.seed, f.size
+        );
+    }
+}
+
+/// Like [`check`] but returns the failure instead of panicking (used by the
+/// harness's own tests).
+pub fn check_quiet(
+    cases: u64,
+    size: usize,
+    prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe),
+) -> Option<PropFailure> {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        if let Some(msg) = run_one(seed, size, prop) {
+            // shrink: retry the same seed at smaller sizes, keep the smallest
+            // size that still fails.
+            let mut best = PropFailure {
+                seed,
+                size,
+                message: msg,
+            };
+            let mut s = size / 2;
+            while s >= 2 {
+                match run_one(seed, s, prop) {
+                    Some(msg) => {
+                        best = PropFailure {
+                            seed,
+                            size: s,
+                            message: msg,
+                        };
+                        s /= 2;
+                    }
+                    None => break,
+                }
+            }
+            return Some(best);
+        }
+    }
+    None
+}
+
+fn run_one(
+    seed: u64,
+    size: usize,
+    prop: &(impl Fn(&mut Gen) + std::panic::RefUnwindSafe),
+) -> Option<String> {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            size,
+        };
+        prop(&mut g);
+    });
+    match result {
+        Ok(()) => None,
+        Err(payload) => Some(panic_message(payload)),
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("commutativity", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_is_caught_and_shrunk() {
+        // Fails whenever the generated vector has length >= 3; the shrinker
+        // should find a small failing size rather than the initial 24.
+        let failure = check_quiet(20, 24, &|g: &mut Gen| {
+            let n = g.usize_in(1, 40);
+            assert!(n < 3, "vector too long: {n}");
+        });
+        let f = failure.expect("property should fail");
+        assert!(f.size <= 24);
+        assert!(f.message.contains("vector too long"));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let n = g.usize_in(2, 30);
+            assert!((2..=30).contains(&n));
+            let ls = g.labels(n, 3);
+            assert_eq!(ls.len(), n);
+            assert!(ls.iter().all(|&l| (0..3).contains(&l)));
+            let fs = g.features(n, 2);
+            assert_eq!(fs.len(), n * 2);
+        });
+    }
+}

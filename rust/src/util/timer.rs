@@ -1,0 +1,96 @@
+//! Wall-clock timing helpers used by the bench harness and the pipeline
+//! metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall time of a closure, returning (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// A simple stopwatch with named laps, for coarse pipeline phase timing.
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Stopwatch {
+            start: now,
+            last: now,
+            laps: Vec::new(),
+        }
+    }
+
+    /// Record a lap since the previous lap (or start).
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        self.last - self.start
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Format a Duration human-readably (ns/µs/ms/s automatically).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, d) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(1));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(1));
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert!(sw.total() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+}

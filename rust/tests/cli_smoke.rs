@@ -1,0 +1,133 @@
+//! CLI smoke tests: run the built binary end-to-end for each subcommand
+//! and assert on the output contract (not just exit codes).
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_stiknn")
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn stiknn");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (stdout, _, ok) = run(&["--help"]);
+    assert!(ok);
+    for sub in ["value", "analyze", "ksens", "mislabel", "datasets", "artifacts"] {
+        assert!(stdout.contains(sub), "help missing {sub}: {stdout}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails_with_help() {
+    let (_, stderr, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn datasets_lists_table1() {
+    let (stdout, _, ok) = run(&["datasets"]);
+    assert!(ok);
+    for name in ["circle", "moon", "fashionmnist", "apsfailure", "wind"] {
+        assert!(stdout.contains(name), "{stdout}");
+    }
+}
+
+#[test]
+fn value_computes_and_writes_csv() {
+    let out = std::env::temp_dir().join("stiknn_cli_phi.csv");
+    let _ = std::fs::remove_file(&out);
+    let (stdout, stderr, ok) = run(&[
+        "value", "--dataset", "moon", "--n-train", "50", "--n-test", "12",
+        "--k", "3", "--out", out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("dataset=moon"));
+    assert!(stdout.contains("throughput"));
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(text.lines().count(), 50, "50x50 matrix rows");
+}
+
+#[test]
+fn analyze_prints_axioms_and_blocks() {
+    let (stdout, stderr, ok) = run(&[
+        "analyze", "--dataset", "circle", "--n-train", "80", "--n-test", "20",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("efficiency"));
+    assert!(stdout.contains("OK"));
+    assert!(stdout.contains("class-block structure"));
+    assert!(stdout.contains("interaction heatmap"));
+}
+
+#[test]
+fn ksens_reports_correlations() {
+    let (stdout, stderr, ok) = run(&[
+        "ksens", "--dataset", "moon", "--n-train", "60", "--n-test", "15",
+        "--ks", "3,5",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("min pairwise Pearson"));
+    assert!(stdout.contains("paper threshold"));
+}
+
+#[test]
+fn mislabel_reports_metrics() {
+    let (stdout, stderr, ok) = run(&[
+        "mislabel", "--dataset", "circle", "--n-train", "100", "--n-test", "25",
+        "--flip", "0.1",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("AUC"));
+    assert!(stdout.contains("flipped 10 of 10"), "{stdout}"); // 100 or 101 (circle pairs)
+}
+
+#[test]
+fn bad_engine_is_rejected() {
+    let (_, stderr, ok) = run(&[
+        "value", "--dataset", "moon", "--n-train", "20", "--n-test", "5",
+        "--engine", "cuda", "--out", "-",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("rust or xla"));
+}
+
+#[test]
+fn k_larger_than_artifact_grid_falls_back_with_clear_error() {
+    // xla engine with a shape that has no artifact must tell the user how
+    // to fix it (this also covers the no-artifacts-built environment)
+    let (_, stderr, ok) = run(&[
+        "value", "--dataset", "moon", "--n-train", "33", "--n-test", "5",
+        "--engine", "xla", "--out", "-",
+    ]);
+    assert!(!ok);
+    assert!(
+        stderr.contains("make artifacts") || stderr.contains("--engine rust"),
+        "unhelpful error: {stderr}"
+    );
+}
+
+#[test]
+fn artifacts_subcommand_lists_manifest_when_present() {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json");
+    if !manifest.exists() {
+        eprintln!("SKIP: no artifacts built");
+        return;
+    }
+    let (stdout, _, ok) = run(&["artifacts"]);
+    assert!(ok);
+    assert!(stdout.contains("sti_n600_d2_b32_k5"));
+}

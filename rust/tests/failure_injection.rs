@@ -1,0 +1,119 @@
+//! Failure injection: corrupt artifacts, malformed manifests, and
+//! mid-pipeline errors must fail fast with actionable errors — never
+//! hang, never return partial results silently.
+
+use std::path::PathBuf;
+
+use stiknn::coordinator::{run_job_with_engine, ValuationJob};
+use stiknn::data::load_dataset;
+use stiknn::runtime::{Engine, Manifest, StiExecutor};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("stiknn_failure_tests").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write_manifest(dir: &PathBuf, entries: &str) {
+    std::fs::write(
+        dir.join("manifest.json"),
+        format!(
+            r#"{{"version":1,"interchange":"hlo-text","artifacts":[{entries}]}}"#
+        ),
+    )
+    .unwrap();
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_not_execute() {
+    let dir = tmpdir("corrupt_hlo");
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule garbage\n%%%not hlo%%%").unwrap();
+    write_manifest(
+        &dir,
+        r#"{"name":"sti_bad","file":"bad.hlo.txt","program":"sti","n":8,"d":2,"b":2,"k":3}"#,
+    );
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.find("sti", 8, 2, 3).unwrap();
+    let err = StiExecutor::new(&manifest, spec);
+    assert!(err.is_err(), "corrupt HLO must not compile");
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("bad.hlo.txt") || msg.contains("sti_bad"), "{msg}");
+}
+
+#[test]
+fn truncated_manifest_is_rejected() {
+    let dir = tmpdir("truncated");
+    std::fs::write(dir.join("manifest.json"), r#"{"version":1,"interch"#).unwrap();
+    let err = Manifest::load(&dir);
+    assert!(err.is_err());
+}
+
+#[test]
+fn manifest_missing_fields_rejected() {
+    let dir = tmpdir("missing_fields");
+    std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+    write_manifest(&dir, r#"{"name":"x","file":"x.hlo.txt","program":"sti","n":8}"#);
+    let err = Manifest::load(&dir);
+    assert!(err.is_err());
+    assert!(format!("{:#}", err.err().unwrap()).contains("'d'"));
+}
+
+#[test]
+fn xla_job_with_corrupt_artifact_fails_fast_without_hanging() {
+    // end-to-end: the coordinator must surface the compile error from a
+    // worker thread and terminate (fail fast), not deadlock
+    let dir = tmpdir("pipeline_corrupt");
+    std::fs::write(dir.join("bad.hlo.txt"), "not even hlo").unwrap();
+    write_manifest(
+        &dir,
+        r#"{"name":"sti_bad","file":"bad.hlo.txt","program":"sti","n":50,"d":2,"b":4,"k":3}"#,
+    );
+    let ds = load_dataset("moon", 50, 12, 3).unwrap();
+    let job = ValuationJob::new(3).with_engine(Engine::Xla).with_workers(2);
+    let start = std::time::Instant::now();
+    let res = run_job_with_engine(&ds, &job, &dir);
+    assert!(res.is_err(), "corrupt artifact must fail the job");
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(30),
+        "fail-fast took too long"
+    );
+}
+
+#[test]
+fn shape_mismatch_is_detected_before_execution() {
+    // a valid artifact asked to run the wrong train size must refuse
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.find("sti", 32, 2, 3).unwrap();
+    let exec = StiExecutor::new(&manifest, spec).unwrap();
+    // wrong n
+    let bad = exec.run_block(&[0.0; 20 * 2], &[0; 20], &[0.0; 2], &[0]);
+    let msg = format!("{:#}", bad.err().expect("shape mismatch must error"));
+    assert!(msg.contains("does not match artifact"), "{msg}");
+    // oversized test block
+    let bad = exec.run_block(&[0.0; 32 * 2], &[0; 32], &[0.0; 9 * 2], &[0; 9]);
+    let msg = format!("{:#}", bad.err().expect("block overflow must error"));
+    assert!(msg.contains("out of range"), "{msg}");
+    // empty test block
+    let bad = exec.run_block(&[0.0; 32 * 2], &[0; 32], &[], &[]);
+    assert!(bad.is_err());
+}
+
+#[test]
+fn wrong_program_type_is_refused() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let spec = manifest.find("knn_shapley", 64, 2, 5).unwrap();
+    let exec = StiExecutor::new(&manifest, spec).unwrap();
+    let bad = exec.run_block(&[0.0; 64 * 2], &[0; 64], &[0.0; 2], &[0]);
+    assert!(format!("{:#}", bad.err().unwrap()).contains("run_block on a knn_shapley"));
+}

@@ -1,0 +1,201 @@
+//! Property-based tests of the paper's mathematical claims, driven by the
+//! in-repo prop harness (util::prop): Algorithm 1 against brute-force
+//! Eq. (3) and every §3.2 structural invariant, over randomized datasets.
+
+use stiknn::knn::distance::{argsort_by_distance, distances, Metric};
+use stiknn::shapley::knn_shapley::knn_shapley_one_test_sorted;
+use stiknn::shapley::sii::sii_one_test_sorted;
+use stiknn::shapley::sti_exact::{
+    exact_one_test_sorted, sii_weight, sti_exact_one_test_sorted,
+};
+use stiknn::shapley::sti_knn::{sti_knn, sti_one_test_sorted, StiParams};
+use stiknn::util::prop::{check, Gen};
+
+/// PROP-1: Algorithm 1 ≡ brute-force Eq. (3), any labels, any k ≤ n.
+#[test]
+fn prop_sti_knn_equals_bruteforce() {
+    check("sti == brute", 60, |g: &mut Gen| {
+        let n = g.usize_in(2, 11);
+        let k = g.usize_in(1, n);
+        let classes = g.usize_in(2, 4);
+        let labels = g.labels(n, classes);
+        let y = g.rng.below(classes) as i32;
+        let fast = sti_one_test_sorted(&labels, y, k);
+        let exact = sti_exact_one_test_sorted(&labels, y, k);
+        let err = fast.max_abs_diff(&exact);
+        assert!(err < 1e-12, "n={n} k={k} labels={labels:?} y={y}: err={err:.2e}");
+    });
+}
+
+/// PROP-2: same for the SII variant (§3.2's "similar algorithms" claim).
+#[test]
+fn prop_sii_equals_bruteforce() {
+    check("sii == brute", 40, |g: &mut Gen| {
+        let n = g.usize_in(2, 10);
+        let k = g.usize_in(1, n);
+        let labels = g.labels(n, 2);
+        let y = g.rng.below(2) as i32;
+        let fast = sii_one_test_sorted(&labels, y, k);
+        let exact = exact_one_test_sorted(&labels, y, k, sii_weight);
+        assert!(
+            fast.max_abs_diff(&exact) < 1e-12,
+            "n={n} k={k} labels={labels:?} y={y}"
+        );
+    });
+}
+
+/// PROP-3: efficiency — upper triangle incl. diagonal sums to u(N).
+#[test]
+fn prop_efficiency_axiom() {
+    check("efficiency", 80, |g: &mut Gen| {
+        let n = g.usize_in(2, 40);
+        let k = g.usize_in(1, n);
+        let labels = g.labels(n, 3);
+        let y = g.rng.below(3) as i32;
+        let m = sti_one_test_sorted(&labels, y, k);
+        let v_n = labels
+            .iter()
+            .take(k)
+            .filter(|&&l| l == y)
+            .count() as f64
+            / k as f64;
+        assert!(
+            (m.upper_triangle_sum() - v_n).abs() < 1e-10,
+            "n={n} k={k}: {} vs {v_n}",
+            m.upper_triangle_sum()
+        );
+    });
+}
+
+/// PROP-4: column equality (Eq. 8) and symmetry for one test point.
+#[test]
+fn prop_column_equality_and_symmetry() {
+    check("columns", 60, |g: &mut Gen| {
+        let n = g.usize_in(3, 30);
+        let k = g.usize_in(1, n);
+        let labels = g.labels(n, 2);
+        let m = sti_one_test_sorted(&labels, 1, k);
+        assert!(m.is_symmetric(0.0));
+        for j in 1..n {
+            for i in 1..j {
+                assert_eq!(m.get(i, j), m.get(0, j), "column {j} not constant");
+            }
+        }
+    });
+}
+
+/// PROP-5: STI pair values relate to KNN-Shapley per-point values through
+/// efficiency — both decompositions sum to the same v(N).
+#[test]
+fn prop_sti_and_knn_shapley_share_total() {
+    check("totals agree", 60, |g: &mut Gen| {
+        let n = g.usize_in(2, 35);
+        let k = g.usize_in(1, n);
+        let labels = g.labels(n, 2);
+        let y = g.rng.below(2) as i32;
+        let sti = sti_one_test_sorted(&labels, y, k);
+        let pts = knn_shapley_one_test_sorted(&labels, y, k);
+        assert!(
+            (sti.upper_triangle_sum() - pts.iter().sum::<f64>()).abs() < 1e-10,
+            "n={n} k={k}"
+        );
+    });
+}
+
+/// PROP-6: metric invariance — STI depends only on distance RANKS, so
+/// uniformly scaling all features (a monotone transform of squared
+/// euclidean distances) leaves the matrix unchanged.
+#[test]
+fn prop_scale_invariance() {
+    check("rank invariance", 40, |g: &mut Gen| {
+        let n = g.usize_in(2, 20);
+        let d = g.usize_in(1, 4);
+        let k = g.usize_in(1, n);
+        let tx = g.features(n, d);
+        let ty = g.labels(n, 2);
+        let sx = g.features(3, d);
+        let sy = g.labels(3, 2);
+        let params = StiParams::new(k);
+        let a = sti_knn(&tx, &ty, d, &sx, &sy, &params);
+        let scaled: Vec<f32> = tx.iter().map(|v| v * 7.5).collect();
+        let sscaled: Vec<f32> = sx.iter().map(|v| v * 7.5).collect();
+        let b = sti_knn(&scaled, &ty, d, &sscaled, &sy, &params);
+        assert!(a.max_abs_diff(&b) < 1e-12, "not scale invariant");
+    });
+}
+
+/// PROP-7: permutation equivariance — relabeling train indices permutes
+/// the matrix accordingly.
+#[test]
+fn prop_permutation_equivariance() {
+    check("permutation equivariance", 30, |g: &mut Gen| {
+        let n = g.usize_in(3, 15);
+        let d = 2;
+        let k = g.usize_in(1, n);
+        let tx = g.features(n, d);
+        let ty = g.labels(n, 2);
+        let sx = g.features(2, d);
+        let sy = g.labels(2, 2);
+        let perm = g.rng.permutation(n);
+        let mut ptx = vec![0.0f32; n * d];
+        let mut pty = vec![0i32; n];
+        for (new, &old) in perm.iter().enumerate() {
+            ptx[new * d..(new + 1) * d].copy_from_slice(&tx[old * d..(old + 1) * d]);
+            pty[new] = ty[old];
+        }
+        let params = StiParams::new(k);
+        let base = sti_knn(&tx, &ty, d, &sx, &sy, &params);
+        let permuted = sti_knn(&ptx, &pty, d, &sx, &sy, &params);
+        // permuted[a][b] should equal base[perm[a]][perm[b]]
+        let expected = base.permuted(&perm);
+        assert!(
+            permuted.max_abs_diff(&expected) < 1e-12,
+            "n={n} k={k} perm={perm:?}"
+        );
+    });
+}
+
+/// PROP-8: ties in distance are broken stably (duplicated train points
+/// must not corrupt rank computation).
+#[test]
+fn prop_duplicate_points_stable() {
+    check("duplicate stability", 30, |g: &mut Gen| {
+        let n = g.usize_in(4, 16);
+        let d = 2;
+        let mut tx = g.features(n, d);
+        // duplicate point 0 onto points 1 and 2
+        for c in 1..3 {
+            for j in 0..d {
+                tx[c * d + j] = tx[j];
+            }
+        }
+        let q = g.features(1, d);
+        let dists = distances(&q, &tx, d, Metric::SqEuclidean);
+        let order = argsort_by_distance(&dists);
+        let r0 = order.iter().position(|&o| o == 0).unwrap();
+        let r1 = order.iter().position(|&o| o == 1).unwrap();
+        let r2 = order.iter().position(|&o| o == 2).unwrap();
+        assert!(r0 < r1 && r1 < r2, "tie-break unstable: {r0} {r1} {r2}");
+    });
+}
+
+/// PROP-9: Corollary 1 scale effect — multiplying k divides the
+/// superdiagonal increments, so max|φ| decreases (weakly) in k for
+/// fixed labels.
+#[test]
+fn prop_scale_shrinks_with_k() {
+    check("corollary 1", 40, |g: &mut Gen| {
+        let n = g.usize_in(6, 30);
+        let labels = g.labels(n, 2);
+        let k1 = g.usize_in(1, n / 2);
+        let k2 = (k1 * 2).min(n);
+        let m1 = sti_one_test_sorted(&labels, 1, k1);
+        let m2 = sti_one_test_sorted(&labels, 1, k2);
+        let s1: f64 = m1.upper_triangle_entries().iter().map(|v| v.abs()).sum();
+        let s2: f64 = m2.upper_triangle_entries().iter().map(|v| v.abs()).sum();
+        assert!(
+            s2 <= s1 + 1e-12,
+            "n={n} k1={k1} k2={k2}: sum|phi| grew {s1} -> {s2}"
+        );
+    });
+}
