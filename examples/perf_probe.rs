@@ -1,12 +1,15 @@
 //! Perf probe for the §Perf pass: isolates the STI-KNN hot path at the
-//! shapes the optimization log tracks. Not a paper experiment.
+//! shapes the optimization log tracks, single-threaded and through the
+//! banded coordinator. Not a paper experiment.
 //!
 //!     cargo run --release --example perf_probe
 
+use stiknn::coordinator::{run_job, Assembly, ValuationJob};
 use stiknn::data::load_dataset;
 use stiknn::shapley::sti_knn::{sti_knn, StiParams};
 
 fn main() {
+    // single-threaded kernel
     for (n, t, k, reps) in [(600usize, 300usize, 5usize, 5u32), (1600, 64, 5, 3)] {
         let ds = load_dataset("circle", n, t, 5).unwrap();
         let params = StiParams::new(k);
@@ -21,7 +24,30 @@ fn main() {
         let per = t0.elapsed() / reps;
         let cells = (n * n / 2) as f64 * t as f64;
         println!(
-            "n={n} t={t} k={k}: {per:?}/run  {:.2} ns/pair-cell",
+            "single-thread n={n} t={t} k={k}: {per:?}/run  {:.2} ns/pair-cell",
+            per.as_nanos() as f64 / cells
+        );
+    }
+
+    // banded coordinator: same kernel, O(n²) memory, scaling with workers
+    let (n, t, k) = (1600usize, 128usize, 5usize);
+    let ds = load_dataset("circle", n, t, 5).unwrap();
+    let cells = (n * n / 2) as f64 * t as f64;
+    for workers in [1usize, 2, 4, 8] {
+        let job = ValuationJob::new(k)
+            .with_workers(workers)
+            .with_block_size(32)
+            .with_assembly(Assembly::RowBanded { band_rows: 0 });
+        let _ = run_job(&ds, &job).unwrap(); // warmup
+        let t0 = std::time::Instant::now();
+        let reps = 3u32;
+        for _ in 0..reps {
+            std::hint::black_box(run_job(&ds, &job).unwrap());
+        }
+        let per = t0.elapsed() / reps;
+        println!(
+            "banded n={n} t={t} k={k} workers={workers}: {per:?}/run  \
+             {:.2} ns/pair-cell  (1 shared accumulator)",
             per.as_nanos() as f64 / cells
         );
     }

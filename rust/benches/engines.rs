@@ -1,59 +1,119 @@
-//! Engine comparison: pure-Rust Algorithm 1 vs the AOT XLA artifact
-//! (L1 Pallas + L2 JAX compiled through PJRT) on artifact shapes —
-//! same numbers, different substrates (EXPERIMENTS.md §E2E / §Perf).
-//!
-//! Requires `make artifacts`.
+//! Engine comparison on artifact shapes: the pure-Rust Algorithm 1 under
+//! both assembly strategies (row-banded shared accumulator vs legacy
+//! test-sharded private accumulators), and — when `make artifacts` has
+//! run AND the build has the `xla` feature — the AOT XLA artifact
+//! (L1 Pallas + L2 JAX compiled through PJRT): same numbers, different
+//! substrates (EXPERIMENTS.md §E2E / §Perf).
 //!
 //!     cargo bench --bench engines
 
 use std::path::Path;
 use stiknn::bench::{quick, Suite};
+use stiknn::coordinator::{run_job, Assembly, ValuationJob};
+use stiknn::data::Dataset;
 use stiknn::report::table::Table;
 use stiknn::runtime::{executor_for, Manifest};
 use stiknn::shapley::sti_knn::{sti_knn_partial, StiParams};
 use stiknn::util::rng::Rng;
 
-fn main() {
-    let dir = Path::new("artifacts");
-    let Ok(manifest) = Manifest::load(dir) else {
-        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
-        return;
+/// Synthetic dataset at an artifact shape (the registry twins don't cover
+/// arbitrary (n, d, b) combinations).
+fn shaped_dataset(n: usize, d: usize, t: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let ds = Dataset {
+        name: format!("shaped_n{n}_d{d}"),
+        d,
+        classes: 2,
+        train_x: (0..n * d).map(|_| rng.normal() as f32).collect(),
+        train_y: (0..n).map(|_| rng.below(2) as i32).collect(),
+        test_x: (0..t * d).map(|_| rng.normal() as f32).collect(),
+        test_y: (0..t).map(|_| rng.below(2) as i32).collect(),
     };
+    ds.validate();
+    ds
+}
 
+fn main() {
     let mut suite = Suite::new("engines on artifact shapes").with_config(quick());
-    let mut table = Table::new(&["shape", "rust", "xla", "xla/rust", "max|Δ|"]);
 
-    for spec in manifest.of_program("sti") {
-        let (n, d, b, k) = (spec.n, spec.d, spec.b, spec.k);
-        let mut rng = Rng::new(7);
-        let tx: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
-        let ty: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
-        let sx: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
-        let sy: Vec<i32> = (0..b).map(|_| rng.below(2) as i32).collect();
-
-        let params = StiParams::new(k);
-        let mr = suite.bench(&format!("rust {}", spec.name), || {
-            sti_knn_partial(&tx, &ty, d, &sx, &sy, &params)
+    // ---- rust engine: banded vs test-sharded coordinator ----------------
+    let mut rust_table = Table::new(&["shape", "banded", "sharded", "sharded/banded", "max|Δ|"]);
+    for (n, d, t, k) in [(600usize, 2usize, 128usize, 5usize), (1200, 8, 64, 5)] {
+        let ds = shaped_dataset(n, d, t, 7);
+        let banded_job = ValuationJob::new(k)
+            .with_workers(4)
+            .with_assembly(Assembly::RowBanded { band_rows: 0 });
+        let sharded_job = ValuationJob::new(k)
+            .with_workers(4)
+            .with_assembly(Assembly::TestSharded);
+        let mb = suite.bench(&format!("rust banded  n={n} d={d}"), || {
+            run_job(&ds, &banded_job).unwrap()
         });
-        let rust_secs = mr.mean_secs();
-
-        let exec = executor_for(&manifest, "sti", n, d, k).unwrap();
-        let mx = suite.bench(&format!("xla  {}", spec.name), || {
-            exec.run_block(&tx, &ty, &sx, &sy).unwrap()
+        let ms = suite.bench(&format!("rust sharded n={n} d={d}"), || {
+            run_job(&ds, &sharded_job).unwrap()
         });
-        let xla_secs = mx.mean_secs();
-
-        let (phi_r, _) = sti_knn_partial(&tx, &ty, d, &sx, &sy, &params);
-        let (phi_x, _) = exec.run_block(&tx, &ty, &sx, &sy).unwrap();
-
-        table.row(&[
-            format!("n={n} d={d} b={b} k={k}"),
-            stiknn::util::timer::fmt_duration(mr.mean),
-            stiknn::util::timer::fmt_duration(mx.mean),
-            format!("{:.1}x", xla_secs / rust_secs),
-            format!("{:.1e}", phi_r.max_abs_diff(&phi_x)),
+        let phi_b = run_job(&ds, &banded_job).unwrap().phi;
+        let phi_s = run_job(&ds, &sharded_job).unwrap().phi;
+        rust_table.row(&[
+            format!("n={n} d={d} t={t} k={k}"),
+            stiknn::util::timer::fmt_duration(mb.mean),
+            stiknn::util::timer::fmt_duration(ms.mean),
+            format!("{:.2}x", ms.mean_secs() / mb.mean_secs()),
+            format!("{:.1e}", phi_b.max_abs_diff(&phi_s)),
         ]);
     }
+
+    // ---- xla engine (needs artifacts + the `xla` build feature) ---------
+    let dir = Path::new("artifacts");
+    let mut xla_table = Table::new(&["shape", "rust", "xla", "xla/rust", "max|Δ|"]);
+    let mut xla_rows = false;
+    match Manifest::load(dir) {
+        Err(_) => eprintln!("artifacts/ missing — run `make artifacts` for the XLA comparison"),
+        Ok(manifest) => {
+            for spec in manifest.of_program("sti") {
+                let (n, d, b, k) = (spec.n, spec.d, spec.b, spec.k);
+                let exec = match executor_for(&manifest, "sti", n, d, k) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("skipping XLA comparison: {e:#}");
+                        break;
+                    }
+                };
+                let ds = shaped_dataset(n, d, b, 7);
+                let params = StiParams::new(k);
+                let mr = suite.bench(&format!("rust {}", spec.name), || {
+                    sti_knn_partial(&ds.train_x, &ds.train_y, d, &ds.test_x, &ds.test_y, &params)
+                });
+                let mx = suite.bench(&format!("xla  {}", spec.name), || {
+                    exec.run_block(&ds.train_x, &ds.train_y, &ds.test_x, &ds.test_y)
+                        .unwrap()
+                });
+                let (phi_r, _) =
+                    sti_knn_partial(&ds.train_x, &ds.train_y, d, &ds.test_x, &ds.test_y, &params);
+                let (phi_x, _) = exec
+                    .run_block(&ds.train_x, &ds.train_y, &ds.test_x, &ds.test_y)
+                    .unwrap();
+                xla_table.row(&[
+                    format!("n={n} d={d} b={b} k={k}"),
+                    stiknn::util::timer::fmt_duration(mr.mean),
+                    stiknn::util::timer::fmt_duration(mx.mean),
+                    format!("{:.1}x", mx.mean_secs() / mr.mean_secs()),
+                    format!("{:.1e}", phi_r.max_abs_diff(&phi_x)),
+                ]);
+                xla_rows = true;
+            }
+        }
+    }
+
     println!("{}", suite.render());
-    println!("\nengine comparison per block (EXPERIMENTS.md §Perf L2):\n{}", table.render());
+    println!(
+        "\nrust assembly comparison (EXPERIMENTS.md §Perf L3):\n{}",
+        rust_table.render()
+    );
+    if xla_rows {
+        println!(
+            "\nengine comparison per block (EXPERIMENTS.md §Perf L2):\n{}",
+            xla_table.render()
+        );
+    }
 }

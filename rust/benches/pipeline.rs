@@ -1,39 +1,76 @@
-//! L3 coordinator throughput: worker/block-size sweep on the end-to-end
-//! valuation pipeline (rust engine) — the scaling behaviour the perf pass
-//! optimizes (EXPERIMENTS.md §Perf).
+//! L3 coordinator throughput: assembly-strategy / worker / block-size
+//! sweep on the end-to-end valuation pipeline (rust engine) — the scaling
+//! behaviour the perf pass optimizes (EXPERIMENTS.md §Perf).
+//!
+//! Compares the row-banded assembly (one shared n×n accumulator, O(n²)
+//! memory) against the legacy test-sharded assembly (private accumulator
+//! per worker, O(W·n²) memory + O(shards·n²) merge).
 //!
 //!     cargo bench --bench pipeline
 
 use stiknn::bench::{quick, Suite};
-use stiknn::coordinator::{run_job, ValuationJob};
+use stiknn::coordinator::{run_job, Assembly, ValuationJob};
 use stiknn::data::load_dataset;
 use stiknn::report::table::Table;
 
 fn main() {
     let ds = load_dataset("circle", 600, 300, 5).unwrap();
     let k = 5;
+    let n = ds.n_train();
 
     let mut suite = Suite::new("pipeline (circle n=600, t=300, k=5)").with_config(quick());
-    let mut table = Table::new(&["workers", "block", "mean wall", "speedup vs 1 worker"]);
-    let mut base = None;
-    for workers in [1usize, 2, 4, 8] {
-        for block in [8usize, 32] {
-            let job = ValuationJob::new(k).with_workers(workers).with_block_size(block);
-            let m = suite.bench(&format!("workers={workers} block={block}"), || {
-                run_job(&ds, &job).unwrap()
-            });
-            let secs = m.mean_secs();
-            if workers == 1 && block == 32 {
-                base = Some(secs);
+    let mut table = Table::new(&[
+        "assembly",
+        "workers",
+        "block",
+        "mean wall",
+        "speedup vs 1 worker",
+        "accumulators",
+    ]);
+    for (label, assembly) in [
+        ("banded", Assembly::RowBanded { band_rows: 0 }),
+        ("sharded", Assembly::TestSharded),
+    ] {
+        let mut base = None;
+        for workers in [1usize, 2, 4, 8] {
+            for block in [8usize, 32] {
+                let job = ValuationJob::new(k)
+                    .with_workers(workers)
+                    .with_block_size(block)
+                    .with_assembly(assembly);
+                let m = suite.bench(
+                    &format!("{label} workers={workers} block={block}"),
+                    || run_job(&ds, &job).unwrap(),
+                );
+                let secs = m.mean_secs();
+                if workers == 1 && block == 32 {
+                    base = Some(secs);
+                }
+                // n×n f64 accumulators alive at peak: 1 for banded (by
+                // construction — the WeightMerger holds no matrices); for
+                // sharded, one per worker in flight plus every buffered
+                // partial in the Merger (all shards, worst case).
+                let accs = match assembly {
+                    Assembly::RowBanded { .. } => "1".to_string(),
+                    Assembly::TestSharded => {
+                        format!("≤{}", workers + ds.n_test().div_ceil(block))
+                    }
+                };
+                table.row(&[
+                    label.to_string(),
+                    workers.to_string(),
+                    block.to_string(),
+                    stiknn::util::timer::fmt_duration(m.mean),
+                    base.map(|b| format!("{:.2}x", b / secs)).unwrap_or_default(),
+                    accs,
+                ]);
             }
-            table.row(&[
-                workers.to_string(),
-                block.to_string(),
-                stiknn::util::timer::fmt_duration(m.mean),
-                base.map(|b| format!("{:.2}x", b / secs)).unwrap_or_default(),
-            ]);
         }
     }
     println!("{}", suite.render());
-    println!("\nscaling table (EXPERIMENTS.md §Perf L3):\n{}", table.render());
+    println!(
+        "\nscaling table (EXPERIMENTS.md §Perf L3; accumulator column = n×n \
+         f64 matrices alive at peak, n={n}):\n{}",
+        table.render()
+    );
 }

@@ -6,6 +6,10 @@
 //! complexity discussion), empirical log-log slopes, and the t-scaling
 //! series (linear in t; §3.2 "Effect of t on the complexity").
 //!
+//! Also writes `BENCH_scaling.json` (raw measurements + fitted slopes +
+//! verdicts) — the machine-readable perf-trajectory artifact CI uploads
+//! per commit so regressions show up as a series, not an anecdote.
+//!
 //!     cargo bench --bench scaling
 
 use stiknn::bench::{quick, Suite};
@@ -14,6 +18,7 @@ use stiknn::report::table::Table;
 use stiknn::shapley::knn_shapley::knn_shapley;
 use stiknn::shapley::sti_exact::sti_exact;
 use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+use stiknn::util::json::Json;
 use stiknn::util::stats::loglog_slope;
 
 fn main() {
@@ -83,31 +88,24 @@ fn main() {
     let lnb: Vec<f64> = brute_times.iter().map(|t| t.ln()).collect();
     let (b_slope, _) = stiknn::util::stats::linfit(&bnsf, &lnb);
 
+    // single source of truth for the claims: (json key, table label,
+    // expected label, expected value, measured, accepted range)
+    let verdicts = [
+        ("sti_knn_n_slope", "STI-KNN ~ n^2", "slope 2.0", 2.0, sti_slope, (1.7, 2.4)),
+        ("knn_shapley_n_slope", "KNN-Shapley ~ n log n", "slope ~1.1", 1.1, ks_slope, (0.8, 1.5)),
+        ("sti_knn_t_slope", "STI-KNN linear in t", "slope 1.0", 1.0, t_slope, (0.8, 1.2)),
+        ("brute_force_ln_slope", "brute force ~ 2^n", "ln-slope ~0.69", 0.69, b_slope, (0.5, 0.9)),
+    ];
+
     let mut t = Table::new(&["claim", "expected", "measured", "verdict"]);
-    t.row(&[
-        "STI-KNN ~ n^2".into(),
-        "slope 2.0".into(),
-        format!("{sti_slope:.2}"),
-        pass(1.7 <= sti_slope && sti_slope <= 2.4),
-    ]);
-    t.row(&[
-        "KNN-Shapley ~ n log n".into(),
-        "slope ~1.1".into(),
-        format!("{ks_slope:.2}"),
-        pass(0.8 <= ks_slope && ks_slope <= 1.5),
-    ]);
-    t.row(&[
-        "STI-KNN linear in t".into(),
-        "slope 1.0".into(),
-        format!("{t_slope:.2}"),
-        pass(0.8 <= t_slope && t_slope <= 1.2),
-    ]);
-    t.row(&[
-        "brute force ~ 2^n".into(),
-        "ln-slope ~0.69".into(),
-        format!("{b_slope:.2}"),
-        pass(0.5 <= b_slope && b_slope <= 0.9),
-    ]);
+    for &(_, label, expected_label, _, measured, (lo, hi)) in &verdicts {
+        t.row(&[
+            label.into(),
+            expected_label.into(),
+            format!("{measured:.2}"),
+            pass(lo <= measured && measured <= hi),
+        ]);
+    }
     println!("\ncomplexity verdicts (EXPERIMENTS.md SEC3.2-C):\n{}", t.render());
 
     // crossover: at what n does brute force become slower than STI-KNN's
@@ -119,6 +117,31 @@ fn main() {
         "extrapolated: brute force exceeds STI-KNN's n={n_big} wall time already at n ≈ {cross:.0} \
          (the paper's 'no real-world applications at this level')"
     );
+
+    // machine-readable artifact: raw suites + fitted slopes + verdicts
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("scaling")),
+        ("suites", Json::arr([suite.to_json(), brute.to_json(), tsuite.to_json()])),
+        (
+            "slopes",
+            Json::arr(verdicts.iter().map(
+                |&(name, _, _, expected, measured, (lo, hi))| {
+                    Json::obj(vec![
+                        ("name", Json::str(name)),
+                        ("expected", Json::num(expected)),
+                        ("measured", Json::num(measured)),
+                        ("pass", Json::Bool(lo <= measured && measured <= hi)),
+                    ])
+                },
+            )),
+        ),
+        ("brute_crossover_n", Json::num(cross)),
+    ]);
+    let out = "BENCH_scaling.json";
+    match std::fs::write(out, artifact.to_string()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }
 
 fn pass(ok: bool) -> String {

@@ -3,6 +3,7 @@
 //! Used by every target under `rust/benches/` (`harness = false`).
 
 use crate::report::table::Table;
+use crate::util::json::Json;
 use crate::util::timer::fmt_duration;
 use std::time::{Duration, Instant};
 
@@ -20,6 +21,19 @@ pub struct Measurement {
 impl Measurement {
     pub fn mean_secs(&self) -> f64 {
         self.mean.as_secs_f64()
+    }
+
+    /// Machine-readable form, for bench artifacts (e.g. BENCH_scaling.json
+    /// — the perf-trajectory record CI uploads per commit).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_secs", Json::num(self.mean.as_secs_f64())),
+            ("median_secs", Json::num(self.median.as_secs_f64())),
+            ("p99_secs", Json::num(self.p99.as_secs_f64())),
+            ("min_secs", Json::num(self.min.as_secs_f64())),
+        ])
     }
 }
 
@@ -116,6 +130,17 @@ impl Suite {
         &self.results
     }
 
+    /// The suite's measurements as a JSON object (title + results array).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|m| m.to_json())),
+            ),
+        ])
+    }
+
     /// Render the suite as an aligned table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&["benchmark", "mean", "median", "p99", "min", "iters"]);
@@ -156,6 +181,25 @@ mod tests {
         assert!(m.min <= m.median && m.median <= m.p99);
         let table = s.render();
         assert!(table.contains("spin"));
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let mut s = Suite::new("json").with_config(BenchConfig {
+            min_time: Duration::from_millis(1),
+            max_iters: 2,
+            warmup_iters: 0,
+        });
+        s.bench("noop", || 1);
+        let j = s.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("json"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("noop"));
+        assert!(results[0].get("mean_secs").unwrap().as_f64().unwrap() >= 0.0);
+        // serializes to parseable JSON text
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok(), "{text}");
     }
 
     #[test]

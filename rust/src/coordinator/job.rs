@@ -1,10 +1,28 @@
-//! Valuation job and result types, plus the sharding plan.
+//! Valuation job and result types, plus the sharding/banding plans.
 
 use crate::data::Dataset;
 use crate::knn::distance::Metric;
 use crate::runtime::Engine;
 use crate::util::matrix::Matrix;
 use std::time::Duration;
+
+/// How the Rust engine parallelizes the Phase-2 assembly sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Assembly {
+    /// Legacy path: each worker runs `sti_knn_partial` on its test shard
+    /// and holds a PRIVATE n×n accumulator; the merger sums the partial
+    /// matrices in shard order. Peak memory O(W·n²) for W workers, merge
+    /// cost O(shards·n²).
+    TestSharded,
+    /// Banded path (default): ONE shared n×n accumulator, partitioned into
+    /// disjoint row bands `[r_lo, r_hi)`; prep workers parallelize Phase 1
+    /// over test blocks, band workers sweep Phase 2 concurrently into
+    /// their own rows. Peak memory O(n²) independent of worker count, and
+    /// results are bit-identical to the single-threaded engine (band
+    /// boundaries cannot reorder any cell's `row[j] += v` sequence).
+    /// `band_rows = 0` picks triangle-area-balanced bands, one per worker.
+    RowBanded { band_rows: usize },
+}
 
 /// A complete valuation request against one dataset.
 #[derive(Clone, Debug)]
@@ -18,6 +36,8 @@ pub struct ValuationJob {
     pub metric: Metric,
     /// Bounded-queue capacity as a multiple of `workers` (backpressure).
     pub queue_factor: usize,
+    /// Phase-2 parallelization strategy for the Rust engine.
+    pub assembly: Assembly,
 }
 
 impl ValuationJob {
@@ -31,6 +51,7 @@ impl ValuationJob {
                 .unwrap_or(4),
             metric: Metric::SqEuclidean,
             queue_factor: 2,
+            assembly: Assembly::RowBanded { band_rows: 0 },
         }
     }
 
@@ -49,6 +70,17 @@ impl ValuationJob {
         self
     }
 
+    pub fn with_assembly(mut self, assembly: Assembly) -> Self {
+        self.assembly = assembly;
+        self
+    }
+
+    /// Shorthand for `with_assembly(Assembly::RowBanded { band_rows })`.
+    pub fn with_band_rows(mut self, band_rows: usize) -> Self {
+        self.assembly = Assembly::RowBanded { band_rows };
+        self
+    }
+
     /// Shard the test set into [lo, hi) block ranges.
     pub fn plan_shards(&self, n_test: usize) -> Vec<(usize, usize)> {
         assert!(n_test > 0, "empty test set");
@@ -57,6 +89,64 @@ impl ValuationJob {
             .map(|i| (i * b, ((i + 1) * b).min(n_test)))
             .collect()
     }
+
+    /// Partition the n accumulator rows into bands for the banded
+    /// assembly. With explicit `band_rows` > 0 the bands are uniform in
+    /// height (the last may be short when `band_rows` does not divide n);
+    /// with `band_rows == 0` the boundaries are placed so each band gets
+    /// an (approximately) equal share of the upper-triangle sweep work
+    /// Σ_i (n − i) — equal HEIGHTS would leave the first band with most of
+    /// the triangle — with one band per worker.
+    ///
+    /// Each band costs one sweep thread and one queue, so `band_rows` is
+    /// treated as a LOWER bound on band height: the planner widens bands
+    /// as needed to keep the band count within ~4× the worker count
+    /// (`--band-rows 1` on a million-row train set must not try to spawn
+    /// a million threads). The result never depends on which rows land in
+    /// which band — any partition is bit-identical (DESIGN.md §7).
+    pub fn plan_bands(&self, n_train: usize) -> Vec<(usize, usize)> {
+        assert!(n_train > 0, "empty train set");
+        match self.assembly {
+            Assembly::RowBanded { band_rows } if band_rows > 0 => {
+                let max_bands = (self.workers.max(1) * 4).max(8);
+                let b = band_rows
+                    .clamp(1, n_train)
+                    .max(n_train.div_ceil(max_bands));
+                (0..n_train.div_ceil(b))
+                    .map(|i| (i * b, ((i + 1) * b).min(n_train)))
+                    .collect()
+            }
+            _ => plan_balanced_bands(n_train, self.workers),
+        }
+    }
+}
+
+/// Triangle-area-balanced band boundaries: row i costs (n − i) sweep
+/// cells (its upper-triangle run plus the diagonal), so bands are closed
+/// greedily as cumulative cost crosses each 1/nb quantile. Every band is
+/// non-empty and the bands partition [0, n).
+pub fn plan_balanced_bands(n: usize, nbands: usize) -> Vec<(usize, usize)> {
+    assert!(n > 0);
+    let nb = nbands.clamp(1, n);
+    let total = (n * (n + 1) / 2) as f64;
+    let mut out = Vec::with_capacity(nb);
+    let mut lo = 0usize;
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        acc += (n - i) as f64;
+        let closed = out.len();
+        let remaining_rows = n - i - 1;
+        let remaining_bands = nb - closed - 1;
+        if closed + 1 < nb
+            && (acc >= total * (closed + 1) as f64 / nb as f64
+                || remaining_rows == remaining_bands)
+        {
+            out.push((lo, i + 1));
+            lo = i + 1;
+        }
+    }
+    out.push((lo, n));
+    out
 }
 
 /// The outcome of a valuation job.
@@ -91,7 +181,7 @@ pub struct Shard {
     pub hi: usize,
 }
 
-/// The partial result a worker produces for one shard.
+/// The partial result a worker produces for one shard (test-sharded path).
 pub struct PartialResult {
     pub index: usize,
     pub phi_sum: Matrix,
@@ -136,5 +226,70 @@ mod tests {
     #[should_panic(expected = "empty test set")]
     fn empty_test_set_panics() {
         ValuationJob::new(3).plan_shards(0);
+    }
+
+    #[test]
+    fn uniform_bands_cover_rows_even_when_height_does_not_divide_n() {
+        let job = ValuationJob::new(3).with_band_rows(7);
+        for n in [1usize, 6, 7, 8, 20, 23] {
+            let bands = job.plan_bands(n);
+            assert_eq!(bands[0].0, 0);
+            assert_eq!(bands.last().unwrap().1, n);
+            for w in bands.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap/overlap at {w:?}");
+            }
+            assert!(bands.iter().all(|&(lo, hi)| hi > lo && hi - lo <= 7));
+        }
+    }
+
+    #[test]
+    fn balanced_bands_partition_and_balance_triangle_area() {
+        for (n, nb) in [(600usize, 4usize), (601, 7), (10, 3), (5, 8), (1, 1)] {
+            let bands = plan_balanced_bands(n, nb);
+            assert_eq!(bands.len(), nb.min(n));
+            assert_eq!(bands[0].0, 0);
+            assert_eq!(bands.last().unwrap().1, n);
+            for w in bands.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            assert!(bands.iter().all(|&(lo, hi)| hi > lo));
+            if n >= 100 && nb > 1 {
+                // area balance: no band more than 2x the ideal share
+                let ideal = (n * (n + 1) / 2) as f64 / bands.len() as f64;
+                for &(lo, hi) in &bands {
+                    let area: usize = (lo..hi).map(|i| n - i).sum();
+                    assert!(
+                        (area as f64) < 2.0 * ideal,
+                        "band ({lo},{hi}) area {area} vs ideal {ideal}"
+                    );
+                }
+                // equal-height split would give the first band far more
+                // area than the last; balanced bands must not
+                let first: usize = (bands[0].0..bands[0].1).map(|i| n - i).sum();
+                let last_band = bands[bands.len() - 1];
+                let last: usize = (last_band.0..last_band.1).map(|i| n - i).sum();
+                assert!(
+                    (first as f64) < 1.6 * last as f64,
+                    "unbalanced: first {first} last {last}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_bands_track_worker_count() {
+        let job = ValuationJob::new(3).with_workers(5);
+        assert_eq!(job.plan_bands(100).len(), 5);
+        let sharded = job.with_assembly(Assembly::TestSharded);
+        // plan_bands is still meaningful (the banded runner owns the call)
+        assert_eq!(sharded.plan_bands(100).len(), 5);
+    }
+
+    #[test]
+    fn default_assembly_is_banded_auto() {
+        assert_eq!(
+            ValuationJob::new(2).assembly,
+            Assembly::RowBanded { band_rows: 0 }
+        );
     }
 }

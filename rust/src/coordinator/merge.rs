@@ -1,10 +1,21 @@
-//! Deterministic merge of per-shard partial sums.
+//! Deterministic merge of per-shard partial results.
 //!
 //! Eq. (9) is linear over the test set, so the global matrix is
-//! Σ_blocks phi_sum / Σ_blocks weight. Floating-point addition is not
-//! associative, so to make results bit-identical regardless of worker
-//! count and completion order the merger buffers partials and reduces
-//! them in block-index order.
+//! Σ_blocks phi_sum / Σ_blocks weight.
+//!
+//! Two mergers, one per assembly mode (DESIGN.md §7):
+//!
+//! * [`Merger`] — the test-sharded path's matrix merger. Floating-point
+//!   addition is not associative, so to make results bit-identical
+//!   regardless of worker count and completion order it buffers the
+//!   partial MATRICES and reduces them in block-index order: O(shards·n²)
+//!   merge work on top of the O(W·n²) worker accumulators.
+//! * [`WeightMerger`] — the row-banded path's bookkeeping. Band workers
+//!   write the shared accumulator directly, so nothing matrix-shaped ever
+//!   reaches the merger: it only tracks per-block weights (integer counts
+//!   of test points — exactly associative) and completeness. This is what
+//!   makes the banded coordinator's peak memory O(n²) BY CONSTRUCTION:
+//!   the one accumulator in `run_rust` is the only n×n allocation.
 
 use super::job::PartialResult;
 use crate::util::matrix::Matrix;
@@ -61,6 +72,57 @@ impl Merger {
         assert!(weight > 0.0, "zero total weight");
         m.scale(1.0 / weight);
         (m, weight)
+    }
+}
+
+/// Weight bookkeeping for the banded assembly: tracks which test blocks
+/// have been prepared and their total weight. No matrices pass through —
+/// the shared accumulator is written in place by the band workers.
+pub struct WeightMerger {
+    seen: Vec<bool>,
+    weight: f64,
+}
+
+impl WeightMerger {
+    pub fn new(expected_blocks: usize) -> Self {
+        WeightMerger {
+            seen: vec![false; expected_blocks],
+            weight: 0.0,
+        }
+    }
+
+    /// Record one block's weight. Panics on duplicate or out-of-range
+    /// indices (pipeline invariant violations).
+    pub fn push(&mut self, index: usize, weight: f64) {
+        assert!(
+            index < self.seen.len(),
+            "block index {index} out of range"
+        );
+        assert!(
+            !self.seen[index],
+            "block {index} delivered twice — pipeline bug"
+        );
+        self.seen[index] = true;
+        self.weight += weight;
+    }
+
+    pub fn received(&self) -> usize {
+        self.seen.iter().filter(|&&s| s).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.seen.iter().all(|&s| s)
+    }
+
+    /// Total weight across all blocks. Panics if any block is missing or
+    /// the total is not positive.
+    pub fn finalize(self) -> f64 {
+        assert!(!self.seen.is_empty(), "no blocks");
+        if let Some(missing) = self.seen.iter().position(|&s| !s) {
+            panic!("block {missing} missing at finalize");
+        }
+        assert!(self.weight > 0.0, "zero total weight");
+        self.weight
     }
 }
 
@@ -129,5 +191,33 @@ mod tests {
         m.push(partial(0, 1.0, 1.0));
         m.push(partial(2, 1.0, 1.0));
         assert!(m.is_complete());
+    }
+
+    #[test]
+    fn weight_merger_sums_and_tracks_completeness() {
+        let mut m = WeightMerger::new(3);
+        assert!(!m.is_complete());
+        m.push(2, 7.0);
+        m.push(0, 32.0);
+        assert_eq!(m.received(), 2);
+        m.push(1, 32.0);
+        assert!(m.is_complete());
+        assert_eq!(m.finalize(), 71.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "delivered twice")]
+    fn weight_merger_rejects_duplicates() {
+        let mut m = WeightMerger::new(2);
+        m.push(0, 1.0);
+        m.push(0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing at finalize")]
+    fn weight_merger_detects_missing_blocks() {
+        let mut m = WeightMerger::new(2);
+        m.push(1, 4.0);
+        let _ = m.finalize();
     }
 }

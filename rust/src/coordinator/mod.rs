@@ -1,15 +1,24 @@
 //! Layer-3 coordinator: the streaming data-valuation pipeline.
 //!
 //! A valuation job shards the test set into blocks, feeds them through a
-//! bounded work queue (backpressure) to a pool of workers, and merges the
-//! per-block partial sums deterministically (Eq. 9 linearity over the
-//! test set makes the merge an exact weighted sum — results are
-//! bit-identical regardless of worker count or arrival order because the
-//! merger sums in block-index order).
+//! bounded work queue (backpressure) to a pool of workers, and combines
+//! the per-block work deterministically. Two assembly strategies exist
+//! for the Rust engine (see [`Assembly`]):
+//!
+//! * **Row-banded** (default): prep workers run the O(n log n) Phase 1
+//!   per test block; band workers sweep prepared blocks — in block order —
+//!   into disjoint row bands of ONE shared n×n accumulator. Peak memory
+//!   is O(n²) independent of worker count, the merger reduces to weight
+//!   bookkeeping, and results are bit-identical to the single-threaded
+//!   engine for any worker count, block size, or band layout.
+//! * **Test-sharded** (legacy): each worker accumulates a private n×n
+//!   partial matrix; the merger sums them in block-index order — results
+//!   are bit-identical across worker counts for a fixed block size, at
+//!   O(W·n²) peak memory.
 //!
 //! * [`pool`]    — thread pool + bounded channel substrate
-//! * [`job`]     — job/result types and sharding plan
-//! * [`merge`]   — deterministic partial-sum reduction
+//! * [`job`]     — job/result types, sharding and band plans
+//! * [`merge`]   — deterministic partial reduction / weight bookkeeping
 //! * [`pipeline`] — the orchestrator wiring it all together
 //! * [`progress`] — atomic counters / throughput metrics
 
@@ -19,5 +28,5 @@ pub mod pipeline;
 pub mod pool;
 pub mod progress;
 
-pub use job::{ValuationJob, ValuationResult};
+pub use job::{Assembly, ValuationJob, ValuationResult};
 pub use pipeline::{run_job, run_job_with_engine};

@@ -2,24 +2,38 @@
 //! merge.
 //!
 //! Engine dispatch:
-//! * `Engine::Rust` — each worker runs the pure-Rust Algorithm 1 on its
-//!   shard (scales linearly with cores; see benches/pipeline.rs).
+//! * `Engine::Rust` — two assembly strategies (see [`Assembly`]):
+//!   - `RowBanded` (default): Phase 1 (`prepare_batch`, O(n log n) per
+//!     test point) is parallelized over test blocks by a prep pool; each
+//!     prepared block is published IN BLOCK ORDER to every band worker,
+//!     which sweeps it (`sweep_band`, O(block·band·n)) into its own
+//!     disjoint row band of ONE shared n×n accumulator. Peak memory is
+//!     O(n²) + O(in-flight blocks · block · n) regardless of worker
+//!     count, there is no matrix merge at all, and results are
+//!     bit-identical to single-threaded `sti_knn` for any worker count
+//!     or band layout (per-cell addition order never changes).
+//!   - `TestSharded` (legacy): each worker runs the pure-Rust Algorithm 1
+//!     on its shard with a private accumulator; the merger sums partial
+//!     matrices in shard order. O(W·n²) memory, kept for comparison
+//!     benches and as the shape of the XLA path.
 //! * `Engine::Xla`  — each worker owns a [`StiExecutor`] compiled from the
 //!   matching AOT artifact (one PJRT client per worker; the CPU plugin
 //!   serializes execution per client, so per-worker clients are what
 //!   gives real parallelism).
 
-use super::job::{shards_for, PartialResult, Shard, ValuationJob, ValuationResult};
-use super::merge::Merger;
+use super::job::{shards_for, Assembly, PartialResult, Shard, ValuationJob, ValuationResult};
+use super::merge::{Merger, WeightMerger};
 use super::pool::{run_workers, Bounded};
 
 use super::progress::{Progress, ThroughputMeter};
 use crate::data::Dataset;
 use crate::runtime::{executor_for, Engine, Manifest, StiExecutor};
-use crate::shapley::sti_knn::{sti_knn_partial, StiParams};
+use crate::shapley::sti_knn::{prepare_batch, sti_knn_partial, sweep_band, PreparedBatch, StiParams};
+use crate::util::matrix::Matrix;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Run a valuation job with the pure-Rust engine (no artifacts needed).
 pub fn run_job(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
@@ -41,6 +55,206 @@ pub fn run_job_with_engine(
 }
 
 fn run_rust(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    match job.assembly {
+        Assembly::RowBanded { .. } => run_rust_banded(ds, job),
+        Assembly::TestSharded => run_rust_test_sharded(ds, job),
+    }
+}
+
+/// In-order publication buffer: prep workers finish blocks in any order;
+/// band workers must receive them in block order (so every accumulator
+/// row sees the same addition sequence as a single-threaded run).
+/// Occupancy is bounded by the publication window (prep workers wait on
+/// the paired condvar when they run too far ahead of the oldest
+/// unpublished block), so one straggling block cannot balloon memory.
+struct Reorder {
+    next: usize,
+    aborted: bool,
+    pending: BTreeMap<usize, Arc<PreparedBatch>>,
+}
+
+/// Panic containment for the banded pipeline (INV-3): if any worker
+/// unwinds — a prepare/sweep assert, a poisoned lock — this guard closes
+/// every queue and wakes every waiter on its way out, so peers drain and
+/// exit, `thread::scope` joins them, and the panic propagates to the
+/// caller instead of deadlocking the run.
+struct AbortOnPanic<'a> {
+    prep_queue: &'a Bounded<Shard>,
+    band_queues: &'a [Bounded<Arc<PreparedBatch>>],
+    reorder: &'a Mutex<Reorder>,
+    reorder_cv: &'a Condvar,
+}
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.prep_queue.close();
+            for q in self.band_queues {
+                q.close();
+            }
+            let mut rb = match self.reorder.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            rb.aborted = true;
+            drop(rb);
+            self.reorder_cv.notify_all();
+        }
+    }
+}
+
+/// Row-banded assembly: ONE n×n accumulator for the whole job — the only
+/// matrix this function allocates, independent of `job.workers`.
+fn run_rust_banded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    let params = StiParams {
+        k: job.k,
+        metric: job.metric,
+    };
+    let n = ds.n_train();
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let shards = shards_for(job, ds);
+    let n_blocks = shards.len();
+    let bands = job.plan_bands(n);
+    let merger = Mutex::new(WeightMerger::new(n_blocks));
+    let prep_queue: Bounded<Shard> = Bounded::new(job.workers * job.queue_factor.max(1));
+    let band_queues: Vec<Bounded<Arc<PreparedBatch>>> = bands
+        .iter()
+        .map(|_| Bounded::new(2 * job.queue_factor.max(1)))
+        .collect();
+    let reorder = Mutex::new(Reorder {
+        next: 0,
+        aborted: false,
+        pending: BTreeMap::new(),
+    });
+    let reorder_cv = Condvar::new();
+    // Publication window: a prep worker whose block index is this far
+    // ahead of the oldest unpublished block waits instead of preparing,
+    // bounding the reorder buffer to O(window · block · n) memory even
+    // when one block straggles (the FIFO shard queue guarantees the
+    // oldest unpublished block is always already with a worker, so the
+    // window can never wedge).
+    let window = job.workers + 2 * job.queue_factor.max(1);
+
+    let mut acc = Matrix::zeros(n, n);
+    // Split the accumulator into per-band row slices; each band worker
+    // owns its slice exclusively, so no synchronization guards the sweep.
+    let mut band_slices: Vec<(usize, usize, &mut [f64])> = Vec::with_capacity(bands.len());
+    let mut rest: &mut [f64] = acc.data_mut();
+    for &(r_lo, r_hi) in &bands {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut((r_hi - r_lo) * n);
+        band_slices.push((r_lo, r_hi, head));
+        rest = tail;
+    }
+
+    std::thread::scope(|s| {
+        // Feeder: test-block shards in order (prep may still finish them
+        // out of order; the reorder buffer restores order at publication).
+        s.spawn(|| {
+            for shard in &shards {
+                if prep_queue.send(*shard).is_err() {
+                    break;
+                }
+            }
+            prep_queue.close();
+        });
+
+        // Prep pool: Phase 1 over test blocks.
+        for _w in 0..job.workers {
+            s.spawn(|| {
+                let _abort = AbortOnPanic {
+                    prep_queue: &prep_queue,
+                    band_queues: &band_queues,
+                    reorder: &reorder,
+                    reorder_cv: &reorder_cv,
+                };
+                'blocks: while let Some(shard) = prep_queue.recv() {
+                    // Reorder-buffer backpressure: don't prepare (and
+                    // allocate) a block far ahead of the oldest
+                    // unpublished one.
+                    {
+                        let mut rb = reorder.lock().unwrap();
+                        while !rb.aborted && shard.index >= rb.next + window {
+                            rb = reorder_cv.wait(rb).unwrap();
+                        }
+                        if rb.aborted {
+                            break 'blocks;
+                        }
+                    }
+                    let t0 = std::time::Instant::now();
+                    let (tx, ty) = ds.test_slice(shard.lo, shard.hi);
+                    let batch =
+                        Arc::new(prepare_batch(&ds.train_x, &ds.train_y, ds.d, tx, ty, &params));
+                    progress.record_block(shard.hi - shard.lo, t0.elapsed().as_nanos() as u64);
+                    merger.lock().unwrap().push(shard.index, batch.weight());
+                    // Publish every newly in-order block to all bands; the
+                    // reorder lock serializes publication, keeping each
+                    // band queue in strict block order.
+                    let mut rb = reorder.lock().unwrap();
+                    rb.pending.insert(shard.index, batch);
+                    loop {
+                        let key = rb.next;
+                        let Some(ready) = rb.pending.remove(&key) else {
+                            break;
+                        };
+                        rb.next += 1;
+                        for q in &band_queues {
+                            let _ = q.send(ready.clone());
+                        }
+                    }
+                    let all_published = rb.next == n_blocks;
+                    drop(rb);
+                    reorder_cv.notify_all();
+                    if all_published {
+                        for q in &band_queues {
+                            q.close();
+                        }
+                    }
+                }
+            });
+        }
+
+        // Band pool: Phase 2, one worker per disjoint row band.
+        for (band_idx, (r_lo, r_hi, slice)) in band_slices.into_iter().enumerate() {
+            let q = &band_queues[band_idx];
+            let train_y: &[i32] = &ds.train_y;
+            let prep_queue = &prep_queue;
+            let band_queues = &band_queues;
+            let reorder = &reorder;
+            let reorder_cv = &reorder_cv;
+            s.spawn(move || {
+                let _abort = AbortOnPanic {
+                    prep_queue,
+                    band_queues,
+                    reorder,
+                    reorder_cv,
+                };
+                let rows = slice;
+                while let Some(batch) = q.recv() {
+                    sweep_band(&batch, train_y, r_lo, r_hi, rows);
+                }
+            });
+        }
+    });
+
+    let weight = merger.into_inner().unwrap().finalize();
+    acc.mirror_upper_to_lower();
+    acc.scale(1.0 / weight);
+    let elapsed = meter.elapsed();
+    Ok(ValuationResult {
+        phi: acc,
+        weight,
+        blocks: n_blocks,
+        elapsed,
+        throughput: meter.rate(progress.points()),
+        engine: Engine::Rust,
+    })
+}
+
+/// Legacy test-sharded assembly: each worker's `sti_knn_partial` call
+/// allocates a private n×n accumulator (O(W·n²) peak), merged in shard
+/// order. Kept selectable for the memory/scaling comparison benches.
+fn run_rust_test_sharded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
     let params = StiParams {
         k: job.k,
         metric: job.metric,
@@ -201,17 +415,24 @@ mod tests {
             &ds.test_y,
             &StiParams::new(5),
         );
-        for workers in [1usize, 2, 4] {
-            for block in [1usize, 7, 16, 64] {
-                let job = ValuationJob::new(5)
-                    .with_workers(workers)
-                    .with_block_size(block);
-                let res = run_job(&ds, &job).unwrap();
-                assert_eq!(res.weight, 23.0);
-                assert!(
-                    res.phi.max_abs_diff(&reference) < 1e-12,
-                    "workers={workers} block={block}"
-                );
+        for assembly in [
+            Assembly::RowBanded { band_rows: 0 },
+            Assembly::RowBanded { band_rows: 13 }, // does not divide n=60
+            Assembly::TestSharded,
+        ] {
+            for workers in [1usize, 2, 4] {
+                for block in [1usize, 7, 16, 64] {
+                    let job = ValuationJob::new(5)
+                        .with_workers(workers)
+                        .with_block_size(block)
+                        .with_assembly(assembly);
+                    let res = run_job(&ds, &job).unwrap();
+                    assert_eq!(res.weight, 23.0);
+                    assert!(
+                        res.phi.max_abs_diff(&reference) < 1e-12,
+                        "assembly={assembly:?} workers={workers} block={block}"
+                    );
+                }
             }
         }
     }
@@ -231,6 +452,37 @@ mod tests {
         for i in 0..a.data().len() {
             assert_eq!(a.data()[i].to_bits(), b.data()[i].to_bits());
             assert_eq!(b.data()[i].to_bits(), c.data()[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn banded_is_bit_identical_to_single_threaded_engine() {
+        // Stronger than the test-sharded guarantee (which only promises
+        // determinism for a FIXED block size): the banded path's per-cell
+        // addition order is exactly the single-threaded engine's, so the
+        // bits match sti_knn itself for any block size and band layout.
+        let ds = load_dataset("phoneme", 70, 21, 4).unwrap();
+        let reference = sti_knn(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(3),
+        );
+        for (workers, block, band_rows) in [(2usize, 5usize, 9usize), (7, 64, 0), (3, 1, 70)] {
+            let job = ValuationJob::new(3)
+                .with_workers(workers)
+                .with_block_size(block)
+                .with_band_rows(band_rows);
+            let res = run_job(&ds, &job).unwrap();
+            for (a, b) in reference.data().iter().zip(res.phi.data()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "workers={workers} block={block} band_rows={band_rows}"
+                );
+            }
         }
     }
 

@@ -61,10 +61,16 @@ pub fn u_full(match_sorted: &[bool], k: usize) -> f64 {
 /// Eq. (1): the likelihood test score of the full train set, averaged over
 /// test points. `match_sorted_per_test[p]` is the match vector for test
 /// point p in ITS distance order.
+///
+/// Panics on an empty test set — Eq. (1) is undefined there, and the
+/// valuation engines (`shapley::sti_knn`) already reject it loudly;
+/// returning NaN here let the same condition flow silently into axiom
+/// checks and reports.
 pub fn likelihood_score(match_sorted_per_test: &[Vec<bool>], k: usize) -> f64 {
-    if match_sorted_per_test.is_empty() {
-        return f64::NAN;
-    }
+    assert!(
+        !match_sorted_per_test.is_empty(),
+        "empty test set: Eq. (1) is undefined for t = 0"
+    );
     match_sorted_per_test
         .iter()
         .map(|m| u_full(m, k))
@@ -135,6 +141,14 @@ mod tests {
     fn likelihood_score_averages() {
         let per_test = vec![vec![true, true], vec![false, false]];
         assert!((likelihood_score(&per_test, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty test set")]
+    fn likelihood_score_rejects_empty_test_set() {
+        // regression: this used to return NaN while sti_knn panicked on
+        // the same condition — the two entry points now agree
+        likelihood_score(&[], 3);
     }
 
     #[test]

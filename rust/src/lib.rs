@@ -5,8 +5,14 @@
 //! to O(tn²) for KNN models"* (STI-KNN), as a three-layer Rust + JAX +
 //! Pallas system: Pallas kernels (L1) and the JAX pipeline (L2) are AOT
 //! compiled to HLO artifacts at build time; this crate (L3) loads them via
-//! PJRT and coordinates sharded valuation jobs — Python never runs on the
-//! request path.
+//! PJRT (behind the `xla` feature) and coordinates sharded valuation jobs
+//! — Python never runs on the request path.
+//!
+//! The hot path is a two-phase engine ([`shapley::sti_knn::prepare_batch`]
+//! → [`shapley::sti_knn::sweep_band`]): the coordinator's default
+//! row-banded assembly parallelizes the O(t·n²) sweep over disjoint row
+//! bands of ONE shared accumulator — peak memory O(n²) at any worker
+//! count, bit-identical to the single-threaded engine (DESIGN.md §7).
 //!
 //! Quick start:
 //! ```no_run

@@ -16,7 +16,7 @@ use std::path::{Path, PathBuf};
 use stiknn::analysis::ksens::k_sensitivity;
 use stiknn::analysis::mislabel::{auc, mislabel_scores, precision_recall, top_prevalence_recall};
 use stiknn::analysis::structure::block_structure;
-use stiknn::coordinator::{run_job_with_engine, ValuationJob};
+use stiknn::coordinator::{run_job_with_engine, Assembly, ValuationJob};
 use stiknn::data::{corrupt, csv, load_dataset, registry_names};
 use stiknn::report::heatmap::render_heatmap;
 use stiknn::report::table::Table;
@@ -72,6 +72,16 @@ fn common_opts(cmd: Command) -> Command {
         .opt("engine", "rust | xla", "rust")
         .opt("workers", "worker threads (0 = all cores)", "0")
         .opt("block", "test points per shard", "32")
+        .opt(
+            "assembly",
+            "rust-engine sweep strategy: banded (O(n²) memory) | sharded (legacy O(W·n²))",
+            "banded",
+        )
+        .opt(
+            "band-rows",
+            "accumulator rows per band for --assembly banded (0 = auto-balanced)",
+            "0",
+        )
         .opt("artifacts", "artifacts directory", "artifacts")
 }
 
@@ -87,7 +97,16 @@ fn parse_common(args: &Args) -> anyhow::Result<(stiknn::data::Dataset, Valuation
     let block: usize = args.require("block")?;
     let ds = load_dataset(&name, n_train, n_test, seed)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
-    let mut job = ValuationJob::new(k).with_engine(engine).with_block_size(block);
+    let band_rows: usize = args.require("band-rows")?;
+    let assembly = match args.get_or("assembly", "banded").as_str() {
+        "banded" => Assembly::RowBanded { band_rows },
+        "sharded" => Assembly::TestSharded,
+        other => anyhow::bail!("--assembly must be banded or sharded, got '{other}'"),
+    };
+    let mut job = ValuationJob::new(k)
+        .with_engine(engine)
+        .with_block_size(block)
+        .with_assembly(assembly);
     if workers > 0 {
         job = job.with_workers(workers);
     }

@@ -10,10 +10,16 @@
 //! allocation-light and thread-safe behind `&self` (the PJRT client
 //! serializes execution internally; the coordinator runs one executor per
 //! worker when it wants real parallelism).
+//!
+//! The real PJRT path lives behind the `xla` cargo feature because the
+//! offline image does not vendor the `xla` crate closure; the default
+//! build compiles a stub whose constructor fails with an actionable
+//! message, so `Engine::Xla` jobs fail fast instead of failing to link
+//! (DESIGN.md §2). Everything else — the manifest contract, shape checks,
+//! the CLI and coordinator plumbing — is identical in both builds.
 
-use super::artifact::{ArtifactSpec, Manifest};
-use crate::util::matrix::Matrix;
-use anyhow::{bail, Context, Result};
+use super::artifact::Manifest;
+use anyhow::{Context, Result};
 
 /// Which computation backend a valuation job uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,142 +40,218 @@ impl Engine {
     }
 }
 
-/// A compiled STI (or KNN-Shapley) block program bound to fixed shapes.
-pub struct StiExecutor {
-    spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::super::artifact::{ArtifactSpec, Manifest};
+    use crate::util::matrix::Matrix;
+    use anyhow::{bail, Context, Result};
+
+    /// A compiled STI (or KNN-Shapley) block program bound to fixed shapes.
+    pub struct StiExecutor {
+        spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl StiExecutor {
+        /// Compile the artifact on a fresh PJRT CPU client.
+        pub fn new(manifest: &Manifest, spec: &ArtifactSpec) -> Result<StiExecutor> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Self::with_client(&client, manifest, spec)
+        }
+
+        /// Compile the artifact on an existing client (one client can host
+        /// many executables).
+        pub fn with_client(
+            client: &xla::PjRtClient,
+            manifest: &Manifest,
+            spec: &ArtifactSpec,
+        ) -> Result<StiExecutor> {
+            let path = manifest.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            Ok(StiExecutor {
+                spec: spec.clone(),
+                exe,
+            })
+        }
+
+        pub fn spec(&self) -> &ArtifactSpec {
+            &self.spec
+        }
+
+        /// Execute on one test block of size ≤ b. Returns the UNNORMALIZED
+        /// (phi_sum, weight) pair for `sti` artifacts, where phi_sum is n×n.
+        /// For `knn_shapley` artifacts use [`Self::run_values_block`].
+        pub fn run_block(
+            &self,
+            train_x: &[f32],
+            train_y: &[i32],
+            test_x: &[f32],
+            test_y: &[i32],
+        ) -> Result<(Matrix, f64)> {
+            if self.spec.program != "sti" {
+                bail!("run_block on a {} artifact", self.spec.program);
+            }
+            let outs = self.execute_padded(train_x, train_y, test_x, test_y)?;
+            let (phi_lit, w_lit) = (outs.0, outs.1);
+            let n = self.spec.n;
+            let phi_f32 = phi_lit.to_vec::<f32>().context("phi_sum to_vec")?;
+            if phi_f32.len() != n * n {
+                bail!("phi_sum has {} entries, expected {}", phi_f32.len(), n * n);
+            }
+            let phi = Matrix::from_vec(n, n, phi_f32.into_iter().map(|v| v as f64).collect());
+            let w = w_lit.to_vec::<f32>().context("weight to_vec")?[0] as f64;
+            Ok((phi, w))
+        }
+
+        /// Execute a `knn_shapley` artifact block: returns (s_sum, weight).
+        pub fn run_values_block(
+            &self,
+            train_x: &[f32],
+            train_y: &[i32],
+            test_x: &[f32],
+            test_y: &[i32],
+        ) -> Result<(Vec<f64>, f64)> {
+            if self.spec.program != "knn_shapley" {
+                bail!("run_values_block on a {} artifact", self.spec.program);
+            }
+            let outs = self.execute_padded(train_x, train_y, test_x, test_y)?;
+            let s = outs
+                .0
+                .to_vec::<f32>()
+                .context("s_sum to_vec")?
+                .into_iter()
+                .map(|v| v as f64)
+                .collect();
+            let w = outs.1.to_vec::<f32>().context("weight to_vec")?[0] as f64;
+            Ok((s, w))
+        }
+
+        fn execute_padded(
+            &self,
+            train_x: &[f32],
+            train_y: &[i32],
+            test_x: &[f32],
+            test_y: &[i32],
+        ) -> Result<(xla::Literal, xla::Literal)> {
+            let (n, d, b) = (self.spec.n, self.spec.d, self.spec.b);
+            if train_y.len() != n || train_x.len() != n * d {
+                bail!(
+                    "train shape ({}, {}) does not match artifact {} (n={n}, d={d})",
+                    train_y.len(),
+                    train_x.len(),
+                    self.spec.name
+                );
+            }
+            let t = test_y.len();
+            if t == 0 || t > b {
+                bail!("test block size {t} out of range 1..={b}");
+            }
+            if test_x.len() != t * d {
+                bail!("test_x len {} != t*d = {}", test_x.len(), t * d);
+            }
+            // pad test block to b with mask 0 (padded features replicate row 0
+            // so distances stay finite)
+            let mut px = Vec::with_capacity(b * d);
+            px.extend_from_slice(test_x);
+            let mut py = Vec::with_capacity(b);
+            py.extend_from_slice(test_y);
+            let mut mask = vec![1.0f32; t];
+            for _ in t..b {
+                px.extend_from_slice(&test_x[..d]);
+                py.push(test_y[0]);
+                mask.push(0.0);
+            }
+
+            let lit_train_x = xla::Literal::vec1(train_x).reshape(&[n as i64, d as i64])?;
+            let lit_train_y = xla::Literal::vec1(train_y);
+            let lit_test_x = xla::Literal::vec1(&px).reshape(&[b as i64, d as i64])?;
+            let lit_test_y = xla::Literal::vec1(&py);
+            let lit_mask = xla::Literal::vec1(&mask);
+
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[
+                    lit_train_x,
+                    lit_train_y,
+                    lit_test_x,
+                    lit_test_y,
+                    lit_mask,
+                ])
+                .context("PJRT execute")?[0][0]
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: (phi_sum, weight)
+            Ok(result.to_tuple2()?)
+        }
+    }
 }
 
-impl StiExecutor {
-    /// Compile the artifact on a fresh PJRT CPU client.
-    pub fn new(manifest: &Manifest, spec: &ArtifactSpec) -> Result<StiExecutor> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Self::with_client(&client, manifest, spec)
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use super::super::artifact::{ArtifactSpec, Manifest};
+    use crate::util::matrix::Matrix;
+    use anyhow::{bail, Result};
+
+    /// Stub executor for builds without the `xla` feature: construction
+    /// always fails, carrying the artifact name and path so failure modes
+    /// stay actionable (and testable) without a PJRT runtime.
+    pub struct StiExecutor {
+        spec: ArtifactSpec,
     }
 
-    /// Compile the artifact on an existing client (one client can host
-    /// many executables).
-    pub fn with_client(
-        client: &xla::PjRtClient,
-        manifest: &Manifest,
-        spec: &ArtifactSpec,
-    ) -> Result<StiExecutor> {
-        let path = manifest.path_of(spec);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", spec.name))?;
-        Ok(StiExecutor {
-            spec: spec.clone(),
-            exe,
-        })
-    }
-
-    pub fn spec(&self) -> &ArtifactSpec {
-        &self.spec
-    }
-
-    /// Execute on one test block of size ≤ b. Returns the UNNORMALIZED
-    /// (phi_sum, weight) pair for `sti` artifacts, where phi_sum is n×n.
-    /// For `knn_shapley` artifacts use [`Self::run_values_block`].
-    pub fn run_block(
-        &self,
-        train_x: &[f32],
-        train_y: &[i32],
-        test_x: &[f32],
-        test_y: &[i32],
-    ) -> Result<(Matrix, f64)> {
-        if self.spec.program != "sti" {
-            bail!("run_block on a {} artifact", self.spec.program);
-        }
-        let outs = self.execute_padded(train_x, train_y, test_x, test_y)?;
-        let (phi_lit, w_lit) = (outs.0, outs.1);
-        let n = self.spec.n;
-        let phi_f32 = phi_lit.to_vec::<f32>().context("phi_sum to_vec")?;
-        if phi_f32.len() != n * n {
-            bail!("phi_sum has {} entries, expected {}", phi_f32.len(), n * n);
-        }
-        let phi = Matrix::from_vec(n, n, phi_f32.into_iter().map(|v| v as f64).collect());
-        let w = w_lit.to_vec::<f32>().context("weight to_vec")?[0] as f64;
-        Ok((phi, w))
-    }
-
-    /// Execute a `knn_shapley` artifact block: returns (s_sum, weight).
-    pub fn run_values_block(
-        &self,
-        train_x: &[f32],
-        train_y: &[i32],
-        test_x: &[f32],
-        test_y: &[i32],
-    ) -> Result<(Vec<f64>, f64)> {
-        if self.spec.program != "knn_shapley" {
-            bail!("run_values_block on a {} artifact", self.spec.program);
-        }
-        let outs = self.execute_padded(train_x, train_y, test_x, test_y)?;
-        let s = outs
-            .0
-            .to_vec::<f32>()
-            .context("s_sum to_vec")?
-            .into_iter()
-            .map(|v| v as f64)
-            .collect();
-        let w = outs.1.to_vec::<f32>().context("weight to_vec")?[0] as f64;
-        Ok((s, w))
-    }
-
-    fn execute_padded(
-        &self,
-        train_x: &[f32],
-        train_y: &[i32],
-        test_x: &[f32],
-        test_y: &[i32],
-    ) -> Result<(xla::Literal, xla::Literal)> {
-        let (n, d, b) = (self.spec.n, self.spec.d, self.spec.b);
-        if train_y.len() != n || train_x.len() != n * d {
+    impl StiExecutor {
+        pub fn new(manifest: &Manifest, spec: &ArtifactSpec) -> Result<StiExecutor> {
+            let path = manifest.path_of(spec);
             bail!(
-                "train shape ({}, {}) does not match artifact {} (n={n}, d={d})",
-                train_y.len(),
-                train_x.len(),
+                "cannot compile artifact {} ({}): this build has no XLA/PJRT \
+                 runtime (cargo feature `xla` disabled) — rebuild with \
+                 `--features xla` and the vendored xla crate, or use \
+                 --engine rust",
+                spec.name,
+                path.display()
+            )
+        }
+
+        pub fn spec(&self) -> &ArtifactSpec {
+            &self.spec
+        }
+
+        pub fn run_block(
+            &self,
+            _train_x: &[f32],
+            _train_y: &[i32],
+            _test_x: &[f32],
+            _test_y: &[i32],
+        ) -> Result<(Matrix, f64)> {
+            bail!(
+                "artifact {}: no XLA/PJRT runtime in this build",
                 self.spec.name
-            );
-        }
-        let t = test_y.len();
-        if t == 0 || t > b {
-            bail!("test block size {t} out of range 1..={b}");
-        }
-        if test_x.len() != t * d {
-            bail!("test_x len {} != t*d = {}", test_x.len(), t * d);
-        }
-        // pad test block to b with mask 0 (padded features replicate row 0
-        // so distances stay finite)
-        let mut px = Vec::with_capacity(b * d);
-        px.extend_from_slice(test_x);
-        let mut py = Vec::with_capacity(b);
-        py.extend_from_slice(test_y);
-        let mut mask = vec![1.0f32; t];
-        for _ in t..b {
-            px.extend_from_slice(&test_x[..d]);
-            py.push(test_y[0]);
-            mask.push(0.0);
+            )
         }
 
-        let lit_train_x = xla::Literal::vec1(train_x).reshape(&[n as i64, d as i64])?;
-        let lit_train_y = xla::Literal::vec1(train_y);
-        let lit_test_x = xla::Literal::vec1(&px).reshape(&[b as i64, d as i64])?;
-        let lit_test_y = xla::Literal::vec1(&py);
-        let lit_mask = xla::Literal::vec1(&mask);
-
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit_train_x, lit_train_y, lit_test_x, lit_test_y, lit_mask])
-            .context("PJRT execute")?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: (phi_sum, weight)
-        Ok(result.to_tuple2()?)
+        pub fn run_values_block(
+            &self,
+            _train_x: &[f32],
+            _train_y: &[i32],
+            _test_x: &[f32],
+            _test_y: &[i32],
+        ) -> Result<(Vec<f64>, f64)> {
+            bail!(
+                "artifact {}: no XLA/PJRT runtime in this build",
+                self.spec.name
+            )
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::StiExecutor;
+#[cfg(not(feature = "xla"))]
+pub use stub::StiExecutor;
 
 /// Convenience: find + compile the right artifact for a dataset shape.
 pub fn executor_for(
@@ -193,4 +275,38 @@ pub fn executor_for(
         )
     })?;
     StiExecutor::new(manifest, spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        assert_eq!(Engine::parse("rust"), Some(Engine::Rust));
+        assert_eq!(Engine::parse("xla"), Some(Engine::Xla));
+        assert_eq!(Engine::parse("cuda"), None);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_constructor_fails_with_artifact_context() {
+        let dir = std::env::temp_dir().join("stiknn_executor_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"interchange":"hlo-text","artifacts":[
+                {"name":"sti_stub","file":"m.hlo.txt","program":"sti",
+                 "n":8,"d":2,"b":2,"k":3}]}"#,
+        )
+        .unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let spec = manifest.find("sti", 8, 2, 3).unwrap();
+        let err = StiExecutor::new(&manifest, spec).err().expect("stub must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sti_stub"), "{msg}");
+        assert!(msg.contains("m.hlo.txt"), "{msg}");
+        assert!(msg.contains("--engine rust"), "{msg}");
+    }
 }

@@ -11,4 +11,4 @@ pub mod sii;
 pub mod sti_exact;
 pub mod sti_knn;
 
-pub use sti_knn::{sti_knn, sti_knn_partial, StiParams};
+pub use sti_knn::{prepare_batch, sti_knn, sti_knn_partial, sweep_band, PreparedBatch, StiParams};

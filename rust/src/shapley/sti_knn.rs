@@ -21,6 +21,25 @@
 //! accumulated over the upper triangle only (the matrix is symmetric) and
 //! mirrored once at the end — this keeps the O(n²) inner loop allocation-
 //! free and sequential over the output rows.
+//!
+//! # Two-phase API
+//!
+//! The hot path is split into an explicit two-phase API so the coordinator
+//! can parallelize each phase along its natural axis without copying the
+//! n×n accumulator per worker (DESIGN.md §7):
+//!
+//! * [`prepare_batch`] — per-test O(n log n) prep (distances → ranks →
+//!   superdiagonal), embarrassingly parallel over test points; produces a
+//!   [`PreparedBatch`] of (rank, column-value) rows.
+//! * [`sweep_band`] — the O(batch·n²) select-add sweep over a row band
+//!   `[r_lo, r_hi)` of the shared accumulator. Bands partition the rows,
+//!   so concurrent sweeps into disjoint bands need no synchronization, and
+//!   because every cell lives in exactly one row, any band partition
+//!   preserves the per-cell `row[j] += v` accumulation order — results are
+//!   bit-identical to the single-threaded sweep for any band layout.
+//!
+//! [`sti_knn_partial`] is the single-threaded composition of the two
+//! phases over the full band `[0, n)`.
 
 use crate::knn::distance::{argsort_by_distance, distances_into, Metric};
 use crate::util::matrix::Matrix;
@@ -54,7 +73,7 @@ impl StiParams {
     }
 }
 
-/// Test points prepared per batch before the O(n²) sweep (§Perf): the
+/// Test points per prepared batch in the single-threaded path (§Perf): the
 /// assembly loop is memory-bound on the n×n accumulator if it streams the
 /// whole matrix once per test point, so we batch `BATCH` test points'
 /// (rank, column-value) rows and sweep the accumulator ONCE per batch,
@@ -63,25 +82,40 @@ impl StiParams {
 /// ns/pair-cell at n=600; see EXPERIMENTS.md §Perf).
 const BATCH: usize = 64;
 
-/// Reusable scratch buffers for the batched hot loop.
-struct Scratch {
-    dists: Vec<f64>,
-    c: Vec<f64>,
-    /// rank as f64, BATCH rows of n — f64 operands let LLVM lower the
-    /// inner select to vcmppd + vblendvpd + vaddpd
+/// Phase-1 output for a block of test points: everything the O(n²) sweep
+/// needs, laid out for the branchless select-add inner loop. Memory is
+/// O(len·n) — independent of how many workers later sweep it.
+pub struct PreparedBatch {
+    n: usize,
+    len: usize,
+    inv_k: f64,
+    /// rank as f64, `len` rows of n, original train order — f64 operands
+    /// let LLVM lower the inner select to vcmppd + vblendvpd + vaddpd.
     rankf: Vec<f64>,
-    /// per-point column values pre-scaled by the test weight, BATCH×n
+    /// per-point column values, `len` rows of n, original train order.
     colval: Vec<f64>,
+    /// test labels, for the diagonal main terms (Eq. 4/5).
+    test_y: Vec<i32>,
 }
 
-impl Scratch {
-    fn new(n: usize) -> Self {
-        Scratch {
-            dists: vec![0.0; n],
-            c: vec![0.0; n],
-            rankf: vec![0.0; BATCH * n],
-            colval: vec![0.0; BATCH * n],
-        }
+impl PreparedBatch {
+    /// Number of test points in the batch.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Train-set size the batch was prepared against.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Merge weight of the batch (number of test points, Eq. 9).
+    pub fn weight(&self) -> f64 {
+        self.len as f64
     }
 }
 
@@ -114,65 +148,104 @@ fn superdiagonal_into(u_sorted: &[f64], k: usize, c: &mut [f64]) {
     }
 }
 
-/// Phase 1 for one test point: distances → ranks → superdiagonal →
-/// scatter (rankf, w·colval) into batch slot `slot`; the diagonal main
-/// term is accumulated directly (it is O(n), not worth batching).
-#[allow(clippy::too_many_arguments)]
-fn prepare_one_test(
+/// Phase 1: prepare a block of test points for the O(n²) sweep — per test
+/// point, distances → ranks → superdiagonal (Eq. 6/7) → scatter to
+/// original train order. O(len·n·(d + log n)); embarrassingly parallel
+/// over test points / blocks.
+pub fn prepare_batch(
     train_x: &[f32],
     train_y: &[i32],
     d: usize,
     test_x: &[f32],
-    test_y: i32,
+    test_y: &[i32],
     params: &StiParams,
-    w: f64,
-    slot: usize,
-    scratch: &mut Scratch,
-    acc: &mut Matrix,
-) {
+) -> PreparedBatch {
     let n = train_y.len();
+    params.validate(n);
+    assert_eq!(train_x.len(), n * d, "train shape mismatch");
+    assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
+    let len = test_y.len();
     let k = params.k;
-
-    distances_into(test_x, train_x, d, params.metric, &mut scratch.dists);
-    let order = argsort_by_distance(&scratch.dists);
-
-    // u in sorted order (reuse c as the temp buffer), then the
-    // superdiagonal by rank (Eq. 6/7).
     let inv_k = 1.0 / k as f64;
-    let rank_row = &mut scratch.rankf[slot * n..(slot + 1) * n];
-    let col_row = &mut scratch.colval[slot * n..(slot + 1) * n];
-    for (r, &orig) in order.iter().enumerate() {
-        col_row[r] = if train_y[orig] == test_y { inv_k } else { 0.0 };
-    }
-    superdiagonal_into(&col_row[..n], k, &mut scratch.c);
 
-    // Scatter to original order; pre-scale column values by the test
-    // weight so the O(n²) loop is a pure select-add.
-    for (r, &orig) in order.iter().enumerate() {
-        rank_row[orig] = r as f64;
-        col_row[orig] = w * scratch.c[r];
-    }
-    // diagonal main terms (Eq. 4/5)
-    for i in 0..n {
-        if train_y[i] == test_y {
-            acc.add_at(i, i, w * inv_k);
+    let mut rankf = vec![0.0f64; len * n];
+    let mut colval = vec![0.0f64; len * n];
+    let mut dists = vec![0.0f64; n];
+    let mut c = vec![0.0f64; n];
+
+    for (slot, (q, &y)) in test_x.chunks_exact(d).zip(test_y).enumerate() {
+        distances_into(q, train_x, d, params.metric, &mut dists);
+        let order = argsort_by_distance(&dists);
+
+        let rank_row = &mut rankf[slot * n..(slot + 1) * n];
+        let col_row = &mut colval[slot * n..(slot + 1) * n];
+        // u in sorted order (reuse col_row as the temp buffer), then the
+        // superdiagonal by rank (Eq. 6/7).
+        for (r, &orig) in order.iter().enumerate() {
+            col_row[r] = if train_y[orig] == y { inv_k } else { 0.0 };
         }
+        superdiagonal_into(&col_row[..n], k, &mut c);
+        // Scatter to original order so the O(n²) loop is a pure select-add.
+        for (r, &orig) in order.iter().enumerate() {
+            rank_row[orig] = r as f64;
+            col_row[orig] = c[r];
+        }
+    }
+
+    PreparedBatch {
+        n,
+        len,
+        inv_k,
+        rankf,
+        colval,
+        test_y: test_y.to_vec(),
     }
 }
 
-/// Phase 2: the O(batch·n²) upper-triangle assembly (the Pallas-kernel
-/// twin). The batch is the MIDDLE loop so each accumulator row stays hot
-/// across all test points of the batch; the inner select is branchless
-/// over f64 operands and auto-vectorizes (AVX-512 via target-cpu=native).
-fn sweep_batch(scratch: &Scratch, batch: usize, n: usize, acc: &mut Matrix) {
+/// Phase 2: accumulate one prepared batch into the accumulator row band
+/// `[r_lo, r_hi)` — the Pallas-kernel twin. `rows` is the band's slice of
+/// the row-major accumulator, `(r_hi − r_lo)·n` long, columns in GLOBAL
+/// train order. Covers both the diagonal main terms (Eq. 4/5) for rows in
+/// the band and the upper-triangle select-add (Eq. 8); the batch is the
+/// MIDDLE loop so each accumulator row stays hot across all test points of
+/// the batch, and the inner select is branchless over f64 operands
+/// (auto-vectorizes; AVX-512 via target-cpu=native).
+///
+/// Disjoint bands may be swept concurrently; each row's per-cell addition
+/// order is (batch order, test order within batch) regardless of the band
+/// layout, so results are bit-identical to a full-band sweep.
+pub fn sweep_band(
+    batch: &PreparedBatch,
+    train_y: &[i32],
+    r_lo: usize,
+    r_hi: usize,
+    rows: &mut [f64],
+) {
+    let n = batch.n;
+    assert_eq!(train_y.len(), n, "train labels / batch mismatch");
+    assert!(r_lo < r_hi && r_hi <= n, "bad band [{r_lo}, {r_hi}) for n={n}");
+    assert_eq!(rows.len(), (r_hi - r_lo) * n, "band slice shape mismatch");
+
+    // Diagonal main terms (Eq. 4/5) for rows owned by this band. Disjoint
+    // from the upper-triangle cells, so phase order within the batch does
+    // not affect any cell's addition order.
+    for &y in &batch.test_y {
+        for i in r_lo..r_hi {
+            if train_y[i] == y {
+                rows[(i - r_lo) * n + i] += batch.inv_k;
+            }
+        }
+    }
+
+    // Upper-triangle select-add (the hot loop).
     // (A 2-row-blocked variant that shares operand streams between
     // adjacent rows was tried and reverted: −8% at n=600 but +10% at
     // n=1600 — see EXPERIMENTS.md §Perf iteration log.)
-    for i in 0..n {
-        let row = acc.row_mut(i);
-        for p in 0..batch {
-            let rankf = &scratch.rankf[p * n..(p + 1) * n];
-            let colval = &scratch.colval[p * n..(p + 1) * n];
+    for i in r_lo..r_hi {
+        let row = &mut rows[(i - r_lo) * n..(i - r_lo) * n + n];
+        for p in 0..batch.len {
+            let rankf = &batch.rankf[p * n..(p + 1) * n];
+            let colval = &batch.colval[p * n..(p + 1) * n];
             let rif = rankf[i];
             let wci = colval[i];
             for j in (i + 1)..n {
@@ -183,20 +256,10 @@ fn sweep_batch(scratch: &Scratch, batch: usize, n: usize, acc: &mut Matrix) {
     }
 }
 
-/// Copy the accumulated upper triangle into the lower triangle.
-fn mirror_lower(m: &mut Matrix) {
-    let n = m.rows();
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let v = m.get(i, j);
-            m.set(j, i, v);
-        }
-    }
-}
-
 /// Partial (unnormalized) STI-KNN over a slice of the test set: returns
 /// (Σ_p Φ(u_p), weight = number of test points). This is the unit of work
-/// the coordinator shards and merges (Eq. 9 linearity).
+/// the test-sharded coordinator path shards and merges (Eq. 9 linearity);
+/// the banded path composes [`prepare_batch`]/[`sweep_band`] itself.
 pub fn sti_knn_partial(
     train_x: &[f32],
     train_y: &[i32],
@@ -210,22 +273,11 @@ pub fn sti_knn_partial(
     assert_eq!(train_x.len(), n * d, "train shape mismatch");
     assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
     let mut acc = Matrix::zeros(n, n);
-    let mut scratch = Scratch::new(n);
-    let mut slot = 0usize;
-    for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
-        prepare_one_test(
-            train_x, train_y, d, q, y, params, 1.0, slot, &mut scratch, &mut acc,
-        );
-        slot += 1;
-        if slot == BATCH {
-            sweep_batch(&scratch, slot, n, &mut acc);
-            slot = 0;
-        }
+    for (chunk_x, chunk_y) in test_x.chunks(BATCH * d).zip(test_y.chunks(BATCH)) {
+        let batch = prepare_batch(train_x, train_y, d, chunk_x, chunk_y, params);
+        sweep_band(&batch, train_y, 0, n, acc.data_mut());
     }
-    if slot > 0 {
-        sweep_batch(&scratch, slot, n, &mut acc);
-    }
-    mirror_lower(&mut acc);
+    acc.mirror_upper_to_lower();
     (acc, test_y.len() as f64)
 }
 
@@ -315,16 +367,21 @@ mod tests {
 
     #[test]
     fn close_points_share_value_below_k_plus_1() {
-        // lines 5-9: for j <= k+1 the recursion copies (KNN cannot
-        // distinguish points that are always among the k nearest)
+        // Algorithm 1 lines 5–9: the recursion only adds the Eq. 7
+        // increment for 1-based columns j > k+1, and copies for j ≤ k+1 —
+        // KNN cannot distinguish points that are always among the k
+        // nearest, so 1-based columns 2..=k+1 (0-based 1..=k) all carry
+        // the same value.
         let labels = [1, 0, 1, 0, 1, 0];
         let k = 4;
         let m = sti_one_test_sorted(&labels, 1, k);
-        // columns 2..=k+1 (1-based) all equal column k+2's predecessor chain
-        let c2 = m.get(0, 1);
-        for j in 2..=k {
-            assert_eq!(m.get(0, j), c2, "column {} differs", j + 1);
+        let c2 = m.get(0, 1); // 1-based column 2
+        for j in 1..=k {
+            assert_eq!(m.get(0, j), c2, "1-based column {} differs", j + 1);
         }
+        // The first column past k+1 picks up the Eq. 7 increment here
+        // (u(α_6) = 0 ≠ u(α_5) = 1/k), so the shared value must stop.
+        assert_ne!(m.get(0, k + 1), c2, "column k+2 should differ");
     }
 
     #[test]
@@ -363,6 +420,74 @@ mod tests {
         a.scale(1.0 / (wa + wb));
         let full = sti_knn(&train_x, &train_y, d, &test_x, &test_y, &params);
         assert!(a.max_abs_diff(&full) < 1e-12);
+    }
+
+    #[test]
+    fn banded_sweep_is_bit_identical_to_full_sweep() {
+        // The tentpole invariant: sweeping a prepared batch band-by-band
+        // (any partition, including bands that don't divide n evenly)
+        // produces the same BITS as the full-band sweep, because every
+        // cell's addition order is unchanged.
+        let mut rng = Rng::new(17);
+        let n = 23;
+        let d = 2;
+        let t = 9;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let params = StiParams::new(4);
+        let batch = prepare_batch(&train_x, &train_y, d, &test_x, &test_y, &params);
+
+        let mut full = Matrix::zeros(n, n);
+        sweep_band(&batch, &train_y, 0, n, full.data_mut());
+
+        for bands in [vec![(0usize, 5usize), (5, 23)], vec![(0, 7), (7, 14), (14, 21), (21, 23)]] {
+            let mut banded = Matrix::zeros(n, n);
+            for &(lo, hi) in &bands {
+                let rows = &mut banded.data_mut()[lo * n..hi * n];
+                sweep_band(&batch, &train_y, lo, hi, rows);
+            }
+            for (a, b) in full.data().iter().zip(banded.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bands {bands:?} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn two_phase_composition_equals_partial() {
+        // prepare_batch + sweep_band over [0, n) in BATCH-sized chunks is
+        // exactly sti_knn_partial (which is implemented that way), and a
+        // different chunking agrees to the bit as well: chunk boundaries
+        // don't change any cell's per-test addition order.
+        let mut rng = Rng::new(29);
+        let n = 18;
+        let d = 2;
+        let t = 11;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let params = StiParams::new(3);
+
+        let (reference, w) = sti_knn_partial(&train_x, &train_y, d, &test_x, &test_y, &params);
+        assert_eq!(w, t as f64);
+
+        let mut acc = Matrix::zeros(n, n);
+        let mut weight = 0.0;
+        for chunk in [(0usize, 4usize), (4, 9), (9, 11)] {
+            let (lo, hi) = chunk;
+            let batch = prepare_batch(
+                &train_x, &train_y, d, &test_x[lo * d..hi * d], &test_y[lo..hi], &params,
+            );
+            weight += batch.weight();
+            sweep_band(&batch, &train_y, 0, n, acc.data_mut());
+        }
+        acc.mirror_upper_to_lower();
+        assert_eq!(weight, t as f64);
+        for (a, b) in reference.data().iter().zip(acc.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -64,8 +64,8 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Two adjacent mutable rows (i, i+1) — used by the 2-row-blocked
-    /// assembly sweep in `shapley::sti_knn` (§Perf).
+    /// Two adjacent mutable rows (i, i+1) — kept from the reverted
+    /// 2-row-blocked assembly sweep (EXPERIMENTS.md §Perf iteration log).
     #[inline]
     pub fn rows2_mut(&mut self, i: usize) -> (&mut [f64], &mut [f64]) {
         debug_assert!(i + 1 < self.rows);
@@ -175,6 +175,20 @@ impl Matrix {
         true
     }
 
+    /// Copy the strict upper triangle into the lower triangle, making the
+    /// matrix symmetric. The assembly engines accumulate the upper
+    /// triangle only (`shapley::sti_knn::sweep_band`) and mirror once at
+    /// the end.
+    pub fn mirror_upper_to_lower(&mut self) {
+        assert_eq!(self.rows, self.cols, "square only");
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = self.get(i, j);
+                self.set(j, i, v);
+            }
+        }
+    }
+
     /// Reorder rows and columns by `perm` (out[i][j] = self[perm[i]][perm[j]]).
     pub fn permuted(&self, perm: &[usize]) -> Matrix {
         assert_eq!(self.rows, self.cols);
@@ -232,6 +246,17 @@ mod tests {
         let m2 = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.5, 1.0]);
         assert!(!m2.is_symmetric(0.1));
         assert!(m2.is_symmetric(1.0));
+    }
+
+    #[test]
+    fn mirror_copies_upper_to_lower() {
+        let mut m = Matrix::from_vec(3, 3, vec![1.0, 2.0, 3.0, 0.0, 4.0, 5.0, 0.0, 0.0, 6.0]);
+        m.mirror_upper_to_lower();
+        assert!(m.is_symmetric(0.0));
+        assert_eq!(m.get(1, 0), 2.0);
+        assert_eq!(m.get(2, 0), 3.0);
+        assert_eq!(m.get(2, 1), 5.0);
+        assert_eq!(m.get(0, 0), 1.0);
     }
 
     #[test]

@@ -19,7 +19,6 @@ pub fn std(xs: &[f64]) -> f64 {
 /// Pearson correlation coefficient. Returns NaN for degenerate inputs.
 pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     assert_eq!(xs.len(), ys.len());
-    let n = xs.len() as f64;
     if xs.is_empty() {
         return f64::NAN;
     }
@@ -38,7 +37,7 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     if vx == 0.0 || vy == 0.0 {
         return f64::NAN;
     }
-    cov / (vx.sqrt() * vy.sqrt()) * (n / n) // keep shape explicit
+    cov / (vx.sqrt() * vy.sqrt())
 }
 
 /// Ranks with average tie-handling (for Spearman).

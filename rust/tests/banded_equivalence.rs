@@ -1,0 +1,117 @@
+//! Integration: the row-banded assembly engine is equivalent to the
+//! legacy test-sharded engine and the single-threaded reference — the
+//! acceptance contract of the O(W·n²) → O(n²) coordinator rework.
+//!
+//! Matrix of cases: worker counts {1, 2, 7} × band sizes that do NOT
+//! divide n evenly (plus auto-balanced bands), against both comparison
+//! targets, at ≤ 1e-12. The banded engine is additionally held to a
+//! STRICTER bar — bitwise equality with single-threaded `sti_knn` — since
+//! band boundaries cannot reorder any accumulator cell's `row[j] += v`
+//! sequence (shapley::sti_knn::sweep_band's contract).
+
+use stiknn::coordinator::{run_job, Assembly, ValuationJob};
+use stiknn::data::{load_dataset, Dataset};
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+use stiknn::util::matrix::Matrix;
+
+fn reference(name: &str, n: usize, t: usize, seed: u64, k: usize) -> (Dataset, Matrix) {
+    let ds = load_dataset(name, n, t, seed).unwrap();
+    let phi = sti_knn(
+        &ds.train_x,
+        &ds.train_y,
+        ds.d,
+        &ds.test_x,
+        &ds.test_y,
+        &StiParams::new(k),
+    );
+    (ds, phi)
+}
+
+#[test]
+fn banded_matches_sharded_and_single_threaded() {
+    // n = 83 is prime: NO band size divides it evenly.
+    let k = 4;
+    let (ds, single) = reference("cpu", 83, 29, 11, k);
+    for workers in [1usize, 2, 7] {
+        // sharded comparator at this worker count
+        let sharded = run_job(
+            &ds,
+            &ValuationJob::new(k)
+                .with_workers(workers)
+                .with_block_size(8)
+                .with_assembly(Assembly::TestSharded),
+        )
+        .unwrap();
+        assert!(
+            sharded.phi.max_abs_diff(&single) < 1e-12,
+            "sharded vs single-threaded, workers={workers}"
+        );
+        // band sizes that don't divide n=83: 10 (9 bands, last short),
+        // 27 (4 bands, last short), 80 (2 bands, very uneven), 0 (auto)
+        for band_rows in [10usize, 27, 80, 0] {
+            let banded = run_job(
+                &ds,
+                &ValuationJob::new(k)
+                    .with_workers(workers)
+                    .with_block_size(8)
+                    .with_band_rows(band_rows),
+            )
+            .unwrap();
+            assert_eq!(banded.weight, 29.0);
+            assert!(
+                banded.phi.max_abs_diff(&sharded.phi) < 1e-12,
+                "banded vs sharded: workers={workers} band_rows={band_rows}"
+            );
+            assert!(
+                banded.phi.max_abs_diff(&single) < 1e-12,
+                "banded vs single-threaded: workers={workers} band_rows={band_rows}"
+            );
+            // the stricter banded guarantee: BITWISE equality with the
+            // single-threaded engine, any workers / bands / blocks
+            for (a, b) in single.data().iter().zip(banded.phi.data()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "banded not bit-identical: workers={workers} band_rows={band_rows}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn banded_handles_more_workers_than_blocks_and_tiny_bands() {
+    // degenerate shapes: 1 test block, band per row, workers >> work
+    let k = 3;
+    let (ds, single) = reference("moon", 17, 5, 3, k);
+    let res = run_job(
+        &ds,
+        &ValuationJob::new(k)
+            .with_workers(7)
+            .with_block_size(64) // one block holds the whole test set
+            .with_band_rows(1), // 17 bands of a single row each
+    )
+    .unwrap();
+    assert_eq!(res.blocks, 1);
+    for (a, b) in single.data().iter().zip(res.phi.data()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn banded_block_size_one_streams_per_test_point() {
+    let k = 5;
+    let (ds, single) = reference("click", 40, 13, 9, k);
+    let res = run_job(
+        &ds,
+        &ValuationJob::new(k)
+            .with_workers(2)
+            .with_block_size(1) // 13 single-point blocks through the reorder buffer
+            .with_band_rows(11),
+    )
+    .unwrap();
+    assert_eq!(res.blocks, 13);
+    for (a, b) in single.data().iter().zip(res.phi.data()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
