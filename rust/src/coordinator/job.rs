@@ -190,7 +190,13 @@ pub struct PartialResult {
 
 /// Helper: the shard list for a dataset under this job.
 pub fn shards_for(job: &ValuationJob, ds: &Dataset) -> Vec<Shard> {
-    job.plan_shards(ds.n_test())
+    shards_for_len(job, ds.n_test())
+}
+
+/// Shard list for a raw test-set length — the streaming-ingest paths
+/// (`pipeline::ingest_banded`) have no `Dataset`, only slices.
+pub fn shards_for_len(job: &ValuationJob, n_test: usize) -> Vec<Shard> {
+    job.plan_shards(n_test)
         .into_iter()
         .enumerate()
         .map(|(index, (lo, hi))| Shard { index, lo, hi })

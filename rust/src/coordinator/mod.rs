@@ -29,4 +29,4 @@ pub mod pool;
 pub mod progress;
 
 pub use job::{Assembly, ValuationJob, ValuationResult};
-pub use pipeline::{run_job, run_job_with_engine};
+pub use pipeline::{ingest_banded, run_job, run_job_with_engine};

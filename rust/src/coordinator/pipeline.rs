@@ -21,7 +21,9 @@
 //!   serializes execution per client, so per-worker clients are what
 //!   gives real parallelism).
 
-use super::job::{shards_for, Assembly, PartialResult, Shard, ValuationJob, ValuationResult};
+use super::job::{
+    shards_for, shards_for_len, Assembly, PartialResult, Shard, ValuationJob, ValuationResult,
+};
 use super::merge::{Merger, WeightMerger};
 use super::pool::{run_workers, Bounded};
 
@@ -106,14 +108,97 @@ impl Drop for AbortOnPanic<'_> {
 /// Row-banded assembly: ONE n×n accumulator for the whole job — the only
 /// matrix this function allocates, independent of `job.workers`.
 fn run_rust_banded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let n = ds.n_train();
+    let mut acc = Matrix::zeros(n, n);
+    let (weight, blocks) = banded_accumulate(
+        &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, job, &mut acc, &progress,
+    )?;
+    acc.mirror_upper_to_lower();
+    acc.scale(1.0 / weight);
+    let elapsed = meter.elapsed();
+    Ok(ValuationResult {
+        phi: acc,
+        weight,
+        blocks,
+        elapsed,
+        throughput: meter.rate(progress.points()),
+        engine: Engine::Rust,
+    })
+}
+
+/// Streaming batch-ingest entry point for the session layer
+/// (`crate::session`): accumulate the UNNORMALIZED contribution of one
+/// test batch into an existing n×n accumulator through the banded
+/// parallel pipeline (prep pool → in-order publication → per-band sweep
+/// workers), returning the batch's merge weight (its test count, Eq. 9).
+///
+/// The accumulator is written exactly as `sweep_band` writes it — upper
+/// triangle + diagonal, additions appended in test order — so repeated
+/// calls over a contiguous partition of a test stream are bit-identical
+/// to a one-shot run, no matter how `job.workers`/`block_size`/band
+/// layout slice the work (DESIGN.md §7/§9). The caller owns
+/// normalization (mirror + scale by the accumulated weight).
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_banded(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    acc: &mut Matrix,
+) -> Result<f64> {
+    let n = train_y.len();
+    anyhow::ensure!(
+        acc.rows() == n && acc.cols() == n,
+        "accumulator is {}x{} but train set has n={n}",
+        acc.rows(),
+        acc.cols()
+    );
+    anyhow::ensure!(!test_y.is_empty(), "empty ingest batch");
+    // Shape errors must surface as Err here, not as a panic inside a
+    // worker thread slicing out of bounds (matching sti_knn_accumulate's
+    // contract on the single-threaded path).
+    anyhow::ensure!(
+        train_x.len() == n * d,
+        "train shape mismatch: {} features for {n} points (d={d})",
+        train_x.len()
+    );
+    anyhow::ensure!(
+        test_x.len() == test_y.len() * d,
+        "test batch shape mismatch: {} features for {} labels (d={d})",
+        test_x.len(),
+        test_y.len()
+    );
+    let progress = Progress::new();
+    let (weight, _blocks) =
+        banded_accumulate(train_x, train_y, d, test_x, test_y, job, acc, &progress)?;
+    Ok(weight)
+}
+
+/// The banded pipeline core shared by [`run_rust_banded`] (one-shot jobs)
+/// and [`ingest_banded`] (streaming sessions): sweeps `test_x`/`test_y`
+/// into `acc` (unnormalized, upper triangle + diagonal) and returns
+/// (total weight, number of test blocks).
+#[allow(clippy::too_many_arguments)]
+fn banded_accumulate(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    acc: &mut Matrix,
+    progress: &Progress,
+) -> Result<(f64, usize)> {
     let params = StiParams {
         k: job.k,
         metric: job.metric,
     };
-    let n = ds.n_train();
-    let meter = ThroughputMeter::new();
-    let progress = Progress::new();
-    let shards = shards_for(job, ds);
+    let n = train_y.len();
+    let shards = shards_for_len(job, test_y.len());
     let n_blocks = shards.len();
     let bands = job.plan_bands(n);
     let merger = Mutex::new(WeightMerger::new(n_blocks));
@@ -136,7 +221,6 @@ fn run_rust_banded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> 
     // window can never wedge).
     let window = job.workers + 2 * job.queue_factor.max(1);
 
-    let mut acc = Matrix::zeros(n, n);
     // Split the accumulator into per-band row slices; each band worker
     // owns its slice exclusively, so no synchronization guards the sweep.
     let mut band_slices: Vec<(usize, usize, &mut [f64])> = Vec::with_capacity(bands.len());
@@ -182,9 +266,11 @@ fn run_rust_banded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> 
                         }
                     }
                     let t0 = std::time::Instant::now();
-                    let (tx, ty) = ds.test_slice(shard.lo, shard.hi);
-                    let batch =
-                        Arc::new(prepare_batch(&ds.train_x, &ds.train_y, ds.d, tx, ty, &params));
+                    let (tx, ty) = (
+                        &test_x[shard.lo * d..shard.hi * d],
+                        &test_y[shard.lo..shard.hi],
+                    );
+                    let batch = Arc::new(prepare_batch(train_x, train_y, d, tx, ty, &params));
                     progress.record_block(shard.hi - shard.lo, t0.elapsed().as_nanos() as u64);
                     merger.lock().unwrap().push(shard.index, batch.weight());
                     // Publish every newly in-order block to all bands; the
@@ -217,7 +303,6 @@ fn run_rust_banded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> 
         // Band pool: Phase 2, one worker per disjoint row band.
         for (band_idx, (r_lo, r_hi, slice)) in band_slices.into_iter().enumerate() {
             let q = &band_queues[band_idx];
-            let train_y: &[i32] = &ds.train_y;
             let prep_queue = &prep_queue;
             let band_queues = &band_queues;
             let reorder = &reorder;
@@ -238,17 +323,7 @@ fn run_rust_banded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> 
     });
 
     let weight = merger.into_inner().unwrap().finalize();
-    acc.mirror_upper_to_lower();
-    acc.scale(1.0 / weight);
-    let elapsed = meter.elapsed();
-    Ok(ValuationResult {
-        phi: acc,
-        weight,
-        blocks: n_blocks,
-        elapsed,
-        throughput: meter.rate(progress.points()),
-        engine: Engine::Rust,
-    })
+    Ok((weight, n_blocks))
 }
 
 /// Legacy test-sharded assembly: each worker's `sti_knn_partial` call
@@ -484,6 +559,54 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn ingest_banded_streaming_matches_one_shot_bits() {
+        // The session-layer contract: two ingest_banded calls over a
+        // contiguous split of the test set, into one shared accumulator,
+        // produce (after mirror + scale) the same BITS as one-shot
+        // sti_knn — the parallel pipeline never reorders any cell's
+        // additions, and neither do ingest boundaries.
+        let ds = load_dataset("moon", 40, 16, 11).unwrap();
+        let reference = sti_knn(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(4),
+        );
+        let job = ValuationJob::new(4).with_workers(3).with_block_size(3);
+        let mut acc = Matrix::zeros(40, 40);
+        let mut weight = 0.0;
+        for (lo, hi) in [(0usize, 7usize), (7, 16)] {
+            let (tx, ty) = ds.test_slice(lo, hi);
+            weight +=
+                ingest_banded(&ds.train_x, &ds.train_y, ds.d, tx, ty, &job, &mut acc).unwrap();
+        }
+        assert_eq!(weight, 16.0);
+        acc.mirror_upper_to_lower();
+        let s = 1.0 / weight;
+        acc.scale(s);
+        for (a, b) in reference.data().iter().zip(acc.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn ingest_banded_rejects_bad_shapes() {
+        let ds = load_dataset("moon", 20, 6, 3).unwrap();
+        let job = ValuationJob::new(3);
+        let mut wrong = Matrix::zeros(19, 19);
+        let (tx, ty) = ds.test_slice(0, 6);
+        assert!(
+            ingest_banded(&ds.train_x, &ds.train_y, ds.d, tx, ty, &job, &mut wrong).is_err()
+        );
+        let mut acc = Matrix::zeros(20, 20);
+        assert!(
+            ingest_banded(&ds.train_x, &ds.train_y, ds.d, &[], &[], &job, &mut acc).is_err()
+        );
     }
 
     #[test]

@@ -14,6 +14,15 @@
 //! bands of ONE shared accumulator — peak memory O(n²) at any worker
 //! count, bit-identical to the single-threaded engine (DESIGN.md §7).
 //!
+//! On top of the one-shot pipeline sits the **session layer**
+//! ([`session`], DESIGN.md §9): a [`session::ValuationSession`] holds the
+//! unnormalized accumulator between requests, ingests test batches
+//! incrementally (Eq. 9 is additive over test points, so streaming is
+//! exact — bit-identical to a one-shot run over the same stream),
+//! snapshots/restores through a versioned binary store
+//! ([`session::store`]), and serves NDJSON commands via `stiknn serve`
+//! ([`session::protocol`]).
+//!
 //! Quick start:
 //! ```no_run
 //! use stiknn::data::load_dataset;
@@ -35,5 +44,6 @@ pub mod data;
 pub mod knn;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod shapley;
 pub mod util;

@@ -5,9 +5,13 @@
 //!   analyze   interaction heatmap + axiom checks + block structure (§4)
 //!   ksens     k-sensitivity sweep (§3.2, Figs. 7–10)
 //!   mislabel  flip labels and detect them from interaction patterns (Fig. 5)
+//!   serve     long-lived valuation session driven by NDJSON on stdin (§9)
+//!   session   inspect a session snapshot file (§9)
 //!   datasets  list the Table-1 dataset registry
 //!   artifacts list the AOT artifact manifest
 //!
+//! `stiknn help <subcommand>` and `stiknn <subcommand> --help` both print
+//! per-command usage; `stiknn --version` prints the crate version.
 //! Every command accepts `--engine rust|xla` where applicable; XLA uses
 //! the AOT artifacts under --artifacts (default: artifacts/).
 
@@ -18,11 +22,14 @@ use stiknn::analysis::mislabel::{auc, mislabel_scores, precision_recall, top_pre
 use stiknn::analysis::structure::block_structure;
 use stiknn::coordinator::{run_job_with_engine, Assembly, ValuationJob};
 use stiknn::data::{corrupt, csv, load_dataset, registry_names};
+use stiknn::knn::distance::Metric;
 use stiknn::report::heatmap::render_heatmap;
+use stiknn::report::session::{snapshot_info_table, topk_table};
 use stiknn::report::table::Table;
 use stiknn::runtime::{Engine, Manifest};
+use stiknn::session::{protocol, store, SessionConfig, TopBy, ValuationSession};
 use stiknn::shapley::axioms;
-use stiknn::util::cli::{Args, Command};
+use stiknn::util::cli::{wants_help, Args, Command};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -31,9 +38,16 @@ fn main() {
         Some("analyze") => cmd_analyze(&argv[1..]),
         Some("ksens") => cmd_ksens(&argv[1..]),
         Some("mislabel") => cmd_mislabel(&argv[1..]),
-        Some("datasets") => cmd_datasets(),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("session") => cmd_session(&argv[1..]),
+        Some("datasets") => cmd_datasets(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
-        Some("--help") | Some("help") | None => {
+        Some("--version") | Some("-V") | Some("version") => {
+            println!("stiknn {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        Some("help") => cmd_help(&argv[1..]),
+        Some("--help") | None => {
             print_help();
             Ok(())
         }
@@ -51,16 +65,55 @@ fn main() {
 
 fn print_help() {
     println!(
-        "stiknn — exact pair-interaction Data Shapley for KNN in O(t·n²)\n\n\
+        "stiknn {} — exact pair-interaction Data Shapley for KNN in O(t·n²)\n\n\
          subcommands:\n\
            value      compute the interaction matrix (CSV out)\n\
            analyze    heatmap + axioms + class-block structure\n\
            ksens      k-sensitivity sweep (paper §3.2)\n\
            mislabel   mislabel-detection experiment (paper Fig. 5)\n\
+           serve      incremental valuation session (NDJSON on stdin/stdout)\n\
+           session    inspect a session snapshot file\n\
            datasets   list the dataset registry (paper Table 1)\n\
            artifacts  list the AOT artifact manifest\n\n\
-         run `stiknn <subcommand> --help` for options"
+         run `stiknn help <subcommand>` or `stiknn <subcommand> --help` for \
+         options; `stiknn --version` prints the version",
+        env!("CARGO_PKG_VERSION")
     );
+}
+
+/// Per-command usage text for `stiknn help <subcommand>`.
+fn usage_for(name: &str) -> Option<String> {
+    match name {
+        "value" => Some(value_cmd().usage()),
+        "analyze" => Some(analyze_cmd().usage()),
+        "ksens" => Some(ksens_cmd().usage()),
+        "mislabel" => Some(mislabel_cmd().usage()),
+        "serve" => Some(serve_cmd().usage()),
+        "session" => Some(session_cmd().usage()),
+        "datasets" => Some("datasets — list the dataset registry (no options)\n".to_string()),
+        "artifacts" => Some(artifacts_cmd().usage()),
+        _ => None,
+    }
+}
+
+fn cmd_help(argv: &[String]) -> anyhow::Result<()> {
+    match argv.first().map(|s| s.as_str()) {
+        None => {
+            print_help();
+            Ok(())
+        }
+        Some(topic) => match usage_for(topic) {
+            Some(usage) => {
+                println!("{usage}");
+                Ok(())
+            }
+            None => {
+                eprintln!("unknown subcommand '{topic}'\n");
+                print_help();
+                std::process::exit(2);
+            }
+        },
+    }
 }
 
 fn common_opts(cmd: Command) -> Command {
@@ -113,9 +166,13 @@ fn parse_common(args: &Args) -> anyhow::Result<(stiknn::data::Dataset, Valuation
     Ok((ds, job, PathBuf::from(args.get_or("artifacts", "artifacts"))))
 }
 
+fn value_cmd() -> Command {
+    common_opts(Command::new("value", "compute the STI-KNN interaction matrix"))
+        .opt("out", "output CSV path ('-' to skip)", "phi.csv")
+}
+
 fn cmd_value(argv: &[String]) -> anyhow::Result<()> {
-    let cmd = common_opts(Command::new("value", "compute the STI-KNN interaction matrix"))
-        .opt("out", "output CSV path ('-' to skip)", "phi.csv");
+    let cmd = value_cmd();
     if wants_help(argv) {
         println!("{}", cmd.usage());
         return Ok(());
@@ -150,12 +207,16 @@ fn cmd_value(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {
-    let cmd = common_opts(Command::new(
+fn analyze_cmd() -> Command {
+    common_opts(Command::new(
         "analyze",
         "heatmap + axiom checks + block structure (paper §4)",
     ))
-    .opt("cells", "heatmap size in characters", "48");
+    .opt("cells", "heatmap size in characters", "48")
+}
+
+fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = analyze_cmd();
     if wants_help(argv) {
         println!("{}", cmd.usage());
         return Ok(());
@@ -194,12 +255,16 @@ fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_ksens(argv: &[String]) -> anyhow::Result<()> {
-    let cmd = common_opts(Command::new(
+fn ksens_cmd() -> Command {
+    common_opts(Command::new(
         "ksens",
         "Pearson correlation of STI matrices across k (paper §3.2)",
     ))
-    .opt("ks", "comma-separated k values", "3,5,9,15,20");
+    .opt("ks", "comma-separated k values", "3,5,9,15,20")
+}
+
+fn cmd_ksens(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = ksens_cmd();
     if wants_help(argv) {
         println!("{}", cmd.usage());
         return Ok(());
@@ -228,12 +293,16 @@ fn cmd_ksens(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_mislabel(argv: &[String]) -> anyhow::Result<()> {
-    let cmd = common_opts(Command::new(
+fn mislabel_cmd() -> Command {
+    common_opts(Command::new(
         "mislabel",
         "flip labels, recompute STI, detect flips from patterns (Fig. 5)",
     ))
-    .opt("flip", "fraction of train labels to flip", "0.05");
+    .opt("flip", "fraction of train labels to flip", "0.05")
+}
+
+fn cmd_mislabel(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = mislabel_cmd();
     if wants_help(argv) {
         println!("{}", cmd.usage());
         return Ok(());
@@ -260,7 +329,127 @@ fn cmd_mislabel(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_datasets() -> anyhow::Result<()> {
+fn serve_cmd() -> Command {
+    Command::new(
+        "serve",
+        "incremental valuation session: NDJSON commands on stdin, responses on stdout",
+    )
+    .opt("dataset", "training dataset name (see `stiknn datasets`)", "circle")
+    .opt("n-train", "training points (0 = registry default)", "0")
+    .opt(
+        "n-test",
+        "test-split size used when GENERATING the train part (the generators slice \
+         train after test, so this must match the session being restored; \
+         0 = registry default). The split itself is dropped — test points \
+         arrive via the protocol",
+        "0",
+    )
+    .opt("k", "KNN parameter", "5")
+    .opt("seed", "dataset seed", "42")
+    .opt("metric", "distance metric: l2 | l1 | cosine", "l2")
+    .opt("workers", "worker threads for large ingest batches (0 = all cores)", "0")
+    .opt("block", "test points per prep block in parallel ingests", "32")
+    .opt(
+        "parallel-min",
+        "batch size at which ingest switches to the parallel banded pipeline",
+        "256",
+    )
+    .opt("restore", "resume from a snapshot file ('' = fresh session)", "")
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = serve_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let k: usize = args.require("k")?;
+    let metric = Metric::parse(&args.get_or("metric", "l2"))
+        .ok_or_else(|| anyhow::anyhow!("--metric must be l2, l1 or cosine"))?;
+    let workers: usize = args.require("workers")?;
+    let block: usize = args.require("block")?;
+    let parallel_min: usize = args.require("parallel-min")?;
+    // The session only consumes the train part; the registry's test split
+    // is generated and dropped (test points arrive through the protocol).
+    // n_test still matters: the generators slice train AFTER test, so it
+    // must match whatever produced the train set a --restore snapshot was
+    // taken against (fingerprint-verified on restore).
+    let ds = load_dataset(&name, n_train, n_test, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
+    let mut config = SessionConfig::new(k)
+        .with_metric(metric)
+        .with_block_size(block)
+        .with_parallel_min(parallel_min);
+    if workers > 0 {
+        config = config.with_workers(workers);
+    }
+    let restore = args.get_or("restore", "");
+    let mut session = if restore.is_empty() {
+        ValuationSession::from_dataset(&ds, config)?
+    } else {
+        ValuationSession::restore(
+            Path::new(&restore),
+            ds.train_x.clone(),
+            ds.train_y.clone(),
+            ds.d,
+            config,
+        )?
+    };
+    // Banner on stderr so stdout stays pure NDJSON.
+    eprintln!(
+        "stiknn serve: dataset={} n={} d={} k={} tests={} — NDJSON on stdin, \
+         `{{\"cmd\":\"shutdown\"}}` to stop",
+        ds.name,
+        session.n(),
+        session.d(),
+        session.k(),
+        session.tests_seen()
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    protocol::serve(&mut session, stdin.lock(), stdout.lock())?;
+    Ok(())
+}
+
+fn session_cmd() -> Command {
+    Command::new("session", "inspect a session snapshot file")
+        .req("file", "snapshot path (written by `stiknn serve` / ValuationSession::save)")
+        .opt("topk", "print the top-k point values (0 = header only)", "10")
+        .opt("by", "top-k ranking: main | rowsum", "main")
+}
+
+fn cmd_session(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = session_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let file = args.require::<String>("file")?;
+    let snap = store::read_snapshot(Path::new(&file))?;
+    println!("{}", snapshot_info_table(&snap.header));
+    let topk: usize = args.require("topk")?;
+    if topk > 0 {
+        let by = TopBy::parse(&args.get_or("by", "main"))
+            .ok_or_else(|| anyhow::anyhow!("--by must be main or rowsum"))?;
+        match snap.top_k(topk, by) {
+            Some(entries) => println!("{}", topk_table(&entries, by.label())),
+            None => println!("(no test points ingested yet — top-k unavailable)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datasets(argv: &[String]) -> anyhow::Result<()> {
+    if wants_help(argv) {
+        println!("{}", usage_for("datasets").unwrap());
+        return Ok(());
+    }
     let mut t = Table::new(&["name", "d", "classes", "n_train", "n_test", "source (paper Table 1)"]);
     for name in registry_names() {
         let s = stiknn::data::registry::spec(name).unwrap();
@@ -277,14 +466,20 @@ fn cmd_datasets() -> anyhow::Result<()> {
     Ok(())
 }
 
+fn artifacts_cmd() -> Command {
+    Command::new("artifacts", "list the AOT artifact manifest")
+        .opt("artifacts", "artifacts directory", "artifacts")
+}
+
 fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
-    let dir = argv
-        .iter()
-        .position(|a| a == "--artifacts")
-        .and_then(|i| argv.get(i + 1))
-        .map(|s| s.as_str())
-        .unwrap_or("artifacts");
-    let manifest = Manifest::load(Path::new(dir))?;
+    let cmd = artifacts_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(Path::new(&dir))?;
     let mut t = Table::new(&["name", "program", "n", "d", "b", "k", "file"]);
     for a in &manifest.artifacts {
         t.row(&[
@@ -299,8 +494,4 @@ fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
     }
     println!("{}", t.render());
     Ok(())
-}
-
-fn wants_help(argv: &[String]) -> bool {
-    argv.iter().any(|a| a == "--help" || a == "-h")
 }

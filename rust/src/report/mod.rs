@@ -1,7 +1,9 @@
 //! Reporting: ASCII heatmaps (the terminal stand-in for the paper's
-//! matplotlib figures), aligned tables, and experiment-record helpers.
+//! matplotlib figures), aligned tables, experiment-record helpers, and
+//! session snapshot/top-k formatting.
 
 pub mod heatmap;
+pub mod session;
 pub mod table;
 
 pub use heatmap::render_heatmap;

@@ -1,0 +1,65 @@
+//! Session-layer report formatting: snapshot headers and top-k
+//! point-value tables for the `stiknn session` inspector (DESIGN.md §9).
+
+use crate::report::table::Table;
+use crate::session::SnapshotHeader;
+
+/// Human-readable header table for one decoded snapshot.
+pub fn snapshot_info_table(h: &SnapshotHeader) -> String {
+    let mut t = Table::new(&["field", "value"]);
+    t.row(&["format version".into(), h.version.to_string()]);
+    t.row(&["k".into(), h.k.to_string()]);
+    t.row(&["metric".into(), format!("{:?}", h.metric)]);
+    t.row(&["n (train points)".into(), h.n.to_string()]);
+    t.row(&["d (features)".into(), h.d.to_string()]);
+    t.row(&["tests ingested".into(), h.tests.to_string()]);
+    t.row(&["ledger entries".into(), h.batches.to_string()]);
+    t.row(&["train fingerprint".into(), format!("{:016x}", h.fingerprint)]);
+    format!("session snapshot:\n{}", t.render())
+}
+
+/// Ranked top-k point values as an aligned table.
+pub fn topk_table(entries: &[(usize, f64)], by: &str) -> String {
+    let mut t = Table::new(&["rank", "train index", "value"]);
+    for (rank, &(index, value)) in entries.iter().enumerate() {
+        t.row(&[
+            (rank + 1).to_string(),
+            index.to_string(),
+            format!("{value:+.4e}"),
+        ]);
+    }
+    format!("top-{} point values (by {by}):\n{}", entries.len(), t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::distance::Metric;
+
+    #[test]
+    fn snapshot_table_lists_all_fields() {
+        let h = SnapshotHeader {
+            version: 1,
+            k: 5,
+            metric: Metric::SqEuclidean,
+            n: 600,
+            d: 2,
+            fingerprint: 0xABCD,
+            tests: 150,
+            batches: 3,
+        };
+        let s = snapshot_info_table(&h);
+        for needle in ["version", "SqEuclidean", "600", "150", "000000000000abcd"] {
+            assert!(s.contains(needle), "missing {needle}:\n{s}");
+        }
+    }
+
+    #[test]
+    fn topk_table_ranks_from_one() {
+        let s = topk_table(&[(7, 0.25), (2, -0.5)], "main");
+        assert!(s.contains("top-2"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[3].starts_with('1'), "{s}");
+        assert!(s.contains("+2.5000e-1") || s.contains("+2.5000e1"), "{s}");
+    }
+}

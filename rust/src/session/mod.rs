@@ -1,0 +1,758 @@
+//! Incremental valuation sessions — the long-lived layer that turns the
+//! one-shot pipeline into a service (DESIGN.md §9).
+//!
+//! Eq. 9 makes the interaction matrix a weighted average over test
+//! points: Φ = (1/t)·Σ_τ Φ_τ. The sum is exactly additive under
+//! streaming test arrivals, so a deployment never has to recompute from
+//! scratch when new evaluation data lands. A [`ValuationSession`] owns
+//! the UNNORMALIZED n×n accumulator plus a per-batch weight ledger,
+//! ingests test batches through the existing two-phase hot path
+//! ([`crate::shapley::sti_knn_accumulate`] single-threaded, or the
+//! coordinator's banded prep pool via [`crate::coordinator::ingest_banded`]
+//! for large batches), and answers queries against the live matrix at any
+//! time — normalization happens at read time, so ingest stays O(t·n²)
+//! total with no per-query rescaling of state.
+//!
+//! Exactness: every accumulator cell receives its per-test additions in
+//! test order no matter how the stream is cut into batches, so ingesting
+//! any contiguous partition of a test set — including a snapshot/restore
+//! cycle mid-stream ([`store`]) — is **bit-identical** to one-shot
+//! `sti_knn` (property-tested in `tests/session_equivalence.rs`).
+//! Re-ordering batches changes addition order and is therefore only
+//! equal up to f64 associativity (~1e-12), not bitwise.
+//!
+//! * [`store`]    — versioned, checksummed binary snapshots
+//! * [`protocol`] — NDJSON command loop backing `stiknn serve`
+
+pub mod protocol;
+pub mod store;
+
+pub use store::{dataset_fingerprint, Snapshot, SnapshotHeader};
+
+use crate::coordinator::{ingest_banded, ValuationJob};
+use crate::data::Dataset;
+use crate::knn::distance::Metric;
+use crate::shapley::sti_knn::{sti_knn_accumulate, StiParams};
+use crate::util::matrix::Matrix;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Ranking used by top-k point-value queries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopBy {
+    /// Diagonal main terms φ_ii (Eq. 4/5) — each point's own effect.
+    Main,
+    /// φ_ii + Σ_{j≠i} φ_ij — main effect plus all pairwise interactions,
+    /// the "total contribution including synergies" view.
+    RowSum,
+}
+
+impl TopBy {
+    pub fn parse(s: &str) -> Option<TopBy> {
+        match s {
+            "main" | "diag" => Some(TopBy::Main),
+            "rowsum" | "total" => Some(TopBy::RowSum),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TopBy::Main => "main",
+            TopBy::RowSum => "rowsum",
+        }
+    }
+}
+
+/// Session tuning knobs (the valuation semantics are fixed by k/metric;
+/// everything else is pure performance).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    pub k: usize,
+    pub metric: Metric,
+    /// Worker threads for the parallel ingest path (prep pool + bands).
+    pub workers: usize,
+    /// Test points per prep block in the parallel ingest path.
+    pub block_size: usize,
+    /// Batches with at least this many test points go through the
+    /// coordinator's banded prep pool; smaller ones take the
+    /// single-threaded hot path (thread spin-up would dominate). Either
+    /// path produces identical bits, so this is a pure perf knob.
+    pub parallel_min: usize,
+}
+
+impl SessionConfig {
+    pub fn new(k: usize) -> Self {
+        SessionConfig {
+            k,
+            metric: Metric::SqEuclidean,
+            workers: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4),
+            block_size: 32,
+            parallel_min: 256,
+        }
+    }
+
+    pub fn with_metric(mut self, metric: Metric) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_block_size(mut self, block: usize) -> Self {
+        self.block_size = block.max(1);
+        self
+    }
+
+    pub fn with_parallel_min(mut self, parallel_min: usize) -> Self {
+        self.parallel_min = parallel_min.max(1);
+        self
+    }
+}
+
+/// One entry of the per-batch weight ledger: `seq` is the monotone batch
+/// sequence number, `len` the test count the entry accounts for (its
+/// Eq. 9 merge weight). The ledger is persisted in snapshots, so a
+/// restored session continues its sequence instead of restarting at 0.
+///
+/// The ledger is COMPACTED once it exceeds [`LEDGER_COMPACT_AT`] entries
+/// (oldest half folded into one record that keeps the first `seq` and
+/// sums the lens), so a long-lived serve deployment ingesting millions
+/// of small batches holds O(1) ledger state and snapshot overhead. After
+/// compaction an entry may therefore cover MANY ingests — `seq` (not the
+/// entry count) is what tracks how many batches a session has seen
+/// ([`ValuationSession::batches_ingested`]), and Σ len == tests stays an
+/// integrity invariant the store verifies on decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchRecord {
+    pub seq: u64,
+    pub len: u64,
+}
+
+/// Ledger length that triggers compaction of the oldest half.
+pub const LEDGER_COMPACT_AT: usize = 4096;
+
+/// Summary statistics over the live (averaged) matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionStats {
+    pub n: usize,
+    pub k: usize,
+    pub tests: u64,
+    pub batches: u64,
+    /// Σ φ_ii of the averaged matrix (0 while no tests are ingested).
+    pub trace: f64,
+    /// Mean strict-upper-triangle entry of the averaged matrix.
+    pub mean_offdiag: f64,
+    /// Upper triangle including the diagonal — the efficiency-axiom
+    /// quantity (DESIGN.md §1).
+    pub upper_sum: f64,
+}
+
+/// A long-lived incremental valuation: train set + accumulator + ledger.
+pub struct ValuationSession {
+    train_x: Vec<f32>,
+    train_y: Vec<i32>,
+    d: usize,
+    config: SessionConfig,
+    /// Unnormalized Σ_τ Φ_τ, upper triangle + diagonal only (exactly the
+    /// layout `sweep_band` writes); mirrored + scaled at query time.
+    acc: Matrix,
+    ledger: Vec<BatchRecord>,
+    tests_seen: u64,
+    fingerprint: u64,
+}
+
+impl ValuationSession {
+    /// Fresh session over an owned train set. Fails on shape mismatches
+    /// or a k outside Algorithm 1's exact domain 1 ≤ k ≤ n.
+    pub fn new(
+        train_x: Vec<f32>,
+        train_y: Vec<i32>,
+        d: usize,
+        config: SessionConfig,
+    ) -> Result<Self> {
+        let n = train_y.len();
+        ensure!(n >= 2, "need at least 2 training points for interactions");
+        ensure!(d >= 1, "need at least 1 feature dimension");
+        ensure!(
+            train_x.len() == n * d,
+            "train shape mismatch: {} features for {} points (d={d})",
+            train_x.len(),
+            n
+        );
+        ensure!(
+            config.k >= 1 && config.k <= n,
+            "STI-KNN is exact only for 1 <= k <= n (k={}, n={n})",
+            config.k
+        );
+        let fingerprint = dataset_fingerprint(&train_x, &train_y, d);
+        Ok(ValuationSession {
+            train_x,
+            train_y,
+            d,
+            config,
+            acc: Matrix::zeros(n, n),
+            ledger: Vec::new(),
+            tests_seen: 0,
+            fingerprint,
+        })
+    }
+
+    /// Fresh session over a registry dataset's train part.
+    pub fn from_dataset(ds: &Dataset, config: SessionConfig) -> Result<Self> {
+        Self::new(ds.train_x.clone(), ds.train_y.clone(), ds.d, config)
+    }
+
+    /// Resume from a snapshot. The caller supplies the SAME train set the
+    /// snapshot was taken against (sessions don't persist training data);
+    /// k, metric, n, d and the train-set fingerprint are all verified, so
+    /// a mismatched resume fails loudly instead of silently producing
+    /// wrong values.
+    pub fn restore(
+        path: &Path,
+        train_x: Vec<f32>,
+        train_y: Vec<i32>,
+        d: usize,
+        config: SessionConfig,
+    ) -> Result<Self> {
+        let snap = store::read_snapshot(path)?;
+        let mut session = Self::new(train_x, train_y, d, config)?;
+        let h = &snap.header;
+        ensure!(
+            h.k as usize == session.config.k,
+            "snapshot was taken with k={} but the session is configured with k={}",
+            h.k,
+            session.config.k
+        );
+        ensure!(
+            h.metric == session.config.metric,
+            "snapshot metric {:?} != session metric {:?}",
+            h.metric,
+            session.config.metric
+        );
+        ensure!(
+            h.n as usize == session.n() && h.d as usize == session.d,
+            "snapshot train shape (n={}, d={}) != session train shape (n={}, d={})",
+            h.n,
+            h.d,
+            session.n(),
+            session.d
+        );
+        ensure!(
+            h.fingerprint == session.fingerprint,
+            "snapshot fingerprint {:016x} != train-set fingerprint {:016x}: \
+             the snapshot was taken against different training data",
+            h.fingerprint,
+            session.fingerprint
+        );
+        session.acc = snap.raw;
+        session.tests_seen = h.tests;
+        session.ledger = snap.ledger;
+        Ok(session)
+    }
+
+    // -- identity ------------------------------------------------------
+
+    pub fn n(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn k(&self) -> usize {
+        self.config.k
+    }
+
+    pub fn tests_seen(&self) -> u64 {
+        self.tests_seen
+    }
+
+    pub fn ledger(&self) -> &[BatchRecord] {
+        &self.ledger
+    }
+
+    /// Total ingest calls over the session's lifetime (including before
+    /// a restore). Derived from the monotone batch sequence, so it
+    /// survives ledger compaction — `ledger().len()` does not.
+    pub fn batches_ingested(&self) -> u64 {
+        self.ledger.last().map(|b| b.seq + 1).unwrap_or(0)
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    fn params(&self) -> StiParams {
+        StiParams {
+            k: self.config.k,
+            metric: self.config.metric,
+        }
+    }
+
+    // -- ingest --------------------------------------------------------
+
+    /// Ingest one test batch (flattened row-major features + labels) and
+    /// return its test count. Empty batches are a no-op. Batches of at
+    /// least `config.parallel_min` points run through the coordinator's
+    /// banded prep pool; both paths append the same additions in the same
+    /// order, so the choice never changes a single bit of the state.
+    pub fn ingest(&mut self, test_x: &[f32], test_y: &[i32]) -> Result<usize> {
+        ensure!(
+            test_x.len() == test_y.len() * self.d,
+            "test batch shape mismatch: {} features for {} labels (d={})",
+            test_x.len(),
+            test_y.len(),
+            self.d
+        );
+        if test_y.is_empty() {
+            return Ok(0);
+        }
+        if test_y.len() >= self.config.parallel_min {
+            let mut job = ValuationJob::new(self.config.k)
+                .with_workers(self.config.workers)
+                .with_block_size(self.config.block_size);
+            job.metric = self.config.metric;
+            ingest_banded(
+                &self.train_x,
+                &self.train_y,
+                self.d,
+                test_x,
+                test_y,
+                &job,
+                &mut self.acc,
+            )?;
+        } else {
+            sti_knn_accumulate(
+                &self.train_x,
+                &self.train_y,
+                self.d,
+                test_x,
+                test_y,
+                &self.params(),
+                &mut self.acc,
+            );
+        }
+        let seq = self.ledger.last().map(|b| b.seq + 1).unwrap_or(0);
+        self.ledger.push(BatchRecord {
+            seq,
+            len: test_y.len() as u64,
+        });
+        if self.ledger.len() >= LEDGER_COMPACT_AT {
+            // Fold the oldest half into one record (first seq, summed
+            // lens): bounds ledger memory and snapshot size for
+            // long-lived sessions while preserving Σ len == tests and
+            // the monotone seq that batches_ingested() derives from.
+            let half = self.ledger.len() / 2;
+            let merged = BatchRecord {
+                seq: self.ledger[0].seq,
+                len: self.ledger[..half].iter().map(|b| b.len).sum(),
+            };
+            self.ledger.splice(..half, [merged]);
+        }
+        self.tests_seen += test_y.len() as u64;
+        Ok(test_y.len())
+    }
+
+    // -- queries (all normalize at read time) --------------------------
+
+    /// 1/t — the read-time normalization factor. `None` while empty.
+    fn inv_weight(&self) -> Option<f64> {
+        if self.tests_seen == 0 {
+            None
+        } else {
+            Some(1.0 / self.tests_seen as f64)
+        }
+    }
+
+    /// Averaged φ_ij (symmetric — (i,j) and (j,i) agree). `None` while
+    /// the session is empty or an index is out of range.
+    pub fn cell(&self, i: usize, j: usize) -> Option<f64> {
+        let inv_w = self.inv_weight()?;
+        if i >= self.n() || j >= self.n() {
+            return None;
+        }
+        let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+        Some(self.acc.get(lo, hi) * inv_w)
+    }
+
+    /// Averaged row i of the symmetric matrix (diagonal included).
+    pub fn row(&self, i: usize) -> Option<Vec<f64>> {
+        let inv_w = self.inv_weight()?;
+        if i >= self.n() {
+            return None;
+        }
+        Some(
+            (0..self.n())
+                .map(|j| {
+                    let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+                    self.acc.get(lo, hi) * inv_w
+                })
+                .collect(),
+        )
+    }
+
+    /// The full averaged interaction matrix — exactly what one-shot
+    /// `sti_knn` over every ingested test point would return, to the bit
+    /// (same accumulator, same mirror-then-scale finalization).
+    pub fn matrix(&self) -> Option<Matrix> {
+        let inv_w = self.inv_weight()?;
+        let mut m = self.acc.clone();
+        m.mirror_upper_to_lower();
+        m.scale(inv_w);
+        Some(m)
+    }
+
+    /// Per-point values under the given ranking.
+    pub fn point_values(&self, by: TopBy) -> Option<Vec<f64>> {
+        let inv_w = self.inv_weight()?;
+        Some(point_values_raw(&self.acc, inv_w, by))
+    }
+
+    /// Top-k (index, value), descending; ties break by index.
+    pub fn top_k(&self, k: usize, by: TopBy) -> Option<Vec<(usize, f64)>> {
+        Some(top_k_of(&self.point_values(by)?, k))
+    }
+
+    /// Summary statistics (zeros while the session is empty). One O(n²)
+    /// triangle walk + one O(n) diagonal pass — this runs per `stats`
+    /// protocol command on live sessions, so no redundant passes.
+    pub fn stats(&self) -> SessionStats {
+        let n = self.n();
+        let inv_w = self.inv_weight().unwrap_or(0.0);
+        let pairs = (n * (n - 1) / 2) as f64;
+        let upper = self.acc.upper_triangle_sum();
+        let trace_raw: f64 = self.acc.diagonal().iter().sum();
+        SessionStats {
+            n,
+            k: self.config.k,
+            tests: self.tests_seen,
+            batches: self.batches_ingested(),
+            trace: trace_raw * inv_w,
+            mean_offdiag: if pairs > 0.0 {
+                (upper - trace_raw) * inv_w / pairs
+            } else {
+                0.0
+            },
+            upper_sum: upper * inv_w,
+        }
+    }
+
+    // -- persistence ---------------------------------------------------
+
+    /// Write a snapshot (see [`store`] for the format). Returns the byte
+    /// count written.
+    ///
+    /// The write is atomic-by-rename (temp sibling file, then rename
+    /// over the target): deployments snapshot to the SAME path on a
+    /// schedule, and a crash or full disk mid-write must never destroy
+    /// the previous good snapshot.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        let bytes = store::encode(
+            self.config.k as u32,
+            self.config.metric,
+            self.n() as u64,
+            self.d as u64,
+            self.fingerprint,
+            self.tests_seen,
+            &self.ledger,
+            self.acc.data(),
+        );
+        // PID-unique temp sibling: two processes snapshotting the same
+        // target must not interleave writes into one temp file.
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp_name);
+        let written = (|| -> std::io::Result<()> {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            // Flush data blocks to disk BEFORE the rename becomes
+            // visible: rename-without-fsync can survive a crash while
+            // the data doesn't, leaving a truncated file at the target.
+            f.sync_all()
+        })();
+        if let Err(e) = written {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e)
+                .with_context(|| format!("writing snapshot temp file {}", tmp.display()));
+        }
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e)
+                .with_context(|| format!("renaming snapshot into place at {}", path.display()));
+        }
+        Ok(bytes.len() as u64)
+    }
+}
+
+/// Per-point values from a RAW accumulator (upper triangle + diagonal)
+/// and a normalization factor — shared by live sessions and decoded
+/// snapshots. RowSum expands the symmetric row without materializing the
+/// mirror: row i = φ_ii + Σ_{j>i} acc[i][j] + Σ_{j<i} acc[j][i].
+pub(crate) fn point_values_raw(acc: &Matrix, inv_w: f64, by: TopBy) -> Vec<f64> {
+    let n = acc.rows();
+    match by {
+        TopBy::Main => (0..n).map(|i| acc.get(i, i) * inv_w).collect(),
+        TopBy::RowSum => (0..n)
+            .map(|i| {
+                let mut s = acc.get(i, i);
+                for j in (i + 1)..n {
+                    s += acc.get(i, j);
+                }
+                for j in 0..i {
+                    s += acc.get(j, i);
+                }
+                s * inv_w
+            })
+            .collect(),
+    }
+}
+
+/// Top-k (index, value) pairs, value-descending with index tiebreak.
+/// Uses `total_cmp` (not `partial_cmp` + Equal fallback): snapshots
+/// round-trip NaN cells bit-exactly and the library ingest path doesn't
+/// forbid them, and a non-total comparator can make `sort_by` panic —
+/// which would kill a live serve session mid-query. Under the IEEE total
+/// order NaNs land deterministically at the extremes instead.
+pub fn top_k_of(values: &[f64], k: usize) -> Vec<(usize, f64)> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[b].total_cmp(&values[a]).then(a.cmp(&b)));
+    idx.into_iter()
+        .take(k)
+        .map(|i| (i, values[i]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::sti_knn::sti_knn;
+    use crate::util::rng::Rng;
+
+    fn random_problem(seed: u64, n: usize, d: usize, t: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+            (0..n).map(|_| rng.below(2) as i32).collect(),
+            (0..t * d).map(|_| rng.normal() as f32).collect(),
+            (0..t).map(|_| rng.below(2) as i32).collect(),
+        )
+    }
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("stiknn_session_{}_{tag}.snap", std::process::id()))
+    }
+
+    #[test]
+    fn incremental_ingest_matches_one_shot_bits() {
+        let (tx, ty, qx, qy) = random_problem(5, 19, 3, 9);
+        let reference = sti_knn(&tx, &ty, 3, &qx, &qy, &StiParams::new(4));
+        let mut s = ValuationSession::new(tx, ty, 3, SessionConfig::new(4)).unwrap();
+        for (lo, hi) in [(0usize, 2usize), (2, 3), (3, 9)] {
+            s.ingest(&qx[lo * 3..hi * 3], &qy[lo..hi]).unwrap();
+        }
+        assert_eq!(s.tests_seen(), 9);
+        assert_eq!(s.ledger().len(), 3);
+        let live = s.matrix().unwrap();
+        for (a, b) in reference.data().iter().zip(live.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // cell/row agree with the full matrix, including the mirrored side
+        assert_eq!(s.cell(7, 2).unwrap().to_bits(), live.get(7, 2).to_bits());
+        assert_eq!(s.cell(2, 7), s.cell(7, 2));
+        for (j, v) in s.row(5).unwrap().iter().enumerate() {
+            assert_eq!(v.to_bits(), live.get(5, j).to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_ingest_path_is_bit_identical_to_sequential() {
+        let (tx, ty, qx, qy) = random_problem(23, 31, 2, 20);
+        let mut seq = ValuationSession::new(
+            tx.clone(), ty.clone(), 2,
+            SessionConfig::new(5).with_parallel_min(1000),
+        ).unwrap();
+        let mut par = ValuationSession::new(
+            tx, ty, 2,
+            SessionConfig::new(5).with_parallel_min(1).with_workers(3).with_block_size(4),
+        ).unwrap();
+        for (lo, hi) in [(0usize, 11usize), (11, 20)] {
+            seq.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+            par.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+        }
+        let (a, b) = (seq.matrix().unwrap(), par.matrix().unwrap());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_is_bit_identical_and_resumable() {
+        let (tx, ty, qx, qy) = random_problem(41, 15, 2, 8);
+        let reference = sti_knn(&tx, &ty, 2, &qx, &qy, &StiParams::new(3));
+
+        let mut s = ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(3)).unwrap();
+        s.ingest(&qx[..5 * 2], &qy[..5]).unwrap();
+        let path = temp_path("roundtrip");
+        s.save(&path).unwrap();
+
+        let mut restored =
+            ValuationSession::restore(&path, tx, ty, 2, SessionConfig::new(3)).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(restored.tests_seen(), 5);
+        assert_eq!(restored.ledger(), s.ledger());
+        restored.ingest(&qx[5 * 2..], &qy[5..]).unwrap();
+        // ledger sequence continues across the restore
+        assert_eq!(restored.ledger().last().unwrap().seq, 1);
+
+        let live = restored.matrix().unwrap();
+        for (a, b) in reference.data().iter().zip(live.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatches() {
+        let (tx, ty, qx, qy) = random_problem(77, 12, 2, 4);
+        let mut s = ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(3)).unwrap();
+        s.ingest(&qx, &qy).unwrap();
+        let path = temp_path("mismatch");
+        s.save(&path).unwrap();
+
+        // wrong k
+        let err = ValuationSession::restore(&path, tx.clone(), ty.clone(), 2, SessionConfig::new(4))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("k="), "{err}");
+        // wrong metric
+        let err = ValuationSession::restore(
+            &path, tx.clone(), ty.clone(), 2,
+            SessionConfig::new(3).with_metric(Metric::Manhattan),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("metric"), "{err}");
+        // different training data
+        let mut tx2 = tx.clone();
+        tx2[0] += 1.0;
+        let err = ValuationSession::restore(&path, tx2, ty, 2, SessionConfig::new(3))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_session_queries_are_none_and_stats_zero() {
+        let (tx, ty, _, _) = random_problem(9, 10, 2, 1);
+        let s = ValuationSession::new(tx, ty, 2, SessionConfig::new(2)).unwrap();
+        assert!(s.cell(0, 1).is_none());
+        assert!(s.row(0).is_none());
+        assert!(s.matrix().is_none());
+        assert!(s.top_k(3, TopBy::Main).is_none());
+        let st = s.stats();
+        assert_eq!(st.tests, 0);
+        assert_eq!(st.trace, 0.0);
+        assert_eq!(st.mean_offdiag, 0.0);
+        // empty ingest is a no-op, not an error
+        let mut s = s;
+        assert_eq!(s.ingest(&[], &[]).unwrap(), 0);
+        assert_eq!(s.ledger().len(), 0);
+    }
+
+    #[test]
+    fn out_of_range_queries_are_none() {
+        let (tx, ty, qx, qy) = random_problem(13, 8, 2, 3);
+        let mut s = ValuationSession::new(tx, ty, 2, SessionConfig::new(2)).unwrap();
+        s.ingest(&qx, &qy).unwrap();
+        assert!(s.cell(0, 8).is_none());
+        assert!(s.cell(8, 0).is_none());
+        assert!(s.row(8).is_none());
+        assert!(s.cell(0, 7).is_some());
+    }
+
+    #[test]
+    fn topk_and_stats_agree_with_matrix() {
+        let (tx, ty, qx, qy) = random_problem(31, 14, 3, 6);
+        let mut s = ValuationSession::new(tx, ty, 3, SessionConfig::new(4)).unwrap();
+        s.ingest(&qx, &qy).unwrap();
+        let m = s.matrix().unwrap();
+
+        let top = s.top_k(14, TopBy::Main).unwrap();
+        assert_eq!(top.len(), 14);
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1, "not descending: {top:?}");
+        }
+        for &(i, v) in &top {
+            assert_eq!(v.to_bits(), m.get(i, i).to_bits());
+        }
+
+        let rowsum = s.point_values(TopBy::RowSum).unwrap();
+        for i in 0..14 {
+            let direct: f64 = (0..14).map(|j| m.get(i, j)).sum::<f64>();
+            assert!((rowsum[i] - direct).abs() < 1e-12, "row {i}");
+        }
+
+        let st = s.stats();
+        assert_eq!(st.tests, 6);
+        assert_eq!(st.batches, 1);
+        assert!((st.trace - m.diagonal().iter().sum::<f64>()).abs() < 1e-12);
+        assert!((st.upper_sum - m.upper_triangle_sum()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_construction_is_rejected() {
+        assert!(ValuationSession::new(vec![0.0; 4], vec![0, 1], 2, SessionConfig::new(3)).is_err(),
+            "k > n");
+        assert!(ValuationSession::new(vec![0.0; 3], vec![0, 1], 2, SessionConfig::new(1)).is_err(),
+            "shape mismatch");
+        assert!(ValuationSession::new(vec![0.0; 2], vec![0], 2, SessionConfig::new(1)).is_err(),
+            "n < 2");
+        let mut s =
+            ValuationSession::new(vec![0.0, 0.1, 1.0, 1.1], vec![0, 1], 2, SessionConfig::new(1))
+                .unwrap();
+        assert!(s.ingest(&[0.5], &[0]).is_err(), "batch shape mismatch");
+    }
+
+    #[test]
+    fn ledger_compaction_bounds_state_and_preserves_invariants() {
+        let (tx, ty, qx, qy) = random_problem(61, 6, 1, 1);
+        let reference_batches = (LEDGER_COMPACT_AT as u64) + 50;
+        let mut s = ValuationSession::new(tx, ty, 1, SessionConfig::new(2)).unwrap();
+        for _ in 0..reference_batches {
+            s.ingest(&qx, &qy).unwrap();
+        }
+        // compaction kept the ledger bounded...
+        assert!(s.ledger().len() < LEDGER_COMPACT_AT, "{}", s.ledger().len());
+        // ...while the batch count and the Σ len == tests invariant hold
+        assert_eq!(s.batches_ingested(), reference_batches);
+        assert_eq!(s.stats().batches, reference_batches);
+        assert_eq!(s.tests_seen(), reference_batches);
+        let total: u64 = s.ledger().iter().map(|b| b.len).sum();
+        assert_eq!(total, s.tests_seen());
+        // a snapshot of the compacted ledger round-trips (decode re-checks
+        // the sum invariant) and the restored session keeps counting
+        let path = temp_path("compaction");
+        s.save(&path).unwrap();
+        let (tx, ty, qx, qy) = random_problem(61, 6, 1, 1);
+        let mut restored = ValuationSession::restore(&path, tx, ty, 1, SessionConfig::new(2))
+            .unwrap();
+        let _ = std::fs::remove_file(&path);
+        restored.ingest(&qx, &qy).unwrap();
+        assert_eq!(restored.batches_ingested(), reference_batches + 1);
+    }
+
+    #[test]
+    fn top_k_of_truncates_and_tiebreaks_by_index() {
+        let top = top_k_of(&[1.0, 3.0, 3.0, -1.0], 3);
+        assert_eq!(top, vec![(1, 3.0), (2, 3.0), (0, 1.0)]);
+        assert_eq!(top_k_of(&[1.0], 5), vec![(0, 1.0)]);
+    }
+}

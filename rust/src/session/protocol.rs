@@ -1,0 +1,406 @@
+//! NDJSON command protocol backing `stiknn serve` (DESIGN.md §9).
+//!
+//! One JSON object per input line, one JSON response per output line,
+//! flushed after every response so a fronting service can drive the
+//! session over a pipe without buffering games. Malformed input and
+//! failed commands produce `{"ok":false,"error":...}` and the loop keeps
+//! serving — only `shutdown` (or EOF on stdin) ends it.
+//!
+//! Commands:
+//!
+//! ```text
+//! {"cmd":"ingest","x":[...flattened features...],"y":[...labels...]}
+//! {"cmd":"query","i":0,"j":1}        → one averaged cell
+//! {"cmd":"query","i":0}              → one averaged row
+//! {"cmd":"topk","k":10,"by":"main"}  → top-k point values (by: main|rowsum)
+//! {"cmd":"stats"}                    → summary statistics
+//! {"cmd":"snapshot","path":"x.snap"} → persist the session (store.rs)
+//! {"cmd":"shutdown"}                 → acknowledge and exit
+//! ```
+
+use super::{TopBy, ValuationSession};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Drive `session` from NDJSON commands on `input`, writing NDJSON
+/// responses to `output`, until `shutdown` or EOF.
+///
+/// Reads lines as BYTES (not `BufRead::lines`): a non-UTF-8 byte from a
+/// buggy client must produce an `{"ok":false}` response like any other
+/// malformed input, not an io error that kills the session. Real I/O
+/// failures (broken pipe, closed fd) still end the loop via `Err`.
+pub fn serve<R: BufRead, W: Write>(
+    session: &mut ValuationSession,
+    mut input: R,
+    mut output: W,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        if input.read_until(b'\n', &mut buf)? == 0 {
+            break; // EOF
+        }
+        // Lossy conversion: invalid bytes become U+FFFD, which then fails
+        // JSON parsing and is answered as a per-line error.
+        let line = String::from_utf8_lossy(&buf);
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (response, shutdown) = handle(session, trimmed);
+        writeln!(output, "{response}")?;
+        output.flush()?;
+        if shutdown {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Execute one command line → (response, shutdown?). Never panics on
+/// untrusted input; every failure is a `{"ok":false}` response.
+pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
+    let v = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return (err(format!("bad json: {e}")), false),
+    };
+    let Some(cmd) = v.get("cmd").and_then(Json::as_str).map(str::to_string) else {
+        return (err("missing string field 'cmd'"), false);
+    };
+    let result = match cmd.as_str() {
+        "ingest" => do_ingest(session, &v),
+        "query" => do_query(session, &v),
+        "topk" => do_topk(session, &v),
+        "stats" => Ok(stats_json(session)),
+        "snapshot" => do_snapshot(session, &v),
+        "shutdown" => {
+            return (
+                ok("shutdown", vec![("shutdown", Json::Bool(true))]),
+                true,
+            )
+        }
+        other => Err(format!(
+            "unknown command '{other}' (expected ingest|query|topk|stats|snapshot|shutdown)"
+        )),
+    };
+    match result {
+        Ok(j) => (j, false),
+        Err(msg) => (err(msg), false),
+    }
+}
+
+fn err(msg: impl Into<String>) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg.into())),
+    ])
+}
+
+fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true)), ("cmd", Json::str(cmd))];
+    all.extend(fields);
+    Json::obj(all)
+}
+
+const EMPTY: &str = "no test points ingested yet or index out of range";
+
+fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, String> {
+    let xs = v
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "ingest needs a numeric array 'x' (flattened features)".to_string())?;
+    let ys = v
+        .get("y")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "ingest needs an integer array 'y' (labels)".to_string())?;
+    let mut test_x = Vec::with_capacity(xs.len());
+    for e in xs {
+        let f = e
+            .as_f64()
+            .ok_or_else(|| "non-numeric entry in 'x'".to_string())?;
+        // Reject rather than narrow: "1e400" parses to f64 ∞, and finite
+        // f64s beyond f32 range cast to ∞ — either would fold garbage
+        // distances into the shared accumulator forever while this
+        // command answered ok:true.
+        if !f.is_finite() || f.abs() > f32::MAX as f64 {
+            return Err("entry in 'x' is not a finite f32-range number".to_string());
+        }
+        test_x.push(f as f32);
+    }
+    let mut test_y = Vec::with_capacity(ys.len());
+    for e in ys {
+        // `as i32` would saturate out-of-range labels to ±i32::MAX and
+        // silently misclassify the point — reject instead.
+        let f = e.as_f64().filter(|f| {
+            f.fract() == 0.0 && *f >= i32::MIN as f64 && *f <= i32::MAX as f64
+        });
+        let f = f.ok_or_else(|| "entry in 'y' must be an integer label in i32 range".to_string())?;
+        test_y.push(f as i32);
+    }
+    let ingested = session
+        .ingest(&test_x, &test_y)
+        .map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "ingest",
+        vec![
+            ("ingested", Json::num(ingested as f64)),
+            ("tests", Json::num(session.tests_seen() as f64)),
+            ("batches", Json::num(session.batches_ingested() as f64)),
+        ],
+    ))
+}
+
+fn do_query(session: &ValuationSession, v: &Json) -> Result<Json, String> {
+    let i = v
+        .get("i")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "query needs a train index 'i'".to_string())?;
+    match v.get("j") {
+        Some(j) => {
+            let j = j
+                .as_usize()
+                .ok_or_else(|| "'j' must be a train index".to_string())?;
+            let value = session.cell(i, j).ok_or_else(|| EMPTY.to_string())?;
+            Ok(ok(
+                "query",
+                vec![
+                    ("i", Json::num(i as f64)),
+                    ("j", Json::num(j as f64)),
+                    ("value", Json::num(value)),
+                ],
+            ))
+        }
+        None => {
+            let row = session.row(i).ok_or_else(|| EMPTY.to_string())?;
+            Ok(ok(
+                "query",
+                vec![
+                    ("i", Json::num(i as f64)),
+                    ("row", Json::arr(row.into_iter().map(Json::num))),
+                ],
+            ))
+        }
+    }
+}
+
+fn do_topk(session: &ValuationSession, v: &Json) -> Result<Json, String> {
+    let k = match v.get("k") {
+        None => 10,
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| "'k' must be a non-negative integer".to_string())?,
+    };
+    let by = match v.get("by") {
+        None => TopBy::Main,
+        Some(x) => x
+            .as_str()
+            .and_then(TopBy::parse)
+            .ok_or_else(|| "'by' must be main or rowsum".to_string())?,
+    };
+    let entries = session
+        .top_k(k, by)
+        .ok_or_else(|| "no test points ingested yet".to_string())?;
+    Ok(ok(
+        "topk",
+        vec![
+            ("by", Json::str(by.label())),
+            (
+                "points",
+                Json::arr(entries.iter().map(|&(index, value)| {
+                    Json::obj(vec![
+                        ("index", Json::num(index as f64)),
+                        ("value", Json::num(value)),
+                    ])
+                })),
+            ),
+        ],
+    ))
+}
+
+fn stats_json(session: &ValuationSession) -> Json {
+    let st = session.stats();
+    ok(
+        "stats",
+        vec![
+            ("n", Json::num(st.n as f64)),
+            ("k", Json::num(st.k as f64)),
+            ("tests", Json::num(st.tests as f64)),
+            ("batches", Json::num(st.batches as f64)),
+            ("trace", Json::num(st.trace)),
+            ("mean_offdiag", Json::num(st.mean_offdiag)),
+            ("upper_sum", Json::num(st.upper_sum)),
+        ],
+    )
+}
+
+fn do_snapshot(session: &ValuationSession, v: &Json) -> Result<Json, String> {
+    let path = v
+        .get("path")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "snapshot needs a string 'path'".to_string())?;
+    let bytes = session
+        .save(Path::new(path))
+        .map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "snapshot",
+        vec![
+            ("path", Json::str(path)),
+            ("bytes", Json::num(bytes as f64)),
+        ],
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SessionConfig;
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::io::Cursor;
+
+    fn tiny_session() -> ValuationSession {
+        let mut rng = Rng::new(3);
+        let n = 8;
+        let d = 2;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        ValuationSession::new(train_x, train_y, d, SessionConfig::new(3)).unwrap()
+    }
+
+    fn responses(input: &str) -> Vec<Json> {
+        let mut session = tiny_session();
+        let mut out = Vec::new();
+        serve(&mut session, Cursor::new(input.as_bytes().to_vec()), &mut out).unwrap();
+        String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("every response line is valid JSON"))
+            .collect()
+    }
+
+    #[test]
+    fn full_round_trip() {
+        let snap = std::env::temp_dir().join(format!(
+            "stiknn_protocol_{}_roundtrip.snap",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&snap);
+        let input = format!(
+            concat!(
+                r#"{{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}}"#, "\n",
+                r#"{{"cmd":"query","i":0,"j":1}}"#, "\n",
+                r#"{{"cmd":"query","i":2}}"#, "\n",
+                r#"{{"cmd":"topk","k":3,"by":"rowsum"}}"#, "\n",
+                r#"{{"cmd":"stats"}}"#, "\n",
+                r#"{{"cmd":"snapshot","path":"{}"}}"#, "\n",
+                r#"{{"cmd":"shutdown"}}"#, "\n",
+            ),
+            snap.display()
+        );
+        let rs = responses(&input);
+        assert_eq!(rs.len(), 7);
+        for r in &rs {
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        }
+        assert_eq!(rs[0].get("ingested").unwrap().as_usize(), Some(2));
+        assert_eq!(rs[0].get("tests").unwrap().as_usize(), Some(2));
+        assert!(rs[1].get("value").unwrap().as_f64().is_some());
+        assert_eq!(rs[2].get("row").unwrap().as_arr().unwrap().len(), 8);
+        assert_eq!(rs[3].get("points").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(rs[4].get("tests").unwrap().as_usize(), Some(2));
+        assert!(snap.exists(), "snapshot file written");
+        assert_eq!(rs[6].get("shutdown").unwrap().as_bool(), Some(true));
+        let _ = std::fs::remove_file(&snap);
+    }
+
+    #[test]
+    fn errors_do_not_kill_the_loop() {
+        let input = concat!(
+            "this is not json\n",
+            r#"{"nocmd":1}"#, "\n",
+            r#"{"cmd":"frobnicate"}"#, "\n",
+            r#"{"cmd":"query","i":0,"j":1}"#, "\n", // empty session → error
+            r#"{"cmd":"ingest","x":[0.1,0.2],"y":[0.5]}"#, "\n", // non-integer label
+            r#"{"cmd":"ingest","x":[0.1],"y":[0]}"#, "\n", // shape mismatch
+            r#"{"cmd":"stats"}"#, "\n",
+        );
+        let rs = responses(input);
+        assert_eq!(rs.len(), 7);
+        for r in &rs[..6] {
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+            assert!(r.get("error").unwrap().as_str().is_some());
+        }
+        // the loop survived everything above
+        assert_eq!(rs[6].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(rs[6].get("tests").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn ingest_rejects_out_of_range_input_without_corrupting_state() {
+        let input = concat!(
+            // f64 infinity via over-range literal
+            r#"{"cmd":"ingest","x":[1e400,0.0],"y":[0]}"#, "\n",
+            // finite f64 beyond f32 range would cast to f32 ∞
+            r#"{"cmd":"ingest","x":[1e39,0.0],"y":[0]}"#, "\n",
+            // integer label outside i32 range would saturate
+            r#"{"cmd":"ingest","x":[0.1,0.2],"y":[3000000000]}"#, "\n",
+            r#"{"cmd":"stats"}"#, "\n",
+        );
+        let rs = responses(input);
+        assert_eq!(rs.len(), 4);
+        for r in &rs[..3] {
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+        }
+        // nothing leaked into the accumulator
+        assert_eq!(rs[3].get("tests").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn shutdown_stops_processing_later_lines() {
+        let input = concat!(
+            r#"{"cmd":"shutdown"}"#, "\n",
+            r#"{"cmd":"stats"}"#, "\n",
+        );
+        let rs = responses(input);
+        assert_eq!(rs.len(), 1, "nothing after shutdown is answered");
+    }
+
+    #[test]
+    fn blank_lines_are_skipped() {
+        let rs = responses("\n   \n{\"cmd\":\"stats\"}\n");
+        assert_eq!(rs.len(), 1);
+    }
+
+    #[test]
+    fn invalid_utf8_input_gets_an_error_response_not_a_dead_session() {
+        let mut input: Vec<u8> = Vec::new();
+        input.extend_from_slice(b"\xff\xfe not utf8 \xff\n");
+        input.extend_from_slice(b"{\"cmd\":\"stats\"}\n");
+        let mut session = tiny_session();
+        let mut out = Vec::new();
+        serve(&mut session, Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let rs: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(rs.len(), 2, "{text}");
+        assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(rs[1].get("ok").unwrap().as_bool(), Some(true), "loop survived");
+    }
+
+    #[test]
+    fn ingested_values_match_direct_session_use() {
+        let mut a = tiny_session();
+        let mut b = tiny_session();
+        let qx = [0.5f32, 0.5, -1.0, 0.25];
+        let qy = [0i32, 1];
+        a.ingest(&qx, &qy).unwrap();
+        let (resp, _) = handle(
+            &mut b,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (cell, _) = handle(&mut b, r#"{"cmd":"query","i":0,"j":1}"#);
+        let via_protocol = cell.get("value").unwrap().as_f64().unwrap();
+        assert_eq!(via_protocol.to_bits(), a.cell(0, 1).unwrap().to_bits());
+    }
+}

@@ -1,0 +1,456 @@
+//! Versioned binary snapshot store for [`ValuationSession`]s
+//! (DESIGN.md §9).
+//!
+//! A snapshot captures everything a session needs to resume exactly where
+//! it left off: the RAW (unnormalized) accumulator, the test count, and
+//! the per-batch weight ledger, guarded by enough metadata to refuse a
+//! mismatched resume (k, metric, train-set fingerprint). Restore is
+//! **bit-identical**: f64 cells round-trip through `to_le_bytes`/
+//! `from_le_bytes`, which preserve every bit pattern including ±0 and
+//! NaN payloads, so a snapshot/restore cycle mid-stream cannot perturb
+//! the final matrix (asserted by `tests/session_equivalence.rs`).
+//!
+//! ## Format (version 1, all integers and floats little-endian)
+//!
+//! ```text
+//! offset  size        field
+//! 0       8           magic  b"STIKNNSS"
+//! 8       4           format version (u32) = 1
+//! 12      4           k (u32)
+//! 16      1           metric tag (u8): 0 = sqeuclidean, 1 = manhattan, 2 = cosine
+//! 17      8           n, train-set size (u64)
+//! 25      8           d, feature dimension (u64)
+//! 33      8           train-set fingerprint (u64, FNV-1a over d, n, features, labels)
+//! 41      8           total test points ingested (u64)
+//! 49      8           ledger length L (u64)
+//! 57      16·L        ledger entries: (seq u64, len u64) per ingested batch
+//! 57+16L  8·n²        raw accumulator, row-major f64 (upper triangle + diagonal)
+//! end−8   8           FNV-1a checksum over every preceding byte (u64)
+//! ```
+
+use super::BatchRecord;
+use crate::knn::distance::Metric;
+use crate::util::matrix::Matrix;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// First 8 bytes of every snapshot file.
+pub const MAGIC: [u8; 8] = *b"STIKNNSS";
+
+/// Current snapshot format version.
+pub const VERSION: u32 = 1;
+
+/// Decoded snapshot metadata (everything but the ledger and the matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnapshotHeader {
+    pub version: u32,
+    pub k: u32,
+    pub metric: Metric,
+    pub n: u64,
+    pub d: u64,
+    pub fingerprint: u64,
+    pub tests: u64,
+    /// Ledger ENTRY count — after compaction one entry may cover many
+    /// ingests; the lifetime batch count is `last ledger seq + 1`.
+    pub batches: u64,
+}
+
+/// A fully decoded (and checksum-verified) snapshot.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub header: SnapshotHeader,
+    pub ledger: Vec<BatchRecord>,
+    /// RAW accumulator as stored: unnormalized, upper triangle + diagonal
+    /// populated, strict lower triangle all zeros.
+    pub raw: Matrix,
+}
+
+impl Snapshot {
+    /// The averaged interaction matrix this snapshot represents (mirror +
+    /// scale by 1/tests, exactly like the live session / one-shot
+    /// `sti_knn`). `None` before any test points were ingested.
+    pub fn averaged_matrix(&self) -> Option<Matrix> {
+        if self.header.tests == 0 {
+            return None;
+        }
+        let mut m = self.raw.clone();
+        m.mirror_upper_to_lower();
+        m.scale(1.0 / self.header.tests as f64);
+        Some(m)
+    }
+
+    /// Top-k point values straight from the snapshot (no training data
+    /// needed). `None` before any test points were ingested.
+    pub fn top_k(&self, k: usize, by: super::TopBy) -> Option<Vec<(usize, f64)>> {
+        if self.header.tests == 0 {
+            return None;
+        }
+        let values = super::point_values_raw(&self.raw, 1.0 / self.header.tests as f64, by);
+        Some(super::top_k_of(&values, k))
+    }
+}
+
+/// Stable wire tag for a metric (part of the snapshot format — never
+/// renumber existing variants).
+pub fn metric_tag(metric: Metric) -> u8 {
+    match metric {
+        Metric::SqEuclidean => 0,
+        Metric::Manhattan => 1,
+        Metric::Cosine => 2,
+    }
+}
+
+/// Inverse of [`metric_tag`].
+pub fn metric_from_tag(tag: u8) -> Option<Metric> {
+    match tag {
+        0 => Some(Metric::SqEuclidean),
+        1 => Some(Metric::Manhattan),
+        2 => Some(Metric::Cosine),
+        _ => None,
+    }
+}
+
+/// Incremental FNV-1a (64-bit) — the snapshot checksum and the train-set
+/// fingerprint hash. Not cryptographic; detects corruption and honest
+/// mismatches, which is the contract here.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Identity of a training set for snapshot-compatibility checks: FNV-1a
+/// over (d, n, feature bits, labels). Two train sets fingerprint equal
+/// iff they are bitwise the same data in the same order — exactly the
+/// condition under which a resumed session keeps producing bit-identical
+/// results.
+pub fn dataset_fingerprint(train_x: &[f32], train_y: &[i32], d: usize) -> u64 {
+    let mut h = Fnv::new();
+    h.write(&(d as u64).to_le_bytes());
+    h.write(&(train_y.len() as u64).to_le_bytes());
+    for v in train_x {
+        h.write(&v.to_le_bytes());
+    }
+    for v in train_y {
+        h.write(&v.to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Serialize one snapshot to its byte representation.
+#[allow(clippy::too_many_arguments)]
+pub fn encode(
+    k: u32,
+    metric: Metric,
+    n: u64,
+    d: u64,
+    fingerprint: u64,
+    tests: u64,
+    ledger: &[BatchRecord],
+    raw: &[f64],
+) -> Vec<u8> {
+    assert_eq!(raw.len() as u64, n * n, "raw accumulator shape mismatch");
+    let mut out = Vec::with_capacity(57 + 16 * ledger.len() + 8 * raw.len() + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&k.to_le_bytes());
+    out.push(metric_tag(metric));
+    out.extend_from_slice(&n.to_le_bytes());
+    out.extend_from_slice(&d.to_le_bytes());
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&tests.to_le_bytes());
+    out.extend_from_slice(&(ledger.len() as u64).to_le_bytes());
+    for rec in ledger {
+        out.extend_from_slice(&rec.seq.to_le_bytes());
+        out.extend_from_slice(&rec.len.to_le_bytes());
+    }
+    for v in raw {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut h = Fnv::new();
+    h.write(&out);
+    let checksum = h.finish();
+    out.extend_from_slice(&checksum.to_le_bytes());
+    out
+}
+
+/// Byte-stream cursor for decoding.
+struct Rd<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + len <= self.bytes.len(),
+            "snapshot truncated at byte {} (wanted {} more)",
+            self.pos,
+            len
+        );
+        let s = &self.bytes[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Decode and fully validate a snapshot byte stream (magic, version,
+/// checksum, internal consistency).
+pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
+    ensure!(bytes.len() >= 57 + 8, "snapshot too short ({} bytes)", bytes.len());
+    // Checksum first: everything else assumes intact bytes.
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let mut h = Fnv::new();
+    h.write(body);
+    ensure!(
+        h.finish() == stored,
+        "snapshot checksum mismatch (file corrupt or not a snapshot)"
+    );
+
+    let mut rd = Rd { bytes: body, pos: 0 };
+    let magic = rd.take(8)?;
+    ensure!(magic == &MAGIC[..], "bad snapshot magic {:02x?}", magic);
+    let version = rd.u32()?;
+    if version != VERSION {
+        bail!("unsupported snapshot version {version} (this build reads version {VERSION})");
+    }
+    let k = rd.u32()?;
+    let metric_tag = rd.u8()?;
+    let Some(metric) = metric_from_tag(metric_tag) else {
+        bail!("unknown metric tag {metric_tag} in snapshot");
+    };
+    let n = rd.u64()?;
+    let d = rd.u64()?;
+    let fingerprint = rd.u64()?;
+    let tests = rd.u64()?;
+    let ledger_len = rd.u64()?;
+
+    // Shape sanity BEFORE allocating anything sized by file contents: the
+    // remaining body must be exactly ledger + matrix. Every multiplication
+    // is checked — a crafted header must produce a clean error, not a
+    // wrap-around that defeats this guard (the checksum is FNV, not a MAC,
+    // so headers are attacker-controllable).
+    let expected = (ledger_len as usize).checked_mul(16).and_then(|l| {
+        (n as usize)
+            .checked_mul(n as usize)
+            .and_then(|m| m.checked_mul(8))
+            .map(|mb| (l, mb))
+    });
+    let Some(expected_bytes) = expected
+        .and_then(|(ledger_bytes, matrix_bytes)| ledger_bytes.checked_add(matrix_bytes))
+    else {
+        bail!("snapshot header sizes overflow (n={n}, ledger={ledger_len})");
+    };
+    ensure!(
+        body.len() - rd.pos == expected_bytes,
+        "snapshot body is {} bytes but header implies {} (n={n}, ledger={ledger_len})",
+        body.len() - rd.pos,
+        expected_bytes
+    );
+
+    let mut ledger = Vec::with_capacity(ledger_len as usize);
+    let mut ledger_total = 0u64;
+    for _ in 0..ledger_len {
+        let seq = rd.u64()?;
+        let len = rd.u64()?;
+        ledger_total = ledger_total
+            .checked_add(len)
+            .ok_or_else(|| anyhow::anyhow!("weight ledger sum overflows u64"))?;
+        ledger.push(BatchRecord { seq, len });
+    }
+    ensure!(
+        ledger_total == tests,
+        "weight ledger sums to {ledger_total} but snapshot records {tests} tests"
+    );
+
+    let cells = (n * n) as usize;
+    let mut raw = Vec::with_capacity(cells);
+    for _ in 0..cells {
+        raw.push(rd.f64()?);
+    }
+
+    Ok(Snapshot {
+        header: SnapshotHeader {
+            version,
+            k,
+            metric,
+            n,
+            d,
+            fingerprint,
+            tests,
+            batches: ledger_len,
+        },
+        ledger,
+        raw: Matrix::from_vec(n as usize, n as usize, raw),
+    })
+}
+
+/// Read + decode a snapshot file.
+pub fn read_snapshot(path: &Path) -> Result<Snapshot> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    decode(&bytes).with_context(|| format!("decoding snapshot {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let raw: Vec<f64> = (0..9).map(|i| i as f64 * 0.25 - 1.0).collect();
+        encode(
+            3,
+            Metric::SqEuclidean,
+            3,
+            2,
+            0xDEAD_BEEF,
+            5,
+            &[BatchRecord { seq: 0, len: 2 }, BatchRecord { seq: 1, len: 3 }],
+            &raw,
+        )
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything_bitwise() {
+        let bytes = sample();
+        let snap = decode(&bytes).unwrap();
+        assert_eq!(snap.header.version, VERSION);
+        assert_eq!(snap.header.k, 3);
+        assert_eq!(snap.header.metric, Metric::SqEuclidean);
+        assert_eq!(snap.header.n, 3);
+        assert_eq!(snap.header.d, 2);
+        assert_eq!(snap.header.fingerprint, 0xDEAD_BEEF);
+        assert_eq!(snap.header.tests, 5);
+        assert_eq!(snap.header.batches, 2);
+        assert_eq!(snap.ledger, vec![
+            BatchRecord { seq: 0, len: 2 },
+            BatchRecord { seq: 1, len: 3 },
+        ]);
+        for (i, v) in snap.raw.data().iter().enumerate() {
+            assert_eq!(v.to_bits(), (i as f64 * 0.25 - 1.0).to_bits());
+        }
+        // re-encoding the decoded snapshot reproduces the bytes exactly
+        let again = encode(3, Metric::SqEuclidean, 3, 2, 0xDEAD_BEEF, 5, &snap.ledger,
+            snap.raw.data());
+        assert_eq!(bytes, again);
+    }
+
+    #[test]
+    fn nan_and_negative_zero_cells_survive() {
+        let raw = vec![f64::NAN, -0.0, f64::INFINITY, 1.5];
+        let bytes = encode(1, Metric::Cosine, 2, 1, 7, 1,
+            &[BatchRecord { seq: 0, len: 1 }], &raw);
+        let snap = decode(&bytes).unwrap();
+        for (a, b) in raw.iter().zip(snap.raw.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let mut bytes = sample();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let bytes = sample();
+        assert!(decode(&bytes[..bytes.len() - 9]).is_err());
+        assert!(decode(&bytes[..20]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample();
+        bytes[0] = b'X';
+        // checksum fails first (it covers the magic); flipping magic AND
+        // refreshing the checksum must then hit the magic check itself
+        let body_len = bytes.len() - 8;
+        let mut h = Fnv::new();
+        h.write(&bytes[..body_len]);
+        let sum = h.finish().to_le_bytes();
+        bytes[body_len..].copy_from_slice(&sum);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn future_version_rejected_with_clear_error() {
+        let mut bytes = sample();
+        bytes[8..12].copy_from_slice(&9u32.to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let mut h = Fnv::new();
+        h.write(&bytes[..body_len]);
+        let sum = h.finish().to_le_bytes();
+        bytes[body_len..].copy_from_slice(&sum);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
+    }
+
+    #[test]
+    fn ledger_total_must_match_tests() {
+        let raw = vec![0.0; 4];
+        let bytes = encode(1, Metric::SqEuclidean, 2, 1, 0, 99,
+            &[BatchRecord { seq: 0, len: 1 }], &raw);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("ledger"), "{err}");
+    }
+
+    #[test]
+    fn metric_tags_are_stable_and_invertible() {
+        for m in [Metric::SqEuclidean, Metric::Manhattan, Metric::Cosine] {
+            assert_eq!(metric_from_tag(metric_tag(m)), Some(m));
+        }
+        assert_eq!(metric_from_tag(3), None);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_data_and_layout() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let y = vec![0i32, 1];
+        let base = dataset_fingerprint(&x, &y, 2);
+        assert_eq!(base, dataset_fingerprint(&x, &y, 2), "deterministic");
+        let mut x2 = x.clone();
+        x2[3] = 4.0000005;
+        assert_ne!(base, dataset_fingerprint(&x2, &y, 2), "feature change");
+        assert_ne!(base, dataset_fingerprint(&x, &[0, 0], 2), "label change");
+        assert_ne!(
+            base,
+            dataset_fingerprint(&x, &[0, 1, 0, 1], 1),
+            "same bytes, different shape"
+        );
+    }
+}

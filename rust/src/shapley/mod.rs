@@ -11,4 +11,7 @@ pub mod sii;
 pub mod sti_exact;
 pub mod sti_knn;
 
-pub use sti_knn::{prepare_batch, sti_knn, sti_knn_partial, sweep_band, PreparedBatch, StiParams};
+pub use sti_knn::{
+    prepare_batch, sti_knn, sti_knn_accumulate, sti_knn_partial, sweep_band, PREP_BATCH,
+    PreparedBatch, StiParams,
+};

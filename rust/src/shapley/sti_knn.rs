@@ -75,12 +75,15 @@ impl StiParams {
 
 /// Test points per prepared batch in the single-threaded path (§Perf): the
 /// assembly loop is memory-bound on the n×n accumulator if it streams the
-/// whole matrix once per test point, so we batch `BATCH` test points'
+/// whole matrix once per test point, so we batch `PREP_BATCH` test points'
 /// (rank, column-value) rows and sweep the accumulator ONCE per batch,
 /// iterating the batch in the middle loop — the accumulator row stays in
 /// L1/L2 across all test points of the batch (measured 0.81 → 0.27
-/// ns/pair-cell at n=600; see EXPERIMENTS.md §Perf).
-const BATCH: usize = 64;
+/// ns/pair-cell at n=600; see EXPERIMENTS.md §Perf). Public so the
+/// session layer and benches can reason about the internal chunking
+/// (chunk boundaries never change any cell's addition order, so the
+/// choice is a pure perf knob — see `two_phase_composition_equals_partial`).
+pub const PREP_BATCH: usize = 64;
 
 /// Phase-1 output for a block of test points: everything the O(n²) sweep
 /// needs, laid out for the branchless select-add inner loop. Memory is
@@ -256,6 +259,43 @@ pub fn sweep_band(
     }
 }
 
+/// Accumulate one test batch's unnormalized contribution Σ_p Φ(u_p) into
+/// an EXISTING n×n accumulator (upper triangle + diagonal, like
+/// [`sweep_band`]) and return the batch's merge weight (its test count,
+/// Eq. 9). This is the streaming-ingest primitive the session layer
+/// (`crate::session`) builds on: because every cell's additions are
+/// applied in test order regardless of how the stream is cut into
+/// batches, ingesting any contiguous partition of a test set through
+/// repeated calls is bit-identical to one [`sti_knn_partial`] run over
+/// the whole set (DESIGN.md §9).
+pub fn sti_knn_accumulate(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    acc: &mut Matrix,
+) -> f64 {
+    let n = train_y.len();
+    params.validate(n);
+    assert_eq!(train_x.len(), n * d, "train shape mismatch");
+    assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
+    assert_eq!(
+        (acc.rows(), acc.cols()),
+        (n, n),
+        "accumulator shape mismatch"
+    );
+    for (chunk_x, chunk_y) in test_x
+        .chunks(PREP_BATCH * d)
+        .zip(test_y.chunks(PREP_BATCH))
+    {
+        let batch = prepare_batch(train_x, train_y, d, chunk_x, chunk_y, params);
+        sweep_band(&batch, train_y, 0, n, acc.data_mut());
+    }
+    test_y.len() as f64
+}
+
 /// Partial (unnormalized) STI-KNN over a slice of the test set: returns
 /// (Σ_p Φ(u_p), weight = number of test points). This is the unit of work
 /// the test-sharded coordinator path shards and merges (Eq. 9 linearity);
@@ -270,15 +310,10 @@ pub fn sti_knn_partial(
 ) -> (Matrix, f64) {
     let n = train_y.len();
     params.validate(n);
-    assert_eq!(train_x.len(), n * d, "train shape mismatch");
-    assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
     let mut acc = Matrix::zeros(n, n);
-    for (chunk_x, chunk_y) in test_x.chunks(BATCH * d).zip(test_y.chunks(BATCH)) {
-        let batch = prepare_batch(train_x, train_y, d, chunk_x, chunk_y, params);
-        sweep_band(&batch, train_y, 0, n, acc.data_mut());
-    }
+    let weight = sti_knn_accumulate(train_x, train_y, d, test_x, test_y, params, &mut acc);
     acc.mirror_upper_to_lower();
-    (acc, test_y.len() as f64)
+    (acc, weight)
 }
 
 /// The full STI-KNN interaction matrix, averaged over the test set
@@ -456,7 +491,7 @@ mod tests {
 
     #[test]
     fn two_phase_composition_equals_partial() {
-        // prepare_batch + sweep_band over [0, n) in BATCH-sized chunks is
+        // prepare_batch + sweep_band over [0, n) in PREP_BATCH-sized chunks is
         // exactly sti_knn_partial (which is implemented that way), and a
         // different chunking agrees to the bit as well: chunk boundaries
         // don't change any cell's per-test addition order.
@@ -482,6 +517,39 @@ mod tests {
             );
             weight += batch.weight();
             sweep_band(&batch, &train_y, 0, n, acc.data_mut());
+        }
+        acc.mirror_upper_to_lower();
+        assert_eq!(weight, t as f64);
+        for (a, b) in reference.data().iter().zip(acc.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn accumulate_over_contiguous_batches_is_bit_identical_to_partial() {
+        // The streaming-ingest contract: cutting the test stream into any
+        // contiguous batches and accumulating them in order leaves every
+        // cell's addition sequence unchanged, so the raw accumulator bits
+        // match a single sti_knn_partial over the whole set.
+        let mut rng = Rng::new(91);
+        let n = 17;
+        let d = 3;
+        let t = 10;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let params = StiParams::new(4);
+
+        let (reference, w) = sti_knn_partial(&train_x, &train_y, d, &test_x, &test_y, &params);
+        assert_eq!(w, t as f64);
+
+        let mut acc = Matrix::zeros(n, n);
+        let mut weight = 0.0;
+        for (lo, hi) in [(0usize, 1usize), (1, 6), (6, 10)] {
+            weight += sti_knn_accumulate(
+                &train_x, &train_y, d, &test_x[lo * d..hi * d], &test_y[lo..hi], &params, &mut acc,
+            );
         }
         acc.mirror_upper_to_lower();
         assert_eq!(weight, t as f64);

@@ -68,6 +68,12 @@ impl Args {
     }
 }
 
+/// True when an argv slice asks for help (`--help` / `-h`) — shared by
+/// every subcommand so the convention can't drift.
+pub fn wants_help(argv: &[String]) -> bool {
+    argv.iter().any(|a| a == "--help" || a == "-h")
+}
+
 /// A command: name, help, options. Parse an argv slice against it.
 pub struct Command {
     pub name: &'static str,
@@ -249,5 +255,13 @@ mod tests {
         for name in ["dataset", "k", "out", "verbose"] {
             assert!(u.contains(name));
         }
+    }
+
+    #[test]
+    fn wants_help_detects_both_spellings_anywhere() {
+        assert!(wants_help(&argv(&["--dataset", "moon", "--help"])));
+        assert!(wants_help(&argv(&["-h"])));
+        assert!(!wants_help(&argv(&["--helpful"])));
+        assert!(!wants_help(&argv(&[])));
     }
 }

@@ -19,6 +19,12 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum container nesting depth. The parser is recursive, and it sits
+/// on untrusted surfaces (the serve protocol's stdin) — without a cap, a
+/// single line of ~100k `[`s would overflow the stack and abort the
+/// process instead of producing a parse error.
+const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
@@ -26,7 +32,7 @@ impl Json {
             pos: 0,
         };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.pos != p.src.len() {
             return Err(p.err("trailing characters"));
@@ -158,10 +164,13 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -180,7 +189,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, JsonError> {
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.eat(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -194,7 +203,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.eat(b':')?;
             self.skip_ws();
-            let val = self.value()?;
+            let val = self.value(depth + 1)?;
             map.insert(key, val);
             self.skip_ws();
             match self.peek() {
@@ -208,7 +217,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, JsonError> {
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.eat(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -218,7 +227,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.pos += 1,
@@ -356,7 +365,14 @@ fn write_json(v: &Json, out: &mut String) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no NaN/Infinity tokens; `{n}` would emit "NaN"
+                // and corrupt the stream (the serve protocol and BENCH
+                // artifacts both flow through here). Mirror the common
+                // serializer convention (e.g. Python's allow_nan=False
+                // alternatives, Go's strict mode): non-finite → null.
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 out.push_str(&format!("{}", *n as i64));
             } else {
                 out.push_str(&format!("{n}"));
@@ -447,5 +463,60 @@ mod tests {
     fn integer_display_has_no_decimal() {
         assert_eq!(Json::num(32.0).to_string(), "32");
         assert_eq!(Json::num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // `format!("{}", f64::NAN)` is "NaN" — not a JSON token. The
+        // writer must never emit it.
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = Json::num(v).to_string();
+            assert_eq!(text, "null");
+            assert_eq!(Json::parse(&text).unwrap(), Json::Null);
+        }
+        // ... including nested inside containers
+        let v = Json::obj(vec![("bad", Json::num(f64::NAN)), ("good", Json::num(2.0))]);
+        let text = v.to_string();
+        assert_eq!(text, r#"{"bad":null,"good":2}"#);
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn writer_escapes_round_trip_through_parser() {
+        // every byte class the writer escapes: quote, backslash, the
+        // named control escapes, and raw sub-0x20 controls
+        let nasty = "q\"uote b\\ackslash \n\r\t bell\u{7} esc\u{1b} nul\u{0} ok";
+        let v = Json::obj(vec![
+            ("plain", Json::str(nasty)),
+            // keys go through the same escaper as values
+            (nasty, Json::Bool(true)),
+        ]);
+        let text = v.to_string();
+        assert!(!text.contains('\u{7}'), "raw control byte leaked: {text}");
+        assert!(text.contains("\\u0007") && text.contains("\\u001b") && text.contains("\\u0000"));
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v, "round trip changed the value: {text}");
+        assert_eq!(back.get("plain").unwrap().as_str(), Some(nasty));
+    }
+
+    #[test]
+    fn unicode_strings_round_trip_unescaped() {
+        let v = Json::str("héllo ∀x — δ≤ε");
+        let text = v.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn pathological_nesting_errors_instead_of_overflowing_the_stack() {
+        // one untrusted serve-protocol line must never abort the process
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        // mixed object/array nesting hits the same cap
+        let bomb = "{\"a\":[".repeat(50_000);
+        assert!(Json::parse(&bomb).is_err());
+        // ... while reasonable nesting still parses
+        let fine = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&fine).is_ok());
     }
 }

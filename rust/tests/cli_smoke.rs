@@ -8,6 +8,12 @@ fn bin() -> &'static str {
 }
 
 fn run(args: &[&str]) -> (String, String, bool) {
+    let (stdout, stderr, code) = run_with_code(args);
+    (stdout, stderr, code == Some(0))
+}
+
+/// Like [`run`] but exposes the exact exit code.
+fn run_with_code(args: &[&str]) -> (String, String, Option<i32>) {
     let out = Command::new(bin())
         .args(args)
         .current_dir(env!("CARGO_MANIFEST_DIR"))
@@ -16,7 +22,7 @@ fn run(args: &[&str]) -> (String, String, bool) {
     (
         String::from_utf8_lossy(&out.stdout).into_owned(),
         String::from_utf8_lossy(&out.stderr).into_owned(),
-        out.status.success(),
+        out.status.code(),
     )
 }
 
@@ -24,15 +30,67 @@ fn run(args: &[&str]) -> (String, String, bool) {
 fn help_lists_subcommands() {
     let (stdout, _, ok) = run(&["--help"]);
     assert!(ok);
-    for sub in ["value", "analyze", "ksens", "mislabel", "datasets", "artifacts"] {
+    for sub in [
+        "value", "analyze", "ksens", "mislabel", "serve", "session", "datasets", "artifacts",
+    ] {
         assert!(stdout.contains(sub), "help missing {sub}: {stdout}");
     }
 }
 
 #[test]
 fn unknown_subcommand_fails_with_help() {
-    let (_, stderr, ok) = run(&["frobnicate"]);
-    assert!(!ok);
+    let (_, stderr, code) = run_with_code(&["frobnicate"]);
+    assert_eq!(code, Some(2), "unknown subcommand must exit 2");
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn version_flag_prints_crate_version() {
+    for spelling in [&["--version"][..], &["-V"][..]] {
+        let (stdout, _, ok) = run(spelling);
+        assert!(ok);
+        assert!(
+            stdout.contains(env!("CARGO_PKG_VERSION")),
+            "missing version in {stdout:?}"
+        );
+        assert!(stdout.starts_with("stiknn "), "{stdout:?}");
+    }
+}
+
+#[test]
+fn help_subcommand_prints_per_command_usage() {
+    // `stiknn help <sub>` must match what `<sub> --help` prints
+    let (via_help, _, ok) = run(&["help", "value"]);
+    assert!(ok);
+    let (via_flag, _, ok2) = run(&["value", "--help"]);
+    assert!(ok2);
+    assert_eq!(via_help, via_flag);
+    for opt in ["--dataset", "--k", "--out"] {
+        assert!(via_help.contains(opt), "help value missing {opt}: {via_help}");
+    }
+    // bare `help` falls back to the global overview
+    let (bare, _, ok3) = run(&["help"]);
+    assert!(ok3);
+    assert!(bare.contains("subcommands"));
+    // even the option-less subcommand honors the convention
+    let (ds_help, _, ok4) = run(&["datasets", "--help"]);
+    assert!(ok4);
+    assert!(ds_help.contains("no options"), "{ds_help}");
+}
+
+#[test]
+fn help_serve_documents_the_session_options() {
+    let (stdout, _, ok) = run(&["help", "serve"]);
+    assert!(ok);
+    for opt in ["NDJSON", "--restore", "--parallel-min", "--metric"] {
+        assert!(stdout.contains(opt), "help serve missing {opt}: {stdout}");
+    }
+}
+
+#[test]
+fn help_unknown_topic_exits_2() {
+    let (_, stderr, code) = run_with_code(&["help", "frobnicate"]);
+    assert_eq!(code, Some(2));
     assert!(stderr.contains("unknown subcommand"));
 }
 
@@ -117,6 +175,111 @@ fn k_larger_than_artifact_grid_falls_back_with_clear_error() {
         stderr.contains("make artifacts") || stderr.contains("--engine rust"),
         "unhelpful error: {stderr}"
     );
+}
+
+#[test]
+fn serve_completes_an_ingest_query_snapshot_shutdown_round_trip() {
+    use std::io::Write;
+    use stiknn::util::json::Json;
+
+    let snap = std::env::temp_dir().join(format!("stiknn_cli_serve_{}.snap", std::process::id()));
+    let _ = std::fs::remove_file(&snap);
+
+    let mut child = Command::new(bin())
+        .args(["serve", "--dataset", "moon", "--n-train", "30", "--k", "3"])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve");
+
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        // moon is d=2: three test points, flattened features
+        writeln!(
+            stdin,
+            r#"{{"cmd":"ingest","x":[0.1,0.2,1.0,-0.3,0.5,0.5],"y":[0,1,0]}}"#
+        )
+        .unwrap();
+        writeln!(stdin, r#"{{"cmd":"query","i":0,"j":1}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"topk","k":3,"by":"rowsum"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"stats"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"snapshot","path":"{}"}}"#, snap.display()).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+
+    let out = child.wait_with_output().unwrap();
+    assert!(
+        out.status.success(),
+        "serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let responses: Vec<Json> = stdout
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("invalid NDJSON line {l:?}: {e}")))
+        .collect();
+    assert_eq!(responses.len(), 6, "one response per command: {stdout}");
+    for r in &responses {
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    }
+    assert_eq!(responses[0].get("ingested").unwrap().as_usize(), Some(3));
+    assert!(responses[1].get("value").unwrap().as_f64().is_some());
+    assert_eq!(
+        responses[2].get("points").unwrap().as_arr().unwrap().len(),
+        3
+    );
+    assert_eq!(responses[3].get("tests").unwrap().as_usize(), Some(3));
+    assert_eq!(responses[3].get("n").unwrap().as_usize(), Some(30));
+    assert_eq!(responses[5].get("shutdown").unwrap().as_bool(), Some(true));
+
+    // the snapshot the server wrote is inspectable offline
+    let (stdout, stderr, ok) = run(&["session", "--file", snap.to_str().unwrap(), "--topk", "5"]);
+    assert!(ok, "session inspect failed: {stderr}");
+    assert!(stdout.contains("session snapshot"), "{stdout}");
+    assert!(stdout.contains("tests ingested"), "{stdout}");
+    assert!(stdout.contains("top-5"), "{stdout}");
+
+    // ... and a fresh serve can resume from it
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--restore", snap.to_str().unwrap(),
+        ])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --restore");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(stdin, r#"{{"cmd":"stats"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stats = Json::parse(stdout.lines().next().unwrap()).unwrap();
+    assert_eq!(stats.get("tests").unwrap().as_usize(), Some(3), "{stdout}");
+
+    let _ = std::fs::remove_file(&snap);
+}
+
+#[test]
+fn session_inspector_rejects_garbage_files() {
+    let bogus = std::env::temp_dir().join(format!("stiknn_cli_bogus_{}.snap", std::process::id()));
+    std::fs::write(&bogus, b"definitely not a snapshot").unwrap();
+    let (_, stderr, ok) = run(&["session", "--file", bogus.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(
+        stderr.contains("snapshot") || stderr.contains("checksum"),
+        "unhelpful error: {stderr}"
+    );
+    let _ = std::fs::remove_file(&bogus);
 }
 
 #[test]

@@ -1,0 +1,196 @@
+//! Streaming-equivalence properties for the session layer (ISSUE 2 /
+//! DESIGN.md §9): ingesting ANY contiguous partition of a test set, in
+//! stream order, with a snapshot/restore cycle at an arbitrary point
+//! mid-stream, is **bit-identical** to one-shot `sti_knn` — Eq. 9 is
+//! additive over test points and no batch boundary can reorder a cell's
+//! additions. Re-ordered batches are exact only up to f64 associativity,
+//! which is asserted separately (and deliberately NOT bitwise).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use stiknn::session::{SessionConfig, ValuationSession};
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+use stiknn::util::prop::{check, Gen};
+
+static SNAP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+fn temp_snapshot_path() -> PathBuf {
+    let unique = SNAP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "stiknn_session_equiv_{}_{unique}.snap",
+        std::process::id()
+    ))
+}
+
+struct Problem {
+    n: usize,
+    d: usize,
+    t: usize,
+    k: usize,
+    train_x: Vec<f32>,
+    train_y: Vec<i32>,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+}
+
+fn random_problem(g: &mut Gen) -> Problem {
+    let n = 2 + g.usize_in(2, 38);
+    let d = 1 + g.usize_in(0, 3);
+    let t = 1 + g.usize_in(0, 24);
+    let k = 1 + g.usize_in(0, n - 1);
+    let classes = 2 + g.usize_in(0, 2);
+    Problem {
+        n,
+        d,
+        t,
+        k,
+        train_x: g.features(n, d),
+        train_y: g.labels(n, classes),
+        test_x: g.features(t, d),
+        test_y: g.labels(t, classes),
+    }
+}
+
+/// A random contiguous partition of [0, t) into non-empty batches.
+fn random_partition(g: &mut Gen, t: usize) -> Vec<(usize, usize)> {
+    let mut cuts = vec![0, t];
+    for _ in 0..g.usize_in(0, 5) {
+        cuts.push(g.usize_in(0, t));
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+fn assert_bits_equal(a: &stiknn::util::matrix::Matrix, b: &stiknn::util::matrix::Matrix, ctx: &str) {
+    assert_eq!(a.data().len(), b.data().len(), "{ctx}: shape");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: cell {i} diverged ({x:e} vs {y:e})"
+        );
+    }
+}
+
+#[test]
+fn any_partition_with_snapshot_restore_is_bit_identical_to_one_shot() {
+    check("session streaming equivalence", 30, |g| {
+        let p = random_problem(g);
+        let reference = sti_knn(
+            &p.train_x, &p.train_y, p.d, &p.test_x, &p.test_y, &StiParams::new(p.k),
+        );
+
+        let batches = random_partition(g, p.t);
+        let snap_after = g.usize_in(0, batches.len() - 1);
+        let mut session = ValuationSession::new(
+            p.train_x.clone(),
+            p.train_y.clone(),
+            p.d,
+            SessionConfig::new(p.k),
+        )
+        .unwrap();
+
+        for (bi, &(lo, hi)) in batches.iter().enumerate() {
+            session
+                .ingest(&p.test_x[lo * p.d..hi * p.d], &p.test_y[lo..hi])
+                .unwrap();
+            if bi == snap_after {
+                // kill the session mid-stream and resurrect it from disk
+                let path = temp_snapshot_path();
+                session.save(&path).unwrap();
+                session = ValuationSession::restore(
+                    &path,
+                    p.train_x.clone(),
+                    p.train_y.clone(),
+                    p.d,
+                    SessionConfig::new(p.k),
+                )
+                .unwrap();
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+
+        assert_eq!(session.tests_seen(), p.t as u64);
+        assert_eq!(session.ledger().len(), batches.len());
+        let live = session.matrix().expect("non-empty session");
+        assert_bits_equal(
+            &reference,
+            &live,
+            &format!("partition {batches:?}, snapshot after batch {snap_after}"),
+        );
+    });
+}
+
+#[test]
+fn parallel_ingest_path_is_bit_identical_too() {
+    // Same property, forcing every batch through the coordinator's
+    // banded prep pool (parallel_min = 1) with multiple workers.
+    check("session parallel-path equivalence", 10, |g| {
+        let p = random_problem(g);
+        let reference = sti_knn(
+            &p.train_x, &p.train_y, p.d, &p.test_x, &p.test_y, &StiParams::new(p.k),
+        );
+        let batches = random_partition(g, p.t);
+        let workers = 1 + g.usize_in(0, 3);
+        let block = 1 + g.usize_in(0, 7);
+        let mut session = ValuationSession::new(
+            p.train_x.clone(),
+            p.train_y.clone(),
+            p.d,
+            SessionConfig::new(p.k)
+                .with_parallel_min(1)
+                .with_workers(workers)
+                .with_block_size(block),
+        )
+        .unwrap();
+        for &(lo, hi) in &batches {
+            session
+                .ingest(&p.test_x[lo * p.d..hi * p.d], &p.test_y[lo..hi])
+                .unwrap();
+        }
+        let live = session.matrix().expect("non-empty session");
+        assert_bits_equal(
+            &reference,
+            &live,
+            &format!("workers={workers} block={block} partition {batches:?}"),
+        );
+    });
+}
+
+#[test]
+fn reordered_batches_agree_to_float_tolerance_not_bits() {
+    // Ingesting the same batches in a DIFFERENT order changes per-cell
+    // f64 addition order, so the contract is ~1e-12 agreement (Eq. 9 is
+    // mathematically order-free; floats are not associative). This test
+    // documents that boundary of the bitwise guarantee.
+    check("session batch-order tolerance", 15, |g| {
+        let p = random_problem(g);
+        let batches = random_partition(g, p.t);
+        let build = |order: &[usize]| {
+            let mut s = ValuationSession::new(
+                p.train_x.clone(),
+                p.train_y.clone(),
+                p.d,
+                SessionConfig::new(p.k),
+            )
+            .unwrap();
+            for &bi in order {
+                let (lo, hi) = batches[bi];
+                s.ingest(&p.test_x[lo * p.d..hi * p.d], &p.test_y[lo..hi])
+                    .unwrap();
+            }
+            s.matrix().unwrap()
+        };
+        let forward: Vec<usize> = (0..batches.len()).collect();
+        let reversed: Vec<usize> = (0..batches.len()).rev().collect();
+        let a = build(&forward);
+        let b = build(&reversed);
+        let diff = a.max_abs_diff(&b);
+        assert!(
+            diff < 1e-12,
+            "reordered ingest diverged beyond tolerance: {diff:e} for {batches:?}"
+        );
+    });
+}
