@@ -11,6 +11,8 @@
 use crate::data::Dataset;
 use crate::knn::KnnClassifier;
 use crate::shapley::knn_shapley::knn_shapley;
+use crate::shapley::values::{sti_point_values, Engine};
+use crate::shapley::StiParams;
 use crate::util::rng::Rng;
 
 /// Accuracy trajectory of acquiring `step` pool points at a time.
@@ -49,6 +51,34 @@ pub fn value_order(ds: &Dataset, seed_size: usize, k: usize) -> Vec<usize> {
     let values = knn_shapley(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, k);
     let mut pool: Vec<usize> = (seed_size..ds.n_train()).collect();
     pool.sort_by(|&a, &b| values[b].partial_cmp(&values[a]).unwrap());
+    pool
+}
+
+/// Value-greedy acquisition order from STI per-point values (total
+/// rowsum, descending — acquire high main-effect-plus-synergy points
+/// first). `params` carries k AND the metric (so orders reproduce any
+/// session config's values); routes through the value engine:
+/// `Engine::Implicit` computes the order in O(t·n log n) with O(n)
+/// state, which is what makes valuation-guided acquisition viable on
+/// pools the dense matrix cannot even be allocated for; `Engine::Dense`
+/// is the materializing cross-check.
+pub fn sti_value_order(
+    ds: &Dataset,
+    seed_size: usize,
+    params: &StiParams,
+    engine: Engine,
+) -> Vec<usize> {
+    let pv = sti_point_values(
+        &ds.train_x,
+        &ds.train_y,
+        ds.d,
+        &ds.test_x,
+        &ds.test_y,
+        params,
+        engine,
+    );
+    let mut pool: Vec<usize> = (seed_size..ds.n_train()).collect();
+    pool.sort_by(|&a, &b| pv.rowsum[b].total_cmp(&pv.rowsum[a]).then(a.cmp(&b)));
     pool
 }
 
@@ -104,6 +134,34 @@ mod tests {
         let random = acquisition_curve(&ds, seed_size, &rand_order[..40], 10, k);
         let (ag, ar) = (curve_area(&greedy), curve_area(&random));
         assert!(ag >= ar, "greedy {ag} should not lose to random {ar}");
+    }
+
+    #[test]
+    fn sti_value_order_defers_mislabeled_pool_points_without_a_matrix() {
+        // Same property as the KNN-Shapley order, via the implicit STI
+        // engine: flipped pool points sink toward the back of the order.
+        let mut ds = load_dataset("circle", 300, 80, 3).unwrap();
+        let seed_size = 30;
+        let flipped: std::collections::HashSet<usize> =
+            corrupt::flip_labels(&mut ds, 0.2, 7).into_iter().collect();
+        let order = sti_value_order(&ds, seed_size, &StiParams::new(5), Engine::Implicit);
+        assert_eq!(order.len(), ds.n_train() - seed_size);
+        let half = order.len() / 2;
+        let front = order[..half].iter().filter(|i| flipped.contains(i)).count();
+        let back = order[half..].iter().filter(|i| flipped.contains(i)).count();
+        assert!(
+            back > front,
+            "flipped points should sink to the back: front={front} back={back}"
+        );
+        // both engines produce value-equivalent orders
+        let dense = sti_value_order(&ds, seed_size, &StiParams::new(5), Engine::Dense);
+        let pv = sti_point_values(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(5), Engine::Implicit,
+        );
+        for (a, b) in order.iter().zip(&dense) {
+            assert!((pv.rowsum[*a] - pv.rowsum[*b]).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -7,7 +7,22 @@
 //! built excluding i). A point whose row correlates better with another
 //! class's template than its own class's is flagged. Scores are
 //! margin-based so the caller can sweep thresholds / compute AUC.
+//!
+//! Two score paths (the engine switch, DESIGN.md §10):
+//!
+//! * [`mislabel_scores`] — the dense/original detector above; needs the
+//!   materialized matrix (O(n²) memory).
+//! * [`mislabel_scores_values`] — the implicit path: per-point
+//!   CLASS-SPLIT interaction means from
+//!   `shapley::values::class_interaction_sums` (O(t·n·classes) time,
+//!   O(n·classes) state, no matrix). Same signal read coarser: in-class
+//!   interaction mass is strongly negative for correctly-labeled points
+//!   (Fig. 3's diagonal blocks), while a mislabeled point interacts with
+//!   its *labeled* class like a foreign point — so its labeled-class
+//!   mean sits ABOVE some other class's mean and the margin flips sign.
 
+use crate::shapley::values::class_interaction_sums;
+use crate::shapley::StiParams;
 use crate::util::matrix::Matrix;
 use crate::util::stats;
 
@@ -78,6 +93,61 @@ pub fn mislabel_scores(phi: &Matrix, train_y: &[i32], classes: usize) -> Mislabe
     }
     let mut flagged: Vec<usize> = (0..n).filter(|&i| margins[i] > 0.0).collect();
     flagged.sort_by(|&a, &b| margins[b].partial_cmp(&margins[a]).unwrap());
+    MislabelReport { margins, flagged }
+}
+
+/// Mislabel suspicion from class-split interaction MEANS, computed via
+/// the implicit engine — no n×n matrix anywhere (O(t·n·classes) total).
+///
+/// For each point i and class c, let mean_c(i) be i's average pairwise
+/// interaction with class-c points (excluding i). Correctly-labeled
+/// points have strongly negative own-class means (in-class redundancy,
+/// Fig. 3/4); a mislabeled point's own-LABEL mean looks cross-class
+/// (weak) while some other class's mean carries the in-class signature.
+/// Margin: `own_mean − min_other_mean` — positive ⇒ the point interacts
+/// more "in-class-ly" with a class it is not labeled as ⇒ suspicious.
+/// Same [`MislabelReport`] contract as [`mislabel_scores`].
+pub fn mislabel_scores_values(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    classes: usize,
+) -> MislabelReport {
+    let n = train_y.len();
+    let sums = class_interaction_sums(train_x, train_y, d, test_x, test_y, params, classes);
+    let mut counts = vec![0usize; classes];
+    for &y in train_y {
+        counts[y as usize] += 1;
+    }
+    let mut margins = vec![0.0f64; n];
+    for i in 0..n {
+        let own_class = train_y[i] as usize;
+        let mut own = f64::NAN;
+        let mut min_other = f64::INFINITY;
+        for c in 0..classes {
+            // pair partners in class c, excluding i itself
+            let partners = counts[c] - usize::from(c == own_class);
+            if partners == 0 {
+                continue;
+            }
+            let mean = sums.get(i, c) / partners as f64;
+            if c == own_class {
+                own = mean;
+            } else if mean < min_other {
+                min_other = mean;
+            }
+        }
+        margins[i] = if own.is_nan() || min_other.is_infinite() {
+            0.0
+        } else {
+            own - min_other
+        };
+    }
+    let mut flagged: Vec<usize> = (0..n).filter(|&i| margins[i] > 0.0).collect();
+    flagged.sort_by(|&a, &b| margins[b].total_cmp(&margins[a]).then(a.cmp(&b)));
     MislabelReport { margins, flagged }
 }
 
@@ -171,6 +241,34 @@ mod tests {
         let rep = mislabel_scores(&phi, &ds.train_y, ds.classes);
         assert!(
             rep.flagged.len() < ds.n_train() / 10,
+            "flagged {} of {} clean points",
+            rep.flagged.len(),
+            ds.n_train()
+        );
+    }
+
+    #[test]
+    fn value_based_detector_finds_flips_without_a_matrix() {
+        let mut ds = load_dataset("circle", 160, 60, 7).unwrap();
+        let truth = corrupt::flip_labels(&mut ds, 0.05, 13);
+        let rep = mislabel_scores_values(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(5), ds.classes,
+        );
+        assert_eq!(rep.margins.len(), ds.n_train());
+        let a = auc(&rep.margins, &truth);
+        assert!(a > 0.8, "value-based mislabel AUC too low: {a}");
+    }
+
+    #[test]
+    fn value_based_detector_is_quiet_on_clean_data() {
+        let ds = load_dataset("circle", 160, 60, 7).unwrap();
+        let rep = mislabel_scores_values(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(5), ds.classes,
+        );
+        assert!(
+            rep.flagged.len() < ds.n_train() / 5,
             "flagged {} of {} clean points",
             rep.flagged.len(),
             ds.n_train()

@@ -1,5 +1,9 @@
-//! Analysis suite over computed interaction matrices — the paper's §3.2
-//! and §4 experiments as reusable components.
+//! Analysis suite over computed interaction values — the paper's §3.2
+//! and §4 experiments as reusable components. Point-value consumers
+//! (removal / acquisition orders, the class-split mislabel detector)
+//! route through the implicit value engine (`shapley::values`,
+//! DESIGN.md §10) so they scale past matrix-materializable n; the
+//! matrix-based paths stay available behind the engine switch.
 
 pub mod acquisition;
 pub mod ksens;
@@ -9,5 +13,6 @@ pub mod removal;
 pub mod structure;
 
 pub use ksens::{k_sensitivity, KSensReport};
-pub use mislabel::{mislabel_scores, MislabelReport};
+pub use mislabel::{mislabel_scores, mislabel_scores_values, MislabelReport};
+pub use removal::sti_removal_order;
 pub use structure::block_structure;

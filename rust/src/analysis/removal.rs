@@ -1,9 +1,17 @@
 //! Point-removal experiments — the data-valuation use cases the paper's
 //! introduction motivates (training-set summarization / cleaning):
 //! remove points in value order and track test accuracy.
+//!
+//! Point-value consumption routes through the implicit value engine by
+//! default ([`sti_removal_order`], `shapley::values` / DESIGN.md §10):
+//! removal curves only need per-point aggregates, so materializing the
+//! n×n matrix is pure waste — the dense path stays available behind the
+//! engine switch for cross-checks.
 
 use crate::data::Dataset;
 use crate::knn::KnnClassifier;
+use crate::shapley::values::{sti_point_values, Engine};
+use crate::shapley::StiParams;
 
 /// Accuracy curve from removing train points in the given order.
 /// Returns accuracy after removing 0, step, 2·step, ... points
@@ -41,6 +49,28 @@ pub fn removal_curve(
         }
     }
     out
+}
+
+/// Removal order from STI per-point values (total rowsum — main effect
+/// plus synergies), lowest value first. `params` carries k AND the
+/// metric, so orders reproduce values served by any session config;
+/// `engine` picks how the values are computed: `Engine::Implicit`
+/// (default choice for every caller that only needs the ORDER) runs in
+/// O(t·n log n)/O(n) via the rank-space suffix-sum identity;
+/// `Engine::Dense` materializes the matrix first. Both orders agree up
+/// to value ties (values agree to ≤ 1e-12 —
+/// `tests/values_equivalence.rs`).
+pub fn sti_removal_order(ds: &Dataset, params: &StiParams, engine: Engine) -> Vec<usize> {
+    let pv = sti_point_values(
+        &ds.train_x,
+        &ds.train_y,
+        ds.d,
+        &ds.test_x,
+        &ds.test_y,
+        params,
+        engine,
+    );
+    order_by_value_asc(&pv.rowsum)
 }
 
 /// Order train indices by a value vector, ascending (lowest value first —
@@ -112,5 +142,49 @@ mod tests {
         let v = [0.3, -1.0, 2.0];
         assert_eq!(order_by_value_asc(&v), vec![1, 0, 2]);
         assert_eq!(order_by_value_desc(&v), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn implicit_and_dense_removal_orders_agree() {
+        let mut ds = load_dataset("circle", 90, 30, 11).unwrap();
+        corrupt::flip_labels(&mut ds, 0.1, 4);
+        let params = crate::shapley::StiParams::new(5);
+        let implicit = sti_removal_order(&ds, &params, crate::shapley::values::Engine::Implicit);
+        let dense = sti_removal_order(&ds, &params, crate::shapley::values::Engine::Dense);
+        // the engines agree to ≤ 1e-12 per value, so the orders can only
+        // differ across (near-)ties — assert positionwise value equality,
+        // which is what the removal curve actually consumes
+        let pv = crate::shapley::values::sti_point_values(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &crate::shapley::StiParams::new(5),
+            crate::shapley::values::Engine::Implicit,
+        );
+        assert_eq!(implicit.len(), dense.len());
+        for (a, b) in implicit.iter().zip(&dense) {
+            assert!(
+                (pv.rowsum[*a] - pv.rowsum[*b]).abs() < 1e-9,
+                "orders diverged beyond tie tolerance at {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn implicit_removal_order_beats_adversarial_order() {
+        let mut ds = load_dataset("circle", 120, 50, 3).unwrap();
+        corrupt::flip_labels(&mut ds, 0.1, 5);
+        let k = 5;
+        let order = sti_removal_order(
+            &ds,
+            &crate::shapley::StiParams::new(k),
+            crate::shapley::values::Engine::Implicit,
+        );
+        let low_first = removal_curve(&ds, &order, 10, 30, k);
+        let mut rev = order.clone();
+        rev.reverse();
+        let high_first = removal_curve(&ds, &rev, 10, 30, k);
+        assert!(
+            curve_area(&low_first) > curve_area(&high_first),
+            "low-value-first should retain accuracy longer"
+        );
     }
 }

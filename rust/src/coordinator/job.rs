@@ -173,6 +173,24 @@ impl ValuationResult {
     }
 }
 
+/// The outcome of a per-point value job (the implicit engine,
+/// `shapley::values` / DESIGN.md §10): averaged value vectors instead of
+/// an n×n matrix — O(n) result memory at any n.
+#[derive(Clone, Debug)]
+pub struct ValuesResult {
+    /// Averaged main terms φ_ii (Eq. 4/5, Eq. 9).
+    pub main: Vec<f64>,
+    /// Averaged total row sums φ_ii + Σ_{j≠i} φ_ij.
+    pub rowsum: Vec<f64>,
+    /// Number of test points contributing.
+    pub weight: f64,
+    /// Blocks processed.
+    pub blocks: usize,
+    pub elapsed: Duration,
+    /// Test points per second.
+    pub throughput: f64,
+}
+
 /// A unit of work: one test-block range of the dataset.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Shard {

@@ -16,6 +16,14 @@
 //!   are bit-identical across worker counts for a fixed block size, at
 //!   O(W·n²) peak memory.
 //!
+//! A third, **value-sharded** path serves the implicit per-point value
+//! engine (`shapley::values`, DESIGN.md §10): the same prep pool and
+//! in-order publication, but Phase 2 collapses to a single O(len·n)
+//! `sweep_values` consumer folding into an O(n) `ValueVector` — no n×n
+//! accumulator exists at all, and results are bit-identical to the
+//! single-threaded implicit engine for any worker count or block size
+//! ([`run_values_job`] one-shot, [`ingest_values`] streaming).
+//!
 //! * [`pool`]    — thread pool + bounded channel substrate
 //! * [`job`]     — job/result types, sharding and band plans
 //! * [`merge`]   — deterministic partial reduction / weight bookkeeping
@@ -28,5 +36,5 @@ pub mod pipeline;
 pub mod pool;
 pub mod progress;
 
-pub use job::{Assembly, ValuationJob, ValuationResult};
-pub use pipeline::{ingest_banded, run_job, run_job_with_engine};
+pub use job::{Assembly, ValuationJob, ValuationResult, ValuesResult};
+pub use pipeline::{ingest_banded, ingest_values, run_job, run_job_with_engine, run_values_job};

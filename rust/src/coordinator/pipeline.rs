@@ -23,6 +23,7 @@
 
 use super::job::{
     shards_for, shards_for_len, Assembly, PartialResult, Shard, ValuationJob, ValuationResult,
+    ValuesResult,
 };
 use super::merge::{Merger, WeightMerger};
 use super::pool::{run_workers, Bounded};
@@ -31,6 +32,7 @@ use super::progress::{Progress, ThroughputMeter};
 use crate::data::Dataset;
 use crate::runtime::{executor_for, Engine, Manifest, StiExecutor};
 use crate::shapley::sti_knn::{prepare_batch, sti_knn_partial, sweep_band, PreparedBatch, StiParams};
+use crate::shapley::values::{sweep_values, ValueVector, ValuesScratch};
 use crate::util::matrix::Matrix;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -101,6 +103,81 @@ impl Drop for AbortOnPanic<'_> {
             rb.aborted = true;
             drop(rb);
             self.reorder_cv.notify_all();
+        }
+    }
+}
+
+/// One prep worker's loop: Phase 1 over test blocks with reorder-window
+/// backpressure and in-block-order publication to every consumer queue,
+/// closing the consumer queues once the last block is published. Shared
+/// by the banded matrix path and the value-sharded path — their only
+/// difference is the Phase-2 consumer, so the delicate
+/// window/publication/close logic lives exactly once.
+#[allow(clippy::too_many_arguments)]
+fn prep_worker_loop(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    prep_queue: &Bounded<Shard>,
+    band_queues: &[Bounded<Arc<PreparedBatch>>],
+    reorder: &Mutex<Reorder>,
+    reorder_cv: &Condvar,
+    merger: &Mutex<WeightMerger>,
+    progress: &Progress,
+    window: usize,
+    n_blocks: usize,
+) {
+    let _abort = AbortOnPanic {
+        prep_queue,
+        band_queues,
+        reorder,
+        reorder_cv,
+    };
+    'blocks: while let Some(shard) = prep_queue.recv() {
+        // Reorder-buffer backpressure: don't prepare (and allocate) a
+        // block far ahead of the oldest unpublished one.
+        {
+            let mut rb = reorder.lock().unwrap();
+            while !rb.aborted && shard.index >= rb.next + window {
+                rb = reorder_cv.wait(rb).unwrap();
+            }
+            if rb.aborted {
+                break 'blocks;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let (tx, ty) = (
+            &test_x[shard.lo * d..shard.hi * d],
+            &test_y[shard.lo..shard.hi],
+        );
+        let batch = Arc::new(prepare_batch(train_x, train_y, d, tx, ty, params));
+        progress.record_block(shard.hi - shard.lo, t0.elapsed().as_nanos() as u64);
+        merger.lock().unwrap().push(shard.index, batch.weight());
+        // Publish every newly in-order block to all consumers; the
+        // reorder lock serializes publication, keeping each queue in
+        // strict block order.
+        let mut rb = reorder.lock().unwrap();
+        rb.pending.insert(shard.index, batch);
+        loop {
+            let key = rb.next;
+            let Some(ready) = rb.pending.remove(&key) else {
+                break;
+            };
+            rb.next += 1;
+            for q in band_queues {
+                let _ = q.send(ready.clone());
+            }
+        }
+        let all_published = rb.next == n_blocks;
+        drop(rb);
+        reorder_cv.notify_all();
+        if all_published {
+            for q in band_queues {
+                q.close();
+            }
         }
     }
 }
@@ -243,60 +320,13 @@ fn banded_accumulate(
             prep_queue.close();
         });
 
-        // Prep pool: Phase 1 over test blocks.
+        // Prep pool: Phase 1 over test blocks (shared worker loop).
         for _w in 0..job.workers {
             s.spawn(|| {
-                let _abort = AbortOnPanic {
-                    prep_queue: &prep_queue,
-                    band_queues: &band_queues,
-                    reorder: &reorder,
-                    reorder_cv: &reorder_cv,
-                };
-                'blocks: while let Some(shard) = prep_queue.recv() {
-                    // Reorder-buffer backpressure: don't prepare (and
-                    // allocate) a block far ahead of the oldest
-                    // unpublished one.
-                    {
-                        let mut rb = reorder.lock().unwrap();
-                        while !rb.aborted && shard.index >= rb.next + window {
-                            rb = reorder_cv.wait(rb).unwrap();
-                        }
-                        if rb.aborted {
-                            break 'blocks;
-                        }
-                    }
-                    let t0 = std::time::Instant::now();
-                    let (tx, ty) = (
-                        &test_x[shard.lo * d..shard.hi * d],
-                        &test_y[shard.lo..shard.hi],
-                    );
-                    let batch = Arc::new(prepare_batch(train_x, train_y, d, tx, ty, &params));
-                    progress.record_block(shard.hi - shard.lo, t0.elapsed().as_nanos() as u64);
-                    merger.lock().unwrap().push(shard.index, batch.weight());
-                    // Publish every newly in-order block to all bands; the
-                    // reorder lock serializes publication, keeping each
-                    // band queue in strict block order.
-                    let mut rb = reorder.lock().unwrap();
-                    rb.pending.insert(shard.index, batch);
-                    loop {
-                        let key = rb.next;
-                        let Some(ready) = rb.pending.remove(&key) else {
-                            break;
-                        };
-                        rb.next += 1;
-                        for q in &band_queues {
-                            let _ = q.send(ready.clone());
-                        }
-                    }
-                    let all_published = rb.next == n_blocks;
-                    drop(rb);
-                    reorder_cv.notify_all();
-                    if all_published {
-                        for q in &band_queues {
-                            q.close();
-                        }
-                    }
-                }
+                prep_worker_loop(
+                    train_x, train_y, d, test_x, test_y, &params, &prep_queue, &band_queues,
+                    &reorder, &reorder_cv, &merger, progress, window, n_blocks,
+                );
             });
         }
 
@@ -324,6 +354,163 @@ fn banded_accumulate(
 
     let weight = merger.into_inner().unwrap().finalize();
     Ok((weight, n_blocks))
+}
+
+/// Streaming value-sharded ingest for the implicit engine
+/// (`shapley::values`, DESIGN.md §10): accumulate one test batch's
+/// UNNORMALIZED per-point values into an existing [`ValueVector`]
+/// through the prep pool, returning the batch's merge weight (its test
+/// count, Eq. 9 — values are linear in test points exactly like the
+/// matrix).
+///
+/// Topology: the same prep pool + in-order publication as the banded
+/// matrix path, but Phase 2 collapses to a SINGLE value sweeper — the
+/// O(len·n) `sweep_values` fold is ~n× cheaper than the O(len·n²) matrix
+/// sweep, so prep (O(n log n) per test) dominates and parallelizing the
+/// fold would buy nothing. Because blocks are published in block order
+/// and every vector element takes exactly one addition per test point,
+/// the result is **bit-identical** to single-threaded
+/// `values_accumulate` for any worker count or block size.
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_values(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    vv: &mut ValueVector,
+) -> Result<f64> {
+    let n = train_y.len();
+    anyhow::ensure!(
+        vv.n() == n,
+        "value vector is length {} but train set has n={n}",
+        vv.n()
+    );
+    anyhow::ensure!(!test_y.is_empty(), "empty ingest batch");
+    anyhow::ensure!(
+        train_x.len() == n * d,
+        "train shape mismatch: {} features for {n} points (d={d})",
+        train_x.len()
+    );
+    anyhow::ensure!(
+        test_x.len() == test_y.len() * d,
+        "test batch shape mismatch: {} features for {} labels (d={d})",
+        test_x.len(),
+        test_y.len()
+    );
+    let progress = Progress::new();
+    let (weight, _blocks) =
+        values_pipeline(train_x, train_y, d, test_x, test_y, job, vv, &progress)?;
+    Ok(weight)
+}
+
+/// The value-sharded pipeline core: prep pool → in-order publication →
+/// one `sweep_values` consumer. Returns (total weight, block count).
+#[allow(clippy::too_many_arguments)]
+fn values_pipeline(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    vv: &mut ValueVector,
+    progress: &Progress,
+) -> Result<(f64, usize)> {
+    let params = StiParams {
+        k: job.k,
+        metric: job.metric,
+    };
+    let shards = shards_for_len(job, test_y.len());
+    let n_blocks = shards.len();
+    let merger = Mutex::new(WeightMerger::new(n_blocks));
+    let prep_queue: Bounded<Shard> = Bounded::new(job.workers * job.queue_factor.max(1));
+    // One consumer queue, but kept as a Vec so the AbortOnPanic guard and
+    // the publication loop are shared verbatim with the banded path.
+    let band_queues: Vec<Bounded<Arc<PreparedBatch>>> =
+        vec![Bounded::new(2 * job.queue_factor.max(1))];
+    let reorder = Mutex::new(Reorder {
+        next: 0,
+        aborted: false,
+        pending: BTreeMap::new(),
+    });
+    let reorder_cv = Condvar::new();
+    let window = job.workers + 2 * job.queue_factor.max(1);
+    let sweeper_vv = &mut *vv;
+
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for shard in &shards {
+                if prep_queue.send(*shard).is_err() {
+                    break;
+                }
+            }
+            prep_queue.close();
+        });
+
+        for _w in 0..job.workers {
+            s.spawn(|| {
+                prep_worker_loop(
+                    train_x, train_y, d, test_x, test_y, &params, &prep_queue, &band_queues,
+                    &reorder, &reorder_cv, &merger, progress, window, n_blocks,
+                );
+            });
+        }
+
+        // The single value sweeper: folds published blocks in block order.
+        {
+            let q = &band_queues[0];
+            let prep_queue = &prep_queue;
+            let band_queues = &band_queues;
+            let reorder = &reorder;
+            let reorder_cv = &reorder_cv;
+            s.spawn(move || {
+                let _abort = AbortOnPanic {
+                    prep_queue,
+                    band_queues,
+                    reorder,
+                    reorder_cv,
+                };
+                let mut scratch = ValuesScratch::new();
+                while let Some(batch) = q.recv() {
+                    sweep_values(&batch, train_y, sweeper_vv, &mut scratch);
+                }
+            });
+        }
+    });
+
+    let weight = merger.into_inner().unwrap().finalize();
+    Ok((weight, n_blocks))
+}
+
+/// Run a per-point value job with the implicit engine (DESIGN.md §10):
+/// the value-sharded twin of [`run_job`]. Never allocates the n×n
+/// matrix; the result carries the averaged main + rowsum vectors.
+pub fn run_values_job(ds: &Dataset, job: &ValuationJob) -> Result<ValuesResult> {
+    anyhow::ensure!(
+        job.engine == Engine::Rust,
+        "the implicit value engine is Rust-only (the XLA artifacts compute matrices)"
+    );
+    // Err, not the plan_shards assert: parity with ingest_values.
+    anyhow::ensure!(!ds.test_y.is_empty(), "empty test set");
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let n = ds.n_train();
+    let mut vv = ValueVector::zeros(n);
+    let (weight, blocks) = values_pipeline(
+        &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, job, &mut vv, &progress,
+    )?;
+    let inv_w = 1.0 / weight;
+    let elapsed = meter.elapsed();
+    Ok(ValuesResult {
+        main: vv.main_values(inv_w),
+        rowsum: vv.rowsum_values(inv_w),
+        weight,
+        blocks,
+        elapsed,
+        throughput: meter.rate(progress.points()),
+    })
 }
 
 /// Legacy test-sharded assembly: each worker's `sti_knn_partial` call
@@ -606,6 +793,98 @@ mod tests {
         let mut acc = Matrix::zeros(20, 20);
         assert!(
             ingest_banded(&ds.train_x, &ds.train_y, ds.d, &[], &[], &job, &mut acc).is_err()
+        );
+    }
+
+    #[test]
+    fn values_pipeline_is_bit_identical_to_single_threaded() {
+        // The value-sharded path's contract: in-order publication + one
+        // sweeper means every vector element takes its per-test additions
+        // in stream order — same BITS as values_accumulate, any workers /
+        // block size.
+        use crate::shapley::values::{values_accumulate, ValueVector};
+        let ds = load_dataset("moon", 45, 18, 6).unwrap();
+        let params = StiParams::new(4);
+        let mut reference = ValueVector::zeros(45);
+        values_accumulate(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &params, &mut reference,
+        );
+        for (workers, block) in [(1usize, 5usize), (3, 1), (7, 64)] {
+            let job = ValuationJob::new(4).with_workers(workers).with_block_size(block);
+            let mut vv = ValueVector::zeros(45);
+            let w = ingest_values(
+                &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &job, &mut vv,
+            )
+            .unwrap();
+            assert_eq!(w, 18.0);
+            for i in 0..45 {
+                assert_eq!(
+                    reference.main_raw()[i].to_bits(),
+                    vv.main_raw()[i].to_bits(),
+                    "main[{i}] workers={workers} block={block}"
+                );
+                assert_eq!(
+                    reference.inter_raw()[i].to_bits(),
+                    vv.inter_raw()[i].to_bits(),
+                    "inter[{i}] workers={workers} block={block}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_values_job_matches_dense_job_rowsums() {
+        let ds = load_dataset("click", 60, 21, 3).unwrap();
+        let job = ValuationJob::new(5).with_workers(3).with_block_size(4);
+        let vres = run_values_job(&ds, &job).unwrap();
+        assert_eq!(vres.weight, 21.0);
+        assert_eq!(vres.blocks, 6); // ceil(21/4)
+        assert!(vres.throughput > 0.0);
+        let dres = run_job(&ds, &job).unwrap();
+        for i in 0..60 {
+            assert!((vres.main[i] - dres.phi.get(i, i)).abs() < 1e-12, "main[{i}]");
+            let direct: f64 = dres.phi.row(i).iter().sum();
+            assert!((vres.rowsum[i] - direct).abs() < 1e-12, "rowsum[{i}]");
+        }
+    }
+
+    #[test]
+    fn values_streaming_ingest_matches_one_shot_bits() {
+        use crate::shapley::values::ValueVector;
+        let ds = load_dataset("moon", 30, 12, 9).unwrap();
+        let job = ValuationJob::new(3).with_workers(2).with_block_size(3);
+        let mut one = ValueVector::zeros(30);
+        ingest_values(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &job, &mut one,
+        )
+        .unwrap();
+        let mut parts = ValueVector::zeros(30);
+        let mut weight = 0.0;
+        for (lo, hi) in [(0usize, 5usize), (5, 12)] {
+            let (tx, ty) = ds.test_slice(lo, hi);
+            weight +=
+                ingest_values(&ds.train_x, &ds.train_y, ds.d, tx, ty, &job, &mut parts).unwrap();
+        }
+        assert_eq!(weight, 12.0);
+        for i in 0..30 {
+            assert_eq!(one.main_raw()[i].to_bits(), parts.main_raw()[i].to_bits());
+            assert_eq!(one.inter_raw()[i].to_bits(), parts.inter_raw()[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn ingest_values_rejects_bad_shapes() {
+        use crate::shapley::values::ValueVector;
+        let ds = load_dataset("moon", 20, 6, 3).unwrap();
+        let job = ValuationJob::new(3);
+        let mut wrong = ValueVector::zeros(19);
+        let (tx, ty) = ds.test_slice(0, 6);
+        assert!(
+            ingest_values(&ds.train_x, &ds.train_y, ds.d, tx, ty, &job, &mut wrong).is_err()
+        );
+        let mut vv = ValueVector::zeros(20);
+        assert!(
+            ingest_values(&ds.train_x, &ds.train_y, ds.d, &[], &[], &job, &mut vv).is_err()
         );
     }
 

@@ -94,14 +94,60 @@ pub fn distances_into(
 /// (stability), matching `np.argsort(kind="stable")` on the python side —
 /// required for bit-identical cross-engine results.
 pub fn argsort_by_distance(dists: &[f64]) -> Vec<usize> {
-    let mut order: Vec<usize> = (0..dists.len()).collect();
+    let mut order = vec![0usize; dists.len()];
+    argsort_by_distance_into(dists, &mut order);
+    order
+}
+
+/// [`argsort_by_distance`] into a caller-provided buffer (hot-path
+/// variant: the prep loop sorts one order per TEST POINT, so a fresh
+/// `Vec<usize>` per call is a measurable allocation cost on
+/// small-n/large-t streams). Same stable ordering contract.
+pub fn argsort_by_distance_into(dists: &[f64], order: &mut [usize]) {
+    assert_eq!(order.len(), dists.len(), "order buffer length mismatch");
+    for (pos, slot) in order.iter_mut().enumerate() {
+        *slot = pos;
+    }
     order.sort_by(|&a, &b| {
         dists[a]
             .partial_cmp(&dists[b])
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
-    order
+}
+
+/// Packed-key argsort — the prep hot loop's fast path. For NON-NEGATIVE
+/// distances the raw IEEE-754 bit pattern is monotone in the value, so
+/// `(dist_bits << 32) | index` keys sorted as plain u128 integers
+/// reproduce EXACTLY the stable distance-then-index order of
+/// [`argsort_by_distance`] — one cache-friendly unstable sort of packed
+/// keys instead of an indirect comparator sort (every comparison of
+/// which is two dependent loads). Every built-in [`Metric`] returns
+/// non-negative distances; a negative or NaN distance (or n ≥ 2³²)
+/// falls back to the comparator sort, so the ordering contract is total.
+///
+/// `keys` is caller-owned scratch (cleared and refilled; capacity
+/// persists across calls — zero allocations in steady state).
+pub fn argsort_by_distance_keyed(dists: &[f64], keys: &mut Vec<u128>, order: &mut [usize]) {
+    assert_eq!(order.len(), dists.len(), "order buffer length mismatch");
+    let n = dists.len();
+    let fast = n <= u32::MAX as usize
+        && dists.iter().all(|d| !d.is_nan() && d.to_bits() >> 63 == 0);
+    if !fast {
+        argsort_by_distance_into(dists, order);
+        return;
+    }
+    keys.clear();
+    keys.extend(
+        dists
+            .iter()
+            .enumerate()
+            .map(|(i, d)| ((d.to_bits() as u128) << 32) | i as u128),
+    );
+    keys.sort_unstable();
+    for (slot, &key) in order.iter_mut().zip(keys.iter()) {
+        *slot = (key & 0xFFFF_FFFF) as usize;
+    }
 }
 
 /// Inverse permutation: `ranks[original] = sorted position`.
@@ -153,6 +199,40 @@ mod tests {
     fn argsort_stable_on_ties() {
         let order = argsort_by_distance(&[2.0, 1.0, 1.0, 0.5]);
         assert_eq!(order, vec![3, 1, 2, 0]);
+    }
+
+    #[test]
+    fn keyed_argsort_matches_comparator_sort_including_ties() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let mut keys = Vec::new();
+        for n in [1usize, 2, 7, 64, 301] {
+            // random distances with deliberate duplicates (ties)
+            let dists: Vec<f64> = (0..n)
+                .map(|_| (rng.below(n / 2 + 1) as f64) * 0.125)
+                .collect();
+            let reference = argsort_by_distance(&dists);
+            let mut keyed = vec![0usize; n];
+            argsort_by_distance_keyed(&dists, &mut keys, &mut keyed);
+            assert_eq!(keyed, reference, "n={n} dists={dists:?}");
+        }
+        // negative / NaN distances take the fallback path and still agree
+        let weird = [0.5, -1.0, f64::NAN, 0.25, -1.0];
+        let mut keyed = vec![0usize; weird.len()];
+        argsort_by_distance_keyed(&weird, &mut keys, &mut keyed);
+        assert_eq!(keyed, argsort_by_distance(&weird));
+    }
+
+    #[test]
+    fn argsort_into_matches_and_reuses_dirty_buffers() {
+        let dists = [2.0, 1.0, 1.0, 0.5];
+        // deliberately stale contents: the buffer must be fully rewritten
+        let mut order = vec![9usize; 4];
+        argsort_by_distance_into(&dists, &mut order);
+        assert_eq!(order, argsort_by_distance(&dists));
+        // second use with different distances
+        argsort_by_distance_into(&[0.1, 0.4, 0.2, 0.3], &mut order);
+        assert_eq!(order, vec![0, 2, 3, 1]);
     }
 
     #[test]

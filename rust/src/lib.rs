@@ -8,30 +8,53 @@
 //! PJRT (behind the `xla` feature) and coordinates sharded valuation jobs
 //! — Python never runs on the request path.
 //!
-//! The hot path is a two-phase engine ([`shapley::sti_knn::prepare_batch`]
-//! → [`shapley::sti_knn::sweep_band`]): the coordinator's default
-//! row-banded assembly parallelizes the O(t·n²) sweep over disjoint row
-//! bands of ONE shared accumulator — peak memory O(n²) at any worker
-//! count, bit-identical to the single-threaded engine (DESIGN.md §7).
+//! # Engines
+//!
+//! Two complementary engines expose Algorithm 1's results (DESIGN.md
+//! §4/§10):
+//!
+//! * **Dense** — the full n×n interaction matrix, O(t·n²) time / O(n²)
+//!   memory. A two-phase hot path ([`shapley::sti_knn::prepare_batch`] →
+//!   [`shapley::sti_knn::sweep_band`]); the coordinator's default
+//!   row-banded assembly parallelizes the sweep over disjoint row bands
+//!   of ONE shared accumulator — peak memory O(n²) at any worker count,
+//!   bit-identical to the single-threaded engine (DESIGN.md §7).
+//! * **Implicit** — exact per-point values (diagonal mains + interaction
+//!   row sums, the aggregates every serving workload actually consumes)
+//!   via the rank-space suffix-sum identity
+//!   `rowsum_i = r_i·c[r_i] + suffix(c, r_i+1)` ([`shapley::values`]),
+//!   O(t·n log n) time / O(n) state, no matrix anywhere — which reaches
+//!   n where the dense matrix cannot even be allocated (n=100k → 80 GB).
+//!   Agrees with the dense `diag + rowsums` to ≤ 1e-12 and is
+//!   bit-reproducible over any contiguous ingest partition
+//!   (`tests/values_equivalence.rs`); parallelized by the coordinator's
+//!   value-sharded path ([`coordinator::run_values_job`]).
 //!
 //! On top of the one-shot pipeline sits the **session layer**
 //! ([`session`], DESIGN.md §9): a [`session::ValuationSession`] holds the
-//! unnormalized accumulator between requests, ingests test batches
-//! incrementally (Eq. 9 is additive over test points, so streaming is
-//! exact — bit-identical to a one-shot run over the same stream),
-//! snapshots/restores through a versioned binary store
-//! ([`session::store`]), and serves NDJSON commands via `stiknn serve`
-//! ([`session::protocol`]).
+//! unnormalized engine state between requests — the matrix accumulator
+//! or, with `SessionConfig::with_engine(Engine::Implicit)`, the O(n)
+//! value vector — ingests test batches incrementally (Eq. 9 is additive
+//! over test points, so streaming is exact — bit-identical to a one-shot
+//! run over the same stream), snapshots/restores through a versioned
+//! binary store ([`session::store`], v2 carries either payload; v1 files
+//! still restore), and serves NDJSON commands via `stiknn serve`
+//! ([`session::protocol`]; queries the implicit engine cannot answer are
+//! rejected with `"reason":"engine"`).
 //!
 //! Quick start:
 //! ```no_run
 //! use stiknn::data::load_dataset;
-//! use stiknn::shapley::{sti_knn, StiParams};
+//! use stiknn::shapley::{sti_knn, sti_values, StiParams};
 //!
 //! let ds = load_dataset("circle", 120, 30, 42).unwrap();
 //! let phi = sti_knn(&ds.train_x, &ds.train_y, ds.d,
 //!                   &ds.test_x, &ds.test_y, &StiParams::new(5));
 //! println!("interaction of points 0,1: {}", phi.get(0, 1));
+//! // per-point values without materializing phi at all:
+//! let pv = sti_values(&ds.train_x, &ds.train_y, ds.d,
+//!                     &ds.test_x, &ds.test_y, &StiParams::new(5));
+//! println!("point 0 total value: {}", pv.rowsum[0]);
 //! ```
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index,

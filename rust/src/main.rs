@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   value     compute the STI-KNN interaction matrix for a dataset
+//!   values    per-point values (main + rowsum) via the implicit engine (§10)
 //!   analyze   interaction heatmap + axiom checks + block structure (§4)
 //!   ksens     k-sensitivity sweep (§3.2, Figs. 7–10)
 //!   mislabel  flip labels and detect them from interaction patterns (Fig. 5)
@@ -18,9 +19,11 @@
 use std::path::{Path, PathBuf};
 
 use stiknn::analysis::ksens::k_sensitivity;
-use stiknn::analysis::mislabel::{auc, mislabel_scores, precision_recall, top_prevalence_recall};
+use stiknn::analysis::mislabel::{
+    auc, mislabel_scores, mislabel_scores_values, precision_recall, top_prevalence_recall,
+};
 use stiknn::analysis::structure::block_structure;
-use stiknn::coordinator::{run_job_with_engine, Assembly, ValuationJob};
+use stiknn::coordinator::{run_job_with_engine, run_values_job, Assembly, ValuationJob};
 use stiknn::data::{corrupt, csv, load_dataset, registry_names};
 use stiknn::knn::distance::Metric;
 use stiknn::report::heatmap::render_heatmap;
@@ -29,12 +32,15 @@ use stiknn::report::table::Table;
 use stiknn::runtime::{Engine, Manifest};
 use stiknn::session::{protocol, store, SessionConfig, TopBy, ValuationSession};
 use stiknn::shapley::axioms;
+use stiknn::shapley::values::{sti_point_values, Engine as ValueEngine, PointValues};
+use stiknn::shapley::StiParams;
 use stiknn::util::cli::{wants_help, Args, Command};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
         Some("value") => cmd_value(&argv[1..]),
+        Some("values") => cmd_values(&argv[1..]),
         Some("analyze") => cmd_analyze(&argv[1..]),
         Some("ksens") => cmd_ksens(&argv[1..]),
         Some("mislabel") => cmd_mislabel(&argv[1..]),
@@ -68,6 +74,7 @@ fn print_help() {
         "stiknn {} — exact pair-interaction Data Shapley for KNN in O(t·n²)\n\n\
          subcommands:\n\
            value      compute the interaction matrix (CSV out)\n\
+           values     per-point values via the implicit O(t·n log n) engine\n\
            analyze    heatmap + axioms + class-block structure\n\
            ksens      k-sensitivity sweep (paper §3.2)\n\
            mislabel   mislabel-detection experiment (paper Fig. 5)\n\
@@ -85,6 +92,7 @@ fn print_help() {
 fn usage_for(name: &str) -> Option<String> {
     match name {
         "value" => Some(value_cmd().usage()),
+        "values" => Some(values_cmd().usage()),
         "analyze" => Some(analyze_cmd().usage()),
         "ksens" => Some(ksens_cmd().usage()),
         "mislabel" => Some(mislabel_cmd().usage()),
@@ -207,6 +215,105 @@ fn cmd_value(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn values_cmd() -> Command {
+    Command::new(
+        "values",
+        "per-point STI values (main + interaction rowsum) — implicit engine \
+         by default: O(t·n log n) time, O(n) state, no n×n matrix (DESIGN.md §10)",
+    )
+    .opt("dataset", "dataset name (see `stiknn datasets`)", "circle")
+    .opt("n-train", "training points (0 = registry default)", "0")
+    .opt("n-test", "test points (0 = registry default)", "0")
+    .opt("k", "KNN parameter", "5")
+    .opt("seed", "dataset seed", "42")
+    .opt(
+        "engine",
+        "implicit (rank-space suffix sums) | dense (materialize the matrix)",
+        "implicit",
+    )
+    .opt("workers", "worker threads for the implicit prep pool (0 = all cores)", "0")
+    .opt("block", "test points per prep block", "32")
+    .opt("top", "rows to print (0 = none)", "10")
+    .opt("by", "printed ranking: main | rowsum", "rowsum")
+    .opt("out", "output CSV path, lines `index,main,rowsum` ('-' to skip)", "-")
+}
+
+fn cmd_values(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = values_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let k: usize = args.require("k")?;
+    let engine = ValueEngine::parse(&args.get_or("engine", "implicit"))
+        .ok_or_else(|| anyhow::anyhow!("--engine must be implicit or dense"))?;
+    let workers: usize = args.require("workers")?;
+    let block: usize = args.require("block")?;
+    let ds = load_dataset(&name, n_train, n_test, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
+
+    let t0 = std::time::Instant::now();
+    let pv: PointValues = match engine {
+        ValueEngine::Implicit => {
+            let mut job = ValuationJob::new(k).with_block_size(block);
+            if workers > 0 {
+                job = job.with_workers(workers);
+            }
+            let res = run_values_job(&ds, &job)?;
+            PointValues {
+                main: res.main,
+                rowsum: res.rowsum,
+            }
+        }
+        ValueEngine::Dense => sti_point_values(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(k),
+            ValueEngine::Dense,
+        ),
+    };
+    let elapsed = t0.elapsed();
+    println!(
+        "dataset={} n={} t={} k={} engine={} elapsed={:?}",
+        ds.name,
+        ds.n_train(),
+        ds.n_test(),
+        k,
+        engine.label(),
+        elapsed
+    );
+    let top: usize = args.require("top")?;
+    if top > 0 {
+        let by = TopBy::parse(&args.get_or("by", "rowsum"))
+            .ok_or_else(|| anyhow::anyhow!("--by must be main or rowsum"))?;
+        let ranked = match by {
+            TopBy::Main => &pv.main,
+            TopBy::RowSum => &pv.rowsum,
+        };
+        let entries = stiknn::session::top_k_of(ranked, top);
+        println!("{}", topk_table(&entries, by.label()));
+    }
+    let out = args.get_or("out", "-");
+    if out != "-" {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&out)?;
+        writeln!(f, "index,main,rowsum")?;
+        for i in 0..pv.main.len() {
+            writeln!(f, "{i},{:.17e},{:.17e}", pv.main[i], pv.rowsum[i])?;
+        }
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
 fn analyze_cmd() -> Command {
     common_opts(Command::new(
         "analyze",
@@ -299,6 +406,12 @@ fn mislabel_cmd() -> Command {
         "flip labels, recompute STI, detect flips from patterns (Fig. 5)",
     ))
     .opt("flip", "fraction of train labels to flip", "0.05")
+    .opt(
+        "scores",
+        "detector: template (row correlation, needs the matrix) | values \
+         (class-split means via the implicit engine, no matrix)",
+        "template",
+    )
 }
 
 fn cmd_mislabel(argv: &[String]) -> anyhow::Result<()> {
@@ -312,8 +425,22 @@ fn cmd_mislabel(argv: &[String]) -> anyhow::Result<()> {
     let flip: f64 = args.require("flip")?;
     let seed: u64 = args.require("seed")?;
     let truth = corrupt::flip_labels(&mut ds, flip, seed ^ 0xF11F);
-    let res = run_job_with_engine(&ds, &job, &artifacts)?;
-    let rep = mislabel_scores(&res.phi, &ds.train_y, ds.classes);
+    let rep = match args.get_or("scores", "template").as_str() {
+        "template" => {
+            let res = run_job_with_engine(&ds, &job, &artifacts)?;
+            mislabel_scores(&res.phi, &ds.train_y, ds.classes)
+        }
+        "values" => mislabel_scores_values(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(job.k),
+            ds.classes,
+        ),
+        other => anyhow::bail!("--scores must be template or values, got '{other}'"),
+    };
     let (prec, rec) = precision_recall(&rep.flagged, &truth);
     println!(
         "flipped {} of {} train points; flagged {}",
@@ -347,6 +474,18 @@ fn serve_cmd() -> Command {
     .opt("k", "KNN parameter", "5")
     .opt("seed", "dataset seed", "42")
     .opt("metric", "distance metric: l2 | l1 | cosine", "l2")
+    .opt(
+        "engine",
+        "session engine: dense (n×n matrix, every query) | implicit (O(n) value \
+         vector, values/topk/stats only — see --retain-rows)",
+        "dense",
+    )
+    .flag(
+        "retain-rows",
+        "implicit engine: keep per-test (rank, colval) rows (O(t·n) memory) so \
+         cell/row queries stay answerable; ingest runs single-threaded in this \
+         mode (--workers does not apply)",
+    )
     .opt("workers", "worker threads for large ingest batches (0 = all cores)", "0")
     .opt("block", "test points per prep block in parallel ingests", "32")
     .opt(
@@ -371,6 +510,9 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let k: usize = args.require("k")?;
     let metric = Metric::parse(&args.get_or("metric", "l2"))
         .ok_or_else(|| anyhow::anyhow!("--metric must be l2, l1 or cosine"))?;
+    let engine = ValueEngine::parse(&args.get_or("engine", "dense"))
+        .ok_or_else(|| anyhow::anyhow!("--engine must be dense or implicit"))?;
+    let retain_rows = args.flag("retain-rows");
     let workers: usize = args.require("workers")?;
     let block: usize = args.require("block")?;
     let parallel_min: usize = args.require("parallel-min")?;
@@ -383,6 +525,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
     let mut config = SessionConfig::new(k)
         .with_metric(metric)
+        .with_engine(engine)
+        .with_retained_rows(retain_rows)
         .with_block_size(block)
         .with_parallel_min(parallel_min);
     if workers > 0 {
@@ -402,12 +546,13 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     };
     // Banner on stderr so stdout stays pure NDJSON.
     eprintln!(
-        "stiknn serve: dataset={} n={} d={} k={} tests={} — NDJSON on stdin, \
-         `{{\"cmd\":\"shutdown\"}}` to stop",
+        "stiknn serve: dataset={} n={} d={} k={} engine={} tests={} — NDJSON on \
+         stdin, `{{\"cmd\":\"shutdown\"}}` to stop",
         ds.name,
         session.n(),
         session.d(),
         session.k(),
+        session.engine().label(),
         session.tests_seen()
     );
     let stdin = std::io::stdin();

@@ -10,6 +10,7 @@ pub fn snapshot_info_table(h: &SnapshotHeader) -> String {
     t.row(&["format version".into(), h.version.to_string()]);
     t.row(&["k".into(), h.k.to_string()]);
     t.row(&["metric".into(), format!("{:?}", h.metric)]);
+    t.row(&["engine".into(), h.engine.label().to_string()]);
     t.row(&["n (train points)".into(), h.n.to_string()]);
     t.row(&["d (features)".into(), h.d.to_string()]);
     t.row(&["tests ingested".into(), h.tests.to_string()]);
@@ -39,9 +40,10 @@ mod tests {
     #[test]
     fn snapshot_table_lists_all_fields() {
         let h = SnapshotHeader {
-            version: 1,
+            version: 2,
             k: 5,
             metric: Metric::SqEuclidean,
+            engine: crate::session::Engine::Implicit,
             n: 600,
             d: 2,
             fingerprint: 0xABCD,
@@ -49,7 +51,9 @@ mod tests {
             batches: 3,
         };
         let s = snapshot_info_table(&h);
-        for needle in ["version", "SqEuclidean", "600", "150", "000000000000abcd"] {
+        for needle in [
+            "version", "SqEuclidean", "implicit", "600", "150", "000000000000abcd",
+        ] {
             assert!(s.contains(needle), "missing {needle}:\n{s}");
         }
     }

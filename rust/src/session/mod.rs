@@ -21,20 +21,46 @@
 //! Re-ordering batches changes addition order and is therefore only
 //! equal up to f64 associativity (~1e-12), not bitwise.
 //!
+//! # Engines (DESIGN.md §10)
+//!
+//! Sessions run one of two engines ([`SessionConfig::with_engine`]):
+//!
+//! * [`Engine::Dense`] (default) — the n×n accumulator above. Supports
+//!   every query, costs O(t·n²) ingest and O(n²) memory.
+//! * [`Engine::Implicit`] — the rank-space suffix-sum value engine
+//!   (`shapley::values`): the session holds an O(n) [`ValueVector`]
+//!   instead of the matrix, ingest costs O(t·n log n), and
+//!   `point_values`/`top_k`/`stats` are answered from the vector.
+//!   `cell`/`row`/`matrix` need pair-level state the vector doesn't
+//!   carry; with [`SessionConfig::with_retained_rows`] the session
+//!   additionally keeps each test point's `(rank, colval)` row (O(t·n)
+//!   memory, the caller's trade-off) and answers `cell` in O(t) /
+//!   `row` in O(t·n) by reducing over retained rows on the fly —
+//!   otherwise those queries return `None` and the serve protocol
+//!   rejects them with reason `engine`.
+//!
+//! Both engines ingest the same stream additively (Eq. 9), and the
+//! implicit path keeps the same bit-reproducibility contract: any
+//! contiguous partition of a test stream produces identical bits.
+//!
 //! * [`store`]    — versioned, checksummed binary snapshots
 //! * [`protocol`] — NDJSON command loop backing `stiknn serve`
 
 pub mod protocol;
 pub mod store;
 
-pub use store::{dataset_fingerprint, Snapshot, SnapshotHeader};
+pub use crate::shapley::values::Engine;
+pub use store::{dataset_fingerprint, Snapshot, SnapshotHeader, SnapshotPayload};
 
-use crate::coordinator::{ingest_banded, ValuationJob};
+use crate::coordinator::{ingest_banded, ingest_values, ValuationJob};
 use crate::data::Dataset;
 use crate::knn::distance::Metric;
-use crate::shapley::sti_knn::{sti_knn_accumulate, StiParams};
+use crate::shapley::sti_knn::{
+    prepare_batch_scratch, sti_knn_accumulate, PrepScratch, PreparedBatch, StiParams, PREP_BATCH,
+};
+use crate::shapley::values::{sweep_values, values_accumulate, ValueVector, ValuesScratch};
 use crate::util::matrix::Matrix;
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
 
 /// Ranking used by top-k point-value queries.
@@ -65,11 +91,20 @@ impl TopBy {
 }
 
 /// Session tuning knobs (the valuation semantics are fixed by k/metric;
-/// everything else is pure performance).
+/// the engine fixes which queries are answerable; everything else is
+/// pure performance).
 #[derive(Clone, Copy, Debug)]
 pub struct SessionConfig {
     pub k: usize,
     pub metric: Metric,
+    /// Which state the session maintains: the n×n matrix accumulator
+    /// (`Dense`, default) or the O(n) value vector (`Implicit`).
+    pub engine: Engine,
+    /// Implicit engine only: additionally retain each ingested test
+    /// point's `(rank, colval)` row (O(t·n) memory) so `cell`/`row`
+    /// queries stay answerable via an O(t) on-the-fly reduction.
+    /// Ignored by the dense engine (the matrix answers those directly).
+    pub retain_rows: bool,
     /// Worker threads for the parallel ingest path (prep pool + bands).
     pub workers: usize,
     /// Test points per prep block in the parallel ingest path.
@@ -86,6 +121,8 @@ impl SessionConfig {
         SessionConfig {
             k,
             metric: Metric::SqEuclidean,
+            engine: Engine::Dense,
+            retain_rows: false,
             workers: std::thread::available_parallelism()
                 .map(|p| p.get())
                 .unwrap_or(4),
@@ -96,6 +133,21 @@ impl SessionConfig {
 
     pub fn with_metric(mut self, metric: Metric) -> Self {
         self.metric = metric;
+        self
+    }
+
+    /// Select the session engine (`Engine::Implicit` | `Engine::Dense`).
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Implicit engine: keep per-test `(rank, colval)` rows for
+    /// `cell`/`row` queries (O(t·n) memory). NOTE: retention ingest runs
+    /// single-threaded — rows must append in test order, so the parallel
+    /// prep pool (`workers`/`parallel_min`) is bypassed in this mode.
+    pub fn with_retained_rows(mut self, retain: bool) -> Self {
+        self.retain_rows = retain;
         self
     }
 
@@ -153,15 +205,77 @@ pub struct SessionStats {
     pub upper_sum: f64,
 }
 
-/// A long-lived incremental valuation: train set + accumulator + ledger.
+/// Per-test `(rank, colval)` rows retained by an implicit session for
+/// `cell`/`row` queries: exactly the Eq. 8 reconstruction state — for any
+/// pair, φ_p[i,j] = colval_p of whichever of i, j ranks LATER. Ranks are
+/// stored as u32 (n ≤ 2³² is already far past what the dense path could
+/// ever materialize), halving the footprint vs the prep rows.
+struct RetainedRows {
+    n: usize,
+    tests: usize,
+    rank: Vec<u32>,
+    colval: Vec<f64>,
+}
+
+impl RetainedRows {
+    fn new(n: usize) -> Self {
+        RetainedRows {
+            n,
+            tests: 0,
+            rank: Vec::new(),
+            colval: Vec::new(),
+        }
+    }
+
+    fn append_batch(&mut self, batch: &PreparedBatch) {
+        debug_assert_eq!(batch.n(), self.n);
+        for p in 0..batch.len() {
+            self.rank.extend(batch.rank_row(p).iter().map(|&r| r as u32));
+            self.colval.extend_from_slice(batch.colval_row(p));
+        }
+        self.tests += batch.len();
+    }
+
+    fn rank_row(&self, p: usize) -> &[u32] {
+        &self.rank[p * self.n..(p + 1) * self.n]
+    }
+
+    fn colval_row(&self, p: usize) -> &[f64] {
+        &self.colval[p * self.n..(p + 1) * self.n]
+    }
+
+    /// Σ_p φ_p[i,j] for one off-diagonal pair — O(tests).
+    fn pair_sum(&self, i: usize, j: usize) -> f64 {
+        let mut s = 0.0;
+        for p in 0..self.tests {
+            let rank = self.rank_row(p);
+            let colval = self.colval_row(p);
+            s += if rank[j] < rank[i] { colval[i] } else { colval[j] };
+        }
+        s
+    }
+}
+
+/// The engine-specific valuation state (DESIGN.md §10).
+enum EngineState {
+    /// Unnormalized Σ_τ Φ_τ, upper triangle + diagonal only (exactly the
+    /// layout `sweep_band` writes); mirrored + scaled at query time.
+    Dense { acc: Matrix },
+    /// Unnormalized per-point value sums (main + interaction rowsums),
+    /// plus optionally the retained per-test rows for pair queries.
+    Implicit {
+        values: ValueVector,
+        rows: Option<RetainedRows>,
+    },
+}
+
+/// A long-lived incremental valuation: train set + engine state + ledger.
 pub struct ValuationSession {
     train_x: Vec<f32>,
     train_y: Vec<i32>,
     d: usize,
     config: SessionConfig,
-    /// Unnormalized Σ_τ Φ_τ, upper triangle + diagonal only (exactly the
-    /// layout `sweep_band` writes); mirrored + scaled at query time.
-    acc: Matrix,
+    state: EngineState,
     ledger: Vec<BatchRecord>,
     tests_seen: u64,
     fingerprint: u64,
@@ -191,12 +305,21 @@ impl ValuationSession {
             config.k
         );
         let fingerprint = dataset_fingerprint(&train_x, &train_y, d);
+        let state = match config.engine {
+            Engine::Dense => EngineState::Dense {
+                acc: Matrix::zeros(n, n),
+            },
+            Engine::Implicit => EngineState::Implicit {
+                values: ValueVector::zeros(n),
+                rows: config.retain_rows.then(|| RetainedRows::new(n)),
+            },
+        };
         Ok(ValuationSession {
             train_x,
             train_y,
             d,
             config,
-            acc: Matrix::zeros(n, n),
+            state,
             ledger: Vec::new(),
             tests_seen: 0,
             fingerprint,
@@ -213,6 +336,15 @@ impl ValuationSession {
     /// k, metric, n, d and the train-set fingerprint are all verified, so
     /// a mismatched resume fails loudly instead of silently producing
     /// wrong values.
+    ///
+    /// Engine compatibility: a dense snapshot restores into a dense
+    /// session bit-exactly, and into an implicit session by DERIVING the
+    /// value vector from the stored accumulator (the dense→implicit
+    /// migration path — subsequent results agree with a pure-implicit
+    /// history to ≤ 1e-12, not bitwise). An implicit snapshot carries no
+    /// pair-level state, so restoring it into a dense session is refused,
+    /// as is restoring any non-empty snapshot with `retain_rows` set
+    /// (per-test rows are in-memory only and cannot be reconstructed).
     pub fn restore(
         path: &Path,
         train_x: Vec<f32>,
@@ -250,7 +382,38 @@ impl ValuationSession {
             h.fingerprint,
             session.fingerprint
         );
-        session.acc = snap.raw;
+        if session.config.engine == Engine::Implicit && session.config.retain_rows && h.tests > 0 {
+            bail!(
+                "cannot restore a non-empty snapshot ({} tests) with retain_rows: \
+                 per-test (rank, colval) rows are not persisted, so cell/row \
+                 answers over the restored history would be incomplete",
+                h.tests
+            );
+        }
+        session.state = match (snap.payload, session.config.engine) {
+            (SnapshotPayload::Dense(raw), Engine::Dense) => EngineState::Dense { acc: raw },
+            (SnapshotPayload::Dense(raw), Engine::Implicit) => EngineState::Implicit {
+                values: ValueVector::from_raw_accumulator(&raw),
+                rows: session
+                    .config
+                    .retain_rows
+                    .then(|| RetainedRows::new(session.n())),
+            },
+            (SnapshotPayload::Implicit { main, inter }, Engine::Implicit) => {
+                EngineState::Implicit {
+                    values: ValueVector::from_raw_parts(main, inter),
+                    rows: session
+                        .config
+                        .retain_rows
+                        .then(|| RetainedRows::new(session.n())),
+                }
+            }
+            (SnapshotPayload::Implicit { .. }, Engine::Dense) => bail!(
+                "snapshot was taken by an implicit-engine session (value vector only) \
+                 and cannot populate a dense matrix session; restore with \
+                 SessionConfig::with_engine(Engine::Implicit) / --engine implicit"
+            ),
+        };
         session.tests_seen = h.tests;
         session.ledger = snap.ledger;
         Ok(session)
@@ -289,10 +452,24 @@ impl ValuationSession {
         self.fingerprint
     }
 
-    fn params(&self) -> StiParams {
-        StiParams {
-            k: self.config.k,
-            metric: self.config.metric,
+    /// Which engine this session runs (fixed at construction).
+    pub fn engine(&self) -> Engine {
+        self.config.engine
+    }
+
+    /// Whether this session retains per-test rows (implicit engine only).
+    pub fn retains_rows(&self) -> bool {
+        matches!(&self.state, EngineState::Implicit { rows: Some(_), .. })
+    }
+
+    /// Can `cell`/`row` queries be answered? Dense sessions always can;
+    /// implicit sessions only with retained rows. The serve protocol uses
+    /// this to reject matrix queries with reason `engine` instead of
+    /// conflating them with the empty-session case.
+    pub fn supports_matrix_queries(&self) -> bool {
+        match &self.state {
+            EngineState::Dense { .. } => true,
+            EngineState::Implicit { rows, .. } => rows.is_some(),
         }
     }
 
@@ -301,8 +478,10 @@ impl ValuationSession {
     /// Ingest one test batch (flattened row-major features + labels) and
     /// return its test count. Empty batches are a no-op. Batches of at
     /// least `config.parallel_min` points run through the coordinator's
-    /// banded prep pool; both paths append the same additions in the same
-    /// order, so the choice never changes a single bit of the state.
+    /// parallel prep pool (banded for the dense engine, value-sharded for
+    /// the implicit one); every path appends the same additions in the
+    /// same order, so the routing never changes a single bit of the
+    /// state.
     pub fn ingest(&mut self, test_x: &[f32], test_y: &[i32]) -> Result<usize> {
         ensure!(
             test_x.len() == test_y.len() * self.d,
@@ -314,30 +493,89 @@ impl ValuationSession {
         if test_y.is_empty() {
             return Ok(0);
         }
-        if test_y.len() >= self.config.parallel_min {
-            let mut job = ValuationJob::new(self.config.k)
-                .with_workers(self.config.workers)
-                .with_block_size(self.config.block_size);
-            job.metric = self.config.metric;
-            ingest_banded(
-                &self.train_x,
-                &self.train_y,
-                self.d,
-                test_x,
-                test_y,
-                &job,
-                &mut self.acc,
-            )?;
-        } else {
-            sti_knn_accumulate(
-                &self.train_x,
-                &self.train_y,
-                self.d,
-                test_x,
-                test_y,
-                &self.params(),
-                &mut self.acc,
-            );
+        let params = StiParams {
+            k: self.config.k,
+            metric: self.config.metric,
+        };
+        let parallel = test_y.len() >= self.config.parallel_min;
+        let mut job = ValuationJob::new(self.config.k)
+            .with_workers(self.config.workers)
+            .with_block_size(self.config.block_size);
+        job.metric = self.config.metric;
+        match &mut self.state {
+            EngineState::Dense { acc } => {
+                if parallel {
+                    ingest_banded(
+                        &self.train_x,
+                        &self.train_y,
+                        self.d,
+                        test_x,
+                        test_y,
+                        &job,
+                        acc,
+                    )?;
+                } else {
+                    sti_knn_accumulate(
+                        &self.train_x,
+                        &self.train_y,
+                        self.d,
+                        test_x,
+                        test_y,
+                        &params,
+                        acc,
+                    );
+                }
+            }
+            EngineState::Implicit { values, rows } => {
+                match rows {
+                    // Retention needs every prepared row, so it runs its
+                    // own chunk loop (prep scratch reused across chunks);
+                    // bit-identical to the other paths — same per-test
+                    // math, same per-element addition order.
+                    Some(retained) => {
+                        let mut prep = PrepScratch::new();
+                        let mut scratch = ValuesScratch::new();
+                        for (chunk_x, chunk_y) in test_x
+                            .chunks(PREP_BATCH * self.d)
+                            .zip(test_y.chunks(PREP_BATCH))
+                        {
+                            let batch = prepare_batch_scratch(
+                                &self.train_x,
+                                &self.train_y,
+                                self.d,
+                                chunk_x,
+                                chunk_y,
+                                &params,
+                                &mut prep,
+                            );
+                            sweep_values(&batch, &self.train_y, values, &mut scratch);
+                            retained.append_batch(&batch);
+                        }
+                    }
+                    None if parallel => {
+                        ingest_values(
+                            &self.train_x,
+                            &self.train_y,
+                            self.d,
+                            test_x,
+                            test_y,
+                            &job,
+                            values,
+                        )?;
+                    }
+                    None => {
+                        values_accumulate(
+                            &self.train_x,
+                            &self.train_y,
+                            self.d,
+                            test_x,
+                            test_y,
+                            &params,
+                            values,
+                        );
+                    }
+                }
+            }
         }
         let seq = self.ledger.last().map(|b| b.seq + 1).unwrap_or(0);
         self.ledger.push(BatchRecord {
@@ -372,47 +610,121 @@ impl ValuationSession {
     }
 
     /// Averaged φ_ij (symmetric — (i,j) and (j,i) agree). `None` while
-    /// the session is empty or an index is out of range.
+    /// the session is empty, an index is out of range, or the implicit
+    /// engine runs without retained rows (pair-level state doesn't exist;
+    /// [`Self::supports_matrix_queries`] distinguishes that case). The
+    /// diagonal φ_ii is always answerable — it IS a per-point value.
     pub fn cell(&self, i: usize, j: usize) -> Option<f64> {
         let inv_w = self.inv_weight()?;
         if i >= self.n() || j >= self.n() {
             return None;
         }
-        let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
-        Some(self.acc.get(lo, hi) * inv_w)
+        match &self.state {
+            EngineState::Dense { acc } => {
+                let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+                Some(acc.get(lo, hi) * inv_w)
+            }
+            EngineState::Implicit { values, .. } if i == j => {
+                Some(values.main_raw()[i] * inv_w)
+            }
+            EngineState::Implicit { rows, .. } => {
+                rows.as_ref().map(|r| r.pair_sum(i, j) * inv_w)
+            }
+        }
     }
 
     /// Averaged row i of the symmetric matrix (diagonal included).
+    /// Implicit sessions answer this only with retained rows (an O(t·n)
+    /// reduction); otherwise `None`.
     pub fn row(&self, i: usize) -> Option<Vec<f64>> {
         let inv_w = self.inv_weight()?;
-        if i >= self.n() {
+        let n = self.n();
+        if i >= n {
             return None;
         }
-        Some(
-            (0..self.n())
-                .map(|j| {
-                    let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
-                    self.acc.get(lo, hi) * inv_w
-                })
-                .collect(),
-        )
+        match &self.state {
+            EngineState::Dense { acc } => Some(
+                (0..n)
+                    .map(|j| {
+                        let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+                        acc.get(lo, hi) * inv_w
+                    })
+                    .collect(),
+            ),
+            EngineState::Implicit { values, rows } => {
+                let retained = rows.as_ref()?;
+                let mut out = vec![0.0f64; n];
+                for p in 0..retained.tests {
+                    let rank = retained.rank_row(p);
+                    let colval = retained.colval_row(p);
+                    let ri = rank[i];
+                    let ci = colval[i];
+                    for (j, slot) in out.iter_mut().enumerate() {
+                        *slot += if rank[j] < ri { ci } else { colval[j] };
+                    }
+                }
+                // the j == i lane above added colval[i] per test, which is
+                // meaningless — the diagonal is the main-term sum
+                out[i] = values.main_raw()[i];
+                for v in &mut out {
+                    *v *= inv_w;
+                }
+                Some(out)
+            }
+        }
     }
 
     /// The full averaged interaction matrix — exactly what one-shot
     /// `sti_knn` over every ingested test point would return, to the bit
-    /// (same accumulator, same mirror-then-scale finalization).
+    /// (same accumulator, same mirror-then-scale finalization). Dense
+    /// engine only: implicit sessions never materialize it (`None`).
     pub fn matrix(&self) -> Option<Matrix> {
         let inv_w = self.inv_weight()?;
-        let mut m = self.acc.clone();
-        m.mirror_upper_to_lower();
-        m.scale(inv_w);
-        Some(m)
+        match &self.state {
+            EngineState::Dense { acc } => {
+                let mut m = acc.clone();
+                m.mirror_upper_to_lower();
+                m.scale(inv_w);
+                Some(m)
+            }
+            EngineState::Implicit { .. } => None,
+        }
     }
 
-    /// Per-point values under the given ranking.
+    /// Per-point values under the given ranking — answered from the O(n)
+    /// value vector in implicit mode, from the accumulator in dense mode
+    /// (both agree to ≤ 1e-12; `tests/values_equivalence.rs`).
     pub fn point_values(&self, by: TopBy) -> Option<Vec<f64>> {
         let inv_w = self.inv_weight()?;
-        Some(point_values_raw(&self.acc, inv_w, by))
+        Some(match &self.state {
+            EngineState::Dense { acc } => point_values_raw(acc, inv_w, by),
+            EngineState::Implicit { values, .. } => match by {
+                TopBy::Main => values.main_values(inv_w),
+                TopBy::RowSum => values.rowsum_values(inv_w),
+            },
+        })
+    }
+
+    /// One point's (main, rowsum) pair — O(1)/O(n) instead of building
+    /// the full vectors (the dense RowSum vector costs an O(n²) matrix
+    /// reduction). Bit-identical to the corresponding entries of
+    /// [`Self::point_values`] (same expressions, same order). This is
+    /// what the protocol's single-point `values` query reads.
+    pub fn point_value_at(&self, i: usize) -> Option<(f64, f64)> {
+        let inv_w = self.inv_weight()?;
+        if i >= self.n() {
+            return None;
+        }
+        Some(match &self.state {
+            EngineState::Dense { acc } => (
+                acc.get(i, i) * inv_w,
+                acc.sym_row_sum_from_upper(i) * inv_w,
+            ),
+            EngineState::Implicit { values, .. } => (
+                values.main_raw()[i] * inv_w,
+                (values.main_raw()[i] + values.inter_raw()[i]) * inv_w,
+            ),
+        })
     }
 
     /// Top-k (index, value), descending; ties break by index.
@@ -420,15 +732,27 @@ impl ValuationSession {
         Some(top_k_of(&self.point_values(by)?, k))
     }
 
-    /// Summary statistics (zeros while the session is empty). One O(n²)
-    /// triangle walk + one O(n) diagonal pass — this runs per `stats`
-    /// protocol command on live sessions, so no redundant passes.
+    /// Summary statistics (zeros while the session is empty). Dense: one
+    /// O(n²) triangle walk + one O(n) diagonal pass. Implicit: two O(n)
+    /// passes — Σ_i inter_i double-counts each unordered pair, so the
+    /// strict-upper sum is Σ_i inter_i / 2.
     pub fn stats(&self) -> SessionStats {
         let n = self.n();
         let inv_w = self.inv_weight().unwrap_or(0.0);
         let pairs = (n * (n - 1) / 2) as f64;
-        let upper = self.acc.upper_triangle_sum();
-        let trace_raw: f64 = self.acc.diagonal().iter().sum();
+        // (trace, strict upper, upper incl. diagonal), all unnormalized
+        let (trace_raw, strict_upper_raw, upper_raw) = match &self.state {
+            EngineState::Dense { acc } => {
+                let upper = acc.upper_triangle_sum();
+                let trace: f64 = acc.diagonal().iter().sum();
+                (trace, upper - trace, upper)
+            }
+            EngineState::Implicit { values, .. } => {
+                let trace: f64 = values.main_raw().iter().sum();
+                let half_inter: f64 = values.inter_raw().iter().sum::<f64>() / 2.0;
+                (trace, half_inter, trace + half_inter)
+            }
+        };
         SessionStats {
             n,
             k: self.config.k,
@@ -436,24 +760,33 @@ impl ValuationSession {
             batches: self.batches_ingested(),
             trace: trace_raw * inv_w,
             mean_offdiag: if pairs > 0.0 {
-                (upper - trace_raw) * inv_w / pairs
+                strict_upper_raw * inv_w / pairs
             } else {
                 0.0
             },
-            upper_sum: upper * inv_w,
+            upper_sum: upper_raw * inv_w,
         }
     }
 
     // -- persistence ---------------------------------------------------
 
-    /// Write a snapshot (see [`store`] for the format). Returns the byte
-    /// count written.
+    /// Write a snapshot (see [`store`] for the format — dense sessions
+    /// persist the raw accumulator, implicit sessions the O(n) value
+    /// vector; retained rows are in-memory only and deliberately NOT
+    /// persisted). Returns the byte count written.
     ///
     /// The write is atomic-by-rename (temp sibling file, then rename
     /// over the target): deployments snapshot to the SAME path on a
     /// schedule, and a crash or full disk mid-write must never destroy
     /// the previous good snapshot.
     pub fn save(&self, path: &Path) -> Result<u64> {
+        let payload = match &self.state {
+            EngineState::Dense { acc } => store::EncodePayload::Dense(acc.data()),
+            EngineState::Implicit { values, .. } => store::EncodePayload::Implicit {
+                main: values.main_raw(),
+                inter: values.inter_raw(),
+            },
+        };
         let bytes = store::encode(
             self.config.k as u32,
             self.config.metric,
@@ -462,7 +795,7 @@ impl ValuationSession {
             self.fingerprint,
             self.tests_seen,
             &self.ledger,
-            self.acc.data(),
+            payload,
         );
         // PID-unique temp sibling: two processes snapshotting the same
         // target must not interleave writes into one temp file.
@@ -495,22 +828,15 @@ impl ValuationSession {
 /// Per-point values from a RAW accumulator (upper triangle + diagonal)
 /// and a normalization factor — shared by live sessions and decoded
 /// snapshots. RowSum expands the symmetric row without materializing the
-/// mirror: row i = φ_ii + Σ_{j>i} acc[i][j] + Σ_{j<i} acc[j][i].
+/// mirror via the one fixed-order reduction
+/// (`Matrix::sym_row_sum_from_upper`), keeping it bit-identical to
+/// `ValuationSession::point_value_at` and the dense→implicit migration.
 pub(crate) fn point_values_raw(acc: &Matrix, inv_w: f64, by: TopBy) -> Vec<f64> {
     let n = acc.rows();
     match by {
         TopBy::Main => (0..n).map(|i| acc.get(i, i) * inv_w).collect(),
         TopBy::RowSum => (0..n)
-            .map(|i| {
-                let mut s = acc.get(i, i);
-                for j in (i + 1)..n {
-                    s += acc.get(i, j);
-                }
-                for j in 0..i {
-                    s += acc.get(j, i);
-                }
-                s * inv_w
-            })
+            .map(|i| acc.sym_row_sum_from_upper(i) * inv_w)
             .collect(),
     }
 }
@@ -754,5 +1080,181 @@ mod tests {
         let top = top_k_of(&[1.0, 3.0, 3.0, -1.0], 3);
         assert_eq!(top, vec![(1, 3.0), (2, 3.0), (0, 1.0)]);
         assert_eq!(top_k_of(&[1.0], 5), vec![(0, 1.0)]);
+    }
+
+    #[test]
+    fn implicit_session_values_match_dense_session() {
+        let (tx, ty, qx, qy) = random_problem(71, 18, 2, 9);
+        let mut dense =
+            ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(4)).unwrap();
+        let mut imp = ValuationSession::new(
+            tx, ty, 2,
+            SessionConfig::new(4).with_engine(Engine::Implicit),
+        )
+        .unwrap();
+        assert_eq!(imp.engine(), Engine::Implicit);
+        assert!(!imp.supports_matrix_queries());
+        for (lo, hi) in [(0usize, 4usize), (4, 9)] {
+            dense.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+            imp.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+        }
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = dense.point_values(by).unwrap();
+            let b = imp.point_values(by).unwrap();
+            for i in 0..18 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "{by:?}[{i}]");
+            }
+        }
+        // diagonal cells answerable without retained rows; pairs are not
+        assert!(imp.cell(3, 3).is_some());
+        assert!((imp.cell(3, 3).unwrap() - dense.cell(3, 3).unwrap()).abs() < 1e-12);
+        assert!(imp.cell(0, 1).is_none());
+        assert!(imp.row(0).is_none());
+        assert!(imp.matrix().is_none());
+        // stats agree across engines
+        let (sd, si) = (dense.stats(), imp.stats());
+        assert_eq!(si.tests, sd.tests);
+        assert!((sd.trace - si.trace).abs() < 1e-12);
+        assert!((sd.mean_offdiag - si.mean_offdiag).abs() < 1e-12);
+        assert!((sd.upper_sum - si.upper_sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retained_rows_answer_cells_and_rows() {
+        let (tx, ty, qx, qy) = random_problem(83, 15, 3, 7);
+        let mut dense =
+            ValuationSession::new(tx.clone(), ty.clone(), 3, SessionConfig::new(3)).unwrap();
+        let mut imp = ValuationSession::new(
+            tx, ty, 3,
+            SessionConfig::new(3)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true),
+        )
+        .unwrap();
+        assert!(imp.retains_rows());
+        assert!(imp.supports_matrix_queries());
+        for (lo, hi) in [(0usize, 2usize), (2, 7)] {
+            dense.ingest(&qx[lo * 3..hi * 3], &qy[lo..hi]).unwrap();
+            imp.ingest(&qx[lo * 3..hi * 3], &qy[lo..hi]).unwrap();
+        }
+        for i in 0..15 {
+            for j in 0..15 {
+                let a = dense.cell(i, j).unwrap();
+                let b = imp.cell(i, j).unwrap();
+                assert!((a - b).abs() < 1e-12, "cell({i},{j}): {a} vs {b}");
+            }
+            let (ra, rb) = (dense.row(i).unwrap(), imp.row(i).unwrap());
+            for j in 0..15 {
+                assert!((ra[j] - rb[j]).abs() < 1e-12, "row({i})[{j}]");
+            }
+        }
+        // symmetric by construction
+        assert_eq!(imp.cell(2, 9), imp.cell(9, 2));
+    }
+
+    #[test]
+    fn implicit_snapshot_roundtrip_is_bit_identical_and_resumable() {
+        let (tx, ty, qx, qy) = random_problem(97, 14, 2, 8);
+        let config = SessionConfig::new(3).with_engine(Engine::Implicit);
+        let mut reference =
+            ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap();
+        reference.ingest(&qx, &qy).unwrap();
+
+        let mut s = ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap();
+        s.ingest(&qx[..5 * 2], &qy[..5]).unwrap();
+        let path = temp_path("implicit_roundtrip");
+        s.save(&path).unwrap();
+        let mut restored =
+            ValuationSession::restore(&path, tx.clone(), ty.clone(), 2, config).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(restored.engine(), Engine::Implicit);
+        assert_eq!(restored.tests_seen(), 5);
+        restored.ingest(&qx[5 * 2..], &qy[5..]).unwrap();
+
+        // bit-identical to the uninterrupted session, both rankings
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = reference.point_values(by).unwrap();
+            let b = restored.point_values(by).unwrap();
+            for i in 0..14 {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "{by:?}[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_mismatched_restores_are_refused_or_migrated() {
+        let (tx, ty, qx, qy) = random_problem(103, 12, 2, 5);
+        // implicit snapshot → dense session: refused
+        let mut imp = ValuationSession::new(
+            tx.clone(), ty.clone(), 2,
+            SessionConfig::new(3).with_engine(Engine::Implicit),
+        )
+        .unwrap();
+        imp.ingest(&qx, &qy).unwrap();
+        let path = temp_path("engine_mismatch");
+        imp.save(&path).unwrap();
+        let err = ValuationSession::restore(
+            &path, tx.clone(), ty.clone(), 2, SessionConfig::new(3),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("implicit"), "{err}");
+        // non-empty restore with retain_rows: refused (rows not persisted)
+        let err = ValuationSession::restore(
+            &path, tx.clone(), ty.clone(), 2,
+            SessionConfig::new(3)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("retain_rows"), "{err}");
+        let _ = std::fs::remove_file(&path);
+
+        // dense snapshot → implicit session: migrates (values derived)
+        let mut dense =
+            ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(3)).unwrap();
+        dense.ingest(&qx, &qy).unwrap();
+        let path = temp_path("dense_to_implicit");
+        dense.save(&path).unwrap();
+        let migrated = ValuationSession::restore(
+            &path, tx, ty, 2,
+            SessionConfig::new(3).with_engine(Engine::Implicit),
+        )
+        .unwrap();
+        let _ = std::fs::remove_file(&path);
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = dense.point_values(by).unwrap();
+            let b = migrated.point_values(by).unwrap();
+            for i in 0..12 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "{by:?}[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn implicit_parallel_ingest_is_bit_identical_to_sequential() {
+        let (tx, ty, qx, qy) = random_problem(109, 26, 2, 20);
+        let base = SessionConfig::new(5).with_engine(Engine::Implicit);
+        let mut seq = ValuationSession::new(
+            tx.clone(), ty.clone(), 2, base.with_parallel_min(1000),
+        )
+        .unwrap();
+        let mut par = ValuationSession::new(
+            tx, ty, 2,
+            base.with_parallel_min(1).with_workers(3).with_block_size(4),
+        )
+        .unwrap();
+        for (lo, hi) in [(0usize, 11usize), (11, 20)] {
+            seq.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+            par.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+        }
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = seq.point_values(by).unwrap();
+            let b = par.point_values(by).unwrap();
+            for i in 0..26 {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "{by:?}[{i}]");
+            }
+        }
     }
 }

@@ -12,11 +12,22 @@
 //! {"cmd":"ingest","x":[...flattened features...],"y":[...labels...]}
 //! {"cmd":"query","i":0,"j":1}        → one averaged cell
 //! {"cmd":"query","i":0}              → one averaged row
+//! {"cmd":"values"}                   → per-point main + rowsum arrays
+//! {"cmd":"values","i":3}             → one point's (main, rowsum) pair
 //! {"cmd":"topk","k":10,"by":"main"}  → top-k point values (by: main|rowsum)
-//! {"cmd":"stats"}                    → summary statistics
+//! {"cmd":"stats"}                    → summary statistics (incl. engine)
 //! {"cmd":"snapshot","path":"x.snap"} → persist the session (store.rs)
 //! {"cmd":"shutdown"}                 → acknowledge and exit
 //! ```
+//!
+//! Engine interaction (DESIGN.md §10): an implicit-engine session
+//! without retained rows has no pair-level state, so off-diagonal `query`
+//! cells and full `query` rows are REJECTED with
+//! `{"ok":false,"reason":"engine",...}` — a distinct, machine-checkable
+//! reason (vs the empty-session error), so a fronting service can route
+//! such queries to a dense deployment instead of retrying. `values`,
+//! `topk`, `stats`, diagonal cells, `ingest` and `snapshot` work in every
+//! engine.
 
 use super::{TopBy, ValuationSession};
 use crate::util::json::Json;
@@ -59,6 +70,31 @@ pub fn serve<R: BufRead, W: Write>(
     Ok(())
 }
 
+/// A failed command: the message plus an optional machine-checkable
+/// reason tag (`"engine"` for queries the session's engine cannot
+/// answer). `From<String>` keeps the plain-`?` call sites terse.
+struct Fail {
+    msg: String,
+    reason: Option<&'static str>,
+}
+
+impl From<String> for Fail {
+    fn from(msg: String) -> Self {
+        Fail { msg, reason: None }
+    }
+}
+
+fn engine_fail(what: &str, session: &ValuationSession) -> Fail {
+    Fail {
+        msg: format!(
+            "{what} requires pair-level state the '{}' engine does not keep \
+             (run the session with --engine dense, or implicit with retained rows)",
+            session.engine().label()
+        ),
+        reason: Some("engine"),
+    }
+}
+
 /// Execute one command line → (response, shutdown?). Never panics on
 /// untrusted input; every failure is a `{"ok":false}` response.
 pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
@@ -72,6 +108,7 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
     let result = match cmd.as_str() {
         "ingest" => do_ingest(session, &v),
         "query" => do_query(session, &v),
+        "values" => do_values(session, &v),
         "topk" => do_topk(session, &v),
         "stats" => Ok(stats_json(session)),
         "snapshot" => do_snapshot(session, &v),
@@ -81,13 +118,13 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
                 true,
             )
         }
-        other => Err(format!(
-            "unknown command '{other}' (expected ingest|query|topk|stats|snapshot|shutdown)"
-        )),
+        other => Err(Fail::from(format!(
+            "unknown command '{other}' (expected ingest|query|values|topk|stats|snapshot|shutdown)"
+        ))),
     };
     match result {
         Ok(j) => (j, false),
-        Err(msg) => (err(msg), false),
+        Err(fail) => (fail_json(fail), false),
     }
 }
 
@@ -98,6 +135,17 @@ fn err(msg: impl Into<String>) -> Json {
     ])
 }
 
+fn fail_json(f: Fail) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(f.msg)),
+    ];
+    if let Some(reason) = f.reason {
+        fields.push(("reason", Json::str(reason)));
+    }
+    Json::obj(fields)
+}
+
 fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
     let mut all = vec![("ok", Json::Bool(true)), ("cmd", Json::str(cmd))];
     all.extend(fields);
@@ -106,7 +154,7 @@ fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
 
 const EMPTY: &str = "no test points ingested yet or index out of range";
 
-fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, String> {
+fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
     let xs = v
         .get("x")
         .and_then(Json::as_arr)
@@ -125,7 +173,7 @@ fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, String> {
         // distances into the shared accumulator forever while this
         // command answered ok:true.
         if !f.is_finite() || f.abs() > f32::MAX as f64 {
-            return Err("entry in 'x' is not a finite f32-range number".to_string());
+            return Err("entry in 'x' is not a finite f32-range number".to_string().into());
         }
         test_x.push(f as f32);
     }
@@ -152,7 +200,7 @@ fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, String> {
     ))
 }
 
-fn do_query(session: &ValuationSession, v: &Json) -> Result<Json, String> {
+fn do_query(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
     let i = v
         .get("i")
         .and_then(Json::as_usize)
@@ -162,6 +210,13 @@ fn do_query(session: &ValuationSession, v: &Json) -> Result<Json, String> {
             let j = j
                 .as_usize()
                 .ok_or_else(|| "'j' must be a train index".to_string())?;
+            // Off-diagonal cells need pair-level state; reject with the
+            // machine-checkable `engine` reason BEFORE the empty/range
+            // check so callers can tell a capability gap from bad input.
+            // Diagonal cells are per-point values and always answerable.
+            if i != j && !session.supports_matrix_queries() {
+                return Err(engine_fail("an off-diagonal cell query", session));
+            }
             let value = session.cell(i, j).ok_or_else(|| EMPTY.to_string())?;
             Ok(ok(
                 "query",
@@ -173,6 +228,9 @@ fn do_query(session: &ValuationSession, v: &Json) -> Result<Json, String> {
             ))
         }
         None => {
+            if !session.supports_matrix_queries() {
+                return Err(engine_fail("a full matrix-row query", session));
+            }
             let row = session.row(i).ok_or_else(|| EMPTY.to_string())?;
             Ok(ok(
                 "query",
@@ -185,7 +243,47 @@ fn do_query(session: &ValuationSession, v: &Json) -> Result<Json, String> {
     }
 }
 
-fn do_topk(session: &ValuationSession, v: &Json) -> Result<Json, String> {
+fn do_values(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
+    match v.get("i") {
+        // Single point: O(1)/O(n) via point_value_at — a hot polling
+        // path must not rebuild full value vectors (the dense rowsum
+        // vector costs an O(n²) matrix reduction).
+        Some(x) => {
+            let i = x
+                .as_usize()
+                .filter(|&i| i < session.n())
+                .ok_or_else(|| "'i' must be a train index".to_string())?;
+            let (main, rowsum) = session
+                .point_value_at(i)
+                .ok_or_else(|| "no test points ingested yet".to_string())?;
+            Ok(ok(
+                "values",
+                vec![
+                    ("i", Json::num(i as f64)),
+                    ("main", Json::num(main)),
+                    ("rowsum", Json::num(rowsum)),
+                ],
+            ))
+        }
+        None => {
+            let main = session
+                .point_values(TopBy::Main)
+                .ok_or_else(|| "no test points ingested yet".to_string())?;
+            let rowsum = session
+                .point_values(TopBy::RowSum)
+                .ok_or_else(|| "no test points ingested yet".to_string())?;
+            Ok(ok(
+                "values",
+                vec![
+                    ("main", Json::arr(main.into_iter().map(Json::num))),
+                    ("rowsum", Json::arr(rowsum.into_iter().map(Json::num))),
+                ],
+            ))
+        }
+    }
+}
+
+fn do_topk(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
     let k = match v.get("k") {
         None => 10,
         Some(x) => x
@@ -226,6 +324,7 @@ fn stats_json(session: &ValuationSession) -> Json {
         vec![
             ("n", Json::num(st.n as f64)),
             ("k", Json::num(st.k as f64)),
+            ("engine", Json::str(session.engine().label())),
             ("tests", Json::num(st.tests as f64)),
             ("batches", Json::num(st.batches as f64)),
             ("trace", Json::num(st.trace)),
@@ -235,7 +334,7 @@ fn stats_json(session: &ValuationSession) -> Json {
     )
 }
 
-fn do_snapshot(session: &ValuationSession, v: &Json) -> Result<Json, String> {
+fn do_snapshot(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
     let path = v
         .get("path")
         .and_then(Json::as_str)
@@ -254,18 +353,22 @@ fn do_snapshot(session: &ValuationSession, v: &Json) -> Result<Json, String> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::SessionConfig;
+    use super::super::{Engine, SessionConfig};
     use super::*;
     use crate::util::rng::Rng;
     use std::io::Cursor;
 
     fn tiny_session() -> ValuationSession {
+        tiny_session_with(SessionConfig::new(3))
+    }
+
+    fn tiny_session_with(config: SessionConfig) -> ValuationSession {
         let mut rng = Rng::new(3);
         let n = 8;
         let d = 2;
         let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
         let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
-        ValuationSession::new(train_x, train_y, d, SessionConfig::new(3)).unwrap()
+        ValuationSession::new(train_x, train_y, d, config).unwrap()
     }
 
     fn responses(input: &str) -> Vec<Json> {
@@ -385,6 +488,85 @@ mod tests {
         assert_eq!(rs.len(), 2, "{text}");
         assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(false));
         assert_eq!(rs[1].get("ok").unwrap().as_bool(), Some(true), "loop survived");
+    }
+
+    #[test]
+    fn implicit_engine_rejects_matrix_queries_with_engine_reason() {
+        let mut s = tiny_session_with(SessionConfig::new(3).with_engine(Engine::Implicit));
+        let (r, _) = handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        // off-diagonal cell and full row: rejected with reason "engine"
+        for q in [r#"{"cmd":"query","i":0,"j":1}"#, r#"{"cmd":"query","i":2}"#] {
+            let (r, _) = handle(&mut s, q);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+            assert_eq!(r.get("reason").unwrap().as_str(), Some("engine"), "{r}");
+        }
+        // diagonal cell, values, topk, stats all still work
+        let (r, _) = handle(&mut s, r#"{"cmd":"query","i":2,"j":2}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (r, _) = handle(&mut s, r#"{"cmd":"values","i":0}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert!(r.get("rowsum").unwrap().as_f64().is_some());
+        let (r, _) = handle(&mut s, r#"{"cmd":"topk","k":3,"by":"rowsum"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (r, _) = handle(&mut s, r#"{"cmd":"stats"}"#);
+        assert_eq!(r.get("engine").unwrap().as_str(), Some("implicit"), "{r}");
+        // empty-session errors do NOT carry the engine reason
+        let mut empty = tiny_session();
+        let (r, _) = handle(&mut empty, r#"{"cmd":"query","i":0,"j":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert!(r.get("reason").is_none(), "{r}");
+    }
+
+    #[test]
+    fn implicit_with_retained_rows_answers_matrix_queries() {
+        let mut dense = tiny_session();
+        let mut imp = tiny_session_with(
+            SessionConfig::new(3)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true),
+        );
+        let ingest = r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#;
+        handle(&mut dense, ingest);
+        handle(&mut imp, ingest);
+        let (a, _) = handle(&mut dense, r#"{"cmd":"query","i":0,"j":1}"#);
+        let (b, _) = handle(&mut imp, r#"{"cmd":"query","i":0,"j":1}"#);
+        assert_eq!(b.get("ok").unwrap().as_bool(), Some(true), "{b}");
+        let (av, bv) = (
+            a.get("value").unwrap().as_f64().unwrap(),
+            b.get("value").unwrap().as_f64().unwrap(),
+        );
+        assert!((av - bv).abs() < 1e-12, "{av} vs {bv}");
+        let (r, _) = handle(&mut imp, r#"{"cmd":"query","i":2}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("row").unwrap().as_arr().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn values_command_matches_topk_ranking() {
+        let mut s = tiny_session();
+        handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        let (all, _) = handle(&mut s, r#"{"cmd":"values"}"#);
+        assert_eq!(all.get("ok").unwrap().as_bool(), Some(true), "{all}");
+        let main = all.get("main").unwrap().as_arr().unwrap();
+        let rowsum = all.get("rowsum").unwrap().as_arr().unwrap();
+        assert_eq!(main.len(), 8);
+        assert_eq!(rowsum.len(), 8);
+        // single-point form agrees with the arrays
+        let (one, _) = handle(&mut s, r#"{"cmd":"values","i":5}"#);
+        assert_eq!(
+            one.get("main").unwrap().as_f64().unwrap().to_bits(),
+            main[5].as_f64().unwrap().to_bits()
+        );
+        // out-of-range index is a clean error
+        let (bad, _) = handle(&mut s, r#"{"cmd":"values","i":8}"#);
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad}");
     }
 
     #[test]

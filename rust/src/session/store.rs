@@ -1,35 +1,47 @@
 //! Versioned binary snapshot store for [`ValuationSession`]s
-//! (DESIGN.md §9).
+//! (DESIGN.md §9/§10).
 //!
 //! A snapshot captures everything a session needs to resume exactly where
-//! it left off: the RAW (unnormalized) accumulator, the test count, and
-//! the per-batch weight ledger, guarded by enough metadata to refuse a
-//! mismatched resume (k, metric, train-set fingerprint). Restore is
+//! it left off: the engine payload (RAW unnormalized accumulator for
+//! dense sessions, RAW value vector for implicit ones), the test count,
+//! and the per-batch weight ledger, guarded by enough metadata to refuse
+//! a mismatched resume (k, metric, train-set fingerprint). Restore is
 //! **bit-identical**: f64 cells round-trip through `to_le_bytes`/
 //! `from_le_bytes`, which preserve every bit pattern including ±0 and
 //! NaN payloads, so a snapshot/restore cycle mid-stream cannot perturb
-//! the final matrix (asserted by `tests/session_equivalence.rs`).
+//! the final state (asserted by `tests/session_equivalence.rs` and
+//! `tests/values_equivalence.rs`).
 //!
-//! ## Format (version 1, all integers and floats little-endian)
+//! ## Format (version 2, all integers and floats little-endian)
 //!
 //! ```text
 //! offset  size        field
 //! 0       8           magic  b"STIKNNSS"
-//! 8       4           format version (u32) = 1
+//! 8       4           format version (u32) = 2
 //! 12      4           k (u32)
 //! 16      1           metric tag (u8): 0 = sqeuclidean, 1 = manhattan, 2 = cosine
-//! 17      8           n, train-set size (u64)
-//! 25      8           d, feature dimension (u64)
-//! 33      8           train-set fingerprint (u64, FNV-1a over d, n, features, labels)
-//! 41      8           total test points ingested (u64)
-//! 49      8           ledger length L (u64)
-//! 57      16·L        ledger entries: (seq u64, len u64) per ingested batch
-//! 57+16L  8·n²        raw accumulator, row-major f64 (upper triangle + diagonal)
+//! 17      1           payload kind (u8): 0 = dense matrix, 1 = implicit value vector
+//! 18      8           n, train-set size (u64)
+//! 26      8           d, feature dimension (u64)
+//! 34      8           train-set fingerprint (u64, FNV-1a over d, n, features, labels)
+//! 42      8           total test points ingested (u64)
+//! 50      8           ledger length L (u64)
+//! 58      16·L        ledger entries: (seq u64, len u64) per ingested batch
+//! 58+16L  payload     kind 0: 8·n² raw accumulator, row-major f64
+//!                             (upper triangle + diagonal)
+//!                     kind 1: 8·n raw main sums, then 8·n raw
+//!                             interaction-rowsum sums (f64 each)
 //! end−8   8           FNV-1a checksum over every preceding byte (u64)
 //! ```
+//!
+//! Version 1 files (written before the implicit engine existed) are the
+//! same layout WITHOUT the payload-kind byte and always carry a dense
+//! matrix payload; [`decode`] still reads them, so old snapshots restore
+//! into current builds.
 
 use super::BatchRecord;
 use crate::knn::distance::Metric;
+use crate::shapley::values::Engine;
 use crate::util::matrix::Matrix;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
@@ -38,14 +50,19 @@ use std::path::Path;
 pub const MAGIC: [u8; 8] = *b"STIKNNSS";
 
 /// Current snapshot format version.
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 
-/// Decoded snapshot metadata (everything but the ledger and the matrix).
+/// Oldest version [`decode`] still reads.
+pub const MIN_VERSION: u32 = 1;
+
+/// Decoded snapshot metadata (everything but the ledger and the payload).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SnapshotHeader {
     pub version: u32,
     pub k: u32,
     pub metric: Metric,
+    /// Which engine wrote the payload (v1 files are always `Dense`).
+    pub engine: Engine,
     pub n: u64,
     pub d: u64,
     pub fingerprint: u64,
@@ -55,38 +72,70 @@ pub struct SnapshotHeader {
     pub batches: u64,
 }
 
+/// The engine-specific state a snapshot carries (both raw/unnormalized).
+#[derive(Clone, Debug)]
+pub enum SnapshotPayload {
+    /// Accumulator as stored: upper triangle + diagonal populated,
+    /// strict lower triangle all zeros.
+    Dense(Matrix),
+    /// Value vector sums: `main[i]` = Σ_p u_p(i), `inter[i]` =
+    /// Σ_p Σ_{j≠i} φ_p[i,j].
+    Implicit { main: Vec<f64>, inter: Vec<f64> },
+}
+
 /// A fully decoded (and checksum-verified) snapshot.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
     pub header: SnapshotHeader,
     pub ledger: Vec<BatchRecord>,
-    /// RAW accumulator as stored: unnormalized, upper triangle + diagonal
-    /// populated, strict lower triangle all zeros.
-    pub raw: Matrix,
+    pub payload: SnapshotPayload,
 }
 
 impl Snapshot {
     /// The averaged interaction matrix this snapshot represents (mirror +
     /// scale by 1/tests, exactly like the live session / one-shot
-    /// `sti_knn`). `None` before any test points were ingested.
+    /// `sti_knn`). `None` before any test points were ingested or when
+    /// the payload is a value vector (implicit sessions never had one).
     pub fn averaged_matrix(&self) -> Option<Matrix> {
         if self.header.tests == 0 {
             return None;
         }
-        let mut m = self.raw.clone();
-        m.mirror_upper_to_lower();
-        m.scale(1.0 / self.header.tests as f64);
-        Some(m)
+        match &self.payload {
+            SnapshotPayload::Dense(raw) => {
+                let mut m = raw.clone();
+                m.mirror_upper_to_lower();
+                m.scale(1.0 / self.header.tests as f64);
+                Some(m)
+            }
+            SnapshotPayload::Implicit { .. } => None,
+        }
     }
 
-    /// Top-k point values straight from the snapshot (no training data
-    /// needed). `None` before any test points were ingested.
-    pub fn top_k(&self, k: usize, by: super::TopBy) -> Option<Vec<(usize, f64)>> {
+    /// Averaged per-point values straight from the snapshot (no training
+    /// data needed) — works for BOTH payload kinds. `None` before any
+    /// test points were ingested.
+    pub fn point_values(&self, by: super::TopBy) -> Option<Vec<f64>> {
         if self.header.tests == 0 {
             return None;
         }
-        let values = super::point_values_raw(&self.raw, 1.0 / self.header.tests as f64, by);
-        Some(super::top_k_of(&values, k))
+        let inv_w = 1.0 / self.header.tests as f64;
+        Some(match &self.payload {
+            SnapshotPayload::Dense(raw) => super::point_values_raw(raw, inv_w, by),
+            SnapshotPayload::Implicit { main, inter } => match by {
+                super::TopBy::Main => main.iter().map(|&m| m * inv_w).collect(),
+                super::TopBy::RowSum => main
+                    .iter()
+                    .zip(inter)
+                    .map(|(&m, &s)| (m + s) * inv_w)
+                    .collect(),
+            },
+        })
+    }
+
+    /// Top-k point values straight from the snapshot. `None` before any
+    /// test points were ingested.
+    pub fn top_k(&self, k: usize, by: super::TopBy) -> Option<Vec<(usize, f64)>> {
+        Some(super::top_k_of(&self.point_values(by)?, k))
     }
 }
 
@@ -106,6 +155,23 @@ pub fn metric_from_tag(tag: u8) -> Option<Metric> {
         0 => Some(Metric::SqEuclidean),
         1 => Some(Metric::Manhattan),
         2 => Some(Metric::Cosine),
+        _ => None,
+    }
+}
+
+/// Stable wire tag for a payload kind (never renumber).
+pub fn payload_tag(engine: Engine) -> u8 {
+    match engine {
+        Engine::Dense => 0,
+        Engine::Implicit => 1,
+    }
+}
+
+/// Inverse of [`payload_tag`].
+pub fn engine_from_tag(tag: u8) -> Option<Engine> {
+    match tag {
+        0 => Some(Engine::Dense),
+        1 => Some(Engine::Implicit),
         _ => None,
     }
 }
@@ -150,7 +216,17 @@ pub fn dataset_fingerprint(train_x: &[f32], train_y: &[i32], d: usize) -> u64 {
     h.finish()
 }
 
-/// Serialize one snapshot to its byte representation.
+/// Borrowed payload for [`encode`].
+#[derive(Clone, Copy, Debug)]
+pub enum EncodePayload<'a> {
+    /// Raw n×n accumulator, row-major.
+    Dense(&'a [f64]),
+    /// Raw value-vector sums, n each.
+    Implicit { main: &'a [f64], inter: &'a [f64] },
+}
+
+/// Serialize one snapshot to its byte representation (always the current
+/// format version).
 #[allow(clippy::too_many_arguments)]
 pub fn encode(
     k: u32,
@@ -160,14 +236,25 @@ pub fn encode(
     fingerprint: u64,
     tests: u64,
     ledger: &[BatchRecord],
-    raw: &[f64],
+    payload: EncodePayload<'_>,
 ) -> Vec<u8> {
-    assert_eq!(raw.len() as u64, n * n, "raw accumulator shape mismatch");
-    let mut out = Vec::with_capacity(57 + 16 * ledger.len() + 8 * raw.len() + 8);
+    let (kind, payload_len) = match payload {
+        EncodePayload::Dense(raw) => {
+            assert_eq!(raw.len() as u64, n * n, "raw accumulator shape mismatch");
+            (Engine::Dense, raw.len())
+        }
+        EncodePayload::Implicit { main, inter } => {
+            assert_eq!(main.len() as u64, n, "main vector shape mismatch");
+            assert_eq!(inter.len() as u64, n, "inter vector shape mismatch");
+            (Engine::Implicit, main.len() + inter.len())
+        }
+    };
+    let mut out = Vec::with_capacity(58 + 16 * ledger.len() + 8 * payload_len + 8);
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&k.to_le_bytes());
     out.push(metric_tag(metric));
+    out.push(payload_tag(kind));
     out.extend_from_slice(&n.to_le_bytes());
     out.extend_from_slice(&d.to_le_bytes());
     out.extend_from_slice(&fingerprint.to_le_bytes());
@@ -177,8 +264,20 @@ pub fn encode(
         out.extend_from_slice(&rec.seq.to_le_bytes());
         out.extend_from_slice(&rec.len.to_le_bytes());
     }
-    for v in raw {
-        out.extend_from_slice(&v.to_le_bytes());
+    match payload {
+        EncodePayload::Dense(raw) => {
+            for v in raw {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        EncodePayload::Implicit { main, inter } => {
+            for v in main {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for v in inter {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
     }
     let mut h = Fnv::new();
     h.write(&out);
@@ -221,10 +320,19 @@ impl<'a> Rd<'a> {
     fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
+
+    fn f64_vec(&mut self, len: usize) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
 }
 
 /// Decode and fully validate a snapshot byte stream (magic, version,
-/// checksum, internal consistency).
+/// checksum, internal consistency). Reads versions [`MIN_VERSION`]
+/// through [`VERSION`].
 pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
     ensure!(bytes.len() >= 57 + 8, "snapshot too short ({} bytes)", bytes.len());
     // Checksum first: everything else assumes intact bytes.
@@ -241,13 +349,26 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
     let magic = rd.take(8)?;
     ensure!(magic == &MAGIC[..], "bad snapshot magic {:02x?}", magic);
     let version = rd.u32()?;
-    if version != VERSION {
-        bail!("unsupported snapshot version {version} (this build reads version {VERSION})");
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        bail!(
+            "unsupported snapshot version {version} (this build reads versions \
+             {MIN_VERSION}..={VERSION})"
+        );
     }
     let k = rd.u32()?;
     let metric_tag = rd.u8()?;
     let Some(metric) = metric_from_tag(metric_tag) else {
         bail!("unknown metric tag {metric_tag} in snapshot");
+    };
+    // v1 predates the payload-kind byte: those files are always dense.
+    let engine = if version >= 2 {
+        let tag = rd.u8()?;
+        let Some(engine) = engine_from_tag(tag) else {
+            bail!("unknown payload kind {tag} in snapshot");
+        };
+        engine
+    } else {
+        Engine::Dense
     };
     let n = rd.u64()?;
     let d = rd.u64()?;
@@ -256,18 +377,21 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
     let ledger_len = rd.u64()?;
 
     // Shape sanity BEFORE allocating anything sized by file contents: the
-    // remaining body must be exactly ledger + matrix. Every multiplication
+    // remaining body must be exactly ledger + payload. Every multiplication
     // is checked — a crafted header must produce a clean error, not a
     // wrap-around that defeats this guard (the checksum is FNV, not a MAC,
     // so headers are attacker-controllable).
+    let payload_cells = match engine {
+        Engine::Dense => (n as usize).checked_mul(n as usize),
+        Engine::Implicit => (n as usize).checked_mul(2),
+    };
     let expected = (ledger_len as usize).checked_mul(16).and_then(|l| {
-        (n as usize)
-            .checked_mul(n as usize)
+        payload_cells
             .and_then(|m| m.checked_mul(8))
             .map(|mb| (l, mb))
     });
     let Some(expected_bytes) = expected
-        .and_then(|(ledger_bytes, matrix_bytes)| ledger_bytes.checked_add(matrix_bytes))
+        .and_then(|(ledger_bytes, payload_bytes)| ledger_bytes.checked_add(payload_bytes))
     else {
         bail!("snapshot header sizes overflow (n={n}, ledger={ledger_len})");
     };
@@ -293,17 +417,24 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
         "weight ledger sums to {ledger_total} but snapshot records {tests} tests"
     );
 
-    let cells = (n * n) as usize;
-    let mut raw = Vec::with_capacity(cells);
-    for _ in 0..cells {
-        raw.push(rd.f64()?);
-    }
+    let payload = match engine {
+        Engine::Dense => {
+            let raw = rd.f64_vec((n * n) as usize)?;
+            SnapshotPayload::Dense(Matrix::from_vec(n as usize, n as usize, raw))
+        }
+        Engine::Implicit => {
+            let main = rd.f64_vec(n as usize)?;
+            let inter = rd.f64_vec(n as usize)?;
+            SnapshotPayload::Implicit { main, inter }
+        }
+    };
 
     Ok(Snapshot {
         header: SnapshotHeader {
             version,
             k,
             metric,
+            engine,
             n,
             d,
             fingerprint,
@@ -311,7 +442,7 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
             batches: ledger_len,
         },
         ledger,
-        raw: Matrix::from_vec(n as usize, n as usize, raw),
+        payload,
     })
 }
 
@@ -336,8 +467,50 @@ mod tests {
             0xDEAD_BEEF,
             5,
             &[BatchRecord { seq: 0, len: 2 }, BatchRecord { seq: 1, len: 3 }],
-            &raw,
+            EncodePayload::Dense(&raw),
         )
+    }
+
+    fn sample_implicit() -> Vec<u8> {
+        encode(
+            2,
+            Metric::Manhattan,
+            3,
+            4,
+            0xFEED_F00D,
+            7,
+            &[BatchRecord { seq: 0, len: 7 }],
+            EncodePayload::Implicit {
+                main: &[0.5, 0.0, 1.5],
+                inter: &[-0.25, 0.75, -1.0],
+            },
+        )
+    }
+
+    /// Hand-build a VERSION-1 byte stream (pre-implicit layout: no
+    /// payload-kind byte, dense matrix payload) — the read-compat fixture.
+    fn sample_v1() -> Vec<u8> {
+        let raw: Vec<f64> = (0..4).map(|i| i as f64).collect();
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&2u32.to_le_bytes()); // k
+        out.push(metric_tag(Metric::SqEuclidean));
+        out.extend_from_slice(&2u64.to_le_bytes()); // n
+        out.extend_from_slice(&1u64.to_le_bytes()); // d
+        out.extend_from_slice(&0x1234u64.to_le_bytes()); // fingerprint
+        out.extend_from_slice(&3u64.to_le_bytes()); // tests
+        out.extend_from_slice(&1u64.to_le_bytes()); // ledger len
+        out.extend_from_slice(&0u64.to_le_bytes()); // seq
+        out.extend_from_slice(&3u64.to_le_bytes()); // len
+        for v in &raw {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut h = Fnv::new();
+        h.write(&out);
+        let sum = h.finish();
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
     }
 
     #[test]
@@ -347,6 +520,7 @@ mod tests {
         assert_eq!(snap.header.version, VERSION);
         assert_eq!(snap.header.k, 3);
         assert_eq!(snap.header.metric, Metric::SqEuclidean);
+        assert_eq!(snap.header.engine, Engine::Dense);
         assert_eq!(snap.header.n, 3);
         assert_eq!(snap.header.d, 2);
         assert_eq!(snap.header.fingerprint, 0xDEAD_BEEF);
@@ -356,22 +530,64 @@ mod tests {
             BatchRecord { seq: 0, len: 2 },
             BatchRecord { seq: 1, len: 3 },
         ]);
-        for (i, v) in snap.raw.data().iter().enumerate() {
+        let SnapshotPayload::Dense(raw) = &snap.payload else {
+            panic!("dense payload expected");
+        };
+        for (i, v) in raw.data().iter().enumerate() {
             assert_eq!(v.to_bits(), (i as f64 * 0.25 - 1.0).to_bits());
         }
         // re-encoding the decoded snapshot reproduces the bytes exactly
         let again = encode(3, Metric::SqEuclidean, 3, 2, 0xDEAD_BEEF, 5, &snap.ledger,
-            snap.raw.data());
+            EncodePayload::Dense(raw.data()));
         assert_eq!(bytes, again);
+    }
+
+    #[test]
+    fn implicit_payload_roundtrips_bitwise() {
+        let bytes = sample_implicit();
+        let snap = decode(&bytes).unwrap();
+        assert_eq!(snap.header.engine, Engine::Implicit);
+        assert_eq!(snap.header.tests, 7);
+        let SnapshotPayload::Implicit { main, inter } = &snap.payload else {
+            panic!("implicit payload expected");
+        };
+        assert_eq!(main.as_slice(), &[0.5, 0.0, 1.5]);
+        assert_eq!(inter.as_slice(), &[-0.25, 0.75, -1.0]);
+        // no matrix ever existed → averaged_matrix is None, values work
+        assert!(snap.averaged_matrix().is_none());
+        let top = snap.top_k(3, crate::session::TopBy::RowSum).unwrap();
+        // rowsum/7: [0.25/7, 0.75/7, 0.5/7] → index order 1, 2, 0
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 2);
+        assert_eq!(top[2].0, 0);
+        let again = encode(2, Metric::Manhattan, 3, 4, 0xFEED_F00D, 7, &snap.ledger,
+            EncodePayload::Implicit { main: main.as_slice(), inter: inter.as_slice() });
+        assert_eq!(bytes, again);
+    }
+
+    #[test]
+    fn version_1_files_still_decode() {
+        let snap = decode(&sample_v1()).unwrap();
+        assert_eq!(snap.header.version, 1);
+        assert_eq!(snap.header.engine, Engine::Dense, "v1 is always dense");
+        assert_eq!(snap.header.n, 2);
+        assert_eq!(snap.header.tests, 3);
+        let SnapshotPayload::Dense(raw) = &snap.payload else {
+            panic!("dense payload expected");
+        };
+        assert_eq!(raw.data(), &[0.0, 1.0, 2.0, 3.0]);
     }
 
     #[test]
     fn nan_and_negative_zero_cells_survive() {
         let raw = vec![f64::NAN, -0.0, f64::INFINITY, 1.5];
         let bytes = encode(1, Metric::Cosine, 2, 1, 7, 1,
-            &[BatchRecord { seq: 0, len: 1 }], &raw);
+            &[BatchRecord { seq: 0, len: 1 }], EncodePayload::Dense(&raw));
         let snap = decode(&bytes).unwrap();
-        for (a, b) in raw.iter().zip(snap.raw.data()) {
+        let SnapshotPayload::Dense(m) = &snap.payload else {
+            panic!("dense payload expected");
+        };
+        for (a, b) in raw.iter().zip(m.data()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
     }
@@ -421,10 +637,23 @@ mod tests {
     }
 
     #[test]
+    fn unknown_payload_kind_rejected() {
+        let mut bytes = sample();
+        bytes[17] = 9; // payload-kind byte
+        let body_len = bytes.len() - 8;
+        let mut h = Fnv::new();
+        h.write(&bytes[..body_len]);
+        let sum = h.finish().to_le_bytes();
+        bytes[body_len..].copy_from_slice(&sum);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("payload kind"), "{err}");
+    }
+
+    #[test]
     fn ledger_total_must_match_tests() {
         let raw = vec![0.0; 4];
         let bytes = encode(1, Metric::SqEuclidean, 2, 1, 0, 99,
-            &[BatchRecord { seq: 0, len: 1 }], &raw);
+            &[BatchRecord { seq: 0, len: 1 }], EncodePayload::Dense(&raw));
         let err = decode(&bytes).unwrap_err().to_string();
         assert!(err.contains("ledger"), "{err}");
     }
@@ -435,6 +664,16 @@ mod tests {
             assert_eq!(metric_from_tag(metric_tag(m)), Some(m));
         }
         assert_eq!(metric_from_tag(3), None);
+    }
+
+    #[test]
+    fn payload_tags_are_stable_and_invertible() {
+        assert_eq!(payload_tag(Engine::Dense), 0);
+        assert_eq!(payload_tag(Engine::Implicit), 1);
+        for e in [Engine::Dense, Engine::Implicit] {
+            assert_eq!(engine_from_tag(payload_tag(e)), Some(e));
+        }
+        assert_eq!(engine_from_tag(2), None);
     }
 
     #[test]

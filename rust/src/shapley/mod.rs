@@ -1,7 +1,9 @@
 //! Data-Shapley engines: the paper's O(tn²) STI-KNN (Algorithm 1), the
-//! O(2ⁿ) brute-force baseline it replaces (Eq. 3), the per-point
-//! KNN-Shapley baseline (Jia et al. 2019), the SII variant (§3.2), a
-//! Monte-Carlo estimator, leave-one-out, and the axiom checkers.
+//! implicit O(t·n log n) per-point value engine built on its rank-space
+//! structure ([`values`], DESIGN.md §10), the O(2ⁿ) brute-force baseline
+//! it replaces (Eq. 3), the per-point KNN-Shapley baseline (Jia et al.
+//! 2019), the SII variant (§3.2), a Monte-Carlo estimator, leave-one-out,
+//! and the axiom checkers.
 
 pub mod axioms;
 pub mod knn_shapley;
@@ -10,8 +12,13 @@ pub mod mc_sti;
 pub mod sii;
 pub mod sti_exact;
 pub mod sti_knn;
+pub mod values;
 
 pub use sti_knn::{
-    prepare_batch, sti_knn, sti_knn_accumulate, sti_knn_partial, sweep_band, PREP_BATCH,
-    PreparedBatch, StiParams,
+    prepare_batch, prepare_batch_scratch, sti_knn, sti_knn_accumulate, sti_knn_partial,
+    sweep_band, PREP_BATCH, PrepScratch, PreparedBatch, StiParams,
+};
+pub use values::{
+    sti_point_values, sti_values, sweep_values, values_accumulate, PointValues, ValueVector,
+    ValuesScratch,
 };

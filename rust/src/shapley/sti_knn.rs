@@ -41,7 +41,7 @@
 //! [`sti_knn_partial`] is the single-threaded composition of the two
 //! phases over the full band `[0, n)`.
 
-use crate::knn::distance::{argsort_by_distance, distances_into, Metric};
+use crate::knn::distance::{argsort_by_distance_keyed, distances_into, Metric};
 use crate::util::matrix::Matrix;
 
 /// Parameters for an STI-KNN run.
@@ -120,6 +120,56 @@ impl PreparedBatch {
     pub fn weight(&self) -> f64 {
         self.len as f64
     }
+
+    /// 1/k — the per-match utility quantum (Eq. 2).
+    pub fn inv_k(&self) -> f64 {
+        self.inv_k
+    }
+
+    /// Test point `p`'s rank row, ORIGINAL train order: `rank_row(p)[i]`
+    /// is train point i's sorted position for this test point, as f64
+    /// (always an exact small integer).
+    pub fn rank_row(&self, p: usize) -> &[f64] {
+        &self.rankf[p * self.n..(p + 1) * self.n]
+    }
+
+    /// Test point `p`'s column-value row, ORIGINAL train order:
+    /// `colval_row(p)[i]` is the Eq. 8 column value of train point i
+    /// (= c_p[rank of i]).
+    pub fn colval_row(&self, p: usize) -> &[f64] {
+        &self.colval[p * self.n..(p + 1) * self.n]
+    }
+
+    /// Test point `p`'s label.
+    pub fn test_label(&self, p: usize) -> i32 {
+        self.test_y[p]
+    }
+}
+
+/// Reusable scratch for [`prepare_batch_scratch`]: the per-test distance,
+/// superdiagonal, argsort-order and packed-sort-key buffers. One
+/// `PrepScratch` serves any number of batches against the same (or
+/// different) train sizes — the buffers are resized on demand and their
+/// capacity never shrinks, so a long-lived stream of small batches
+/// performs no per-test allocations at all.
+#[derive(Default)]
+pub struct PrepScratch {
+    dists: Vec<f64>,
+    c: Vec<f64>,
+    order: Vec<usize>,
+    keys: Vec<u128>,
+}
+
+impl PrepScratch {
+    pub fn new() -> Self {
+        PrepScratch::default()
+    }
+
+    fn resize(&mut self, n: usize) {
+        self.dists.resize(n, 0.0);
+        self.c.resize(n, 0.0);
+        self.order.resize(n, 0);
+    }
 }
 
 /// Lines 3–10 of Algorithm 1: the superdiagonal, indexed by RANK.
@@ -154,7 +204,9 @@ fn superdiagonal_into(u_sorted: &[f64], k: usize, c: &mut [f64]) {
 /// Phase 1: prepare a block of test points for the O(n²) sweep — per test
 /// point, distances → ranks → superdiagonal (Eq. 6/7) → scatter to
 /// original train order. O(len·n·(d + log n)); embarrassingly parallel
-/// over test points / blocks.
+/// over test points / blocks. Allocates its scratch internally; streaming
+/// callers that prepare many batches should hold a [`PrepScratch`] and
+/// call [`prepare_batch_scratch`] instead.
 pub fn prepare_batch(
     train_x: &[f32],
     train_y: &[i32],
@@ -162,6 +214,24 @@ pub fn prepare_batch(
     test_x: &[f32],
     test_y: &[i32],
     params: &StiParams,
+) -> PreparedBatch {
+    let mut scratch = PrepScratch::new();
+    prepare_batch_scratch(train_x, train_y, d, test_x, test_y, params, &mut scratch)
+}
+
+/// [`prepare_batch`] with caller-owned scratch: zero per-test allocations
+/// (the distance / superdiagonal / argsort-order buffers live in
+/// `scratch` and are reused across calls). The output batch is
+/// bit-identical to [`prepare_batch`]'s — scratch reuse cannot change a
+/// single rank or column value.
+pub fn prepare_batch_scratch(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    scratch: &mut PrepScratch,
 ) -> PreparedBatch {
     let n = train_y.len();
     params.validate(n);
@@ -173,12 +243,19 @@ pub fn prepare_batch(
 
     let mut rankf = vec![0.0f64; len * n];
     let mut colval = vec![0.0f64; len * n];
-    let mut dists = vec![0.0f64; n];
-    let mut c = vec![0.0f64; n];
+    scratch.resize(n);
+    let PrepScratch {
+        dists,
+        c,
+        order,
+        keys,
+    } = scratch;
 
     for (slot, (q, &y)) in test_x.chunks_exact(d).zip(test_y).enumerate() {
-        distances_into(q, train_x, d, params.metric, &mut dists);
-        let order = argsort_by_distance(&dists);
+        distances_into(q, train_x, d, params.metric, dists);
+        // Packed-key sort: identical order to argsort_by_distance (the
+        // metrics are non-negative), measurably faster prep.
+        argsort_by_distance_keyed(dists, keys, order);
 
         let rank_row = &mut rankf[slot * n..(slot + 1) * n];
         let col_row = &mut colval[slot * n..(slot + 1) * n];
@@ -187,7 +264,7 @@ pub fn prepare_batch(
         for (r, &orig) in order.iter().enumerate() {
             col_row[r] = if train_y[orig] == y { inv_k } else { 0.0 };
         }
-        superdiagonal_into(&col_row[..n], k, &mut c);
+        superdiagonal_into(&col_row[..n], k, c);
         // Scatter to original order so the O(n²) loop is a pure select-add.
         for (r, &orig) in order.iter().enumerate() {
             rank_row[orig] = r as f64;
@@ -286,11 +363,13 @@ pub fn sti_knn_accumulate(
         (n, n),
         "accumulator shape mismatch"
     );
+    let mut scratch = PrepScratch::new();
     for (chunk_x, chunk_y) in test_x
         .chunks(PREP_BATCH * d)
         .zip(test_y.chunks(PREP_BATCH))
     {
-        let batch = prepare_batch(train_x, train_y, d, chunk_x, chunk_y, params);
+        let batch =
+            prepare_batch_scratch(train_x, train_y, d, chunk_x, chunk_y, params, &mut scratch);
         sweep_band(&batch, train_y, 0, n, acc.data_mut());
     }
     test_y.len() as f64
@@ -555,6 +634,42 @@ mod tests {
         assert_eq!(weight, t as f64);
         for (a, b) in reference.data().iter().zip(acc.data()) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_fresh_allocation() {
+        // PrepScratch is a pure allocation cache: preparing two different
+        // batches through ONE scratch (dirty buffers between calls) gives
+        // the same bits as fresh prepare_batch calls.
+        let mut rng = Rng::new(53);
+        let n = 21;
+        let d = 3;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(3) as i32).collect();
+        let params = StiParams::new(5);
+        let mut scratch = PrepScratch::new();
+        for t in [4usize, 1, 7] {
+            let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+            let test_y: Vec<i32> = (0..t).map(|_| rng.below(3) as i32).collect();
+            let fresh = prepare_batch(&train_x, &train_y, d, &test_x, &test_y, &params);
+            let reused = prepare_batch_scratch(
+                &train_x, &train_y, d, &test_x, &test_y, &params, &mut scratch,
+            );
+            assert_eq!(fresh.len(), reused.len());
+            for p in 0..t {
+                for i in 0..n {
+                    assert_eq!(
+                        fresh.rank_row(p)[i].to_bits(),
+                        reused.rank_row(p)[i].to_bits()
+                    );
+                    assert_eq!(
+                        fresh.colval_row(p)[i].to_bits(),
+                        reused.colval_row(p)[i].to_bits()
+                    );
+                }
+                assert_eq!(fresh.test_label(p), reused.test_label(p));
+            }
         }
     }
 

@@ -1,0 +1,632 @@
+//! Implicit per-point value engine: exact STI mains + interaction row
+//! sums in **O(n) per test point after the O(n log n) prep**, with no
+//! n×n materialization (DESIGN.md §10).
+//!
+//! # The rank-space suffix-sum identity
+//!
+//! Eq. 8 makes every per-test interaction matrix column-constant in rank
+//! space: for a pair with sorted positions (r_i, r_j), φ_p[i,j] =
+//! c_p[max(r_i, r_j)], where c_p is the Eq. 6/7 superdiagonal. A point's
+//! off-diagonal row sum therefore collapses — splitting the other points
+//! into the r_i points ranked BELOW it (each pair takes its own column
+//! value c_p[r_i]) and the points ranked ABOVE it (each pair takes that
+//! point's column value):
+//!
+//!   rowsum_i(p) = Σ_{j≠i} c_p[max(r_i, r_j)]
+//!               = r_i·c_p[r_i] + Σ_{s > r_i} c_p[s]
+//!               = r_i·c_p[r_i] + suffix(c_p, r_i + 1)
+//!
+//! One right-to-left suffix-sum pass over c_p serves ALL n rows of one
+//! test point, so per-point values (main φ_ii = u_p(i), Eq. 4/5, plus the
+//! row sum above) cost O(n) per test point after the existing O(n log n)
+//! prep — O(t·n log n) total and O(n) state, versus the dense engine's
+//! O(t·n²) time and O(n²) memory. That is the same "exploit KNN rank
+//! locality" move as Jia et al.'s O(n log n) KNN-Shapley (1908.08619),
+//! applied to the interaction aggregates every downstream valuation
+//! workload (top-k, mislabel ranking, removal/acquisition curves)
+//! actually consumes.
+//!
+//! # Summation order (the bit-reproducibility contract)
+//!
+//! The engine fixes ONE summation order and documents it:
+//!
+//! * suffix sums right-to-left: `suffix[r] = c[r] + suffix[r+1]`,
+//!   `suffix[n] = 0`;
+//! * per-test row value evaluated as `r·c[r] + suffix[r+1]` (one
+//!   multiply, one add — no FMA contraction in Rust's default float
+//!   semantics);
+//! * each accumulator element receives exactly ONE addition per test
+//!   point, applied in test-stream order.
+//!
+//! Because every element sees the same additions in the same order no
+//! matter how the stream is cut, [`values_accumulate`] over ANY
+//! contiguous partition of a test set is **bit-identical** to a one-shot
+//! run (mirroring `sti_knn_accumulate`'s contract). Equality against the
+//! dense engine's `diag + rowsums` is a different association order and
+//! therefore holds to ≤ 1e-12, not bitwise — `tests/values_equivalence.rs`
+//! asserts both sides.
+
+use super::sti_knn::{
+    prepare_batch_scratch, PrepScratch, PreparedBatch, StiParams, PREP_BATCH,
+};
+use crate::util::matrix::Matrix;
+
+/// Which value engine computes per-point aggregates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Materialize the n×n interaction accumulator (O(t·n²) time,
+    /// O(n²) memory) and read values off it. Supports cell/row/matrix
+    /// queries; required when the full interaction structure is needed.
+    Dense,
+    /// Rank-space suffix-sum identity (this module): O(t·n log n) time,
+    /// O(n) state. Per-point values only — the matrix never exists.
+    Implicit,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "dense" | "matrix" => Some(Engine::Dense),
+            "implicit" | "values" => Some(Engine::Implicit),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Engine::Dense => "dense",
+            Engine::Implicit => "implicit",
+        }
+    }
+}
+
+/// O(n) per-point value accumulator: the implicit twin of the n×n
+/// matrix accumulator. Holds the UNNORMALIZED sums Σ_p over ingested
+/// test points; normalization (scale by 1/t, Eq. 9) happens at read
+/// time, exactly like the session layer's matrix path.
+#[derive(Clone, Debug)]
+pub struct ValueVector {
+    n: usize,
+    /// Σ_p u_p(i) — the diagonal main terms (Eq. 4/5).
+    main: Vec<f64>,
+    /// Σ_p Σ_{j≠i} φ_p[i,j] — the off-diagonal interaction row sums via
+    /// the suffix-sum identity.
+    inter: Vec<f64>,
+}
+
+impl ValueVector {
+    pub fn zeros(n: usize) -> Self {
+        ValueVector {
+            n,
+            main: vec![0.0; n],
+            inter: vec![0.0; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Raw (unnormalized) main-term sums.
+    pub fn main_raw(&self) -> &[f64] {
+        &self.main
+    }
+
+    /// Raw (unnormalized) off-diagonal interaction row sums.
+    pub fn inter_raw(&self) -> &[f64] {
+        &self.inter
+    }
+
+    /// Averaged main values φ_ii (Eq. 9 with weight 1/inv_w).
+    pub fn main_values(&self, inv_w: f64) -> Vec<f64> {
+        self.main.iter().map(|&m| m * inv_w).collect()
+    }
+
+    /// Averaged total row sums φ_ii + Σ_{j≠i} φ_ij — the same quantity as
+    /// the dense path's `diag + rowsums` (session `TopBy::RowSum`).
+    pub fn rowsum_values(&self, inv_w: f64) -> Vec<f64> {
+        self.main
+            .iter()
+            .zip(&self.inter)
+            .map(|(&m, &s)| (m + s) * inv_w)
+            .collect()
+    }
+
+    /// Eq. 9 linearity: fold another partial vector into this one
+    /// (elementwise) — for callers that compute partials over disjoint
+    /// test shards and combine them (the vector analogue of
+    /// `Matrix::add_assign`). Note this merge carries only the ≤ 1e-12
+    /// Eq. 9 guarantee, NOT the bit-reproducibility contract: combining
+    /// per-shard sums associates additions differently than streaming
+    /// the same tests through one vector. (The coordinator's
+    /// value-sharded path avoids that by folding published blocks into
+    /// a single vector in stream order.)
+    pub fn add_assign(&mut self, other: &ValueVector) {
+        assert_eq!(self.n, other.n, "value vector size mismatch");
+        for (a, b) in self.main.iter_mut().zip(&other.main) {
+            *a += b;
+        }
+        for (a, b) in self.inter.iter_mut().zip(&other.inter) {
+            *a += b;
+        }
+    }
+
+    /// Reassemble a vector from raw (unnormalized) main/inter sums — the
+    /// snapshot-restore path. Lengths must agree.
+    pub fn from_raw_parts(main: Vec<f64>, inter: Vec<f64>) -> Self {
+        assert_eq!(main.len(), inter.len(), "main/inter length mismatch");
+        ValueVector {
+            n: main.len(),
+            main,
+            inter,
+        }
+    }
+
+    /// Reconstruct the value vector from a RAW dense accumulator (upper
+    /// triangle + diagonal populated, as `sweep_band` writes it) — the
+    /// dense→implicit snapshot migration path. Exact up to the f64
+    /// association order of the row-sum reduction (≤ 1e-12 vs a
+    /// pure-implicit history, not bitwise).
+    pub fn from_raw_accumulator(acc: &Matrix) -> Self {
+        let n = acc.rows();
+        assert_eq!(acc.cols(), n, "square accumulator required");
+        let mut vv = ValueVector::zeros(n);
+        for i in 0..n {
+            let main = acc.get(i, i);
+            vv.main[i] = main;
+            // the shared fixed-order row reduction (DESIGN.md §10),
+            // minus the diagonal it includes
+            vv.inter[i] = acc.sym_row_sum_from_upper(i) - main;
+        }
+        vv
+    }
+}
+
+/// Scratch for [`sweep_values`]: the rank-space superdiagonal and its
+/// suffix sums, reused across batches.
+#[derive(Default)]
+pub struct ValuesScratch {
+    /// c_p by rank: `c_rank[r]` = column value of the point at rank r.
+    c_rank: Vec<f64>,
+    /// `suffix[r]` = Σ_{s ≥ r} c_rank[s]; length n+1, `suffix[n]` = 0.
+    suffix: Vec<f64>,
+}
+
+impl ValuesScratch {
+    pub fn new() -> Self {
+        ValuesScratch::default()
+    }
+
+    fn resize(&mut self, n: usize) {
+        self.c_rank.resize(n, 0.0);
+        self.suffix.resize(n + 1, 0.0);
+    }
+}
+
+/// Phase-2 twin of `sweep_band` for the implicit engine: fold one
+/// prepared batch into a [`ValueVector`] in **O(len·n)** (vs the dense
+/// sweep's O(len·n²)). Per test point: rebuild c_p in rank space from the
+/// batch's original-order rows, one right-to-left suffix pass, then one
+/// O(n) scatter of `r·c[r] + suffix[r+1]` (see the module docs for the
+/// fixed summation order).
+pub fn sweep_values(
+    batch: &PreparedBatch,
+    train_y: &[i32],
+    vv: &mut ValueVector,
+    scratch: &mut ValuesScratch,
+) {
+    let n = batch.n();
+    assert_eq!(train_y.len(), n, "train labels / batch mismatch");
+    assert_eq!(vv.n, n, "value vector / batch mismatch");
+    scratch.resize(n);
+    let inv_k = batch.inv_k();
+    for p in 0..batch.len() {
+        let rank = batch.rank_row(p);
+        let colval = batch.colval_row(p);
+        let y = batch.test_label(p);
+        // c_p by rank (colval is scattered to original order; rank is the
+        // inverse permutation, so this is a gather).
+        for i in 0..n {
+            scratch.c_rank[rank[i] as usize] = colval[i];
+        }
+        scratch.suffix[n] = 0.0;
+        for r in (0..n).rev() {
+            scratch.suffix[r] = scratch.c_rank[r] + scratch.suffix[r + 1];
+        }
+        for i in 0..n {
+            let r = rank[i];
+            if train_y[i] == y {
+                vv.main[i] += inv_k;
+            }
+            vv.inter[i] += r * colval[i] + scratch.suffix[r as usize + 1];
+        }
+    }
+}
+
+/// Accumulate one test batch's unnormalized per-point values into an
+/// EXISTING [`ValueVector`] and return the batch's merge weight (its
+/// test count, Eq. 9) — the streaming primitive mirroring
+/// `sti_knn_accumulate`. O(len·(n·d + n log n)) total.
+///
+/// Contract (same as the matrix twin): every vector element receives its
+/// per-test additions in test order regardless of how the stream is cut
+/// into batches, so ingesting any contiguous partition of a test set
+/// through repeated calls is **bit-identical** to one call over the
+/// whole set.
+pub fn values_accumulate(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    vv: &mut ValueVector,
+) -> f64 {
+    let n = train_y.len();
+    assert_eq!(train_x.len(), n * d, "train shape mismatch");
+    assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
+    assert_eq!(vv.n, n, "value vector shape mismatch");
+    let mut prep = PrepScratch::new();
+    let mut scratch = ValuesScratch::new();
+    for (chunk_x, chunk_y) in test_x
+        .chunks(PREP_BATCH * d)
+        .zip(test_y.chunks(PREP_BATCH))
+    {
+        let batch =
+            prepare_batch_scratch(train_x, train_y, d, chunk_x, chunk_y, params, &mut prep);
+        sweep_values(&batch, train_y, vv, &mut scratch);
+    }
+    test_y.len() as f64
+}
+
+/// Per-point STI values, averaged over the test set (Eq. 9).
+#[derive(Clone, Debug)]
+pub struct PointValues {
+    /// φ_ii — the main terms (Eq. 4/5).
+    pub main: Vec<f64>,
+    /// φ_ii + Σ_{j≠i} φ_ij — total contribution including synergies
+    /// (the session layer's `TopBy::RowSum` quantity).
+    pub rowsum: Vec<f64>,
+}
+
+/// One-shot per-point STI values via the implicit engine:
+/// O(t·(n·d + n log n)) time, O(n) state, no n×n matrix anywhere.
+pub fn sti_values(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+) -> PointValues {
+    assert!(!test_y.is_empty(), "empty test set");
+    let mut vv = ValueVector::zeros(train_y.len());
+    let w = values_accumulate(train_x, train_y, d, test_x, test_y, params, &mut vv);
+    let inv_w = 1.0 / w;
+    PointValues {
+        main: vv.main_values(inv_w),
+        rowsum: vv.rowsum_values(inv_w),
+    }
+}
+
+/// Per-point STI values through either engine — the switch the analysis
+/// suite routes through. `Dense` materializes the full matrix and reads
+/// `diag + rowsums` off it (the reference); `Implicit` never builds it.
+/// Both agree to ≤ 1e-12 (`tests/values_equivalence.rs`).
+pub fn sti_point_values(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    engine: Engine,
+) -> PointValues {
+    match engine {
+        Engine::Implicit => sti_values(train_x, train_y, d, test_x, test_y, params),
+        Engine::Dense => {
+            let m = super::sti_knn::sti_knn(train_x, train_y, d, test_x, test_y, params);
+            let n = m.rows();
+            let main: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+            let rowsum: Vec<f64> = (0..n).map(|i| m.row(i).iter().sum()).collect();
+            PointValues { main, rowsum }
+        }
+    }
+}
+
+/// Class-split interaction sums via the same rank-space trick, for the
+/// mislabel detector: `out[i][c]` = (1/t)·Σ_p Σ_{j≠i, y_j=c} φ_p[i,j] —
+/// point i's total interaction with class-c points — in
+/// **O(t·n·classes)** instead of the dense path's O(t·n² + n²·classes).
+///
+/// Derivation: restrict the suffix-sum identity to class members. With
+/// `count_c(<r)` the number of class-c points ranked below r and
+/// `suffix_c(r)` the class-c-restricted suffix sum of c_p,
+///
+///   rowsum_{i,c}(p) = count_c(<r_i)·c_p[r_i] + suffix_c(r_i + 1)
+///
+/// (j = i is excluded automatically: the count stops below r_i and the
+/// suffix starts above it).
+pub fn class_interaction_sums(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    classes: usize,
+) -> Matrix {
+    let n = train_y.len();
+    assert!(!test_y.is_empty(), "empty test set");
+    assert!(classes >= 1, "need at least one class");
+    assert!(
+        train_y.iter().all(|&y| y >= 0 && (y as usize) < classes),
+        "train labels must lie in 0..classes"
+    );
+    let mut out = Matrix::zeros(n, classes);
+    let mut prep = PrepScratch::new();
+    // rank → original index (inverse of the batch's rank rows).
+    let mut pos = vec![0usize; n];
+    let mut c_rank = vec![0.0f64; n];
+    // Flattened per-class suffix sums, (n+1) slots per class.
+    let mut suffix = vec![0.0f64; classes * (n + 1)];
+    let mut counts = vec![0.0f64; classes];
+    let t = test_y.len() as f64;
+
+    for (chunk_x, chunk_y) in test_x
+        .chunks(PREP_BATCH * d)
+        .zip(test_y.chunks(PREP_BATCH))
+    {
+        let batch =
+            prepare_batch_scratch(train_x, train_y, d, chunk_x, chunk_y, params, &mut prep);
+        for p in 0..batch.len() {
+            let rank = batch.rank_row(p);
+            let colval = batch.colval_row(p);
+            for i in 0..n {
+                let r = rank[i] as usize;
+                pos[r] = i;
+                c_rank[r] = colval[i];
+            }
+            // class-restricted suffix sums, right-to-left
+            for c in 0..classes {
+                suffix[c * (n + 1) + n] = 0.0;
+            }
+            for r in (0..n).rev() {
+                let cls = train_y[pos[r]] as usize;
+                for c in 0..classes {
+                    let base = c * (n + 1);
+                    suffix[base + r] = if c == cls {
+                        c_rank[r] + suffix[base + r + 1]
+                    } else {
+                        suffix[base + r + 1]
+                    };
+                }
+            }
+            // left-to-right: prefix counts + the identity per (i, c)
+            counts.iter_mut().for_each(|c| *c = 0.0);
+            for r in 0..n {
+                let i = pos[r];
+                for c in 0..classes {
+                    out.add_at(i, c, counts[c] * c_rank[r] + suffix[c * (n + 1) + r + 1]);
+                }
+                counts[train_y[i] as usize] += 1.0;
+            }
+        }
+    }
+    out.scale(1.0 / t);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::sti_knn::{prepare_batch, sti_knn};
+    use crate::util::rng::Rng;
+
+    fn random_problem(
+        seed: u64,
+        n: usize,
+        d: usize,
+        t: usize,
+        classes: usize,
+    ) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+            (0..n).map(|_| rng.below(classes) as i32).collect(),
+            (0..t * d).map(|_| rng.normal() as f32).collect(),
+            (0..t).map(|_| rng.below(classes) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn implicit_matches_dense_diag_plus_rowsums() {
+        for (seed, n, d, t, k) in [
+            (1u64, 17usize, 2usize, 9usize, 4usize),
+            (2, 30, 3, 5, 1),
+            (3, 12, 1, 13, 12), // k = n
+            (4, 25, 2, 1, 7),   // single test point
+        ] {
+            let (tx, ty, qx, qy) = random_problem(seed, n, d, t, 3);
+            let params = StiParams::new(k);
+            let dense = sti_point_values(&tx, &ty, d, &qx, &qy, &params, Engine::Dense);
+            let implicit = sti_point_values(&tx, &ty, d, &qx, &qy, &params, Engine::Implicit);
+            for i in 0..n {
+                assert!(
+                    (dense.main[i] - implicit.main[i]).abs() < 1e-12,
+                    "main[{i}] seed={seed}: {} vs {}",
+                    dense.main[i],
+                    implicit.main[i]
+                );
+                assert!(
+                    (dense.rowsum[i] - implicit.rowsum[i]).abs() < 1e-12,
+                    "rowsum[{i}] seed={seed}: {} vs {}",
+                    dense.rowsum[i],
+                    implicit.rowsum[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_partition_is_bit_identical() {
+        let (tx, ty, qx, qy) = random_problem(11, 19, 2, 12, 2);
+        let params = StiParams::new(5);
+        let mut one_shot = ValueVector::zeros(19);
+        values_accumulate(&tx, &ty, 2, &qx, &qy, &params, &mut one_shot);
+        let mut parts = ValueVector::zeros(19);
+        for (lo, hi) in [(0usize, 1usize), (1, 5), (5, 12)] {
+            values_accumulate(&tx, &ty, 2, &qx[lo * 2..hi * 2], &qy[lo..hi], &params, &mut parts);
+        }
+        for i in 0..19 {
+            assert_eq!(one_shot.main[i].to_bits(), parts.main[i].to_bits());
+            assert_eq!(one_shot.inter[i].to_bits(), parts.inter[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn sweep_values_matches_direct_accumulate_bits() {
+        // values_accumulate is prepare + sweep_values composed; a manual
+        // composition with its own scratch must agree to the bit.
+        let (tx, ty, qx, qy) = random_problem(21, 14, 3, 7, 2);
+        let params = StiParams::new(3);
+        let mut via_accumulate = ValueVector::zeros(14);
+        values_accumulate(&tx, &ty, 3, &qx, &qy, &params, &mut via_accumulate);
+        let mut manual = ValueVector::zeros(14);
+        let mut scratch = ValuesScratch::new();
+        let batch = prepare_batch(&tx, &ty, 3, &qx, &qy, &params);
+        sweep_values(&batch, &ty, &mut manual, &mut scratch);
+        for i in 0..14 {
+            assert_eq!(via_accumulate.main[i].to_bits(), manual.main[i].to_bits());
+            assert_eq!(via_accumulate.inter[i].to_bits(), manual.inter[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn from_raw_accumulator_matches_streamed_values() {
+        let (tx, ty, qx, qy) = random_problem(31, 16, 2, 8, 3);
+        let params = StiParams::new(4);
+        let mut acc = crate::util::matrix::Matrix::zeros(16, 16);
+        crate::shapley::sti_knn::sti_knn_accumulate(&tx, &ty, 2, &qx, &qy, &params, &mut acc);
+        let from_dense = ValueVector::from_raw_accumulator(&acc);
+        let mut streamed = ValueVector::zeros(16);
+        values_accumulate(&tx, &ty, 2, &qx, &qy, &params, &mut streamed);
+        for i in 0..16 {
+            assert!((from_dense.main[i] - streamed.main[i]).abs() < 1e-12);
+            assert!((from_dense.inter[i] - streamed.inter[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn minimal_cases_match_the_closed_forms() {
+        // n = 2, k = 1, both labels match: φ_11 = φ_22 = 1,
+        // φ_12 = −2(2−1)/(2·1)·1 = −1 → rowsum_i = 1 + (−1) = 0.
+        let pv = sti_values(
+            &[0.0, 1.0],
+            &[1, 1],
+            1,
+            &[0.1],
+            &[1],
+            &StiParams::new(1),
+        );
+        assert_eq!(pv.main, vec![1.0, 1.0]);
+        assert!((pv.rowsum[0]).abs() < 1e-15);
+        assert!((pv.rowsum[1]).abs() < 1e-15);
+
+        // all-same-label at n = 4, k = 2: every main term is 1/k.
+        let pv = sti_values(
+            &[0.0, 1.0, 2.0, 3.0],
+            &[0, 0, 0, 0],
+            1,
+            &[0.4],
+            &[0],
+            &StiParams::new(2),
+        );
+        for &m in &pv.main {
+            assert!((m - 0.5).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn efficiency_axiom_via_values() {
+        // Σ_i main_i + (1/2)·Σ_i (rowsum_i − main_i) = upper-triangle sum
+        // including the diagonal = a_test (DESIGN.md §1) — checkable with
+        // no matrix at all.
+        let (tx, ty, qx, qy) = random_problem(41, 20, 2, 6, 2);
+        let k = 5;
+        let params = StiParams::new(k);
+        let pv = sti_values(&tx, &ty, 2, &qx, &qy, &params);
+        let trace: f64 = pv.main.iter().sum();
+        let offdiag: f64 = pv
+            .rowsum
+            .iter()
+            .zip(&pv.main)
+            .map(|(&r, &m)| r - m)
+            .sum();
+        let upper = trace + offdiag / 2.0;
+        // a_test averaged over tests: fraction of k-neighbourhood matches
+        let m = sti_knn(&tx, &ty, 2, &qx, &qy, &params);
+        assert!((upper - m.upper_triangle_sum()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn class_sums_match_dense_matrix() {
+        let (tx, ty, qx, qy) = random_problem(51, 18, 2, 7, 3);
+        let params = StiParams::new(4);
+        let sums = class_interaction_sums(&tx, &ty, 2, &qx, &qy, &params, 3);
+        let m = sti_knn(&tx, &ty, 2, &qx, &qy, &params);
+        for i in 0..18 {
+            for c in 0..3 {
+                let direct: f64 = (0..18)
+                    .filter(|&j| j != i && ty[j] as usize == c)
+                    .map(|j| m.get(i, j))
+                    .sum();
+                assert!(
+                    (sums.get(i, c) - direct).abs() < 1e-12,
+                    "i={i} c={c}: {} vs {direct}",
+                    sums.get(i, c)
+                );
+            }
+        }
+        // class sums partition the full off-diagonal row sum
+        let pv = sti_values(&tx, &ty, 2, &qx, &qy, &params);
+        for i in 0..18 {
+            let total: f64 = (0..3).map(|c| sums.get(i, c)).sum();
+            assert!((total - (pv.rowsum[i] - pv.main[i])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn add_assign_merges_disjoint_shards_within_tolerance() {
+        let (tx, ty, qx, qy) = random_problem(61, 13, 2, 10, 2);
+        let params = StiParams::new(3);
+        let mut whole = ValueVector::zeros(13);
+        values_accumulate(&tx, &ty, 2, &qx, &qy, &params, &mut whole);
+        let mut a = ValueVector::zeros(13);
+        let mut b = ValueVector::zeros(13);
+        values_accumulate(&tx, &ty, 2, &qx[..6 * 2], &qy[..6], &params, &mut a);
+        values_accumulate(&tx, &ty, 2, &qx[6 * 2..], &qy[6..], &params, &mut b);
+        a.add_assign(&b);
+        for i in 0..13 {
+            assert!((a.main[i] - whole.main[i]).abs() < 1e-12);
+            assert!((a.inter[i] - whole.inter[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn engine_parse_and_labels() {
+        assert_eq!(Engine::parse("implicit"), Some(Engine::Implicit));
+        assert_eq!(Engine::parse("values"), Some(Engine::Implicit));
+        assert_eq!(Engine::parse("dense"), Some(Engine::Dense));
+        assert_eq!(Engine::parse("matrix"), Some(Engine::Dense));
+        assert_eq!(Engine::parse("xla"), None);
+        assert_eq!(Engine::Implicit.label(), "implicit");
+        assert_eq!(Engine::Dense.label(), "dense");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty test set")]
+    fn empty_test_set_is_rejected() {
+        sti_values(&[0.0, 1.0], &[0, 1], 1, &[], &[], &StiParams::new(1));
+    }
+}

@@ -114,6 +114,26 @@ impl Matrix {
         self.sum() / (self.rows * self.cols) as f64
     }
 
+    /// Full row-i sum of the SYMMETRIC matrix this upper-triangle (+
+    /// diagonal) storage represents: the diagonal cell, then the stored
+    /// (i, j>i) run ascending, then the mirrored (j<i, i) column
+    /// ascending — in exactly that order. The implicit value engine's
+    /// bit-identity contracts (session `point_values` vs
+    /// `point_value_at`, dense→implicit snapshot migration) depend on
+    /// every consumer reducing in this one order, which is why the loop
+    /// lives here once (DESIGN.md §10).
+    pub fn sym_row_sum_from_upper(&self, i: usize) -> f64 {
+        debug_assert_eq!(self.rows, self.cols, "square only");
+        let mut s = self.get(i, i);
+        for j in (i + 1)..self.cols {
+            s += self.get(i, j);
+        }
+        for j in 0..i {
+            s += self.get(j, i);
+        }
+        s
+    }
+
     /// Sum over the upper triangle INCLUDING the diagonal (the quantity the
     /// STI efficiency axiom constrains — see DESIGN.md §1).
     pub fn upper_triangle_sum(&self) -> f64 {
@@ -231,6 +251,15 @@ mod tests {
     fn upper_triangle_sum_includes_diagonal() {
         let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 99.0, 3.0]);
         assert_eq!(m.upper_triangle_sum(), 6.0);
+    }
+
+    #[test]
+    fn sym_row_sum_reads_only_the_upper_storage() {
+        // lower-triangle garbage (99s) must not contribute
+        let m = Matrix::from_vec(3, 3, vec![1.0, 2.0, 3.0, 99.0, 4.0, 5.0, 99.0, 99.0, 6.0]);
+        assert_eq!(m.sym_row_sum_from_upper(0), 1.0 + 2.0 + 3.0);
+        assert_eq!(m.sym_row_sum_from_upper(1), 4.0 + 5.0 + 2.0);
+        assert_eq!(m.sym_row_sum_from_upper(2), 6.0 + 3.0 + 5.0);
     }
 
     #[test]

@@ -31,7 +31,8 @@ fn help_lists_subcommands() {
     let (stdout, _, ok) = run(&["--help"]);
     assert!(ok);
     for sub in [
-        "value", "analyze", "ksens", "mislabel", "serve", "session", "datasets", "artifacts",
+        "value", "values", "analyze", "ksens", "mislabel", "serve", "session", "datasets",
+        "artifacts",
     ] {
         assert!(stdout.contains(sub), "help missing {sub}: {stdout}");
     }
@@ -82,7 +83,7 @@ fn help_subcommand_prints_per_command_usage() {
 fn help_serve_documents_the_session_options() {
     let (stdout, _, ok) = run(&["help", "serve"]);
     assert!(ok);
-    for opt in ["NDJSON", "--restore", "--parallel-min", "--metric"] {
+    for opt in ["NDJSON", "--restore", "--parallel-min", "--metric", "--engine", "--retain-rows"] {
         assert!(stdout.contains(opt), "help serve missing {opt}: {stdout}");
     }
 }
@@ -119,6 +120,39 @@ fn value_computes_and_writes_csv() {
 }
 
 #[test]
+fn values_computes_both_engines_and_writes_csv() {
+    let out = std::env::temp_dir().join(format!("stiknn_cli_values_{}.csv", std::process::id()));
+    let _ = std::fs::remove_file(&out);
+    let (stdout, stderr, ok) = run(&[
+        "values", "--dataset", "moon", "--n-train", "50", "--n-test", "12",
+        "--k", "3", "--top", "5", "--out", out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("engine=implicit"), "{stdout}");
+    assert!(stdout.contains("top-5"), "{stdout}");
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(text.lines().count(), 51, "header + 50 value rows");
+    assert!(text.starts_with("index,main,rowsum"), "{text}");
+    let _ = std::fs::remove_file(&out);
+
+    // dense engine runs the same command shape
+    let (stdout, stderr, ok) = run(&[
+        "values", "--dataset", "moon", "--n-train", "50", "--n-test", "12",
+        "--k", "3", "--engine", "dense", "--top", "3",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("engine=dense"), "{stdout}");
+
+    // bad engine is rejected with a helpful message
+    let (_, stderr, ok) = run(&[
+        "values", "--dataset", "moon", "--n-train", "20", "--n-test", "5",
+        "--engine", "cuda",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("implicit or dense"), "{stderr}");
+}
+
+#[test]
 fn analyze_prints_axioms_and_blocks() {
     let (stdout, stderr, ok) = run(&[
         "analyze", "--dataset", "circle", "--n-train", "80", "--n-test", "20",
@@ -150,6 +184,16 @@ fn mislabel_reports_metrics() {
     assert!(ok, "stderr: {stderr}");
     assert!(stdout.contains("AUC"));
     assert!(stdout.contains("flipped 10 of 10"), "{stdout}"); // 100 or 101 (circle pairs)
+}
+
+#[test]
+fn mislabel_value_scores_path_reports_metrics() {
+    let (stdout, stderr, ok) = run(&[
+        "mislabel", "--dataset", "circle", "--n-train", "100", "--n-test", "25",
+        "--flip", "0.1", "--scores", "values",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("AUC"), "{stdout}");
 }
 
 #[test]
@@ -265,6 +309,118 @@ fn serve_completes_an_ingest_query_snapshot_shutdown_round_trip() {
     let stdout = String::from_utf8_lossy(&out.stdout);
     let stats = Json::parse(stdout.lines().next().unwrap()).unwrap();
     assert_eq!(stats.get("tests").unwrap().as_usize(), Some(3), "{stdout}");
+
+    let _ = std::fs::remove_file(&snap);
+}
+
+#[test]
+fn serve_implicit_engine_serves_values_and_rejects_matrix_queries() {
+    use std::io::Write;
+    use stiknn::util::json::Json;
+
+    let snap = std::env::temp_dir().join(format!(
+        "stiknn_cli_serve_implicit_{}.snap",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&snap);
+
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--engine", "implicit",
+        ])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --engine implicit");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(
+            stdin,
+            r#"{{"cmd":"ingest","x":[0.1,0.2,1.0,-0.3,0.5,0.5],"y":[0,1,0]}}"#
+        )
+        .unwrap();
+        writeln!(stdin, r#"{{"cmd":"query","i":0,"j":1}}"#).unwrap(); // engine-rejected
+        writeln!(stdin, r#"{{"cmd":"query","i":2}}"#).unwrap(); // engine-rejected
+        writeln!(stdin, r#"{{"cmd":"values","i":0}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"topk","k":3,"by":"rowsum"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"stats"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"snapshot","path":"{}"}}"#, snap.display()).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(
+        out.status.success(),
+        "serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let rs: Vec<Json> = stdout
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("invalid NDJSON line {l:?}: {e}")))
+        .collect();
+    assert_eq!(rs.len(), 8, "one response per command: {stdout}");
+    assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(true), "{}", rs[0]);
+    // matrix queries rejected cleanly, with the machine-checkable reason,
+    // and the loop keeps serving
+    for r in &rs[1..3] {
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+        assert_eq!(r.get("reason").unwrap().as_str(), Some("engine"), "{r}");
+    }
+    assert_eq!(rs[3].get("ok").unwrap().as_bool(), Some(true), "{}", rs[3]);
+    assert!(rs[3].get("rowsum").unwrap().as_f64().is_some());
+    assert_eq!(rs[4].get("ok").unwrap().as_bool(), Some(true), "{}", rs[4]);
+    assert_eq!(rs[5].get("engine").unwrap().as_str(), Some("implicit"));
+    assert_eq!(rs[6].get("ok").unwrap().as_bool(), Some(true), "{}", rs[6]);
+
+    // the implicit snapshot is tiny (O(n), not O(n²)) and inspectable
+    let (stdout, stderr, ok) = run(&["session", "--file", snap.to_str().unwrap(), "--topk", "5"]);
+    assert!(ok, "session inspect failed: {stderr}");
+    assert!(stdout.contains("implicit"), "{stdout}");
+    assert!(stdout.contains("top-5"), "{stdout}");
+
+    // ... and a fresh implicit serve resumes from it
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--engine", "implicit", "--restore", snap.to_str().unwrap(),
+        ])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --restore (implicit)");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(stdin, r#"{{"cmd":"stats"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stats = Json::parse(stdout.lines().next().unwrap()).unwrap();
+    assert_eq!(stats.get("tests").unwrap().as_usize(), Some(3), "{stdout}");
+
+    // a dense serve must refuse the implicit snapshot with a clear error
+    let out = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--restore", snap.to_str().unwrap(),
+        ])
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn stiknn serve (dense restore of implicit snapshot)");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("implicit"), "unhelpful error: {stderr}");
 
     let _ = std::fs::remove_file(&snap);
 }

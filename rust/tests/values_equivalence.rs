@@ -1,0 +1,342 @@
+//! Acceptance properties for the implicit value engine (ISSUE 3 /
+//! DESIGN.md §10): for every dataset, k, metric, and ingest partition,
+//! the rank-space suffix-sum values equal the materialized matrix's
+//! `diag + rowsums` to ≤ 1e-12 — verified against BOTH the fast dense
+//! engine (`sti_knn`) and the brute-force `sti_exact` oracle — and the
+//! implicit engine itself is **bit-reproducible** for any contiguous
+//! partition of the test stream (the documented fixed summation order).
+//! Plus the edge-case zoo (n=2, k=1, k=n, all-same-label, single test
+//! point) and the implicit-mode session snapshot→restore round trip.
+
+use stiknn::session::{Engine, SessionConfig, TopBy, ValuationSession};
+use stiknn::shapley::sti_exact::sti_exact;
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+use stiknn::shapley::values::{
+    sti_point_values, sti_values, values_accumulate, ValueVector,
+};
+use stiknn::knn::distance::Metric;
+use stiknn::util::matrix::Matrix;
+use stiknn::util::prop::{check, Gen};
+
+struct Problem {
+    n: usize,
+    d: usize,
+    t: usize,
+    k: usize,
+    metric: Metric,
+    train_x: Vec<f32>,
+    train_y: Vec<i32>,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+}
+
+fn random_problem(g: &mut Gen) -> Problem {
+    let n = 2 + g.usize_in(0, 34);
+    let d = 1 + g.usize_in(0, 3);
+    let t = 1 + g.usize_in(0, 20);
+    let k = 1 + g.usize_in(0, n - 1);
+    let classes = 2 + g.usize_in(0, 2);
+    let metric = [Metric::SqEuclidean, Metric::Manhattan, Metric::Cosine]
+        [g.usize_in(0, 2)];
+    Problem {
+        n,
+        d,
+        t,
+        k,
+        metric,
+        train_x: g.features(n, d),
+        train_y: g.labels(n, classes),
+        test_x: g.features(t, d),
+        test_y: g.labels(t, classes),
+    }
+}
+
+fn params(p: &Problem) -> StiParams {
+    StiParams {
+        k: p.k,
+        metric: p.metric,
+    }
+}
+
+/// diag + full row sums of an averaged matrix — the dense reference.
+fn diag_and_rowsums(m: &Matrix) -> (Vec<f64>, Vec<f64>) {
+    let n = m.rows();
+    let diag: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    let rowsum: Vec<f64> = (0..n).map(|i| m.row(i).iter().sum()).collect();
+    (diag, rowsum)
+}
+
+/// A random contiguous partition of [0, t) into non-empty batches.
+fn random_partition(g: &mut Gen, t: usize) -> Vec<(usize, usize)> {
+    let mut cuts = vec![0, t];
+    for _ in 0..g.usize_in(0, 5) {
+        cuts.push(g.usize_in(0, t));
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+#[test]
+fn implicit_equals_dense_diag_plus_rowsums_for_any_shape() {
+    check("implicit == dense diag+rowsums", 40, |g| {
+        let p = random_problem(g);
+        let m = sti_knn(&p.train_x, &p.train_y, p.d, &p.test_x, &p.test_y, &params(&p));
+        let (diag, rowsum) = diag_and_rowsums(&m);
+        let pv = sti_values(&p.train_x, &p.train_y, p.d, &p.test_x, &p.test_y, &params(&p));
+        for i in 0..p.n {
+            assert!(
+                (pv.main[i] - diag[i]).abs() < 1e-12,
+                "main[{i}] {} vs {} (n={} k={} t={} metric={:?})",
+                pv.main[i], diag[i], p.n, p.k, p.t, p.metric
+            );
+            assert!(
+                (pv.rowsum[i] - rowsum[i]).abs() < 1e-12,
+                "rowsum[{i}] {} vs {} (n={} k={} t={} metric={:?})",
+                pv.rowsum[i], rowsum[i], p.n, p.k, p.t, p.metric
+            );
+        }
+    });
+}
+
+#[test]
+fn implicit_matches_the_brute_force_oracle() {
+    // Small n (2^n enumeration), every k: the implicit values against
+    // Eq. 3 itself, not just against the fast dense engine.
+    check("implicit == sti_exact diag+rowsums", 15, |g| {
+        let n = 2 + g.usize_in(0, 8);
+        let d = 1 + g.usize_in(0, 2);
+        let t = 1 + g.usize_in(0, 4);
+        let k = 1 + g.usize_in(0, n - 1);
+        let train_x = g.features(n, d);
+        let train_y = g.labels(n, 2);
+        let test_x = g.features(t, d);
+        let test_y = g.labels(t, 2);
+        let exact = sti_exact(&train_x, &train_y, d, &test_x, &test_y, k);
+        let (diag, rowsum) = diag_and_rowsums(&exact);
+        let pv = sti_values(&train_x, &train_y, d, &test_x, &test_y, &StiParams::new(k));
+        for i in 0..n {
+            assert!((pv.main[i] - diag[i]).abs() < 1e-12, "main[{i}] n={n} k={k}");
+            assert!(
+                (pv.rowsum[i] - rowsum[i]).abs() < 1e-12,
+                "rowsum[{i}] n={n} k={k}: {} vs {}",
+                pv.rowsum[i],
+                rowsum[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn any_contiguous_partition_is_bit_identical() {
+    check("implicit partition bit-reproducibility", 30, |g| {
+        let p = random_problem(g);
+        let mut one_shot = ValueVector::zeros(p.n);
+        let w = values_accumulate(
+            &p.train_x, &p.train_y, p.d, &p.test_x, &p.test_y, &params(&p), &mut one_shot,
+        );
+        assert_eq!(w, p.t as f64);
+        let batches = random_partition(g, p.t);
+        let mut parts = ValueVector::zeros(p.n);
+        for &(lo, hi) in &batches {
+            values_accumulate(
+                &p.train_x,
+                &p.train_y,
+                p.d,
+                &p.test_x[lo * p.d..hi * p.d],
+                &p.test_y[lo..hi],
+                &params(&p),
+                &mut parts,
+            );
+        }
+        for i in 0..p.n {
+            assert_eq!(
+                one_shot.main_raw()[i].to_bits(),
+                parts.main_raw()[i].to_bits(),
+                "main[{i}] diverged for partition {batches:?}"
+            );
+            assert_eq!(
+                one_shot.inter_raw()[i].to_bits(),
+                parts.inter_raw()[i].to_bits(),
+                "inter[{i}] diverged for partition {batches:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn implicit_session_partition_with_snapshot_restore_matches_one_shot_bits() {
+    // The session-layer acceptance property in implicit mode: any
+    // contiguous ingest partition with a snapshot/restore cycle at an
+    // arbitrary batch boundary is bit-identical to a one-shot ingest.
+    check("implicit session snapshot equivalence", 15, |g| {
+        let p = random_problem(g);
+        let config = SessionConfig {
+            metric: p.metric,
+            ..SessionConfig::new(p.k)
+        }
+        .with_engine(Engine::Implicit);
+
+        let mut reference =
+            ValuationSession::new(p.train_x.clone(), p.train_y.clone(), p.d, config).unwrap();
+        reference.ingest(&p.test_x, &p.test_y).unwrap();
+
+        let batches = random_partition(g, p.t);
+        let snap_after = g.usize_in(0, batches.len() - 1);
+        let mut session =
+            ValuationSession::new(p.train_x.clone(), p.train_y.clone(), p.d, config).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "stiknn_values_equiv_{}_{}.snap",
+            std::process::id(),
+            g.usize_in(0, usize::MAX / 2)
+        ));
+        for (bi, &(lo, hi)) in batches.iter().enumerate() {
+            session
+                .ingest(&p.test_x[lo * p.d..hi * p.d], &p.test_y[lo..hi])
+                .unwrap();
+            if bi == snap_after {
+                session.save(&path).unwrap();
+                session = ValuationSession::restore(
+                    &path,
+                    p.train_x.clone(),
+                    p.train_y.clone(),
+                    p.d,
+                    config,
+                )
+                .unwrap();
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        assert_eq!(session.tests_seen(), p.t as u64);
+        assert_eq!(session.engine(), Engine::Implicit);
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = reference.point_values(by).unwrap();
+            let b = session.point_values(by).unwrap();
+            for i in 0..p.n {
+                assert_eq!(
+                    a[i].to_bits(),
+                    b[i].to_bits(),
+                    "{by:?}[{i}] diverged (partition {batches:?}, snap after {snap_after})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn edge_cases_match_dense() {
+    // n=2 / k=1 / k=n / all-same-label / single test point, deterministic.
+    let cases: Vec<(Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>, usize, usize)> = vec![
+        // (train_x, train_y, test_x, test_y, d, k)
+        (vec![0.0, 1.0], vec![0, 1], vec![0.2], vec![0], 1, 1), // n=2, k=1
+        (vec![0.0, 1.0], vec![1, 1], vec![0.9], vec![1], 1, 2), // n=2, k=n
+        (
+            vec![0.0, 0.5, 1.0, 1.5, 2.0],
+            vec![1, 1, 1, 1, 1],
+            vec![0.7, 1.9],
+            vec![1, 1],
+            1,
+            3,
+        ), // all same label
+        (
+            vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+            vec![0, 1, 1, 0],
+            vec![0.25, 0.25],
+            vec![0],
+            2,
+            4,
+        ), // k = n, single test point
+        (
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![0, 1, 0, 1, 0, 1],
+            vec![2.2],
+            vec![1],
+            1,
+            1,
+        ), // k=1, single test point
+    ];
+    for (ti, (tx, ty, qx, qy, d, k)) in cases.into_iter().enumerate() {
+        let params = StiParams::new(k);
+        let m = sti_knn(&tx, &ty, d, &qx, &qy, &params);
+        let (diag, rowsum) = diag_and_rowsums(&m);
+        let pv = sti_values(&tx, &ty, d, &qx, &qy, &params);
+        for i in 0..ty.len() {
+            assert!(
+                (pv.main[i] - diag[i]).abs() < 1e-12,
+                "case {ti} main[{i}]"
+            );
+            assert!(
+                (pv.rowsum[i] - rowsum[i]).abs() < 1e-12,
+                "case {ti} rowsum[{i}]: {} vs {}",
+                pv.rowsum[i],
+                rowsum[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_switch_returns_identical_quantities() {
+    check("sti_point_values engine switch", 20, |g| {
+        let p = random_problem(g);
+        let dense = sti_point_values(
+            &p.train_x, &p.train_y, p.d, &p.test_x, &p.test_y, &params(&p), Engine::Dense,
+        );
+        let implicit = sti_point_values(
+            &p.train_x, &p.train_y, p.d, &p.test_x, &p.test_y, &params(&p), Engine::Implicit,
+        );
+        for i in 0..p.n {
+            assert!((dense.main[i] - implicit.main[i]).abs() < 1e-12);
+            assert!((dense.rowsum[i] - implicit.rowsum[i]).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn implicit_session_agrees_with_dense_session_across_partitions() {
+    check("session engine agreement", 15, |g| {
+        let p = random_problem(g);
+        let batches = random_partition(g, p.t);
+        let base = SessionConfig {
+            metric: p.metric,
+            ..SessionConfig::new(p.k)
+        };
+        let mut dense =
+            ValuationSession::new(p.train_x.clone(), p.train_y.clone(), p.d, base).unwrap();
+        let mut imp = ValuationSession::new(
+            p.train_x.clone(),
+            p.train_y.clone(),
+            p.d,
+            base.with_engine(Engine::Implicit).with_retained_rows(true),
+        )
+        .unwrap();
+        for &(lo, hi) in &batches {
+            dense
+                .ingest(&p.test_x[lo * p.d..hi * p.d], &p.test_y[lo..hi])
+                .unwrap();
+            imp.ingest(&p.test_x[lo * p.d..hi * p.d], &p.test_y[lo..hi])
+                .unwrap();
+        }
+        // per-point values agree
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = dense.point_values(by).unwrap();
+            let b = imp.point_values(by).unwrap();
+            for i in 0..p.n {
+                assert!((a[i] - b[i]).abs() < 1e-12, "{by:?}[{i}]");
+            }
+        }
+        // retained rows answer a sampled set of cells like the matrix
+        for _ in 0..8 {
+            let i = g.usize_in(0, p.n - 1);
+            let j = g.usize_in(0, p.n - 1);
+            let a = dense.cell(i, j).unwrap();
+            let b = imp.cell(i, j).unwrap();
+            assert!((a - b).abs() < 1e-12, "cell({i},{j}): {a} vs {b}");
+        }
+        // stats agree
+        let (sa, sb) = (dense.stats(), imp.stats());
+        assert!((sa.trace - sb.trace).abs() < 1e-12);
+        assert!((sa.mean_offdiag - sb.mean_offdiag).abs() < 1e-12);
+        assert!((sa.upper_sum - sb.upper_sum).abs() < 1e-12);
+    });
+}
