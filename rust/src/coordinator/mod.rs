@@ -24,17 +24,27 @@
 //! single-threaded implicit engine for any worker count or block size
 //! ([`run_values_job`] one-shot, [`ingest_values`] streaming).
 //!
+//! A fourth, **repair** fan-out serves the delta subsystem
+//! (`shapley::delta`, DESIGN.md §11): a training-set edit's per-test row
+//! repairs are embarrassingly parallel (each test's repair reads only
+//! its own retained row), so [`repair_rows`] just splits the tests into
+//! contiguous chunks across workers — no queue, no merge, bit-identical
+//! to single-threaded for any worker count.
+//!
 //! * [`pool`]    — thread pool + bounded channel substrate
 //! * [`job`]     — job/result types, sharding and band plans
 //! * [`merge`]   — deterministic partial reduction / weight bookkeeping
 //! * [`pipeline`] — the orchestrator wiring it all together
 //! * [`progress`] — atomic counters / throughput metrics
+//! * [`repair`]  — delta-repair chunk fan-out
 
 pub mod job;
 pub mod merge;
 pub mod pipeline;
 pub mod pool;
 pub mod progress;
+pub mod repair;
 
 pub use job::{Assembly, ValuationJob, ValuationResult, ValuesResult};
 pub use pipeline::{ingest_banded, ingest_values, run_job, run_job_with_engine, run_values_job};
+pub use repair::{repair_rows, RepairedRows};

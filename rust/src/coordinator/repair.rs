@@ -1,0 +1,173 @@
+//! Parallel fan-out for delta repairs (DESIGN.md §11): split a mutable
+//! session's retained test rows into contiguous chunks and run
+//! [`repair_chunk`] on each from its own worker.
+//!
+//! Unlike the ingest pipelines, repairs need NO reorder buffer, queue,
+//! or merger: every test's repair is a pure function of its own old row
+//! plus the shared edit context, and each worker writes a disjoint slice
+//! of the new row storage. Any chunking therefore produces identical
+//! rows — bit-identical to the single-threaded repair by construction
+//! (asserted across worker counts in `tests/delta_equivalence.rs`). The
+//! value-vector refold that follows a repair stays single-threaded in
+//! the session (it is the bit-reproducibility anchor; see
+//! `shapley::delta::refold_values`).
+
+use crate::shapley::delta::{repair_chunk, Edit, RepairCtx, RepairScratch};
+
+/// Freshly repaired row storage for one edit, `tests` rows of
+/// `ctx.new_n` each, in the same layouts the session retains: (dist,
+/// pos) in rank order, (rank, colval) in train order.
+pub struct RepairedRows {
+    pub dist: Vec<f64>,
+    pub pos: Vec<u32>,
+    pub rank: Vec<u32>,
+    pub colval: Vec<f64>,
+}
+
+/// Repair all `tests` retained rows for one edit, fanning the per-test
+/// work out over up to `workers` threads (contiguous chunks; `workers
+/// <= 1` or a single chunk runs inline with no thread spawn — the
+/// iterative-removal loop in `analysis::removal` leans on that).
+pub fn repair_rows(
+    ctx: &RepairCtx<'_>,
+    edit: &Edit<'_>,
+    tests: usize,
+    old_dist: &[f64],
+    old_pos: &[u32],
+    workers: usize,
+) -> RepairedRows {
+    let new_n = ctx.new_n;
+    assert_eq!(old_dist.len(), tests * ctx.old_n, "old dist shape");
+    assert_eq!(old_pos.len(), tests * ctx.old_n, "old pos shape");
+    let mut out = RepairedRows {
+        dist: vec![0.0; tests * new_n],
+        pos: vec![0; tests * new_n],
+        rank: vec![0; tests * new_n],
+        colval: vec![0.0; tests * new_n],
+    };
+    if tests == 0 {
+        return out;
+    }
+    let workers = workers.clamp(1, tests);
+    if workers == 1 {
+        let mut scratch = RepairScratch::new();
+        repair_chunk(
+            ctx,
+            edit,
+            0,
+            old_dist,
+            old_pos,
+            &mut out.dist,
+            &mut out.pos,
+            &mut out.rank,
+            &mut out.colval,
+            &mut scratch,
+        );
+        return out;
+    }
+
+    // Contiguous chunk per worker; the last chunk absorbs the remainder.
+    let per = tests.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest_dist: &mut [f64] = &mut out.dist;
+        let mut rest_pos: &mut [u32] = &mut out.pos;
+        let mut rest_rank: &mut [u32] = &mut out.rank;
+        let mut rest_colval: &mut [f64] = &mut out.colval;
+        let mut lo = 0usize;
+        while lo < tests {
+            let hi = (lo + per).min(tests);
+            let len = hi - lo;
+            let (nd, rd) = std::mem::take(&mut rest_dist).split_at_mut(len * new_n);
+            let (np, rp) = std::mem::take(&mut rest_pos).split_at_mut(len * new_n);
+            let (nr, rr) = std::mem::take(&mut rest_rank).split_at_mut(len * new_n);
+            let (nc, rc) = std::mem::take(&mut rest_colval).split_at_mut(len * new_n);
+            rest_dist = rd;
+            rest_pos = rp;
+            rest_rank = rr;
+            rest_colval = rc;
+            let od = &old_dist[lo * ctx.old_n..hi * ctx.old_n];
+            let op = &old_pos[lo * ctx.old_n..hi * ctx.old_n];
+            s.spawn(move || {
+                let mut scratch = RepairScratch::new();
+                repair_chunk(ctx, edit, lo, od, op, nd, np, nr, nc, &mut scratch);
+            });
+            lo = hi;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::distance::Metric;
+    use crate::shapley::delta::{ingest_rows, MutableRows, RetainedRows};
+    use crate::shapley::values::ValueVector;
+    use crate::shapley::StiParams;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fan_out_is_bit_identical_across_worker_counts() {
+        let mut rng = Rng::new(5);
+        let (n, d, t, k) = (21usize, 3usize, 13usize, 4usize);
+        let tx: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let ty: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let qx: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let qy: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let mut rows = RetainedRows::new(n);
+        let mut mrows = MutableRows::new(n, d);
+        let mut vv = ValueVector::zeros(n);
+        ingest_rows(
+            &tx, &ty, d, &qx, &qy, &StiParams::new(k), &mut rows, &mut mrows, &mut vv,
+        );
+        let new_x: Vec<f32> = tx[0..d].to_vec();
+        let mut new_ty = ty.clone();
+        new_ty.push(1);
+        let ctx = RepairCtx {
+            k,
+            metric: Metric::SqEuclidean,
+            d,
+            old_n: n,
+            new_n: n + 1,
+            train_y: &new_ty,
+            test_x: &qx,
+            test_y: &qy,
+        };
+        let edit = Edit::Add { x: &new_x, y: 1 };
+        let reference = repair_rows(&ctx, &edit, t, &mrows.dist, &mrows.pos, 1);
+        for workers in [2usize, 3, 5, 16] {
+            let got = repair_rows(&ctx, &edit, t, &mrows.dist, &mrows.pos, workers);
+            assert_eq!(got.pos, reference.pos, "workers={workers}");
+            assert_eq!(got.rank, reference.rank, "workers={workers}");
+            for i in 0..t * (n + 1) {
+                assert_eq!(
+                    got.dist[i].to_bits(),
+                    reference.dist[i].to_bits(),
+                    "dist[{i}] workers={workers}"
+                );
+                assert_eq!(
+                    got.colval[i].to_bits(),
+                    reference.colval[i].to_bits(),
+                    "colval[{i}] workers={workers}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tests_is_a_noop() {
+        let ctx = RepairCtx {
+            k: 1,
+            metric: Metric::SqEuclidean,
+            d: 2,
+            old_n: 3,
+            new_n: 2,
+            train_y: &[0, 1],
+            test_x: &[],
+            test_y: &[],
+        };
+        let out = repair_rows(&ctx, &Edit::Remove { index: 0 }, 0, &[], &[], 4);
+        assert!(out.dist.is_empty());
+        assert!(out.pos.is_empty());
+    }
+}

@@ -55,7 +55,18 @@ impl Metric {
                 if na == 0.0 || nb == 0.0 {
                     1.0
                 } else {
-                    1.0 - dot / (na.sqrt() * nb.sqrt())
+                    // Clamp the −2e-16-ish negatives FP can produce for
+                    // near-parallel vectors (cos similarity > 1 by an
+                    // ulp): every metric promises non-negative distances
+                    // — the packed-key argsort's domain. NaN (garbage
+                    // input) deliberately survives the comparison and
+                    // propagates instead of being masked.
+                    let d = 1.0 - dot / (na.sqrt() * nb.sqrt());
+                    if d < 0.0 {
+                        0.0
+                    } else {
+                        d
+                    }
                 }
             }
         }
@@ -122,9 +133,14 @@ pub fn argsort_by_distance_into(dists: &[f64], order: &mut [usize]) {
 /// reproduce EXACTLY the stable distance-then-index order of
 /// [`argsort_by_distance`] — one cache-friendly unstable sort of packed
 /// keys instead of an indirect comparator sort (every comparison of
-/// which is two dependent loads). Every built-in [`Metric`] returns
-/// non-negative distances; a negative or NaN distance (or n ≥ 2³²)
-/// falls back to the comparator sort, so the ordering contract is total.
+/// which is two dependent loads).
+///
+/// Every built-in [`Metric`] returns non-negative distances (cosine
+/// clamps its FP-noise negatives), so a NaN or negative distance here
+/// means corrupted upstream state — in debug builds that FAILS LOUDLY
+/// (`debug_assert`) instead of quietly taking a different code path;
+/// release builds (and the legitimate n ≥ 2³² case) fall back to the
+/// comparator sort, so the ordering contract stays total either way.
 ///
 /// `keys` is caller-owned scratch (cleared and refilled; capacity
 /// persists across calls — zero allocations in steady state).
@@ -134,6 +150,12 @@ pub fn argsort_by_distance_keyed(dists: &[f64], keys: &mut Vec<u128>, order: &mu
     let fast = n <= u32::MAX as usize
         && dists.iter().all(|d| !d.is_nan() && d.to_bits() >> 63 == 0);
     if !fast {
+        debug_assert!(
+            n > u32::MAX as usize,
+            "argsort_by_distance_keyed fed a NaN or negative distance — every \
+             metric promises non-negative finite distances, so upstream state is \
+             corrupt (the packed-key order would silently mis-sort such inputs)"
+        );
         argsort_by_distance_into(dists, order);
         return;
     }
@@ -216,11 +238,61 @@ mod tests {
             argsort_by_distance_keyed(&dists, &mut keys, &mut keyed);
             assert_eq!(keyed, reference, "n={n} dists={dists:?}");
         }
-        // negative / NaN distances take the fallback path and still agree
+    }
+
+    // NaN / negative distances mean corrupted upstream state (every
+    // metric promises non-negative; cosine clamps its FP-noise
+    // negatives): the keyed argsort must FAIL LOUDLY in debug builds
+    // instead of silently taking a different path than production.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NaN or negative distance")]
+    fn keyed_argsort_panics_on_nan_in_debug() {
+        let weird = [0.5, f64::NAN, 0.25];
+        let mut keys = Vec::new();
+        let mut keyed = vec![0usize; weird.len()];
+        argsort_by_distance_keyed(&weird, &mut keys, &mut keyed);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NaN or negative distance")]
+    fn keyed_argsort_panics_on_negative_in_debug() {
+        let weird = [0.5, -1.0, 0.25];
+        let mut keys = Vec::new();
+        let mut keyed = vec![0usize; weird.len()];
+        argsort_by_distance_keyed(&weird, &mut keys, &mut keyed);
+    }
+
+    // ... while release builds stay total via the comparator fallback
+    // (a corrupted production serve keeps a correct ordering rather
+    // than crashing mid-query).
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn keyed_argsort_falls_back_on_bad_input_in_release() {
         let weird = [0.5, -1.0, f64::NAN, 0.25, -1.0];
+        let mut keys = Vec::new();
         let mut keyed = vec![0usize; weird.len()];
         argsort_by_distance_keyed(&weird, &mut keys, &mut keyed);
         assert_eq!(keyed, argsort_by_distance(&weird));
+    }
+
+    #[test]
+    fn cosine_near_parallel_vectors_clamp_to_zero_not_negative() {
+        // three mutually near-parallel vectors whose pairwise cosine
+        // similarity can exceed 1 by an ulp — the distance must clamp to
+        // exactly 0.0 (non-negative domain), never go negative
+        let a = [0.1f32, 0.2, 0.3];
+        let b = [0.2f32, 0.4, 0.6];
+        let c = [0.3f32, 0.6, 0.9];
+        for (x, y) in [(&a, &b), (&a, &c), (&b, &c), (&a, &a)] {
+            let d = Metric::Cosine.dist(x, y);
+            assert!(d >= 0.0, "cosine distance went negative: {d:e}");
+            assert!(d < 1e-12, "parallel vectors should be ~0: {d:e}");
+        }
+        // and NaN inputs still propagate (not masked to 0 by the clamp)
+        let d = Metric::Cosine.dist(&[f32::NAN, 1.0], &[1.0, 1.0]);
+        assert!(d.is_nan(), "NaN must propagate, got {d}");
     }
 
     #[test]

@@ -37,10 +37,28 @@
 //! value vector — ingests test batches incrementally (Eq. 9 is additive
 //! over test points, so streaming is exact — bit-identical to a one-shot
 //! run over the same stream), snapshots/restores through a versioned
-//! binary store ([`session::store`], v2 carries either payload; v1 files
-//! still restore), and serves NDJSON commands via `stiknn serve`
+//! binary store ([`session::store`], v3 carries any payload kind; v1/v2
+//! files still restore), and serves NDJSON commands via `stiknn serve`
 //! ([`session::protocol`]; queries the implicit engine cannot answer are
 //! rejected with `"reason":"engine"`).
+//!
+//! # Live training-set mutations ([`delta`], DESIGN.md §11)
+//!
+//! A mutable session (`SessionConfig::with_mutable(true)`, CLI
+//! `serve --mutable` / `stiknn mutate`) makes the TRAINING set itself a
+//! live object: `add_train`/`remove_train`/`relabel_train` apply exact
+//! edits in **O(t·(d + n)) per edit** instead of the full
+//! O(t·(n·d + n log n)) recompute — an edit only shifts ranks locally,
+//! so the retained per-test rank-space rows are repaired in place
+//! (binary-search insert, O(n) rank shift, superdiagonal rebuild) and
+//! the value vector re-folded, landing bit-identical to a from-scratch
+//! session over the edited train set (`tests/delta_equivalence.rs`).
+//! Every edit is recorded in a mutation ledger that v3 snapshots persist
+//! together with the train set and rows, so mutable sessions restore
+//! completely and their data provenance stays auditable. The exact
+//! iterative removal curve (`analysis::removal::
+//! sti_iterative_removal_order`) is built on the same repairs:
+//! remove-best → repair → re-rank, per step in O(t·n).
 //!
 //! Quick start:
 //! ```no_run
@@ -70,3 +88,5 @@ pub mod runtime;
 pub mod session;
 pub mod shapley;
 pub mod util;
+
+pub use shapley::delta;

@@ -7,7 +7,8 @@
 //!   ksens     k-sensitivity sweep (§3.2, Figs. 7–10)
 //!   mislabel  flip labels and detect them from interaction patterns (Fig. 5)
 //!   serve     long-lived valuation session driven by NDJSON on stdin (§9)
-//!   session   inspect a session snapshot file (§9)
+//!   mutate    live training-set edits with exact O(t·n) repairs (§11)
+//!   session   inspect a session snapshot file (§9/§11)
 //!   datasets  list the Table-1 dataset registry
 //!   artifacts list the AOT artifact manifest
 //!
@@ -45,6 +46,7 @@ fn main() {
         Some("ksens") => cmd_ksens(&argv[1..]),
         Some("mislabel") => cmd_mislabel(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("mutate") => cmd_mutate(&argv[1..]),
         Some("session") => cmd_session(&argv[1..]),
         Some("datasets") => cmd_datasets(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
@@ -79,6 +81,7 @@ fn print_help() {
            ksens      k-sensitivity sweep (paper §3.2)\n\
            mislabel   mislabel-detection experiment (paper Fig. 5)\n\
            serve      incremental valuation session (NDJSON on stdin/stdout)\n\
+           mutate     live training-set edits (add/remove/relabel) with exact repairs\n\
            session    inspect a session snapshot file\n\
            datasets   list the dataset registry (paper Table 1)\n\
            artifacts  list the AOT artifact manifest\n\n\
@@ -97,6 +100,7 @@ fn usage_for(name: &str) -> Option<String> {
         "ksens" => Some(ksens_cmd().usage()),
         "mislabel" => Some(mislabel_cmd().usage()),
         "serve" => Some(serve_cmd().usage()),
+        "mutate" => Some(mutate_cmd().usage()),
         "session" => Some(session_cmd().usage()),
         "datasets" => Some("datasets — list the dataset registry (no options)\n".to_string()),
         "artifacts" => Some(artifacts_cmd().usage()),
@@ -477,14 +481,22 @@ fn serve_cmd() -> Command {
     .opt(
         "engine",
         "session engine: dense (n×n matrix, every query) | implicit (O(n) value \
-         vector, values/topk/stats only — see --retain-rows)",
-        "dense",
+         vector, values/topk/stats only — see --retain-rows) | auto (dense, or \
+         implicit when --mutable is set)",
+        "auto",
     )
     .flag(
         "retain-rows",
         "implicit engine: keep per-test (rank, colval) rows (O(t·n) memory) so \
          cell/row queries stay answerable; ingest runs single-threaded in this \
          mode (--workers does not apply)",
+    )
+    .flag(
+        "mutable",
+        "enable live training-set edits (add_train/remove_train/relabel, \
+         DESIGN.md §11): exact O(t·n)-per-edit repairs instead of recomputes. \
+         Implies --engine implicit --retain-rows; snapshots become v3 (train \
+         set + rows + mutation ledger persisted) and --restore expects one",
     )
     .opt("workers", "worker threads for large ingest batches (0 = all cores)", "0")
     .opt("block", "test points per prep block in parallel ingests", "32")
@@ -510,9 +522,25 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let k: usize = args.require("k")?;
     let metric = Metric::parse(&args.get_or("metric", "l2"))
         .ok_or_else(|| anyhow::anyhow!("--metric must be l2, l1 or cosine"))?;
-    let engine = ValueEngine::parse(&args.get_or("engine", "dense"))
-        .ok_or_else(|| anyhow::anyhow!("--engine must be dense or implicit"))?;
-    let retain_rows = args.flag("retain-rows");
+    let mutable = args.flag("mutable");
+    let engine = match args.get_or("engine", "auto").as_str() {
+        // --mutable implies the implicit engine; an EXPLICIT --engine
+        // dense alongside it is a contradiction worth failing on.
+        "auto" if mutable => ValueEngine::Implicit,
+        "auto" => ValueEngine::Dense,
+        given => {
+            let engine = ValueEngine::parse(given)
+                .ok_or_else(|| anyhow::anyhow!("--engine must be dense, implicit or auto"))?;
+            if mutable && engine != ValueEngine::Implicit {
+                anyhow::bail!(
+                    "--mutable requires the implicit engine (the delta repairs \
+                     rewrite rank-space rows); drop `--engine dense`"
+                );
+            }
+            engine
+        }
+    };
+    let retain_rows = args.flag("retain-rows") || mutable;
     let workers: usize = args.require("workers")?;
     let block: usize = args.require("block")?;
     let parallel_min: usize = args.require("parallel-min")?;
@@ -527,6 +555,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .with_metric(metric)
         .with_engine(engine)
         .with_retained_rows(retain_rows)
+        .with_mutable(mutable)
         .with_block_size(block)
         .with_parallel_min(parallel_min);
     if workers > 0 {
@@ -535,6 +564,9 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let restore = args.get_or("restore", "");
     let mut session = if restore.is_empty() {
         ValuationSession::from_dataset(&ds, config)?
+    } else if mutable {
+        // Mutable snapshots carry their own (possibly edited) train set.
+        ValuationSession::restore_mutable(Path::new(&restore), config)?
     } else {
         ValuationSession::restore(
             Path::new(&restore),
@@ -546,18 +578,188 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     };
     // Banner on stderr so stdout stays pure NDJSON.
     eprintln!(
-        "stiknn serve: dataset={} n={} d={} k={} engine={} tests={} — NDJSON on \
+        "stiknn serve: dataset={} n={} d={} k={} engine={}{} tests={} — NDJSON on \
          stdin, `{{\"cmd\":\"shutdown\"}}` to stop",
         ds.name,
         session.n(),
         session.d(),
         session.k(),
         session.engine().label(),
+        if session.is_mutable() { " (mutable)" } else { "" },
         session.tests_seen()
     );
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     protocol::serve(&mut session, stdin.lock(), stdout.lock())?;
+    Ok(())
+}
+
+fn mutate_cmd() -> Command {
+    Command::new(
+        "mutate",
+        "live training-set edits with exact O(t·n) delta repairs (DESIGN.md §11): \
+         build a mutable session, ingest the test split, apply --ops in order, \
+         then optionally greedily drop the lowest-value points (remove → repair → \
+         re-rank each step)",
+    )
+    .opt("dataset", "dataset name (see `stiknn datasets`)", "circle")
+    .opt("n-train", "training points (0 = registry default)", "0")
+    .opt("n-test", "test points (0 = registry default)", "0")
+    .opt("k", "KNN parameter", "5")
+    .opt("seed", "dataset seed", "42")
+    .opt("metric", "distance metric: l2 | l1 | cosine", "l2")
+    .opt(
+        "ops",
+        "comma-separated edits, applied in order: remove:IDX | relabel:IDX:LABEL \
+         | add:dup:IDX[:LABEL] (append a copy of point IDX's features, with its \
+         label unless LABEL is given). Indices are as-of-edit-time",
+        "",
+    )
+    .opt(
+        "drop-lowest",
+        "after --ops, iteratively remove the N lowest-rowsum points, repairing \
+         and re-ranking after every removal (the exact greedy curve)",
+        "0",
+    )
+    .opt("top", "top-k point values printed after all edits (0 = none)", "10")
+    .opt("by", "printed ranking: main | rowsum", "rowsum")
+    .opt("snapshot", "write a v3 mutable snapshot here afterwards ('' = skip)", "")
+}
+
+enum MutateOp {
+    Remove(usize),
+    Relabel(usize, i32),
+    AddDup(usize, Option<i32>),
+}
+
+fn parse_mutate_ops(spec: &str) -> anyhow::Result<Vec<MutateOp>> {
+    let mut ops = Vec::new();
+    for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let parts: Vec<&str> = raw.split(':').collect();
+        let op = match parts.as_slice() {
+            ["remove", idx] => MutateOp::Remove(idx.parse()?),
+            ["relabel", idx, label] => MutateOp::Relabel(idx.parse()?, label.parse()?),
+            ["add", "dup", idx] => MutateOp::AddDup(idx.parse()?, None),
+            ["add", "dup", idx, label] => MutateOp::AddDup(idx.parse()?, Some(label.parse()?)),
+            _ => anyhow::bail!(
+                "bad op '{raw}' (expected remove:IDX, relabel:IDX:LABEL, or \
+                 add:dup:IDX[:LABEL])"
+            ),
+        };
+        ops.push(op);
+    }
+    Ok(ops)
+}
+
+fn cmd_mutate(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = mutate_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let k: usize = args.require("k")?;
+    let metric = Metric::parse(&args.get_or("metric", "l2"))
+        .ok_or_else(|| anyhow::anyhow!("--metric must be l2, l1 or cosine"))?;
+    let ds = load_dataset(&name, n_train, n_test, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
+    let ops = parse_mutate_ops(&args.get_or("ops", ""))?;
+    let drop_lowest: usize = args.require("drop-lowest")?;
+
+    let config = SessionConfig::new(k)
+        .with_metric(metric)
+        .with_engine(ValueEngine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true);
+    let mut session = ValuationSession::from_dataset(&ds, config)?;
+    session.ingest(&ds.test_x, &ds.test_y)?;
+    println!(
+        "dataset={} n={} t={} k={} metric={:?} (mutable session)",
+        ds.name,
+        session.n(),
+        session.tests_seen(),
+        k,
+        metric
+    );
+
+    let mut edit_time = std::time::Duration::ZERO;
+    for op in &ops {
+        let t0 = std::time::Instant::now();
+        match *op {
+            MutateOp::Remove(i) => {
+                session.remove_train(i)?;
+                let dt = t0.elapsed();
+                edit_time += dt;
+                println!("remove  index={i:<6} n={:<6} ({dt:?})", session.n());
+            }
+            MutateOp::Relabel(i, y) => {
+                session.relabel_train(i, y)?;
+                let dt = t0.elapsed();
+                edit_time += dt;
+                println!("relabel index={i:<6} y={y:<4} n={:<6} ({dt:?})", session.n());
+            }
+            MutateOp::AddDup(i, label) => {
+                anyhow::ensure!(
+                    i < session.n(),
+                    "add:dup:{i}: index out of range (n={})",
+                    session.n()
+                );
+                let x = session.train_row(i).to_vec();
+                let y = label.unwrap_or_else(|| session.train_labels()[i]);
+                let t0 = std::time::Instant::now();
+                let id = session.add_train(&x, y)?;
+                let dt = t0.elapsed();
+                edit_time += dt;
+                println!("add     index={id:<6} y={y:<4} n={:<6} ({dt:?})", session.n());
+            }
+        }
+    }
+
+    for step in 0..drop_lowest {
+        let vals = session
+            .point_values(TopBy::RowSum)
+            .ok_or_else(|| anyhow::anyhow!("no test points ingested"))?;
+        let i = stiknn::analysis::removal::argmin_by_value(&vals);
+        let value = vals[i];
+        let t0 = std::time::Instant::now();
+        session.remove_train(i).map_err(|e| {
+            anyhow::anyhow!("drop-lowest step {step}: {e:#} (n={}, k={k})", session.n())
+        })?;
+        let dt = t0.elapsed();
+        edit_time += dt;
+        println!(
+            "drop    index={i:<6} value={value:+.4e} n={:<6} ({dt:?})",
+            session.n()
+        );
+    }
+
+    let edits = session.mutations().len();
+    println!(
+        "{edits} edit(s) applied in {edit_time:?}; final n={}, mutation ledger length {}",
+        session.n(),
+        edits
+    );
+
+    let top: usize = args.require("top")?;
+    if top > 0 {
+        let by = TopBy::parse(&args.get_or("by", "rowsum"))
+            .ok_or_else(|| anyhow::anyhow!("--by must be main or rowsum"))?;
+        let vals = session
+            .point_values(by)
+            .ok_or_else(|| anyhow::anyhow!("no test points ingested"))?;
+        let entries = stiknn::session::top_k_of(&vals, top);
+        println!("{}", topk_table(&entries, by.label()));
+    }
+
+    let snapshot = args.get_or("snapshot", "");
+    if !snapshot.is_empty() {
+        let bytes = session.save(Path::new(&snapshot))?;
+        println!("wrote {snapshot} ({bytes} bytes, v3 mutable snapshot)");
+    }
     Ok(())
 }
 
@@ -577,7 +779,7 @@ fn cmd_session(argv: &[String]) -> anyhow::Result<()> {
     let args = cmd.parse(argv)?;
     let file = args.require::<String>("file")?;
     let snap = store::read_snapshot(Path::new(&file))?;
-    println!("{}", snapshot_info_table(&snap.header));
+    println!("{}", snapshot_info_table(&snap));
     let topk: usize = args.require("topk")?;
     if topk > 0 {
         let by = TopBy::parse(&args.get_or("by", "main"))

@@ -1,20 +1,34 @@
 //! Session-layer report formatting: snapshot headers and top-k
-//! point-value tables for the `stiknn session` inspector (DESIGN.md §9).
+//! point-value tables for the `stiknn session` inspector (DESIGN.md
+//! §9/§11).
 
 use crate::report::table::Table;
-use crate::session::SnapshotHeader;
+use crate::session::Snapshot;
 
-/// Human-readable header table for one decoded snapshot.
-pub fn snapshot_info_table(h: &SnapshotHeader) -> String {
+/// Human-readable header table for one decoded snapshot: engine kind,
+/// whether retained rows travel with it (mutable snapshots persist
+/// them; immutable ones never do), and the mutation-ledger length for
+/// v3 mutable snapshots.
+pub fn snapshot_info_table(snap: &Snapshot) -> String {
+    let h = &snap.header;
     let mut t = Table::new(&["field", "value"]);
     t.row(&["format version".into(), h.version.to_string()]);
     t.row(&["k".into(), h.k.to_string()]);
     t.row(&["metric".into(), format!("{:?}", h.metric)]);
     t.row(&["engine".into(), h.engine.label().to_string()]);
+    t.row(&[
+        "mutable (train set persisted)".into(),
+        if h.mutable { "yes" } else { "no" }.to_string(),
+    ]);
+    t.row(&[
+        "retained rows".into(),
+        if h.mutable { "yes" } else { "no" }.to_string(),
+    ]);
     t.row(&["n (train points)".into(), h.n.to_string()]);
     t.row(&["d (features)".into(), h.d.to_string()]);
     t.row(&["tests ingested".into(), h.tests.to_string()]);
     t.row(&["ledger entries".into(), h.batches.to_string()]);
+    t.row(&["mutation ledger".into(), snap.mutations.len().to_string()]);
     t.row(&["train fingerprint".into(), format!("{:016x}", h.fingerprint)]);
     format!("session snapshot:\n{}", t.render())
 }
@@ -36,26 +50,75 @@ pub fn topk_table(entries: &[(usize, f64)], by: &str) -> String {
 mod tests {
     use super::*;
     use crate::knn::distance::Metric;
+    use crate::session::{MutationOp, MutationRecord, SnapshotHeader, SnapshotPayload};
+
+    fn sample_snapshot(mutable: bool) -> Snapshot {
+        Snapshot {
+            header: SnapshotHeader {
+                version: 3,
+                k: 5,
+                metric: Metric::SqEuclidean,
+                engine: crate::session::Engine::Implicit,
+                mutable,
+                n: 600,
+                d: 2,
+                fingerprint: 0xABCD,
+                tests: 150,
+                batches: 3,
+            },
+            ledger: Vec::new(),
+            mutations: if mutable {
+                vec![
+                    MutationRecord {
+                        seq: 0,
+                        op: MutationOp::Add,
+                        index: 600,
+                        label: 1,
+                    },
+                    MutationRecord {
+                        seq: 1,
+                        op: MutationOp::Remove,
+                        index: 3,
+                        label: 0,
+                    },
+                ]
+            } else {
+                Vec::new()
+            },
+            payload: SnapshotPayload::Implicit {
+                main: vec![0.0; 600],
+                inter: vec![0.0; 600],
+            },
+        }
+    }
 
     #[test]
     fn snapshot_table_lists_all_fields() {
-        let h = SnapshotHeader {
-            version: 2,
-            k: 5,
-            metric: Metric::SqEuclidean,
-            engine: crate::session::Engine::Implicit,
-            n: 600,
-            d: 2,
-            fingerprint: 0xABCD,
-            tests: 150,
-            batches: 3,
-        };
-        let s = snapshot_info_table(&h);
+        let s = snapshot_info_table(&sample_snapshot(false));
         for needle in [
             "version", "SqEuclidean", "implicit", "600", "150", "000000000000abcd",
+            "mutable", "retained rows", "mutation ledger",
         ] {
             assert!(s.contains(needle), "missing {needle}:\n{s}");
         }
+    }
+
+    #[test]
+    fn snapshot_table_reports_mutable_state_and_ledger_length() {
+        let s = snapshot_info_table(&sample_snapshot(true));
+        assert!(s.contains("yes"), "{s}");
+        // mutation ledger length = 2
+        let ledger_line = s
+            .lines()
+            .find(|l| l.contains("mutation ledger"))
+            .expect("mutation ledger row");
+        assert!(ledger_line.contains('2'), "{ledger_line}");
+        let imm = snapshot_info_table(&sample_snapshot(false));
+        let imm_line = imm
+            .lines()
+            .find(|l| l.contains("mutation ledger"))
+            .expect("mutation ledger row");
+        assert!(imm_line.contains('0'), "{imm_line}");
     }
 
     #[test]

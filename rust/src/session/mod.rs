@@ -43,20 +43,37 @@
 //! implicit path keeps the same bit-reproducibility contract: any
 //! contiguous partition of a test stream produces identical bits.
 //!
+//! # Mutable sessions (DESIGN.md §11)
+//!
+//! With [`SessionConfig::with_mutable`] (implicit engine + retained rows
+//! required) the training set becomes a live object:
+//! [`ValuationSession::add_train`], [`ValuationSession::remove_train`]
+//! and [`ValuationSession::relabel_train`] apply exact edits in O(t·(d + n))
+//! per edit via the delta subsystem ([`crate::shapley::delta`]) instead
+//! of a full O(t·(n·d + n log n)) recompute — post-edit state is
+//! bit-identical to a from-scratch session over the edited train set.
+//! Every edit is appended to a mutation ledger
+//! ([`ValuationSession::mutations`]) that v3 snapshots persist alongside
+//! the train set and the retained rows, so a mutable session restores
+//! completely ([`ValuationSession::restore_mutable`]) and its training
+//! set's provenance stays auditable.
+//!
 //! * [`store`]    — versioned, checksummed binary snapshots
 //! * [`protocol`] — NDJSON command loop backing `stiknn serve`
 
 pub mod protocol;
 pub mod store;
 
+pub use crate::shapley::delta::{MutationOp, MutationRecord};
 pub use crate::shapley::values::Engine;
 pub use store::{dataset_fingerprint, Snapshot, SnapshotHeader, SnapshotPayload};
 
-use crate::coordinator::{ingest_banded, ingest_values, ValuationJob};
+use crate::coordinator::{ingest_banded, ingest_values, repair_rows, ValuationJob};
 use crate::data::Dataset;
 use crate::knn::distance::Metric;
+use crate::shapley::delta::{self, Edit, MutableRows, RepairCtx, RetainedRows};
 use crate::shapley::sti_knn::{
-    prepare_batch_scratch, sti_knn_accumulate, PrepScratch, PreparedBatch, StiParams, PREP_BATCH,
+    prepare_batch_scratch, sti_knn_accumulate, PrepScratch, StiParams, PREP_BATCH,
 };
 use crate::shapley::values::{sweep_values, values_accumulate, ValueVector, ValuesScratch};
 use crate::util::matrix::Matrix;
@@ -105,6 +122,12 @@ pub struct SessionConfig {
     /// queries stay answerable via an O(t) on-the-fly reduction.
     /// Ignored by the dense engine (the matrix answers those directly).
     pub retain_rows: bool,
+    /// Allow live training-set edits (add/remove/relabel, DESIGN.md
+    /// §11). Requires the implicit engine WITH retained rows — the
+    /// repairs read and rewrite them — and additionally retains the
+    /// ingested test set plus per-test sorted distances (O(t·(d + n))
+    /// extra memory). Construction fails otherwise.
+    pub mutable: bool,
     /// Worker threads for the parallel ingest path (prep pool + bands).
     pub workers: usize,
     /// Test points per prep block in the parallel ingest path.
@@ -123,6 +146,7 @@ impl SessionConfig {
             metric: Metric::SqEuclidean,
             engine: Engine::Dense,
             retain_rows: false,
+            mutable: false,
             workers: std::thread::available_parallelism()
                 .map(|p| p.get())
                 .unwrap_or(4),
@@ -148,6 +172,14 @@ impl SessionConfig {
     /// prep pool (`workers`/`parallel_min`) is bypassed in this mode.
     pub fn with_retained_rows(mut self, retain: bool) -> Self {
         self.retain_rows = retain;
+        self
+    }
+
+    /// Enable live training-set edits (DESIGN.md §11). Only valid
+    /// together with `with_engine(Engine::Implicit)` AND
+    /// `with_retained_rows(true)` — session construction enforces it.
+    pub fn with_mutable(mut self, mutable: bool) -> Self {
+        self.mutable = mutable;
         self
     }
 
@@ -205,67 +237,21 @@ pub struct SessionStats {
     pub upper_sum: f64,
 }
 
-/// Per-test `(rank, colval)` rows retained by an implicit session for
-/// `cell`/`row` queries: exactly the Eq. 8 reconstruction state — for any
-/// pair, φ_p[i,j] = colval_p of whichever of i, j ranks LATER. Ranks are
-/// stored as u32 (n ≤ 2³² is already far past what the dense path could
-/// ever materialize), halving the footprint vs the prep rows.
-struct RetainedRows {
-    n: usize,
-    tests: usize,
-    rank: Vec<u32>,
-    colval: Vec<f64>,
-}
-
-impl RetainedRows {
-    fn new(n: usize) -> Self {
-        RetainedRows {
-            n,
-            tests: 0,
-            rank: Vec::new(),
-            colval: Vec::new(),
-        }
-    }
-
-    fn append_batch(&mut self, batch: &PreparedBatch) {
-        debug_assert_eq!(batch.n(), self.n);
-        for p in 0..batch.len() {
-            self.rank.extend(batch.rank_row(p).iter().map(|&r| r as u32));
-            self.colval.extend_from_slice(batch.colval_row(p));
-        }
-        self.tests += batch.len();
-    }
-
-    fn rank_row(&self, p: usize) -> &[u32] {
-        &self.rank[p * self.n..(p + 1) * self.n]
-    }
-
-    fn colval_row(&self, p: usize) -> &[f64] {
-        &self.colval[p * self.n..(p + 1) * self.n]
-    }
-
-    /// Σ_p φ_p[i,j] for one off-diagonal pair — O(tests).
-    fn pair_sum(&self, i: usize, j: usize) -> f64 {
-        let mut s = 0.0;
-        for p in 0..self.tests {
-            let rank = self.rank_row(p);
-            let colval = self.colval_row(p);
-            s += if rank[j] < rank[i] { colval[i] } else { colval[j] };
-        }
-        s
-    }
-}
-
-/// The engine-specific valuation state (DESIGN.md §10).
+/// The engine-specific valuation state (DESIGN.md §10/§11).
+/// `RetainedRows` lives in `shapley::delta` — it is rank-space state the
+/// delta repairs rewrite in place.
 enum EngineState {
     /// Unnormalized Σ_τ Φ_τ, upper triangle + diagonal only (exactly the
     /// layout `sweep_band` writes); mirrored + scaled at query time.
     Dense { acc: Matrix },
     /// Unnormalized per-point value sums (main + interaction rowsums),
-    /// plus optionally the retained per-test rows for pair queries.
+    /// plus optionally the retained per-test rows for pair queries, plus
+    /// (mutable sessions only) the test set + per-test sorted distances
+    /// the delta repairs consume.
     Implicit {
         values: ValueVector,
         rows: Option<RetainedRows>,
+        live: Option<MutableRows>,
     },
 }
 
@@ -277,8 +263,12 @@ pub struct ValuationSession {
     config: SessionConfig,
     state: EngineState,
     ledger: Vec<BatchRecord>,
+    mutations: Vec<MutationRecord>,
     tests_seen: u64,
-    fingerprint: u64,
+    /// Train-set fingerprint, LAZY: edits invalidate it (`None`) instead
+    /// of paying an O(n·d) rehash per edit — it is only consumed by
+    /// snapshot save/restore, never by the edit/query hot paths.
+    fingerprint: Option<u64>,
 }
 
 impl ValuationSession {
@@ -304,6 +294,12 @@ impl ValuationSession {
             "STI-KNN is exact only for 1 <= k <= n (k={}, n={n})",
             config.k
         );
+        ensure!(
+            !config.mutable || (config.engine == Engine::Implicit && config.retain_rows),
+            "a mutable session requires the implicit engine with retained rows \
+             (with_engine(Engine::Implicit).with_retained_rows(true)) — the delta \
+             repairs read and rewrite the per-test rank-space rows"
+        );
         let fingerprint = dataset_fingerprint(&train_x, &train_y, d);
         let state = match config.engine {
             Engine::Dense => EngineState::Dense {
@@ -312,6 +308,7 @@ impl ValuationSession {
             Engine::Implicit => EngineState::Implicit {
                 values: ValueVector::zeros(n),
                 rows: config.retain_rows.then(|| RetainedRows::new(n)),
+                live: config.mutable.then(|| MutableRows::new(n, d)),
             },
         };
         Ok(ValuationSession {
@@ -321,8 +318,9 @@ impl ValuationSession {
             config,
             state,
             ledger: Vec::new(),
+            mutations: Vec::new(),
             tests_seen: 0,
-            fingerprint,
+            fingerprint: Some(fingerprint),
         })
     }
 
@@ -353,6 +351,28 @@ impl ValuationSession {
         config: SessionConfig,
     ) -> Result<Self> {
         let snap = store::read_snapshot(path)?;
+        // Redirect mutable snapshots BEFORE any train-set comparison: a
+        // mutable session's train set has been edited, so it legitimately
+        // matches no external dataset and every later check would fire
+        // with a misleading message.
+        if matches!(snap.payload, SnapshotPayload::Mutable(_)) {
+            bail!(
+                "snapshot at {} was taken by a MUTABLE session (it carries its own \
+                 train set, retained rows and mutation ledger); restore it with \
+                 ValuationSession::restore_mutable / `serve --mutable --restore`",
+                path.display()
+            );
+        }
+        // The converse is refused too: an immutable snapshot carries no
+        // retained rows or test set, so a mutable session restored from
+        // it would hold tests_seen > 0 with ZERO repairable rows — the
+        // first edit would silently zero every restored value.
+        ensure!(
+            !config.mutable,
+            "cannot restore a non-mutable snapshot into a mutable session: \
+             per-test rows and the test set are only persisted by v3 mutable \
+             snapshots (save from a --mutable session, or start fresh)"
+        );
         let mut session = Self::new(train_x, train_y, d, config)?;
         let h = &snap.header;
         ensure!(
@@ -376,11 +396,11 @@ impl ValuationSession {
             session.d
         );
         ensure!(
-            h.fingerprint == session.fingerprint,
+            h.fingerprint == session.fingerprint(),
             "snapshot fingerprint {:016x} != train-set fingerprint {:016x}: \
              the snapshot was taken against different training data",
             h.fingerprint,
-            session.fingerprint
+            session.fingerprint()
         );
         if session.config.engine == Engine::Implicit && session.config.retain_rows && h.tests > 0 {
             bail!(
@@ -390,22 +410,19 @@ impl ValuationSession {
                 h.tests
             );
         }
+        let (n, d) = (session.n(), session.d);
         session.state = match (snap.payload, session.config.engine) {
             (SnapshotPayload::Dense(raw), Engine::Dense) => EngineState::Dense { acc: raw },
             (SnapshotPayload::Dense(raw), Engine::Implicit) => EngineState::Implicit {
                 values: ValueVector::from_raw_accumulator(&raw),
-                rows: session
-                    .config
-                    .retain_rows
-                    .then(|| RetainedRows::new(session.n())),
+                rows: session.config.retain_rows.then(|| RetainedRows::new(n)),
+                live: session.config.mutable.then(|| MutableRows::new(n, d)),
             },
             (SnapshotPayload::Implicit { main, inter }, Engine::Implicit) => {
                 EngineState::Implicit {
                     values: ValueVector::from_raw_parts(main, inter),
-                    rows: session
-                        .config
-                        .retain_rows
-                        .then(|| RetainedRows::new(session.n())),
+                    rows: session.config.retain_rows.then(|| RetainedRows::new(n)),
+                    live: session.config.mutable.then(|| MutableRows::new(n, d)),
                 }
             }
             (SnapshotPayload::Implicit { .. }, Engine::Dense) => bail!(
@@ -413,10 +430,146 @@ impl ValuationSession {
                  and cannot populate a dense matrix session; restore with \
                  SessionConfig::with_engine(Engine::Implicit) / --engine implicit"
             ),
+            (SnapshotPayload::Mutable(_), _) => {
+                unreachable!("mutable payloads are redirected before the engine match")
+            }
         };
         session.tests_seen = h.tests;
         session.ledger = snap.ledger;
         Ok(session)
+    }
+
+    /// Resume a MUTABLE session from a v3 mutable snapshot. Unlike
+    /// [`Self::restore`], no training data is supplied: the edited train
+    /// set lives IN the snapshot (the whole point of mutability is that
+    /// it no longer matches any external dataset), along with the
+    /// retained rows, per-test distances, test set, batch ledger and
+    /// mutation ledger — the restored session is bit-identical to the
+    /// one that saved it, ready for further queries, ingests and edits.
+    /// k, metric and the train-set fingerprint are verified against the
+    /// header; `config` must have `mutable` set (engine/retained-rows
+    /// requirements follow from that).
+    pub fn restore_mutable(path: &Path, config: SessionConfig) -> Result<Self> {
+        ensure!(
+            config.mutable && config.engine == Engine::Implicit && config.retain_rows,
+            "restore_mutable needs a mutable session config \
+             (with_engine(Engine::Implicit).with_retained_rows(true).with_mutable(true))"
+        );
+        let snap = store::read_snapshot(path)?;
+        let h = snap.header;
+        let SnapshotPayload::Mutable(payload) = snap.payload else {
+            bail!(
+                "snapshot at {} is not a mutable-session snapshot (payload kind \
+                 '{}'); restore it with ValuationSession::restore and the matching \
+                 train set instead",
+                path.display(),
+                h.engine.label()
+            );
+        };
+        ensure!(
+            h.k as usize == config.k,
+            "snapshot was taken with k={} but the session is configured with k={}",
+            h.k,
+            config.k
+        );
+        ensure!(
+            h.metric == config.metric,
+            "snapshot metric {:?} != session metric {:?}",
+            h.metric,
+            config.metric
+        );
+        let store::MutablePayload {
+            main,
+            inter,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            rank,
+            colval,
+            dist,
+            pos,
+        } = *payload;
+        let (n, d) = (h.n as usize, h.d as usize);
+        let tests = h.tests as usize;
+        ensure!(n >= 2, "mutable snapshot has n={n} (< 2) train points");
+        ensure!(d >= 1, "mutable snapshot has d=0");
+        // Both bounds of Algorithm 1's exact domain: this constructor
+        // bypasses Self::new, so k >= 1 must be re-checked here — a
+        // crafted k=0 snapshot would otherwise divide by zero (1/k) on
+        // the next ingest or edit.
+        ensure!(
+            config.k >= 1 && config.k <= n,
+            "snapshot train set has n={n} but the session is configured with k={} \
+             (STI-KNN is exact only for 1 <= k <= n)",
+            config.k
+        );
+        let fingerprint = dataset_fingerprint(&train_x, &train_y, d);
+        ensure!(
+            fingerprint == h.fingerprint,
+            "snapshot fingerprint {:016x} != fingerprint {:016x} recomputed from \
+             its own train payload: the snapshot is internally inconsistent",
+            h.fingerprint,
+            fingerprint
+        );
+        // The checksum is FNV, not a MAC, and the repair kernels index
+        // train arrays by these rows without bounds checks beyond slice
+        // panics — a crafted or bit-rotted snapshot must fail HERE with
+        // an error, not panic a live serve on its first edit. Per test
+        // row: pos must be a permutation of 0..n, rank its inverse, and
+        // the distances sorted ascending (also rejects NaN, which would
+        // break the insert binary search).
+        let mut seen = vec![false; n];
+        for p in 0..tests {
+            let pos_row = &pos[p * n..(p + 1) * n];
+            let rank_row = &rank[p * n..(p + 1) * n];
+            let dist_row = &dist[p * n..(p + 1) * n];
+            seen.iter_mut().for_each(|s| *s = false);
+            for (r, &orig) in pos_row.iter().enumerate() {
+                let orig = orig as usize;
+                ensure!(
+                    orig < n && !seen[orig] && rank_row[orig] as usize == r,
+                    "mutable snapshot row {p} is corrupt: pos/rank are not \
+                     inverse permutations of 0..{n}"
+                );
+                seen[orig] = true;
+                ensure!(
+                    r == 0 || dist_row[r - 1] <= dist_row[r],
+                    "mutable snapshot row {p} is corrupt: distances are not \
+                     sorted ascending at rank {r}"
+                );
+            }
+        }
+        let rows = RetainedRows {
+            n,
+            tests,
+            rank,
+            colval,
+        };
+        let live = MutableRows {
+            d,
+            n,
+            tests,
+            test_x,
+            test_y,
+            dist,
+            pos,
+        };
+        Ok(ValuationSession {
+            train_x,
+            train_y,
+            d,
+            config,
+            state: EngineState::Implicit {
+                values: ValueVector::from_raw_parts(main, inter),
+                rows: Some(rows),
+                live: Some(live),
+            },
+            ledger: snap.ledger,
+            mutations: snap.mutations,
+            tests_seen: h.tests,
+            fingerprint: Some(fingerprint),
+        })
     }
 
     // -- identity ------------------------------------------------------
@@ -448,13 +601,41 @@ impl ValuationSession {
         self.ledger.last().map(|b| b.seq + 1).unwrap_or(0)
     }
 
+    /// The train-set fingerprint (see [`dataset_fingerprint`]). After an
+    /// edit this recomputes on demand (O(n·d)) — edits only invalidate
+    /// it, so the O(t·(d + n)) per-edit bound stays honest.
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
+            .unwrap_or_else(|| dataset_fingerprint(&self.train_x, &self.train_y, self.d))
     }
 
     /// Which engine this session runs (fixed at construction).
     pub fn engine(&self) -> Engine {
         self.config.engine
+    }
+
+    /// Whether live training-set edits are enabled (DESIGN.md §11).
+    pub fn is_mutable(&self) -> bool {
+        self.config.mutable
+    }
+
+    /// The mutation ledger: every edit applied over the session's
+    /// lifetime (including before a [`Self::restore_mutable`]), in
+    /// order, with as-of-edit-time indices. Empty for immutable
+    /// sessions.
+    pub fn mutations(&self) -> &[MutationRecord] {
+        &self.mutations
+    }
+
+    /// Current training labels (live view — edits change it).
+    pub fn train_labels(&self) -> &[i32] {
+        &self.train_y
+    }
+
+    /// Current features of train point `i` (length d). Panics if out of
+    /// range.
+    pub fn train_row(&self, i: usize) -> &[f32] {
+        &self.train_x[i * self.d..(i + 1) * self.d]
     }
 
     /// Whether this session retains per-test rows (implicit engine only).
@@ -526,8 +707,26 @@ impl ValuationSession {
                     );
                 }
             }
-            EngineState::Implicit { values, rows } => {
+            EngineState::Implicit { values, rows, live } => {
                 match rows {
+                    // Mutable sessions additionally retain the test set
+                    // and per-test sorted distances; the delta ingest
+                    // computes distances + argsort once per test and is
+                    // bit-identical to the plain retained path
+                    // (tests/delta_equivalence.rs).
+                    Some(retained) if live.is_some() => {
+                        delta::ingest_rows(
+                            &self.train_x,
+                            &self.train_y,
+                            self.d,
+                            test_x,
+                            test_y,
+                            &params,
+                            retained,
+                            live.as_mut().expect("checked by the guard"),
+                            values,
+                        );
+                    }
                     // Retention needs every prepared row, so it runs its
                     // own chunk loop (prep scratch reused across chunks);
                     // bit-identical to the other paths — same per-test
@@ -598,6 +797,155 @@ impl ValuationSession {
         Ok(test_y.len())
     }
 
+    // -- live training-set edits (DESIGN.md §11) -----------------------
+
+    /// Append a train point (features of length d, any i32 label) and
+    /// return its id (= the previous n; ids of existing points never
+    /// change on add). O(t·(d + n)): per retained test, one O(d)
+    /// distance, one O(log n) binary search, one O(n) rank-shift +
+    /// superdiagonal repair, then one O(t·n) value refold — the
+    /// post-edit state is bit-identical to a from-scratch session over
+    /// the extended train set (`tests/delta_equivalence.rs`). Mutable
+    /// sessions only.
+    pub fn add_train(&mut self, x: &[f32], y: i32) -> Result<usize> {
+        self.ensure_mutable("add_train")?;
+        ensure!(
+            x.len() == self.d,
+            "new train point has {} features but the session's d is {}",
+            x.len(),
+            self.d
+        );
+        ensure!(
+            x.iter().all(|v| v.is_finite()),
+            "new train point features must be finite (distances to a non-finite \
+             point would poison every ranking)"
+        );
+        let old_n = self.n();
+        self.train_x.extend_from_slice(x);
+        self.train_y.push(y);
+        let record = MutationRecord {
+            seq: self.next_mutation_seq(),
+            op: MutationOp::Add,
+            index: old_n as u64,
+            label: y,
+        };
+        self.repair_after_edit(Edit::Add { x, y }, old_n, record);
+        Ok(old_n)
+    }
+
+    /// Remove train point `index`; indices above it shift down by one
+    /// (order is preserved — that is what keeps the stable
+    /// distance-then-index ranking of the survivors, and therefore the
+    /// repair, exact). Fails if the session is immutable, the index is
+    /// out of range, or removal would shrink n below k (or below 2) —
+    /// Algorithm 1's closed forms are only exact for 1 ≤ k ≤ n.
+    pub fn remove_train(&mut self, index: usize) -> Result<()> {
+        self.ensure_mutable("remove_train")?;
+        let old_n = self.n();
+        ensure!(
+            index < old_n,
+            "remove_train index {index} out of range (n={old_n})"
+        );
+        ensure!(
+            old_n - 1 >= 2,
+            "cannot remove train point {index}: a session needs at least 2 \
+             training points for interactions"
+        );
+        ensure!(
+            old_n - 1 >= self.config.k,
+            "cannot remove train point {index}: n would shrink to {} below k={} \
+             (STI-KNN is exact only for k <= n; drop k first or keep the point)",
+            old_n - 1,
+            self.config.k
+        );
+        self.train_x.drain(index * self.d..(index + 1) * self.d);
+        self.train_y.remove(index);
+        let record = MutationRecord {
+            seq: self.next_mutation_seq(),
+            op: MutationOp::Remove,
+            index: index as u64,
+            label: 0,
+        };
+        self.repair_after_edit(Edit::Remove { index }, old_n, record);
+        Ok(())
+    }
+
+    /// Change train point `index`'s label. The cheapest edit: rankings
+    /// are untouched, only the per-test superdiagonals and the value
+    /// refold run (O(t·n) total). Mutable sessions only.
+    pub fn relabel_train(&mut self, index: usize, y: i32) -> Result<()> {
+        self.ensure_mutable("relabel_train")?;
+        let old_n = self.n();
+        ensure!(
+            index < old_n,
+            "relabel_train index {index} out of range (n={old_n})"
+        );
+        self.train_y[index] = y;
+        let record = MutationRecord {
+            seq: self.next_mutation_seq(),
+            op: MutationOp::Relabel,
+            index: index as u64,
+            label: y,
+        };
+        self.repair_after_edit(Edit::Relabel { index, y }, old_n, record);
+        Ok(())
+    }
+
+    fn ensure_mutable(&self, what: &str) -> Result<()> {
+        ensure!(
+            self.config.mutable,
+            "{what} requires a mutable session \
+             (SessionConfig::with_mutable(true) / serve --mutable)"
+        );
+        Ok(())
+    }
+
+    fn next_mutation_seq(&self) -> u64 {
+        self.mutations.last().map(|m| m.seq + 1).unwrap_or(0)
+    }
+
+    /// The shared edit tail: repair every retained test row (fanned out
+    /// across workers for large sessions — bit-identical to
+    /// single-threaded, `coordinator::repair_rows`), refold the value
+    /// vector in test order, refresh the train-set fingerprint, and
+    /// append the ledger record. Called AFTER `train_x`/`train_y` hold
+    /// the post-edit data.
+    fn repair_after_edit(&mut self, edit: Edit<'_>, old_n: usize, record: MutationRecord) {
+        let new_n = self.train_y.len();
+        let EngineState::Implicit { values, rows, live } = &mut self.state else {
+            unreachable!("mutable sessions are always implicit (enforced at construction)");
+        };
+        let rows = rows.as_mut().expect("mutable sessions retain rows");
+        let live = live.as_mut().expect("mutable sessions retain live state");
+        let workers = if live.tests >= self.config.parallel_min {
+            self.config.workers
+        } else {
+            1
+        };
+        let ctx = RepairCtx {
+            k: self.config.k,
+            metric: self.config.metric,
+            d: self.d,
+            old_n,
+            new_n,
+            train_y: &self.train_y,
+            test_x: &live.test_x,
+            test_y: &live.test_y,
+        };
+        let repaired = repair_rows(&ctx, &edit, live.tests, &live.dist, &live.pos, workers);
+        live.dist = repaired.dist;
+        live.pos = repaired.pos;
+        live.n = new_n;
+        rows.rank = repaired.rank;
+        rows.colval = repaired.colval;
+        rows.n = new_n;
+        *values = delta::refold_values(rows, &self.train_y, &live.test_y, self.config.k);
+        // Invalidate rather than rehash: recomputing the fingerprint here
+        // would be O(n·d) per edit — the factor the delta path deletes.
+        self.fingerprint = None;
+        self.mutations.push(record);
+    }
+
     // -- queries (all normalize at read time) --------------------------
 
     /// 1/t — the read-time normalization factor. `None` while empty.
@@ -651,7 +999,7 @@ impl ValuationSession {
                     })
                     .collect(),
             ),
-            EngineState::Implicit { values, rows } => {
+            EngineState::Implicit { values, rows, .. } => {
                 let retained = rows.as_ref()?;
                 let mut out = vec![0.0f64; n];
                 for p in 0..retained.tests {
@@ -771,9 +1119,11 @@ impl ValuationSession {
     // -- persistence ---------------------------------------------------
 
     /// Write a snapshot (see [`store`] for the format — dense sessions
-    /// persist the raw accumulator, implicit sessions the O(n) value
-    /// vector; retained rows are in-memory only and deliberately NOT
-    /// persisted). Returns the byte count written.
+    /// persist the raw accumulator, immutable implicit sessions the O(n)
+    /// value vector with retained rows deliberately NOT persisted;
+    /// MUTABLE sessions persist everything needed to resume edits: the
+    /// live train set, the test set, retained + distance rows, and the
+    /// mutation ledger). Returns the byte count written.
     ///
     /// The write is atomic-by-rename (temp sibling file, then rename
     /// over the target): deployments snapshot to the SAME path on a
@@ -782,6 +1132,22 @@ impl ValuationSession {
     pub fn save(&self, path: &Path) -> Result<u64> {
         let payload = match &self.state {
             EngineState::Dense { acc } => store::EncodePayload::Dense(acc.data()),
+            EngineState::Implicit {
+                values,
+                rows: Some(rows),
+                live: Some(live),
+            } => store::EncodePayload::Mutable {
+                main: values.main_raw(),
+                inter: values.inter_raw(),
+                train_x: &self.train_x,
+                train_y: &self.train_y,
+                test_x: &live.test_x,
+                test_y: &live.test_y,
+                rank: &rows.rank,
+                colval: &rows.colval,
+                dist: &live.dist,
+                pos: &live.pos,
+            },
             EngineState::Implicit { values, .. } => store::EncodePayload::Implicit {
                 main: values.main_raw(),
                 inter: values.inter_raw(),
@@ -792,9 +1158,10 @@ impl ValuationSession {
             self.config.metric,
             self.n() as u64,
             self.d as u64,
-            self.fingerprint,
+            self.fingerprint(),
             self.tests_seen,
             &self.ledger,
+            &self.mutations,
             payload,
         );
         // PID-unique temp sibling: two processes snapshotting the same

@@ -9,6 +9,8 @@
 //! Commands:
 //!
 //! ```text
+//! {"cmd":"ping"}                     → {"ok":true,"engine":...,"n":...,"t":...}
+//!                                      (health check — NEVER mutates state)
 //! {"cmd":"ingest","x":[...flattened features...],"y":[...labels...]}
 //! {"cmd":"query","i":0,"j":1}        → one averaged cell
 //! {"cmd":"query","i":0}              → one averaged row
@@ -16,6 +18,10 @@
 //! {"cmd":"values","i":3}             → one point's (main, rowsum) pair
 //! {"cmd":"topk","k":10,"by":"main"}  → top-k point values (by: main|rowsum)
 //! {"cmd":"stats"}                    → summary statistics (incl. engine)
+//! {"cmd":"add_train","x":[...d features...],"y":label}
+//!                                    → {"index":new id,"n":...} (mutable only)
+//! {"cmd":"remove_train","i":3}       → remove a train point (mutable only)
+//! {"cmd":"relabel","i":3,"y":1}      → change a train label (mutable only)
 //! {"cmd":"snapshot","path":"x.snap"} → persist the session (store.rs)
 //! {"cmd":"shutdown"}                 → acknowledge and exit
 //! ```
@@ -28,6 +34,13 @@
 //! such queries to a dense deployment instead of retrying. `values`,
 //! `topk`, `stats`, diagonal cells, `ingest` and `snapshot` work in every
 //! engine.
+//!
+//! Mutation commands (DESIGN.md §11) are the protocol face of the delta
+//! subsystem: on a `serve --mutable` session they apply exact O(t·(d+n))
+//! edits and answer with the new point id / updated counts. On an
+//! immutable session they are rejected with
+//! `{"ok":false,"reason":"mutable",...}` — again machine-checkable, so a
+//! router can direct writes to the mutable deployment.
 
 use super::{TopBy, ValuationSession};
 use crate::util::json::Json;
@@ -95,6 +108,15 @@ fn engine_fail(what: &str, session: &ValuationSession) -> Fail {
     }
 }
 
+fn mutable_fail(what: &str) -> Fail {
+    Fail {
+        msg: format!(
+            "{what} requires a mutable session (run `stiknn serve --mutable`)"
+        ),
+        reason: Some("mutable"),
+    }
+}
+
 /// Execute one command line → (response, shutdown?). Never panics on
 /// untrusted input; every failure is a `{"ok":false}` response.
 pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
@@ -106,11 +128,15 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
         return (err("missing string field 'cmd'"), false);
     };
     let result = match cmd.as_str() {
+        "ping" => Ok(ping_json(session)),
         "ingest" => do_ingest(session, &v),
         "query" => do_query(session, &v),
         "values" => do_values(session, &v),
         "topk" => do_topk(session, &v),
         "stats" => Ok(stats_json(session)),
+        "add_train" => do_add_train(session, &v),
+        "remove_train" => do_remove_train(session, &v),
+        "relabel" => do_relabel(session, &v),
         "snapshot" => do_snapshot(session, &v),
         "shutdown" => {
             return (
@@ -119,7 +145,8 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
             )
         }
         other => Err(Fail::from(format!(
-            "unknown command '{other}' (expected ingest|query|values|topk|stats|snapshot|shutdown)"
+            "unknown command '{other}' (expected ping|ingest|query|values|topk|stats|\
+             add_train|remove_train|relabel|snapshot|shutdown)"
         ))),
     };
     match result {
@@ -154,6 +181,37 @@ fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
 
 const EMPTY: &str = "no test points ingested yet or index out of range";
 
+/// Parse a JSON array of features into f32s. Rejects rather than
+/// narrows: "1e400" parses to f64 ∞, and finite f64s beyond f32 range
+/// cast to ∞ — either would fold garbage distances into the shared
+/// state forever while the command answered ok:true.
+fn parse_features(xs: &[Json]) -> Result<Vec<f32>, Fail> {
+    let mut out = Vec::with_capacity(xs.len());
+    for e in xs {
+        let f = e
+            .as_f64()
+            .ok_or_else(|| "non-numeric entry in 'x'".to_string())?;
+        if !f.is_finite() || f.abs() > f32::MAX as f64 {
+            return Err("entry in 'x' is not a finite f32-range number"
+                .to_string()
+                .into());
+        }
+        out.push(f as f32);
+    }
+    Ok(out)
+}
+
+/// Parse one JSON value as an i32 label. `as i32` would saturate
+/// out-of-range labels to ±i32::MAX and silently misclassify the point —
+/// reject instead.
+fn parse_label(e: &Json) -> Result<i32, Fail> {
+    let f = e
+        .as_f64()
+        .filter(|f| f.fract() == 0.0 && *f >= i32::MIN as f64 && *f <= i32::MAX as f64)
+        .ok_or_else(|| "'y' must be an integer label in i32 range".to_string())?;
+    Ok(f as i32)
+}
+
 fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
     let xs = v
         .get("x")
@@ -163,29 +221,13 @@ fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
         .get("y")
         .and_then(Json::as_arr)
         .ok_or_else(|| "ingest needs an integer array 'y' (labels)".to_string())?;
-    let mut test_x = Vec::with_capacity(xs.len());
-    for e in xs {
-        let f = e
-            .as_f64()
-            .ok_or_else(|| "non-numeric entry in 'x'".to_string())?;
-        // Reject rather than narrow: "1e400" parses to f64 ∞, and finite
-        // f64s beyond f32 range cast to ∞ — either would fold garbage
-        // distances into the shared accumulator forever while this
-        // command answered ok:true.
-        if !f.is_finite() || f.abs() > f32::MAX as f64 {
-            return Err("entry in 'x' is not a finite f32-range number".to_string().into());
-        }
-        test_x.push(f as f32);
-    }
+    let test_x = parse_features(xs)?;
     let mut test_y = Vec::with_capacity(ys.len());
     for e in ys {
-        // `as i32` would saturate out-of-range labels to ±i32::MAX and
-        // silently misclassify the point — reject instead.
-        let f = e.as_f64().filter(|f| {
-            f.fract() == 0.0 && *f >= i32::MIN as f64 && *f <= i32::MAX as f64
-        });
-        let f = f.ok_or_else(|| "entry in 'y' must be an integer label in i32 range".to_string())?;
-        test_y.push(f as i32);
+        test_y.push(
+            parse_label(e)
+                .map_err(|_| Fail::from("entry in 'y' must be an integer label in i32 range".to_string()))?,
+        );
     }
     let ingested = session
         .ingest(&test_x, &test_y)
@@ -332,6 +374,88 @@ fn stats_json(session: &ValuationSession) -> Json {
             ("upper_sum", Json::num(st.upper_sum)),
         ],
     )
+}
+
+/// Health-check response: engine, train size, tests ingested. Reads
+/// nothing mutable and allocates O(1) — safe for a load balancer to
+/// fire at any rate against a live `serve`.
+fn ping_json(session: &ValuationSession) -> Json {
+    ok(
+        "ping",
+        vec![
+            ("engine", Json::str(session.engine().label())),
+            ("mutable", Json::Bool(session.is_mutable())),
+            ("n", Json::num(session.n() as f64)),
+            ("t", Json::num(session.tests_seen() as f64)),
+        ],
+    )
+}
+
+fn do_add_train(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
+    if !session.is_mutable() {
+        return Err(mutable_fail("add_train"));
+    }
+    let xs = v
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "add_train needs a numeric array 'x' (d features)".to_string())?;
+    let y = parse_label(
+        v.get("y")
+            .ok_or_else(|| "add_train needs an integer label 'y'".to_string())?,
+    )?;
+    let x = parse_features(xs)?;
+    let index = session.add_train(&x, y).map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "add_train",
+        vec![
+            ("index", Json::num(index as f64)),
+            ("n", Json::num(session.n() as f64)),
+            ("mutations", Json::num(session.mutations().len() as f64)),
+        ],
+    ))
+}
+
+fn do_remove_train(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
+    if !session.is_mutable() {
+        return Err(mutable_fail("remove_train"));
+    }
+    let i = v
+        .get("i")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "remove_train needs a train index 'i'".to_string())?;
+    session.remove_train(i).map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "remove_train",
+        vec![
+            ("i", Json::num(i as f64)),
+            ("n", Json::num(session.n() as f64)),
+            ("mutations", Json::num(session.mutations().len() as f64)),
+        ],
+    ))
+}
+
+fn do_relabel(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
+    if !session.is_mutable() {
+        return Err(mutable_fail("relabel"));
+    }
+    let i = v
+        .get("i")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "relabel needs a train index 'i'".to_string())?;
+    let y = parse_label(
+        v.get("y")
+            .ok_or_else(|| "relabel needs an integer label 'y'".to_string())?,
+    )?;
+    session.relabel_train(i, y).map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "relabel",
+        vec![
+            ("i", Json::num(i as f64)),
+            ("y", Json::num(y as f64)),
+            ("n", Json::num(session.n() as f64)),
+            ("mutations", Json::num(session.mutations().len() as f64)),
+        ],
+    ))
 }
 
 fn do_snapshot(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
@@ -567,6 +691,87 @@ mod tests {
         // out-of-range index is a clean error
         let (bad, _) = handle(&mut s, r#"{"cmd":"values","i":8}"#);
         assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+    }
+
+    #[test]
+    fn ping_reports_state_and_never_mutates() {
+        let mut s = tiny_session();
+        let (r, shutdown) = handle(&mut s, r#"{"cmd":"ping"}"#);
+        assert!(!shutdown);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("engine").unwrap().as_str(), Some("dense"));
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(8));
+        assert_eq!(r.get("t").unwrap().as_usize(), Some(0));
+        assert_eq!(r.get("mutable").unwrap().as_bool(), Some(false));
+        // still answers (and counts) correctly after an ingest
+        handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        let (r, _) = handle(&mut s, r#"{"cmd":"ping"}"#);
+        assert_eq!(r.get("t").unwrap().as_usize(), Some(2));
+        assert_eq!(s.tests_seen(), 2, "ping must not touch state");
+    }
+
+    fn mutable_session() -> ValuationSession {
+        tiny_session_with(
+            SessionConfig::new(3)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true)
+                .with_mutable(true),
+        )
+    }
+
+    #[test]
+    fn mutation_commands_edit_a_mutable_session() {
+        let mut s = mutable_session();
+        handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        // add → new id 8, n grows to 9
+        let (r, _) = handle(&mut s, r#"{"cmd":"add_train","x":[0.1,-0.2],"y":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("index").unwrap().as_usize(), Some(8));
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(9));
+        assert_eq!(r.get("mutations").unwrap().as_usize(), Some(1));
+        // relabel
+        let (r, _) = handle(&mut s, r#"{"cmd":"relabel","i":0,"y":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(9));
+        // remove → n shrinks back to 8
+        let (r, _) = handle(&mut s, r#"{"cmd":"remove_train","i":8}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(8));
+        assert_eq!(r.get("mutations").unwrap().as_usize(), Some(3));
+        // queries still served from the repaired state
+        let (r, _) = handle(&mut s, r#"{"cmd":"query","i":0,"j":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (r, _) = handle(&mut s, r#"{"cmd":"values","i":0}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        // bad edits are clean per-line errors: out-of-range, bad label
+        for bad in [
+            r#"{"cmd":"remove_train","i":99}"#,
+            r#"{"cmd":"relabel","i":0,"y":0.5}"#,
+            r#"{"cmd":"add_train","x":[0.1],"y":0}"#,
+        ] {
+            let (r, _) = handle(&mut s, bad);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+        }
+    }
+
+    #[test]
+    fn mutation_commands_rejected_on_immutable_sessions_with_reason() {
+        let mut s = tiny_session();
+        for cmd in [
+            r#"{"cmd":"add_train","x":[0.1,-0.2],"y":1}"#,
+            r#"{"cmd":"remove_train","i":0}"#,
+            r#"{"cmd":"relabel","i":0,"y":1}"#,
+        ] {
+            let (r, _) = handle(&mut s, cmd);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+            assert_eq!(r.get("reason").unwrap().as_str(), Some("mutable"), "{r}");
+        }
     }
 
     #[test]

@@ -12,35 +12,48 @@
 //! the final state (asserted by `tests/session_equivalence.rs` and
 //! `tests/values_equivalence.rs`).
 //!
-//! ## Format (version 2, all integers and floats little-endian)
+//! ## Format (version 3, all integers and floats little-endian)
 //!
 //! ```text
 //! offset  size        field
 //! 0       8           magic  b"STIKNNSS"
-//! 8       4           format version (u32) = 2
+//! 8       4           format version (u32) = 3
 //! 12      4           k (u32)
 //! 16      1           metric tag (u8): 0 = sqeuclidean, 1 = manhattan, 2 = cosine
-//! 17      1           payload kind (u8): 0 = dense matrix, 1 = implicit value vector
+//! 17      1           payload kind (u8): 0 = dense matrix, 1 = implicit value
+//!                     vector, 2 = mutable session (v3+ only)
 //! 18      8           n, train-set size (u64)
 //! 26      8           d, feature dimension (u64)
 //! 34      8           train-set fingerprint (u64, FNV-1a over d, n, features, labels)
-//! 42      8           total test points ingested (u64)
+//! 42      8           total test points ingested t (u64)
 //! 50      8           ledger length L (u64)
 //! 58      16·L        ledger entries: (seq u64, len u64) per ingested batch
 //! 58+16L  payload     kind 0: 8·n² raw accumulator, row-major f64
 //!                             (upper triangle + diagonal)
 //!                     kind 1: 8·n raw main sums, then 8·n raw
 //!                             interaction-rowsum sums (f64 each)
+//!                     kind 2 (a mutable session's COMPLETE state, §11):
+//!                             8·n main, 8·n inter        (raw value vector)
+//!                             4·n·d train features (f32) + 4·n labels (i32)
+//!                             4·t·d test features (f32)  + 4·t labels (i32)
+//!                             4·t·n rank (u32) + 8·t·n colval (f64)
+//!                             8·t·n dist (f64) + 4·t·n pos (u32)
+//!                             8 mutation-ledger length M (u64)
+//!                             21·M records: seq u64, op tag u8, index u64,
+//!                                           label i32
 //! end−8   8           FNV-1a checksum over every preceding byte (u64)
 //! ```
 //!
 //! Version 1 files (written before the implicit engine existed) are the
 //! same layout WITHOUT the payload-kind byte and always carry a dense
-//! matrix payload; [`decode`] still reads them, so old snapshots restore
-//! into current builds.
+//! matrix payload; version 2 files are identical to version 3 for kinds
+//! 0/1. [`decode`] reads all of them, so old snapshots restore into
+//! current builds — immutably (mutable state only exists in kind-2
+//! payloads).
 
 use super::BatchRecord;
 use crate::knn::distance::Metric;
+use crate::shapley::delta::{MutationOp, MutationRecord};
 use crate::shapley::values::Engine;
 use crate::util::matrix::Matrix;
 use anyhow::{bail, ensure, Context, Result};
@@ -50,10 +63,18 @@ use std::path::Path;
 pub const MAGIC: [u8; 8] = *b"STIKNNSS";
 
 /// Current snapshot format version.
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 
 /// Oldest version [`decode`] still reads.
 pub const MIN_VERSION: u32 = 1;
+
+/// Payload-kind byte for a mutable-session snapshot (kinds 0/1 are the
+/// [`Engine`] tags; never renumber).
+pub const MUTABLE_TAG: u8 = 2;
+
+/// Bytes per serialized [`MutationRecord`]: seq u64 + op u8 + index u64
+/// + label i32.
+const MUTATION_RECORD_BYTES: usize = 21;
 
 /// Decoded snapshot metadata (everything but the ledger and the payload).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,8 +82,12 @@ pub struct SnapshotHeader {
     pub version: u32,
     pub k: u32,
     pub metric: Metric,
-    /// Which engine wrote the payload (v1 files are always `Dense`).
+    /// Which engine wrote the payload (v1 files are always `Dense`;
+    /// mutable snapshots are `Implicit` — see [`Self::mutable`]).
     pub engine: Engine,
+    /// Whether the payload is a complete mutable-session state (kind 2,
+    /// v3+): train set + retained rows + mutation ledger persisted.
+    pub mutable: bool,
     pub n: u64,
     pub d: u64,
     pub fingerprint: u64,
@@ -72,7 +97,29 @@ pub struct SnapshotHeader {
     pub batches: u64,
 }
 
-/// The engine-specific state a snapshot carries (both raw/unnormalized).
+/// A mutable session's complete persisted state (kind-2 payload): the
+/// raw value vector, the LIVE train set (the whole point — after edits
+/// it matches no external dataset), the retained test set, and the
+/// per-test rank-space rows the delta repairs consume (DESIGN.md §11).
+#[derive(Clone, Debug)]
+pub struct MutablePayload {
+    pub main: Vec<f64>,
+    pub inter: Vec<f64>,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+    /// Per-test rank rows, train order, t·n.
+    pub rank: Vec<u32>,
+    /// Per-test column-value rows, train order, t·n.
+    pub colval: Vec<f64>,
+    /// Per-test sorted distances, rank order, t·n.
+    pub dist: Vec<f64>,
+    /// Per-test rank→original-index permutations, t·n.
+    pub pos: Vec<u32>,
+}
+
+/// The engine-specific state a snapshot carries (all raw/unnormalized).
 #[derive(Clone, Debug)]
 pub enum SnapshotPayload {
     /// Accumulator as stored: upper triangle + diagonal populated,
@@ -81,6 +128,9 @@ pub enum SnapshotPayload {
     /// Value vector sums: `main[i]` = Σ_p u_p(i), `inter[i]` =
     /// Σ_p Σ_{j≠i} φ_p[i,j].
     Implicit { main: Vec<f64>, inter: Vec<f64> },
+    /// A mutable session's complete state (boxed — it is by far the
+    /// largest variant).
+    Mutable(Box<MutablePayload>),
 }
 
 /// A fully decoded (and checksum-verified) snapshot.
@@ -88,6 +138,8 @@ pub enum SnapshotPayload {
 pub struct Snapshot {
     pub header: SnapshotHeader,
     pub ledger: Vec<BatchRecord>,
+    /// The mutation ledger (kind-2 payloads only; empty otherwise).
+    pub mutations: Vec<MutationRecord>,
     pub payload: SnapshotPayload,
 }
 
@@ -107,7 +159,7 @@ impl Snapshot {
                 m.scale(1.0 / self.header.tests as f64);
                 Some(m)
             }
-            SnapshotPayload::Implicit { .. } => None,
+            SnapshotPayload::Implicit { .. } | SnapshotPayload::Mutable(_) => None,
         }
     }
 
@@ -119,16 +171,20 @@ impl Snapshot {
             return None;
         }
         let inv_w = 1.0 / self.header.tests as f64;
-        Some(match &self.payload {
-            SnapshotPayload::Dense(raw) => super::point_values_raw(raw, inv_w, by),
-            SnapshotPayload::Implicit { main, inter } => match by {
+        fn from_vectors(main: &[f64], inter: &[f64], inv_w: f64, by: super::TopBy) -> Vec<f64> {
+            match by {
                 super::TopBy::Main => main.iter().map(|&m| m * inv_w).collect(),
                 super::TopBy::RowSum => main
                     .iter()
                     .zip(inter)
                     .map(|(&m, &s)| (m + s) * inv_w)
                     .collect(),
-            },
+            }
+        }
+        Some(match &self.payload {
+            SnapshotPayload::Dense(raw) => super::point_values_raw(raw, inv_w, by),
+            SnapshotPayload::Implicit { main, inter } => from_vectors(main, inter, inv_w, by),
+            SnapshotPayload::Mutable(p) => from_vectors(&p.main, &p.inter, inv_w, by),
         })
     }
 
@@ -198,6 +254,15 @@ impl Fnv {
     }
 }
 
+/// The snapshot checksum function (FNV-1a, 64-bit) over a byte slice —
+/// exposed so external tooling (and the corruption tests) can craft or
+/// verify snapshot trailers without reimplementing the hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write(bytes);
+    h.finish()
+}
+
 /// Identity of a training set for snapshot-compatibility checks: FNV-1a
 /// over (d, n, feature bits, labels). Two train sets fingerprint equal
 /// iff they are bitwise the same data in the same order — exactly the
@@ -223,10 +288,26 @@ pub enum EncodePayload<'a> {
     Dense(&'a [f64]),
     /// Raw value-vector sums, n each.
     Implicit { main: &'a [f64], inter: &'a [f64] },
+    /// A mutable session's complete state (see [`MutablePayload`] for
+    /// the field shapes; t = the `tests` header field).
+    Mutable {
+        main: &'a [f64],
+        inter: &'a [f64],
+        train_x: &'a [f32],
+        train_y: &'a [i32],
+        test_x: &'a [f32],
+        test_y: &'a [i32],
+        rank: &'a [u32],
+        colval: &'a [f64],
+        dist: &'a [f64],
+        pos: &'a [u32],
+    },
 }
 
 /// Serialize one snapshot to its byte representation (always the current
-/// format version).
+/// format version). `mutations` must be empty unless the payload is
+/// [`EncodePayload::Mutable`] — only kind-2 payloads carry the mutation
+/// ledger on the wire.
 #[allow(clippy::too_many_arguments)]
 pub fn encode(
     k: u32,
@@ -236,25 +317,58 @@ pub fn encode(
     fingerprint: u64,
     tests: u64,
     ledger: &[BatchRecord],
+    mutations: &[MutationRecord],
     payload: EncodePayload<'_>,
 ) -> Vec<u8> {
-    let (kind, payload_len) = match payload {
+    let (kind, payload_bytes) = match payload {
         EncodePayload::Dense(raw) => {
             assert_eq!(raw.len() as u64, n * n, "raw accumulator shape mismatch");
-            (Engine::Dense, raw.len())
+            assert!(mutations.is_empty(), "dense snapshots carry no mutations");
+            (payload_tag(Engine::Dense), 8 * raw.len())
         }
         EncodePayload::Implicit { main, inter } => {
             assert_eq!(main.len() as u64, n, "main vector shape mismatch");
             assert_eq!(inter.len() as u64, n, "inter vector shape mismatch");
-            (Engine::Implicit, main.len() + inter.len())
+            assert!(mutations.is_empty(), "implicit snapshots carry no mutations");
+            (payload_tag(Engine::Implicit), 8 * (main.len() + inter.len()))
+        }
+        EncodePayload::Mutable {
+            main,
+            inter,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            rank,
+            colval,
+            dist,
+            pos,
+        } => {
+            let (nn, tt, dd) = (n as usize, tests as usize, d as usize);
+            assert_eq!(main.len(), nn, "main vector shape mismatch");
+            assert_eq!(inter.len(), nn, "inter vector shape mismatch");
+            assert_eq!(train_x.len(), nn * dd, "train feature shape mismatch");
+            assert_eq!(train_y.len(), nn, "train label shape mismatch");
+            assert_eq!(test_x.len(), tt * dd, "test feature shape mismatch");
+            assert_eq!(test_y.len(), tt, "test label shape mismatch");
+            assert_eq!(rank.len(), tt * nn, "rank rows shape mismatch");
+            assert_eq!(colval.len(), tt * nn, "colval rows shape mismatch");
+            assert_eq!(dist.len(), tt * nn, "dist rows shape mismatch");
+            assert_eq!(pos.len(), tt * nn, "pos rows shape mismatch");
+            (
+                MUTABLE_TAG,
+                16 * nn + 4 * nn * dd + 4 * nn + 4 * tt * dd + 4 * tt + 24 * tt * nn
+                    + 8
+                    + MUTATION_RECORD_BYTES * mutations.len(),
+            )
         }
     };
-    let mut out = Vec::with_capacity(58 + 16 * ledger.len() + 8 * payload_len + 8);
+    let mut out = Vec::with_capacity(58 + 16 * ledger.len() + payload_bytes + 8);
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&k.to_le_bytes());
     out.push(metric_tag(metric));
-    out.push(payload_tag(kind));
+    out.push(kind);
     out.extend_from_slice(&n.to_le_bytes());
     out.extend_from_slice(&d.to_le_bytes());
     out.extend_from_slice(&fingerprint.to_le_bytes());
@@ -264,24 +378,64 @@ pub fn encode(
         out.extend_from_slice(&rec.seq.to_le_bytes());
         out.extend_from_slice(&rec.len.to_le_bytes());
     }
-    match payload {
-        EncodePayload::Dense(raw) => {
-            for v in raw {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
+    fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+        for v in vs {
+            out.extend_from_slice(&v.to_le_bytes());
         }
+    }
+    fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+        for v in vs {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn put_i32s(out: &mut Vec<u8>, vs: &[i32]) {
+        for v in vs {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+        for v in vs {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    match payload {
+        EncodePayload::Dense(raw) => put_f64s(&mut out, raw),
         EncodePayload::Implicit { main, inter } => {
-            for v in main {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-            for v in inter {
-                out.extend_from_slice(&v.to_le_bytes());
+            put_f64s(&mut out, main);
+            put_f64s(&mut out, inter);
+        }
+        EncodePayload::Mutable {
+            main,
+            inter,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            rank,
+            colval,
+            dist,
+            pos,
+        } => {
+            put_f64s(&mut out, main);
+            put_f64s(&mut out, inter);
+            put_f32s(&mut out, train_x);
+            put_i32s(&mut out, train_y);
+            put_f32s(&mut out, test_x);
+            put_i32s(&mut out, test_y);
+            put_u32s(&mut out, rank);
+            put_f64s(&mut out, colval);
+            put_f64s(&mut out, dist);
+            put_u32s(&mut out, pos);
+            out.extend_from_slice(&(mutations.len() as u64).to_le_bytes());
+            for m in mutations {
+                out.extend_from_slice(&m.seq.to_le_bytes());
+                out.push(m.op.tag());
+                out.extend_from_slice(&m.index.to_le_bytes());
+                out.extend_from_slice(&m.label.to_le_bytes());
             }
         }
     }
-    let mut h = Fnv::new();
-    h.write(&out);
-    let checksum = h.finish();
+    let checksum = fnv1a(&out);
     out.extend_from_slice(&checksum.to_le_bytes());
     out
 }
@@ -328,6 +482,34 @@ impl<'a> Rd<'a> {
         }
         Ok(out)
     }
+
+    fn f32_vec(&mut self, len: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(len * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i32_vec(&mut self, len: usize) -> Result<Vec<i32>> {
+        let bytes = self.take(len * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32_vec(&mut self, len: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(len * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
 }
 
 /// Decode and fully validate a snapshot byte stream (magic, version,
@@ -361,14 +543,21 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
         bail!("unknown metric tag {metric_tag} in snapshot");
     };
     // v1 predates the payload-kind byte: those files are always dense.
-    let engine = if version >= 2 {
+    let (engine, mutable) = if version >= 2 {
         let tag = rd.u8()?;
-        let Some(engine) = engine_from_tag(tag) else {
-            bail!("unknown payload kind {tag} in snapshot");
-        };
-        engine
+        if tag == MUTABLE_TAG {
+            if version < 3 {
+                bail!("mutable payload (kind 2) in a version-{version} snapshot (needs v3)");
+            }
+            (Engine::Implicit, true)
+        } else {
+            let Some(engine) = engine_from_tag(tag) else {
+                bail!("unknown payload kind {tag} in snapshot");
+            };
+            (engine, false)
+        }
     } else {
-        Engine::Dense
+        (Engine::Dense, false)
     };
     let n = rd.u64()?;
     let d = rd.u64()?;
@@ -380,27 +569,51 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
     // remaining body must be exactly ledger + payload. Every multiplication
     // is checked — a crafted header must produce a clean error, not a
     // wrap-around that defeats this guard (the checksum is FNV, not a MAC,
-    // so headers are attacker-controllable).
-    let payload_cells = match engine {
-        Engine::Dense => (n as usize).checked_mul(n as usize),
-        Engine::Implicit => (n as usize).checked_mul(2),
+    // so headers are attacker-controllable). For mutable payloads the
+    // mutation-ledger length is not in the header, so the check is
+    // "fixed part exact, remainder a whole number of records" here and
+    // an exact length check once the record count is read.
+    let (nn, dd, tt) = (n as usize, d as usize, tests as usize);
+    let fixed_payload_bytes = if mutable {
+        // main+inter, train x/y, test x/y, rank+colval+dist+pos, M count
+        (|| {
+            let main_inter = nn.checked_mul(16)?;
+            let train = nn.checked_mul(dd)?.checked_mul(4)?.checked_add(nn.checked_mul(4)?)?;
+            let test = tt.checked_mul(dd)?.checked_mul(4)?.checked_add(tt.checked_mul(4)?)?;
+            let rows = tt.checked_mul(nn)?.checked_mul(24)?;
+            main_inter
+                .checked_add(train)?
+                .checked_add(test)?
+                .checked_add(rows)?
+                .checked_add(8)
+        })()
+    } else {
+        match engine {
+            Engine::Dense => nn.checked_mul(nn).and_then(|c| c.checked_mul(8)),
+            Engine::Implicit => nn.checked_mul(16),
+        }
     };
-    let expected = (ledger_len as usize).checked_mul(16).and_then(|l| {
-        payload_cells
-            .and_then(|m| m.checked_mul(8))
-            .map(|mb| (l, mb))
-    });
-    let Some(expected_bytes) = expected
-        .and_then(|(ledger_bytes, payload_bytes)| ledger_bytes.checked_add(payload_bytes))
-    else {
-        bail!("snapshot header sizes overflow (n={n}, ledger={ledger_len})");
+    let expected = (ledger_len as usize)
+        .checked_mul(16)
+        .and_then(|l| fixed_payload_bytes.and_then(|p| l.checked_add(p)));
+    let Some(expected_bytes) = expected else {
+        bail!("snapshot header sizes overflow (n={n}, d={d}, tests={tests}, ledger={ledger_len})");
     };
-    ensure!(
-        body.len() - rd.pos == expected_bytes,
-        "snapshot body is {} bytes but header implies {} (n={n}, ledger={ledger_len})",
-        body.len() - rd.pos,
-        expected_bytes
-    );
+    let remaining = body.len() - rd.pos;
+    if mutable {
+        ensure!(
+            remaining >= expected_bytes
+                && (remaining - expected_bytes) % MUTATION_RECORD_BYTES == 0,
+            "snapshot body is {remaining} bytes but header implies {expected_bytes} \
+             plus whole mutation records (n={n}, d={d}, tests={tests}, ledger={ledger_len})"
+        );
+    } else {
+        ensure!(
+            remaining == expected_bytes,
+            "snapshot body is {remaining} bytes but header implies {expected_bytes} \
+             (n={n}, ledger={ledger_len})"
+        );
+    }
 
     let mut ledger = Vec::with_capacity(ledger_len as usize);
     let mut ledger_total = 0u64;
@@ -417,15 +630,64 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
         "weight ledger sums to {ledger_total} but snapshot records {tests} tests"
     );
 
-    let payload = match engine {
-        Engine::Dense => {
-            let raw = rd.f64_vec((n * n) as usize)?;
-            SnapshotPayload::Dense(Matrix::from_vec(n as usize, n as usize, raw))
+    let mut mutations = Vec::new();
+    let payload = if mutable {
+        let main = rd.f64_vec(nn)?;
+        let inter = rd.f64_vec(nn)?;
+        let train_x = rd.f32_vec(nn * dd)?;
+        let train_y = rd.i32_vec(nn)?;
+        let test_x = rd.f32_vec(tt * dd)?;
+        let test_y = rd.i32_vec(tt)?;
+        let rank = rd.u32_vec(tt * nn)?;
+        let colval = rd.f64_vec(tt * nn)?;
+        let dist = rd.f64_vec(tt * nn)?;
+        let pos = rd.u32_vec(tt * nn)?;
+        let m_count = rd.u64()? as usize;
+        // checked: m_count is attacker-controllable and must not wrap
+        ensure!(
+            m_count.checked_mul(MUTATION_RECORD_BYTES) == Some(body.len() - rd.pos),
+            "mutation ledger records {m_count} entries but {} bytes remain",
+            body.len() - rd.pos
+        );
+        mutations.reserve(m_count);
+        for _ in 0..m_count {
+            let seq = rd.u64()?;
+            let tag = rd.u8()?;
+            let Some(op) = MutationOp::from_tag(tag) else {
+                bail!("unknown mutation op tag {tag} in snapshot");
+            };
+            let index = rd.u64()?;
+            let label = rd.i32()?;
+            mutations.push(MutationRecord {
+                seq,
+                op,
+                index,
+                label,
+            });
         }
-        Engine::Implicit => {
-            let main = rd.f64_vec(n as usize)?;
-            let inter = rd.f64_vec(n as usize)?;
-            SnapshotPayload::Implicit { main, inter }
+        SnapshotPayload::Mutable(Box::new(MutablePayload {
+            main,
+            inter,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            rank,
+            colval,
+            dist,
+            pos,
+        }))
+    } else {
+        match engine {
+            Engine::Dense => {
+                let raw = rd.f64_vec(nn * nn)?;
+                SnapshotPayload::Dense(Matrix::from_vec(nn, nn, raw))
+            }
+            Engine::Implicit => {
+                let main = rd.f64_vec(nn)?;
+                let inter = rd.f64_vec(nn)?;
+                SnapshotPayload::Implicit { main, inter }
+            }
         }
     };
 
@@ -435,6 +697,7 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
             k,
             metric,
             engine,
+            mutable,
             n,
             d,
             fingerprint,
@@ -442,6 +705,7 @@ pub fn decode(bytes: &[u8]) -> Result<Snapshot> {
             batches: ledger_len,
         },
         ledger,
+        mutations,
         payload,
     })
 }
@@ -467,6 +731,7 @@ mod tests {
             0xDEAD_BEEF,
             5,
             &[BatchRecord { seq: 0, len: 2 }, BatchRecord { seq: 1, len: 3 }],
+            &[],
             EncodePayload::Dense(&raw),
         )
     }
@@ -480,9 +745,41 @@ mod tests {
             0xFEED_F00D,
             7,
             &[BatchRecord { seq: 0, len: 7 }],
+            &[],
             EncodePayload::Implicit {
                 main: &[0.5, 0.0, 1.5],
                 inter: &[-0.25, 0.75, -1.0],
+            },
+        )
+    }
+
+    /// A tiny mutable-session snapshot: n=2, d=1, t=1, one mutation.
+    fn sample_mutable() -> Vec<u8> {
+        encode(
+            1,
+            Metric::SqEuclidean,
+            2,
+            1,
+            0xCAFE,
+            1,
+            &[BatchRecord { seq: 0, len: 1 }],
+            &[MutationRecord {
+                seq: 0,
+                op: MutationOp::Relabel,
+                index: 1,
+                label: -3,
+            }],
+            EncodePayload::Mutable {
+                main: &[1.0, 0.0],
+                inter: &[-0.5, -0.5],
+                train_x: &[0.25, 0.75],
+                train_y: &[1, -3],
+                test_x: &[0.3],
+                test_y: &[1],
+                rank: &[0, 1],
+                colval: &[-0.5, -0.5],
+                dist: &[0.0025, 0.2025],
+                pos: &[0, 1],
             },
         )
     }
@@ -538,7 +835,7 @@ mod tests {
         }
         // re-encoding the decoded snapshot reproduces the bytes exactly
         let again = encode(3, Metric::SqEuclidean, 3, 2, 0xDEAD_BEEF, 5, &snap.ledger,
-            EncodePayload::Dense(raw.data()));
+            &[], EncodePayload::Dense(raw.data()));
         assert_eq!(bytes, again);
     }
 
@@ -561,8 +858,86 @@ mod tests {
         assert_eq!(top[1].0, 2);
         assert_eq!(top[2].0, 0);
         let again = encode(2, Metric::Manhattan, 3, 4, 0xFEED_F00D, 7, &snap.ledger,
-            EncodePayload::Implicit { main: main.as_slice(), inter: inter.as_slice() });
+            &[], EncodePayload::Implicit { main: main.as_slice(), inter: inter.as_slice() });
         assert_eq!(bytes, again);
+    }
+
+    #[test]
+    fn mutable_payload_roundtrips_bitwise() {
+        let bytes = sample_mutable();
+        let snap = decode(&bytes).unwrap();
+        assert_eq!(snap.header.version, VERSION);
+        assert_eq!(snap.header.engine, Engine::Implicit);
+        assert!(snap.header.mutable);
+        assert_eq!(snap.header.n, 2);
+        assert_eq!(snap.header.d, 1);
+        assert_eq!(snap.header.tests, 1);
+        assert_eq!(
+            snap.mutations,
+            vec![MutationRecord {
+                seq: 0,
+                op: MutationOp::Relabel,
+                index: 1,
+                label: -3,
+            }]
+        );
+        let SnapshotPayload::Mutable(p) = &snap.payload else {
+            panic!("mutable payload expected");
+        };
+        assert_eq!(p.main, vec![1.0, 0.0]);
+        assert_eq!(p.inter, vec![-0.5, -0.5]);
+        assert_eq!(p.train_x, vec![0.25, 0.75]);
+        assert_eq!(p.train_y, vec![1, -3]);
+        assert_eq!(p.test_x, vec![0.3]);
+        assert_eq!(p.test_y, vec![1]);
+        assert_eq!(p.rank, vec![0, 1]);
+        assert_eq!(p.colval, vec![-0.5, -0.5]);
+        assert_eq!(p.dist, vec![0.0025, 0.2025]);
+        assert_eq!(p.pos, vec![0, 1]);
+        // values are answerable straight from the snapshot
+        assert!(snap.averaged_matrix().is_none());
+        let main = snap.point_values(crate::session::TopBy::Main).unwrap();
+        assert_eq!(main, vec![1.0, 0.0]);
+        // re-encode reproduces the bytes exactly
+        let again = encode(
+            1,
+            Metric::SqEuclidean,
+            2,
+            1,
+            0xCAFE,
+            1,
+            &snap.ledger,
+            &snap.mutations,
+            EncodePayload::Mutable {
+                main: &p.main,
+                inter: &p.inter,
+                train_x: &p.train_x,
+                train_y: &p.train_y,
+                test_x: &p.test_x,
+                test_y: &p.test_y,
+                rank: &p.rank,
+                colval: &p.colval,
+                dist: &p.dist,
+                pos: &p.pos,
+            },
+        );
+        assert_eq!(bytes, again);
+    }
+
+    #[test]
+    fn mutable_truncated_mutation_section_is_rejected() {
+        // strip one mutation record's worth of bytes and refresh the
+        // checksum: the record-count consistency check must fire
+        let bytes = sample_mutable();
+        let cut = bytes.len() - 8 - MUTATION_RECORD_BYTES;
+        let mut bad = bytes[..cut].to_vec();
+        let sum = fnv1a(&bad).to_le_bytes();
+        bad.extend_from_slice(&sum);
+        let err = decode(&bad).unwrap_err().to_string();
+        assert!(
+            err.contains("mutation") || err.contains("implies"),
+            "unhelpful error: {err}"
+        );
     }
 
     #[test]
@@ -582,7 +957,7 @@ mod tests {
     fn nan_and_negative_zero_cells_survive() {
         let raw = vec![f64::NAN, -0.0, f64::INFINITY, 1.5];
         let bytes = encode(1, Metric::Cosine, 2, 1, 7, 1,
-            &[BatchRecord { seq: 0, len: 1 }], EncodePayload::Dense(&raw));
+            &[BatchRecord { seq: 0, len: 1 }], &[], EncodePayload::Dense(&raw));
         let snap = decode(&bytes).unwrap();
         let SnapshotPayload::Dense(m) = &snap.payload else {
             panic!("dense payload expected");
@@ -653,7 +1028,7 @@ mod tests {
     fn ledger_total_must_match_tests() {
         let raw = vec![0.0; 4];
         let bytes = encode(1, Metric::SqEuclidean, 2, 1, 0, 99,
-            &[BatchRecord { seq: 0, len: 1 }], EncodePayload::Dense(&raw));
+            &[BatchRecord { seq: 0, len: 1 }], &[], EncodePayload::Dense(&raw));
         let err = decode(&bytes).unwrap_err().to_string();
         assert!(err.contains("ledger"), "{err}");
     }
@@ -673,7 +1048,9 @@ mod tests {
         for e in [Engine::Dense, Engine::Implicit] {
             assert_eq!(engine_from_tag(payload_tag(e)), Some(e));
         }
-        assert_eq!(engine_from_tag(2), None);
+        // tag 2 is the mutable-session kind, not an engine
+        assert_eq!(engine_from_tag(MUTABLE_TAG), None);
+        assert_eq!(MUTABLE_TAG, 2);
     }
 
     #[test]

@@ -1,0 +1,716 @@
+//! `stiknn::delta` — exact live training-set mutations (add / remove /
+//! relabel) for valuation sessions in **O(t·(d + n)) per edit** instead
+//! of a full O(t·(n·d + n log n)) recompute (DESIGN.md §11).
+//!
+//! # Why edits are cheap in rank space
+//!
+//! Everything a per-test STI contribution needs is a function of the
+//! test point's *distance ranking* of the train set (Eq. 6–8): the
+//! sorted label-match vector u_p determines the superdiagonal c_p, and
+//! (rank, colval = c_p[rank]) rows determine both the retained-row pair
+//! queries and the implicit value fold. A single training-set edit only
+//! perturbs that ranking locally:
+//!
+//! * **add** — the new point lands at one sorted position per test
+//!   (found by an O(log n) binary search over the retained sorted
+//!   distances; computing its distance is O(d)); every rank at or above
+//!   it shifts up by one.
+//! * **remove** — the removed point's rank drops out; ranks above shift
+//!   down by one.
+//! * **relabel** — the ranking is untouched entirely; only u_p changes.
+//!
+//! The superdiagonal recursion's coefficients depend on n and on the
+//! position within the ranking, so c_p must be *recomputed* — but that
+//! is one O(n) pass per test over data already in memory (no distances,
+//! no sort). The value vector is then re-folded from the repaired rows
+//! in test order ([`refold_values`]), which keeps it **bit-identical**
+//! to a from-scratch `values_accumulate` over the post-edit training
+//! set: repaired (rank, colval) rows equal from-scratch prep rows to the
+//! bit (same distances, same stable tie-break — an added point carries
+//! the largest original index, so it sorts after every equal distance,
+//! exactly like the keyed argsort; a removal preserves the relative
+//! order of the survivors), and the fold applies the same expressions in
+//! the same per-element order as `sweep_values`.
+//!
+//! Total edit cost: O(t·(d + n)) repair + O(t·n) refold, vs the full
+//! recompute's O(t·(n·d + n log n)) — the d and log n factors are what
+//! the delta path deletes. `benches/delta.rs` measures the gap.
+//!
+//! # Module layout
+//!
+//! * [`RetainedRows`] — per-test (rank, colval) rows (moved here from
+//!   the session layer; they are rank-space state, not session state).
+//! * [`MutableRows`] — the extra state a mutable session retains: test
+//!   features/labels plus per-test sorted distances and the rank→index
+//!   permutation (what the binary search and the repairs consume).
+//! * [`Edit`] / [`repair_chunk`] — one edit's per-test row repair over a
+//!   contiguous test chunk; chunks are independent, so the coordinator
+//!   fans them out across workers bit-identically
+//!   ([`crate::coordinator::repair_rows`]).
+//! * [`refold_values`] — rebuild the [`ValueVector`] from repaired rows
+//!   in test order (the bit-reproducibility anchor).
+//! * [`ingest_rows`] — the mutable session's ingest path: captures
+//!   distances + permutation alongside the usual rows, bit-identical to
+//!   the plain implicit retained path (property-tested in
+//!   `tests/delta_equivalence.rs`).
+//! * [`MutationRecord`] — the mutation ledger entry persisted by v3
+//!   snapshots (reproducibility: the edit sequence that produced the
+//!   current train set, in order).
+
+use crate::knn::distance::{argsort_by_distance_keyed, distances_into, Metric};
+use crate::shapley::sti_knn::{superdiagonal_into, PreparedBatch, StiParams};
+use crate::shapley::values::ValueVector;
+
+/// Per-test `(rank, colval)` rows retained by an implicit session for
+/// `cell`/`row` queries: exactly the Eq. 8 reconstruction state — for any
+/// pair, φ_p[i,j] = colval_p of whichever of i, j ranks LATER. Ranks are
+/// stored as u32 (n ≤ 2³² is already far past what the dense path could
+/// ever materialize), halving the footprint vs the prep rows.
+pub struct RetainedRows {
+    pub(crate) n: usize,
+    pub(crate) tests: usize,
+    pub(crate) rank: Vec<u32>,
+    pub(crate) colval: Vec<f64>,
+}
+
+impl RetainedRows {
+    pub fn new(n: usize) -> Self {
+        RetainedRows {
+            n,
+            tests: 0,
+            rank: Vec::new(),
+            colval: Vec::new(),
+        }
+    }
+
+    /// Number of retained test rows.
+    pub fn tests(&self) -> usize {
+        self.tests
+    }
+
+    /// Train-set size the rows are currently shaped for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub(crate) fn append_batch(&mut self, batch: &PreparedBatch) {
+        debug_assert_eq!(batch.n(), self.n);
+        for p in 0..batch.len() {
+            self.rank
+                .extend(batch.rank_row(p).iter().map(|&r| r as u32));
+            self.colval.extend_from_slice(batch.colval_row(p));
+        }
+        self.tests += batch.len();
+    }
+
+    pub fn rank_row(&self, p: usize) -> &[u32] {
+        &self.rank[p * self.n..(p + 1) * self.n]
+    }
+
+    pub fn colval_row(&self, p: usize) -> &[f64] {
+        &self.colval[p * self.n..(p + 1) * self.n]
+    }
+
+    /// Σ_p φ_p[i,j] for one off-diagonal pair — O(tests).
+    pub fn pair_sum(&self, i: usize, j: usize) -> f64 {
+        let mut s = 0.0;
+        for p in 0..self.tests {
+            let rank = self.rank_row(p);
+            let colval = self.colval_row(p);
+            s += if rank[j] < rank[i] { colval[i] } else { colval[j] };
+        }
+        s
+    }
+}
+
+/// The additional state a MUTABLE session retains beyond
+/// [`RetainedRows`]: the ingested test set itself (features + labels —
+/// O(t·d), needed to place an inserted point and to rebuild u_p after a
+/// relabel) and, per test, the sorted distances plus the rank→original
+/// permutation (O(t·n) — what the insert binary search and the rank
+/// repairs read). Memory: 12n + 4d bytes per test on top of the 12n the
+/// retained rows already hold.
+pub struct MutableRows {
+    pub(crate) d: usize,
+    pub(crate) n: usize,
+    pub(crate) tests: usize,
+    pub(crate) test_x: Vec<f32>,
+    pub(crate) test_y: Vec<i32>,
+    /// Per-test distances in RANK order (ascending), `tests` rows of n.
+    pub(crate) dist: Vec<f64>,
+    /// Per-test rank→original-index permutation, `tests` rows of n.
+    pub(crate) pos: Vec<u32>,
+}
+
+impl MutableRows {
+    pub fn new(n: usize, d: usize) -> Self {
+        MutableRows {
+            d,
+            n,
+            tests: 0,
+            test_x: Vec::new(),
+            test_y: Vec::new(),
+            dist: Vec::new(),
+            pos: Vec::new(),
+        }
+    }
+
+    pub fn tests(&self) -> usize {
+        self.tests
+    }
+
+    pub fn dist_row(&self, p: usize) -> &[f64] {
+        &self.dist[p * self.n..(p + 1) * self.n]
+    }
+
+    pub fn pos_row(&self, p: usize) -> &[u32] {
+        &self.pos[p * self.n..(p + 1) * self.n]
+    }
+
+    pub fn test_label(&self, p: usize) -> i32 {
+        self.test_y[p]
+    }
+}
+
+/// One training-set edit. `Add` always appends at index n (the current
+/// train size), which is what keeps repairs exact: the new point carries
+/// the LARGEST original index, so the stable distance-then-index order
+/// places it after every equal distance — precisely where a from-scratch
+/// argsort would put it.
+#[derive(Clone, Copy, Debug)]
+pub enum Edit<'a> {
+    /// Append a train point (features of length d, label). New id = n.
+    Add { x: &'a [f32], y: i32 },
+    /// Remove train point `index`; indices above it shift down by one.
+    Remove { index: usize },
+    /// Change train point `index`'s label. Ranks are untouched.
+    Relabel { index: usize, y: i32 },
+}
+
+/// Stable wire tag for a mutation kind (part of the v3 snapshot format —
+/// never renumber existing variants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutationOp {
+    /// `index` is the id the point was assigned; `label` its label.
+    Add,
+    /// `index` is the index AT THE TIME OF THE EDIT (later records see
+    /// the shifted numbering); `label` is unused (0).
+    Remove,
+    /// `index` as for Remove; `label` is the NEW label.
+    Relabel,
+}
+
+impl MutationOp {
+    pub fn tag(&self) -> u8 {
+        match self {
+            MutationOp::Add => 0,
+            MutationOp::Remove => 1,
+            MutationOp::Relabel => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<MutationOp> {
+        match tag {
+            0 => Some(MutationOp::Add),
+            1 => Some(MutationOp::Remove),
+            2 => Some(MutationOp::Relabel),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MutationOp::Add => "add",
+            MutationOp::Remove => "remove",
+            MutationOp::Relabel => "relabel",
+        }
+    }
+}
+
+/// One mutation-ledger entry: the monotone edit sequence number plus
+/// what happened. Together with the batch ledger and the persisted train
+/// set, the ledger documents how a v3 snapshot's training set came to be
+/// (indices are as-of-edit-time; added features live in the persisted
+/// train set, not the ledger).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MutationRecord {
+    pub seq: u64,
+    pub op: MutationOp,
+    pub index: u64,
+    pub label: i32,
+}
+
+/// Everything [`repair_chunk`] needs beyond the rows themselves. Built
+/// once per edit; `train_y` is the POST-edit label vector (length
+/// `new_n`).
+pub struct RepairCtx<'a> {
+    pub k: usize,
+    pub metric: Metric,
+    pub d: usize,
+    pub old_n: usize,
+    pub new_n: usize,
+    pub train_y: &'a [i32],
+    pub test_x: &'a [f32],
+    pub test_y: &'a [i32],
+}
+
+/// Reusable per-worker scratch for [`repair_chunk`]: the rank-space
+/// label-match vector u and the superdiagonal c.
+#[derive(Default)]
+pub struct RepairScratch {
+    u: Vec<f64>,
+    c: Vec<f64>,
+}
+
+impl RepairScratch {
+    pub fn new() -> Self {
+        RepairScratch::default()
+    }
+}
+
+/// Repair one edit over a contiguous chunk of tests: read the old
+/// (dist, pos) rows, write the new (dist, pos, rank, colval) rows.
+/// `test_lo` is the chunk's global test offset (indexes `ctx.test_x` /
+/// `ctx.test_y`). O(chunk·(d + n)) for Add, O(chunk·n) otherwise.
+///
+/// Chunks are fully independent — each test's repair reads only its own
+/// old row and the shared ctx — so any chunking across workers produces
+/// identical rows ([`crate::coordinator::repair_rows`] relies on this).
+#[allow(clippy::too_many_arguments)]
+pub fn repair_chunk(
+    ctx: &RepairCtx<'_>,
+    edit: &Edit<'_>,
+    test_lo: usize,
+    old_dist: &[f64],
+    old_pos: &[u32],
+    new_dist: &mut [f64],
+    new_pos: &mut [u32],
+    new_rank: &mut [u32],
+    new_colval: &mut [f64],
+    scratch: &mut RepairScratch,
+) {
+    let (old_n, new_n) = (ctx.old_n, ctx.new_n);
+    assert_eq!(old_dist.len() % old_n.max(1), 0, "old dist chunk shape");
+    let tests = if old_n == 0 { 0 } else { old_dist.len() / old_n };
+    assert_eq!(old_pos.len(), tests * old_n, "old pos chunk shape");
+    assert_eq!(new_dist.len(), tests * new_n, "new dist chunk shape");
+    assert_eq!(new_pos.len(), tests * new_n, "new pos chunk shape");
+    assert_eq!(new_rank.len(), tests * new_n, "new rank chunk shape");
+    assert_eq!(new_colval.len(), tests * new_n, "new colval chunk shape");
+    assert_eq!(ctx.train_y.len(), new_n, "post-edit labels / new_n mismatch");
+
+    scratch.u.resize(new_n, 0.0);
+    scratch.c.resize(new_n, 0.0);
+    let inv_k = 1.0 / ctx.k as f64;
+
+    for p in 0..tests {
+        let g = test_lo + p;
+        let od = &old_dist[p * old_n..(p + 1) * old_n];
+        let op = &old_pos[p * old_n..(p + 1) * old_n];
+        let nd = &mut new_dist[p * new_n..(p + 1) * new_n];
+        let np = &mut new_pos[p * new_n..(p + 1) * new_n];
+        let nr = &mut new_rank[p * new_n..(p + 1) * new_n];
+        let nc = &mut new_colval[p * new_n..(p + 1) * new_n];
+
+        match edit {
+            Edit::Add { x, .. } => {
+                // Distance computed exactly as prep's distances_into
+                // would: metric.dist(query, train_row) — so the stored
+                // value bit-matches a from-scratch run.
+                let q = &ctx.test_x[g * ctx.d..(g + 1) * ctx.d];
+                let dnew = ctx.metric.dist(q, x);
+                // Stable tie-break: the new point has the largest index,
+                // so it goes AFTER every equal distance — upper bound.
+                let r = od.partition_point(|&dv| dv <= dnew);
+                nd[..r].copy_from_slice(&od[..r]);
+                nd[r] = dnew;
+                nd[r + 1..].copy_from_slice(&od[r..]);
+                np[..r].copy_from_slice(&op[..r]);
+                np[r] = old_n as u32;
+                np[r + 1..].copy_from_slice(&op[r..]);
+            }
+            Edit::Remove { index } => {
+                // O(n) scan beats carrying the old rank rows through the
+                // repair plumbing; the whole per-test repair is O(n).
+                let r = op
+                    .iter()
+                    .position(|&v| v as usize == *index)
+                    .expect("removed index must appear in every pos row");
+                nd[..r].copy_from_slice(&od[..r]);
+                nd[r..].copy_from_slice(&od[r + 1..]);
+                for (slot, &v) in np[..r].iter_mut().zip(&op[..r]) {
+                    *slot = v - u32::from((v as usize) > *index);
+                }
+                for (slot, &v) in np[r..].iter_mut().zip(&op[r + 1..]) {
+                    *slot = v - u32::from((v as usize) > *index);
+                }
+            }
+            Edit::Relabel { .. } => {
+                nd.copy_from_slice(od);
+                np.copy_from_slice(op);
+            }
+        }
+
+        // Common tail: rank = inverse permutation, u_p from the
+        // post-edit labels, superdiagonal, scatter — the same
+        // construction (and the same `superdiagonal_into`) as
+        // `prepare_batch_scratch`, so the repaired row bit-matches a
+        // from-scratch prep of the post-edit train set.
+        let y = ctx.test_y[g];
+        for (rr, &orig) in np.iter().enumerate() {
+            nr[orig as usize] = rr as u32;
+            scratch.u[rr] = if ctx.train_y[orig as usize] == y {
+                inv_k
+            } else {
+                0.0
+            };
+        }
+        superdiagonal_into(&scratch.u[..new_n], ctx.k, &mut scratch.c[..new_n]);
+        for (rr, &orig) in np.iter().enumerate() {
+            nc[orig as usize] = scratch.c[rr];
+        }
+    }
+}
+
+/// Rebuild the UNNORMALIZED value vector from retained rows, in test
+/// order — the suffix-sum fold of `sweep_values` read off (rank, colval)
+/// rows instead of a `PreparedBatch`. Same expressions
+/// (`r·colval[i] + suffix[r+1]`, one addition per element per test) in
+/// the same order, so the result is **bit-identical** to
+/// `values_accumulate` over the same train set and test stream
+/// (property-tested in `tests/delta_equivalence.rs`). O(tests·n).
+pub fn refold_values(
+    rows: &RetainedRows,
+    train_y: &[i32],
+    test_y: &[i32],
+    k: usize,
+) -> ValueVector {
+    let n = rows.n;
+    assert_eq!(train_y.len(), n, "train labels / rows mismatch");
+    assert_eq!(test_y.len(), rows.tests, "test labels / rows mismatch");
+    let mut vv = ValueVector::zeros(n);
+    let inv_k = 1.0 / k as f64;
+    let mut c_rank = vec![0.0f64; n];
+    let mut suffix = vec![0.0f64; n + 1];
+    for p in 0..rows.tests {
+        let rank = rows.rank_row(p);
+        let colval = rows.colval_row(p);
+        let y = test_y[p];
+        for i in 0..n {
+            c_rank[rank[i] as usize] = colval[i];
+        }
+        suffix[n] = 0.0;
+        for r in (0..n).rev() {
+            suffix[r] = c_rank[r] + suffix[r + 1];
+        }
+        for i in 0..n {
+            let r = rank[i];
+            if train_y[i] == y {
+                vv.main[i] += inv_k;
+            }
+            vv.inter[i] += (r as f64) * colval[i] + suffix[r as usize + 1];
+        }
+    }
+    vv
+}
+
+/// Mutable-session ingest: for each test point, compute distances + the
+/// stable argsort ONCE, retain (dist, pos) in [`MutableRows`] and
+/// (rank, colval) in [`RetainedRows`], and fold the per-point values
+/// into `vv`. Bit-identical to the plain retained implicit path
+/// (`prepare_batch_scratch` + `sweep_values`): the same distance calls,
+/// the same keyed argsort, the same `superdiagonal_into` on the same
+/// u_p, and the same fold expressions per element in test order.
+/// O(t·(n·d + n log n)) — the same as any ingest; the delta savings are
+/// on EDITS, not ingests.
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_rows(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    rows: &mut RetainedRows,
+    mrows: &mut MutableRows,
+    vv: &mut ValueVector,
+) {
+    let n = train_y.len();
+    assert_eq!(train_x.len(), n * d, "train shape mismatch");
+    assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
+    assert_eq!(rows.n, n, "retained rows / train mismatch");
+    assert_eq!(mrows.n, n, "mutable rows / train mismatch");
+    assert_eq!(mrows.d, d, "mutable rows / d mismatch");
+    let k = params.k;
+    let inv_k = 1.0 / k as f64;
+    let mut dists = vec![0.0f64; n];
+    let mut keys: Vec<u128> = Vec::new();
+    let mut order = vec![0usize; n];
+    let mut u = vec![0.0f64; n];
+    let mut c = vec![0.0f64; n];
+    let mut suffix = vec![0.0f64; n + 1];
+
+    for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        distances_into(q, train_x, d, params.metric, &mut dists);
+        argsort_by_distance_keyed(&dists, &mut keys, &mut order);
+        // u_p in rank order, exactly as prepare builds it.
+        for (r, &orig) in order.iter().enumerate() {
+            u[r] = if train_y[orig] == y { inv_k } else { 0.0 };
+        }
+        superdiagonal_into(&u, k, &mut c);
+        // Retain (dist, pos) — rank order — and (rank, colval) — train
+        // order — then fold: c is already c_rank, so the suffix pass
+        // reads it directly.
+        mrows.dist.extend(order.iter().map(|&orig| dists[orig]));
+        mrows.pos.extend(order.iter().map(|&orig| orig as u32));
+        mrows.test_x.extend_from_slice(q);
+        mrows.test_y.push(y);
+        let base = rows.rank.len();
+        rows.rank.resize(base + n, 0);
+        rows.colval.resize(base + n, 0.0);
+        for (r, &orig) in order.iter().enumerate() {
+            rows.rank[base + orig] = r as u32;
+            rows.colval[base + orig] = c[r];
+        }
+        suffix[n] = 0.0;
+        for r in (0..n).rev() {
+            suffix[r] = c[r] + suffix[r + 1];
+        }
+        for i in 0..n {
+            let r = rows.rank[base + i];
+            if train_y[i] == y {
+                vv.main[i] += inv_k;
+            }
+            vv.inter[i] += (r as f64) * rows.colval[base + i] + suffix[r as usize + 1];
+        }
+        rows.tests += 1;
+        mrows.tests += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::values::values_accumulate;
+    use crate::util::rng::Rng;
+
+    fn random_problem(
+        seed: u64,
+        n: usize,
+        d: usize,
+        t: usize,
+    ) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+            (0..n).map(|_| rng.below(2) as i32).collect(),
+            (0..t * d).map(|_| rng.normal() as f32).collect(),
+            (0..t).map(|_| rng.below(2) as i32).collect(),
+        )
+    }
+
+    /// Ingest through the delta path, returning all the state.
+    fn delta_ingest(
+        tx: &[f32],
+        ty: &[i32],
+        d: usize,
+        qx: &[f32],
+        qy: &[i32],
+        k: usize,
+    ) -> (RetainedRows, MutableRows, ValueVector) {
+        let n = ty.len();
+        let mut rows = RetainedRows::new(n);
+        let mut mrows = MutableRows::new(n, d);
+        let mut vv = ValueVector::zeros(n);
+        ingest_rows(
+            tx,
+            ty,
+            d,
+            qx,
+            qy,
+            &StiParams::new(k),
+            &mut rows,
+            &mut mrows,
+            &mut vv,
+        );
+        (rows, mrows, vv)
+    }
+
+    #[test]
+    fn ingest_rows_is_bit_identical_to_values_accumulate() {
+        let (tx, ty, qx, qy) = random_problem(3, 17, 3, 9);
+        let (_, _, vv) = delta_ingest(&tx, &ty, 3, &qx, &qy, 4);
+        let mut reference = ValueVector::zeros(17);
+        values_accumulate(&tx, &ty, 3, &qx, &qy, &StiParams::new(4), &mut reference);
+        for i in 0..17 {
+            assert_eq!(vv.main_raw()[i].to_bits(), reference.main_raw()[i].to_bits());
+            assert_eq!(
+                vv.inter_raw()[i].to_bits(),
+                reference.inter_raw()[i].to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn refold_reproduces_the_folded_vector_bits() {
+        let (tx, ty, qx, qy) = random_problem(7, 13, 2, 8);
+        let (rows, mrows, vv) = delta_ingest(&tx, &ty, 2, &qx, &qy, 3);
+        let refolded = refold_values(&rows, &ty, &mrows.test_y, 3);
+        for i in 0..13 {
+            assert_eq!(vv.main_raw()[i].to_bits(), refolded.main_raw()[i].to_bits());
+            assert_eq!(
+                vv.inter_raw()[i].to_bits(),
+                refolded.inter_raw()[i].to_bits()
+            );
+        }
+    }
+
+    /// The core exactness claim at the row level: repairing after an
+    /// edit equals re-preparing from scratch on the post-edit train set,
+    /// to the BIT, for every (dist, pos, rank, colval) row.
+    #[test]
+    fn repaired_rows_bit_match_from_scratch_rows() {
+        let (tx, ty, qx, qy) = random_problem(11, 12, 2, 6);
+        // duplicate an existing point's features → duplicate distances,
+        // the tie-break stress case
+        let dup: Vec<f32> = tx[4..6].to_vec();
+        let (_, mrows, _) = delta_ingest(&tx, &ty, 2, &qx, &qy, 3);
+
+        for (edit_name, edit, new_tx, new_ty) in [
+            (
+                "add-dup",
+                Edit::Add { x: &dup, y: 1 },
+                {
+                    let mut v = tx.clone();
+                    v.extend_from_slice(&dup);
+                    v
+                },
+                {
+                    let mut v = ty.clone();
+                    v.push(1);
+                    v
+                },
+            ),
+            (
+                "remove",
+                Edit::Remove { index: 4 },
+                {
+                    let mut v = tx.clone();
+                    v.drain(8..10);
+                    v
+                },
+                {
+                    let mut v = ty.clone();
+                    v.remove(4);
+                    v
+                },
+            ),
+            (
+                "relabel",
+                Edit::Relabel { index: 2, y: 1 - ty[2] },
+                tx.clone(),
+                {
+                    let mut v = ty.clone();
+                    v[2] = 1 - v[2];
+                    v
+                },
+            ),
+        ] {
+            let new_n = new_ty.len();
+            let ctx = RepairCtx {
+                k: 3,
+                metric: Metric::SqEuclidean,
+                d: 2,
+                old_n: 12,
+                new_n,
+                train_y: &new_ty,
+                test_x: &qx,
+                test_y: &qy,
+            };
+            let mut nd = vec![0.0; 6 * new_n];
+            let mut np = vec![0u32; 6 * new_n];
+            let mut nr = vec![0u32; 6 * new_n];
+            let mut nc = vec![0.0; 6 * new_n];
+            let mut scratch = RepairScratch::new();
+            repair_chunk(
+                &ctx, &edit, 0, &mrows.dist, &mrows.pos, &mut nd, &mut np, &mut nr, &mut nc,
+                &mut scratch,
+            );
+            let (fresh_rows, fresh_mrows, _) = delta_ingest(&new_tx, &new_ty, 2, &qx, &qy, 3);
+            for idx in 0..6 * new_n {
+                assert_eq!(
+                    nd[idx].to_bits(),
+                    fresh_mrows.dist[idx].to_bits(),
+                    "{edit_name} dist[{idx}]"
+                );
+                assert_eq!(np[idx], fresh_mrows.pos[idx], "{edit_name} pos[{idx}]");
+                assert_eq!(nr[idx], fresh_rows.rank[idx], "{edit_name} rank[{idx}]");
+                assert_eq!(
+                    nc[idx].to_bits(),
+                    fresh_rows.colval[idx].to_bits(),
+                    "{edit_name} colval[{idx}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_repair_equals_one_chunk() {
+        let (tx, ty, qx, qy) = random_problem(19, 10, 2, 7);
+        let (_, mrows, _) = delta_ingest(&tx, &ty, 2, &qx, &qy, 2);
+        let mut new_ty = ty.clone();
+        new_ty.remove(3);
+        let ctx = RepairCtx {
+            k: 2,
+            metric: Metric::SqEuclidean,
+            d: 2,
+            old_n: 10,
+            new_n: 9,
+            train_y: &new_ty,
+            test_x: &qx,
+            test_y: &qy,
+        };
+        let edit = Edit::Remove { index: 3 };
+        let run = |splits: &[(usize, usize)]| {
+            let mut nd = vec![0.0; 7 * 9];
+            let mut np = vec![0u32; 7 * 9];
+            let mut nr = vec![0u32; 7 * 9];
+            let mut nc = vec![0.0; 7 * 9];
+            let mut scratch = RepairScratch::new();
+            for &(lo, hi) in splits {
+                repair_chunk(
+                    &ctx,
+                    &edit,
+                    lo,
+                    &mrows.dist[lo * 10..hi * 10],
+                    &mrows.pos[lo * 10..hi * 10],
+                    &mut nd[lo * 9..hi * 9],
+                    &mut np[lo * 9..hi * 9],
+                    &mut nr[lo * 9..hi * 9],
+                    &mut nc[lo * 9..hi * 9],
+                    &mut scratch,
+                );
+            }
+            (nd, np, nr, nc)
+        };
+        let whole = run(&[(0, 7)]);
+        let parts = run(&[(0, 2), (2, 3), (3, 7)]);
+        assert_eq!(whole.1, parts.1);
+        assert_eq!(whole.2, parts.2);
+        for i in 0..7 * 9 {
+            assert_eq!(whole.0[i].to_bits(), parts.0[i].to_bits());
+            assert_eq!(whole.3[i].to_bits(), parts.3[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn mutation_op_tags_are_stable_and_invertible() {
+        for op in [MutationOp::Add, MutationOp::Remove, MutationOp::Relabel] {
+            assert_eq!(MutationOp::from_tag(op.tag()), Some(op));
+        }
+        assert_eq!(MutationOp::from_tag(3), None);
+        assert_eq!(MutationOp::Add.label(), "add");
+        assert_eq!(MutationOp::Remove.label(), "remove");
+        assert_eq!(MutationOp::Relabel.label(), "relabel");
+    }
+}

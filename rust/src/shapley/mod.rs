@@ -1,11 +1,14 @@
 //! Data-Shapley engines: the paper's O(tn²) STI-KNN (Algorithm 1), the
 //! implicit O(t·n log n) per-point value engine built on its rank-space
-//! structure ([`values`], DESIGN.md §10), the O(2ⁿ) brute-force baseline
-//! it replaces (Eq. 3), the per-point KNN-Shapley baseline (Jia et al.
-//! 2019), the SII variant (§3.2), a Monte-Carlo estimator, leave-one-out,
-//! and the axiom checkers.
+//! structure ([`values`], DESIGN.md §10), the exact O(t·(d + n))-per-edit
+//! training-set mutation kernel built on the same structure ([`delta`],
+//! DESIGN.md §11), the O(2ⁿ) brute-force baseline it replaces (Eq. 3),
+//! the per-point KNN-Shapley baseline (Jia et al. 2019), the SII variant
+//! (§3.2), a Monte-Carlo estimator, leave-one-out, and the axiom
+//! checkers.
 
 pub mod axioms;
+pub mod delta;
 pub mod knn_shapley;
 pub mod loo;
 pub mod mc_sti;

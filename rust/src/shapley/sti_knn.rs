@@ -178,7 +178,12 @@ impl PrepScratch {
 /// column value of the point at rank r, i.e. φ_{r,r+1} in 1-based paper
 /// terms c[r] = φ_{(r+1)−1,(r+1)}; c[0] duplicates c[1] (column 1 has no
 /// upper-triangle entries, the value is never used for a pair).
-fn superdiagonal_into(u_sorted: &[f64], k: usize, c: &mut [f64]) {
+///
+/// `pub(crate)` so the delta repair kernel (`shapley::delta`) rebuilds
+/// post-edit column values through the EXACT same recursion — sharing
+/// this function is what makes repaired rows bit-match from-scratch
+/// prep rows.
+pub(crate) fn superdiagonal_into(u_sorted: &[f64], k: usize, c: &mut [f64]) {
     let n = u_sorted.len();
     debug_assert!(n >= 2 && c.len() == n);
     let nf = n as f64;

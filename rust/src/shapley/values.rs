@@ -87,11 +87,13 @@ impl Engine {
 #[derive(Clone, Debug)]
 pub struct ValueVector {
     n: usize,
-    /// Σ_p u_p(i) — the diagonal main terms (Eq. 4/5).
-    main: Vec<f64>,
+    /// Σ_p u_p(i) — the diagonal main terms (Eq. 4/5). `pub(crate)` so
+    /// the delta refold (`shapley::delta::refold_values`) applies the
+    /// same per-element additions as [`sweep_values`].
+    pub(crate) main: Vec<f64>,
     /// Σ_p Σ_{j≠i} φ_p[i,j] — the off-diagonal interaction row sums via
     /// the suffix-sum identity.
-    inter: Vec<f64>,
+    pub(crate) inter: Vec<f64>,
 }
 
 impl ValueVector {

@@ -31,8 +31,8 @@ fn help_lists_subcommands() {
     let (stdout, _, ok) = run(&["--help"]);
     assert!(ok);
     for sub in [
-        "value", "values", "analyze", "ksens", "mislabel", "serve", "session", "datasets",
-        "artifacts",
+        "value", "values", "analyze", "ksens", "mislabel", "serve", "mutate", "session",
+        "datasets", "artifacts",
     ] {
         assert!(stdout.contains(sub), "help missing {sub}: {stdout}");
     }
@@ -83,8 +83,20 @@ fn help_subcommand_prints_per_command_usage() {
 fn help_serve_documents_the_session_options() {
     let (stdout, _, ok) = run(&["help", "serve"]);
     assert!(ok);
-    for opt in ["NDJSON", "--restore", "--parallel-min", "--metric", "--engine", "--retain-rows"] {
+    for opt in [
+        "NDJSON", "--restore", "--parallel-min", "--metric", "--engine", "--retain-rows",
+        "--mutable",
+    ] {
         assert!(stdout.contains(opt), "help serve missing {opt}: {stdout}");
+    }
+}
+
+#[test]
+fn help_mutate_documents_the_edit_ops() {
+    let (stdout, _, ok) = run(&["help", "mutate"]);
+    assert!(ok);
+    for needle in ["--ops", "--drop-lowest", "remove:IDX", "relabel:IDX:LABEL", "add:dup"] {
+        assert!(stdout.contains(needle), "help mutate missing {needle}: {stdout}");
     }
 }
 
@@ -240,12 +252,15 @@ fn serve_completes_an_ingest_query_snapshot_shutdown_round_trip() {
 
     {
         let stdin = child.stdin.as_mut().unwrap();
+        // ping first: a load balancer health-checks before any ingest
+        writeln!(stdin, r#"{{"cmd":"ping"}}"#).unwrap();
         // moon is d=2: three test points, flattened features
         writeln!(
             stdin,
             r#"{{"cmd":"ingest","x":[0.1,0.2,1.0,-0.3,0.5,0.5],"y":[0,1,0]}}"#
         )
         .unwrap();
+        writeln!(stdin, r#"{{"cmd":"ping"}}"#).unwrap();
         writeln!(stdin, r#"{{"cmd":"query","i":0,"j":1}}"#).unwrap();
         writeln!(stdin, r#"{{"cmd":"topk","k":3,"by":"rowsum"}}"#).unwrap();
         writeln!(stdin, r#"{{"cmd":"stats"}}"#).unwrap();
@@ -265,19 +280,24 @@ fn serve_completes_an_ingest_query_snapshot_shutdown_round_trip() {
         .lines()
         .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("invalid NDJSON line {l:?}: {e}")))
         .collect();
-    assert_eq!(responses.len(), 6, "one response per command: {stdout}");
+    assert_eq!(responses.len(), 8, "one response per command: {stdout}");
     for r in &responses {
         assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
     }
-    assert_eq!(responses[0].get("ingested").unwrap().as_usize(), Some(3));
-    assert!(responses[1].get("value").unwrap().as_f64().is_some());
+    // ping: engine + n before any state, t counts after ingest
+    assert_eq!(responses[0].get("engine").unwrap().as_str(), Some("dense"));
+    assert_eq!(responses[0].get("n").unwrap().as_usize(), Some(30));
+    assert_eq!(responses[0].get("t").unwrap().as_usize(), Some(0));
+    assert_eq!(responses[1].get("ingested").unwrap().as_usize(), Some(3));
+    assert_eq!(responses[2].get("t").unwrap().as_usize(), Some(3));
+    assert!(responses[3].get("value").unwrap().as_f64().is_some());
     assert_eq!(
-        responses[2].get("points").unwrap().as_arr().unwrap().len(),
+        responses[4].get("points").unwrap().as_arr().unwrap().len(),
         3
     );
-    assert_eq!(responses[3].get("tests").unwrap().as_usize(), Some(3));
-    assert_eq!(responses[3].get("n").unwrap().as_usize(), Some(30));
-    assert_eq!(responses[5].get("shutdown").unwrap().as_bool(), Some(true));
+    assert_eq!(responses[5].get("tests").unwrap().as_usize(), Some(3));
+    assert_eq!(responses[5].get("n").unwrap().as_usize(), Some(30));
+    assert_eq!(responses[7].get("shutdown").unwrap().as_bool(), Some(true));
 
     // the snapshot the server wrote is inspectable offline
     let (stdout, stderr, ok) = run(&["session", "--file", snap.to_str().unwrap(), "--topk", "5"]);
@@ -423,6 +443,166 @@ fn serve_implicit_engine_serves_values_and_rejects_matrix_queries() {
     assert!(stderr.contains("implicit"), "unhelpful error: {stderr}");
 
     let _ = std::fs::remove_file(&snap);
+}
+
+#[test]
+fn serve_mutable_edits_snapshots_and_restores() {
+    use std::io::Write;
+    use stiknn::util::json::Json;
+
+    let snap = std::env::temp_dir().join(format!(
+        "stiknn_cli_serve_mutable_{}.snap",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&snap);
+
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3", "--mutable",
+        ])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --mutable");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(
+            stdin,
+            r#"{{"cmd":"ingest","x":[0.1,0.2,1.0,-0.3,0.5,0.5],"y":[0,1,0]}}"#
+        )
+        .unwrap();
+        writeln!(stdin, r#"{{"cmd":"add_train","x":[0.4,0.4],"y":1}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"relabel","i":0,"y":1}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"remove_train","i":2}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"query","i":0,"j":1}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"ping"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"snapshot","path":"{}"}}"#, snap.display()).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(
+        out.status.success(),
+        "serve --mutable failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let rs: Vec<Json> = stdout
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("invalid NDJSON line {l:?}: {e}")))
+        .collect();
+    assert_eq!(rs.len(), 8, "one response per command: {stdout}");
+    for r in &rs {
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    }
+    assert_eq!(rs[1].get("index").unwrap().as_usize(), Some(30));
+    assert_eq!(rs[1].get("n").unwrap().as_usize(), Some(31));
+    assert_eq!(rs[3].get("n").unwrap().as_usize(), Some(30));
+    assert_eq!(rs[3].get("mutations").unwrap().as_usize(), Some(3));
+    assert_eq!(rs[5].get("engine").unwrap().as_str(), Some("implicit"));
+    assert_eq!(rs[5].get("mutable").unwrap().as_bool(), Some(true));
+    assert_eq!(rs[5].get("n").unwrap().as_usize(), Some(30));
+
+    // the inspector reports the mutable state + mutation ledger
+    let (stdout, stderr, ok) = run(&["session", "--file", snap.to_str().unwrap(), "--topk", "3"]);
+    assert!(ok, "session inspect failed: {stderr}");
+    assert!(stdout.contains("mutable"), "{stdout}");
+    assert!(stdout.contains("mutation ledger"), "{stdout}");
+    assert!(stdout.contains("top-3"), "{stdout}");
+
+    // a mutable serve restores the edited session from the v3 snapshot
+    // (no dataset fingerprint can match an edited train set)
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3", "--mutable",
+            "--restore", snap.to_str().unwrap(),
+        ])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --mutable --restore");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(stdin, r#"{{"cmd":"ping"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"remove_train","i":0}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(
+        out.status.success(),
+        "restore failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let rs: Vec<Json> = stdout.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(rs[0].get("t").unwrap().as_usize(), Some(3), "{stdout}");
+    assert_eq!(rs[0].get("n").unwrap().as_usize(), Some(30));
+    // the ledger carried over: this is mutation #4
+    assert_eq!(rs[1].get("mutations").unwrap().as_usize(), Some(4));
+
+    // an IMMUTABLE serve must refuse the mutable snapshot with a pointer
+    let out = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--restore", snap.to_str().unwrap(),
+        ])
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn stiknn serve (immutable restore of mutable snapshot)");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("mutable"), "unhelpful error: {stderr}");
+
+    // --mutable contradicting an explicit dense engine is rejected
+    let out = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--mutable",
+            "--engine", "dense",
+        ])
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn stiknn serve --mutable --engine dense");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("implicit"), "unhelpful error: {stderr}");
+
+    let _ = std::fs::remove_file(&snap);
+}
+
+#[test]
+fn mutate_applies_ops_and_drops_lowest() {
+    let (stdout, stderr, ok) = run(&[
+        "mutate", "--dataset", "circle", "--n-train", "60", "--n-test", "15",
+        "--k", "3", "--ops", "add:dup:0,relabel:5:1,remove:3", "--drop-lowest", "2",
+        "--top", "5",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("mutable session"), "{stdout}");
+    assert!(stdout.contains("add"), "{stdout}");
+    assert!(stdout.contains("relabel"), "{stdout}");
+    assert!(stdout.contains("remove"), "{stdout}");
+    assert!(stdout.contains("drop"), "{stdout}");
+    assert!(stdout.contains("5 edit(s) applied"), "{stdout}");
+    assert!(stdout.contains("top-5"), "{stdout}");
+
+    // bad op strings are rejected with guidance
+    let (_, stderr, ok) = run(&[
+        "mutate", "--dataset", "circle", "--n-train", "30", "--n-test", "8",
+        "--ops", "explode:3",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("bad op"), "{stderr}");
 }
 
 #[test]

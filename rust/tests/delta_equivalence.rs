@@ -1,0 +1,486 @@
+//! Property tests for the delta subsystem (DESIGN.md §11): any
+//! interleaving of {add, remove, relabel, ingest} on a mutable session
+//! must leave it EXACTLY where a from-scratch session over the final
+//! training set (ingesting the same test stream) would be — bit-identical
+//! per-point values and retained-row queries, ≤ 1e-12 against the dense
+//! n×n reference — and bit-identical across repair worker counts.
+
+use stiknn::session::{Engine, SessionConfig, TopBy, ValuationSession};
+use stiknn::shapley::sti_knn::sti_knn;
+use stiknn::shapley::StiParams;
+use stiknn::util::rng::Rng;
+
+fn mutable_config(k: usize) -> SessionConfig {
+    SessionConfig::new(k)
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true)
+}
+
+fn random_problem(
+    seed: u64,
+    n: usize,
+    d: usize,
+    t: usize,
+) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    (
+        (0..n * d).map(|_| rng.normal() as f32).collect(),
+        (0..n).map(|_| rng.below(2) as i32).collect(),
+        (0..t * d).map(|_| rng.normal() as f32).collect(),
+        (0..t).map(|_| rng.below(2) as i32).collect(),
+    )
+}
+
+/// From-scratch comparator: a fresh mutable session over `train`,
+/// ingesting the whole accumulated test stream in one batch (per-element
+/// addition order is test order regardless of batching, so this is the
+/// canonical reference).
+fn fresh_session(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+) -> ValuationSession {
+    let mut s =
+        ValuationSession::new(train_x.to_vec(), train_y.to_vec(), d, mutable_config(k)).unwrap();
+    if !test_y.is_empty() {
+        s.ingest(test_x, test_y).unwrap();
+    }
+    s
+}
+
+/// Bitwise state equality: per-point values under both rankings, plus
+/// every retained-row pair query.
+fn assert_bit_equal(live: &ValuationSession, reference: &ValuationSession, tag: &str) {
+    let n = live.n();
+    assert_eq!(n, reference.n(), "{tag}: n");
+    assert_eq!(live.tests_seen(), reference.tests_seen(), "{tag}: tests");
+    if live.tests_seen() == 0 {
+        return;
+    }
+    for by in [TopBy::Main, TopBy::RowSum] {
+        let a = live.point_values(by).unwrap();
+        let b = reference.point_values(by).unwrap();
+        for i in 0..n {
+            assert_eq!(
+                a[i].to_bits(),
+                b[i].to_bits(),
+                "{tag}: {by:?}[{i}] {} vs {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            let a = live.cell(i, j).unwrap();
+            let b = reference.cell(i, j).unwrap();
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: cell({i},{j})");
+        }
+    }
+}
+
+/// ≤ 1e-12 agreement with the dense O(t·n²) engine on the same data.
+#[allow(clippy::too_many_arguments)]
+fn assert_matches_dense(
+    live: &ValuationSession,
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    k: usize,
+    tag: &str,
+) {
+    let m = sti_knn(train_x, train_y, d, test_x, test_y, &StiParams::new(k));
+    let n = train_y.len();
+    let main = live.point_values(TopBy::Main).unwrap();
+    let rowsum = live.point_values(TopBy::RowSum).unwrap();
+    for i in 0..n {
+        assert!(
+            (main[i] - m.get(i, i)).abs() < 1e-12,
+            "{tag}: main[{i}] {} vs {}",
+            main[i],
+            m.get(i, i)
+        );
+        let direct: f64 = m.row(i).iter().sum();
+        assert!(
+            (rowsum[i] - direct).abs() < 1e-12,
+            "{tag}: rowsum[{i}] {} vs {direct}",
+            rowsum[i]
+        );
+        for j in 0..n {
+            let c = live.cell(i, j).unwrap();
+            assert!(
+                (c - m.get(i, j)).abs() < 1e-12,
+                "{tag}: cell({i},{j}) {c} vs {}",
+                m.get(i, j)
+            );
+        }
+    }
+}
+
+#[test]
+fn mutable_session_without_edits_matches_plain_retained_implicit_bits() {
+    let (tx, ty, qx, qy) = random_problem(17, 16, 3, 11);
+    let plain_cfg = SessionConfig::new(4)
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true);
+    let mut plain = ValuationSession::new(tx.clone(), ty.clone(), 3, plain_cfg).unwrap();
+    let mut live = ValuationSession::new(tx, ty, 3, mutable_config(4)).unwrap();
+    for (lo, hi) in [(0usize, 1usize), (1, 6), (6, 11)] {
+        plain.ingest(&qx[lo * 3..hi * 3], &qy[lo..hi]).unwrap();
+        live.ingest(&qx[lo * 3..hi * 3], &qy[lo..hi]).unwrap();
+    }
+    assert_bit_equal(&live, &plain, "no-edit mutable vs plain retained");
+    for i in 0..16 {
+        let a = live.row(i).unwrap();
+        let b = plain.row(i).unwrap();
+        for j in 0..16 {
+            assert_eq!(a[j].to_bits(), b[j].to_bits(), "row({i})[{j}]");
+        }
+    }
+}
+
+#[test]
+fn single_edits_match_from_scratch_and_dense() {
+    let (tx, ty, qx, qy) = random_problem(23, 13, 2, 7);
+    let k = 3;
+
+    // --- add (including a duplicate-feature point: tie stress) ---
+    for (tag, new_x, new_y) in [
+        ("add-random", vec![0.3f32, -0.8], 1),
+        ("add-dup", tx[6 * 2..7 * 2].to_vec(), 0),
+    ] {
+        let mut live = ValuationSession::new(tx.clone(), ty.clone(), 2, mutable_config(k)).unwrap();
+        live.ingest(&qx, &qy).unwrap();
+        let id = live.add_train(&new_x, new_y).unwrap();
+        assert_eq!(id, 13);
+        assert_eq!(live.n(), 14);
+        assert_eq!(live.mutations().len(), 1);
+        let mut train_x = tx.clone();
+        train_x.extend_from_slice(&new_x);
+        let mut train_y = ty.clone();
+        train_y.push(new_y);
+        let reference = fresh_session(&train_x, &train_y, 2, &qx, &qy, k);
+        assert_bit_equal(&live, &reference, tag);
+        assert_matches_dense(&live, &train_x, &train_y, 2, &qx, &qy, k, tag);
+    }
+
+    // --- remove ---
+    let mut live = ValuationSession::new(tx.clone(), ty.clone(), 2, mutable_config(k)).unwrap();
+    live.ingest(&qx, &qy).unwrap();
+    live.remove_train(5).unwrap();
+    assert_eq!(live.n(), 12);
+    let mut train_x = tx.clone();
+    train_x.drain(5 * 2..6 * 2);
+    let mut train_y = ty.clone();
+    train_y.remove(5);
+    let reference = fresh_session(&train_x, &train_y, 2, &qx, &qy, k);
+    assert_bit_equal(&live, &reference, "remove");
+    assert_matches_dense(&live, &train_x, &train_y, 2, &qx, &qy, k, "remove");
+
+    // --- relabel ---
+    let mut live = ValuationSession::new(tx.clone(), ty.clone(), 2, mutable_config(k)).unwrap();
+    live.ingest(&qx, &qy).unwrap();
+    live.relabel_train(2, 1 - ty[2]).unwrap();
+    let mut train_y = ty.clone();
+    train_y[2] = 1 - ty[2];
+    let reference = fresh_session(&tx, &train_y, 2, &qx, &qy, k);
+    assert_bit_equal(&live, &reference, "relabel");
+    assert_matches_dense(&live, &tx, &train_y, 2, &qx, &qy, k, "relabel");
+}
+
+#[test]
+fn edits_before_any_ingest_work() {
+    let (tx, ty, qx, qy) = random_problem(31, 10, 2, 5);
+    let mut live = ValuationSession::new(tx.clone(), ty.clone(), 2, mutable_config(2)).unwrap();
+    // edit an EMPTY session, then ingest: repairs over zero rows
+    live.remove_train(0).unwrap();
+    live.add_train(&[0.5, 0.5], 1).unwrap();
+    live.ingest(&qx, &qy).unwrap();
+    let mut train_x = tx.clone();
+    train_x.drain(0..2);
+    train_x.extend_from_slice(&[0.5, 0.5]);
+    let mut train_y = ty.clone();
+    train_y.remove(0);
+    train_y.push(1);
+    let reference = fresh_session(&train_x, &train_y, 2, &qx, &qy, 2);
+    assert_bit_equal(&live, &reference, "edit-then-first-ingest");
+}
+
+/// The headline property: random interleavings of
+/// {add, remove, relabel, ingest} — including duplicate-distance points
+/// and k-boundary crossings — end (and stay, at every checkpoint)
+/// bit-identical to from-scratch over the evolving train set.
+#[test]
+fn random_interleavings_match_from_scratch() {
+    let d = 2;
+    let k = 3;
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(0xDE17A + seed);
+        let (tx, ty, _, _) = random_problem(seed, 12, d, 1);
+        let mut train_x = tx;
+        let mut train_y = ty;
+        let mut test_x: Vec<f32> = Vec::new();
+        let mut test_y: Vec<i32> = Vec::new();
+        let mut live = ValuationSession::new(
+            train_x.clone(),
+            train_y.clone(),
+            d,
+            mutable_config(k),
+        )
+        .unwrap();
+
+        for step in 0..24 {
+            let n = train_y.len();
+            match rng.below(4) {
+                0 => {
+                    // add: half the time a DUPLICATE of an existing row
+                    // (duplicate distances → tie-break stress)
+                    let (x, y) = if rng.below(2) == 0 {
+                        let src = rng.below(n);
+                        (
+                            train_x[src * d..(src + 1) * d].to_vec(),
+                            rng.below(2) as i32,
+                        )
+                    } else {
+                        (
+                            (0..d).map(|_| rng.normal() as f32).collect(),
+                            rng.below(2) as i32,
+                        )
+                    };
+                    let id = live.add_train(&x, y).unwrap();
+                    assert_eq!(id, n);
+                    train_x.extend_from_slice(&x);
+                    train_y.push(y);
+                }
+                1 => {
+                    // remove, unless that would cross the k/2 floor —
+                    // then the edit must FAIL cleanly and change nothing
+                    let i = rng.below(n);
+                    if n - 1 >= k && n - 1 >= 2 {
+                        live.remove_train(i).unwrap();
+                        train_x.drain(i * d..(i + 1) * d);
+                        train_y.remove(i);
+                    } else {
+                        let before = live.point_values(TopBy::RowSum);
+                        assert!(live.remove_train(i).is_err(), "seed={seed} step={step}");
+                        assert_eq!(
+                            live.point_values(TopBy::RowSum),
+                            before,
+                            "failed edit must not change state"
+                        );
+                    }
+                }
+                2 => {
+                    let i = rng.below(n);
+                    let y = rng.below(2) as i32;
+                    live.relabel_train(i, y).unwrap();
+                    train_y[i] = y;
+                }
+                _ => {
+                    let batch = 1 + rng.below(3);
+                    let bx: Vec<f32> =
+                        (0..batch * d).map(|_| rng.normal() as f32).collect();
+                    let by: Vec<i32> = (0..batch).map(|_| rng.below(2) as i32).collect();
+                    live.ingest(&bx, &by).unwrap();
+                    test_x.extend_from_slice(&bx);
+                    test_y.extend_from_slice(&by);
+                }
+            }
+            // checkpoint every few steps (and always at the end)
+            if step % 6 == 5 || step == 23 {
+                let reference =
+                    fresh_session(&train_x, &train_y, d, &test_x, &test_y, k);
+                assert_bit_equal(&live, &reference, &format!("seed={seed} step={step}"));
+                if !test_y.is_empty() {
+                    assert_matches_dense(
+                        &live,
+                        &train_x,
+                        &train_y,
+                        d,
+                        &test_x,
+                        &test_y,
+                        k,
+                        &format!("dense seed={seed} step={step}"),
+                    );
+                }
+            }
+        }
+        assert_eq!(live.mutations().len() as u64, {
+            // every successful edit got a monotone seq
+            live.mutations().last().map(|m| m.seq + 1).unwrap_or(0)
+        });
+    }
+}
+
+#[test]
+fn k_boundary_floor_is_enforced() {
+    // n = 4, k = 3: one removal is legal (n→3 == k), the next must fail
+    let (tx, ty, qx, qy) = random_problem(41, 4, 2, 6);
+    let mut live = ValuationSession::new(tx, ty, 2, mutable_config(3)).unwrap();
+    live.ingest(&qx, &qy).unwrap();
+    live.remove_train(0).unwrap();
+    assert_eq!(live.n(), 3);
+    let err = live.remove_train(0).unwrap_err().to_string();
+    assert!(err.contains("below k"), "unhelpful error: {err}");
+    // the 2-point floor, independent of k
+    let (tx, ty, _, _) = random_problem(43, 3, 2, 1);
+    let mut live = ValuationSession::new(tx, ty, 2, mutable_config(1)).unwrap();
+    live.remove_train(0).unwrap();
+    let err = live.remove_train(0).unwrap_err().to_string();
+    assert!(err.contains("at least 2"), "unhelpful error: {err}");
+}
+
+#[test]
+fn repairs_are_bit_identical_across_worker_counts() {
+    let (tx, ty, qx, qy) = random_problem(53, 18, 3, 20);
+    // parallel_min(1) forces the repair fan-out onto the worker pool;
+    // the high-parallel_min session repairs single-threaded
+    let serial_cfg = mutable_config(4).with_parallel_min(10_000);
+    let fanout_cfg = mutable_config(4).with_parallel_min(1).with_workers(3);
+    let mut serial = ValuationSession::new(tx.clone(), ty.clone(), 3, serial_cfg).unwrap();
+    let mut fanout = ValuationSession::new(tx, ty, 3, fanout_cfg).unwrap();
+    for s in [&mut serial, &mut fanout] {
+        s.ingest(&qx, &qy).unwrap();
+        s.add_train(&[0.1, 0.2, 0.3], 1).unwrap();
+        s.remove_train(4).unwrap();
+        s.relabel_train(2, 1).unwrap();
+    }
+    assert_bit_equal(&fanout, &serial, "worker fan-out");
+}
+
+#[test]
+fn mutation_edits_are_refused_on_immutable_sessions() {
+    let (tx, ty, _, _) = random_problem(61, 8, 2, 1);
+    // plain implicit+retained (not mutable)
+    let cfg = SessionConfig::new(2)
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true);
+    let mut s = ValuationSession::new(tx.clone(), ty.clone(), 2, cfg).unwrap();
+    for err in [
+        s.add_train(&[0.0, 0.0], 0).unwrap_err().to_string(),
+        s.remove_train(0).unwrap_err().to_string(),
+        s.relabel_train(0, 1).unwrap_err().to_string(),
+    ] {
+        assert!(err.contains("mutable"), "unhelpful error: {err}");
+    }
+    // config validation: mutable without implicit+retained is rejected
+    assert!(ValuationSession::new(
+        tx.clone(),
+        ty.clone(),
+        2,
+        SessionConfig::new(2).with_mutable(true)
+    )
+    .is_err());
+    assert!(ValuationSession::new(
+        tx,
+        ty,
+        2,
+        SessionConfig::new(2)
+            .with_engine(Engine::Implicit)
+            .with_mutable(true)
+    )
+    .is_err());
+}
+
+#[test]
+fn bad_edit_inputs_are_rejected_cleanly() {
+    let (tx, ty, qx, qy) = random_problem(67, 9, 2, 4);
+    let mut s = ValuationSession::new(tx, ty, 2, mutable_config(2)).unwrap();
+    s.ingest(&qx, &qy).unwrap();
+    let before = s.point_values(TopBy::RowSum);
+    assert!(s.add_train(&[0.1], 0).is_err(), "wrong d");
+    assert!(s.add_train(&[f32::NAN, 0.0], 0).is_err(), "NaN feature");
+    assert!(s.add_train(&[f32::INFINITY, 0.0], 0).is_err(), "inf feature");
+    assert!(s.remove_train(9).is_err(), "index out of range");
+    assert!(s.relabel_train(9, 0).is_err(), "index out of range");
+    assert_eq!(s.point_values(TopBy::RowSum), before, "state unchanged");
+    assert!(s.mutations().is_empty(), "failed edits must not be ledgered");
+}
+
+#[test]
+fn v3_snapshot_roundtrip_mid_interleaving_is_bit_identical() {
+    let (tx, ty, qx, qy) = random_problem(71, 12, 2, 10);
+    let k = 3;
+    let path = std::env::temp_dir().join(format!(
+        "stiknn_delta_roundtrip_{}.snap",
+        std::process::id()
+    ));
+
+    // uninterrupted: ingest → edits → ingest → edit
+    let mut whole = ValuationSession::new(tx.clone(), ty.clone(), 2, mutable_config(k)).unwrap();
+    whole.ingest(&qx[..6 * 2], &qy[..6]).unwrap();
+    whole.add_train(&[0.7, -0.7], 1).unwrap();
+    whole.remove_train(3).unwrap();
+    whole.ingest(&qx[6 * 2..], &qy[6..]).unwrap();
+    whole.relabel_train(0, 1).unwrap();
+
+    // interrupted twin: snapshot + restore between the edits
+    let mut first = ValuationSession::new(tx, ty, 2, mutable_config(k)).unwrap();
+    first.ingest(&qx[..6 * 2], &qy[..6]).unwrap();
+    first.add_train(&[0.7, -0.7], 1).unwrap();
+    first.remove_train(3).unwrap();
+    first.save(&path).unwrap();
+    let mut resumed = ValuationSession::restore_mutable(&path, mutable_config(k)).unwrap();
+    assert_eq!(resumed.mutations(), first.mutations());
+    assert_eq!(resumed.tests_seen(), 6);
+    resumed.ingest(&qx[6 * 2..], &qy[6..]).unwrap();
+    resumed.relabel_train(0, 1).unwrap();
+    assert_bit_equal(&resumed, &whole, "snapshot mid-interleaving");
+    // ledgers continue across the restore
+    assert_eq!(resumed.mutations().len(), 3);
+    assert_eq!(resumed.mutations().last().unwrap().seq, 2);
+
+    // a v3 mutable snapshot is refused by the immutable restore path...
+    first.save(&path).unwrap();
+    let (tx2, ty2, _, _) = random_problem(71, 12, 2, 1);
+    let err = ValuationSession::restore(&path, tx2, ty2, 2, SessionConfig::new(k))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("restore_mutable") || err.contains("mutable"), "{err}");
+
+    // ...and restore_mutable refuses a NON-mutable snapshot
+    let (tx3, ty3, qx3, qy3) = random_problem(73, 8, 2, 3);
+    let mut plain = ValuationSession::new(tx3, ty3, 2, SessionConfig::new(2)).unwrap();
+    plain.ingest(&qx3, &qy3).unwrap();
+    plain.save(&path).unwrap();
+    let err = ValuationSession::restore_mutable(&path, mutable_config(2))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not a mutable"), "{err}");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn mutable_snapshot_header_reports_mutable_and_ledger() {
+    let (tx, ty, qx, qy) = random_problem(79, 10, 2, 5);
+    let path = std::env::temp_dir().join(format!(
+        "stiknn_delta_header_{}.snap",
+        std::process::id()
+    ));
+    let mut s = ValuationSession::new(tx, ty, 2, mutable_config(3)).unwrap();
+    s.ingest(&qx, &qy).unwrap();
+    s.add_train(&[0.0, 0.0], 1).unwrap();
+    s.relabel_train(1, 0).unwrap();
+    s.save(&path).unwrap();
+    let snap = stiknn::session::store::read_snapshot(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert!(snap.header.mutable);
+    assert_eq!(snap.header.engine, Engine::Implicit);
+    assert_eq!(snap.header.n, 11);
+    assert_eq!(snap.header.tests, 5);
+    assert_eq!(snap.mutations.len(), 2);
+    assert_eq!(
+        snap.mutations[0].op,
+        stiknn::session::MutationOp::Add
+    );
+    assert_eq!(snap.mutations[1].op, stiknn::session::MutationOp::Relabel);
+    // values are readable straight off the snapshot
+    assert!(snap.point_values(TopBy::Main).unwrap().len() == 11);
+}

@@ -1,0 +1,152 @@
+//! Snapshot-store corruption coverage (file-level): a truncated file, a
+//! flipped checksum byte, and a wrong magic must each produce an
+//! actionable error — no panic, and no partially-constructed session.
+
+use std::path::{Path, PathBuf};
+
+use stiknn::session::store::{fnv1a, read_snapshot};
+use stiknn::session::{Engine, SessionConfig, ValuationSession};
+use stiknn::util::rng::Rng;
+
+fn temp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("stiknn_corrupt_{}_{tag}.snap", std::process::id()))
+}
+
+fn problem(seed: u64, n: usize, t: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    (
+        (0..n * 2).map(|_| rng.normal() as f32).collect(),
+        (0..n).map(|_| rng.below(2) as i32).collect(),
+        (0..t * 2).map(|_| rng.normal() as f32).collect(),
+        (0..t).map(|_| rng.below(2) as i32).collect(),
+    )
+}
+
+/// Write one snapshot of each payload kind and return the paths.
+fn write_snapshots() -> Vec<(&'static str, PathBuf, Vec<f32>, Vec<i32>)> {
+    let mut out = Vec::new();
+    // dense
+    let (tx, ty, qx, qy) = problem(5, 10, 4);
+    let mut dense = ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(3)).unwrap();
+    dense.ingest(&qx, &qy).unwrap();
+    let p = temp("dense");
+    dense.save(&p).unwrap();
+    out.push(("dense", p, tx, ty));
+    // implicit
+    let (tx, ty, qx, qy) = problem(7, 10, 4);
+    let cfg = SessionConfig::new(3).with_engine(Engine::Implicit);
+    let mut imp = ValuationSession::new(tx.clone(), ty.clone(), 2, cfg).unwrap();
+    imp.ingest(&qx, &qy).unwrap();
+    let p = temp("implicit");
+    imp.save(&p).unwrap();
+    out.push(("implicit", p, tx, ty));
+    // mutable (v3, with edits so the mutation ledger is non-empty)
+    let (tx, ty, qx, qy) = problem(9, 10, 4);
+    let cfg = SessionConfig::new(3)
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true);
+    let mut m = ValuationSession::new(tx.clone(), ty.clone(), 2, cfg).unwrap();
+    m.ingest(&qx, &qy).unwrap();
+    m.add_train(&[0.5, -0.5], 1).unwrap();
+    m.relabel_train(0, 1).unwrap();
+    let p = temp("mutable");
+    m.save(&p).unwrap();
+    out.push(("mutable", p, tx, ty));
+    out
+}
+
+fn restore_err(kind: &str, path: &Path, tx: &[f32], ty: &[i32]) -> String {
+    if kind == "mutable" {
+        let cfg = SessionConfig::new(3)
+            .with_engine(Engine::Implicit)
+            .with_retained_rows(true)
+            .with_mutable(true);
+        ValuationSession::restore_mutable(path, cfg)
+            .err()
+            .map(|e| format!("{e:#}"))
+            .unwrap_or_default()
+    } else {
+        let cfg = if kind == "implicit" {
+            SessionConfig::new(3).with_engine(Engine::Implicit)
+        } else {
+            SessionConfig::new(3)
+        };
+        ValuationSession::restore(path, tx.to_vec(), ty.to_vec(), 2, cfg)
+            .err()
+            .map(|e| format!("{e:#}"))
+            .unwrap_or_default()
+    }
+}
+
+#[test]
+fn truncated_files_fail_actionably_for_every_payload_kind() {
+    for (kind, path, tx, ty) in write_snapshots() {
+        let bytes = std::fs::read(&path).unwrap();
+        for keep in [bytes.len() - 1, bytes.len() / 2, 30, 5] {
+            std::fs::write(&path, &bytes[..keep]).unwrap();
+            let err = restore_err(kind, &path, &tx, &ty);
+            assert!(
+                !err.is_empty(),
+                "{kind}: truncation to {keep} bytes must fail"
+            );
+            assert!(
+                err.contains("snapshot") || err.contains("checksum") || err.contains("short"),
+                "{kind}/{keep}: unhelpful error: {err}"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn flipped_bytes_fail_the_checksum_for_every_payload_kind() {
+    for (kind, path, tx, ty) in write_snapshots() {
+        let bytes = std::fs::read(&path).unwrap();
+        // flip a byte in the checksum trailer itself, and one mid-payload
+        for flip_at in [bytes.len() - 3, bytes.len() / 2] {
+            let mut bad = bytes.clone();
+            bad[flip_at] ^= 0x10;
+            std::fs::write(&path, &bad).unwrap();
+            let err = restore_err(kind, &path, &tx, &ty);
+            assert!(
+                err.contains("checksum"),
+                "{kind}/flip@{flip_at}: expected a checksum error, got: {err}"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn wrong_magic_fails_actionably_even_with_a_valid_checksum() {
+    for (kind, path, tx, ty) in write_snapshots() {
+        let bytes = std::fs::read(&path).unwrap();
+        // corrupt the magic AND refresh the checksum so the magic check
+        // itself (not the checksum) must catch it
+        let mut bad = bytes.clone();
+        bad[0] = b'Z';
+        let body_len = bad.len() - 8;
+        let sum = fnv1a(&bad[..body_len]).to_le_bytes();
+        bad[body_len..].copy_from_slice(&sum);
+        std::fs::write(&path, &bad).unwrap();
+        let err = restore_err(kind, &path, &tx, &ty);
+        assert!(
+            err.contains("magic"),
+            "{kind}: expected a magic error, got: {err}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn garbage_and_missing_files_fail_without_panicking() {
+    let path = temp("garbage");
+    std::fs::write(&path, b"not a snapshot at all").unwrap();
+    let err = read_snapshot(&path).unwrap_err().to_string();
+    assert!(err.contains("snapshot"), "{err}");
+    let _ = std::fs::remove_file(&path);
+    // missing file: io error with the path in context
+    let err = read_snapshot(&path).err().map(|e| format!("{e:#}")).unwrap();
+    assert!(err.contains("reading snapshot"), "{err}");
+}
