@@ -50,7 +50,9 @@ pub fn acquisition_curve(
 pub fn value_order(ds: &Dataset, seed_size: usize, k: usize) -> Vec<usize> {
     let values = knn_shapley(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, k);
     let mut pool: Vec<usize> = (seed_size..ds.n_train()).collect();
-    pool.sort_by(|&a, &b| values[b].partial_cmp(&values[a]).unwrap());
+    // total order per the session::top_k_of convention — a NaN value
+    // must reorder deterministically, never panic the acquisition loop
+    pool.sort_by(|&a, &b| values[b].total_cmp(&values[a]).then(a.cmp(&b)));
     pool
 }
 

@@ -91,8 +91,10 @@ pub fn mislabel_scores(phi: &Matrix, train_y: &[i32], classes: usize) -> Mislabe
         }
         margins[i] = best_other - own;
     }
+    // total_cmp, not partial_cmp().unwrap(): a NaN margin (degenerate
+    // correlation input) must not panic the detector mid-report
     let mut flagged: Vec<usize> = (0..n).filter(|&i| margins[i] > 0.0).collect();
-    flagged.sort_by(|&a, &b| margins[b].partial_cmp(&margins[a]).unwrap());
+    flagged.sort_by(|&a, &b| margins[b].total_cmp(&margins[a]).then(a.cmp(&b)));
     MislabelReport { margins, flagged }
 }
 
@@ -176,7 +178,7 @@ pub fn top_prevalence_recall(margins: &[f64], truth: &[usize]) -> f64 {
         return f64::NAN;
     }
     let mut idx: Vec<usize> = (0..margins.len()).collect();
-    idx.sort_by(|&a, &b| margins[b].partial_cmp(&margins[a]).unwrap());
+    idx.sort_by(|&a, &b| margins[b].total_cmp(&margins[a]).then(a.cmp(&b)));
     let top: std::collections::HashSet<usize> = idx.into_iter().take(truth.len()).collect();
     truth.iter().filter(|i| top.contains(i)).count() as f64 / truth.len() as f64
 }
@@ -287,5 +289,16 @@ mod tests {
         let margins = vec![0.9, -0.5, 0.8, -0.3];
         assert_eq!(auc(&margins, &[0, 2]), 1.0);
         assert_eq!(auc(&margins, &[1, 3]), 0.0);
+    }
+
+    #[test]
+    fn top_prevalence_recall_with_nan_margins_is_deterministic() {
+        // a NaN margin outranks everything under the total order; the
+        // ranking must neither panic nor depend on input permutation
+        let margins = vec![0.1, f64::NAN, 0.9, 0.2];
+        let r = top_prevalence_recall(&margins, &[1, 2]);
+        assert!((r - 1.0).abs() < 1e-12, "{r}");
+        let r = top_prevalence_recall(&margins, &[0, 3]);
+        assert_eq!(r, 0.0);
     }
 }

@@ -148,17 +148,22 @@ pub fn argmin_by_value(values: &[f64]) -> usize {
 }
 
 /// Order train indices by a value vector, ascending (lowest value first —
-/// "remove harmful/useless points first").
+/// "remove harmful/useless points first"). Total order + index tiebreak
+/// (the `session::top_k_of` convention): `partial_cmp().unwrap()` here
+/// would PANIC the analysis on the first NaN value a degenerate dataset
+/// produces, and these orders drive removal curves where a panic aborts
+/// the whole experiment.
 pub fn order_by_value_asc(values: &[f64]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..values.len()).collect();
-    idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+    idx.sort_by(|&a, &b| values[a].total_cmp(&values[b]).then(a.cmp(&b)));
     idx
 }
 
-/// Order descending (highest value first — adversarial removal).
+/// Order descending (highest value first — adversarial removal). Sorted
+/// directly (not `asc` reversed) so ties still break by LOWEST index.
 pub fn order_by_value_desc(values: &[f64]) -> Vec<usize> {
-    let mut idx = order_by_value_asc(values);
-    idx.reverse();
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[b].total_cmp(&values[a]).then(a.cmp(&b)));
     idx
 }
 
@@ -319,5 +324,18 @@ mod tests {
             curve_area(&low_first) > curve_area(&high_first),
             "low-value-first should retain accuracy longer"
         );
+    }
+
+    #[test]
+    fn value_orders_survive_nan_without_panicking_or_reordering_finite_points() {
+        // NaN values land deterministically at the TOP of the total order
+        // (past +∞): last in asc, first in desc — never a panic, and the
+        // finite points keep their relative order
+        let vals = [0.5, f64::NAN, -1.0, 0.5];
+        assert_eq!(order_by_value_asc(&vals), vec![2, 0, 3, 1]);
+        assert_eq!(order_by_value_desc(&vals), vec![1, 0, 3, 2]);
+        assert_eq!(argmin_by_value(&vals), 2);
+        // an all-NaN vector is still a deterministic permutation
+        assert_eq!(order_by_value_asc(&[f64::NAN, f64::NAN]), vec![0, 1]);
     }
 }

@@ -27,8 +27,24 @@ pub fn write_values(path: &Path, header: &str, values: &[f64]) -> std::io::Resul
 }
 
 /// Read a numeric CSV with the last column as integer label.
-/// Returns (features row-major, labels, d). Skips a header row if the
-/// first field of the first line is not numeric.
+/// Returns (features row-major, labels, d).
+///
+/// Header handling: the FIRST line is a header iff its LAST field (the
+/// label column) fails to parse as a number. Keying on the label column
+/// rather than the first field means a genuine header whose first
+/// column name is numeric (`1,x2,label`) is not mis-eaten as a data
+/// row, while a data row with a typo in a feature field (`1.0,2.O,0`)
+/// still fails loudly with its line number instead of being silently
+/// swallowed as a "header". An all-numeric header (`1,2,3`) is
+/// indistinguishable from data and must be removed by hand.
+///
+/// Labels are INTEGERS: `2` and `2.0` are accepted, `2.7` is rejected
+/// as non-integral and values outside i32 range as out-of-range — a
+/// `parse::<f32>() as i32` would silently truncate the former and
+/// saturate the latter, corrupting every class-dependent value the
+/// pipeline computes from the file. Features must be finite f32s (an
+/// over-range `1e39` parses to ∞ and would poison every distance).
+/// Every rejection carries the 1-based line number.
 pub fn read_labeled(path: &Path) -> std::io::Result<(Vec<f32>, Vec<i32>, usize)> {
     let f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut xs: Vec<f32> = Vec::new();
@@ -41,33 +57,57 @@ pub fn read_labeled(path: &Path) -> std::io::Result<(Vec<f32>, Vec<i32>, usize)>
             continue;
         }
         let fields: Vec<&str> = line.split(',').collect();
+        let last = fields.last().expect("split yields at least one field");
+        if lineno == 0 && last.trim().parse::<f64>().is_err() {
+            continue; // header
+        }
         if fields.len() < 2 {
             return Err(bad(lineno, "need at least one feature and a label"));
-        }
-        if lineno == 0 && fields[0].trim().parse::<f64>().is_err() {
-            continue; // header
         }
         let row_d = fields.len() - 1;
         if d == 0 {
             d = row_d;
         } else if row_d != d {
-            return Err(bad(lineno, "inconsistent column count"));
+            return Err(bad(
+                lineno,
+                &format!("inconsistent column count ({} vs {} before)", row_d + 1, d + 1),
+            ));
         }
         for v in &fields[..row_d] {
-            xs.push(
-                v.trim()
-                    .parse::<f32>()
-                    .map_err(|e| bad(lineno, &format!("feature: {e}")))?,
-            );
-        }
-        ys.push(
-            fields[row_d]
+            let x = v
                 .trim()
                 .parse::<f32>()
-                .map_err(|e| bad(lineno, &format!("label: {e}")))? as i32,
-        );
+                .map_err(|e| bad(lineno, &format!("feature: {e}")))?;
+            if !x.is_finite() {
+                return Err(bad(
+                    lineno,
+                    &format!("feature '{}' is not a finite f32", v.trim()),
+                ));
+            }
+            xs.push(x);
+        }
+        ys.push(parse_label(fields[row_d], lineno)?);
     }
     Ok((xs, ys, d))
+}
+
+/// One class label: an integer, possibly written as `2.0`, in i32 range.
+fn parse_label(field: &str, lineno: usize) -> std::io::Result<i32> {
+    let t = field.trim();
+    if let Ok(v) = t.parse::<i32>() {
+        return Ok(v);
+    }
+    match t.parse::<f64>() {
+        Ok(f) if f.fract() == 0.0 && (i32::MIN as f64..=i32::MAX as f64).contains(&f) => {
+            Ok(f as i32)
+        }
+        Ok(f) if f.is_finite() && f.fract() != 0.0 => Err(bad(
+            lineno,
+            &format!("label '{t}' is not an integer (class labels must be integral)"),
+        )),
+        Ok(_) => Err(bad(lineno, &format!("label '{t}' is out of i32 range"))),
+        Err(e) => Err(bad(lineno, &format!("label: {e}"))),
+    }
 }
 
 fn bad(lineno: usize, msg: &str) -> std::io::Error {
@@ -123,6 +163,70 @@ mod tests {
     fn read_labeled_rejects_ragged_rows() {
         let p = tmp("bad.csv");
         std::fs::write(&p, "1.0,2.0,0\n3.0,1\n").unwrap();
-        assert!(read_labeled(&p).is_err());
+        let err = read_labeled(&p).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("column count"), "{err}");
+    }
+
+    #[test]
+    fn header_with_numeric_first_field_is_not_eaten_as_data() {
+        // `1,x2,label` is a header (its label column is not a number)
+        // even though its first field parses — the old first-field-only
+        // heuristic read it as a data row and failed on 'x2'.
+        let p = tmp("numhdr.csv");
+        std::fs::write(&p, "1,x2,label\n1.0,2.0,0\n3.0,4.0,1\n").unwrap();
+        let (xs, ys, d) = read_labeled(&p).unwrap();
+        assert_eq!((xs, ys, d), (vec![1.0, 2.0, 3.0, 4.0], vec![0, 1], 2));
+    }
+
+    #[test]
+    fn corrupt_first_data_row_errors_instead_of_passing_as_header() {
+        // a feature typo on line 1 of a headerless file must be a
+        // line-numbered error, not a silently swallowed "header" (the
+        // label column is numeric, so this cannot be a header)
+        let p = tmp("typo1.csv");
+        std::fs::write(&p, "1.0,2.O,0\n3.0,4.0,1\n").unwrap();
+        let err = read_labeled(&p).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("feature"), "{err}");
+    }
+
+    #[test]
+    fn non_integral_label_is_rejected_with_line_number() {
+        let p = tmp("fraclabel.csv");
+        std::fs::write(&p, "x,label\n1.0,0\n2.0,2.7\n").unwrap();
+        let err = read_labeled(&p).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("2.7"), "{err}");
+        assert!(err.contains("not an integer"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_label_is_rejected_not_saturated() {
+        let p = tmp("hugelabel.csv");
+        std::fs::write(&p, "1.0,3000000000\n").unwrap();
+        let err = read_labeled(&p).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("out of i32 range"), "{err}");
+    }
+
+    #[test]
+    fn float_written_integral_labels_are_accepted() {
+        let p = tmp("floatint.csv");
+        std::fs::write(&p, "1.0,0.0\n2.0,1.0\n").unwrap();
+        let (_, ys, _) = read_labeled(&p).unwrap();
+        assert_eq!(ys, vec![0, 1]);
+    }
+
+    #[test]
+    fn non_finite_features_are_rejected() {
+        let p = tmp("inffeat.csv");
+        // 1e39 overflows f32 to ∞ on parse; nan parses "successfully" too
+        for body in ["1e39,0\n", "nan,0\n"] {
+            std::fs::write(&p, body).unwrap();
+            let err = read_labeled(&p).unwrap_err().to_string();
+            assert!(err.contains("line 1"), "{body}: {err}");
+            assert!(err.contains("finite"), "{body}: {err}");
+        }
     }
 }

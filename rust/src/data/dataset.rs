@@ -1,5 +1,8 @@
 //! The dataset container shared by every engine and the coordinator.
 
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
 /// A labeled dataset split into train and test parts. Features are
 /// row-major f32 (the dtype of the XLA artifacts); labels are i32 class
 /// ids 0..classes.
@@ -15,6 +18,62 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Build a dataset from a labeled CSV file
+    /// ([`crate::data::csv::read_labeled`]: numeric features, last
+    /// column an integer class label, optional header). The LAST
+    /// `n_test` rows become the test split (0 = one fifth, at least 1);
+    /// `n_train` rows immediately before it train (0 = everything
+    /// else). Labels must be non-negative class ids; `classes` is
+    /// max label + 1. All malformed-file failures carry the CSV line
+    /// number from the reader.
+    pub fn from_labeled_csv(path: &Path, n_train: usize, n_test: usize) -> Result<Dataset> {
+        let (xs, ys, d) = crate::data::csv::read_labeled(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rows = ys.len();
+        ensure!(
+            rows >= 2 && d >= 1,
+            "{}: need at least 2 data rows with at least 1 feature column",
+            path.display()
+        );
+        let min_label = *ys.iter().min().expect("rows >= 2");
+        ensure!(
+            min_label >= 0,
+            "{}: labels must be non-negative class ids (found {min_label})",
+            path.display()
+        );
+        let max_label = *ys.iter().max().expect("rows >= 2");
+        let classes = (max_label as usize + 1).max(2);
+        let n_test = if n_test == 0 { (rows / 5).max(1) } else { n_test };
+        ensure!(
+            n_test < rows,
+            "{}: test split ({n_test}) must leave training rows (file has {rows})",
+            path.display()
+        );
+        let test_lo = rows - n_test;
+        let n_train = if n_train == 0 { test_lo } else { n_train };
+        ensure!(
+            n_train <= test_lo,
+            "{}: n_train + n_test = {} exceeds the {rows} data rows",
+            path.display(),
+            n_train + n_test
+        );
+        let train_lo = test_lo - n_train;
+        let ds = Dataset {
+            name: format!("csv:{}", path.display()),
+            d,
+            classes,
+            train_x: xs[train_lo * d..test_lo * d].to_vec(),
+            train_y: ys[train_lo..test_lo].to_vec(),
+            test_x: xs[test_lo * d..].to_vec(),
+            test_y: ys[test_lo..].to_vec(),
+        };
+        // Every validate() invariant is already guaranteed above (label
+        // range, finite features via the reader, shapes by slicing), so
+        // this cannot panic on user input — it guards this constructor.
+        ds.validate();
+        Ok(ds)
+    }
+
     pub fn n_train(&self) -> usize {
         self.train_y.len()
     }
@@ -149,6 +208,38 @@ mod tests {
         assert_eq!(ds.train_row(1), &[1.0, 0.0]);
         assert_eq!(ds.test_row(0), &[0.1, 0.1]);
         assert_eq!(ds.train_class_counts(), vec![2, 1]);
+    }
+
+    #[test]
+    fn from_labeled_csv_splits_tail_as_test() {
+        let p = std::env::temp_dir().join(format!(
+            "stiknn_dataset_csv_{}.csv",
+            std::process::id()
+        ));
+        let mut body = String::from("x1,x2,label\n");
+        for i in 0..10 {
+            body.push_str(&format!("{}.0,{}.5,{}\n", i, i, i % 2));
+        }
+        std::fs::write(&p, body).unwrap();
+        // explicit split
+        let ds = Dataset::from_labeled_csv(&p, 6, 3).unwrap();
+        assert_eq!((ds.n_train(), ds.n_test(), ds.d, ds.classes), (6, 3, 2, 2));
+        // the tail rows are the test split
+        assert_eq!(ds.test_y, vec![1, 0, 1]);
+        ds.validate();
+        // default split: 1/5 test, rest train
+        let ds = Dataset::from_labeled_csv(&p, 0, 0).unwrap();
+        assert_eq!((ds.n_train(), ds.n_test()), (8, 2));
+        // oversized splits are clean errors
+        let err = Dataset::from_labeled_csv(&p, 9, 3).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        let err = Dataset::from_labeled_csv(&p, 0, 10).unwrap_err().to_string();
+        assert!(err.contains("leave training rows"), "{err}");
+        // negative labels cannot be class ids
+        std::fs::write(&p, "1.0,-1\n2.0,0\n").unwrap();
+        let err = Dataset::from_labeled_csv(&p, 0, 0).unwrap_err().to_string();
+        assert!(err.contains("non-negative"), "{err}");
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

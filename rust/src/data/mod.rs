@@ -12,3 +12,22 @@ pub mod synth;
 
 pub use dataset::Dataset;
 pub use registry::{load_dataset, registry_names, DatasetSpec};
+
+/// Load a registry dataset by name, or — with the `csv:PATH` scheme — a
+/// labeled CSV file ([`Dataset::from_labeled_csv`]). This is what the
+/// CLI routes `--dataset` through, so every subcommand accepts user
+/// data files; malformed CSVs fail with the offending line number
+/// instead of a panic. `seed` only applies to registry generators.
+pub fn load_dataset_any(
+    name: &str,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> anyhow::Result<Dataset> {
+    if let Some(path) = name.strip_prefix("csv:") {
+        return Dataset::from_labeled_csv(std::path::Path::new(path), n_train, n_test);
+    }
+    load_dataset(name, n_train, n_test, seed).ok_or_else(|| {
+        anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`, or csv:PATH")
+    })
+}

@@ -60,6 +60,21 @@
 //! sti_iterative_removal_order`) is built on the same repairs:
 //! remove-best → repair → re-rank, per step in O(t·n).
 //!
+//! # Concurrent serving ([`server`], DESIGN.md §12)
+//!
+//! Above the single-session protocol sits the multi-session server: a
+//! [`server::SessionRegistry`] hosts many named sessions in one process,
+//! `stiknn serve --listen ADDR` multiplexes TCP clients onto them
+//! (thread per connection, `open`/`use`/`close`/`list` verbs; stdio
+//! still works and speaks the identical protocol), and a per-session
+//! RwLock lets read queries run concurrently while writes serialize —
+//! with the property that ANY interleaving of client traffic leaves each
+//! session bit-identical to a serialized replay of its own write
+//! commands in revision order (`tests/server_concurrency.rs`). An LRU
+//! cap spills cold sessions to the v3 snapshot store and reloads them
+//! transparently on next touch; a background autosave thread checkpoints
+//! dirty sessions so the process survives restarts.
+//!
 //! Quick start:
 //! ```no_run
 //! use stiknn::data::load_dataset;
@@ -85,6 +100,7 @@ pub mod data;
 pub mod knn;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod session;
 pub mod shapley;
 pub mod util;

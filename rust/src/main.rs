@@ -6,7 +6,7 @@
 //!   analyze   interaction heatmap + axiom checks + block structure (§4)
 //!   ksens     k-sensitivity sweep (§3.2, Figs. 7–10)
 //!   mislabel  flip labels and detect them from interaction patterns (Fig. 5)
-//!   serve     long-lived valuation session driven by NDJSON on stdin (§9)
+//!   serve     concurrent multi-session NDJSON server: stdio or --listen TCP (§9/§12)
 //!   mutate    live training-set edits with exact O(t·n) repairs (§11)
 //!   session   inspect a session snapshot file (§9/§11)
 //!   datasets  list the Table-1 dataset registry
@@ -18,6 +18,7 @@
 //! the AOT artifacts under --artifacts (default: artifacts/).
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use stiknn::analysis::ksens::k_sensitivity;
 use stiknn::analysis::mislabel::{
@@ -25,13 +26,14 @@ use stiknn::analysis::mislabel::{
 };
 use stiknn::analysis::structure::block_structure;
 use stiknn::coordinator::{run_job_with_engine, run_values_job, Assembly, ValuationJob};
-use stiknn::data::{corrupt, csv, load_dataset, registry_names};
+use stiknn::data::{corrupt, csv, load_dataset_any, registry_names};
 use stiknn::knn::distance::Metric;
 use stiknn::report::heatmap::render_heatmap;
-use stiknn::report::session::{snapshot_info_table, topk_table};
+use stiknn::report::session::{registry_table, snapshot_info_table, topk_table};
 use stiknn::report::table::Table;
 use stiknn::runtime::{Engine, Manifest};
-use stiknn::session::{protocol, store, SessionConfig, TopBy, ValuationSession};
+use stiknn::server::{self, RegistryConfig, SessionRegistry, TrainData};
+use stiknn::session::{store, SessionConfig, TopBy, ValuationSession};
 use stiknn::shapley::axioms;
 use stiknn::shapley::values::{sti_point_values, Engine as ValueEngine, PointValues};
 use stiknn::shapley::StiParams;
@@ -80,7 +82,7 @@ fn print_help() {
            analyze    heatmap + axioms + class-block structure\n\
            ksens      k-sensitivity sweep (paper §3.2)\n\
            mislabel   mislabel-detection experiment (paper Fig. 5)\n\
-           serve      incremental valuation session (NDJSON on stdin/stdout)\n\
+           serve      concurrent valuation server (NDJSON on stdio or --listen TCP)\n\
            mutate     live training-set edits (add/remove/relabel) with exact repairs\n\
            session    inspect a session snapshot file\n\
            datasets   list the dataset registry (paper Table 1)\n\
@@ -129,7 +131,7 @@ fn cmd_help(argv: &[String]) -> anyhow::Result<()> {
 }
 
 fn common_opts(cmd: Command) -> Command {
-    cmd.opt("dataset", "dataset name (see `stiknn datasets`)", "circle")
+    cmd.opt("dataset", "dataset name (see `stiknn datasets`) or csv:PATH", "circle")
         .opt("n-train", "training points (0 = registry default)", "0")
         .opt("n-test", "test points (0 = registry default)", "0")
         .opt("k", "KNN parameter", "5")
@@ -160,8 +162,7 @@ fn parse_common(args: &Args) -> anyhow::Result<(stiknn::data::Dataset, Valuation
         .ok_or_else(|| anyhow::anyhow!("--engine must be rust or xla"))?;
     let workers: usize = args.require("workers")?;
     let block: usize = args.require("block")?;
-    let ds = load_dataset(&name, n_train, n_test, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
     let band_rows: usize = args.require("band-rows")?;
     let assembly = match args.get_or("assembly", "banded").as_str() {
         "banded" => Assembly::RowBanded { band_rows },
@@ -225,7 +226,7 @@ fn values_cmd() -> Command {
         "per-point STI values (main + interaction rowsum) — implicit engine \
          by default: O(t·n log n) time, O(n) state, no n×n matrix (DESIGN.md §10)",
     )
-    .opt("dataset", "dataset name (see `stiknn datasets`)", "circle")
+    .opt("dataset", "dataset name (see `stiknn datasets`) or csv:PATH", "circle")
     .opt("n-train", "training points (0 = registry default)", "0")
     .opt("n-test", "test points (0 = registry default)", "0")
     .opt("k", "KNN parameter", "5")
@@ -258,8 +259,7 @@ fn cmd_values(argv: &[String]) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--engine must be implicit or dense"))?;
     let workers: usize = args.require("workers")?;
     let block: usize = args.require("block")?;
-    let ds = load_dataset(&name, n_train, n_test, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
 
     let t0 = std::time::Instant::now();
     let pv: PointValues = match engine {
@@ -463,9 +463,38 @@ fn cmd_mislabel(argv: &[String]) -> anyhow::Result<()> {
 fn serve_cmd() -> Command {
     Command::new(
         "serve",
-        "incremental valuation session: NDJSON commands on stdin, responses on stdout",
+        "concurrent valuation server: NDJSON commands on stdin (single connection) \
+         or --listen ADDR (TCP, many clients); named sessions via open/use/close/list",
     )
-    .opt("dataset", "training dataset name (see `stiknn datasets`)", "circle")
+    .opt(
+        "listen",
+        "TCP address to serve on, e.g. 127.0.0.1:7171 (port 0 picks a free port, \
+         reported on stderr); '' = single connection on stdin/stdout",
+        "",
+    )
+    .opt(
+        "session",
+        "name of the default session every connection starts on",
+        "default",
+    )
+    .opt(
+        "max-resident",
+        "LRU cap on in-memory sessions: cold sessions spill to --state-dir and \
+         reload on next touch (0 = unlimited)",
+        "0",
+    )
+    .opt(
+        "autosave",
+        "checkpoint dirty sessions to --state-dir every SECS seconds (0 = off)",
+        "0",
+    )
+    .opt(
+        "state-dir",
+        "directory for LRU spills and autosave checkpoints ('' = none; required \
+         by --max-resident and --autosave)",
+        "",
+    )
+    .opt("dataset", "training dataset name (see `stiknn datasets`) or csv:PATH", "circle")
     .opt("n-train", "training points (0 = registry default)", "0")
     .opt(
         "n-test",
@@ -549,8 +578,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     // n_test still matters: the generators slice train AFTER test, so it
     // must match whatever produced the train set a --restore snapshot was
     // taken against (fingerprint-verified on restore).
-    let ds = load_dataset(&name, n_train, n_test, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
     let mut config = SessionConfig::new(k)
         .with_metric(metric)
         .with_engine(engine)
@@ -561,36 +589,70 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     if workers > 0 {
         config = config.with_workers(workers);
     }
+    let listen = args.get_or("listen", "");
+    let session_name = args.get_or("session", "default");
+    let max_resident: usize = args.require("max-resident")?;
+    let autosave_secs: u64 = args.require("autosave")?;
+    let state_dir = args.get_or("state-dir", "");
+    let state_dir = (!state_dir.is_empty()).then(|| PathBuf::from(&state_dir));
+    anyhow::ensure!(
+        max_resident == 0 || state_dir.is_some(),
+        "--max-resident needs --state-dir (spilled sessions live there as snapshots)"
+    );
+    anyhow::ensure!(
+        autosave_secs == 0 || state_dir.is_some(),
+        "--autosave needs --state-dir (checkpoints are written there)"
+    );
+
+    let registry = Arc::new(SessionRegistry::new(
+        TrainData::from_dataset(&ds),
+        RegistryConfig {
+            base: config,
+            max_resident,
+            state_dir,
+        },
+    )?);
+    // The default session: fresh, or restored with the CLI-derived config
+    // (exactly the old single-session `--restore` semantics — mismatched
+    // engine/k/fingerprint fail the process here with the same messages).
     let restore = args.get_or("restore", "");
-    let mut session = if restore.is_empty() {
-        ValuationSession::from_dataset(&ds, config)?
-    } else if mutable {
-        // Mutable snapshots carry their own (possibly edited) train set.
-        ValuationSession::restore_mutable(Path::new(&restore), config)?
-    } else {
-        ValuationSession::restore(
-            Path::new(&restore),
-            ds.train_x.clone(),
-            ds.train_y.clone(),
-            ds.d,
-            config,
-        )?
-    };
+    let snapshot = (!restore.is_empty()).then(|| PathBuf::from(&restore));
+    registry.open(&session_name, snapshot.as_deref(), Some(config))?;
+    let (n, d, tests) = registry
+        .with_session_read(&session_name, |s| (s.n(), s.d(), s.tests_seen()))?;
     // Banner on stderr so stdout stays pure NDJSON.
     eprintln!(
-        "stiknn serve: dataset={} n={} d={} k={} engine={}{} tests={} — NDJSON on \
-         stdin, `{{\"cmd\":\"shutdown\"}}` to stop",
+        "stiknn serve: dataset={} n={n} d={d} k={} engine={}{} tests={tests} \
+         session='{session_name}' — `{{\"cmd\":\"shutdown\"}}` ends a connection",
         ds.name,
-        session.n(),
-        session.d(),
-        session.k(),
-        session.engine().label(),
-        if session.is_mutable() { " (mutable)" } else { "" },
-        session.tests_seen()
+        config.k,
+        config.engine.label(),
+        if config.mutable { " (mutable)" } else { "" },
     );
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    protocol::serve(&mut session, stdin.lock(), stdout.lock())?;
+    let _autosave = (autosave_secs > 0).then(|| {
+        server::start_autosave(
+            Arc::clone(&registry),
+            std::time::Duration::from_secs(autosave_secs),
+        )
+    });
+    if listen.is_empty() {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let mut conn = server::Connection::new(Arc::clone(&registry), Some(session_name));
+        server::serve_connection(&mut conn, stdin.lock(), stdout.lock())?;
+        // Registry inspector on the way out (stderr keeps stdout
+        // NDJSON-pure). Only the stdio path has a "way out" — the TCP
+        // accept loop below runs until the process is killed, where the
+        // last autosave checkpoint (atomic-by-rename) is the durable
+        // record instead.
+        eprintln!("{}", registry_table(&registry.list()));
+    } else {
+        let listener = std::net::TcpListener::bind(&listen)
+            .map_err(|e| anyhow::anyhow!("binding --listen {listen}: {e}"))?;
+        let addr = listener.local_addr()?;
+        eprintln!("stiknn serve: listening on {addr} (thread per connection)");
+        server::listen(Arc::clone(&registry), listener, Some(session_name))?;
+    }
     Ok(())
 }
 
@@ -602,7 +664,7 @@ fn mutate_cmd() -> Command {
          then optionally greedily drop the lowest-value points (remove → repair → \
          re-rank each step)",
     )
-    .opt("dataset", "dataset name (see `stiknn datasets`)", "circle")
+    .opt("dataset", "dataset name (see `stiknn datasets`) or csv:PATH", "circle")
     .opt("n-train", "training points (0 = registry default)", "0")
     .opt("n-test", "test points (0 = registry default)", "0")
     .opt("k", "KNN parameter", "5")
@@ -665,8 +727,7 @@ fn cmd_mutate(argv: &[String]) -> anyhow::Result<()> {
     let k: usize = args.require("k")?;
     let metric = Metric::parse(&args.get_or("metric", "l2"))
         .ok_or_else(|| anyhow::anyhow!("--metric must be l2, l1 or cosine"))?;
-    let ds = load_dataset(&name, n_train, n_test, seed)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' — try `stiknn datasets`"))?;
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
     let ops = parse_mutate_ops(&args.get_or("ops", ""))?;
     let drop_lowest: usize = args.require("drop-lowest")?;
 

@@ -1,8 +1,9 @@
 //! Session-layer report formatting: snapshot headers and top-k
 //! point-value tables for the `stiknn session` inspector (DESIGN.md
-//! §9/§11).
+//! §9/§11), plus the server-registry table (§12).
 
 use crate::report::table::Table;
+use crate::server::SessionInfo;
 use crate::session::Snapshot;
 
 /// Human-readable header table for one decoded snapshot: engine kind,
@@ -31,6 +32,29 @@ pub fn snapshot_info_table(snap: &Snapshot) -> String {
     t.row(&["mutation ledger".into(), snap.mutations.len().to_string()]);
     t.row(&["train fingerprint".into(), format!("{:016x}", h.fingerprint)]);
     format!("session snapshot:\n{}", t.render())
+}
+
+/// The server registry inspector: one row per named session —
+/// resident/spilled, engine, mutability, live sizes, write revision and
+/// dirtiness (`stiknn serve` prints this on the way out; `list` carries
+/// the same fields as JSON).
+pub fn registry_table(infos: &[SessionInfo]) -> String {
+    let mut t = Table::new(&[
+        "session", "state", "engine", "mutable", "n", "tests", "rev", "dirty",
+    ]);
+    for i in infos {
+        t.row(&[
+            i.name.clone(),
+            (if i.resident { "resident" } else { "spilled" }).to_string(),
+            i.engine.label().to_string(),
+            (if i.mutable { "yes" } else { "no" }).to_string(),
+            i.n.to_string(),
+            i.tests.to_string(),
+            i.revision.to_string(),
+            (if i.dirty { "yes" } else { "no" }).to_string(),
+        ]);
+    }
+    format!("session registry ({} session(s)):\n{}", infos.len(), t.render())
 }
 
 /// Ranked top-k point values as an aligned table.
@@ -119,6 +143,39 @@ mod tests {
             .find(|l| l.contains("mutation ledger"))
             .expect("mutation ledger row");
         assert!(imm_line.contains('0'), "{imm_line}");
+    }
+
+    #[test]
+    fn registry_table_lists_sessions_and_states() {
+        let infos = vec![
+            SessionInfo {
+                name: "hot".into(),
+                resident: true,
+                dirty: true,
+                n: 30,
+                tests: 3,
+                engine: crate::session::Engine::Dense,
+                mutable: false,
+                revision: 3,
+            },
+            SessionInfo {
+                name: "cold".into(),
+                resident: false,
+                dirty: false,
+                n: 31,
+                tests: 5,
+                engine: crate::session::Engine::Implicit,
+                mutable: true,
+                revision: 9,
+            },
+        ];
+        let s = registry_table(&infos);
+        for needle in [
+            "session registry (2 session(s))",
+            "hot", "cold", "resident", "spilled", "dense", "implicit", "30", "31",
+        ] {
+            assert!(s.contains(needle), "missing {needle}:\n{s}");
+        }
     }
 
     #[test]

@@ -269,6 +269,14 @@ pub struct ValuationSession {
     /// of paying an O(n·d) rehash per edit — it is only consumed by
     /// snapshot save/restore, never by the edit/query hot paths.
     fingerprint: Option<u64>,
+    /// Monotone count of state-changing operations (non-empty ingests +
+    /// edits) — the serialization handle of the concurrent server layer
+    /// (DESIGN.md §12): every mutating protocol response reports it, so
+    /// clients can totally order the writes a session actually applied.
+    /// In-memory only; restores start at 0 unless the owner re-seeds it
+    /// ([`Self::set_revision`], which the server registry uses to keep
+    /// the count monotone across an LRU spill/reload cycle).
+    revision: u64,
 }
 
 impl ValuationSession {
@@ -321,6 +329,7 @@ impl ValuationSession {
             mutations: Vec::new(),
             tests_seen: 0,
             fingerprint: Some(fingerprint),
+            revision: 0,
         })
     }
 
@@ -569,6 +578,7 @@ impl ValuationSession {
             mutations: snap.mutations,
             tests_seen: h.tests,
             fingerprint: Some(fingerprint),
+            revision: 0,
         })
     }
 
@@ -625,6 +635,23 @@ impl ValuationSession {
     /// sessions.
     pub fn mutations(&self) -> &[MutationRecord] {
         &self.mutations
+    }
+
+    /// Monotone per-session write counter: bumps by exactly 1 on every
+    /// applied state change (non-empty ingest, add/remove/relabel) and
+    /// never on reads or failed commands. Two observations with equal
+    /// revisions saw identical state; sorting a session's write commands
+    /// by the revision each response reported reproduces the exact
+    /// serialization order the session applied them in.
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Re-seed the write counter — used by the server registry after an
+    /// LRU spill/reload so revisions stay monotone across the cycle
+    /// (snapshots do not persist the counter).
+    pub(crate) fn set_revision(&mut self, revision: u64) {
+        self.revision = revision;
     }
 
     /// Current training labels (live view — edits change it).
@@ -794,6 +821,7 @@ impl ValuationSession {
             self.ledger.splice(..half, [merged]);
         }
         self.tests_seen += test_y.len() as u64;
+        self.revision += 1;
         Ok(test_y.len())
     }
 
@@ -944,6 +972,7 @@ impl ValuationSession {
         // would be O(n·d) per edit — the factor the delta path deletes.
         self.fingerprint = None;
         self.mutations.push(record);
+        self.revision += 1;
     }
 
     // -- queries (all normalize at read time) --------------------------

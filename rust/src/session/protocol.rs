@@ -41,6 +41,14 @@
 //! immutable session they are rejected with
 //! `{"ok":false,"reason":"mutable",...}` — again machine-checkable, so a
 //! router can direct writes to the mutable deployment.
+//!
+//! Every successful state-changing response (`ingest`, `add_train`,
+//! `remove_train`, `relabel`) carries `"rev"` — the session's monotone
+//! write revision AFTER the command applied. Under the concurrent server
+//! ([`crate::server`], DESIGN.md §12) sorting a session's write
+//! responses by `rev` reconstructs the exact order that session applied
+//! them in; the multi-session verbs (`open`/`close`/`use`/`list`) live
+//! in the server layer, not here.
 
 use super::{TopBy, ValuationSession};
 use crate::util::json::Json;
@@ -86,9 +94,9 @@ pub fn serve<R: BufRead, W: Write>(
 /// A failed command: the message plus an optional machine-checkable
 /// reason tag (`"engine"` for queries the session's engine cannot
 /// answer). `From<String>` keeps the plain-`?` call sites terse.
-struct Fail {
-    msg: String,
-    reason: Option<&'static str>,
+pub(crate) struct Fail {
+    pub(crate) msg: String,
+    pub(crate) reason: Option<&'static str>,
 }
 
 impl From<String> for Fail {
@@ -117,6 +125,69 @@ fn mutable_fail(what: &str) -> Fail {
     }
 }
 
+/// How a single-session command touches session state. The concurrent
+/// server (DESIGN.md §12) routes `Read` commands through the session's
+/// RwLock read guard — so they run concurrently with each other — and
+/// `Write` commands through the write guard, serializing them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Access {
+    Read,
+    Write,
+}
+
+/// Classify a single-session command name. `None` for unknown commands
+/// and for connection-level verbs (`shutdown`, and the server layer's
+/// `open`/`close`/`use`/`list`) that never touch a session directly.
+pub(crate) fn access_of(cmd: &str) -> Option<Access> {
+    match cmd {
+        // `snapshot` is a read: `ValuationSession::save` takes &self,
+        // so checkpoints run concurrently with queries.
+        "ping" | "query" | "values" | "topk" | "stats" | "snapshot" => Some(Access::Read),
+        "ingest" | "add_train" | "remove_train" | "relabel" => Some(Access::Write),
+        _ => None,
+    }
+}
+
+/// Execute one read-class command against a shared session reference.
+/// `cmd` must be `Access::Read`-classified; anything else is a bug in
+/// the caller's routing, not in client input.
+pub(crate) fn dispatch_read(
+    session: &ValuationSession,
+    cmd: &str,
+    v: &Json,
+) -> Result<Json, Fail> {
+    match cmd {
+        "ping" => Ok(ping_json(session)),
+        "query" => do_query(session, v),
+        "values" => do_values(session, v),
+        "topk" => do_topk(session, v),
+        "stats" => Ok(stats_json(session)),
+        "snapshot" => do_snapshot(session, v),
+        other => unreachable!("dispatch_read routed non-read command '{other}'"),
+    }
+}
+
+/// Execute one write-class command against an exclusive session
+/// reference.
+pub(crate) fn dispatch_write(
+    session: &mut ValuationSession,
+    cmd: &str,
+    v: &Json,
+) -> Result<Json, Fail> {
+    match cmd {
+        "ingest" => do_ingest(session, v),
+        "add_train" => do_add_train(session, v),
+        "remove_train" => do_remove_train(session, v),
+        "relabel" => do_relabel(session, v),
+        other => unreachable!("dispatch_write routed non-write command '{other}'"),
+    }
+}
+
+/// The single-session unknown-command message (the server layer appends
+/// its registry verbs to its own copy).
+pub(crate) const KNOWN_COMMANDS: &str = "ping|ingest|query|values|topk|stats|\
+     add_train|remove_train|relabel|snapshot|shutdown";
+
 /// Execute one command line → (response, shutdown?). Never panics on
 /// untrusted input; every failure is a `{"ok":false}` response.
 pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
@@ -127,26 +198,14 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
     let Some(cmd) = v.get("cmd").and_then(Json::as_str).map(str::to_string) else {
         return (err("missing string field 'cmd'"), false);
     };
-    let result = match cmd.as_str() {
-        "ping" => Ok(ping_json(session)),
-        "ingest" => do_ingest(session, &v),
-        "query" => do_query(session, &v),
-        "values" => do_values(session, &v),
-        "topk" => do_topk(session, &v),
-        "stats" => Ok(stats_json(session)),
-        "add_train" => do_add_train(session, &v),
-        "remove_train" => do_remove_train(session, &v),
-        "relabel" => do_relabel(session, &v),
-        "snapshot" => do_snapshot(session, &v),
-        "shutdown" => {
-            return (
-                ok("shutdown", vec![("shutdown", Json::Bool(true))]),
-                true,
-            )
-        }
-        other => Err(Fail::from(format!(
-            "unknown command '{other}' (expected ping|ingest|query|values|topk|stats|\
-             add_train|remove_train|relabel|snapshot|shutdown)"
+    if cmd == "shutdown" {
+        return (ok("shutdown", vec![("shutdown", Json::Bool(true))]), true);
+    }
+    let result = match access_of(&cmd) {
+        Some(Access::Read) => dispatch_read(session, &cmd, &v),
+        Some(Access::Write) => dispatch_write(session, &cmd, &v),
+        None => Err(Fail::from(format!(
+            "unknown command '{cmd}' (expected {KNOWN_COMMANDS})"
         ))),
     };
     match result {
@@ -155,14 +214,14 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
     }
 }
 
-fn err(msg: impl Into<String>) -> Json {
+pub(crate) fn err(msg: impl Into<String>) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg.into())),
     ])
 }
 
-fn fail_json(f: Fail) -> Json {
+pub(crate) fn fail_json(f: Fail) -> Json {
     let mut fields = vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(f.msg)),
@@ -173,7 +232,7 @@ fn fail_json(f: Fail) -> Json {
     Json::obj(fields)
 }
 
-fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
+pub(crate) fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
     let mut all = vec![("ok", Json::Bool(true)), ("cmd", Json::str(cmd))];
     all.extend(fields);
     Json::obj(all)
@@ -238,6 +297,7 @@ fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
             ("ingested", Json::num(ingested as f64)),
             ("tests", Json::num(session.tests_seen() as f64)),
             ("batches", Json::num(session.batches_ingested() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
         ],
     ))
 }
@@ -411,6 +471,7 @@ fn do_add_train(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> 
             ("index", Json::num(index as f64)),
             ("n", Json::num(session.n() as f64)),
             ("mutations", Json::num(session.mutations().len() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
         ],
     ))
 }
@@ -430,6 +491,7 @@ fn do_remove_train(session: &mut ValuationSession, v: &Json) -> Result<Json, Fai
             ("i", Json::num(i as f64)),
             ("n", Json::num(session.n() as f64)),
             ("mutations", Json::num(session.mutations().len() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
         ],
     ))
 }
@@ -454,6 +516,7 @@ fn do_relabel(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
             ("y", Json::num(y as f64)),
             ("n", Json::num(session.n() as f64)),
             ("mutations", Json::num(session.mutations().len() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
         ],
     ))
 }

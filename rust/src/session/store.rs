@@ -717,6 +717,81 @@ pub fn read_snapshot(path: &Path) -> Result<Snapshot> {
     decode(&bytes).with_context(|| format!("decoding snapshot {}", path.display()))
 }
 
+/// Decode ONLY the fixed-size header prefix of a snapshot file — the
+/// cheap peek the server registry uses to derive a session's config
+/// (k, metric, engine, mutable) from a snapshot before paying for the
+/// full restore, and to describe spilled sessions without loading them.
+///
+/// NOT checksum-verified: the checksum trails the whole file, so a peek
+/// would have to read everything to check it — exactly what this avoids.
+/// Any action taken on the header (an actual restore) re-reads the file
+/// through [`read_snapshot`], which verifies it completely.
+pub fn read_header(path: &Path) -> Result<SnapshotHeader> {
+    use std::io::Read;
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    // v1 headers are 57 bytes (no payload-kind byte), v2/v3 are 58.
+    let mut buf = Vec::with_capacity(58);
+    f.take(58)
+        .read_to_end(&mut buf)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    decode_header(&buf)
+        .with_context(|| format!("decoding snapshot header {}", path.display()))
+}
+
+fn decode_header(bytes: &[u8]) -> Result<SnapshotHeader> {
+    let mut rd = Rd { bytes, pos: 0 };
+    let magic = rd.take(8)?;
+    ensure!(magic == &MAGIC[..], "bad snapshot magic {:02x?}", magic);
+    let version = rd.u32()?;
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        bail!(
+            "unsupported snapshot version {version} (this build reads versions \
+             {MIN_VERSION}..={VERSION})"
+        );
+    }
+    let k = rd.u32()?;
+    let metric_tag = rd.u8()?;
+    let Some(metric) = metric_from_tag(metric_tag) else {
+        bail!("unknown metric tag {metric_tag} in snapshot");
+    };
+    let (engine, mutable) = if version >= 2 {
+        let tag = rd.u8()?;
+        if tag == MUTABLE_TAG {
+            if version < 3 {
+                bail!("mutable payload (kind 2) in a version-{version} snapshot (needs v3)");
+            }
+            (Engine::Implicit, true)
+        } else {
+            let Some(engine) = engine_from_tag(tag) else {
+                bail!("unknown payload kind {tag} in snapshot");
+            };
+            (engine, false)
+        }
+    } else {
+        (Engine::Dense, false)
+    };
+    Ok(SnapshotHeader {
+        version,
+        k,
+        metric,
+        engine,
+        mutable,
+        n: rd.u64()?,
+        d: rd.u64()?,
+        fingerprint: rd.u64()?,
+        tests: rd.u64()?,
+        batches: rd.u64()?,
+    })
+}
+
+/// Where the server registry spills/checkpoints the session `name`
+/// inside `dir`. `name` must already be registry-validated (the registry
+/// only admits `[A-Za-z0-9._-]` names, so the join cannot traverse).
+pub fn spill_path(dir: &Path, name: &str) -> std::path::PathBuf {
+    dir.join(format!("{name}.session.snap"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1051,6 +1126,32 @@ mod tests {
         // tag 2 is the mutable-session kind, not an engine
         assert_eq!(engine_from_tag(MUTABLE_TAG), None);
         assert_eq!(MUTABLE_TAG, 2);
+    }
+
+    #[test]
+    fn read_header_peeks_without_reading_the_payload() {
+        let p = std::env::temp_dir().join(format!(
+            "stiknn_store_header_{}.snap",
+            std::process::id()
+        ));
+        std::fs::write(&p, sample()).unwrap();
+        let h = read_header(&p).unwrap();
+        let full = read_snapshot(&p).unwrap();
+        assert_eq!(h, full.header);
+        // a garbage file fails the peek cleanly
+        std::fs::write(&p, b"definitely not a snapshot, but long enough....").unwrap();
+        let err = read_header(&p).unwrap_err().to_string();
+        assert!(err.contains("header"), "{err}");
+        // truncated-to-magic-only also errors instead of panicking
+        std::fs::write(&p, &MAGIC[..]).unwrap();
+        assert!(read_header(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn spill_path_is_name_scoped() {
+        let p = spill_path(Path::new("/tmp/state"), "sess-1");
+        assert_eq!(p, Path::new("/tmp/state/sess-1.session.snap"));
     }
 
     #[test]

@@ -40,11 +40,17 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     cov / (vx.sqrt() * vy.sqrt())
 }
 
-/// Ranks with average tie-handling (for Spearman).
+/// Ranks with average tie-handling (for Spearman). Sorts under the IEEE
+/// total order (`total_cmp`, the crate-wide value-ordering convention —
+/// see `session::top_k_of`): a non-total comparator falling back to
+/// `Equal` on NaN makes the sort order depend on the input permutation,
+/// silently corrupting every Spearman computed over it. Under the total
+/// order NaNs land deterministically past +∞, each its own tie group
+/// (NaN == NaN is false).
 pub fn ranks(xs: &[f64]) -> Vec<f64> {
     let n = xs.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]).then(a.cmp(&b)));
     let mut out = vec![0.0; n];
     let mut i = 0;
     while i < n {
@@ -83,17 +89,42 @@ pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
 
 /// Log-log slope: the empirical polynomial order of y(x). Used by the
 /// scaling benches to verify the O(n²)/O(t) complexity claims.
+///
+/// Pairs with a non-positive (or non-finite) coordinate are FILTERED
+/// before the fit: `ln()` of a zero/negative timing sample is NaN/-∞,
+/// which would poison the fitted slope and let a complexity assertion
+/// pass vacuously (NaN compares false against any threshold). Panics if
+/// fewer than [`LOGLOG_MIN_SAMPLES`] pairs survive — a slope fitted
+/// through one or two points is not evidence of anything.
 pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
-    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
-    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    assert_eq!(xs.len(), ys.len());
+    let mut lx = Vec::with_capacity(xs.len());
+    let mut ly = Vec::with_capacity(ys.len());
+    for (&x, &y) in xs.iter().zip(ys) {
+        if x > 0.0 && y > 0.0 && x.is_finite() && y.is_finite() {
+            lx.push(x.ln());
+            ly.push(y.ln());
+        }
+    }
+    assert!(
+        lx.len() >= LOGLOG_MIN_SAMPLES,
+        "loglog_slope: only {} positive finite sample pairs (of {}) — need at \
+         least {LOGLOG_MIN_SAMPLES} for a meaningful slope",
+        lx.len(),
+        xs.len()
+    );
     linfit(&lx, &ly).0
 }
 
-/// Percentile (nearest-rank on a sorted copy), p in [0, 100].
+/// Minimum surviving sample pairs for a [`loglog_slope`] fit.
+pub const LOGLOG_MIN_SAMPLES: usize = 3;
+
+/// Percentile (nearest-rank on a sorted copy), p in [0, 100]. Total
+/// order: NaNs sort past +∞ instead of panicking the sort mid-bench.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -162,5 +193,45 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn ranks_with_nan_are_deterministic_and_do_not_panic() {
+        // NaN sorts past +∞ under the total order, so the finite values
+        // keep their ranks no matter where the NaN sits in the input …
+        let a = ranks(&[f64::NAN, 10.0, 20.0]);
+        let b = ranks(&[10.0, f64::NAN, 20.0]);
+        let c = ranks(&[10.0, 20.0, f64::NAN]);
+        assert_eq!(a, vec![3.0, 1.0, 2.0]);
+        assert_eq!(b, vec![1.0, 3.0, 2.0]);
+        assert_eq!(c, vec![1.0, 2.0, 3.0]);
+        // … and a clean slice is unaffected by the comparator change
+        assert_eq!(ranks(&[10.0, 20.0, 20.0, 30.0]), vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn percentile_with_nan_does_not_panic() {
+        let xs = [5.0, f64::NAN, 1.0];
+        // NaN lands at the top under the total order; the lower
+        // percentiles stay meaningful
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn loglog_slope_filters_non_positive_samples() {
+        // a zero timing sample (a too-fast clock read) must not poison
+        // the fit with ln(0) = -∞
+        let xs = [10.0, 20.0, 0.0, 40.0, 80.0];
+        let ys = [100.0, 400.0, 0.0, 1600.0, 6400.0];
+        assert!((loglog_slope(&xs, &ys) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "loglog_slope")]
+    fn loglog_slope_rejects_too_few_samples() {
+        // two surviving pairs fit a line exactly — that is not evidence
+        loglog_slope(&[10.0, 20.0, -1.0], &[100.0, 400.0, 900.0]);
     }
 }

@@ -85,7 +85,7 @@ fn help_serve_documents_the_session_options() {
     assert!(ok);
     for opt in [
         "NDJSON", "--restore", "--parallel-min", "--metric", "--engine", "--retain-rows",
-        "--mutable",
+        "--mutable", "--listen", "--session", "--max-resident", "--autosave", "--state-dir",
     ] {
         assert!(stdout.contains(opt), "help serve missing {opt}: {stdout}");
     }
@@ -603,6 +603,222 @@ fn mutate_applies_ops_and_drops_lowest() {
     ]);
     assert!(!ok);
     assert!(stderr.contains("bad op"), "{stderr}");
+}
+
+#[test]
+fn csv_datasets_load_and_malformed_csvs_fail_with_line_numbers() {
+    let dir = std::env::temp_dir().join(format!("stiknn_cli_csv_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // a genuine header whose first column name is numeric must not be
+    // eaten as a data row
+    let good = dir.join("good.csv");
+    let mut body = String::from("1,x2,label\n");
+    for i in 0..12 {
+        body.push_str(&format!("{i}.0,{}.5,{}\n", 12 - i, i % 2));
+    }
+    std::fs::write(&good, body).unwrap();
+    let spec = format!("csv:{}", good.display());
+    let (stdout, stderr, ok) = run(&[
+        "values", "--dataset", &spec, "--n-train", "8", "--n-test", "4",
+        "--k", "2", "--top", "3",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("n=8"), "{stdout}");
+    assert!(stdout.contains("top-3"), "{stdout}");
+
+    // non-integral label: rejected with the line number, never truncated
+    let bad = dir.join("bad.csv");
+    std::fs::write(&bad, "x,label\n1.0,0\n2.0,2.7\n3.0,1\n").unwrap();
+    let spec = format!("csv:{}", bad.display());
+    let (_, stderr, ok) = run(&["values", "--dataset", &spec]);
+    assert!(!ok);
+    assert!(stderr.contains("line 3"), "{stderr}");
+    assert!(stderr.contains("not an integer"), "{stderr}");
+
+    // ragged row
+    std::fs::write(&bad, "1.0,2.0,0\n3.0,1\n").unwrap();
+    let (_, stderr, ok) = run(&["values", "--dataset", &spec]);
+    assert!(!ok);
+    assert!(stderr.contains("line 2"), "{stderr}");
+    assert!(stderr.contains("column count"), "{stderr}");
+
+    // out-of-range label: rejected, not saturated
+    std::fs::write(&bad, "1.0,0\n2.0,3000000000\n").unwrap();
+    let (_, stderr, ok) = run(&["values", "--dataset", &spec]);
+    assert!(!ok);
+    assert!(stderr.contains("line 2"), "{stderr}");
+    assert!(stderr.contains("out of i32 range"), "{stderr}");
+
+    // unknown registry names now advertise the csv scheme
+    let (_, stderr, ok) = run(&["values", "--dataset", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("csv:PATH"), "{stderr}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_listen_bind_failure_and_bad_flag_combos_error_cleanly() {
+    // un-parseable listen address: clean error, not a panic or a hang
+    let (_, stderr, ok) = run(&[
+        "serve", "--dataset", "moon", "--n-train", "30",
+        "--listen", "256.256.256.256:0",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("binding --listen"), "{stderr}");
+    // cap and autosave both need somewhere to put snapshots
+    let (_, stderr, ok) = run(&[
+        "serve", "--dataset", "moon", "--n-train", "30", "--max-resident", "2",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("state-dir"), "{stderr}");
+    let (_, stderr, ok) = run(&[
+        "serve", "--dataset", "moon", "--n-train", "30", "--autosave", "5",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("state-dir"), "{stderr}");
+}
+
+#[test]
+fn serve_stdio_open_on_missing_snapshot_answers_cleanly() {
+    use std::io::Write;
+    use stiknn::util::json::Json;
+
+    let mut child = Command::new(bin())
+        .args(["serve", "--dataset", "moon", "--n-train", "30", "--k", "3"])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(
+            stdin,
+            r#"{{"cmd":"open","name":"gone","snapshot":"/nonexistent/gone.snap"}}"#
+        )
+        .unwrap();
+        writeln!(stdin, r#"{{"cmd":"stats"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let rs: Vec<Json> = stdout.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(rs.len(), 3, "{stdout}");
+    // the failed open answers cleanly, keeps the current session, and
+    // the loop keeps serving
+    assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(false), "{}", rs[0]);
+    assert!(
+        rs[0].get("error").unwrap().as_str().unwrap().contains("snapshot"),
+        "{}",
+        rs[0]
+    );
+    assert_eq!(rs[1].get("ok").unwrap().as_bool(), Some(true), "{}", rs[1]);
+    assert_eq!(rs[2].get("shutdown").unwrap().as_bool(), Some(true), "{}", rs[2]);
+}
+
+#[test]
+fn serve_listen_accepts_concurrent_clients_and_survives_bad_ones() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+    use stiknn::util::json::Json;
+
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--listen", "127.0.0.1:0",
+        ])
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --listen");
+
+    // the chosen port (of 127.0.0.1:0) is reported on stderr
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        if stderr.read_line(&mut line).unwrap() == 0 {
+            let _ = child.kill();
+            panic!("serve exited before reporting a listen address");
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+
+    struct Client {
+        reader: BufReader<TcpStream>,
+        writer: TcpStream,
+    }
+    impl Client {
+        fn connect(addr: &str) -> Client {
+            let writer = TcpStream::connect(addr).expect("connect");
+            writer
+                .set_read_timeout(Some(Duration::from_secs(30)))
+                .unwrap();
+            let reader = BufReader::new(writer.try_clone().unwrap());
+            Client { reader, writer }
+        }
+        fn send(&mut self, line: &str) -> Json {
+            writeln!(self.writer, "{line}").unwrap();
+            let mut resp = String::new();
+            self.reader.read_line(&mut resp).unwrap();
+            Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}"))
+        }
+    }
+
+    let mut a = Client::connect(&addr);
+    let r = a.send(r#"{"cmd":"ping"}"#);
+    assert_eq!(r.get("n").unwrap().as_usize(), Some(30), "{r}");
+    let r = a.send(r#"{"cmd":"ingest","x":[0.1,0.2,1.0,-0.3,0.5,0.5],"y":[0,1,0]}"#);
+    assert_eq!(r.get("ingested").unwrap().as_usize(), Some(3), "{r}");
+
+    // a half-closed client (partial line, no newline, then gone) and a
+    // garbage client must not take the server down
+    {
+        let mut bad = TcpStream::connect(&addr).unwrap();
+        bad.write_all(b"{\"cmd\":\"pi").unwrap();
+        drop(bad);
+        let mut garbage = Client::connect(&addr);
+        let r = garbage.send("\u{fffd}not json at all");
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    }
+
+    // a second client sees the same default session (shared registry) …
+    let mut b = Client::connect(&addr);
+    let r = b.send(r#"{"cmd":"stats"}"#);
+    assert_eq!(r.get("tests").unwrap().as_usize(), Some(3), "{r}");
+    // … opens a second session without disturbing the first …
+    let r = b.send(r#"{"cmd":"open","name":"scratch"}"#);
+    assert_eq!(r.get("created").unwrap().as_bool(), Some(true), "{r}");
+    let r = b.send(r#"{"cmd":"ingest","x":[0.4,0.4],"y":[1]}"#);
+    assert_eq!(r.get("tests").unwrap().as_usize(), Some(1), "{r}");
+    let r = b.send(r#"{"cmd":"list"}"#);
+    assert_eq!(
+        r.get("sessions").unwrap().as_arr().unwrap().len(),
+        2,
+        "{r}"
+    );
+    // … while client A (still on the default session) is unaffected
+    let r = a.send(r#"{"cmd":"stats"}"#);
+    assert_eq!(r.get("tests").unwrap().as_usize(), Some(3), "{r}");
+
+    // shutdown ends ONE connection; the server keeps serving others
+    let r = a.send(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(r.get("shutdown").unwrap().as_bool(), Some(true), "{r}");
+    drop(a);
+    let r = b.send(r#"{"cmd":"ping"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+
+    child.kill().expect("kill serve");
+    let _ = child.wait();
 }
 
 #[test]

@@ -1,0 +1,447 @@
+//! Concurrency properties of the multi-session server (DESIGN.md §12).
+//!
+//! The contract under test: N concurrent clients issuing mixed
+//! read/mutate traffic against shared and distinct named sessions leave
+//! every session BIT-IDENTICAL to a serialized replay of that session's
+//! own write commands — at any client count, and across LRU spill→reload
+//! cycles through the v3 snapshot store and autosave checkpoints.
+//!
+//! The serialization order is recovered from the protocol itself: every
+//! successful write response carries `rev`, the session's monotone write
+//! revision. The checks assert the collected revs are exactly 1..=W
+//! (no lost or duplicated write) and that replaying the write lines in
+//! rev order into a fresh single-threaded session reproduces the served
+//! state to the bit.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use stiknn::data::load_dataset;
+use stiknn::server::{Connection, RegistryConfig, SessionRegistry, TrainData};
+use stiknn::session::{protocol, Engine, SessionConfig, TopBy, ValuationSession};
+use stiknn::util::json::Json;
+use stiknn::util::rng::Rng;
+
+const K: usize = 3;
+
+fn train_data() -> TrainData {
+    let ds = load_dataset("circle", 24, 6, 11).unwrap();
+    TrainData::from_dataset(&ds)
+}
+
+fn dense_config() -> SessionConfig {
+    SessionConfig::new(K)
+}
+
+fn implicit_config() -> SessionConfig {
+    SessionConfig::new(K).with_engine(Engine::Implicit)
+}
+
+fn mutable_config() -> SessionConfig {
+    SessionConfig::new(K)
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true)
+}
+
+fn config_of(name: &str) -> SessionConfig {
+    match name {
+        "dense" => dense_config(),
+        "imp" => implicit_config(),
+        "mut" => mutable_config(),
+        other => panic!("unknown test session '{other}'"),
+    }
+}
+
+/// One client's deterministic write line for (session, client, step).
+fn write_line(session: &str, client: usize, step: usize) -> String {
+    let mut rng = Rng::new(0xC0FFEE + client as u64 * 7919 + step as u64 * 104729);
+    let a = (rng.below(64) as f64) * 0.125 - 4.0;
+    let b = (rng.below(64) as f64) * 0.125 - 4.0;
+    let y = rng.below(2);
+    if session == "mut" {
+        match step % 4 {
+            1 => return format!(r#"{{"cmd":"add_train","x":[{a},{b}],"y":{y}}}"#),
+            2 => {
+                let i = rng.below(24);
+                return format!(r#"{{"cmd":"relabel","i":{i},"y":{y}}}"#);
+            }
+            3 => {
+                // may fail when the index raced out of range — failures
+                // don't mutate and are excluded from the replay
+                let i = rng.below(26);
+                return format!(r#"{{"cmd":"remove_train","i":{i}}}"#);
+            }
+            _ => {}
+        }
+    }
+    format!(r#"{{"cmd":"ingest","x":[{a},{b}],"y":[{y}]}}"#)
+}
+
+fn read_line(session: &str, step: usize) -> String {
+    match step % 4 {
+        0 => r#"{"cmd":"stats"}"#.to_string(),
+        1 => r#"{"cmd":"topk","k":5,"by":"rowsum"}"#.to_string(),
+        2 => r#"{"cmd":"values"}"#.to_string(),
+        // implicit without retained rows cannot answer off-diagonal
+        // cells — use the always-answerable diagonal there
+        _ if session == "imp" => r#"{"cmd":"query","i":1,"j":1}"#.to_string(),
+        _ => r#"{"cmd":"query","i":0,"j":1}"#.to_string(),
+    }
+}
+
+/// Drive `clients` worker threads of mixed traffic against `sessions`,
+/// returning every successful write as (session, rev, line).
+fn run_traffic(
+    registry: &Arc<SessionRegistry>,
+    sessions: &[&str],
+    clients: usize,
+    steps: usize,
+) -> Vec<(String, u64, String)> {
+    let mut writes = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for client in 0..clients {
+            let registry = Arc::clone(registry);
+            handles.push(scope.spawn(move || {
+                let mut conn = Connection::new(registry, None);
+                let mut local = Vec::new();
+                for step in 0..steps {
+                    let session = sessions[(client + step) % sessions.len()];
+                    let (r, _) =
+                        conn.execute(&format!(r#"{{"cmd":"use","name":"{session}"}}"#));
+                    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+                    // 1 write per 3 commands, reads in between
+                    let is_write = step % 3 == 0;
+                    let line = if is_write {
+                        write_line(session, client, step)
+                    } else {
+                        read_line(session, step)
+                    };
+                    let (r, shutdown) = conn.execute(&line);
+                    assert!(!shutdown);
+                    let ok = r.get("ok").unwrap().as_bool().unwrap();
+                    if let Some(rev) = r.get("rev").and_then(Json::as_usize) {
+                        assert!(ok, "a failed command must not report a rev: {r}");
+                        local.push((session.to_string(), rev as u64, line));
+                    } else if !ok && is_write {
+                        // the only tolerated write failure: an edit whose
+                        // index raced out of range (it mutated nothing).
+                        // Reads may also fail early (empty session) —
+                        // that's the protocol contract, not a concurrency
+                        // defect, so they aren't asserted on.
+                        let msg = r.get("error").unwrap().as_str().unwrap();
+                        assert!(
+                            msg.contains("out of range") || msg.contains("cannot remove"),
+                            "unexpected write failure: {r}"
+                        );
+                    }
+                }
+                local
+            }));
+        }
+        for h in handles {
+            writes.extend(h.join().expect("client thread panicked"));
+        }
+    });
+    writes
+}
+
+/// Replay a session's writes in rev order into a fresh session and
+/// assert the served state matches to the bit.
+fn assert_replay_matches(
+    registry: &Arc<SessionRegistry>,
+    name: &str,
+    writes: &[(String, u64, String)],
+) {
+    let mut own: Vec<(u64, &str)> = writes
+        .iter()
+        .filter(|(s, _, _)| s == name)
+        .map(|(_, rev, line)| (*rev, line.as_str()))
+        .collect();
+    own.sort_by_key(|&(rev, _)| rev);
+    // serialization completeness: revisions are exactly 1..=W
+    for (i, &(rev, _)) in own.iter().enumerate() {
+        assert_eq!(rev, i as u64 + 1, "lost or duplicated write in '{name}'");
+    }
+    let td = train_data();
+    let mut fresh =
+        ValuationSession::new(td.x.clone(), td.y.clone(), td.d, config_of(name)).unwrap();
+    for &(_, line) in &own {
+        let (r, _) = protocol::handle(&mut fresh, line);
+        assert_eq!(
+            r.get("ok").unwrap().as_bool(),
+            Some(true),
+            "replayed write failed in '{name}': {r} for {line}"
+        );
+    }
+    let (n, tests, rev, labels) = registry
+        .with_session_read(name, |s| {
+            (
+                s.n(),
+                s.tests_seen(),
+                s.revision(),
+                s.train_labels().to_vec(),
+            )
+        })
+        .unwrap();
+    assert_eq!(rev, own.len() as u64, "'{name}' revision");
+    assert_eq!(n, fresh.n(), "'{name}' train size");
+    assert_eq!(tests, fresh.tests_seen(), "'{name}' test count");
+    assert_eq!(labels, fresh.train_labels(), "'{name}' labels");
+    if tests > 0 {
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let served = registry
+                .with_session_read(name, |s| s.point_values(by).unwrap())
+                .unwrap();
+            let replayed = fresh.point_values(by).unwrap();
+            for i in 0..n {
+                assert_eq!(
+                    served[i].to_bits(),
+                    replayed[i].to_bits(),
+                    "'{name}' {by:?}[{i}]: served {} vs replayed {}",
+                    served[i],
+                    replayed[i]
+                );
+            }
+        }
+    }
+    // engine-specific pair-level state
+    if name == "dense" && tests > 0 {
+        let served = registry
+            .with_session_read(name, |s| s.matrix().unwrap())
+            .unwrap();
+        let replayed = fresh.matrix().unwrap();
+        for (a, b) in served.data().iter().zip(replayed.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "'dense' matrix cell");
+        }
+    }
+    if name == "mut" && tests > 0 {
+        let served = registry
+            .with_session_read(name, |s| s.cell(0, 1).unwrap())
+            .unwrap();
+        assert_eq!(served.to_bits(), fresh.cell(0, 1).unwrap().to_bits());
+    }
+}
+
+fn fresh_registry(config: RegistryConfig) -> Arc<SessionRegistry> {
+    let registry = Arc::new(SessionRegistry::new(train_data(), config).unwrap());
+    for name in ["dense", "imp", "mut"] {
+        assert!(registry.open(name, None, Some(config_of(name))).unwrap());
+    }
+    registry
+}
+
+fn state_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("stiknn_server_{}_{tag}", std::process::id()))
+}
+
+#[test]
+fn concurrent_mixed_traffic_equals_serialized_replay() {
+    for clients in [2usize, 5] {
+        let registry = fresh_registry(RegistryConfig {
+            base: dense_config(),
+            max_resident: 0,
+            state_dir: None,
+        });
+        let writes = run_traffic(&registry, &["dense", "imp", "mut"], clients, 30);
+        assert!(!writes.is_empty());
+        for name in ["dense", "imp", "mut"] {
+            assert_replay_matches(&registry, name, &writes);
+        }
+    }
+}
+
+#[test]
+fn lru_spill_reload_roundtrips_mid_traffic() {
+    let dir = state_dir("lru");
+    let _ = std::fs::remove_dir_all(&dir);
+    let registry = fresh_registry(RegistryConfig {
+        base: dense_config(),
+        max_resident: 1,
+        state_dir: Some(dir.clone()),
+    });
+    // round-robin traffic over 3 sessions with a single resident slot:
+    // every session switch forces a spill of one and a reload of another
+    let writes = run_traffic(&registry, &["dense", "imp", "mut"], 3, 24);
+    // spills actually happened (snapshots exist for evicted sessions) …
+    let spilled = std::fs::read_dir(&dir).unwrap().count();
+    assert!(spilled >= 2, "expected spill snapshots, found {spilled}");
+    // … and the cap holds once traffic quiesces: eviction skips victims
+    // that are busy with in-flight commands, so enforcement completes on
+    // the next (now uncontended) touch
+    registry.with_session_read("dense", |_| ()).unwrap();
+    let resident = registry.list().iter().filter(|i| i.resident).count();
+    assert!(resident <= 1, "cap violated: {resident} resident");
+    // … and every session still equals its serialized replay, i.e. the
+    // spill→reload cycles were bit-transparent (incl. the v3 mutable
+    // payload carrying edited train set + rows + mutation ledger)
+    for name in ["dense", "imp", "mut"] {
+        assert_replay_matches(&registry, name, &writes);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unspillable_sessions_are_pinned_resident() {
+    let dir = state_dir("pinned");
+    let _ = std::fs::remove_dir_all(&dir);
+    let registry = Arc::new(
+        SessionRegistry::new(
+            train_data(),
+            RegistryConfig {
+                base: dense_config(),
+                max_resident: 1,
+                state_dir: Some(dir.clone()),
+            },
+        )
+        .unwrap(),
+    );
+    // an immutable retained-rows session cannot round-trip a snapshot
+    // (rows are not persisted) — it must never be chosen for eviction
+    let rows_config = implicit_config().with_retained_rows(true);
+    registry.open("rows", None, Some(rows_config)).unwrap();
+    let mut conn = Connection::new(Arc::clone(&registry), Some("rows".to_string()));
+    let (r, _) = conn.execute(r#"{"cmd":"ingest","x":[0.5,0.5],"y":[1]}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    registry.open("other", None, Some(dense_config())).unwrap();
+    let infos = registry.list();
+    for i in &infos {
+        assert!(i.resident, "'{}' should be resident (cap over-run)", i.name);
+    }
+    // the retained rows still answer pair queries — nothing was dropped
+    let (r, _) = conn.execute(r#"{"cmd":"query","i":0,"j":1}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn autosave_checkpoints_dirty_sessions_and_snapshots_restore() {
+    let dir = state_dir("autosave");
+    let _ = std::fs::remove_dir_all(&dir);
+    let registry = Arc::new(
+        SessionRegistry::new(
+            train_data(),
+            RegistryConfig {
+                base: dense_config(),
+                max_resident: 0,
+                state_dir: Some(dir.clone()),
+            },
+        )
+        .unwrap(),
+    );
+    registry.open("a", None, None).unwrap();
+    let mut conn = Connection::new(Arc::clone(&registry), Some("a".to_string()));
+    for _ in 0..2 {
+        let (r, _) = conn.execute(r#"{"cmd":"ingest","x":[0.25,-0.5],"y":[0]}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    }
+    assert!(registry.list()[0].dirty);
+    // direct checkpoint: writes exactly the dirty session, clears dirty
+    assert_eq!(registry.checkpoint_dirty().unwrap(), 1);
+    assert!(!registry.list()[0].dirty);
+    assert_eq!(registry.checkpoint_dirty().unwrap(), 0, "clean = no rewrite");
+    let snap = stiknn::session::store::spill_path(&dir, "a");
+    assert!(snap.exists());
+    // simulated restart: a new registry opens the checkpoint and resumes
+    let reborn = Arc::new(
+        SessionRegistry::new(
+            train_data(),
+            RegistryConfig {
+                base: dense_config(),
+                max_resident: 0,
+                state_dir: Some(dir.clone()),
+            },
+        )
+        .unwrap(),
+    );
+    reborn.open("a", Some(snap.as_path()), None).unwrap();
+    let (tests, live) = reborn
+        .with_session_read("a", |s| (s.tests_seen(), s.cell(0, 1).unwrap()))
+        .unwrap();
+    assert_eq!(tests, 2);
+    let original = registry
+        .with_session_read("a", |s| s.cell(0, 1).unwrap())
+        .unwrap();
+    assert_eq!(live.to_bits(), original.to_bits(), "checkpoint round-trip");
+
+    // the background thread variant: dirty again, wait for the ticker
+    let (r, _) = conn.execute(r#"{"cmd":"ingest","x":[0.25,-0.5],"y":[1]}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert!(registry.list()[0].dirty);
+    let autosave = stiknn::server::start_autosave(
+        Arc::clone(&registry),
+        std::time::Duration::from_millis(25),
+    );
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while registry.list()[0].dirty && std::time::Instant::now() < deadline {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(!registry.list()[0].dirty, "autosave never checkpointed");
+    drop(autosave); // joins the thread promptly
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn connection_verbs_open_use_close_list() {
+    let registry = Arc::new(
+        SessionRegistry::new(
+            train_data(),
+            RegistryConfig {
+                base: dense_config(),
+                max_resident: 0,
+                state_dir: None,
+            },
+        )
+        .unwrap(),
+    );
+    let mut conn = Connection::new(Arc::clone(&registry), None);
+    // no session selected → routed commands fail cleanly
+    let (r, _) = conn.execute(r#"{"cmd":"stats"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("no session"));
+    // open a fresh session (becomes current), then an existing one
+    let (r, _) = conn.execute(r#"{"cmd":"open","name":"a"}"#);
+    assert_eq!(r.get("created").unwrap().as_bool(), Some(true), "{r}");
+    let (r, _) = conn.execute(r#"{"cmd":"stats"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let (r, _) = conn.execute(r#"{"cmd":"open","name":"a"}"#);
+    assert_eq!(r.get("created").unwrap().as_bool(), Some(false), "attach");
+    // overrides: a mutable implicit session accepts edits immediately
+    let (r, _) = conn.execute(r#"{"cmd":"open","name":"m","mutable":true,"k":2}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let (r, _) = conn.execute(r#"{"cmd":"ingest","x":[0.1,0.2],"y":[1]}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let (r, _) = conn.execute(r#"{"cmd":"add_train","x":[0.3,0.4],"y":0}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    // contradictory overrides are rejected
+    let (r, _) = conn.execute(r#"{"cmd":"open","name":"x","mutable":true,"engine":"dense"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    // list: both sessions, current marked
+    let (r, _) = conn.execute(r#"{"cmd":"list"}"#);
+    assert_eq!(r.get("current").unwrap().as_str(), Some("m"), "{r}");
+    let sessions = r.get("sessions").unwrap().as_arr().unwrap();
+    assert_eq!(sessions.len(), 2, "{r}");
+    // use: switch back, unknown name is a clean error
+    let (r, _) = conn.execute(r#"{"cmd":"use","name":"a"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let (r, _) = conn.execute(r#"{"cmd":"use","name":"ghost"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    // invalid names can't become spill filenames
+    let (r, _) = conn.execute(r#"{"cmd":"open","name":"../evil"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    // open on a missing snapshot answers cleanly and keeps serving
+    let (r, _) = conn.execute(r#"{"cmd":"open","name":"s","snapshot":"/nonexistent/x.snap"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("snapshot"));
+    // close defaults to the current session and clears it
+    let (r, _) = conn.execute(r#"{"cmd":"close"}"#);
+    assert_eq!(r.get("name").unwrap().as_str(), Some("a"), "{r}");
+    let (r, _) = conn.execute(r#"{"cmd":"stats"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    // the other session survives; closing an unknown name errors
+    let (r, _) = conn.execute(r#"{"cmd":"close","name":"ghost"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    let (r, _) = conn.execute(r#"{"cmd":"use","name":"m"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+}
