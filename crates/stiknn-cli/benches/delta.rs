@@ -1,0 +1,130 @@
+//! §DELTA — single-edit latency vs full recompute (EXPERIMENTS.md
+//! §DELTA, DESIGN.md §11).
+//!
+//! A mutable session repairs one training-set edit in O(t·(d + n));
+//! the alternative a deployment actually faces is rebuilding the
+//! session from scratch — O(t·(n·d + n log n)) distances + sorts + row
+//! retention over the whole test history. This bench measures both at
+//! n ∈ {600, 2k, 8k, 32k} (quick mode stops at 8k so CI still exercises
+//! the acceptance size) and writes `BENCH_delta.json` at the REPO ROOT.
+//!
+//! Edits are benchmarked as an add+remove PAIR so the session size is
+//! stable across iterations (reported per-edit = pair/2); relabel is
+//! measured separately (the cheapest edit — no rank shifts).
+//!
+//!     cargo bench --bench delta              # full: n ∈ {600, 2k, 8k, 32k}
+//!     cargo bench --bench delta -- --quick   # CI:   n ∈ {600, 2k, 8k}
+
+use stiknn::bench::{BenchConfig, Suite};
+use stiknn::data::load_dataset;
+use stiknn::session::{Engine, SessionConfig, ValuationSession};
+use stiknn::util::json::Json;
+
+fn mutable_session(n: usize, t: usize, k: usize) -> (ValuationSession, Vec<f32>, Vec<i32>) {
+    // "pol" (d=26): a Table-1 shape where the recompute's n·d distance
+    // work is realistic rather than the d=2 toy geometry.
+    let ds = load_dataset("pol", n, t, 7).expect("registry dataset");
+    let config = SessionConfig::new(k)
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true);
+    let mut s = ValuationSession::from_dataset(&ds, config).expect("session");
+    s.ingest(&ds.test_x, &ds.test_y).expect("ingest test split");
+    (s, ds.test_x.clone(), ds.test_y.clone())
+}
+
+fn main() {
+    let quick_mode = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("STIKNN_BENCH_QUICK").is_some();
+    let k = 5;
+    let t = 64;
+    let sizes: Vec<usize> = if quick_mode {
+        // keep 8k: the ≥10× acceptance claim lives there and the edit
+        // path is cheap enough for CI
+        vec![600, 2000, 8000]
+    } else {
+        vec![600, 2000, 8000, 32000]
+    };
+
+    let mut suite = Suite::new(&format!(
+        "delta edits vs full session recompute (t={t}, k={k}, dataset=pol)"
+    ));
+    suite = suite.with_config(BenchConfig {
+        min_time: std::time::Duration::from_millis(300),
+        max_iters: 20,
+        warmup_iters: 1,
+    });
+
+    let mut entries = Vec::new();
+    for &n in &sizes {
+        let (mut session, test_x, test_y) = mutable_session(n, t, k);
+        let probe: Vec<f32> = session.train_row(0).to_vec();
+
+        // add+remove pair: n returns to its starting value every iter
+        let pair = suite.bench(&format!("edit pair (add+remove) n={n}"), || {
+            let id = session.add_train(&probe, 1).expect("add");
+            session.remove_train(id).expect("remove");
+        });
+        let edit_secs = pair.mean_secs() / 2.0;
+
+        let relabel = suite.bench(&format!("relabel n={n}"), || {
+            let y = session.train_labels()[3];
+            session.relabel_train(3, 1 - y).expect("relabel");
+        });
+
+        // full recompute: rebuild the mutable session over the current
+        // train set and re-ingest the whole retained test history — the
+        // operation a non-delta deployment performs per edit
+        let d = session.d();
+        let train_x: Vec<f32> = (0..session.n())
+            .flat_map(|i| session.train_row(i).to_vec())
+            .collect();
+        let train_y: Vec<i32> = session.train_labels().to_vec();
+        let recompute = suite.bench(&format!("full recompute n={n}"), || {
+            let config = SessionConfig::new(k)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true)
+                .with_mutable(true);
+            let mut fresh =
+                ValuationSession::new(train_x.clone(), train_y.clone(), d, config)
+                    .expect("session");
+            fresh.ingest(&test_x, &test_y).expect("ingest");
+            fresh
+        });
+
+        let speedup = recompute.mean_secs() / edit_secs;
+        println!(
+            "n={n:>6}: edit {:.6}s, relabel {:.6}s, full recompute {:.4}s, speedup {speedup:.1}x",
+            edit_secs,
+            relabel.mean_secs(),
+            recompute.mean_secs()
+        );
+        entries.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("t", Json::num(t as f64)),
+            ("edit_secs", Json::num(edit_secs)),
+            ("relabel_secs", Json::num(relabel.mean_secs())),
+            ("full_recompute_secs", Json::num(recompute.mean_secs())),
+            ("speedup_recompute_over_edit", Json::num(speedup)),
+        ]));
+    }
+
+    println!("{}", suite.render());
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("delta")),
+        ("quick", Json::Bool(quick_mode)),
+        ("k", Json::num(k as f64)),
+        ("t", Json::num(t as f64)),
+        ("dataset", Json::str("pol")),
+        ("sizes", Json::arr(entries)),
+        ("suite", suite.to_json()),
+    ]);
+    // Workspace root, not CWD: benches run with CWD = the package dir
+    // but the trajectory artifact lives beside ROADMAP.md.
+    let out = stiknn::bench::artifact_path(env!("CARGO_MANIFEST_DIR"), "BENCH_delta.json");
+    match std::fs::write(&out, artifact.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

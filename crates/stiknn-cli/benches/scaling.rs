@@ -1,0 +1,149 @@
+//! SEC3.2-C — the headline complexity claim: STI-KNN is O(t·n²) while the
+//! baseline Eq. (3) enumeration is O(2ⁿ), and KNN-Shapley (per-point) is
+//! O(t·n log n).
+//!
+//! Regenerates: time-vs-n series for all three algorithms (the paper's
+//! complexity discussion), empirical log-log slopes, and the t-scaling
+//! series (linear in t; §3.2 "Effect of t on the complexity").
+//!
+//! Also writes `BENCH_scaling.json` (raw measurements + fitted slopes +
+//! verdicts) — the machine-readable perf-trajectory artifact CI uploads
+//! per commit so regressions show up as a series, not an anecdote.
+//!
+//!     cargo bench --bench scaling
+
+use stiknn::bench::{quick, Suite};
+use stiknn::data::load_dataset;
+use stiknn::report::table::Table;
+use stiknn::shapley::knn_shapley::knn_shapley;
+use stiknn::shapley::sti_exact::sti_exact;
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+use stiknn::util::json::Json;
+use stiknn::util::stats::loglog_slope;
+
+fn main() {
+    let k = 5;
+
+    // ---- n-scaling: STI-KNN vs KNN-Shapley --------------------------
+    let mut suite = Suite::new("n-scaling (t=64, k=5)").with_config(quick());
+    // start at 400: below that the O(n log n) sort dominates the
+    // optimized O(n²) assembly (~0.65 ns/cell) and flattens the slope
+    let ns = [400usize, 800, 1600, 3200];
+    let mut sti_times = Vec::new();
+    let mut ks_times = Vec::new();
+    for &n in &ns {
+        let ds = load_dataset("cpu", n, 64, 7).unwrap();
+        let m = suite.bench(&format!("sti_knn n={n}"), || {
+            sti_knn(
+                &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+                &StiParams::new(k),
+            )
+        });
+        sti_times.push(m.mean_secs());
+        let m = suite.bench(&format!("knn_shapley n={n}"), || {
+            knn_shapley(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, k)
+        });
+        ks_times.push(m.mean_secs());
+    }
+
+    // ---- brute-force O(2^n): tiny n only -----------------------------
+    let mut brute = Suite::new("brute force Eq.(3) (t=8, k=3)").with_config(quick());
+    let bns = [8usize, 10, 12, 14, 16];
+    let mut brute_times = Vec::new();
+    for &n in &bns {
+        let ds = load_dataset("cpu", n, 8, 7).unwrap();
+        let m = brute.bench(&format!("sti_exact n={n}"), || {
+            sti_exact(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, 3)
+        });
+        brute_times.push(m.mean_secs());
+    }
+
+    // ---- t-scaling ----------------------------------------------------
+    let mut tsuite = Suite::new("t-scaling (n=400, k=5)").with_config(quick());
+    let ts = [25usize, 50, 100, 200, 400];
+    let mut t_times = Vec::new();
+    for &t in &ts {
+        let ds = load_dataset("cpu", 400, t, 7).unwrap();
+        let m = tsuite.bench(&format!("sti_knn t={t}"), || {
+            sti_knn(
+                &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+                &StiParams::new(k),
+            )
+        });
+        t_times.push(m.mean_secs());
+    }
+
+    println!("{}", suite.render());
+    println!("{}", brute.render());
+    println!("{}", tsuite.render());
+
+    // ---- the paper's claim, as numbers --------------------------------
+    let nsf: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    let bnsf: Vec<f64> = bns.iter().map(|&n| n as f64).collect();
+    let tsf: Vec<f64> = ts.iter().map(|&t| t as f64).collect();
+    let sti_slope = loglog_slope(&nsf, &sti_times);
+    let ks_slope = loglog_slope(&nsf, &ks_times);
+    let t_slope = loglog_slope(&tsf, &t_times);
+    // 2^n => log t = n·ln2 + c: fit ln(time) against n directly
+    let lnb: Vec<f64> = brute_times.iter().map(|t| t.ln()).collect();
+    let (b_slope, _) = stiknn::util::stats::linfit(&bnsf, &lnb);
+
+    // single source of truth for the claims: (json key, table label,
+    // expected label, expected value, measured, accepted range)
+    let verdicts = [
+        ("sti_knn_n_slope", "STI-KNN ~ n^2", "slope 2.0", 2.0, sti_slope, (1.7, 2.4)),
+        ("knn_shapley_n_slope", "KNN-Shapley ~ n log n", "slope ~1.1", 1.1, ks_slope, (0.8, 1.5)),
+        ("sti_knn_t_slope", "STI-KNN linear in t", "slope 1.0", 1.0, t_slope, (0.8, 1.2)),
+        ("brute_force_ln_slope", "brute force ~ 2^n", "ln-slope ~0.69", 0.69, b_slope, (0.5, 0.9)),
+    ];
+
+    let mut t = Table::new(&["claim", "expected", "measured", "verdict"]);
+    for &(_, label, expected_label, _, measured, (lo, hi)) in &verdicts {
+        t.row(&[
+            label.into(),
+            expected_label.into(),
+            format!("{measured:.2}"),
+            pass(lo <= measured && measured <= hi),
+        ]);
+    }
+    println!("\ncomplexity verdicts (EXPERIMENTS.md SEC3.2-C):\n{}", t.render());
+
+    // crossover: at what n does brute force become slower than STI-KNN's
+    // LARGEST measured run? extrapolate the 2^n fit
+    let n_big = *ns.last().unwrap();
+    let t_big = sti_times.last().unwrap();
+    let cross = (t_big.ln() - (brute_times[0].ln() - b_slope * bnsf[0])) / b_slope;
+    println!(
+        "extrapolated: brute force exceeds STI-KNN's n={n_big} wall time already at n ≈ {cross:.0} \
+         (the paper's 'no real-world applications at this level')"
+    );
+
+    // machine-readable artifact: raw suites + fitted slopes + verdicts
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("scaling")),
+        ("suites", Json::arr([suite.to_json(), brute.to_json(), tsuite.to_json()])),
+        (
+            "slopes",
+            Json::arr(verdicts.iter().map(
+                |&(name, _, _, expected, measured, (lo, hi))| {
+                    Json::obj(vec![
+                        ("name", Json::str(name)),
+                        ("expected", Json::num(expected)),
+                        ("measured", Json::num(measured)),
+                        ("pass", Json::Bool(lo <= measured && measured <= hi)),
+                    ])
+                },
+            )),
+        ),
+        ("brute_crossover_n", Json::num(cross)),
+    ]);
+    let out = stiknn::bench::artifact_path(env!("CARGO_MANIFEST_DIR"), "BENCH_scaling.json");
+    match std::fs::write(&out, artifact.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}
+
+fn pass(ok: bool) -> String {
+    if ok { "PASS".into() } else { "FAIL".into() }
+}

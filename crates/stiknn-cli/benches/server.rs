@@ -1,0 +1,186 @@
+//! §SERVER — concurrent multi-session serve-layer throughput
+//! (EXPERIMENTS.md §SERVER).
+//!
+//! The server's pitch (DESIGN.md §12) is that per-session RwLocks let
+//! read traffic scale with client count while writes serialize per
+//! session without blocking other sessions. This bench measures
+//! commands/second across a client-count × read/write-mix grid (every
+//! client drives its own [`Connection`] against one shared registry,
+//! round-robin over 4 sessions), plus the LRU spill→reload cycle cost,
+//! and writes the trajectory artifact `BENCH_server.json` at the REPO
+//! ROOT (CI uploads it per commit).
+//!
+//!     cargo bench --bench server              # full size (n=600)
+//!     cargo bench --bench server -- --quick   # CI size   (n=200)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use stiknn::bench::{quick, Suite};
+use stiknn::data::load_dataset;
+use stiknn::server::{Connection, RegistryConfig, SessionRegistry, TrainData};
+use stiknn::session::{Engine, SessionConfig};
+use stiknn::util::json::Json;
+
+const SESSIONS: usize = 4;
+
+/// Commands per client per bench iteration.
+const CMDS: usize = 64;
+
+fn registry(
+    train: &TrainData,
+    config: SessionConfig,
+    state: Option<(usize, &Path)>,
+) -> Arc<SessionRegistry> {
+    let (max_resident, state_dir) = match state {
+        Some((cap, dir)) => (cap, Some(dir.to_path_buf())),
+        None => (0, None),
+    };
+    let reg = Arc::new(
+        SessionRegistry::new(
+            train.clone(),
+            RegistryConfig {
+                base: config,
+                max_resident,
+                state_dir,
+            },
+        )
+        .unwrap(),
+    );
+    for s in 0..SESSIONS {
+        reg.open(&format!("s{s}"), None, None).unwrap();
+    }
+    // warm every session with one batch so reads have state to serve
+    let mut conn = Connection::new(Arc::clone(&reg), None);
+    for s in 0..SESSIONS {
+        let (r, _) = conn.execute(&format!(r#"{{"cmd":"use","name":"s{s}"}}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (r, _) = conn.execute(r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    }
+    reg
+}
+
+/// One client's command for (step): `write_every` = 0 means read-only.
+fn command(d: usize, step: usize, write_every: usize) -> String {
+    if write_every > 0 && step % write_every == 0 {
+        let x: Vec<String> = (0..d).map(|j| format!("0.{}", (step + j) % 100)).collect();
+        return format!(
+            r#"{{"cmd":"ingest","x":[{}],"y":[{}]}}"#,
+            x.join(","),
+            step % 2
+        );
+    }
+    match step % 3 {
+        0 => r#"{"cmd":"values","i":3}"#.to_string(),
+        1 => r#"{"cmd":"topk","k":10,"by":"rowsum"}"#.to_string(),
+        _ => r#"{"cmd":"stats"}"#.to_string(),
+    }
+}
+
+/// Run `clients` threads of `CMDS` commands each; every thread sticks to
+/// one session (client % SESSIONS) so writes contend only when clients
+/// share a session.
+fn drive(reg: &Arc<SessionRegistry>, d: usize, clients: usize, write_every: usize) {
+    std::thread::scope(|scope| {
+        for client in 0..clients {
+            let reg = Arc::clone(reg);
+            scope.spawn(move || {
+                let mut conn =
+                    Connection::new(reg, Some(format!("s{}", client % SESSIONS)));
+                for step in 0..CMDS {
+                    let (r, _) = conn.execute(&command(d, step, write_every));
+                    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    let quick_mode = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("STIKNN_BENCH_QUICK").is_some();
+    let n = if quick_mode { 200usize } else { 600 };
+    let k = 5;
+    let ds = load_dataset("cpu", n, 8, 7).unwrap();
+    let train = TrainData::from_dataset(&ds);
+    // implicit sessions: O(n log n) per ingested point keeps the bench
+    // about lock contention, not about matrix sweeps
+    let config = SessionConfig::new(k).with_engine(Engine::Implicit);
+
+    let mut suite = Suite::new(&format!(
+        "server throughput (n={n}, k={k}, {SESSIONS} sessions, {CMDS} cmds/client)"
+    ));
+    if quick_mode {
+        suite = suite.with_config(quick());
+    }
+
+    let client_counts: &[usize] = if quick_mode { &[1, 4] } else { &[1, 2, 4, 8] };
+    // write_every: 0 = read-only, 4 = 25% writes, 1 = all writes
+    let mixes: &[(usize, &str)] = &[(0, "reads"), (4, "mixed"), (1, "writes")];
+    let mut grid = Vec::new();
+    for &clients in client_counts {
+        for &(write_every, label) in mixes {
+            let reg = registry(&train, config, None);
+            let m = suite.bench(&format!("{label} x{clients}"), || {
+                drive(&reg, ds.d, clients, write_every)
+            });
+            let cmds_per_sec = (clients * CMDS) as f64 / m.mean_secs();
+            grid.push((clients, label, cmds_per_sec, m));
+        }
+    }
+
+    // LRU spill→reload cycle: 4 sessions behind a 2-slot cap, touched
+    // round-robin — every touch beyond the cap evicts one session and
+    // restores another (the save amortizes away once sessions are clean,
+    // so steady state measures the reload side)
+    let state = std::env::temp_dir().join(format!("stiknn_bench_server_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&state);
+    let reg = registry(&train, config, Some((2, state.as_path())));
+    let spill = suite.bench("lru spill+reload touch", || {
+        let mut conn = Connection::new(Arc::clone(&reg), None);
+        for s in 0..SESSIONS {
+            let (r, _) = conn.execute(&format!(r#"{{"cmd":"use","name":"s{s}"}}"#));
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+            let (r, _) = conn.execute(r#"{"cmd":"stats"}"#);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        }
+    });
+    let _ = std::fs::remove_dir_all(&state);
+
+    println!("{}", suite.render());
+    for (clients, label, cmds_per_sec, _) in &grid {
+        println!("{label:>6} x{clients}: {cmds_per_sec:.0} cmds/s");
+    }
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("server")),
+        ("quick", Json::Bool(quick_mode)),
+        ("n", Json::num(n as f64)),
+        ("k", Json::num(k as f64)),
+        ("sessions", Json::num(SESSIONS as f64)),
+        ("cmds_per_client", Json::num(CMDS as f64)),
+        (
+            "grid",
+            Json::arr(grid.iter().map(|(clients, label, cmds_per_sec, m)| {
+                Json::obj(vec![
+                    ("clients", Json::num(*clients as f64)),
+                    ("mix", Json::str(*label)),
+                    ("cmds_per_sec", Json::num(*cmds_per_sec)),
+                    ("mean_secs", Json::num(m.mean_secs())),
+                ])
+            })),
+        ),
+        (
+            "lru_cycle_secs",
+            Json::num(spill.mean_secs() / SESSIONS as f64),
+        ),
+        ("suite", suite.to_json()),
+    ]);
+    // Repo root, not CWD (same rationale as BENCH_session.json).
+    let out = stiknn::bench::artifact_path(env!("CARGO_MANIFEST_DIR"), "BENCH_server.json");
+    match std::fs::write(&out, artifact.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

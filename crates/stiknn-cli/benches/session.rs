@@ -1,0 +1,125 @@
+//! §SERVE — one-shot vs incremental session-ingest throughput
+//! (EXPERIMENTS.md §SERVE).
+//!
+//! The session layer's pitch is that streaming ingest costs ~nothing
+//! over a one-shot run (Eq. 9 additivity: same sweeps, just split across
+//! calls), while tiny batches expose the per-call fixed cost (prep
+//! allocation + final mirror being amortized over fewer points). This
+//! bench measures both sides plus snapshot save/restore, and writes the
+//! machine-readable trajectory artifact `BENCH_session.json` at the REPO
+//! WORKSPACE ROOT (resolved from CARGO_MANIFEST_DIR ancestors by
+//! `bench::artifact_path`, so the location does not
+//! depend on the invoking working directory — CI uploads it per commit).
+//!
+//!     cargo bench --bench session              # full size (n=600, t=150)
+//!     cargo bench --bench session -- --quick   # CI size   (n=200, t=60)
+
+use stiknn::bench::{quick, Suite};
+use stiknn::data::load_dataset;
+use stiknn::session::{SessionConfig, ValuationSession};
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+use stiknn::util::json::Json;
+
+fn main() {
+    let quick_mode = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("STIKNN_BENCH_QUICK").is_some();
+    let (n, t) = if quick_mode { (200usize, 60usize) } else { (600, 150) };
+    let k = 5;
+    let ds = load_dataset("cpu", n, t, 7).unwrap();
+
+    let mut suite = Suite::new(&format!("one-shot vs incremental ingest (n={n}, t={t}, k={k})"));
+    if quick_mode {
+        suite = suite.with_config(quick());
+    }
+
+    let one_shot = suite.bench("one-shot sti_knn", || {
+        sti_knn(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &StiParams::new(k),
+        )
+    });
+
+    // Incremental ingest across batch sizes: same t test points, cut
+    // into contiguous batches of b, through a fresh session each run.
+    let batch_sizes = [1usize, 8, 32, t];
+    let mut batch_results = Vec::new();
+    for &b in &batch_sizes {
+        let m = suite.bench(&format!("session ingest batch={b}"), || {
+            let mut s = ValuationSession::from_dataset(&ds, SessionConfig::new(k)).unwrap();
+            let mut lo = 0;
+            while lo < t {
+                let hi = (lo + b).min(t);
+                s.ingest(&ds.test_x[lo * ds.d..hi * ds.d], &ds.test_y[lo..hi])
+                    .unwrap();
+                lo = hi;
+            }
+            s.matrix().unwrap()
+        });
+        batch_results.push((b, m));
+    }
+
+    // Snapshot persistence cost at this n.
+    let mut warm = ValuationSession::from_dataset(&ds, SessionConfig::new(k)).unwrap();
+    warm.ingest(&ds.test_x, &ds.test_y).unwrap();
+    let snap_path = std::env::temp_dir().join(format!(
+        "stiknn_bench_session_{}.snap",
+        std::process::id()
+    ));
+    let save = suite.bench("snapshot save", || warm.save(&snap_path).unwrap());
+    let restore = suite.bench("snapshot restore", || {
+        ValuationSession::restore(
+            &snap_path,
+            ds.train_x.clone(),
+            ds.train_y.clone(),
+            ds.d,
+            SessionConfig::new(k),
+        )
+        .unwrap()
+    });
+    let _ = std::fs::remove_file(&snap_path);
+
+    println!("{}", suite.render());
+    for (b, m) in &batch_results {
+        println!(
+            "batch={b:>4}: {:.2}x one-shot, {:.1} test-points/s",
+            m.mean_secs() / one_shot.mean_secs(),
+            t as f64 / m.mean_secs()
+        );
+    }
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("session")),
+        ("quick", Json::Bool(quick_mode)),
+        ("n", Json::num(n as f64)),
+        ("t", Json::num(t as f64)),
+        ("k", Json::num(k as f64)),
+        ("one_shot_secs", Json::num(one_shot.mean_secs())),
+        (
+            "ingest",
+            Json::arr(batch_results.iter().map(|(b, m)| {
+                Json::obj(vec![
+                    ("batch", Json::num(*b as f64)),
+                    ("mean_secs", Json::num(m.mean_secs())),
+                    (
+                        "overhead_vs_one_shot",
+                        Json::num(m.mean_secs() / one_shot.mean_secs()),
+                    ),
+                    (
+                        "test_points_per_sec",
+                        Json::num(t as f64 / m.mean_secs()),
+                    ),
+                ])
+            })),
+        ),
+        ("snapshot_save_secs", Json::num(save.mean_secs())),
+        ("snapshot_restore_secs", Json::num(restore.mean_secs())),
+        ("suite", suite.to_json()),
+    ]);
+    // Workspace root, not CWD: benches run with CWD = the package dir
+    // but the trajectory artifact lives beside ROADMAP.md.
+    let out = stiknn::bench::artifact_path(env!("CARGO_MANIFEST_DIR"), "BENCH_session.json");
+    match std::fs::write(&out, artifact.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

@@ -1,0 +1,148 @@
+//! §VALUES — dense O(t·n²) matrix sweep vs implicit O(t·n log n)
+//! per-point values (EXPERIMENTS.md §VALUES, DESIGN.md §10).
+//!
+//! The implicit engine's pitch is asymptotic, not constant-factor: per
+//! test point, the dense path walks n²/2 accumulator cells while the
+//! implicit path does one O(n log n) prep + one O(n) suffix-sum fold.
+//! This bench measures both single-threaded across n, runs the implicit
+//! engine at an n where the dense matrix would need gigabytes (n=32k →
+//! 8.2 GB of f64, deliberately NOT attempted dense), probes peak RSS
+//! before/after the dense sweeps, and writes the machine-readable
+//! trajectory artifact `BENCH_values.json` at the REPO ROOT.
+//!
+//!     cargo bench --bench values              # full (CI runs this): n ∈ {600, 2k, 8k, 32k}
+//!     cargo bench --bench values -- --quick   # fast local smoke:    n ∈ {600, 2k}
+
+use stiknn::bench::{quick, BenchConfig, Suite};
+use stiknn::data::load_dataset;
+use stiknn::shapley::sti_knn::{sti_knn, StiParams};
+use stiknn::shapley::values::sti_values;
+use stiknn::util::json::Json;
+
+/// VmHWM (peak resident set) in kB from /proc/self/status — linux only;
+/// `None` elsewhere or if the file is unreadable.
+fn peak_rss_kb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("VmHWM"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse::<f64>().ok())
+}
+
+fn json_opt(v: Option<f64>) -> Json {
+    // Json::num maps non-finite to null; NAN is the "absent" carrier.
+    Json::num(v.unwrap_or(f64::NAN))
+}
+
+fn main() {
+    let quick_mode = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("STIKNN_BENCH_QUICK").is_some();
+    let k = 5;
+    let t = 64;
+    // (n, attempt the dense sweep at this n?)
+    let sizes: Vec<(usize, bool)> = if quick_mode {
+        vec![(600, true), (2000, true)]
+    } else {
+        // n=32k: implicit only — the dense accumulator alone would be
+        // 32000² × 8 B ≈ 8.2 GB, which is the point of the exercise.
+        vec![(600, true), (2000, true), (8000, true), (32000, false)]
+    };
+
+    let mut suite = Suite::new(&format!(
+        "dense matrix sweep vs implicit per-point values (t={t}, k={k}, single-thread)"
+    ));
+    suite = suite.with_config(if quick_mode {
+        quick()
+    } else {
+        // The n=8k dense sweep runs ~seconds per iteration; keep the
+        // total bounded while still averaging a few runs at small n.
+        BenchConfig {
+            min_time: std::time::Duration::from_millis(500),
+            max_iters: 10,
+            warmup_iters: 1,
+        }
+    });
+
+    let mut entries = Vec::new();
+    // All implicit runs first, then dense: VmHWM is a high-water mark, so
+    // this order lets the implicit-only phase record its (small) peak
+    // before the dense allocations raise it permanently.
+    let mut implicit_secs = std::collections::BTreeMap::new();
+    for &(n, _) in &sizes {
+        let ds = load_dataset("cpu", n, t, 7).expect("registry dataset");
+        let m = suite.bench(&format!("implicit values n={n}"), || {
+            sti_values(
+                &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+                &StiParams::new(k),
+            )
+        });
+        implicit_secs.insert(n, m.mean_secs());
+    }
+    let rss_after_implicit_kb = peak_rss_kb();
+
+    for &(n, dense) in &sizes {
+        let implicit = implicit_secs[&n];
+        let dense_secs = if dense {
+            let ds = load_dataset("cpu", n, t, 7).expect("registry dataset");
+            let m = suite.bench(&format!("dense sweep n={n}"), || {
+                sti_knn(
+                    &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+                    &StiParams::new(k),
+                )
+            });
+            Some(m.mean_secs())
+        } else {
+            None
+        };
+        let speedup = dense_secs.map(|d| d / implicit);
+        println!(
+            "n={n:>6}: implicit {implicit:.4}s{}",
+            match (dense_secs, speedup) {
+                (Some(d), Some(s)) => format!(", dense {d:.4}s, speedup {s:.1}x"),
+                _ => ", dense not attempted (matrix would not fit the budget)".to_string(),
+            }
+        );
+        entries.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("t", Json::num(t as f64)),
+            ("implicit_secs", Json::num(implicit)),
+            ("dense_secs", json_opt(dense_secs)),
+            ("speedup_dense_over_implicit", json_opt(speedup)),
+            (
+                "implicit_test_points_per_sec",
+                Json::num(t as f64 / implicit),
+            ),
+            ("dense_attempted", Json::Bool(dense)),
+        ]));
+    }
+    let rss_final_kb = peak_rss_kb();
+
+    println!("{}", suite.render());
+    if let (Some(a), Some(b)) = (rss_after_implicit_kb, rss_final_kb) {
+        println!(
+            "peak RSS: {:.0} MB after all implicit runs (incl. n={}), {:.0} MB after dense",
+            a / 1024.0,
+            sizes.last().unwrap().0,
+            b / 1024.0
+        );
+    }
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("values")),
+        ("quick", Json::Bool(quick_mode)),
+        ("k", Json::num(k as f64)),
+        ("t", Json::num(t as f64)),
+        ("sizes", Json::arr(entries)),
+        ("peak_rss_kb_after_implicit", json_opt(rss_after_implicit_kb)),
+        ("peak_rss_kb_final", json_opt(rss_final_kb)),
+        ("suite", suite.to_json()),
+    ]);
+    // Workspace root, not CWD: benches run with CWD = the package dir
+    // but the trajectory artifact lives beside ROADMAP.md.
+    let out = stiknn::bench::artifact_path(env!("CARGO_MANIFEST_DIR"), "BENCH_values.json");
+    match std::fs::write(&out, artifact.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

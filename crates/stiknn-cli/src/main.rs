@@ -1,0 +1,939 @@
+//! `stiknn` CLI — the L3 entry point.
+//!
+//! Subcommands:
+//!   value     compute the STI-KNN interaction matrix for a dataset
+//!   values    per-point values (main + rowsum) via the implicit engine (§10)
+//!   analyze   interaction heatmap + axiom checks + block structure (§4)
+//!   ksens     k-sensitivity sweep (§3.2, Figs. 7–10)
+//!   mislabel  flip labels and detect them from interaction patterns (Fig. 5)
+//!   serve     concurrent multi-session NDJSON server: stdio or --listen TCP; --shard-of J/N (§9/§12/§13)
+//!   mutate    live training-set edits with exact O(t·n) repairs (§11)
+//!   session   inspect a session snapshot file (§9/§11)
+//!   datasets  list the Table-1 dataset registry
+//!   artifacts list the AOT artifact manifest
+//!
+//! `stiknn help <subcommand>` and `stiknn <subcommand> --help` both print
+//! per-command usage; `stiknn --version` prints the crate version.
+//! Every command accepts `--engine rust|xla` where applicable; XLA uses
+//! the AOT artifacts under --artifacts (default: artifacts/).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use stiknn::analysis::ksens::k_sensitivity;
+use stiknn::analysis::mislabel::{
+    auc, mislabel_scores, mislabel_scores_values, precision_recall, top_prevalence_recall,
+};
+use stiknn::analysis::structure::block_structure;
+use stiknn::coordinator::{run_job_with_engine, run_values_job, Assembly, ValuationJob};
+use stiknn::data::{corrupt, csv, load_dataset_any, registry_names};
+use stiknn::knn::distance::Metric;
+use stiknn::report::heatmap::render_heatmap;
+use stiknn::report::session::{registry_table, snapshot_info_table, topk_table};
+use stiknn::report::table::Table;
+use stiknn::runtime::{Engine, Manifest};
+use stiknn::server::{self, RegistryConfig, SessionRegistry, TrainData};
+use stiknn::session::{store, SessionConfig, TopBy, ValuationSession};
+use stiknn::shapley::axioms;
+use stiknn::shapley::values::{sti_point_values, Engine as ValueEngine, PointValues};
+use stiknn::shapley::StiParams;
+use stiknn::util::cli::{wants_help, Args, Command};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("value") => cmd_value(&argv[1..]),
+        Some("values") => cmd_values(&argv[1..]),
+        Some("analyze") => cmd_analyze(&argv[1..]),
+        Some("ksens") => cmd_ksens(&argv[1..]),
+        Some("mislabel") => cmd_mislabel(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("mutate") => cmd_mutate(&argv[1..]),
+        Some("session") => cmd_session(&argv[1..]),
+        Some("datasets") => cmd_datasets(&argv[1..]),
+        Some("artifacts") => cmd_artifacts(&argv[1..]),
+        Some("--version") | Some("-V") | Some("version") => {
+            println!("stiknn {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        Some("help") => cmd_help(&argv[1..]),
+        Some("--help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "stiknn {} — exact pair-interaction Data Shapley for KNN in O(t·n²)\n\n\
+         subcommands:\n\
+           value      compute the interaction matrix (CSV out)\n\
+           values     per-point values via the implicit O(t·n log n) engine\n\
+           analyze    heatmap + axioms + class-block structure\n\
+           ksens      k-sensitivity sweep (paper §3.2)\n\
+           mislabel   mislabel-detection experiment (paper Fig. 5)\n\
+           serve      concurrent valuation server (NDJSON on stdio or --listen TCP)\n\
+           mutate     live training-set edits (add/remove/relabel) with exact repairs\n\
+           session    inspect a session snapshot file\n\
+           datasets   list the dataset registry (paper Table 1)\n\
+           artifacts  list the AOT artifact manifest\n\n\
+         run `stiknn help <subcommand>` or `stiknn <subcommand> --help` for \
+         options; `stiknn --version` prints the version",
+        env!("CARGO_PKG_VERSION")
+    );
+}
+
+/// Per-command usage text for `stiknn help <subcommand>`.
+fn usage_for(name: &str) -> Option<String> {
+    match name {
+        "value" => Some(value_cmd().usage()),
+        "values" => Some(values_cmd().usage()),
+        "analyze" => Some(analyze_cmd().usage()),
+        "ksens" => Some(ksens_cmd().usage()),
+        "mislabel" => Some(mislabel_cmd().usage()),
+        "serve" => Some(serve_cmd().usage()),
+        "mutate" => Some(mutate_cmd().usage()),
+        "session" => Some(session_cmd().usage()),
+        "datasets" => Some("datasets — list the dataset registry (no options)\n".to_string()),
+        "artifacts" => Some(artifacts_cmd().usage()),
+        _ => None,
+    }
+}
+
+fn cmd_help(argv: &[String]) -> anyhow::Result<()> {
+    match argv.first().map(|s| s.as_str()) {
+        None => {
+            print_help();
+            Ok(())
+        }
+        Some(topic) => match usage_for(topic) {
+            Some(usage) => {
+                println!("{usage}");
+                Ok(())
+            }
+            None => {
+                eprintln!("unknown subcommand '{topic}'\n");
+                print_help();
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
+fn common_opts(cmd: Command) -> Command {
+    cmd.opt("dataset", "dataset name (see `stiknn datasets`) or csv:PATH", "circle")
+        .opt("n-train", "training points (0 = registry default)", "0")
+        .opt("n-test", "test points (0 = registry default)", "0")
+        .opt("k", "KNN parameter", "5")
+        .opt("seed", "dataset seed", "42")
+        .opt("engine", "rust | xla", "rust")
+        .opt("workers", "worker threads (0 = all cores)", "0")
+        .opt("block", "test points per shard", "32")
+        .opt(
+            "assembly",
+            "rust-engine sweep strategy: banded (O(n²) memory) | sharded (legacy O(W·n²))",
+            "banded",
+        )
+        .opt(
+            "band-rows",
+            "accumulator rows per band for --assembly banded (0 = auto-balanced)",
+            "0",
+        )
+        .opt("artifacts", "artifacts directory", "artifacts")
+}
+
+fn parse_common(args: &Args) -> anyhow::Result<(stiknn::data::Dataset, ValuationJob, PathBuf)> {
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let k: usize = args.require("k")?;
+    let engine = Engine::parse(&args.get_or("engine", "rust"))
+        .ok_or_else(|| anyhow::anyhow!("--engine must be rust or xla"))?;
+    let workers: usize = args.require("workers")?;
+    let block: usize = args.require("block")?;
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
+    let band_rows: usize = args.require("band-rows")?;
+    let assembly = match args.get_or("assembly", "banded").as_str() {
+        "banded" => Assembly::RowBanded { band_rows },
+        "sharded" => Assembly::TestSharded,
+        other => anyhow::bail!("--assembly must be banded or sharded, got '{other}'"),
+    };
+    let mut job = ValuationJob::new(k)
+        .with_engine(engine)
+        .with_block_size(block)
+        .with_assembly(assembly);
+    if workers > 0 {
+        job = job.with_workers(workers);
+    }
+    Ok((ds, job, PathBuf::from(args.get_or("artifacts", "artifacts"))))
+}
+
+fn value_cmd() -> Command {
+    common_opts(Command::new("value", "compute the STI-KNN interaction matrix"))
+        .opt("out", "output CSV path ('-' to skip)", "phi.csv")
+}
+
+fn cmd_value(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = value_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let (ds, job, artifacts) = parse_common(&args)?;
+    let res = run_job_with_engine(&ds, &job, &artifacts)?;
+    println!(
+        "dataset={} n={} t={} k={} engine={:?} workers={}",
+        ds.name,
+        ds.n_train(),
+        ds.n_test(),
+        job.k,
+        job.engine,
+        job.workers
+    );
+    println!(
+        "blocks={} elapsed={:?} throughput={:.1} test-points/s",
+        res.blocks, res.elapsed, res.throughput
+    );
+    println!(
+        "phi: mean offdiag={:+.4e} trace={:+.4e} upper-sum={:+.4e}",
+        res.mean_offdiag(),
+        res.phi.diagonal().iter().sum::<f64>(),
+        res.phi.upper_triangle_sum()
+    );
+    let out = args.get_or("out", "phi.csv");
+    if out != "-" {
+        csv::write_matrix(Path::new(&out), &res.phi)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn values_cmd() -> Command {
+    Command::new(
+        "values",
+        "per-point STI values (main + interaction rowsum) — implicit engine \
+         by default: O(t·n log n) time, O(n) state, no n×n matrix (DESIGN.md §10)",
+    )
+    .opt("dataset", "dataset name (see `stiknn datasets`) or csv:PATH", "circle")
+    .opt("n-train", "training points (0 = registry default)", "0")
+    .opt("n-test", "test points (0 = registry default)", "0")
+    .opt("k", "KNN parameter", "5")
+    .opt("seed", "dataset seed", "42")
+    .opt(
+        "engine",
+        "implicit (rank-space suffix sums) | dense (materialize the matrix)",
+        "implicit",
+    )
+    .opt("workers", "worker threads for the implicit prep pool (0 = all cores)", "0")
+    .opt("block", "test points per prep block", "32")
+    .opt("top", "rows to print (0 = none)", "10")
+    .opt("by", "printed ranking: main | rowsum", "rowsum")
+    .opt("out", "output CSV path, lines `index,main,rowsum` ('-' to skip)", "-")
+}
+
+fn cmd_values(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = values_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let k: usize = args.require("k")?;
+    let engine = ValueEngine::parse(&args.get_or("engine", "implicit"))
+        .ok_or_else(|| anyhow::anyhow!("--engine must be implicit or dense"))?;
+    let workers: usize = args.require("workers")?;
+    let block: usize = args.require("block")?;
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
+
+    let t0 = std::time::Instant::now();
+    let pv: PointValues = match engine {
+        ValueEngine::Implicit => {
+            let mut job = ValuationJob::new(k).with_block_size(block);
+            if workers > 0 {
+                job = job.with_workers(workers);
+            }
+            let res = run_values_job(&ds, &job)?;
+            PointValues {
+                main: res.main,
+                rowsum: res.rowsum,
+            }
+        }
+        ValueEngine::Dense => sti_point_values(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(k),
+            ValueEngine::Dense,
+        ),
+    };
+    let elapsed = t0.elapsed();
+    println!(
+        "dataset={} n={} t={} k={} engine={} elapsed={:?}",
+        ds.name,
+        ds.n_train(),
+        ds.n_test(),
+        k,
+        engine.label(),
+        elapsed
+    );
+    let top: usize = args.require("top")?;
+    if top > 0 {
+        let by = TopBy::parse(&args.get_or("by", "rowsum"))
+            .ok_or_else(|| anyhow::anyhow!("--by must be main or rowsum"))?;
+        let ranked = match by {
+            TopBy::Main => &pv.main,
+            TopBy::RowSum => &pv.rowsum,
+        };
+        let entries = stiknn::session::top_k_of(ranked, top);
+        println!("{}", topk_table(&entries, by.label()));
+    }
+    let out = args.get_or("out", "-");
+    if out != "-" {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&out)?;
+        writeln!(f, "index,main,rowsum")?;
+        for i in 0..pv.main.len() {
+            writeln!(f, "{i},{:.17e},{:.17e}", pv.main[i], pv.rowsum[i])?;
+        }
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn analyze_cmd() -> Command {
+    common_opts(Command::new(
+        "analyze",
+        "heatmap + axiom checks + block structure (paper §4)",
+    ))
+    .opt("cells", "heatmap size in characters", "48")
+}
+
+fn cmd_analyze(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = analyze_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let (ds, job, artifacts) = parse_common(&args)?;
+    let res = run_job_with_engine(&ds, &job, &artifacts)?;
+    let order = ds.paper_display_order();
+    let cells: usize = args.require("cells")?;
+    // display the off-diagonal structure (the paper's figures): the main
+    // terms are orders of magnitude larger and would wash out the blocks
+    let mut display = res.phi.clone();
+    for i in 0..display.rows() {
+        display.set(i, i, 0.0);
+    }
+    println!("{}", render_heatmap(&display, Some(&order), cells));
+    let reports = axioms::check_all(
+        &res.phi,
+        &ds.train_x,
+        &ds.train_y,
+        ds.d,
+        &ds.test_x,
+        &ds.test_y,
+        job.k,
+        if job.engine == Engine::Xla { 1e-3 } else { 1e-9 },
+    );
+    println!("axioms (§3.2):\n{}", axioms::format_reports(&reports));
+    let blocks = block_structure(&res.phi, &ds.train_y, ds.classes);
+    let mut t = Table::new(&["class pair", "mean interaction"]);
+    for a in 0..ds.classes {
+        for b in a..ds.classes {
+            t.row(&[format!("({a},{b})"), format!("{:+.4e}", blocks.get(a, b))]);
+        }
+    }
+    println!("class-block structure (Fig. 3):\n{}", t.render());
+    Ok(())
+}
+
+fn ksens_cmd() -> Command {
+    common_opts(Command::new(
+        "ksens",
+        "Pearson correlation of STI matrices across k (paper §3.2)",
+    ))
+    .opt("ks", "comma-separated k values", "3,5,9,15,20")
+}
+
+fn cmd_ksens(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = ksens_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let (ds, _job, _) = parse_common(&args)?;
+    let ks: Vec<usize> = args
+        .get_or("ks", "3,5,9,15,20")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let rep = k_sensitivity(&ds, &ks);
+    let mut t = Table::new(&["k", "std(phi offdiag)"]);
+    for (i, &k) in ks.iter().enumerate() {
+        t.row(&[k.to_string(), format!("{:.4e}", rep.stds[i])]);
+    }
+    println!("{}", t.render());
+    println!(
+        "min pairwise Pearson r: full-matrix {:.5} (paper methodology), offdiag {:.5}",
+        rep.min_correlation, rep.min_correlation_offdiag
+    );
+    println!(
+        "paper threshold (> 0.99): {}",
+        if rep.passes_paper_threshold() { "PASS" } else { "FAIL" }
+    );
+    Ok(())
+}
+
+fn mislabel_cmd() -> Command {
+    common_opts(Command::new(
+        "mislabel",
+        "flip labels, recompute STI, detect flips from patterns (Fig. 5)",
+    ))
+    .opt("flip", "fraction of train labels to flip", "0.05")
+    .opt(
+        "scores",
+        "detector: template (row correlation, needs the matrix) | values \
+         (class-split means via the implicit engine, no matrix)",
+        "template",
+    )
+}
+
+fn cmd_mislabel(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = mislabel_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let (mut ds, job, artifacts) = parse_common(&args)?;
+    let flip: f64 = args.require("flip")?;
+    let seed: u64 = args.require("seed")?;
+    let truth = corrupt::flip_labels(&mut ds, flip, seed ^ 0xF11F);
+    let rep = match args.get_or("scores", "template").as_str() {
+        "template" => {
+            let res = run_job_with_engine(&ds, &job, &artifacts)?;
+            mislabel_scores(&res.phi, &ds.train_y, ds.classes)
+        }
+        "values" => mislabel_scores_values(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(job.k),
+            ds.classes,
+        ),
+        other => anyhow::bail!("--scores must be template or values, got '{other}'"),
+    };
+    let (prec, rec) = precision_recall(&rep.flagged, &truth);
+    println!(
+        "flipped {} of {} train points; flagged {}",
+        truth.len(),
+        ds.n_train(),
+        rep.flagged.len()
+    );
+    println!(
+        "precision={prec:.3} recall={rec:.3} AUC={:.3} top-prevalence recall={:.3}",
+        auc(&rep.margins, &truth),
+        top_prevalence_recall(&rep.margins, &truth)
+    );
+    Ok(())
+}
+
+fn serve_cmd() -> Command {
+    Command::new(
+        "serve",
+        "concurrent valuation server: NDJSON commands on stdin (single connection) \
+         or --listen ADDR (TCP, many clients); named sessions via open/use/close/list",
+    )
+    .opt(
+        "listen",
+        "TCP address to serve on, e.g. 127.0.0.1:7171 (port 0 picks a free port, \
+         reported on stderr); '' = single connection on stdin/stdout",
+        "",
+    )
+    .opt(
+        "session",
+        "name of the default session every connection starts on",
+        "default",
+    )
+    .opt(
+        "shard-of",
+        "shard identity J/N for multi-node test-set sharding (DESIGN.md §13): \
+         this server is member J (zero-based) of an N-member group, e.g. 0/3. \
+         Reported by the `shard` verb so a ShardedSession coordinator can \
+         verify it is routing to the right member; '' = unsharded",
+        "",
+    )
+    .opt(
+        "max-resident",
+        "LRU cap on in-memory sessions: cold sessions spill to --state-dir and \
+         reload on next touch (0 = unlimited)",
+        "0",
+    )
+    .opt(
+        "autosave",
+        "checkpoint dirty sessions to --state-dir every SECS seconds (0 = off)",
+        "0",
+    )
+    .opt(
+        "state-dir",
+        "directory for LRU spills and autosave checkpoints ('' = none; required \
+         by --max-resident and --autosave)",
+        "",
+    )
+    .opt("dataset", "training dataset name (see `stiknn datasets`) or csv:PATH", "circle")
+    .opt("n-train", "training points (0 = registry default)", "0")
+    .opt(
+        "n-test",
+        "test-split size used when GENERATING the train part (the generators slice \
+         train after test, so this must match the session being restored; \
+         0 = registry default). The split itself is dropped — test points \
+         arrive via the protocol",
+        "0",
+    )
+    .opt("k", "KNN parameter", "5")
+    .opt("seed", "dataset seed", "42")
+    .opt("metric", "distance metric: l2 | l1 | cosine", "l2")
+    .opt(
+        "engine",
+        "session engine: dense (n×n matrix, every query) | implicit (O(n) value \
+         vector, values/topk/stats only — see --retain-rows) | auto (dense, or \
+         implicit when --mutable is set)",
+        "auto",
+    )
+    .flag(
+        "retain-rows",
+        "implicit engine: keep per-test (rank, colval) rows (O(t·n) memory) so \
+         cell/row queries stay answerable; ingest runs single-threaded in this \
+         mode (--workers does not apply)",
+    )
+    .flag(
+        "mutable",
+        "enable live training-set edits (add_train/remove_train/relabel, \
+         DESIGN.md §11): exact O(t·n)-per-edit repairs instead of recomputes. \
+         Implies --engine implicit --retain-rows; snapshots become v3 (train \
+         set + rows + mutation ledger persisted) and --restore expects one",
+    )
+    .opt("workers", "worker threads for large ingest batches (0 = all cores)", "0")
+    .opt("block", "test points per prep block in parallel ingests", "32")
+    .opt(
+        "parallel-min",
+        "batch size at which ingest switches to the parallel banded pipeline",
+        "256",
+    )
+    .opt("restore", "resume from a snapshot file ('' = fresh session)", "")
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = serve_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let k: usize = args.require("k")?;
+    let metric = Metric::parse(&args.get_or("metric", "l2"))
+        .ok_or_else(|| anyhow::anyhow!("--metric must be l2, l1 or cosine"))?;
+    let mutable = args.flag("mutable");
+    let engine = match args.get_or("engine", "auto").as_str() {
+        // --mutable implies the implicit engine; an EXPLICIT --engine
+        // dense alongside it is a contradiction worth failing on.
+        "auto" if mutable => ValueEngine::Implicit,
+        "auto" => ValueEngine::Dense,
+        given => {
+            let engine = ValueEngine::parse(given)
+                .ok_or_else(|| anyhow::anyhow!("--engine must be dense, implicit or auto"))?;
+            if mutable && engine != ValueEngine::Implicit {
+                anyhow::bail!(
+                    "--mutable requires the implicit engine (the delta repairs \
+                     rewrite rank-space rows); drop `--engine dense`"
+                );
+            }
+            engine
+        }
+    };
+    let retain_rows = args.flag("retain-rows") || mutable;
+    let workers: usize = args.require("workers")?;
+    let block: usize = args.require("block")?;
+    let parallel_min: usize = args.require("parallel-min")?;
+    // The session only consumes the train part; the registry's test split
+    // is generated and dropped (test points arrive through the protocol).
+    // n_test still matters: the generators slice train AFTER test, so it
+    // must match whatever produced the train set a --restore snapshot was
+    // taken against (fingerprint-verified on restore).
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
+    let mut config = SessionConfig::new(k)
+        .with_metric(metric)
+        .with_engine(engine)
+        .with_retained_rows(retain_rows)
+        .with_mutable(mutable)
+        .with_block_size(block)
+        .with_parallel_min(parallel_min);
+    if workers > 0 {
+        config = config.with_workers(workers);
+    }
+    let listen = args.get_or("listen", "");
+    let session_name = args.get_or("session", "default");
+    let shard_of = args.get_or("shard-of", "");
+    let shard = (!shard_of.is_empty()).then(|| parse_shard_of(&shard_of)).transpose()?;
+    let max_resident: usize = args.require("max-resident")?;
+    let autosave_secs: u64 = args.require("autosave")?;
+    let state_dir = args.get_or("state-dir", "");
+    let state_dir = (!state_dir.is_empty()).then(|| PathBuf::from(&state_dir));
+    anyhow::ensure!(
+        max_resident == 0 || state_dir.is_some(),
+        "--max-resident needs --state-dir (spilled sessions live there as snapshots)"
+    );
+    anyhow::ensure!(
+        autosave_secs == 0 || state_dir.is_some(),
+        "--autosave needs --state-dir (checkpoints are written there)"
+    );
+
+    let mut registry = SessionRegistry::new(
+        TrainData::from_dataset(&ds),
+        RegistryConfig {
+            base: config,
+            max_resident,
+            state_dir,
+        },
+    )?;
+    if let Some(id) = shard {
+        registry = registry.with_shard(id);
+    }
+    let registry = Arc::new(registry);
+    // The default session: fresh, or restored with the CLI-derived config
+    // (exactly the old single-session `--restore` semantics — mismatched
+    // engine/k/fingerprint fail the process here with the same messages).
+    let restore = args.get_or("restore", "");
+    let snapshot = (!restore.is_empty()).then(|| PathBuf::from(&restore));
+    registry.open(&session_name, snapshot.as_deref(), Some(config))?;
+    let (n, d, tests) = registry
+        .with_session_read(&session_name, |s| (s.n(), s.d(), s.tests_seen()))?;
+    // Banner on stderr so stdout stays pure NDJSON.
+    let shard_note = match shard {
+        Some(id) => format!(" shard={}/{}", id.index, id.count),
+        None => String::new(),
+    };
+    eprintln!(
+        "stiknn serve: dataset={} n={n} d={d} k={} engine={}{}{shard_note} tests={tests} \
+         session='{session_name}' — `{{\"cmd\":\"shutdown\"}}` ends a connection",
+        ds.name,
+        config.k,
+        config.engine.label(),
+        if config.mutable { " (mutable)" } else { "" },
+    );
+    let _autosave = (autosave_secs > 0).then(|| {
+        server::start_autosave(
+            Arc::clone(&registry),
+            std::time::Duration::from_secs(autosave_secs),
+        )
+    });
+    if listen.is_empty() {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let mut conn = server::Connection::new(Arc::clone(&registry), Some(session_name));
+        server::serve_connection(&mut conn, stdin.lock(), stdout.lock())?;
+        // Registry inspector on the way out (stderr keeps stdout
+        // NDJSON-pure). Only the stdio path has a "way out" — the TCP
+        // accept loop below runs until the process is killed, where the
+        // last autosave checkpoint (atomic-by-rename) is the durable
+        // record instead.
+        eprintln!("{}", registry_table(&registry.list()));
+    } else {
+        let listener = std::net::TcpListener::bind(&listen)
+            .map_err(|e| anyhow::anyhow!("binding --listen {listen}: {e}"))?;
+        let addr = listener.local_addr()?;
+        eprintln!("stiknn serve: listening on {addr} (thread per connection)");
+        server::listen(Arc::clone(&registry), listener, Some(session_name))?;
+    }
+    Ok(())
+}
+
+/// Parse `--shard-of J/N`: member J (zero-based) of an N-shard group.
+fn parse_shard_of(s: &str) -> anyhow::Result<server::ShardIdentity> {
+    let (j, n) = s
+        .split_once('/')
+        .ok_or_else(|| anyhow::anyhow!("--shard-of expects J/N, e.g. 0/3 (got '{s}')"))?;
+    let j: u64 = j
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--shard-of member index '{j}' is not a number"))?;
+    let n: u64 = n
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--shard-of group size '{n}' is not a number"))?;
+    server::ShardIdentity::new(j, n)
+}
+
+fn mutate_cmd() -> Command {
+    Command::new(
+        "mutate",
+        "live training-set edits with exact O(t·n) delta repairs (DESIGN.md §11): \
+         build a mutable session, ingest the test split, apply --ops in order, \
+         then optionally greedily drop the lowest-value points (remove → repair → \
+         re-rank each step)",
+    )
+    .opt("dataset", "dataset name (see `stiknn datasets`) or csv:PATH", "circle")
+    .opt("n-train", "training points (0 = registry default)", "0")
+    .opt("n-test", "test points (0 = registry default)", "0")
+    .opt("k", "KNN parameter", "5")
+    .opt("seed", "dataset seed", "42")
+    .opt("metric", "distance metric: l2 | l1 | cosine", "l2")
+    .opt(
+        "ops",
+        "comma-separated edits, applied in order: remove:IDX | relabel:IDX:LABEL \
+         | add:dup:IDX[:LABEL] (append a copy of point IDX's features, with its \
+         label unless LABEL is given). Indices are as-of-edit-time",
+        "",
+    )
+    .opt(
+        "drop-lowest",
+        "after --ops, iteratively remove the N lowest-rowsum points, repairing \
+         and re-ranking after every removal (the exact greedy curve)",
+        "0",
+    )
+    .opt("top", "top-k point values printed after all edits (0 = none)", "10")
+    .opt("by", "printed ranking: main | rowsum", "rowsum")
+    .opt("snapshot", "write a v3 mutable snapshot here afterwards ('' = skip)", "")
+}
+
+enum MutateOp {
+    Remove(usize),
+    Relabel(usize, i32),
+    AddDup(usize, Option<i32>),
+}
+
+fn parse_mutate_ops(spec: &str) -> anyhow::Result<Vec<MutateOp>> {
+    let mut ops = Vec::new();
+    for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let parts: Vec<&str> = raw.split(':').collect();
+        let op = match parts.as_slice() {
+            ["remove", idx] => MutateOp::Remove(idx.parse()?),
+            ["relabel", idx, label] => MutateOp::Relabel(idx.parse()?, label.parse()?),
+            ["add", "dup", idx] => MutateOp::AddDup(idx.parse()?, None),
+            ["add", "dup", idx, label] => MutateOp::AddDup(idx.parse()?, Some(label.parse()?)),
+            _ => anyhow::bail!(
+                "bad op '{raw}' (expected remove:IDX, relabel:IDX:LABEL, or \
+                 add:dup:IDX[:LABEL])"
+            ),
+        };
+        ops.push(op);
+    }
+    Ok(ops)
+}
+
+fn cmd_mutate(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = mutate_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let k: usize = args.require("k")?;
+    let metric = Metric::parse(&args.get_or("metric", "l2"))
+        .ok_or_else(|| anyhow::anyhow!("--metric must be l2, l1 or cosine"))?;
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
+    let ops = parse_mutate_ops(&args.get_or("ops", ""))?;
+    let drop_lowest: usize = args.require("drop-lowest")?;
+
+    let config = SessionConfig::new(k)
+        .with_metric(metric)
+        .with_engine(ValueEngine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true);
+    let mut session = ValuationSession::from_dataset(&ds, config)?;
+    session.ingest(&ds.test_x, &ds.test_y)?;
+    println!(
+        "dataset={} n={} t={} k={} metric={:?} (mutable session)",
+        ds.name,
+        session.n(),
+        session.tests_seen(),
+        k,
+        metric
+    );
+
+    let mut edit_time = std::time::Duration::ZERO;
+    for op in &ops {
+        let t0 = std::time::Instant::now();
+        match *op {
+            MutateOp::Remove(i) => {
+                session.remove_train(i)?;
+                let dt = t0.elapsed();
+                edit_time += dt;
+                println!("remove  index={i:<6} n={:<6} ({dt:?})", session.n());
+            }
+            MutateOp::Relabel(i, y) => {
+                session.relabel_train(i, y)?;
+                let dt = t0.elapsed();
+                edit_time += dt;
+                println!("relabel index={i:<6} y={y:<4} n={:<6} ({dt:?})", session.n());
+            }
+            MutateOp::AddDup(i, label) => {
+                anyhow::ensure!(
+                    i < session.n(),
+                    "add:dup:{i}: index out of range (n={})",
+                    session.n()
+                );
+                let x = session.train_row(i).to_vec();
+                let y = label.unwrap_or_else(|| session.train_labels()[i]);
+                let t0 = std::time::Instant::now();
+                let id = session.add_train(&x, y)?;
+                let dt = t0.elapsed();
+                edit_time += dt;
+                println!("add     index={id:<6} y={y:<4} n={:<6} ({dt:?})", session.n());
+            }
+        }
+    }
+
+    for step in 0..drop_lowest {
+        let vals = session
+            .point_values(TopBy::RowSum)
+            .ok_or_else(|| anyhow::anyhow!("no test points ingested"))?;
+        let i = stiknn::analysis::removal::argmin_by_value(&vals);
+        let value = vals[i];
+        let t0 = std::time::Instant::now();
+        session.remove_train(i).map_err(|e| {
+            anyhow::anyhow!("drop-lowest step {step}: {e:#} (n={}, k={k})", session.n())
+        })?;
+        let dt = t0.elapsed();
+        edit_time += dt;
+        println!(
+            "drop    index={i:<6} value={value:+.4e} n={:<6} ({dt:?})",
+            session.n()
+        );
+    }
+
+    let edits = session.mutations().len();
+    println!(
+        "{edits} edit(s) applied in {edit_time:?}; final n={}, mutation ledger length {}",
+        session.n(),
+        edits
+    );
+
+    let top: usize = args.require("top")?;
+    if top > 0 {
+        let by = TopBy::parse(&args.get_or("by", "rowsum"))
+            .ok_or_else(|| anyhow::anyhow!("--by must be main or rowsum"))?;
+        let vals = session
+            .point_values(by)
+            .ok_or_else(|| anyhow::anyhow!("no test points ingested"))?;
+        let entries = stiknn::session::top_k_of(&vals, top);
+        println!("{}", topk_table(&entries, by.label()));
+    }
+
+    let snapshot = args.get_or("snapshot", "");
+    if !snapshot.is_empty() {
+        let bytes = session.save(Path::new(&snapshot))?;
+        println!("wrote {snapshot} ({bytes} bytes, v3 mutable snapshot)");
+    }
+    Ok(())
+}
+
+fn session_cmd() -> Command {
+    Command::new("session", "inspect a session snapshot file")
+        .req("file", "snapshot path (written by `stiknn serve` / ValuationSession::save)")
+        .opt("topk", "print the top-k point values (0 = header only)", "10")
+        .opt("by", "top-k ranking: main | rowsum", "main")
+}
+
+fn cmd_session(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = session_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let file = args.require::<String>("file")?;
+    let snap = store::read_snapshot(Path::new(&file))?;
+    println!("{}", snapshot_info_table(&snap));
+    let topk: usize = args.require("topk")?;
+    if topk > 0 {
+        let by = TopBy::parse(&args.get_or("by", "main"))
+            .ok_or_else(|| anyhow::anyhow!("--by must be main or rowsum"))?;
+        match snap.top_k(topk, by) {
+            Some(entries) => println!("{}", topk_table(&entries, by.label())),
+            None => println!("(no test points ingested yet — top-k unavailable)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datasets(argv: &[String]) -> anyhow::Result<()> {
+    if wants_help(argv) {
+        println!("{}", usage_for("datasets").unwrap());
+        return Ok(());
+    }
+    let mut t = Table::new(&["name", "d", "classes", "n_train", "n_test", "source (paper Table 1)"]);
+    for name in registry_names() {
+        let s = stiknn::data::registry::spec(name).unwrap();
+        t.row(&[
+            s.name.to_string(),
+            s.d.to_string(),
+            s.classes.to_string(),
+            s.n_train.to_string(),
+            s.n_test.to_string(),
+            s.source.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn artifacts_cmd() -> Command {
+    Command::new("artifacts", "list the AOT artifact manifest")
+        .opt("artifacts", "artifacts directory", "artifacts")
+}
+
+fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = artifacts_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(Path::new(&dir))?;
+    let mut t = Table::new(&["name", "program", "n", "d", "b", "k", "file"]);
+    for a in &manifest.artifacts {
+        t.row(&[
+            a.name.clone(),
+            a.program.clone(),
+            a.n.to_string(),
+            a.d.to_string(),
+            a.b.to_string(),
+            a.k.to_string(),
+            a.file.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

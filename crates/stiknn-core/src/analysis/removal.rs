@@ -1,0 +1,232 @@
+//! Point-removal experiments — the data-valuation use cases the paper's
+//! introduction motivates (training-set summarization / cleaning):
+//! remove points in value order and track test accuracy.
+//!
+//! Point-value consumption routes through the implicit value engine by
+//! default ([`sti_removal_order`], `shapley::values` / DESIGN.md §10):
+//! removal curves only need per-point aggregates, so materializing the
+//! n×n matrix is pure waste — the dense path stays available behind the
+//! engine switch for cross-checks.
+//!
+//! Two removal orders exist:
+//!
+//! * [`sti_removal_order`] — ONE static ranking of the full train set
+//!   (values computed once, points removed in that fixed order). Cheap,
+//!   but an approximation: values shift as points leave the set.
+//! * `sti_iterative_removal_order` — the EXACT greedy order via the
+//!   delta subsystem (DESIGN.md §11): remove the current lowest-value
+//!   point, repair the live session in O(t·n), re-rank, repeat. It
+//!   drives a live mutable session, so it lives in `stiknn-session`
+//!   (`removal` module there); the `stiknn` facade re-exports it at this
+//!   module's pre-split path.
+
+use crate::data::Dataset;
+use crate::knn::KnnClassifier;
+use crate::shapley::values::{sti_point_values, Engine};
+use crate::shapley::StiParams;
+
+/// Accuracy curve from removing train points in the given order.
+/// Returns accuracy after removing 0, step, 2·step, ... points
+/// (keeping at least `min_keep`).
+pub fn removal_curve(
+    ds: &Dataset,
+    removal_order: &[usize],
+    step: usize,
+    min_keep: usize,
+    k: usize,
+) -> Vec<(usize, f64)> {
+    assert_eq!(removal_order.len(), ds.n_train());
+    assert!(step >= 1);
+    let mut removed: std::collections::HashSet<usize> = Default::default();
+    let mut out = Vec::new();
+    let mut cursor = 0usize;
+    loop {
+        let keep: Vec<usize> = (0..ds.n_train()).filter(|i| !removed.contains(i)).collect();
+        if keep.len() < min_keep.max(k) {
+            break;
+        }
+        let sub = ds.retain_train(&keep);
+        let acc = KnnClassifier::new(&sub.train_x, &sub.train_y, sub.d, k)
+            .accuracy(&ds.test_x, &ds.test_y);
+        out.push((removed.len(), acc));
+        // remove the next `step`
+        let mut added = 0;
+        while added < step && cursor < removal_order.len() {
+            removed.insert(removal_order[cursor]);
+            cursor += 1;
+            added += 1;
+        }
+        if added == 0 {
+            break;
+        }
+    }
+    out
+}
+
+/// Removal order from STI per-point values (total rowsum — main effect
+/// plus synergies), lowest value first. `params` carries k AND the
+/// metric, so orders reproduce values served by any session config;
+/// `engine` picks how the values are computed: `Engine::Implicit`
+/// (default choice for every caller that only needs the ORDER) runs in
+/// O(t·n log n)/O(n) via the rank-space suffix-sum identity;
+/// `Engine::Dense` materializes the matrix first. Both orders agree up
+/// to value ties (values agree to ≤ 1e-12 —
+/// `tests/values_equivalence.rs`).
+pub fn sti_removal_order(ds: &Dataset, params: &StiParams, engine: Engine) -> Vec<usize> {
+    let pv = sti_point_values(
+        &ds.train_x,
+        &ds.train_y,
+        ds.d,
+        &ds.test_x,
+        &ds.test_y,
+        params,
+        engine,
+    );
+    order_by_value_asc(&pv.rowsum)
+}
+
+/// Index of the minimum value (total order, ties → lowest index) — the
+/// greedy-removal step shared by this module and `stiknn mutate
+/// --drop-lowest`; keeping one copy keeps their orders identical.
+pub fn argmin_by_value(values: &[f64]) -> usize {
+    values
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(&b.0)))
+        .expect("non-empty value vector")
+        .0
+}
+
+/// Order train indices by a value vector, ascending (lowest value first —
+/// "remove harmful/useless points first"). Total order + index tiebreak
+/// (the `session::top_k_of` convention): `partial_cmp().unwrap()` here
+/// would PANIC the analysis on the first NaN value a degenerate dataset
+/// produces, and these orders drive removal curves where a panic aborts
+/// the whole experiment.
+pub fn order_by_value_asc(values: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[a].total_cmp(&values[b]).then(a.cmp(&b)));
+    idx
+}
+
+/// Order descending (highest value first — adversarial removal). Sorted
+/// directly (not `asc` reversed) so ties still break by LOWEST index.
+pub fn order_by_value_desc(values: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[b].total_cmp(&values[a]).then(a.cmp(&b)));
+    idx
+}
+
+/// Area under the removal curve (higher = accuracy retained longer).
+pub fn curve_area(curve: &[(usize, f64)]) -> f64 {
+    if curve.len() < 2 {
+        return f64::NAN;
+    }
+    let mut area = 0.0;
+    for w in curve.windows(2) {
+        let dx = (w[1].0 - w[0].0) as f64;
+        area += dx * (w[0].1 + w[1].1) / 2.0;
+    }
+    area / (curve.last().unwrap().0 - curve[0].0) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corrupt, load_dataset};
+    use crate::shapley::knn_shapley::knn_shapley;
+
+    #[test]
+    fn removing_low_value_first_beats_high_value_first() {
+        // the classic data-valuation sanity check (Ghorbani & Zou 2019):
+        // dropping low-Shapley points preserves accuracy; dropping
+        // high-Shapley points destroys it
+        let mut ds = load_dataset("circle", 120, 50, 3).unwrap();
+        corrupt::flip_labels(&mut ds, 0.1, 5); // give low-value points to find
+        let k = 5;
+        let vals = knn_shapley(&ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, k);
+        let low_first = removal_curve(&ds, &order_by_value_asc(&vals), 10, 30, k);
+        let high_first = removal_curve(&ds, &order_by_value_desc(&vals), 10, 30, k);
+        let a_low = curve_area(&low_first);
+        let a_high = curve_area(&high_first);
+        assert!(
+            a_low > a_high + 0.05,
+            "low-first area {a_low} vs high-first {a_high}"
+        );
+    }
+
+    #[test]
+    fn curve_starts_at_full_accuracy_and_tracks_removals() {
+        let ds = load_dataset("moon", 60, 30, 1).unwrap();
+        let vals = vec![0.0; 60];
+        let curve = removal_curve(&ds, &order_by_value_asc(&vals), 15, 10, 3);
+        assert_eq!(curve[0].0, 0);
+        for w in curve.windows(2) {
+            assert_eq!(w[1].0 - w[0].0, 15);
+        }
+    }
+
+    #[test]
+    fn order_helpers() {
+        let v = [0.3, -1.0, 2.0];
+        assert_eq!(order_by_value_asc(&v), vec![1, 0, 2]);
+        assert_eq!(order_by_value_desc(&v), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn implicit_and_dense_removal_orders_agree() {
+        let mut ds = load_dataset("circle", 90, 30, 11).unwrap();
+        corrupt::flip_labels(&mut ds, 0.1, 4);
+        let params = crate::shapley::StiParams::new(5);
+        let implicit = sti_removal_order(&ds, &params, crate::shapley::values::Engine::Implicit);
+        let dense = sti_removal_order(&ds, &params, crate::shapley::values::Engine::Dense);
+        // the engines agree to ≤ 1e-12 per value, so the orders can only
+        // differ across (near-)ties — assert positionwise value equality,
+        // which is what the removal curve actually consumes
+        let pv = crate::shapley::values::sti_point_values(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y,
+            &crate::shapley::StiParams::new(5),
+            crate::shapley::values::Engine::Implicit,
+        );
+        assert_eq!(implicit.len(), dense.len());
+        for (a, b) in implicit.iter().zip(&dense) {
+            assert!(
+                (pv.rowsum[*a] - pv.rowsum[*b]).abs() < 1e-9,
+                "orders diverged beyond tie tolerance at {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn implicit_removal_order_beats_adversarial_order() {
+        let mut ds = load_dataset("circle", 120, 50, 3).unwrap();
+        corrupt::flip_labels(&mut ds, 0.1, 5);
+        let k = 5;
+        let order = sti_removal_order(
+            &ds,
+            &crate::shapley::StiParams::new(k),
+            crate::shapley::values::Engine::Implicit,
+        );
+        let low_first = removal_curve(&ds, &order, 10, 30, k);
+        let mut rev = order.clone();
+        rev.reverse();
+        let high_first = removal_curve(&ds, &rev, 10, 30, k);
+        assert!(
+            curve_area(&low_first) > curve_area(&high_first),
+            "low-value-first should retain accuracy longer"
+        );
+    }
+
+    #[test]
+    fn value_orders_survive_nan_without_panicking_or_reordering_finite_points() {
+        // NaN values land deterministically at the TOP of the total order
+        // (past +∞): last in asc, first in desc — never a panic, and the
+        // finite points keep their relative order
+        let vals = [0.5, f64::NAN, -1.0, 0.5];
+        assert_eq!(order_by_value_asc(&vals), vec![2, 0, 3, 1]);
+        assert_eq!(order_by_value_desc(&vals), vec![1, 0, 3, 2]);
+        assert_eq!(argmin_by_value(&vals), 2);
+        // an all-NaN vector is still a deterministic permutation
+        assert_eq!(order_by_value_asc(&[f64::NAN, f64::NAN]), vec![0, 1]);
+    }
+}

@@ -1,0 +1,263 @@
+//! Micro/bench harness (no criterion in the offline image): warmup,
+//! adaptive iteration count, mean/median/p99 and throughput reporting.
+//! Used by every target under `crates/stiknn-cli/benches/`
+//! (`harness = false`).
+
+use crate::report::table::Table;
+use crate::util::json::Json;
+use crate::util::timer::fmt_duration;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Workspace root resolved from a crate manifest directory: the first
+/// ancestor containing `ROADMAP.md` (the repo's root marker). Falls back
+/// to the starting directory itself when no marker is found (a vendored
+/// or exported crate tree), so callers always get a usable path.
+///
+/// The runtime `CARGO_MANIFEST_DIR` (set by `cargo bench`/`run`/`test`)
+/// takes precedence over the compile-time path the caller bakes in with
+/// `env!` — artifacts land in the CURRENT checkout even when the binary
+/// was built from another one.
+pub fn workspace_root_from(manifest_dir: &Path) -> PathBuf {
+    let start = std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| manifest_dir.to_path_buf());
+    for dir in start.ancestors() {
+        if dir.join("ROADMAP.md").is_file() {
+            return dir.to_path_buf();
+        }
+    }
+    start
+}
+
+/// Where a bench artifact (`BENCH_*.json`) belongs: at the WORKSPACE
+/// ROOT, never relative to the invoking crate or the current directory —
+/// `cargo bench -p stiknn-cli` from any subdirectory and the CI artifact
+/// step must agree on one location. Call with the bench's own
+/// `env!("CARGO_MANIFEST_DIR")`.
+pub fn artifact_path(manifest_dir: &str, file_name: &str) -> PathBuf {
+    workspace_root_from(Path::new(manifest_dir)).join(file_name)
+}
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// Machine-readable form, for bench artifacts (e.g. BENCH_scaling.json
+    /// — the perf-trajectory record CI uploads per commit).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_secs", Json::num(self.mean.as_secs_f64())),
+            ("median_secs", Json::num(self.median.as_secs_f64())),
+            ("p99_secs", Json::num(self.p99.as_secs_f64())),
+            ("min_secs", Json::num(self.min.as_secs_f64())),
+        ])
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Minimum total measurement time per benchmark.
+    pub min_time: Duration,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+    pub warmup_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            min_time: Duration::from_millis(300),
+            max_iters: 1000,
+            warmup_iters: 2,
+        }
+    }
+}
+
+/// Quick config for slow end-to-end benches.
+pub fn quick() -> BenchConfig {
+    BenchConfig {
+        min_time: Duration::from_millis(100),
+        max_iters: 20,
+        warmup_iters: 1,
+    }
+}
+
+/// A suite collects measurements and renders a table at the end.
+pub struct Suite {
+    pub title: String,
+    config: BenchConfig,
+    results: Vec<Measurement>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        Suite {
+            title: title.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Measure a closure. The closure's return value is black-boxed to
+    /// keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.config.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.config.min_time && samples.len() < self.config.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            median: samples[samples.len() / 2],
+            p99: samples[(samples.len() * 99) / 100],
+            min: samples[0],
+        };
+        eprintln!(
+            "  {name}: mean {} (median {}, p99 {}, {} iters)",
+            fmt_duration(m.mean),
+            fmt_duration(m.median),
+            fmt_duration(m.p99),
+            m.iters
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// The suite's measurements as a JSON object (title + results array).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|m| m.to_json())),
+            ),
+        ])
+    }
+
+    /// Render the suite as an aligned table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["benchmark", "mean", "median", "p99", "min", "iters"]);
+        for m in &self.results {
+            t.row(&[
+                m.name.clone(),
+                fmt_duration(m.mean),
+                fmt_duration(m.median),
+                fmt_duration(m.p99),
+                fmt_duration(m.min),
+                m.iters.to_string(),
+            ]);
+        }
+        format!("\n== {} ==\n{}", self.title, t.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut s = Suite::new("test").with_config(BenchConfig {
+            min_time: Duration::from_millis(5),
+            max_iters: 50,
+            warmup_iters: 1,
+        });
+        let m = s.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(m.iters >= 1);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.min <= m.median && m.median <= m.p99);
+        let table = s.render();
+        assert!(table.contains("spin"));
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let mut s = Suite::new("json").with_config(BenchConfig {
+            min_time: Duration::from_millis(1),
+            max_iters: 2,
+            warmup_iters: 0,
+        });
+        s.bench("noop", || 1);
+        let j = s.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("json"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("noop"));
+        assert!(results[0].get("mean_secs").unwrap().as_f64().unwrap() >= 0.0);
+        // serializes to parseable JSON text
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok(), "{text}");
+    }
+
+    #[test]
+    fn artifact_paths_resolve_to_the_workspace_root() {
+        let root = workspace_root_from(Path::new(env!("CARGO_MANIFEST_DIR")));
+        // The root is the directory with ROADMAP.md — NOT this crate's
+        // own directory (crates/stiknn-core) or the crates/ folder.
+        assert!(
+            root.join("ROADMAP.md").is_file(),
+            "no ROADMAP.md at {}",
+            root.display()
+        );
+        assert!(!root.ends_with("stiknn-core") && !root.ends_with("crates"));
+        let out = artifact_path(env!("CARGO_MANIFEST_DIR"), "BENCH_smoke.json");
+        assert_eq!(out.parent(), Some(root.as_path()));
+        assert_eq!(out.file_name().unwrap(), "BENCH_smoke.json");
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut s = Suite::new("cap").with_config(BenchConfig {
+            min_time: Duration::from_secs(10),
+            max_iters: 3,
+            warmup_iters: 0,
+        });
+        s.bench("noop", || 1);
+        assert_eq!(s.results()[0].iters, 3);
+    }
+}

@@ -1,0 +1,900 @@
+//! The orchestrator: shard → bounded queue → worker pool → deterministic
+//! merge.
+//!
+//! Engine dispatch:
+//! * `Engine::Rust` — two assembly strategies (see [`Assembly`]):
+//!   - `RowBanded` (default): Phase 1 (`prepare_batch`, O(n log n) per
+//!     test point) is parallelized over test blocks by a prep pool; each
+//!     prepared block is published IN BLOCK ORDER to every band worker,
+//!     which sweeps it (`sweep_band`, O(block·band·n)) into its own
+//!     disjoint row band of ONE shared n×n accumulator. Peak memory is
+//!     O(n²) + O(in-flight blocks · block · n) regardless of worker
+//!     count, there is no matrix merge at all, and results are
+//!     bit-identical to single-threaded `sti_knn` for any worker count
+//!     or band layout (per-cell addition order never changes).
+//!   - `TestSharded` (legacy): each worker runs the pure-Rust Algorithm 1
+//!     on its shard with a private accumulator; the merger sums partial
+//!     matrices in shard order. O(W·n²) memory, kept for comparison
+//!     benches and as the shape of the XLA path.
+//! * `Engine::Xla`  — each worker owns a [`StiExecutor`] compiled from the
+//!   matching AOT artifact (one PJRT client per worker; the CPU plugin
+//!   serializes execution per client, so per-worker clients are what
+//!   gives real parallelism).
+
+use super::job::{
+    shards_for, shards_for_len, Assembly, PartialResult, Shard, ValuationJob, ValuationResult,
+    ValuesResult,
+};
+use super::merge::{Merger, WeightMerger};
+use super::pool::{run_workers, Bounded};
+
+use super::progress::{Progress, ThroughputMeter};
+use crate::data::Dataset;
+use crate::runtime::{executor_for, Engine, Manifest, StiExecutor};
+use crate::shapley::sti_knn::{prepare_batch, sti_knn_partial, sweep_band, PreparedBatch, StiParams};
+use crate::shapley::values::{sweep_values, ValueVector, ValuesScratch};
+use crate::util::matrix::Matrix;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Run a valuation job with the pure-Rust engine (no artifacts needed).
+pub fn run_job(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    anyhow::ensure!(job.engine == Engine::Rust, "use run_job_with_engine for XLA");
+    run_rust(ds, job)
+}
+
+/// Run a valuation job with either engine; `artifacts_dir` is only read
+/// for `Engine::Xla`.
+pub fn run_job_with_engine(
+    ds: &Dataset,
+    job: &ValuationJob,
+    artifacts_dir: &Path,
+) -> Result<ValuationResult> {
+    match job.engine {
+        Engine::Rust => run_rust(ds, job),
+        Engine::Xla => run_xla(ds, job, artifacts_dir),
+    }
+}
+
+fn run_rust(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    match job.assembly {
+        Assembly::RowBanded { .. } => run_rust_banded(ds, job),
+        Assembly::TestSharded => run_rust_test_sharded(ds, job),
+    }
+}
+
+/// In-order publication buffer: prep workers finish blocks in any order;
+/// band workers must receive them in block order (so every accumulator
+/// row sees the same addition sequence as a single-threaded run).
+/// Occupancy is bounded by the publication window (prep workers wait on
+/// the paired condvar when they run too far ahead of the oldest
+/// unpublished block), so one straggling block cannot balloon memory.
+struct Reorder {
+    next: usize,
+    aborted: bool,
+    pending: BTreeMap<usize, Arc<PreparedBatch>>,
+}
+
+/// Panic containment for the banded pipeline (INV-3): if any worker
+/// unwinds — a prepare/sweep assert, a poisoned lock — this guard closes
+/// every queue and wakes every waiter on its way out, so peers drain and
+/// exit, `thread::scope` joins them, and the panic propagates to the
+/// caller instead of deadlocking the run.
+struct AbortOnPanic<'a> {
+    prep_queue: &'a Bounded<Shard>,
+    band_queues: &'a [Bounded<Arc<PreparedBatch>>],
+    reorder: &'a Mutex<Reorder>,
+    reorder_cv: &'a Condvar,
+}
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.prep_queue.close();
+            for q in self.band_queues {
+                q.close();
+            }
+            let mut rb = match self.reorder.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            rb.aborted = true;
+            drop(rb);
+            self.reorder_cv.notify_all();
+        }
+    }
+}
+
+/// One prep worker's loop: Phase 1 over test blocks with reorder-window
+/// backpressure and in-block-order publication to every consumer queue,
+/// closing the consumer queues once the last block is published. Shared
+/// by the banded matrix path and the value-sharded path — their only
+/// difference is the Phase-2 consumer, so the delicate
+/// window/publication/close logic lives exactly once.
+#[allow(clippy::too_many_arguments)]
+fn prep_worker_loop(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    prep_queue: &Bounded<Shard>,
+    band_queues: &[Bounded<Arc<PreparedBatch>>],
+    reorder: &Mutex<Reorder>,
+    reorder_cv: &Condvar,
+    merger: &Mutex<WeightMerger>,
+    progress: &Progress,
+    window: usize,
+    n_blocks: usize,
+) {
+    let _abort = AbortOnPanic {
+        prep_queue,
+        band_queues,
+        reorder,
+        reorder_cv,
+    };
+    'blocks: while let Some(shard) = prep_queue.recv() {
+        // Reorder-buffer backpressure: don't prepare (and allocate) a
+        // block far ahead of the oldest unpublished one.
+        {
+            let mut rb = reorder.lock().unwrap();
+            while !rb.aborted && shard.index >= rb.next + window {
+                rb = reorder_cv.wait(rb).unwrap();
+            }
+            if rb.aborted {
+                break 'blocks;
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let (tx, ty) = (
+            &test_x[shard.lo * d..shard.hi * d],
+            &test_y[shard.lo..shard.hi],
+        );
+        let batch = Arc::new(prepare_batch(train_x, train_y, d, tx, ty, params));
+        progress.record_block(shard.hi - shard.lo, t0.elapsed().as_nanos() as u64);
+        merger.lock().unwrap().push(shard.index, batch.weight());
+        // Publish every newly in-order block to all consumers; the
+        // reorder lock serializes publication, keeping each queue in
+        // strict block order.
+        let mut rb = reorder.lock().unwrap();
+        rb.pending.insert(shard.index, batch);
+        loop {
+            let key = rb.next;
+            let Some(ready) = rb.pending.remove(&key) else {
+                break;
+            };
+            rb.next += 1;
+            for q in band_queues {
+                let _ = q.send(ready.clone());
+            }
+        }
+        let all_published = rb.next == n_blocks;
+        drop(rb);
+        reorder_cv.notify_all();
+        if all_published {
+            for q in band_queues {
+                q.close();
+            }
+        }
+    }
+}
+
+/// Row-banded assembly: ONE n×n accumulator for the whole job — the only
+/// matrix this function allocates, independent of `job.workers`.
+fn run_rust_banded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let n = ds.n_train();
+    let mut acc = Matrix::zeros(n, n);
+    let (weight, blocks) = banded_accumulate(
+        &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, job, &mut acc, &progress,
+    )?;
+    acc.mirror_upper_to_lower();
+    acc.scale(1.0 / weight);
+    let elapsed = meter.elapsed();
+    Ok(ValuationResult {
+        phi: acc,
+        weight,
+        blocks,
+        elapsed,
+        throughput: meter.rate(progress.points()),
+        engine: Engine::Rust,
+    })
+}
+
+/// Streaming batch-ingest entry point for the session layer
+/// (`stiknn-session`): accumulate the UNNORMALIZED contribution of one
+/// test batch into an existing n×n accumulator through the banded
+/// parallel pipeline (prep pool → in-order publication → per-band sweep
+/// workers), returning the batch's merge weight (its test count, Eq. 9).
+///
+/// The accumulator is written exactly as `sweep_band` writes it — upper
+/// triangle + diagonal, additions appended in test order — so repeated
+/// calls over a contiguous partition of a test stream are bit-identical
+/// to a one-shot run, no matter how `job.workers`/`block_size`/band
+/// layout slice the work (DESIGN.md §7/§9). The caller owns
+/// normalization (mirror + scale by the accumulated weight).
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_banded(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    acc: &mut Matrix,
+) -> Result<f64> {
+    let n = train_y.len();
+    anyhow::ensure!(
+        acc.rows() == n && acc.cols() == n,
+        "accumulator is {}x{} but train set has n={n}",
+        acc.rows(),
+        acc.cols()
+    );
+    anyhow::ensure!(!test_y.is_empty(), "empty ingest batch");
+    // Shape errors must surface as Err here, not as a panic inside a
+    // worker thread slicing out of bounds (matching sti_knn_accumulate's
+    // contract on the single-threaded path).
+    anyhow::ensure!(
+        train_x.len() == n * d,
+        "train shape mismatch: {} features for {n} points (d={d})",
+        train_x.len()
+    );
+    anyhow::ensure!(
+        test_x.len() == test_y.len() * d,
+        "test batch shape mismatch: {} features for {} labels (d={d})",
+        test_x.len(),
+        test_y.len()
+    );
+    let progress = Progress::new();
+    let (weight, _blocks) =
+        banded_accumulate(train_x, train_y, d, test_x, test_y, job, acc, &progress)?;
+    Ok(weight)
+}
+
+/// The banded pipeline core shared by [`run_rust_banded`] (one-shot jobs)
+/// and [`ingest_banded`] (streaming sessions): sweeps `test_x`/`test_y`
+/// into `acc` (unnormalized, upper triangle + diagonal) and returns
+/// (total weight, number of test blocks).
+#[allow(clippy::too_many_arguments)]
+fn banded_accumulate(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    acc: &mut Matrix,
+    progress: &Progress,
+) -> Result<(f64, usize)> {
+    let params = StiParams {
+        k: job.k,
+        metric: job.metric,
+    };
+    let n = train_y.len();
+    let shards = shards_for_len(job, test_y.len());
+    let n_blocks = shards.len();
+    let bands = job.plan_bands(n);
+    let merger = Mutex::new(WeightMerger::new(n_blocks));
+    let prep_queue: Bounded<Shard> = Bounded::new(job.workers * job.queue_factor.max(1));
+    let band_queues: Vec<Bounded<Arc<PreparedBatch>>> = bands
+        .iter()
+        .map(|_| Bounded::new(2 * job.queue_factor.max(1)))
+        .collect();
+    let reorder = Mutex::new(Reorder {
+        next: 0,
+        aborted: false,
+        pending: BTreeMap::new(),
+    });
+    let reorder_cv = Condvar::new();
+    // Publication window: a prep worker whose block index is this far
+    // ahead of the oldest unpublished block waits instead of preparing,
+    // bounding the reorder buffer to O(window · block · n) memory even
+    // when one block straggles (the FIFO shard queue guarantees the
+    // oldest unpublished block is always already with a worker, so the
+    // window can never wedge).
+    let window = job.workers + 2 * job.queue_factor.max(1);
+
+    // Split the accumulator into per-band row slices; each band worker
+    // owns its slice exclusively, so no synchronization guards the sweep.
+    let mut band_slices: Vec<(usize, usize, &mut [f64])> = Vec::with_capacity(bands.len());
+    let mut rest: &mut [f64] = acc.data_mut();
+    for &(r_lo, r_hi) in &bands {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut((r_hi - r_lo) * n);
+        band_slices.push((r_lo, r_hi, head));
+        rest = tail;
+    }
+
+    std::thread::scope(|s| {
+        // Feeder: test-block shards in order (prep may still finish them
+        // out of order; the reorder buffer restores order at publication).
+        s.spawn(|| {
+            for shard in &shards {
+                if prep_queue.send(*shard).is_err() {
+                    break;
+                }
+            }
+            prep_queue.close();
+        });
+
+        // Prep pool: Phase 1 over test blocks (shared worker loop).
+        for _w in 0..job.workers {
+            s.spawn(|| {
+                prep_worker_loop(
+                    train_x, train_y, d, test_x, test_y, &params, &prep_queue, &band_queues,
+                    &reorder, &reorder_cv, &merger, progress, window, n_blocks,
+                );
+            });
+        }
+
+        // Band pool: Phase 2, one worker per disjoint row band.
+        for (band_idx, (r_lo, r_hi, slice)) in band_slices.into_iter().enumerate() {
+            let q = &band_queues[band_idx];
+            let prep_queue = &prep_queue;
+            let band_queues = &band_queues;
+            let reorder = &reorder;
+            let reorder_cv = &reorder_cv;
+            s.spawn(move || {
+                let _abort = AbortOnPanic {
+                    prep_queue,
+                    band_queues,
+                    reorder,
+                    reorder_cv,
+                };
+                let rows = slice;
+                while let Some(batch) = q.recv() {
+                    sweep_band(&batch, train_y, r_lo, r_hi, rows);
+                }
+            });
+        }
+    });
+
+    let weight = merger.into_inner().unwrap().finalize();
+    Ok((weight, n_blocks))
+}
+
+/// Streaming value-sharded ingest for the implicit engine
+/// (`shapley::values`, DESIGN.md §10): accumulate one test batch's
+/// UNNORMALIZED per-point values into an existing [`ValueVector`]
+/// through the prep pool, returning the batch's merge weight (its test
+/// count, Eq. 9 — values are linear in test points exactly like the
+/// matrix).
+///
+/// Topology: the same prep pool + in-order publication as the banded
+/// matrix path, but Phase 2 collapses to a SINGLE value sweeper — the
+/// O(len·n) `sweep_values` fold is ~n× cheaper than the O(len·n²) matrix
+/// sweep, so prep (O(n log n) per test) dominates and parallelizing the
+/// fold would buy nothing. Because blocks are published in block order
+/// and every vector element takes exactly one addition per test point,
+/// the result is **bit-identical** to single-threaded
+/// `values_accumulate` for any worker count or block size.
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_values(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    vv: &mut ValueVector,
+) -> Result<f64> {
+    let n = train_y.len();
+    anyhow::ensure!(
+        vv.n() == n,
+        "value vector is length {} but train set has n={n}",
+        vv.n()
+    );
+    anyhow::ensure!(!test_y.is_empty(), "empty ingest batch");
+    anyhow::ensure!(
+        train_x.len() == n * d,
+        "train shape mismatch: {} features for {n} points (d={d})",
+        train_x.len()
+    );
+    anyhow::ensure!(
+        test_x.len() == test_y.len() * d,
+        "test batch shape mismatch: {} features for {} labels (d={d})",
+        test_x.len(),
+        test_y.len()
+    );
+    let progress = Progress::new();
+    let (weight, _blocks) =
+        values_pipeline(train_x, train_y, d, test_x, test_y, job, vv, &progress)?;
+    Ok(weight)
+}
+
+/// The value-sharded pipeline core: prep pool → in-order publication →
+/// one `sweep_values` consumer. Returns (total weight, block count).
+#[allow(clippy::too_many_arguments)]
+fn values_pipeline(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    vv: &mut ValueVector,
+    progress: &Progress,
+) -> Result<(f64, usize)> {
+    let params = StiParams {
+        k: job.k,
+        metric: job.metric,
+    };
+    let shards = shards_for_len(job, test_y.len());
+    let n_blocks = shards.len();
+    let merger = Mutex::new(WeightMerger::new(n_blocks));
+    let prep_queue: Bounded<Shard> = Bounded::new(job.workers * job.queue_factor.max(1));
+    // One consumer queue, but kept as a Vec so the AbortOnPanic guard and
+    // the publication loop are shared verbatim with the banded path.
+    let band_queues: Vec<Bounded<Arc<PreparedBatch>>> =
+        vec![Bounded::new(2 * job.queue_factor.max(1))];
+    let reorder = Mutex::new(Reorder {
+        next: 0,
+        aborted: false,
+        pending: BTreeMap::new(),
+    });
+    let reorder_cv = Condvar::new();
+    let window = job.workers + 2 * job.queue_factor.max(1);
+    let sweeper_vv = &mut *vv;
+
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for shard in &shards {
+                if prep_queue.send(*shard).is_err() {
+                    break;
+                }
+            }
+            prep_queue.close();
+        });
+
+        for _w in 0..job.workers {
+            s.spawn(|| {
+                prep_worker_loop(
+                    train_x, train_y, d, test_x, test_y, &params, &prep_queue, &band_queues,
+                    &reorder, &reorder_cv, &merger, progress, window, n_blocks,
+                );
+            });
+        }
+
+        // The single value sweeper: folds published blocks in block order.
+        {
+            let q = &band_queues[0];
+            let prep_queue = &prep_queue;
+            let band_queues = &band_queues;
+            let reorder = &reorder;
+            let reorder_cv = &reorder_cv;
+            s.spawn(move || {
+                let _abort = AbortOnPanic {
+                    prep_queue,
+                    band_queues,
+                    reorder,
+                    reorder_cv,
+                };
+                let mut scratch = ValuesScratch::new();
+                while let Some(batch) = q.recv() {
+                    sweep_values(&batch, train_y, sweeper_vv, &mut scratch);
+                }
+            });
+        }
+    });
+
+    let weight = merger.into_inner().unwrap().finalize();
+    Ok((weight, n_blocks))
+}
+
+/// Run a per-point value job with the implicit engine (DESIGN.md §10):
+/// the value-sharded twin of [`run_job`]. Never allocates the n×n
+/// matrix; the result carries the averaged main + rowsum vectors.
+pub fn run_values_job(ds: &Dataset, job: &ValuationJob) -> Result<ValuesResult> {
+    anyhow::ensure!(
+        job.engine == Engine::Rust,
+        "the implicit value engine is Rust-only (the XLA artifacts compute matrices)"
+    );
+    // Err, not the plan_shards assert: parity with ingest_values.
+    anyhow::ensure!(!ds.test_y.is_empty(), "empty test set");
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let n = ds.n_train();
+    let mut vv = ValueVector::zeros(n);
+    let (weight, blocks) = values_pipeline(
+        &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, job, &mut vv, &progress,
+    )?;
+    let inv_w = 1.0 / weight;
+    let elapsed = meter.elapsed();
+    Ok(ValuesResult {
+        main: vv.main_values(inv_w),
+        rowsum: vv.rowsum_values(inv_w),
+        weight,
+        blocks,
+        elapsed,
+        throughput: meter.rate(progress.points()),
+    })
+}
+
+/// Legacy test-sharded assembly: each worker's `sti_knn_partial` call
+/// allocates a private n×n accumulator (O(W·n²) peak), merged in shard
+/// order. Kept selectable for the memory/scaling comparison benches.
+fn run_rust_test_sharded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationResult> {
+    let params = StiParams {
+        k: job.k,
+        metric: job.metric,
+    };
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let shards = shards_for(job, ds);
+    let merger = Mutex::new(Merger::new(shards.len()));
+    let queue: Bounded<Shard> = Bounded::new(job.workers * job.queue_factor.max(1));
+
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for shard in &shards {
+                if queue.send(*shard).is_err() {
+                    break;
+                }
+            }
+            queue.close();
+        });
+        run_workers(&queue, job.workers, |_w, shard: Shard| {
+            let t0 = std::time::Instant::now();
+            let (tx, ty) = ds.test_slice(shard.lo, shard.hi);
+            let (phi_sum, weight) =
+                sti_knn_partial(&ds.train_x, &ds.train_y, ds.d, tx, ty, &params);
+            progress.record_block(shard.hi - shard.lo, t0.elapsed().as_nanos() as u64);
+            merger.lock().unwrap().push(PartialResult {
+                index: shard.index,
+                phi_sum,
+                weight,
+            });
+        });
+    });
+
+    let (phi, weight) = merger.into_inner().unwrap().finalize();
+    let elapsed = meter.elapsed();
+    Ok(ValuationResult {
+        phi,
+        weight,
+        blocks: shards.len(),
+        elapsed,
+        throughput: meter.rate(progress.points()),
+        engine: Engine::Rust,
+    })
+}
+
+fn run_xla(ds: &Dataset, job: &ValuationJob, artifacts_dir: &Path) -> Result<ValuationResult> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    // Bind the job to the artifact's baked block size.
+    let spec = manifest
+        .find("sti", ds.n_train(), ds.d, job.k)
+        .with_context(|| {
+            format!(
+                "no sti artifact for (n={}, d={}, k={}); run `make artifacts` \
+                 with this shape in DEFAULT_GRID or use --engine rust",
+                ds.n_train(),
+                ds.d,
+                job.k
+            )
+        })?;
+    let block = spec.b;
+    let job = job.clone().with_block_size(block);
+
+    let meter = ThroughputMeter::new();
+    let progress = Progress::new();
+    let shards = shards_for(&job, ds);
+    let merger = Mutex::new(Merger::new(shards.len()));
+    let queue: Bounded<Shard> = Bounded::new(job.workers * job.queue_factor.max(1));
+
+    let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+
+    // The xla crate's PJRT handles are !Send (Rc internally), so each
+    // worker thread constructs — and keeps — its own client + compiled
+    // executable; only Shards and PartialResults cross thread boundaries.
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for shard in &shards {
+                if queue.send(*shard).is_err() {
+                    break;
+                }
+            }
+            queue.close();
+        });
+        for _w in 0..job.workers {
+            let queue = &queue;
+            let manifest = &manifest;
+            let merger = &merger;
+            let errors = &errors;
+            let progress = &progress;
+            let job = &job;
+            s.spawn(move || {
+                let exec: StiExecutor =
+                    match executor_for(manifest, "sti", ds.n_train(), ds.d, job.k) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            errors.lock().unwrap().push(e);
+                            queue.close();
+                            return;
+                        }
+                    };
+                while let Some(shard) = queue.recv() {
+                    let t0 = std::time::Instant::now();
+                    let (tx, ty) = ds.test_slice(shard.lo, shard.hi);
+                    match exec.run_block(&ds.train_x, &ds.train_y, tx, ty) {
+                        Ok((phi_sum, weight)) => {
+                            progress.record_block(
+                                shard.hi - shard.lo,
+                                t0.elapsed().as_nanos() as u64,
+                            );
+                            merger.lock().unwrap().push(PartialResult {
+                                index: shard.index,
+                                phi_sum,
+                                weight,
+                            });
+                        }
+                        Err(e) => {
+                            errors.lock().unwrap().push(e.context(format!(
+                                "shard {} [{}, {})",
+                                shard.index, shard.lo, shard.hi
+                            )));
+                            queue.close(); // fail fast: stop feeding workers
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let errs = errors.into_inner().unwrap();
+    if let Some(e) = errs.into_iter().next() {
+        return Err(e);
+    }
+    let (phi, weight) = merger.into_inner().unwrap().finalize();
+    let elapsed = meter.elapsed();
+    Ok(ValuationResult {
+        phi,
+        weight,
+        blocks: shards.len(),
+        elapsed,
+        throughput: meter.rate(progress.points()),
+        engine: Engine::Xla,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::load_dataset;
+    use crate::shapley::sti_knn::sti_knn;
+
+    #[test]
+    fn pipeline_equals_single_threaded_reference() {
+        let ds = load_dataset("moon", 60, 23, 5).unwrap();
+        let reference = sti_knn(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(5),
+        );
+        for assembly in [
+            Assembly::RowBanded { band_rows: 0 },
+            Assembly::RowBanded { band_rows: 13 }, // does not divide n=60
+            Assembly::TestSharded,
+        ] {
+            for workers in [1usize, 2, 4] {
+                for block in [1usize, 7, 16, 64] {
+                    let job = ValuationJob::new(5)
+                        .with_workers(workers)
+                        .with_block_size(block)
+                        .with_assembly(assembly);
+                    let res = run_job(&ds, &job).unwrap();
+                    assert_eq!(res.weight, 23.0);
+                    assert!(
+                        res.phi.max_abs_diff(&reference) < 1e-12,
+                        "assembly={assembly:?} workers={workers} block={block}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_bit_deterministic_across_worker_counts() {
+        let ds = load_dataset("click", 80, 17, 9).unwrap();
+        let run = |workers| {
+            let job = ValuationJob::new(3).with_workers(workers).with_block_size(4);
+            run_job(&ds, &job).unwrap().phi
+        };
+        let a = run(1);
+        let b = run(3);
+        let c = run(8);
+        // bitwise equality, not approximate
+        assert_eq!(a.data().len(), b.data().len());
+        for i in 0..a.data().len() {
+            assert_eq!(a.data()[i].to_bits(), b.data()[i].to_bits());
+            assert_eq!(b.data()[i].to_bits(), c.data()[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn banded_is_bit_identical_to_single_threaded_engine() {
+        // Stronger than the test-sharded guarantee (which only promises
+        // determinism for a FIXED block size): the banded path's per-cell
+        // addition order is exactly the single-threaded engine's, so the
+        // bits match sti_knn itself for any block size and band layout.
+        let ds = load_dataset("phoneme", 70, 21, 4).unwrap();
+        let reference = sti_knn(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(3),
+        );
+        for (workers, block, band_rows) in [(2usize, 5usize, 9usize), (7, 64, 0), (3, 1, 70)] {
+            let job = ValuationJob::new(3)
+                .with_workers(workers)
+                .with_block_size(block)
+                .with_band_rows(band_rows);
+            let res = run_job(&ds, &job).unwrap();
+            for (a, b) in reference.data().iter().zip(res.phi.data()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "workers={workers} block={block} band_rows={band_rows}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ingest_banded_streaming_matches_one_shot_bits() {
+        // The session-layer contract: two ingest_banded calls over a
+        // contiguous split of the test set, into one shared accumulator,
+        // produce (after mirror + scale) the same BITS as one-shot
+        // sti_knn — the parallel pipeline never reorders any cell's
+        // additions, and neither do ingest boundaries.
+        let ds = load_dataset("moon", 40, 16, 11).unwrap();
+        let reference = sti_knn(
+            &ds.train_x,
+            &ds.train_y,
+            ds.d,
+            &ds.test_x,
+            &ds.test_y,
+            &StiParams::new(4),
+        );
+        let job = ValuationJob::new(4).with_workers(3).with_block_size(3);
+        let mut acc = Matrix::zeros(40, 40);
+        let mut weight = 0.0;
+        for (lo, hi) in [(0usize, 7usize), (7, 16)] {
+            let (tx, ty) = ds.test_slice(lo, hi);
+            weight +=
+                ingest_banded(&ds.train_x, &ds.train_y, ds.d, tx, ty, &job, &mut acc).unwrap();
+        }
+        assert_eq!(weight, 16.0);
+        acc.mirror_upper_to_lower();
+        let s = 1.0 / weight;
+        acc.scale(s);
+        for (a, b) in reference.data().iter().zip(acc.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn ingest_banded_rejects_bad_shapes() {
+        let ds = load_dataset("moon", 20, 6, 3).unwrap();
+        let job = ValuationJob::new(3);
+        let mut wrong = Matrix::zeros(19, 19);
+        let (tx, ty) = ds.test_slice(0, 6);
+        assert!(
+            ingest_banded(&ds.train_x, &ds.train_y, ds.d, tx, ty, &job, &mut wrong).is_err()
+        );
+        let mut acc = Matrix::zeros(20, 20);
+        assert!(
+            ingest_banded(&ds.train_x, &ds.train_y, ds.d, &[], &[], &job, &mut acc).is_err()
+        );
+    }
+
+    #[test]
+    fn values_pipeline_is_bit_identical_to_single_threaded() {
+        // The value-sharded path's contract: in-order publication + one
+        // sweeper means every vector element takes its per-test additions
+        // in stream order — same BITS as values_accumulate, any workers /
+        // block size.
+        use crate::shapley::values::{values_accumulate, ValueVector};
+        let ds = load_dataset("moon", 45, 18, 6).unwrap();
+        let params = StiParams::new(4);
+        let mut reference = ValueVector::zeros(45);
+        values_accumulate(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &params, &mut reference,
+        );
+        for (workers, block) in [(1usize, 5usize), (3, 1), (7, 64)] {
+            let job = ValuationJob::new(4).with_workers(workers).with_block_size(block);
+            let mut vv = ValueVector::zeros(45);
+            let w = ingest_values(
+                &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &job, &mut vv,
+            )
+            .unwrap();
+            assert_eq!(w, 18.0);
+            for i in 0..45 {
+                assert_eq!(
+                    reference.main_raw()[i].to_bits(),
+                    vv.main_raw()[i].to_bits(),
+                    "main[{i}] workers={workers} block={block}"
+                );
+                assert_eq!(
+                    reference.inter_raw()[i].to_bits(),
+                    vv.inter_raw()[i].to_bits(),
+                    "inter[{i}] workers={workers} block={block}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_values_job_matches_dense_job_rowsums() {
+        let ds = load_dataset("click", 60, 21, 3).unwrap();
+        let job = ValuationJob::new(5).with_workers(3).with_block_size(4);
+        let vres = run_values_job(&ds, &job).unwrap();
+        assert_eq!(vres.weight, 21.0);
+        assert_eq!(vres.blocks, 6); // ceil(21/4)
+        assert!(vres.throughput > 0.0);
+        let dres = run_job(&ds, &job).unwrap();
+        for i in 0..60 {
+            assert!((vres.main[i] - dres.phi.get(i, i)).abs() < 1e-12, "main[{i}]");
+            let direct: f64 = dres.phi.row(i).iter().sum();
+            assert!((vres.rowsum[i] - direct).abs() < 1e-12, "rowsum[{i}]");
+        }
+    }
+
+    #[test]
+    fn values_streaming_ingest_matches_one_shot_bits() {
+        use crate::shapley::values::ValueVector;
+        let ds = load_dataset("moon", 30, 12, 9).unwrap();
+        let job = ValuationJob::new(3).with_workers(2).with_block_size(3);
+        let mut one = ValueVector::zeros(30);
+        ingest_values(
+            &ds.train_x, &ds.train_y, ds.d, &ds.test_x, &ds.test_y, &job, &mut one,
+        )
+        .unwrap();
+        let mut parts = ValueVector::zeros(30);
+        let mut weight = 0.0;
+        for (lo, hi) in [(0usize, 5usize), (5, 12)] {
+            let (tx, ty) = ds.test_slice(lo, hi);
+            weight +=
+                ingest_values(&ds.train_x, &ds.train_y, ds.d, tx, ty, &job, &mut parts).unwrap();
+        }
+        assert_eq!(weight, 12.0);
+        for i in 0..30 {
+            assert_eq!(one.main_raw()[i].to_bits(), parts.main_raw()[i].to_bits());
+            assert_eq!(one.inter_raw()[i].to_bits(), parts.inter_raw()[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn ingest_values_rejects_bad_shapes() {
+        use crate::shapley::values::ValueVector;
+        let ds = load_dataset("moon", 20, 6, 3).unwrap();
+        let job = ValuationJob::new(3);
+        let mut wrong = ValueVector::zeros(19);
+        let (tx, ty) = ds.test_slice(0, 6);
+        assert!(
+            ingest_values(&ds.train_x, &ds.train_y, ds.d, tx, ty, &job, &mut wrong).is_err()
+        );
+        let mut vv = ValueVector::zeros(20);
+        assert!(
+            ingest_values(&ds.train_x, &ds.train_y, ds.d, &[], &[], &job, &mut vv).is_err()
+        );
+    }
+
+    #[test]
+    fn throughput_and_blocks_reported() {
+        let ds = load_dataset("cpu", 50, 10, 2).unwrap();
+        let job = ValuationJob::new(3).with_workers(2).with_block_size(3);
+        let res = run_job(&ds, &job).unwrap();
+        assert_eq!(res.blocks, 4); // ceil(10/3)
+        assert!(res.throughput > 0.0);
+        assert!(res.elapsed.as_nanos() > 0);
+    }
+}

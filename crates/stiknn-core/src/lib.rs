@@ -1,0 +1,34 @@
+//! # stiknn-core — the pure algorithm layer of the STI-KNN workspace
+//!
+//! Everything in this crate is a deterministic function of its inputs:
+//! the STI-KNN valuation engines ([`shapley`], DESIGN.md §4/§10), the
+//! exact delta repairs ([`shapley::delta`], §11), KNN primitives
+//! ([`knn`]), dataset generators and loaders ([`data`]), the analysis
+//! suite ([`analysis`], §3.2/§4), the in-process parallel coordinator
+//! ([`coordinator`], §7), the AOT artifact runtime ([`runtime`], behind
+//! the `xla` feature), and the report/bench utilities shared by every
+//! layer above.
+//!
+//! **Layering contract (CI-enforced per crate):** `stiknn-core` depends
+//! on NO other workspace crate. The session layer (`stiknn-session`),
+//! the server (`stiknn-server`) and the CLI (`stiknn-cli`) all build on
+//! top of it; the `stiknn` facade crate re-exports the whole stack under
+//! the original monolith's module paths. See DESIGN.md §13 for the crate
+//! dependency DAG.
+//!
+//! The one function that needs a live session — the exact iterative
+//! removal curve — lives in `stiknn-session` (re-exported by the facade
+//! at its old `analysis::removal` path); everything else in [`analysis`]
+//! is matrix/value-vector pure and stays here.
+
+pub mod analysis;
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod knn;
+pub mod report;
+pub mod runtime;
+pub mod shapley;
+pub mod util;
+
+pub use shapley::delta;

@@ -1,0 +1,11 @@
+//! Reporting: ASCII heatmaps (the terminal stand-in for the paper's
+//! matplotlib figures), aligned tables and experiment-record helpers.
+//! Session snapshot/top-k formatting lives in the facade crate
+//! (`stiknn::report::session`) — it renders session/server types this
+//! core crate deliberately does not depend on.
+
+pub mod heatmap;
+pub mod table;
+
+pub use heatmap::render_heatmap;
+pub use table::Table;

@@ -1,0 +1,694 @@
+//! STI-KNN (Algorithm 1): exact pair-interaction Shapley-Taylor values for
+//! KNN models in O(t·n²) — the paper's contribution.
+//!
+//! Per test point (1-based indices as in the paper, train points sorted
+//! nearest-first):
+//!
+//!   line 3:    φ_{n−1,n} = −2(n−k)/(n(n−1))·u(α_n)                 (Eq. 6)
+//!   lines 4-10: φ_{j−2,j−1} = φ_{j−1,j} + [j > k+1]·
+//!                 2(j−k−1)/((j−2)(j−1))·(u(α_j) − u(α_{j−1}))      (Eq. 7)
+//!   lines 11-14: all upper-triangle entries of column j equal φ_{j−1,j}
+//!                                                                  (Eq. 8)
+//!   diagonal:  φ_ii = v({i}) − v(∅) = u(i)                         (Eq. 4/5)
+//!   main:      average over test points                            (Eq. 9)
+//!
+//! The per-test assembly is expressed exactly like the L1 Pallas kernel
+//! (DESIGN.md §2): with `rank[i]` the sorted position of train point i and
+//! `colval[i]` the superdiagonal value at that position,
+//!
+//!   Φ[i,j] += colval[ if rank[i] > rank[j] { i } else { j } ]   (i ≠ j)
+//!
+//! accumulated over the upper triangle only (the matrix is symmetric) and
+//! mirrored once at the end — this keeps the O(n²) inner loop allocation-
+//! free and sequential over the output rows.
+//!
+//! # Two-phase API
+//!
+//! The hot path is split into an explicit two-phase API so the coordinator
+//! can parallelize each phase along its natural axis without copying the
+//! n×n accumulator per worker (DESIGN.md §7):
+//!
+//! * [`prepare_batch`] — per-test O(n log n) prep (distances → ranks →
+//!   superdiagonal), embarrassingly parallel over test points; produces a
+//!   [`PreparedBatch`] of (rank, column-value) rows.
+//! * [`sweep_band`] — the O(batch·n²) select-add sweep over a row band
+//!   `[r_lo, r_hi)` of the shared accumulator. Bands partition the rows,
+//!   so concurrent sweeps into disjoint bands need no synchronization, and
+//!   because every cell lives in exactly one row, any band partition
+//!   preserves the per-cell `row[j] += v` accumulation order — results are
+//!   bit-identical to the single-threaded sweep for any band layout.
+//!
+//! [`sti_knn_partial`] is the single-threaded composition of the two
+//! phases over the full band `[0, n)`.
+
+use crate::knn::distance::{argsort_by_distance_keyed, distances_into, Metric};
+use crate::util::matrix::Matrix;
+
+/// Parameters for an STI-KNN run.
+#[derive(Clone, Copy, Debug)]
+pub struct StiParams {
+    /// KNN neighborhood size. Must satisfy 1 ≤ k ≤ n: Algorithm 1's
+    /// closed forms are exact only on that domain (DESIGN.md §1).
+    pub k: usize,
+    pub metric: Metric,
+}
+
+impl StiParams {
+    pub fn new(k: usize) -> Self {
+        StiParams {
+            k,
+            metric: Metric::SqEuclidean,
+        }
+    }
+
+    fn validate(&self, n: usize) {
+        assert!(self.k >= 1, "k must be >= 1");
+        assert!(
+            self.k <= n,
+            "STI-KNN is exact only for k <= n (k={}, n={}); see DESIGN.md §1",
+            self.k,
+            n
+        );
+        assert!(n >= 2, "need at least 2 training points for interactions");
+    }
+}
+
+/// Test points per prepared batch in the single-threaded path (§Perf): the
+/// assembly loop is memory-bound on the n×n accumulator if it streams the
+/// whole matrix once per test point, so we batch `PREP_BATCH` test points'
+/// (rank, column-value) rows and sweep the accumulator ONCE per batch,
+/// iterating the batch in the middle loop — the accumulator row stays in
+/// L1/L2 across all test points of the batch (measured 0.81 → 0.27
+/// ns/pair-cell at n=600; see EXPERIMENTS.md §Perf). Public so the
+/// session layer and benches can reason about the internal chunking
+/// (chunk boundaries never change any cell's addition order, so the
+/// choice is a pure perf knob — see `two_phase_composition_equals_partial`).
+pub const PREP_BATCH: usize = 64;
+
+/// Phase-1 output for a block of test points: everything the O(n²) sweep
+/// needs, laid out for the branchless select-add inner loop. Memory is
+/// O(len·n) — independent of how many workers later sweep it.
+pub struct PreparedBatch {
+    n: usize,
+    len: usize,
+    inv_k: f64,
+    /// rank as f64, `len` rows of n, original train order — f64 operands
+    /// let LLVM lower the inner select to vcmppd + vblendvpd + vaddpd.
+    rankf: Vec<f64>,
+    /// per-point column values, `len` rows of n, original train order.
+    colval: Vec<f64>,
+    /// test labels, for the diagonal main terms (Eq. 4/5).
+    test_y: Vec<i32>,
+}
+
+impl PreparedBatch {
+    /// Number of test points in the batch.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Train-set size the batch was prepared against.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Merge weight of the batch (number of test points, Eq. 9).
+    pub fn weight(&self) -> f64 {
+        self.len as f64
+    }
+
+    /// 1/k — the per-match utility quantum (Eq. 2).
+    pub fn inv_k(&self) -> f64 {
+        self.inv_k
+    }
+
+    /// Test point `p`'s rank row, ORIGINAL train order: `rank_row(p)[i]`
+    /// is train point i's sorted position for this test point, as f64
+    /// (always an exact small integer).
+    pub fn rank_row(&self, p: usize) -> &[f64] {
+        &self.rankf[p * self.n..(p + 1) * self.n]
+    }
+
+    /// Test point `p`'s column-value row, ORIGINAL train order:
+    /// `colval_row(p)[i]` is the Eq. 8 column value of train point i
+    /// (= c_p[rank of i]).
+    pub fn colval_row(&self, p: usize) -> &[f64] {
+        &self.colval[p * self.n..(p + 1) * self.n]
+    }
+
+    /// Test point `p`'s label.
+    pub fn test_label(&self, p: usize) -> i32 {
+        self.test_y[p]
+    }
+}
+
+/// Reusable scratch for [`prepare_batch_scratch`]: the per-test distance,
+/// superdiagonal, argsort-order and packed-sort-key buffers. One
+/// `PrepScratch` serves any number of batches against the same (or
+/// different) train sizes — the buffers are resized on demand and their
+/// capacity never shrinks, so a long-lived stream of small batches
+/// performs no per-test allocations at all.
+#[derive(Default)]
+pub struct PrepScratch {
+    dists: Vec<f64>,
+    c: Vec<f64>,
+    order: Vec<usize>,
+    keys: Vec<u128>,
+}
+
+impl PrepScratch {
+    pub fn new() -> Self {
+        PrepScratch::default()
+    }
+
+    fn resize(&mut self, n: usize) {
+        self.dists.resize(n, 0.0);
+        self.c.resize(n, 0.0);
+        self.order.resize(n, 0);
+    }
+}
+
+/// Lines 3–10 of Algorithm 1: the superdiagonal, indexed by RANK.
+///
+/// `u_sorted[r]` is u(α_{r+1}) (0-based rank r). Output `c[r]` is the
+/// column value of the point at rank r, i.e. φ_{r,r+1} in 1-based paper
+/// terms c[r] = φ_{(r+1)−1,(r+1)}; c[0] duplicates c[1] (column 1 has no
+/// upper-triangle entries, the value is never used for a pair).
+///
+/// `pub(crate)` so the delta repair kernel (`shapley::delta`) rebuilds
+/// post-edit column values through the EXACT same recursion — sharing
+/// this function is what makes repaired rows bit-match from-scratch
+/// prep rows.
+pub(crate) fn superdiagonal_into(u_sorted: &[f64], k: usize, c: &mut [f64]) {
+    let n = u_sorted.len();
+    debug_assert!(n >= 2 && c.len() == n);
+    let nf = n as f64;
+    let kf = k as f64;
+    // Eq. (6)
+    c[n - 1] = -2.0 * (nf - kf) / (nf * (nf - 1.0)) * u_sorted[n - 1];
+    // Eq. (7), j = n down to 3 (1-based); c index r = j-2 gets φ_{j-2,j-1}
+    for j in (3..=n).rev() {
+        let jf = j as f64;
+        let prev = c[j - 1];
+        c[j - 2] = if j > k + 1 {
+            prev + 2.0 * (jf - kf - 1.0) / ((jf - 2.0) * (jf - 1.0))
+                * (u_sorted[j - 1] - u_sorted[j - 2])
+        } else {
+            prev
+        };
+    }
+    if n >= 2 {
+        c[0] = c[1.min(n - 1)];
+    }
+}
+
+/// Phase 1: prepare a block of test points for the O(n²) sweep — per test
+/// point, distances → ranks → superdiagonal (Eq. 6/7) → scatter to
+/// original train order. O(len·n·(d + log n)); embarrassingly parallel
+/// over test points / blocks. Allocates its scratch internally; streaming
+/// callers that prepare many batches should hold a [`PrepScratch`] and
+/// call [`prepare_batch_scratch`] instead.
+pub fn prepare_batch(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+) -> PreparedBatch {
+    let mut scratch = PrepScratch::new();
+    prepare_batch_scratch(train_x, train_y, d, test_x, test_y, params, &mut scratch)
+}
+
+/// [`prepare_batch`] with caller-owned scratch: zero per-test allocations
+/// (the distance / superdiagonal / argsort-order buffers live in
+/// `scratch` and are reused across calls). The output batch is
+/// bit-identical to [`prepare_batch`]'s — scratch reuse cannot change a
+/// single rank or column value.
+pub fn prepare_batch_scratch(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    scratch: &mut PrepScratch,
+) -> PreparedBatch {
+    let n = train_y.len();
+    params.validate(n);
+    assert_eq!(train_x.len(), n * d, "train shape mismatch");
+    assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
+    let len = test_y.len();
+    let k = params.k;
+    let inv_k = 1.0 / k as f64;
+
+    let mut rankf = vec![0.0f64; len * n];
+    let mut colval = vec![0.0f64; len * n];
+    scratch.resize(n);
+    let PrepScratch {
+        dists,
+        c,
+        order,
+        keys,
+    } = scratch;
+
+    for (slot, (q, &y)) in test_x.chunks_exact(d).zip(test_y).enumerate() {
+        distances_into(q, train_x, d, params.metric, dists);
+        // Packed-key sort: identical order to argsort_by_distance (the
+        // metrics are non-negative), measurably faster prep.
+        argsort_by_distance_keyed(dists, keys, order);
+
+        let rank_row = &mut rankf[slot * n..(slot + 1) * n];
+        let col_row = &mut colval[slot * n..(slot + 1) * n];
+        // u in sorted order (reuse col_row as the temp buffer), then the
+        // superdiagonal by rank (Eq. 6/7).
+        for (r, &orig) in order.iter().enumerate() {
+            col_row[r] = if train_y[orig] == y { inv_k } else { 0.0 };
+        }
+        superdiagonal_into(&col_row[..n], k, c);
+        // Scatter to original order so the O(n²) loop is a pure select-add.
+        for (r, &orig) in order.iter().enumerate() {
+            rank_row[orig] = r as f64;
+            col_row[orig] = c[r];
+        }
+    }
+
+    PreparedBatch {
+        n,
+        len,
+        inv_k,
+        rankf,
+        colval,
+        test_y: test_y.to_vec(),
+    }
+}
+
+/// Phase 2: accumulate one prepared batch into the accumulator row band
+/// `[r_lo, r_hi)` — the Pallas-kernel twin. `rows` is the band's slice of
+/// the row-major accumulator, `(r_hi − r_lo)·n` long, columns in GLOBAL
+/// train order. Covers both the diagonal main terms (Eq. 4/5) for rows in
+/// the band and the upper-triangle select-add (Eq. 8); the batch is the
+/// MIDDLE loop so each accumulator row stays hot across all test points of
+/// the batch, and the inner select is branchless over f64 operands
+/// (auto-vectorizes; AVX-512 via target-cpu=native).
+///
+/// Disjoint bands may be swept concurrently; each row's per-cell addition
+/// order is (batch order, test order within batch) regardless of the band
+/// layout, so results are bit-identical to a full-band sweep.
+pub fn sweep_band(
+    batch: &PreparedBatch,
+    train_y: &[i32],
+    r_lo: usize,
+    r_hi: usize,
+    rows: &mut [f64],
+) {
+    let n = batch.n;
+    assert_eq!(train_y.len(), n, "train labels / batch mismatch");
+    assert!(r_lo < r_hi && r_hi <= n, "bad band [{r_lo}, {r_hi}) for n={n}");
+    assert_eq!(rows.len(), (r_hi - r_lo) * n, "band slice shape mismatch");
+
+    // Diagonal main terms (Eq. 4/5) for rows owned by this band. Disjoint
+    // from the upper-triangle cells, so phase order within the batch does
+    // not affect any cell's addition order.
+    for &y in &batch.test_y {
+        for i in r_lo..r_hi {
+            if train_y[i] == y {
+                rows[(i - r_lo) * n + i] += batch.inv_k;
+            }
+        }
+    }
+
+    // Upper-triangle select-add (the hot loop).
+    // (A 2-row-blocked variant that shares operand streams between
+    // adjacent rows was tried and reverted: −8% at n=600 but +10% at
+    // n=1600 — see EXPERIMENTS.md §Perf iteration log.)
+    for i in r_lo..r_hi {
+        let row = &mut rows[(i - r_lo) * n..(i - r_lo) * n + n];
+        for p in 0..batch.len {
+            let rankf = &batch.rankf[p * n..(p + 1) * n];
+            let colval = &batch.colval[p * n..(p + 1) * n];
+            let rif = rankf[i];
+            let wci = colval[i];
+            for j in (i + 1)..n {
+                let v = if rankf[j] < rif { wci } else { colval[j] };
+                row[j] += v;
+            }
+        }
+    }
+}
+
+/// Accumulate one test batch's unnormalized contribution Σ_p Φ(u_p) into
+/// an EXISTING n×n accumulator (upper triangle + diagonal, like
+/// [`sweep_band`]) and return the batch's merge weight (its test count,
+/// Eq. 9). This is the streaming-ingest primitive the session layer
+/// (`stiknn-session`) builds on: because every cell's additions are
+/// applied in test order regardless of how the stream is cut into
+/// batches, ingesting any contiguous partition of a test set through
+/// repeated calls is bit-identical to one [`sti_knn_partial`] run over
+/// the whole set (DESIGN.md §9).
+pub fn sti_knn_accumulate(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    acc: &mut Matrix,
+) -> f64 {
+    let n = train_y.len();
+    params.validate(n);
+    assert_eq!(train_x.len(), n * d, "train shape mismatch");
+    assert_eq!(test_x.len(), test_y.len() * d, "test shape mismatch");
+    assert_eq!(
+        (acc.rows(), acc.cols()),
+        (n, n),
+        "accumulator shape mismatch"
+    );
+    let mut scratch = PrepScratch::new();
+    for (chunk_x, chunk_y) in test_x
+        .chunks(PREP_BATCH * d)
+        .zip(test_y.chunks(PREP_BATCH))
+    {
+        let batch =
+            prepare_batch_scratch(train_x, train_y, d, chunk_x, chunk_y, params, &mut scratch);
+        sweep_band(&batch, train_y, 0, n, acc.data_mut());
+    }
+    test_y.len() as f64
+}
+
+/// Partial (unnormalized) STI-KNN over a slice of the test set: returns
+/// (Σ_p Φ(u_p), weight = number of test points). This is the unit of work
+/// the test-sharded coordinator path shards and merges (Eq. 9 linearity);
+/// the banded path composes [`prepare_batch`]/[`sweep_band`] itself.
+pub fn sti_knn_partial(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+) -> (Matrix, f64) {
+    let n = train_y.len();
+    params.validate(n);
+    let mut acc = Matrix::zeros(n, n);
+    let weight = sti_knn_accumulate(train_x, train_y, d, test_x, test_y, params, &mut acc);
+    acc.mirror_upper_to_lower();
+    (acc, weight)
+}
+
+/// The full STI-KNN interaction matrix, averaged over the test set
+/// (Eq. 9). Diagonal carries the main terms φ_ii (Eq. 4). O(t·n²).
+pub fn sti_knn(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+) -> Matrix {
+    assert!(!test_y.is_empty(), "empty test set");
+    let (mut acc, w) = sti_knn_partial(train_x, train_y, d, test_x, test_y, params);
+    acc.scale(1.0 / w);
+    acc
+}
+
+/// Single-test-point matrix (sorted-order inputs), exposed for tests and
+/// the analysis suite: labels already ordered nearest-first.
+pub fn sti_one_test_sorted(labels_sorted: &[i32], y_test: i32, k: usize) -> Matrix {
+    let n = labels_sorted.len();
+    StiParams::new(k).validate(n);
+    let inv_k = 1.0 / k as f64;
+    let u: Vec<f64> = labels_sorted
+        .iter()
+        .map(|&l| if l == y_test { inv_k } else { 0.0 })
+        .collect();
+    let mut c = vec![0.0; n];
+    superdiagonal_into(&u, k, &mut c);
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        m.set(i, i, u[i]);
+        for j in (i + 1)..n {
+            m.set(i, j, c[j]);
+            m.set(j, i, c[j]);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::sti_exact;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_bruteforce_small_cases() {
+        let mut rng = Rng::new(7);
+        for n in 3..9usize {
+            for k in 1..=n {
+                let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+                let y = rng.below(2) as i32;
+                let fast = sti_one_test_sorted(&labels, y, k);
+                let exact = sti_exact::sti_exact_one_test_sorted(&labels, y, k);
+                assert!(
+                    fast.max_abs_diff(&exact) < 1e-12,
+                    "n={n} k={k} labels={labels:?} y={y}: {:.3e}",
+                    fast.max_abs_diff(&exact)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eq6_last_term() {
+        // all-matching labels: φ_{n-1,n} = -2(n-k)/(n(n-1))·(1/k)
+        let n = 6;
+        let k = 2;
+        let m = sti_one_test_sorted(&vec![1; n], 1, k);
+        let expect = -2.0 * (n as f64 - k as f64) / (n as f64 * (n - 1) as f64) / k as f64;
+        assert!((m.get(n - 2, n - 1) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn column_equality_sorted_order() {
+        let labels = [1, 0, 0, 1, 1, 0, 1];
+        let m = sti_one_test_sorted(&labels, 1, 3);
+        for j in 1..labels.len() {
+            for i in 0..j {
+                assert_eq!(m.get(i, j), m.get(0, j), "column {j} not constant");
+            }
+        }
+    }
+
+    #[test]
+    fn close_points_share_value_below_k_plus_1() {
+        // Algorithm 1 lines 5–9: the recursion only adds the Eq. 7
+        // increment for 1-based columns j > k+1, and copies for j ≤ k+1 —
+        // KNN cannot distinguish points that are always among the k
+        // nearest, so 1-based columns 2..=k+1 (0-based 1..=k) all carry
+        // the same value.
+        let labels = [1, 0, 1, 0, 1, 0];
+        let k = 4;
+        let m = sti_one_test_sorted(&labels, 1, k);
+        let c2 = m.get(0, 1); // 1-based column 2
+        for j in 1..=k {
+            assert_eq!(m.get(0, j), c2, "1-based column {} differs", j + 1);
+        }
+        // The first column past k+1 picks up the Eq. 7 increment here
+        // (u(α_6) = 0 ≠ u(α_5) = 1/k), so the shared value must stop.
+        assert_ne!(m.get(0, k + 1), c2, "column k+2 should differ");
+    }
+
+    #[test]
+    fn averaged_matrix_is_symmetric_with_nonneg_diagonal() {
+        let mut rng = Rng::new(42);
+        let n = 20;
+        let d = 3;
+        let t = 7;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let m = sti_knn(&train_x, &train_y, d, &test_x, &test_y, &StiParams::new(5));
+        assert!(m.is_symmetric(0.0));
+        assert!(m.diagonal().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn partial_linearity_matches_full() {
+        // Eq. (9): summing two disjoint partials == one full run.
+        let mut rng = Rng::new(3);
+        let n = 15;
+        let d = 2;
+        let t = 6;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(3) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(3) as i32).collect();
+        let params = StiParams::new(4);
+
+        let (mut a, wa) =
+            sti_knn_partial(&train_x, &train_y, d, &test_x[..3 * d], &test_y[..3], &params);
+        let (b, wb) =
+            sti_knn_partial(&train_x, &train_y, d, &test_x[3 * d..], &test_y[3..], &params);
+        a.add_assign(&b);
+        a.scale(1.0 / (wa + wb));
+        let full = sti_knn(&train_x, &train_y, d, &test_x, &test_y, &params);
+        assert!(a.max_abs_diff(&full) < 1e-12);
+    }
+
+    #[test]
+    fn banded_sweep_is_bit_identical_to_full_sweep() {
+        // The tentpole invariant: sweeping a prepared batch band-by-band
+        // (any partition, including bands that don't divide n evenly)
+        // produces the same BITS as the full-band sweep, because every
+        // cell's addition order is unchanged.
+        let mut rng = Rng::new(17);
+        let n = 23;
+        let d = 2;
+        let t = 9;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let params = StiParams::new(4);
+        let batch = prepare_batch(&train_x, &train_y, d, &test_x, &test_y, &params);
+
+        let mut full = Matrix::zeros(n, n);
+        sweep_band(&batch, &train_y, 0, n, full.data_mut());
+
+        for bands in [vec![(0usize, 5usize), (5, 23)], vec![(0, 7), (7, 14), (14, 21), (21, 23)]] {
+            let mut banded = Matrix::zeros(n, n);
+            for &(lo, hi) in &bands {
+                let rows = &mut banded.data_mut()[lo * n..hi * n];
+                sweep_band(&batch, &train_y, lo, hi, rows);
+            }
+            for (a, b) in full.data().iter().zip(banded.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bands {bands:?} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn two_phase_composition_equals_partial() {
+        // prepare_batch + sweep_band over [0, n) in PREP_BATCH-sized chunks is
+        // exactly sti_knn_partial (which is implemented that way), and a
+        // different chunking agrees to the bit as well: chunk boundaries
+        // don't change any cell's per-test addition order.
+        let mut rng = Rng::new(29);
+        let n = 18;
+        let d = 2;
+        let t = 11;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let params = StiParams::new(3);
+
+        let (reference, w) = sti_knn_partial(&train_x, &train_y, d, &test_x, &test_y, &params);
+        assert_eq!(w, t as f64);
+
+        let mut acc = Matrix::zeros(n, n);
+        let mut weight = 0.0;
+        for chunk in [(0usize, 4usize), (4, 9), (9, 11)] {
+            let (lo, hi) = chunk;
+            let batch = prepare_batch(
+                &train_x, &train_y, d, &test_x[lo * d..hi * d], &test_y[lo..hi], &params,
+            );
+            weight += batch.weight();
+            sweep_band(&batch, &train_y, 0, n, acc.data_mut());
+        }
+        acc.mirror_upper_to_lower();
+        assert_eq!(weight, t as f64);
+        for (a, b) in reference.data().iter().zip(acc.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn accumulate_over_contiguous_batches_is_bit_identical_to_partial() {
+        // The streaming-ingest contract: cutting the test stream into any
+        // contiguous batches and accumulating them in order leaves every
+        // cell's addition sequence unchanged, so the raw accumulator bits
+        // match a single sti_knn_partial over the whole set.
+        let mut rng = Rng::new(91);
+        let n = 17;
+        let d = 3;
+        let t = 10;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let params = StiParams::new(4);
+
+        let (reference, w) = sti_knn_partial(&train_x, &train_y, d, &test_x, &test_y, &params);
+        assert_eq!(w, t as f64);
+
+        let mut acc = Matrix::zeros(n, n);
+        let mut weight = 0.0;
+        for (lo, hi) in [(0usize, 1usize), (1, 6), (6, 10)] {
+            weight += sti_knn_accumulate(
+                &train_x, &train_y, d, &test_x[lo * d..hi * d], &test_y[lo..hi], &params, &mut acc,
+            );
+        }
+        acc.mirror_upper_to_lower();
+        assert_eq!(weight, t as f64);
+        for (a, b) in reference.data().iter().zip(acc.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_fresh_allocation() {
+        // PrepScratch is a pure allocation cache: preparing two different
+        // batches through ONE scratch (dirty buffers between calls) gives
+        // the same bits as fresh prepare_batch calls.
+        let mut rng = Rng::new(53);
+        let n = 21;
+        let d = 3;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(3) as i32).collect();
+        let params = StiParams::new(5);
+        let mut scratch = PrepScratch::new();
+        for t in [4usize, 1, 7] {
+            let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+            let test_y: Vec<i32> = (0..t).map(|_| rng.below(3) as i32).collect();
+            let fresh = prepare_batch(&train_x, &train_y, d, &test_x, &test_y, &params);
+            let reused = prepare_batch_scratch(
+                &train_x, &train_y, d, &test_x, &test_y, &params, &mut scratch,
+            );
+            assert_eq!(fresh.len(), reused.len());
+            for p in 0..t {
+                for i in 0..n {
+                    assert_eq!(
+                        fresh.rank_row(p)[i].to_bits(),
+                        reused.rank_row(p)[i].to_bits()
+                    );
+                    assert_eq!(
+                        fresh.colval_row(p)[i].to_bits(),
+                        reused.colval_row(p)[i].to_bits()
+                    );
+                }
+                assert_eq!(fresh.test_label(p), reused.test_label(p));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k <= n")]
+    fn k_greater_than_n_is_rejected() {
+        sti_one_test_sorted(&[1, 0, 1], 1, 4);
+    }
+
+    #[test]
+    fn n_equals_2_minimal_case() {
+        let m = sti_one_test_sorted(&[1, 1], 1, 1);
+        // φ_{1,2} = -2(2-1)/(2·1)·u(α_2) = -1·1 = -1
+        assert!((m.get(0, 1) + 1.0).abs() < 1e-15);
+        assert_eq!(m.get(0, 0), 1.0); // main term u(1) = 1/k = 1
+    }
+}

@@ -1,0 +1,17 @@
+//! # stiknn-server — the concurrent multi-session serve layer
+//!
+//! Hosts many named [`session::ValuationSession`]s in one process behind
+//! a [`server::SessionRegistry`] (per-session RwLocks, LRU spill to the
+//! v3 snapshot store, background autosave) and multiplexes clients onto
+//! them over the NDJSON protocol — stdio or TCP, plus the registry verbs
+//! `open`/`use`/`close`/`list` and the shard-identity verb `shard`
+//! (DESIGN.md §12/§13).
+//!
+//! Lower-layer modules are re-exported so in-crate paths like
+//! `crate::session::...` keep resolving exactly as they did in the
+//! monolith.
+
+pub mod server;
+
+pub use stiknn_core::{analysis, coordinator, data, knn, shapley, util};
+pub use stiknn_session::{session, shard};

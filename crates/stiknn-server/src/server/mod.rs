@@ -1,0 +1,373 @@
+//! Concurrent multi-session serve layer (DESIGN.md §12).
+//!
+//! `stiknn serve` grew from one session / one client on stdio into a
+//! process that hosts MANY named [`ValuationSession`]s (the
+//! [`SessionRegistry`]) and serves many clients at once: a TCP listener
+//! (`serve --listen ADDR`) accepts connections and runs each on its own
+//! thread over the exact same NDJSON protocol stdio uses
+//! ([`crate::session::protocol`]), so a stdio pipe and a socket client
+//! are indistinguishable to the command layer.
+//!
+//! Each connection carries one piece of state — the name of its CURRENT
+//! session — steered by four registry verbs on top of the single-session
+//! command set:
+//!
+//! ```text
+//! {"cmd":"open","name":"a"}                → create session "a" (or
+//!     attach if it exists) and make it current. Optional fields for
+//!     fresh sessions: "k", "engine" ("dense"|"implicit"), "mutable";
+//!     or "snapshot": a store file to restore (its header supplies
+//!     k/metric/engine/mutability).
+//! {"cmd":"use","name":"a"}                 → switch current session
+//! {"cmd":"close","name":"a"}               → drop a session ("name"
+//!     optional: defaults to current). State is NOT saved — `snapshot`
+//!     first to keep it.
+//! {"cmd":"list"}                           → registry listing + current
+//! {"cmd":"shard"}                          → this process's shard
+//!     identity (`serve --shard-of J/N`; null when unsharded) plus the
+//!     train-set fingerprint a shard coordinator verifies (DESIGN.md §13)
+//! ```
+//!
+//! Everything else (`ingest`/`query`/`values`/`topk`/`stats`/
+//! `snapshot`/`ping`/mutations) routes to the current session through
+//! its RwLock: reads share the lock, writes serialize per session while
+//! other sessions proceed untouched. `shutdown` ends the CONNECTION —
+//! over TCP the server keeps running for everyone else; on stdio, where
+//! the connection is the process, it ends the process like before.
+//!
+//! Concurrency contract (property-tested in
+//! `tests/server_concurrency.rs`): any interleaving of client traffic
+//! leaves every session bit-identical to a serialized replay of that
+//! session's own write commands in revision order — including across
+//! LRU spill→reload cycles through the v3 snapshot store and autosave
+//! checkpoints (`registry`).
+
+pub mod registry;
+
+pub use registry::{
+    start_autosave, Autosave, RegistryConfig, SessionInfo, SessionRegistry, ShardIdentity,
+    TrainData,
+};
+
+use crate::session::protocol::{self, Access, KNOWN_COMMANDS};
+use crate::session::{Engine, SessionConfig};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{BufRead, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// One client's view of the registry: the shared registry handle plus
+/// the name of the session its commands currently route to.
+pub struct Connection {
+    registry: Arc<SessionRegistry>,
+    current: Option<String>,
+}
+
+impl Connection {
+    /// `current`: the session this connection starts on (the CLI presets
+    /// the default session so single-session clients never need `open`).
+    pub fn new(registry: Arc<SessionRegistry>, current: Option<String>) -> Self {
+        Connection { registry, current }
+    }
+
+    pub fn current(&self) -> Option<&str> {
+        self.current.as_deref()
+    }
+
+    /// Execute one NDJSON command line → (response, end-connection?).
+    /// Never panics on untrusted input; every failure is an
+    /// `{"ok":false}` response and the connection keeps serving.
+    pub fn execute(&mut self, line: &str) -> (Json, bool) {
+        let v = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => return (protocol::err(format!("bad json: {e}")), false),
+        };
+        let Some(cmd) = v.get("cmd").and_then(Json::as_str).map(str::to_string) else {
+            return (protocol::err("missing string field 'cmd'"), false);
+        };
+        match cmd.as_str() {
+            "shutdown" => (
+                protocol::ok("shutdown", vec![("shutdown", Json::Bool(true))]),
+                true,
+            ),
+            "open" => (self.do_open(&v), false),
+            "use" => (self.do_use(&v), false),
+            "close" => (self.do_close(&v), false),
+            "list" => (self.do_list(), false),
+            "shard" => (self.do_shard(), false),
+            _ => match protocol::access_of(&cmd) {
+                Some(access) => (self.route(&cmd, &v, access), false),
+                None => (
+                    protocol::err(format!(
+                        "unknown command '{cmd}' \
+                         (expected open|use|close|list|shard|{KNOWN_COMMANDS})"
+                    )),
+                    false,
+                ),
+            },
+        }
+    }
+
+    /// Route a single-session command to the current session under the
+    /// appropriate lock mode. Registry-level failures (unknown session,
+    /// spill reload errors) and command failures are both `{"ok":false}`.
+    fn route(&self, cmd: &str, v: &Json, access: Access) -> Json {
+        let Some(name) = self.current.as_deref() else {
+            return protocol::err(
+                "no session selected on this connection (send \
+                 {\"cmd\":\"open\",\"name\":...} or use an existing session)",
+            );
+        };
+        let result = match access {
+            Access::Read => self.registry.with_session_read(name, |s| {
+                protocol::dispatch_read(s, cmd, v).unwrap_or_else(protocol::fail_json)
+            }),
+            Access::Write => self.registry.with_session_write(name, |s| {
+                protocol::dispatch_write(s, cmd, v).unwrap_or_else(protocol::fail_json)
+            }),
+        };
+        result.unwrap_or_else(|e| protocol::err(format!("{e:#}")))
+    }
+
+    fn do_open(&mut self, v: &Json) -> Json {
+        let Some(name) = v.get("name").and_then(Json::as_str).map(str::to_string) else {
+            return protocol::err("open needs a string 'name'");
+        };
+        let snapshot = v
+            .get("snapshot")
+            .and_then(Json::as_str)
+            .map(PathBuf::from);
+        // Config precedence: a snapshot supplies its own header-derived
+        // config; otherwise optional overrides modify the registry base.
+        let config = if snapshot.is_some() {
+            None
+        } else {
+            match open_overrides(self.registry.base_config(), v) {
+                Ok(c) => c,
+                Err(msg) => return protocol::err(msg),
+            }
+        };
+        match self.registry.open(&name, snapshot.as_deref(), config) {
+            Ok(created) => {
+                self.current = Some(name.clone());
+                protocol::ok(
+                    "open",
+                    vec![
+                        ("name", Json::str(name)),
+                        ("created", Json::Bool(created)),
+                    ],
+                )
+            }
+            Err(e) => protocol::err(format!("{e:#}")),
+        }
+    }
+
+    fn do_use(&mut self, v: &Json) -> Json {
+        let Some(name) = v.get("name").and_then(Json::as_str).map(str::to_string) else {
+            return protocol::err("use needs a string 'name'");
+        };
+        if !self.registry.exists(&name) {
+            return protocol::err(format!(
+                "unknown session '{name}' (open it first, or `list` the registry)"
+            ));
+        }
+        self.current = Some(name.clone());
+        protocol::ok("use", vec![("name", Json::str(name))])
+    }
+
+    fn do_close(&mut self, v: &Json) -> Json {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .or_else(|| self.current.clone());
+        let Some(name) = name else {
+            return protocol::err("close needs a 'name' (no current session to default to)");
+        };
+        match self.registry.close(&name) {
+            Ok(()) => {
+                if self.current.as_deref() == Some(name.as_str()) {
+                    self.current = None;
+                }
+                protocol::ok("close", vec![("name", Json::str(name))])
+            }
+            Err(e) => protocol::err(format!("{e:#}")),
+        }
+    }
+
+    /// Report this server's shard identity (`serve --shard-of J/N`,
+    /// `null` when unsharded) plus the invariants a shard coordinator
+    /// verifies before routing traffic: every member of a shard group
+    /// must serve the SAME train set (name + fingerprint) with the same
+    /// base k (DESIGN.md §13). Registry-level, not per-session — the
+    /// identity belongs to the process.
+    fn do_shard(&self) -> Json {
+        let train = self.registry.train();
+        let fp = crate::session::dataset_fingerprint(&train.x, &train.y, train.d);
+        let mut fields = vec![match self.registry.shard() {
+            Some(id) => ("shard", Json::num(id.index as f64)),
+            None => ("shard", Json::Null),
+        }];
+        if let Some(id) = self.registry.shard() {
+            fields.push(("of", Json::num(id.count as f64)));
+        }
+        fields.extend([
+            ("train", Json::str(train.name.as_str())),
+            ("n", Json::num(train.y.len() as f64)),
+            ("d", Json::num(train.d as f64)),
+            ("k", Json::num(self.registry.base_config().k as f64)),
+            ("fingerprint", Json::str(format!("{fp:016x}"))),
+        ]);
+        protocol::ok("shard", fields)
+    }
+
+    fn do_list(&self) -> Json {
+        let infos = self.registry.list();
+        protocol::ok(
+            "list",
+            vec![
+                (
+                    "current",
+                    match &self.current {
+                        Some(n) => Json::str(n.as_str()),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "sessions",
+                    Json::arr(infos.iter().map(|i| {
+                        Json::obj(vec![
+                            ("name", Json::str(i.name.as_str())),
+                            ("resident", Json::Bool(i.resident)),
+                            ("dirty", Json::Bool(i.dirty)),
+                            ("engine", Json::str(i.engine.label())),
+                            ("mutable", Json::Bool(i.mutable)),
+                            ("n", Json::num(i.n as f64)),
+                            ("tests", Json::num(i.tests as f64)),
+                            ("rev", Json::num(i.revision as f64)),
+                        ])
+                    })),
+                ),
+            ],
+        )
+    }
+}
+
+/// Fresh-session config overrides for `open`: `Ok(None)` = no overrides
+/// given (registry decides), `Err` = a human-readable rejection.
+fn open_overrides(base: SessionConfig, v: &Json) -> Result<Option<SessionConfig>, String> {
+    let mut c = base;
+    let mut any = false;
+    let mut explicit_engine = None;
+    if let Some(kv) = v.get("k") {
+        let Some(k) = kv.as_usize().filter(|&k| k >= 1) else {
+            return Err("'k' must be a positive integer".to_string());
+        };
+        c.k = k;
+        any = true;
+    }
+    if let Some(e) = v.get("engine") {
+        let Some(engine) = e.as_str().and_then(Engine::parse) else {
+            return Err("'engine' must be dense or implicit".to_string());
+        };
+        c.engine = engine;
+        explicit_engine = Some(engine);
+        any = true;
+    }
+    if let Some(m) = v.get("mutable") {
+        let Some(mutable) = m.as_bool() else {
+            return Err("'mutable' must be a boolean".to_string());
+        };
+        if mutable {
+            if explicit_engine == Some(Engine::Dense) {
+                return Err(
+                    "a mutable session requires the implicit engine (drop \"engine\":\"dense\")"
+                        .to_string(),
+                );
+            }
+            // --mutable semantics: implies implicit engine + retained rows
+            c.engine = Engine::Implicit;
+            c.retain_rows = true;
+        }
+        c.mutable = mutable;
+        any = true;
+    }
+    Ok(any.then_some(c))
+}
+
+/// Drive one connection over any byte stream until `shutdown` or EOF —
+/// the multi-session twin of [`crate::session::protocol::serve`], with
+/// the same robustness contract: malformed lines (including non-UTF-8
+/// bytes) answer `{"ok":false}` and the loop keeps serving; only real
+/// I/O failures (a half-closed socket mid-write) end it via `Err`.
+pub fn serve_connection<R: BufRead, W: Write>(
+    conn: &mut Connection,
+    mut input: R,
+    mut output: W,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        if input.read_until(b'\n', &mut buf)? == 0 {
+            break; // EOF (clean client disconnect)
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (response, shutdown) = conn.execute(trimmed);
+        writeln!(output, "{response}")?;
+        output.flush()?;
+        if shutdown {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Thread-per-connection accept loop over an already-bound listener
+/// (binding is the caller's job so `--listen 127.0.0.1:0` can report
+/// the chosen port before the loop starts). Every connection starts on
+/// `default_session`. Runs until the process exits; a failed accept or
+/// a misbehaving client ends (at most) that one connection — errors are
+/// logged to stderr and never propagate across clients.
+pub fn listen(
+    registry: Arc<SessionRegistry>,
+    listener: TcpListener,
+    default_session: Option<String>,
+) -> Result<()> {
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("stiknn serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let registry = Arc::clone(&registry);
+        let default_session = default_session.clone();
+        std::thread::spawn(move || {
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".to_string());
+            let reader = match stream.try_clone() {
+                Ok(s) => std::io::BufReader::new(s),
+                Err(e) => {
+                    eprintln!("stiknn serve: [{peer}] socket clone failed: {e}");
+                    return;
+                }
+            };
+            let mut conn = Connection::new(registry, default_session);
+            if let Err(e) = serve_connection(&mut conn, reader, &stream) {
+                // a half-closed or reset client is business as usual for
+                // a server — log and move on, the registry is untouched
+                eprintln!("stiknn serve: [{peer}] connection ended: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,717 @@
+//! The named-session registry behind the concurrent server
+//! (DESIGN.md §12): many [`ValuationSession`]s in one process, each
+//! behind its own `RwLock`, with an LRU cap that spills cold sessions to
+//! the v3 snapshot store and an autosave thread that checkpoints dirty
+//! ones.
+//!
+//! # Locking discipline
+//!
+//! Two lock levels, always acquired registry-mutex → session-lock and
+//! never the other way around (no thread holds a session guard while
+//! touching the registry), so the system cannot deadlock:
+//!
+//! * one registry `Mutex` guards the name→entry map, the LRU clock and
+//!   spill/reload transitions — held only for map lookups and (briefly)
+//!   for a spill or reload, never across command execution;
+//! * one `RwLock` per session serializes that session's writes
+//!   (`ingest`/`add_train`/`remove_train`/`relabel`) while letting its
+//!   reads (`value`/`topk`/`stats`/`snapshot`) run concurrently.
+//!
+//! Serialized-replay equivalence: a write command mutates exactly one
+//! session, under that session's exclusive write guard, and bumps its
+//! [`ValuationSession::revision`] by one. Any interleaving of client
+//! traffic therefore equals SOME serial order of each session's writes —
+//! the order the revisions record — and replaying that order against a
+//! fresh session reproduces the final state bit-for-bit (every session
+//! operation is deterministic; property-tested in
+//! `tests/server_concurrency.rs`).
+//!
+//! # Spill / reload
+//!
+//! Eviction `try_write`s the victim (a session busy with an in-flight
+//! command — or poisoned — is skipped and the next-coldest tried; the
+//! cap is re-enforced on every acquire, so a skipped round recovers on
+//! the next touch), saves it to `state_dir` via the bit-exact snapshot
+//! store, marks the slot `evicted`, and drops the resident state. A
+//! command that acquired the slot just before eviction observes the
+//! `evicted` flag after locking and re-routes through the registry,
+//! which reloads the spilled snapshot transparently — restore is
+//! bit-identical, so a spill/reload cycle is invisible to the replay
+//! invariant. Sessions whose state cannot round-trip a snapshot
+//! (immutable retained-rows sessions: per-test rows are not persisted
+//! for them) are never chosen for eviction, so the resident count can
+//! exceed the cap when only those remain. Poisoned sessions (a command
+//! panicked mid-mutation) refuse all further commands and are never
+//! persisted — their in-memory state cannot be trusted.
+
+use crate::session::{store, Engine, SessionConfig, ValuationSession};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, RwLock};
+use std::time::Duration;
+
+/// The training set every fresh session in a registry is built over
+/// (mutable sessions diverge from it as they edit; their snapshots carry
+/// their own train set).
+#[derive(Clone, Debug)]
+pub struct TrainData {
+    pub name: String,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub d: usize,
+}
+
+impl TrainData {
+    pub fn from_dataset(ds: &crate::data::Dataset) -> Self {
+        TrainData {
+            name: ds.name.clone(),
+            x: ds.train_x.clone(),
+            y: ds.train_y.clone(),
+            d: ds.d,
+        }
+    }
+}
+
+/// A serve process's identity under exact test-set sharding
+/// (DESIGN.md §13): this process owns shard `index` of `count` in a
+/// coordinator's contiguous partition of the global test stream. Carried
+/// by the registry (set once at startup via
+/// [`SessionRegistry::with_shard`], reported by the `shard` protocol
+/// verb) so a `ShardedSession` (`stiknn-session`'s `shard` module) can
+/// verify it is talking to the member it thinks it is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardIdentity {
+    pub index: u64,
+    pub count: u64,
+}
+
+impl ShardIdentity {
+    /// `index` of `count`, zero-based; rejects `index >= count` and
+    /// `count == 0` (the CLI surfaces this for a bad `--shard-of J/N`).
+    pub fn new(index: u64, count: u64) -> Result<Self> {
+        ensure!(count >= 1, "a shard group needs at least 1 member");
+        ensure!(
+            index < count,
+            "shard index {index} out of range for a group of {count} \
+             (indices are zero-based: 0..{count})"
+        );
+        Ok(ShardIdentity { index, count })
+    }
+}
+
+/// Registry-level knobs (per-session semantics live in [`SessionConfig`]).
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Template for sessions opened without explicit config (protocol
+    /// `open` without a snapshot derives overrides from this).
+    pub base: SessionConfig,
+    /// LRU cap on RESIDENT sessions (0 = unlimited). Requires
+    /// `state_dir` — evicted sessions live as snapshots.
+    pub max_resident: usize,
+    /// Where spills and autosave checkpoints go (`None` = neither).
+    pub state_dir: Option<PathBuf>,
+}
+
+/// One resident session: the lock every command goes through, plus the
+/// eviction flag that re-routes commands which raced a spill.
+pub struct Slot {
+    lock: RwLock<ValuationSession>,
+    /// Set (under the write guard) when this slot is spilled or closed;
+    /// a command that acquired the Arc before that must re-route through
+    /// the registry instead of touching the detached state.
+    evicted: AtomicBool,
+}
+
+/// What `list` reports per session. For spilled sessions the values are
+/// from the moment of the spill — exact, since a spilled session cannot
+/// change.
+#[derive(Clone, Debug)]
+pub struct SessionInfo {
+    pub name: String,
+    pub resident: bool,
+    /// Writes applied since the last checkpoint (always false once
+    /// spilled — spilling checkpoints).
+    pub dirty: bool,
+    pub n: usize,
+    pub tests: u64,
+    pub engine: Engine,
+    pub mutable: bool,
+    pub revision: u64,
+}
+
+/// Spill-time summary kept for non-resident sessions.
+#[derive(Clone, Copy, Debug)]
+struct Summary {
+    n: usize,
+    tests: u64,
+    engine: Engine,
+    mutable: bool,
+    revision: u64,
+}
+
+fn summarize(s: &ValuationSession) -> Summary {
+    Summary {
+        n: s.n(),
+        tests: s.tests_seen(),
+        engine: s.engine(),
+        mutable: s.is_mutable(),
+        revision: s.revision(),
+    }
+}
+
+struct Entry {
+    /// `Some` while resident, `None` while spilled.
+    slot: Option<Arc<Slot>>,
+    config: SessionConfig,
+    /// Last snapshot written for this session (spill or autosave).
+    snapshot: Option<PathBuf>,
+    /// Session revision covered by that snapshot (dirtiness = live
+    /// revision beyond this).
+    saved_rev: u64,
+    /// LRU stamp from the registry clock.
+    last_touch: u64,
+    summary: Summary,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    clock: u64,
+}
+
+impl Inner {
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+}
+
+/// The named-session registry. All methods take `&self`; share it as an
+/// `Arc<SessionRegistry>` across connection threads.
+pub struct SessionRegistry {
+    train: TrainData,
+    config: RegistryConfig,
+    shard: Option<ShardIdentity>,
+    inner: Mutex<Inner>,
+}
+
+impl SessionRegistry {
+    pub fn new(train: TrainData, config: RegistryConfig) -> Result<Self> {
+        ensure!(
+            config.max_resident == 0 || config.state_dir.is_some(),
+            "a resident-session cap needs a state dir to spill into"
+        );
+        if let Some(dir) = &config.state_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating state dir {}", dir.display()))?;
+        }
+        Ok(SessionRegistry {
+            train,
+            config,
+            shard: None,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+            }),
+        })
+    }
+
+    /// Stamp this registry with a shard identity (`serve --shard-of J/N`).
+    /// Builder-style because the identity is fixed for the process
+    /// lifetime — set it before the registry is shared across connection
+    /// threads.
+    pub fn with_shard(mut self, shard: ShardIdentity) -> Self {
+        self.shard = Some(shard);
+        self
+    }
+
+    /// This process's shard identity, if it serves as part of a shard
+    /// group (reported by the `shard` protocol verb).
+    pub fn shard(&self) -> Option<ShardIdentity> {
+        self.shard
+    }
+
+    /// Registry session names: 1–64 chars of `[A-Za-z0-9._-]` — they
+    /// become spill file names, so nothing that could traverse paths.
+    pub fn valid_name(name: &str) -> bool {
+        !name.is_empty()
+            && name.len() <= 64
+            && name
+                .bytes()
+                .all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-')
+    }
+
+    pub fn base_config(&self) -> SessionConfig {
+        self.config.base
+    }
+
+    pub fn train(&self) -> &TrainData {
+        &self.train
+    }
+
+    /// Lock the registry map, surviving a poisoned mutex (a panicking
+    /// connection thread must not take the whole server down — the map
+    /// itself is only ever mutated through small, non-panicking steps).
+    fn inner(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Open (create or attach) the named session; `true` = created.
+    ///
+    /// * `snapshot` — restore from this file instead of starting fresh
+    ///   (mutable snapshots carry their own train set; immutable ones are
+    ///   fingerprint-checked against the registry's training data).
+    /// * `config` — `Some`: use exactly this config. `None`: derive k,
+    ///   metric, engine and mutability from the snapshot header, or fall
+    ///   back to the registry base config for fresh sessions.
+    ///
+    /// Attaching to an existing name ignores `snapshot`/`config` — the
+    /// session is whatever it already is.
+    pub fn open(
+        &self,
+        name: &str,
+        snapshot: Option<&Path>,
+        config: Option<SessionConfig>,
+    ) -> Result<bool> {
+        ensure!(
+            Self::valid_name(name),
+            "invalid session name '{name}' (1-64 characters of [A-Za-z0-9._-])"
+        );
+        let mut inner = self.inner();
+        if inner.map.contains_key(name) {
+            let stamp = inner.tick();
+            inner
+                .map
+                .get_mut(name)
+                .expect("checked contains_key above")
+                .last_touch = stamp;
+            return Ok(false);
+        }
+        let config = match (config, snapshot) {
+            (Some(c), _) => c,
+            (None, Some(path)) => config_from_header(&store::read_header(path)?, self.config.base),
+            (None, None) => self.config.base,
+        };
+        let session = match snapshot {
+            Some(path) if config.mutable => ValuationSession::restore_mutable(path, config)?,
+            Some(path) => ValuationSession::restore(
+                path,
+                self.train.x.clone(),
+                self.train.y.clone(),
+                self.train.d,
+                config,
+            )?,
+            None => ValuationSession::new(
+                self.train.x.clone(),
+                self.train.y.clone(),
+                self.train.d,
+                config,
+            )?,
+        };
+        let stamp = inner.tick();
+        let summary = summarize(&session);
+        inner.map.insert(
+            name.to_string(),
+            Entry {
+                slot: Some(Arc::new(Slot {
+                    lock: RwLock::new(session),
+                    evicted: AtomicBool::new(false),
+                })),
+                config,
+                snapshot: None,
+                saved_rev: summary.revision,
+                last_touch: stamp,
+                summary,
+            },
+        );
+        self.enforce_cap(&mut inner, name)?;
+        Ok(true)
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.inner().map.contains_key(name)
+    }
+
+    /// Drop the named session. In-flight commands on it finish first
+    /// (exclusive lock); the state is NOT saved — `snapshot` it before
+    /// closing if it should survive.
+    pub fn close(&self, name: &str) -> Result<()> {
+        let mut inner = self.inner();
+        let Some(entry) = inner.map.remove(name) else {
+            bail!("unknown session '{name}' (see `list`)");
+        };
+        if let Some(slot) = entry.slot {
+            // Drain in-flight commands, then flag stragglers that cloned
+            // the Arc before removal: they re-route and get a clean
+            // "unknown session" error instead of writing into the void.
+            let _guard = slot.lock.write().unwrap_or_else(PoisonError::into_inner);
+            slot.evicted.store(true, Ordering::Release);
+        }
+        Ok(())
+    }
+
+    /// Resident slot for `name`: touches the LRU stamp, transparently
+    /// reloading a spilled session (and possibly spilling another to
+    /// stay under the cap).
+    fn acquire(&self, name: &str) -> Result<Arc<Slot>> {
+        let mut inner = self.inner();
+        let stamp = inner.tick();
+        let Some(entry) = inner.map.get_mut(name) else {
+            bail!("unknown session '{name}' (open it first, or `list` the registry)");
+        };
+        entry.last_touch = stamp;
+        if let Some(slot) = &entry.slot {
+            let slot = Arc::clone(slot);
+            // Re-enforce even on the resident fast path: an earlier
+            // eviction round may have skipped busy victims, leaving the
+            // registry over cap — this is where it recovers.
+            self.enforce_cap(&mut inner, name)?;
+            return Ok(slot);
+        }
+        // Reload the spilled snapshot. Restore is bit-identical, and the
+        // revision counter is re-seeded so the write ordering stays
+        // monotone across the cycle. Done under the registry mutex:
+        // routing pauses rather than double-loading the same session.
+        let path = entry
+            .snapshot
+            .clone()
+            .expect("a spilled session always has a snapshot");
+        let config = entry.config;
+        let revision = entry.summary.revision;
+        let mut session = if config.mutable {
+            ValuationSession::restore_mutable(&path, config)
+        } else {
+            ValuationSession::restore(
+                &path,
+                self.train.x.clone(),
+                self.train.y.clone(),
+                self.train.d,
+                config,
+            )
+        }
+        .with_context(|| format!("reloading spilled session '{name}' from {}", path.display()))?;
+        session.set_revision(revision);
+        let slot = Arc::new(Slot {
+            lock: RwLock::new(session),
+            evicted: AtomicBool::new(false),
+        });
+        inner
+            .map
+            .get_mut(name)
+            .expect("entry looked up above")
+            .slot = Some(Arc::clone(&slot));
+        self.enforce_cap(&mut inner, name)?;
+        Ok(slot)
+    }
+
+    /// Spill coldest spillable sessions (never `just_touched`) until the
+    /// resident count fits the cap. Victims are tried with `try_write`:
+    /// a session busy with an in-flight command is skipped (the cap is
+    /// over-run this round rather than stalling every client behind one
+    /// slow command), and the next acquire re-enforces.
+    fn enforce_cap(&self, inner: &mut Inner, just_touched: &str) -> Result<()> {
+        let cap = self.config.max_resident;
+        if cap == 0 {
+            return Ok(());
+        }
+        let mut resident = inner.map.values().filter(|e| e.slot.is_some()).count();
+        if resident <= cap {
+            return Ok(());
+        }
+        let mut candidates: Vec<(u64, String)> = inner
+            .map
+            .iter()
+            .filter(|(n, e)| {
+                e.slot.is_some() && n.as_str() != just_touched && spillable(&e.config)
+            })
+            .map(|(n, e)| (e.last_touch, n.clone()))
+            .collect();
+        candidates.sort(); // coldest first
+        for (_, victim) in candidates {
+            if resident <= cap {
+                break;
+            }
+            if self.spill_entry(inner, &victim)? {
+                resident -= 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Try to spill one resident session. `Ok(false)` = skipped: its
+    /// lock was busy (an in-flight command) or poisoned (state that must
+    /// never be persisted).
+    fn spill_entry(&self, inner: &mut Inner, name: &str) -> Result<bool> {
+        let dir = self
+            .config
+            .state_dir
+            .as_ref()
+            .expect("cap enforcement requires a state dir");
+        let path = store::spill_path(dir, name);
+        let entry = inner.map.get_mut(name).expect("victim was just selected");
+        let slot = Arc::clone(entry.slot.as_ref().expect("victim is resident"));
+        let Ok(session) = slot.lock.try_write() else {
+            return Ok(false);
+        };
+        // Save only if the on-disk snapshot is stale (autosave may have
+        // checkpointed this exact revision already).
+        if entry.snapshot.as_deref() != Some(path.as_path())
+            || entry.saved_rev != session.revision()
+        {
+            session
+                .save(&path)
+                .with_context(|| format!("spilling session '{name}' to {}", path.display()))?;
+        }
+        entry.saved_rev = session.revision();
+        entry.snapshot = Some(path);
+        entry.summary = summarize(&session);
+        slot.evicted.store(true, Ordering::Release);
+        drop(session);
+        entry.slot = None;
+        Ok(true)
+    }
+
+    /// Run `f` under the named session's shared (read) guard.
+    ///
+    /// A POISONED session lock is an error, not a recovery: poisoning
+    /// means a command panicked mid-mutation, so the state behind the
+    /// lock may be half-edited — serving it would silently break the
+    /// serialized-replay invariant. The session stays refusing until
+    /// `close`d (and reopened from its last good checkpoint).
+    pub fn with_session_read<T>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&ValuationSession) -> T,
+    ) -> Result<T> {
+        let mut f = Some(f);
+        loop {
+            let slot = self.acquire(name)?;
+            let Ok(guard) = slot.lock.read() else {
+                bail!("{}", poisoned_msg(name));
+            };
+            if slot.evicted.load(Ordering::Acquire) {
+                continue; // raced a spill/close — re-route
+            }
+            let f = f.take().expect("loop exits after the first call");
+            return Ok(f(&guard));
+        }
+    }
+
+    /// Run `f` under the named session's exclusive (write) guard.
+    /// Poisoned locks are refused — see [`Self::with_session_read`].
+    pub fn with_session_write<T>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&mut ValuationSession) -> T,
+    ) -> Result<T> {
+        let mut f = Some(f);
+        loop {
+            let slot = self.acquire(name)?;
+            let Ok(mut guard) = slot.lock.write() else {
+                bail!("{}", poisoned_msg(name));
+            };
+            if slot.evicted.load(Ordering::Acquire) {
+                continue;
+            }
+            let f = f.take().expect("loop exits after the first call");
+            return Ok(f(&mut guard));
+        }
+    }
+
+    /// Registry listing, name-sorted. Resident rows read live state via
+    /// `try_read` — a session busy with a long command (or poisoned)
+    /// reports its last recorded summary instead of stalling the whole
+    /// registry behind one lock. Spilled rows report their (exact)
+    /// spill-time summary.
+    pub fn list(&self) -> Vec<SessionInfo> {
+        let inner = self.inner();
+        let mut rows: Vec<SessionInfo> = inner
+            .map
+            .iter()
+            .map(|(name, e)| {
+                if let Some(slot) = &e.slot {
+                    if let Ok(s) = slot.lock.try_read() {
+                        return SessionInfo {
+                            name: name.clone(),
+                            resident: true,
+                            dirty: s.revision() != e.saved_rev,
+                            n: s.n(),
+                            tests: s.tests_seen(),
+                            engine: s.engine(),
+                            mutable: s.is_mutable(),
+                            revision: s.revision(),
+                        };
+                    }
+                }
+                SessionInfo {
+                    name: name.clone(),
+                    resident: e.slot.is_some(),
+                    dirty: e.slot.is_some() && e.summary.revision != e.saved_rev,
+                    n: e.summary.n,
+                    tests: e.summary.tests,
+                    engine: e.summary.engine,
+                    mutable: e.summary.mutable,
+                    revision: e.summary.revision,
+                }
+            })
+            .collect();
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        rows
+    }
+
+    /// Checkpoint every resident dirty session to the state dir (the
+    /// autosave body; also callable directly). Returns how many sessions
+    /// were written. Saves happen under per-session READ guards with the
+    /// registry mutex released, so a checkpoint of a large session stalls
+    /// neither routing nor that session's queries — only its writers.
+    pub fn checkpoint_dirty(&self) -> Result<usize> {
+        let Some(dir) = self.config.state_dir.clone() else {
+            return Ok(0);
+        };
+        let names: Vec<String> = {
+            let inner = self.inner();
+            inner
+                .map
+                .iter()
+                .filter(|(_, e)| e.slot.is_some())
+                .map(|(n, _)| n.clone())
+                .collect()
+        };
+        let mut written = 0;
+        for name in names {
+            // Re-resolve per session: it may have been closed or spilled
+            // since the list was taken (both already persist or discard
+            // its state — nothing to do here).
+            let (slot, saved_rev) = {
+                let inner = self.inner();
+                match inner.map.get(&name) {
+                    Some(e) => match &e.slot {
+                        Some(s) => (Arc::clone(s), e.saved_rev),
+                        None => continue,
+                    },
+                    None => continue,
+                }
+            };
+            let path = store::spill_path(&dir, &name);
+            let (rev, summary) = {
+                // A poisoned session must never be persisted (its state
+                // may be half-mutated) — skip it, like a busy victim.
+                let Ok(session) = slot.lock.read() else {
+                    continue;
+                };
+                if slot.evicted.load(Ordering::Acquire) {
+                    continue;
+                }
+                let rev = session.revision();
+                if rev == saved_rev {
+                    continue;
+                }
+                session
+                    .save(&path)
+                    .with_context(|| format!("autosaving session '{name}'"))?;
+                (rev, summarize(&session))
+            };
+            written += 1;
+            // Record what the snapshot covers — but ONLY on the same slot
+            // we saved (ptr_eq): the name may have been closed and reopened
+            // as a brand-new session in the window where no lock is held,
+            // and stamping the old state's path onto it would later let a
+            // spill skip a needed save and reload stale state. A writer
+            // may also have moved the session past `rev`; then
+            // saved_rev < revision and it correctly stays dirty. (The
+            // session guard is dropped first: never hold it while taking
+            // the registry mutex.)
+            let mut inner = self.inner();
+            if let Some(e) = inner.map.get_mut(&name) {
+                if e.slot.as_ref().is_some_and(|s| Arc::ptr_eq(s, &slot)) {
+                    e.snapshot = Some(path);
+                    e.summary = summary;
+                    if e.saved_rev < rev {
+                        e.saved_rev = rev;
+                    }
+                }
+            }
+        }
+        Ok(written)
+    }
+}
+
+/// Can this session's full state round-trip a snapshot? Immutable
+/// retained-rows sessions cannot (per-test rows are only persisted for
+/// mutable sessions), so they are pinned resident.
+fn spillable(config: &SessionConfig) -> bool {
+    config.mutable || !config.retain_rows
+}
+
+fn poisoned_msg(name: &str) -> String {
+    format!(
+        "session '{name}' is poisoned: a command panicked mid-operation, so its \
+         in-memory state cannot be trusted — `close` it and reopen from its last \
+         good snapshot"
+    )
+}
+
+/// Session config implied by a snapshot header (protocol `open` with a
+/// snapshot and no explicit overrides): valuation semantics (k, metric)
+/// and capability shape (engine, mutability) come from the file;
+/// performance knobs stay at the registry base.
+fn config_from_header(h: &store::SnapshotHeader, base: SessionConfig) -> SessionConfig {
+    let mut c = base;
+    c.k = h.k as usize;
+    c.metric = h.metric;
+    c.engine = h.engine;
+    c.retain_rows = h.mutable;
+    c.mutable = h.mutable;
+    c
+}
+
+/// Handle to the background autosave thread; dropping it stops the
+/// thread promptly (condvar wakeup, then join).
+pub struct Autosave {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Autosave {
+    fn drop(&mut self) {
+        let (flag, cvar) = &*self.stop;
+        *flag.lock().unwrap_or_else(PoisonError::into_inner) = true;
+        cvar.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start the autosave loop: every `interval`, checkpoint dirty resident
+/// sessions into the registry's state dir. Failures are logged to
+/// stderr and retried next tick — a full disk must not kill the serving
+/// process, and the previous good checkpoint survives (snapshot writes
+/// are atomic-by-rename).
+pub fn start_autosave(registry: Arc<SessionRegistry>, interval: Duration) -> Autosave {
+    let stop = Arc::new((Mutex::new(false), Condvar::new()));
+    let stop2 = Arc::clone(&stop);
+    let handle = std::thread::spawn(move || {
+        let (flag, cvar) = &*stop2;
+        let mut stopped = flag.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            let (guard, _) = cvar
+                .wait_timeout(stopped, interval)
+                .unwrap_or_else(PoisonError::into_inner);
+            stopped = guard;
+            if *stopped {
+                return;
+            }
+            drop(stopped); // never checkpoint while holding the stop flag
+            if let Err(e) = registry.checkpoint_dirty() {
+                eprintln!("stiknn serve: autosave failed: {e:#}");
+            }
+            stopped = flag.lock().unwrap_or_else(PoisonError::into_inner);
+        }
+    });
+    Autosave {
+        stop,
+        handle: Some(handle),
+    }
+}

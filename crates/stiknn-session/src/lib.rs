@@ -1,0 +1,31 @@
+//! # stiknn-session — streaming valuation sessions and the shard layer
+//!
+//! The stateful layer between the pure engines (`stiknn-core`) and the
+//! multi-session server (`stiknn-server`):
+//!
+//! * [`session`] — [`session::ValuationSession`] holds unnormalized
+//!   engine state between requests, ingests test batches incrementally
+//!   (exact by Eq. 9 additivity), snapshots/restores through the
+//!   versioned binary store ([`session::store`], v3 carries mutable
+//!   payloads), and answers the single-session NDJSON command set
+//!   ([`session::protocol`]).
+//! * [`shard`] — the client-side multi-node fan-out (DESIGN.md §13):
+//!   [`shard::ShardedSession`] opens the same session on N shard
+//!   servers, routes each ingest batch by global test index
+//!   ([`shard::ShardPlan`]), merges per-shard raw sums exactly in shard
+//!   order, and consolidates/rebalances via per-shard snapshots
+//!   (`snapshot_all` → `rescatter`).
+//! * [`removal`] — the exact iterative removal curve, which needs a live
+//!   mutable session and therefore lives here rather than in
+//!   `stiknn-core`'s `analysis` module (the facade stitches it back into
+//!   `stiknn::analysis::removal`).
+//!
+//! The core algorithm modules are re-exported so in-crate paths like
+//! `crate::shapley::...` keep resolving exactly as they did in the
+//! monolith.
+
+pub mod removal;
+pub mod session;
+pub mod shard;
+
+pub use stiknn_core::{analysis, coordinator, data, knn, shapley, util};

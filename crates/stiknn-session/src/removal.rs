@@ -1,0 +1,132 @@
+//! The EXACT iterative removal order — the one analysis routine that
+//! drives a live mutable [`ValuationSession`] (remove-best → repair →
+//! re-rank via the delta subsystem, DESIGN.md §11), which is why it
+//! lives in `stiknn-session` rather than `stiknn-core::analysis`. The
+//! `stiknn` facade re-exports it at its pre-split path
+//! (`stiknn::analysis::removal::sti_iterative_removal_order`), so
+//! callers never see the crate boundary.
+
+use crate::analysis::removal::argmin_by_value;
+use crate::data::Dataset;
+use crate::session::{SessionConfig, TopBy, ValuationSession};
+use crate::shapley::values::Engine;
+use crate::shapley::StiParams;
+
+/// EXACT iterative removal order (remove-best → repair → re-rank),
+/// lowest value first, via a mutable valuation session (DESIGN.md §11).
+/// Greedy steps stop once the train set would shrink below
+/// `max(min_keep, k, 2)`; the surviving points are appended in
+/// final-ranking order so the result is a full permutation of
+/// `0..n_train` (what `analysis::removal::removal_curve` consumes). All
+/// indices are in ORIGINAL train numbering.
+///
+/// Every step's ranking is exactly the from-scratch values of the
+/// current reduced train set (bit-identical —
+/// `tests/delta_equivalence.rs`), at O(removals·t·n) total instead of
+/// the O(removals·t·(n·d + n log n)) a recompute-per-step would cost.
+pub fn sti_iterative_removal_order(
+    ds: &Dataset,
+    params: &StiParams,
+    min_keep: usize,
+) -> Vec<usize> {
+    let n = ds.n_train();
+    let config = SessionConfig::new(params.k)
+        .with_metric(params.metric)
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true);
+    let mut session =
+        ValuationSession::new(ds.train_x.clone(), ds.train_y.clone(), ds.d, config)
+            .expect("dataset shapes were validated at load time");
+    session
+        .ingest(&ds.test_x, &ds.test_y)
+        .expect("dataset test split is shape-consistent");
+    // live session index → original train index (removals shift both
+    // the session's numbering and this map identically)
+    let mut orig: Vec<usize> = (0..n).collect();
+    let mut order = Vec::with_capacity(n);
+    let floor = min_keep.max(params.k).max(2);
+    while session.n() > floor {
+        let vals = session
+            .point_values(TopBy::RowSum)
+            .expect("test points were ingested");
+        let i = argmin_by_value(&vals);
+        order.push(orig.remove(i));
+        session
+            .remove_train(i)
+            .expect("the floor keeps n above k and 2");
+    }
+    let vals = session
+        .point_values(TopBy::RowSum)
+        .expect("test points were ingested");
+    let mut rest: Vec<usize> = (0..session.n()).collect();
+    rest.sort_by(|&a, &b| vals[a].total_cmp(&vals[b]).then(a.cmp(&b)));
+    order.extend(rest.into_iter().map(|i| orig[i]));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::removal::{removal_curve, sti_removal_order};
+    use crate::data::{corrupt, load_dataset};
+
+    #[test]
+    fn iterative_removal_is_exact_at_every_step() {
+        // the reroute's contract: each greedy choice must be the argmin
+        // of a FROM-SCRATCH valuation of the current reduced train set —
+        // simulate exactly that (recompute per step) and compare orders
+        let mut ds = load_dataset("circle", 40, 12, 9).unwrap();
+        corrupt::flip_labels(&mut ds, 0.15, 2);
+        let params = crate::shapley::StiParams::new(4);
+        let min_keep = 30;
+        let fast = sti_iterative_removal_order(&ds, &params, min_keep);
+        assert_eq!(fast.len(), 40, "full permutation");
+
+        let mut keep: Vec<usize> = (0..40).collect();
+        let mut slow = Vec::new();
+        while keep.len() > min_keep {
+            let sub = ds.retain_train(&keep);
+            let pv = crate::shapley::values::sti_values(
+                &sub.train_x, &sub.train_y, sub.d, &ds.test_x, &ds.test_y, &params,
+            );
+            let i = argmin_by_value(&pv.rowsum);
+            slow.push(keep.remove(i));
+        }
+        assert_eq!(
+            &fast[..slow.len()],
+            slow.as_slice(),
+            "greedy choices must match recompute-per-step exactly"
+        );
+    }
+
+    #[test]
+    fn iterative_first_choice_matches_static_order() {
+        // before any removal the two orders see the same values, so the
+        // first element must agree (ties break by index in both)
+        let mut ds = load_dataset("moon", 50, 15, 3).unwrap();
+        corrupt::flip_labels(&mut ds, 0.1, 7);
+        let params = crate::shapley::StiParams::new(5);
+        let static_order =
+            sti_removal_order(&ds, &params, crate::shapley::values::Engine::Implicit);
+        let iterative = sti_iterative_removal_order(&ds, &params, 20);
+        assert_eq!(static_order[0], iterative[0]);
+    }
+
+    #[test]
+    fn iterative_order_drives_a_removal_curve() {
+        let ds = load_dataset("circle", 60, 20, 5).unwrap();
+        let params = crate::shapley::StiParams::new(3);
+        let order = sti_iterative_removal_order(&ds, &params, 10);
+        assert_eq!(order.len(), 60);
+        // a permutation: every index exactly once
+        let mut seen = vec![false; 60];
+        for &i in &order {
+            assert!(!seen[i], "index {i} repeated");
+            seen[i] = true;
+        }
+        let curve = removal_curve(&ds, &order, 10, 10, 3);
+        assert!(curve.len() >= 2);
+        assert_eq!(curve[0].0, 0);
+    }
+}

@@ -1,0 +1,1695 @@
+//! Incremental valuation sessions — the long-lived layer that turns the
+//! one-shot pipeline into a service (DESIGN.md §9).
+//!
+//! Eq. 9 makes the interaction matrix a weighted average over test
+//! points: Φ = (1/t)·Σ_τ Φ_τ. The sum is exactly additive under
+//! streaming test arrivals, so a deployment never has to recompute from
+//! scratch when new evaluation data lands. A [`ValuationSession`] owns
+//! the UNNORMALIZED n×n accumulator plus a per-batch weight ledger,
+//! ingests test batches through the existing two-phase hot path
+//! ([`crate::shapley::sti_knn_accumulate`] single-threaded, or the
+//! coordinator's banded prep pool via [`crate::coordinator::ingest_banded`]
+//! for large batches), and answers queries against the live matrix at any
+//! time — normalization happens at read time, so ingest stays O(t·n²)
+//! total with no per-query rescaling of state.
+//!
+//! Exactness: every accumulator cell receives its per-test additions in
+//! test order no matter how the stream is cut into batches, so ingesting
+//! any contiguous partition of a test set — including a snapshot/restore
+//! cycle mid-stream ([`store`]) — is **bit-identical** to one-shot
+//! `sti_knn` (property-tested in `tests/session_equivalence.rs`).
+//! Re-ordering batches changes addition order and is therefore only
+//! equal up to f64 associativity (~1e-12), not bitwise.
+//!
+//! # Engines (DESIGN.md §10)
+//!
+//! Sessions run one of two engines ([`SessionConfig::with_engine`]):
+//!
+//! * [`Engine::Dense`] (default) — the n×n accumulator above. Supports
+//!   every query, costs O(t·n²) ingest and O(n²) memory.
+//! * [`Engine::Implicit`] — the rank-space suffix-sum value engine
+//!   (`shapley::values`): the session holds an O(n) [`ValueVector`]
+//!   instead of the matrix, ingest costs O(t·n log n), and
+//!   `point_values`/`top_k`/`stats` are answered from the vector.
+//!   `cell`/`row`/`matrix` need pair-level state the vector doesn't
+//!   carry; with [`SessionConfig::with_retained_rows`] the session
+//!   additionally keeps each test point's `(rank, colval)` row (O(t·n)
+//!   memory, the caller's trade-off) and answers `cell` in O(t) /
+//!   `row` in O(t·n) by reducing over retained rows on the fly —
+//!   otherwise those queries return `None` and the serve protocol
+//!   rejects them with reason `engine`.
+//!
+//! Both engines ingest the same stream additively (Eq. 9), and the
+//! implicit path keeps the same bit-reproducibility contract: any
+//! contiguous partition of a test stream produces identical bits.
+//!
+//! # Mutable sessions (DESIGN.md §11)
+//!
+//! With [`SessionConfig::with_mutable`] (implicit engine + retained rows
+//! required) the training set becomes a live object:
+//! [`ValuationSession::add_train`], [`ValuationSession::remove_train`]
+//! and [`ValuationSession::relabel_train`] apply exact edits in O(t·(d + n))
+//! per edit via the delta subsystem ([`crate::shapley::delta`]) instead
+//! of a full O(t·(n·d + n log n)) recompute — post-edit state is
+//! bit-identical to a from-scratch session over the edited train set.
+//! Every edit is appended to a mutation ledger
+//! ([`ValuationSession::mutations`]) that v3 snapshots persist alongside
+//! the train set and the retained rows, so a mutable session restores
+//! completely ([`ValuationSession::restore_mutable`]) and its training
+//! set's provenance stays auditable.
+//!
+//! * [`store`]    — versioned, checksummed binary snapshots
+//! * [`protocol`] — NDJSON command loop backing `stiknn serve`
+
+pub mod protocol;
+pub mod store;
+
+pub use crate::shapley::delta::{MutationOp, MutationRecord};
+pub use crate::shapley::values::Engine;
+pub use store::{dataset_fingerprint, Snapshot, SnapshotHeader, SnapshotPayload};
+
+use crate::coordinator::{ingest_banded, ingest_values, repair_rows, ValuationJob};
+use crate::data::Dataset;
+use crate::knn::distance::Metric;
+use crate::shapley::delta::{self, Edit, MutableRows, RepairCtx, RetainedRows};
+use crate::shapley::sti_knn::{
+    prepare_batch_scratch, sti_knn_accumulate, PrepScratch, StiParams, PREP_BATCH,
+};
+use crate::shapley::values::{sweep_values, values_accumulate, ValueVector, ValuesScratch};
+use crate::util::matrix::Matrix;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// Ranking used by top-k point-value queries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopBy {
+    /// Diagonal main terms φ_ii (Eq. 4/5) — each point's own effect.
+    Main,
+    /// φ_ii + Σ_{j≠i} φ_ij — main effect plus all pairwise interactions,
+    /// the "total contribution including synergies" view.
+    RowSum,
+}
+
+impl TopBy {
+    pub fn parse(s: &str) -> Option<TopBy> {
+        match s {
+            "main" | "diag" => Some(TopBy::Main),
+            "rowsum" | "total" => Some(TopBy::RowSum),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TopBy::Main => "main",
+            TopBy::RowSum => "rowsum",
+        }
+    }
+}
+
+/// Session tuning knobs (the valuation semantics are fixed by k/metric;
+/// the engine fixes which queries are answerable; everything else is
+/// pure performance).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    pub k: usize,
+    pub metric: Metric,
+    /// Which state the session maintains: the n×n matrix accumulator
+    /// (`Dense`, default) or the O(n) value vector (`Implicit`).
+    pub engine: Engine,
+    /// Implicit engine only: additionally retain each ingested test
+    /// point's `(rank, colval)` row (O(t·n) memory) so `cell`/`row`
+    /// queries stay answerable via an O(t) on-the-fly reduction.
+    /// Ignored by the dense engine (the matrix answers those directly).
+    pub retain_rows: bool,
+    /// Allow live training-set edits (add/remove/relabel, DESIGN.md
+    /// §11). Requires the implicit engine WITH retained rows — the
+    /// repairs read and rewrite them — and additionally retains the
+    /// ingested test set plus per-test sorted distances (O(t·(d + n))
+    /// extra memory). Construction fails otherwise.
+    pub mutable: bool,
+    /// Worker threads for the parallel ingest path (prep pool + bands).
+    pub workers: usize,
+    /// Test points per prep block in the parallel ingest path.
+    pub block_size: usize,
+    /// Batches with at least this many test points go through the
+    /// coordinator's banded prep pool; smaller ones take the
+    /// single-threaded hot path (thread spin-up would dominate). Either
+    /// path produces identical bits, so this is a pure perf knob.
+    pub parallel_min: usize,
+}
+
+impl SessionConfig {
+    pub fn new(k: usize) -> Self {
+        SessionConfig {
+            k,
+            metric: Metric::SqEuclidean,
+            engine: Engine::Dense,
+            retain_rows: false,
+            mutable: false,
+            workers: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4),
+            block_size: 32,
+            parallel_min: 256,
+        }
+    }
+
+    pub fn with_metric(mut self, metric: Metric) -> Self {
+        self.metric = metric;
+        self
+    }
+
+    /// Select the session engine (`Engine::Implicit` | `Engine::Dense`).
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Implicit engine: keep per-test `(rank, colval)` rows for
+    /// `cell`/`row` queries (O(t·n) memory). NOTE: retention ingest runs
+    /// single-threaded — rows must append in test order, so the parallel
+    /// prep pool (`workers`/`parallel_min`) is bypassed in this mode.
+    pub fn with_retained_rows(mut self, retain: bool) -> Self {
+        self.retain_rows = retain;
+        self
+    }
+
+    /// Enable live training-set edits (DESIGN.md §11). Only valid
+    /// together with `with_engine(Engine::Implicit)` AND
+    /// `with_retained_rows(true)` — session construction enforces it.
+    pub fn with_mutable(mut self, mutable: bool) -> Self {
+        self.mutable = mutable;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_block_size(mut self, block: usize) -> Self {
+        self.block_size = block.max(1);
+        self
+    }
+
+    pub fn with_parallel_min(mut self, parallel_min: usize) -> Self {
+        self.parallel_min = parallel_min.max(1);
+        self
+    }
+}
+
+/// One entry of the per-batch weight ledger: `seq` is the monotone batch
+/// sequence number, `len` the test count the entry accounts for (its
+/// Eq. 9 merge weight). The ledger is persisted in snapshots, so a
+/// restored session continues its sequence instead of restarting at 0.
+///
+/// The ledger is COMPACTED once it exceeds [`LEDGER_COMPACT_AT`] entries
+/// (oldest half folded into one record that keeps the first `seq` and
+/// sums the lens), so a long-lived serve deployment ingesting millions
+/// of small batches holds O(1) ledger state and snapshot overhead. After
+/// compaction an entry may therefore cover MANY ingests — `seq` (not the
+/// entry count) is what tracks how many batches a session has seen
+/// ([`ValuationSession::batches_ingested`]), and Σ len == tests stays an
+/// integrity invariant the store verifies on decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchRecord {
+    pub seq: u64,
+    pub len: u64,
+}
+
+/// Ledger length that triggers compaction of the oldest half.
+pub const LEDGER_COMPACT_AT: usize = 4096;
+
+/// Summary statistics over the live (averaged) matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionStats {
+    pub n: usize,
+    pub k: usize,
+    pub tests: u64,
+    pub batches: u64,
+    /// Σ φ_ii of the averaged matrix (0 while no tests are ingested).
+    pub trace: f64,
+    /// Mean strict-upper-triangle entry of the averaged matrix.
+    pub mean_offdiag: f64,
+    /// Upper triangle including the diagonal — the efficiency-axiom
+    /// quantity (DESIGN.md §1).
+    pub upper_sum: f64,
+}
+
+/// The engine-specific valuation state (DESIGN.md §10/§11).
+/// `RetainedRows` lives in `shapley::delta` — it is rank-space state the
+/// delta repairs rewrite in place.
+enum EngineState {
+    /// Unnormalized Σ_τ Φ_τ, upper triangle + diagonal only (exactly the
+    /// layout `sweep_band` writes); mirrored + scaled at query time.
+    Dense { acc: Matrix },
+    /// Unnormalized per-point value sums (main + interaction rowsums),
+    /// plus optionally the retained per-test rows for pair queries, plus
+    /// (mutable sessions only) the test set + per-test sorted distances
+    /// the delta repairs consume.
+    Implicit {
+        values: ValueVector,
+        rows: Option<RetainedRows>,
+        live: Option<MutableRows>,
+    },
+}
+
+/// A long-lived incremental valuation: train set + engine state + ledger.
+pub struct ValuationSession {
+    train_x: Vec<f32>,
+    train_y: Vec<i32>,
+    d: usize,
+    config: SessionConfig,
+    state: EngineState,
+    ledger: Vec<BatchRecord>,
+    mutations: Vec<MutationRecord>,
+    tests_seen: u64,
+    /// Train-set fingerprint, LAZY: edits invalidate it (`None`) instead
+    /// of paying an O(n·d) rehash per edit — it is only consumed by
+    /// snapshot save/restore, never by the edit/query hot paths.
+    fingerprint: Option<u64>,
+    /// Monotone count of state-changing operations (non-empty ingests +
+    /// edits) — the serialization handle of the concurrent server layer
+    /// (DESIGN.md §12): every mutating protocol response reports it, so
+    /// clients can totally order the writes a session actually applied.
+    /// In-memory only; restores start at 0 unless the owner re-seeds it
+    /// ([`Self::set_revision`], which the server registry uses to keep
+    /// the count monotone across an LRU spill/reload cycle).
+    revision: u64,
+}
+
+impl ValuationSession {
+    /// Fresh session over an owned train set. Fails on shape mismatches
+    /// or a k outside Algorithm 1's exact domain 1 ≤ k ≤ n.
+    pub fn new(
+        train_x: Vec<f32>,
+        train_y: Vec<i32>,
+        d: usize,
+        config: SessionConfig,
+    ) -> Result<Self> {
+        let n = train_y.len();
+        ensure!(n >= 2, "need at least 2 training points for interactions");
+        ensure!(d >= 1, "need at least 1 feature dimension");
+        ensure!(
+            train_x.len() == n * d,
+            "train shape mismatch: {} features for {} points (d={d})",
+            train_x.len(),
+            n
+        );
+        ensure!(
+            config.k >= 1 && config.k <= n,
+            "STI-KNN is exact only for 1 <= k <= n (k={}, n={n})",
+            config.k
+        );
+        ensure!(
+            !config.mutable || (config.engine == Engine::Implicit && config.retain_rows),
+            "a mutable session requires the implicit engine with retained rows \
+             (with_engine(Engine::Implicit).with_retained_rows(true)) — the delta \
+             repairs read and rewrite the per-test rank-space rows"
+        );
+        let fingerprint = dataset_fingerprint(&train_x, &train_y, d);
+        let state = match config.engine {
+            Engine::Dense => EngineState::Dense {
+                acc: Matrix::zeros(n, n),
+            },
+            Engine::Implicit => EngineState::Implicit {
+                values: ValueVector::zeros(n),
+                rows: config.retain_rows.then(|| RetainedRows::new(n)),
+                live: config.mutable.then(|| MutableRows::new(n, d)),
+            },
+        };
+        Ok(ValuationSession {
+            train_x,
+            train_y,
+            d,
+            config,
+            state,
+            ledger: Vec::new(),
+            mutations: Vec::new(),
+            tests_seen: 0,
+            fingerprint: Some(fingerprint),
+            revision: 0,
+        })
+    }
+
+    /// Fresh session over a registry dataset's train part.
+    pub fn from_dataset(ds: &Dataset, config: SessionConfig) -> Result<Self> {
+        Self::new(ds.train_x.clone(), ds.train_y.clone(), ds.d, config)
+    }
+
+    /// Resume from a snapshot. The caller supplies the SAME train set the
+    /// snapshot was taken against (sessions don't persist training data);
+    /// k, metric, n, d and the train-set fingerprint are all verified, so
+    /// a mismatched resume fails loudly instead of silently producing
+    /// wrong values.
+    ///
+    /// Engine compatibility: a dense snapshot restores into a dense
+    /// session bit-exactly, and into an implicit session by DERIVING the
+    /// value vector from the stored accumulator (the dense→implicit
+    /// migration path — subsequent results agree with a pure-implicit
+    /// history to ≤ 1e-12, not bitwise). An implicit snapshot carries no
+    /// pair-level state, so restoring it into a dense session is refused,
+    /// as is restoring any non-empty snapshot with `retain_rows` set
+    /// (per-test rows are in-memory only and cannot be reconstructed).
+    pub fn restore(
+        path: &Path,
+        train_x: Vec<f32>,
+        train_y: Vec<i32>,
+        d: usize,
+        config: SessionConfig,
+    ) -> Result<Self> {
+        let snap = store::read_snapshot(path)?;
+        // Redirect mutable snapshots BEFORE any train-set comparison: a
+        // mutable session's train set has been edited, so it legitimately
+        // matches no external dataset and every later check would fire
+        // with a misleading message.
+        if matches!(snap.payload, SnapshotPayload::Mutable(_)) {
+            bail!(
+                "snapshot at {} was taken by a MUTABLE session (it carries its own \
+                 train set, retained rows and mutation ledger); restore it with \
+                 ValuationSession::restore_mutable / `serve --mutable --restore`",
+                path.display()
+            );
+        }
+        // The converse is refused too: an immutable snapshot carries no
+        // retained rows or test set, so a mutable session restored from
+        // it would hold tests_seen > 0 with ZERO repairable rows — the
+        // first edit would silently zero every restored value.
+        ensure!(
+            !config.mutable,
+            "cannot restore a non-mutable snapshot into a mutable session: \
+             per-test rows and the test set are only persisted by v3 mutable \
+             snapshots (save from a --mutable session, or start fresh)"
+        );
+        let mut session = Self::new(train_x, train_y, d, config)?;
+        let h = &snap.header;
+        ensure!(
+            h.k as usize == session.config.k,
+            "snapshot was taken with k={} but the session is configured with k={}",
+            h.k,
+            session.config.k
+        );
+        ensure!(
+            h.metric == session.config.metric,
+            "snapshot metric {:?} != session metric {:?}",
+            h.metric,
+            session.config.metric
+        );
+        ensure!(
+            h.n as usize == session.n() && h.d as usize == session.d,
+            "snapshot train shape (n={}, d={}) != session train shape (n={}, d={})",
+            h.n,
+            h.d,
+            session.n(),
+            session.d
+        );
+        ensure!(
+            h.fingerprint == session.fingerprint(),
+            "snapshot fingerprint {:016x} != train-set fingerprint {:016x}: \
+             the snapshot was taken against different training data",
+            h.fingerprint,
+            session.fingerprint()
+        );
+        if session.config.engine == Engine::Implicit && session.config.retain_rows && h.tests > 0 {
+            bail!(
+                "cannot restore a non-empty snapshot ({} tests) with retain_rows: \
+                 per-test (rank, colval) rows are not persisted, so cell/row \
+                 answers over the restored history would be incomplete",
+                h.tests
+            );
+        }
+        let (n, d) = (session.n(), session.d);
+        session.state = match (snap.payload, session.config.engine) {
+            (SnapshotPayload::Dense(raw), Engine::Dense) => EngineState::Dense { acc: raw },
+            (SnapshotPayload::Dense(raw), Engine::Implicit) => EngineState::Implicit {
+                values: ValueVector::from_raw_accumulator(&raw),
+                rows: session.config.retain_rows.then(|| RetainedRows::new(n)),
+                live: session.config.mutable.then(|| MutableRows::new(n, d)),
+            },
+            (SnapshotPayload::Implicit { main, inter }, Engine::Implicit) => {
+                EngineState::Implicit {
+                    values: ValueVector::from_raw_parts(main, inter),
+                    rows: session.config.retain_rows.then(|| RetainedRows::new(n)),
+                    live: session.config.mutable.then(|| MutableRows::new(n, d)),
+                }
+            }
+            (SnapshotPayload::Implicit { .. }, Engine::Dense) => bail!(
+                "snapshot was taken by an implicit-engine session (value vector only) \
+                 and cannot populate a dense matrix session; restore with \
+                 SessionConfig::with_engine(Engine::Implicit) / --engine implicit"
+            ),
+            (SnapshotPayload::Mutable(_), _) => {
+                unreachable!("mutable payloads are redirected before the engine match")
+            }
+        };
+        session.tests_seen = h.tests;
+        session.ledger = snap.ledger;
+        Ok(session)
+    }
+
+    /// Resume a MUTABLE session from a v3 mutable snapshot. Unlike
+    /// [`Self::restore`], no training data is supplied: the edited train
+    /// set lives IN the snapshot (the whole point of mutability is that
+    /// it no longer matches any external dataset), along with the
+    /// retained rows, per-test distances, test set, batch ledger and
+    /// mutation ledger — the restored session is bit-identical to the
+    /// one that saved it, ready for further queries, ingests and edits.
+    /// k, metric and the train-set fingerprint are verified against the
+    /// header; `config` must have `mutable` set (engine/retained-rows
+    /// requirements follow from that).
+    pub fn restore_mutable(path: &Path, config: SessionConfig) -> Result<Self> {
+        ensure!(
+            config.mutable && config.engine == Engine::Implicit && config.retain_rows,
+            "restore_mutable needs a mutable session config \
+             (with_engine(Engine::Implicit).with_retained_rows(true).with_mutable(true))"
+        );
+        let snap = store::read_snapshot(path)?;
+        let h = snap.header;
+        let SnapshotPayload::Mutable(payload) = snap.payload else {
+            bail!(
+                "snapshot at {} is not a mutable-session snapshot (payload kind \
+                 '{}'); restore it with ValuationSession::restore and the matching \
+                 train set instead",
+                path.display(),
+                h.engine.label()
+            );
+        };
+        ensure!(
+            h.k as usize == config.k,
+            "snapshot was taken with k={} but the session is configured with k={}",
+            h.k,
+            config.k
+        );
+        ensure!(
+            h.metric == config.metric,
+            "snapshot metric {:?} != session metric {:?}",
+            h.metric,
+            config.metric
+        );
+        let store::MutablePayload {
+            main,
+            inter,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            rank,
+            colval,
+            dist,
+            pos,
+        } = *payload;
+        let (n, d) = (h.n as usize, h.d as usize);
+        let tests = h.tests as usize;
+        ensure!(n >= 2, "mutable snapshot has n={n} (< 2) train points");
+        ensure!(d >= 1, "mutable snapshot has d=0");
+        // Both bounds of Algorithm 1's exact domain: this constructor
+        // bypasses Self::new, so k >= 1 must be re-checked here — a
+        // crafted k=0 snapshot would otherwise divide by zero (1/k) on
+        // the next ingest or edit.
+        ensure!(
+            config.k >= 1 && config.k <= n,
+            "snapshot train set has n={n} but the session is configured with k={} \
+             (STI-KNN is exact only for 1 <= k <= n)",
+            config.k
+        );
+        let fingerprint = dataset_fingerprint(&train_x, &train_y, d);
+        ensure!(
+            fingerprint == h.fingerprint,
+            "snapshot fingerprint {:016x} != fingerprint {:016x} recomputed from \
+             its own train payload: the snapshot is internally inconsistent",
+            h.fingerprint,
+            fingerprint
+        );
+        // The checksum is FNV, not a MAC, and the repair kernels index
+        // train arrays by these rows without bounds checks beyond slice
+        // panics — a crafted or bit-rotted snapshot must fail HERE with
+        // an error, not panic a live serve on its first edit. Per test
+        // row: pos must be a permutation of 0..n, rank its inverse, and
+        // the distances sorted ascending (also rejects NaN, which would
+        // break the insert binary search).
+        let mut seen = vec![false; n];
+        for p in 0..tests {
+            let pos_row = &pos[p * n..(p + 1) * n];
+            let rank_row = &rank[p * n..(p + 1) * n];
+            let dist_row = &dist[p * n..(p + 1) * n];
+            seen.iter_mut().for_each(|s| *s = false);
+            for (r, &orig) in pos_row.iter().enumerate() {
+                let orig = orig as usize;
+                ensure!(
+                    orig < n && !seen[orig] && rank_row[orig] as usize == r,
+                    "mutable snapshot row {p} is corrupt: pos/rank are not \
+                     inverse permutations of 0..{n}"
+                );
+                seen[orig] = true;
+                ensure!(
+                    r == 0 || dist_row[r - 1] <= dist_row[r],
+                    "mutable snapshot row {p} is corrupt: distances are not \
+                     sorted ascending at rank {r}"
+                );
+            }
+        }
+        let rows = RetainedRows {
+            n,
+            tests,
+            rank,
+            colval,
+        };
+        let live = MutableRows {
+            d,
+            n,
+            tests,
+            test_x,
+            test_y,
+            dist,
+            pos,
+        };
+        Ok(ValuationSession {
+            train_x,
+            train_y,
+            d,
+            config,
+            state: EngineState::Implicit {
+                values: ValueVector::from_raw_parts(main, inter),
+                rows: Some(rows),
+                live: Some(live),
+            },
+            ledger: snap.ledger,
+            mutations: snap.mutations,
+            tests_seen: h.tests,
+            fingerprint: Some(fingerprint),
+            revision: 0,
+        })
+    }
+
+    // -- identity ------------------------------------------------------
+
+    pub fn n(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn k(&self) -> usize {
+        self.config.k
+    }
+
+    pub fn tests_seen(&self) -> u64 {
+        self.tests_seen
+    }
+
+    pub fn ledger(&self) -> &[BatchRecord] {
+        &self.ledger
+    }
+
+    /// Total ingest calls over the session's lifetime (including before
+    /// a restore). Derived from the monotone batch sequence, so it
+    /// survives ledger compaction — `ledger().len()` does not.
+    pub fn batches_ingested(&self) -> u64 {
+        self.ledger.last().map(|b| b.seq + 1).unwrap_or(0)
+    }
+
+    /// The train-set fingerprint (see [`dataset_fingerprint`]). After an
+    /// edit this recomputes on demand (O(n·d)) — edits only invalidate
+    /// it, so the O(t·(d + n)) per-edit bound stays honest.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+            .unwrap_or_else(|| dataset_fingerprint(&self.train_x, &self.train_y, self.d))
+    }
+
+    /// Which engine this session runs (fixed at construction).
+    pub fn engine(&self) -> Engine {
+        self.config.engine
+    }
+
+    /// Whether live training-set edits are enabled (DESIGN.md §11).
+    pub fn is_mutable(&self) -> bool {
+        self.config.mutable
+    }
+
+    /// The mutation ledger: every edit applied over the session's
+    /// lifetime (including before a [`Self::restore_mutable`]), in
+    /// order, with as-of-edit-time indices. Empty for immutable
+    /// sessions.
+    pub fn mutations(&self) -> &[MutationRecord] {
+        &self.mutations
+    }
+
+    /// Monotone per-session write counter: bumps by exactly 1 on every
+    /// applied state change (non-empty ingest, add/remove/relabel) and
+    /// never on reads or failed commands. Two observations with equal
+    /// revisions saw identical state; sorting a session's write commands
+    /// by the revision each response reported reproduces the exact
+    /// serialization order the session applied them in.
+    pub fn revision(&self) -> u64 {
+        self.revision
+    }
+
+    /// Re-seed the write counter — used by the server registry after an
+    /// LRU spill/reload so revisions stay monotone across the cycle
+    /// (snapshots do not persist the counter).
+    pub(crate) fn set_revision(&mut self, revision: u64) {
+        self.revision = revision;
+    }
+
+    /// Current training labels (live view — edits change it).
+    pub fn train_labels(&self) -> &[i32] {
+        &self.train_y
+    }
+
+    /// Current features of train point `i` (length d). Panics if out of
+    /// range.
+    pub fn train_row(&self, i: usize) -> &[f32] {
+        &self.train_x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Whether this session retains per-test rows (implicit engine only).
+    pub fn retains_rows(&self) -> bool {
+        matches!(&self.state, EngineState::Implicit { rows: Some(_), .. })
+    }
+
+    /// Can `cell`/`row` queries be answered? Dense sessions always can;
+    /// implicit sessions only with retained rows. The serve protocol uses
+    /// this to reject matrix queries with reason `engine` instead of
+    /// conflating them with the empty-session case.
+    pub fn supports_matrix_queries(&self) -> bool {
+        match &self.state {
+            EngineState::Dense { .. } => true,
+            EngineState::Implicit { rows, .. } => rows.is_some(),
+        }
+    }
+
+    // -- ingest --------------------------------------------------------
+
+    /// Ingest one test batch (flattened row-major features + labels) and
+    /// return its test count. Empty batches are a no-op. Batches of at
+    /// least `config.parallel_min` points run through the coordinator's
+    /// parallel prep pool (banded for the dense engine, value-sharded for
+    /// the implicit one); every path appends the same additions in the
+    /// same order, so the routing never changes a single bit of the
+    /// state.
+    pub fn ingest(&mut self, test_x: &[f32], test_y: &[i32]) -> Result<usize> {
+        ensure!(
+            test_x.len() == test_y.len() * self.d,
+            "test batch shape mismatch: {} features for {} labels (d={})",
+            test_x.len(),
+            test_y.len(),
+            self.d
+        );
+        if test_y.is_empty() {
+            return Ok(0);
+        }
+        let params = StiParams {
+            k: self.config.k,
+            metric: self.config.metric,
+        };
+        let parallel = test_y.len() >= self.config.parallel_min;
+        let mut job = ValuationJob::new(self.config.k)
+            .with_workers(self.config.workers)
+            .with_block_size(self.config.block_size);
+        job.metric = self.config.metric;
+        match &mut self.state {
+            EngineState::Dense { acc } => {
+                if parallel {
+                    ingest_banded(
+                        &self.train_x,
+                        &self.train_y,
+                        self.d,
+                        test_x,
+                        test_y,
+                        &job,
+                        acc,
+                    )?;
+                } else {
+                    sti_knn_accumulate(
+                        &self.train_x,
+                        &self.train_y,
+                        self.d,
+                        test_x,
+                        test_y,
+                        &params,
+                        acc,
+                    );
+                }
+            }
+            EngineState::Implicit { values, rows, live } => {
+                match rows {
+                    // Mutable sessions additionally retain the test set
+                    // and per-test sorted distances; the delta ingest
+                    // computes distances + argsort once per test and is
+                    // bit-identical to the plain retained path
+                    // (tests/delta_equivalence.rs).
+                    Some(retained) if live.is_some() => {
+                        delta::ingest_rows(
+                            &self.train_x,
+                            &self.train_y,
+                            self.d,
+                            test_x,
+                            test_y,
+                            &params,
+                            retained,
+                            live.as_mut().expect("checked by the guard"),
+                            values,
+                        );
+                    }
+                    // Retention needs every prepared row, so it runs its
+                    // own chunk loop (prep scratch reused across chunks);
+                    // bit-identical to the other paths — same per-test
+                    // math, same per-element addition order.
+                    Some(retained) => {
+                        let mut prep = PrepScratch::new();
+                        let mut scratch = ValuesScratch::new();
+                        for (chunk_x, chunk_y) in test_x
+                            .chunks(PREP_BATCH * self.d)
+                            .zip(test_y.chunks(PREP_BATCH))
+                        {
+                            let batch = prepare_batch_scratch(
+                                &self.train_x,
+                                &self.train_y,
+                                self.d,
+                                chunk_x,
+                                chunk_y,
+                                &params,
+                                &mut prep,
+                            );
+                            sweep_values(&batch, &self.train_y, values, &mut scratch);
+                            retained.append_batch(&batch);
+                        }
+                    }
+                    None if parallel => {
+                        ingest_values(
+                            &self.train_x,
+                            &self.train_y,
+                            self.d,
+                            test_x,
+                            test_y,
+                            &job,
+                            values,
+                        )?;
+                    }
+                    None => {
+                        values_accumulate(
+                            &self.train_x,
+                            &self.train_y,
+                            self.d,
+                            test_x,
+                            test_y,
+                            &params,
+                            values,
+                        );
+                    }
+                }
+            }
+        }
+        let seq = self.ledger.last().map(|b| b.seq + 1).unwrap_or(0);
+        self.ledger.push(BatchRecord {
+            seq,
+            len: test_y.len() as u64,
+        });
+        if self.ledger.len() >= LEDGER_COMPACT_AT {
+            // Fold the oldest half into one record (first seq, summed
+            // lens): bounds ledger memory and snapshot size for
+            // long-lived sessions while preserving Σ len == tests and
+            // the monotone seq that batches_ingested() derives from.
+            let half = self.ledger.len() / 2;
+            let merged = BatchRecord {
+                seq: self.ledger[0].seq,
+                len: self.ledger[..half].iter().map(|b| b.len).sum(),
+            };
+            self.ledger.splice(..half, [merged]);
+        }
+        self.tests_seen += test_y.len() as u64;
+        self.revision += 1;
+        Ok(test_y.len())
+    }
+
+    // -- live training-set edits (DESIGN.md §11) -----------------------
+
+    /// Append a train point (features of length d, any i32 label) and
+    /// return its id (= the previous n; ids of existing points never
+    /// change on add). O(t·(d + n)): per retained test, one O(d)
+    /// distance, one O(log n) binary search, one O(n) rank-shift +
+    /// superdiagonal repair, then one O(t·n) value refold — the
+    /// post-edit state is bit-identical to a from-scratch session over
+    /// the extended train set (`tests/delta_equivalence.rs`). Mutable
+    /// sessions only.
+    pub fn add_train(&mut self, x: &[f32], y: i32) -> Result<usize> {
+        self.ensure_mutable("add_train")?;
+        ensure!(
+            x.len() == self.d,
+            "new train point has {} features but the session's d is {}",
+            x.len(),
+            self.d
+        );
+        ensure!(
+            x.iter().all(|v| v.is_finite()),
+            "new train point features must be finite (distances to a non-finite \
+             point would poison every ranking)"
+        );
+        let old_n = self.n();
+        self.train_x.extend_from_slice(x);
+        self.train_y.push(y);
+        let record = MutationRecord {
+            seq: self.next_mutation_seq(),
+            op: MutationOp::Add,
+            index: old_n as u64,
+            label: y,
+        };
+        self.repair_after_edit(Edit::Add { x, y }, old_n, record);
+        Ok(old_n)
+    }
+
+    /// Remove train point `index`; indices above it shift down by one
+    /// (order is preserved — that is what keeps the stable
+    /// distance-then-index ranking of the survivors, and therefore the
+    /// repair, exact). Fails if the session is immutable, the index is
+    /// out of range, or removal would shrink n below k (or below 2) —
+    /// Algorithm 1's closed forms are only exact for 1 ≤ k ≤ n.
+    pub fn remove_train(&mut self, index: usize) -> Result<()> {
+        self.ensure_mutable("remove_train")?;
+        let old_n = self.n();
+        ensure!(
+            index < old_n,
+            "remove_train index {index} out of range (n={old_n})"
+        );
+        ensure!(
+            old_n - 1 >= 2,
+            "cannot remove train point {index}: a session needs at least 2 \
+             training points for interactions"
+        );
+        ensure!(
+            old_n - 1 >= self.config.k,
+            "cannot remove train point {index}: n would shrink to {} below k={} \
+             (STI-KNN is exact only for k <= n; drop k first or keep the point)",
+            old_n - 1,
+            self.config.k
+        );
+        self.train_x.drain(index * self.d..(index + 1) * self.d);
+        self.train_y.remove(index);
+        let record = MutationRecord {
+            seq: self.next_mutation_seq(),
+            op: MutationOp::Remove,
+            index: index as u64,
+            label: 0,
+        };
+        self.repair_after_edit(Edit::Remove { index }, old_n, record);
+        Ok(())
+    }
+
+    /// Change train point `index`'s label. The cheapest edit: rankings
+    /// are untouched, only the per-test superdiagonals and the value
+    /// refold run (O(t·n) total). Mutable sessions only.
+    pub fn relabel_train(&mut self, index: usize, y: i32) -> Result<()> {
+        self.ensure_mutable("relabel_train")?;
+        let old_n = self.n();
+        ensure!(
+            index < old_n,
+            "relabel_train index {index} out of range (n={old_n})"
+        );
+        self.train_y[index] = y;
+        let record = MutationRecord {
+            seq: self.next_mutation_seq(),
+            op: MutationOp::Relabel,
+            index: index as u64,
+            label: y,
+        };
+        self.repair_after_edit(Edit::Relabel { index, y }, old_n, record);
+        Ok(())
+    }
+
+    fn ensure_mutable(&self, what: &str) -> Result<()> {
+        ensure!(
+            self.config.mutable,
+            "{what} requires a mutable session \
+             (SessionConfig::with_mutable(true) / serve --mutable)"
+        );
+        Ok(())
+    }
+
+    fn next_mutation_seq(&self) -> u64 {
+        self.mutations.last().map(|m| m.seq + 1).unwrap_or(0)
+    }
+
+    /// The shared edit tail: repair every retained test row (fanned out
+    /// across workers for large sessions — bit-identical to
+    /// single-threaded, `coordinator::repair_rows`), refold the value
+    /// vector in test order, refresh the train-set fingerprint, and
+    /// append the ledger record. Called AFTER `train_x`/`train_y` hold
+    /// the post-edit data.
+    fn repair_after_edit(&mut self, edit: Edit<'_>, old_n: usize, record: MutationRecord) {
+        let new_n = self.train_y.len();
+        let EngineState::Implicit { values, rows, live } = &mut self.state else {
+            unreachable!("mutable sessions are always implicit (enforced at construction)");
+        };
+        let rows = rows.as_mut().expect("mutable sessions retain rows");
+        let live = live.as_mut().expect("mutable sessions retain live state");
+        let workers = if live.tests >= self.config.parallel_min {
+            self.config.workers
+        } else {
+            1
+        };
+        let ctx = RepairCtx {
+            k: self.config.k,
+            metric: self.config.metric,
+            d: self.d,
+            old_n,
+            new_n,
+            train_y: &self.train_y,
+            test_x: &live.test_x,
+            test_y: &live.test_y,
+        };
+        let repaired = repair_rows(&ctx, &edit, live.tests, &live.dist, &live.pos, workers);
+        live.dist = repaired.dist;
+        live.pos = repaired.pos;
+        live.n = new_n;
+        rows.rank = repaired.rank;
+        rows.colval = repaired.colval;
+        rows.n = new_n;
+        *values = delta::refold_values(rows, &self.train_y, &live.test_y, self.config.k);
+        // Invalidate rather than rehash: recomputing the fingerprint here
+        // would be O(n·d) per edit — the factor the delta path deletes.
+        self.fingerprint = None;
+        self.mutations.push(record);
+        self.revision += 1;
+    }
+
+    // -- queries (all normalize at read time) --------------------------
+
+    /// 1/t — the read-time normalization factor. `None` while empty.
+    fn inv_weight(&self) -> Option<f64> {
+        if self.tests_seen == 0 {
+            None
+        } else {
+            Some(1.0 / self.tests_seen as f64)
+        }
+    }
+
+    /// Averaged φ_ij (symmetric — (i,j) and (j,i) agree). `None` while
+    /// the session is empty, an index is out of range, or the implicit
+    /// engine runs without retained rows (pair-level state doesn't exist;
+    /// [`Self::supports_matrix_queries`] distinguishes that case). The
+    /// diagonal φ_ii is always answerable — it IS a per-point value.
+    pub fn cell(&self, i: usize, j: usize) -> Option<f64> {
+        let inv_w = self.inv_weight()?;
+        Some(self.raw_cell(i, j)? * inv_w)
+    }
+
+    /// UNNORMALIZED Σ_τ φ_ij(τ) over this session's ingested tests — the
+    /// shard-merge primitive (DESIGN.md §13): Eq. 8 makes the test-set
+    /// sum additive across shards, so a coordinator folds these raw sums
+    /// and normalizes ONCE by the total test count. Same answerability as
+    /// [`Self::cell`], except an EMPTY session answers 0.0 (an exact
+    /// additive identity — a zero-test shard contributes nothing).
+    pub fn raw_cell(&self, i: usize, j: usize) -> Option<f64> {
+        if i >= self.n() || j >= self.n() {
+            return None;
+        }
+        match &self.state {
+            EngineState::Dense { acc } => {
+                let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+                Some(acc.get(lo, hi))
+            }
+            EngineState::Implicit { values, .. } if i == j => Some(values.main_raw()[i]),
+            EngineState::Implicit { rows, .. } => rows.as_ref().map(|r| r.pair_sum(i, j)),
+        }
+    }
+
+    /// Averaged row i of the symmetric matrix (diagonal included).
+    /// Implicit sessions answer this only with retained rows (an O(t·n)
+    /// reduction); otherwise `None`.
+    pub fn row(&self, i: usize) -> Option<Vec<f64>> {
+        let inv_w = self.inv_weight()?;
+        let mut out = self.raw_row(i)?;
+        for v in &mut out {
+            *v *= inv_w;
+        }
+        Some(out)
+    }
+
+    /// Unnormalized row i — the shard-merge primitive behind
+    /// [`Self::row`] (see [`Self::raw_cell`] for the contract; an empty
+    /// session answers all zeros).
+    pub fn raw_row(&self, i: usize) -> Option<Vec<f64>> {
+        let n = self.n();
+        if i >= n {
+            return None;
+        }
+        match &self.state {
+            EngineState::Dense { acc } => Some(
+                (0..n)
+                    .map(|j| {
+                        let (lo, hi) = if i <= j { (i, j) } else { (j, i) };
+                        acc.get(lo, hi)
+                    })
+                    .collect(),
+            ),
+            EngineState::Implicit { values, rows, .. } => {
+                let retained = rows.as_ref()?;
+                let mut out = vec![0.0f64; n];
+                for p in 0..retained.tests {
+                    let rank = retained.rank_row(p);
+                    let colval = retained.colval_row(p);
+                    let ri = rank[i];
+                    let ci = colval[i];
+                    for (j, slot) in out.iter_mut().enumerate() {
+                        *slot += if rank[j] < ri { ci } else { colval[j] };
+                    }
+                }
+                // the j == i lane above added colval[i] per test, which is
+                // meaningless — the diagonal is the main-term sum
+                out[i] = values.main_raw()[i];
+                Some(out)
+            }
+        }
+    }
+
+    /// The full averaged interaction matrix — exactly what one-shot
+    /// `sti_knn` over every ingested test point would return, to the bit
+    /// (same accumulator, same mirror-then-scale finalization). Dense
+    /// engine only: implicit sessions never materialize it (`None`).
+    pub fn matrix(&self) -> Option<Matrix> {
+        let inv_w = self.inv_weight()?;
+        match &self.state {
+            EngineState::Dense { acc } => {
+                let mut m = acc.clone();
+                m.mirror_upper_to_lower();
+                m.scale(inv_w);
+                Some(m)
+            }
+            EngineState::Implicit { .. } => None,
+        }
+    }
+
+    /// Per-point values under the given ranking — answered from the O(n)
+    /// value vector in implicit mode, from the accumulator in dense mode
+    /// (both agree to ≤ 1e-12; `tests/values_equivalence.rs`).
+    pub fn point_values(&self, by: TopBy) -> Option<Vec<f64>> {
+        let inv_w = self.inv_weight()?;
+        Some(match &self.state {
+            EngineState::Dense { acc } => point_values_raw(acc, inv_w, by),
+            EngineState::Implicit { values, .. } => match by {
+                TopBy::Main => values.main_values(inv_w),
+                TopBy::RowSum => values.rowsum_values(inv_w),
+            },
+        })
+    }
+
+    /// One point's (main, rowsum) pair — O(1)/O(n) instead of building
+    /// the full vectors (the dense RowSum vector costs an O(n²) matrix
+    /// reduction). Bit-identical to the corresponding entries of
+    /// [`Self::point_values`] (same expressions, same order). This is
+    /// what the protocol's single-point `values` query reads.
+    pub fn point_value_at(&self, i: usize) -> Option<(f64, f64)> {
+        let inv_w = self.inv_weight()?;
+        if i >= self.n() {
+            return None;
+        }
+        Some(match &self.state {
+            EngineState::Dense { acc } => (
+                acc.get(i, i) * inv_w,
+                acc.sym_row_sum_from_upper(i) * inv_w,
+            ),
+            EngineState::Implicit { values, .. } => (
+                values.main_raw()[i] * inv_w,
+                (values.main_raw()[i] + values.inter_raw()[i]) * inv_w,
+            ),
+        })
+    }
+
+    /// UNNORMALIZED per-point sums `(main_i, rowsum_i)` over this
+    /// session's ingested tests — the shard-merge primitive behind
+    /// [`Self::point_values`] (DESIGN.md §13). Eq. 8 additivity: the
+    /// element-wise sum of these vectors across shards equals the raw
+    /// sums of one session that ingested every shard's tests, so a
+    /// coordinator folds them in shard order and normalizes once by the
+    /// total test count. Always answerable — an empty session returns
+    /// all zeros (the exact additive identity), which is what lets a
+    /// zero-test shard participate in a merge.
+    pub fn raw_point_sums(&self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.n();
+        match &self.state {
+            EngineState::Dense { acc } => (
+                (0..n).map(|i| acc.get(i, i)).collect(),
+                (0..n).map(|i| acc.sym_row_sum_from_upper(i)).collect(),
+            ),
+            EngineState::Implicit { values, .. } => (
+                values.main_raw().to_vec(),
+                (0..n)
+                    .map(|i| values.main_raw()[i] + values.inter_raw()[i])
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Top-k (index, value), descending; ties break by index.
+    pub fn top_k(&self, k: usize, by: TopBy) -> Option<Vec<(usize, f64)>> {
+        Some(top_k_of(&self.point_values(by)?, k))
+    }
+
+    /// Summary statistics (zeros while the session is empty). Dense: one
+    /// O(n²) triangle walk + one O(n) diagonal pass. Implicit: two O(n)
+    /// passes — Σ_i inter_i double-counts each unordered pair, so the
+    /// strict-upper sum is Σ_i inter_i / 2.
+    pub fn stats(&self) -> SessionStats {
+        let n = self.n();
+        let inv_w = self.inv_weight().unwrap_or(0.0);
+        let pairs = (n * (n - 1) / 2) as f64;
+        // (trace, strict upper, upper incl. diagonal), all unnormalized
+        let (trace_raw, strict_upper_raw, upper_raw) = match &self.state {
+            EngineState::Dense { acc } => {
+                let upper = acc.upper_triangle_sum();
+                let trace: f64 = acc.diagonal().iter().sum();
+                (trace, upper - trace, upper)
+            }
+            EngineState::Implicit { values, .. } => {
+                let trace: f64 = values.main_raw().iter().sum();
+                let half_inter: f64 = values.inter_raw().iter().sum::<f64>() / 2.0;
+                (trace, half_inter, trace + half_inter)
+            }
+        };
+        SessionStats {
+            n,
+            k: self.config.k,
+            tests: self.tests_seen,
+            batches: self.batches_ingested(),
+            trace: trace_raw * inv_w,
+            mean_offdiag: if pairs > 0.0 {
+                strict_upper_raw * inv_w / pairs
+            } else {
+                0.0
+            },
+            upper_sum: upper_raw * inv_w,
+        }
+    }
+
+    // -- persistence ---------------------------------------------------
+
+    /// Write a snapshot (see [`store`] for the format — dense sessions
+    /// persist the raw accumulator, immutable implicit sessions the O(n)
+    /// value vector with retained rows deliberately NOT persisted;
+    /// MUTABLE sessions persist everything needed to resume edits: the
+    /// live train set, the test set, retained + distance rows, and the
+    /// mutation ledger). Returns the byte count written.
+    ///
+    /// The write is atomic-by-rename (temp sibling file, then rename
+    /// over the target): deployments snapshot to the SAME path on a
+    /// schedule, and a crash or full disk mid-write must never destroy
+    /// the previous good snapshot.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        let payload = match &self.state {
+            EngineState::Dense { acc } => store::EncodePayload::Dense(acc.data()),
+            EngineState::Implicit {
+                values,
+                rows: Some(rows),
+                live: Some(live),
+            } => store::EncodePayload::Mutable {
+                main: values.main_raw(),
+                inter: values.inter_raw(),
+                train_x: &self.train_x,
+                train_y: &self.train_y,
+                test_x: &live.test_x,
+                test_y: &live.test_y,
+                rank: &rows.rank,
+                colval: &rows.colval,
+                dist: &live.dist,
+                pos: &live.pos,
+            },
+            EngineState::Implicit { values, .. } => store::EncodePayload::Implicit {
+                main: values.main_raw(),
+                inter: values.inter_raw(),
+            },
+        };
+        let bytes = store::encode(
+            self.config.k as u32,
+            self.config.metric,
+            self.n() as u64,
+            self.d as u64,
+            self.fingerprint(),
+            self.tests_seen,
+            &self.ledger,
+            &self.mutations,
+            payload,
+        );
+        // PID-unique temp sibling: two processes snapshotting the same
+        // target must not interleave writes into one temp file.
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(format!(".{}.tmp", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp_name);
+        let written = (|| -> std::io::Result<()> {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            // Flush data blocks to disk BEFORE the rename becomes
+            // visible: rename-without-fsync can survive a crash while
+            // the data doesn't, leaving a truncated file at the target.
+            f.sync_all()
+        })();
+        if let Err(e) = written {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e)
+                .with_context(|| format!("writing snapshot temp file {}", tmp.display()));
+        }
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e)
+                .with_context(|| format!("renaming snapshot into place at {}", path.display()));
+        }
+        Ok(bytes.len() as u64)
+    }
+}
+
+/// Per-point values from a RAW accumulator (upper triangle + diagonal)
+/// and a normalization factor — shared by live sessions and decoded
+/// snapshots. RowSum expands the symmetric row without materializing the
+/// mirror via the one fixed-order reduction
+/// (`Matrix::sym_row_sum_from_upper`), keeping it bit-identical to
+/// `ValuationSession::point_value_at` and the dense→implicit migration.
+pub(crate) fn point_values_raw(acc: &Matrix, inv_w: f64, by: TopBy) -> Vec<f64> {
+    let n = acc.rows();
+    match by {
+        TopBy::Main => (0..n).map(|i| acc.get(i, i) * inv_w).collect(),
+        TopBy::RowSum => (0..n)
+            .map(|i| acc.sym_row_sum_from_upper(i) * inv_w)
+            .collect(),
+    }
+}
+
+/// Top-k (index, value) pairs, value-descending with index tiebreak.
+/// Uses `total_cmp` (not `partial_cmp` + Equal fallback): snapshots
+/// round-trip NaN cells bit-exactly and the library ingest path doesn't
+/// forbid them, and a non-total comparator can make `sort_by` panic —
+/// which would kill a live serve session mid-query. Under the IEEE total
+/// order NaNs land deterministically at the extremes instead.
+pub fn top_k_of(values: &[f64], k: usize) -> Vec<(usize, f64)> {
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| values[b].total_cmp(&values[a]).then(a.cmp(&b)));
+    idx.into_iter()
+        .take(k)
+        .map(|i| (i, values[i]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shapley::sti_knn::sti_knn;
+    use crate::util::rng::Rng;
+
+    fn random_problem(seed: u64, n: usize, d: usize, t: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+            (0..n).map(|_| rng.below(2) as i32).collect(),
+            (0..t * d).map(|_| rng.normal() as f32).collect(),
+            (0..t).map(|_| rng.below(2) as i32).collect(),
+        )
+    }
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("stiknn_session_{}_{tag}.snap", std::process::id()))
+    }
+
+    #[test]
+    fn incremental_ingest_matches_one_shot_bits() {
+        let (tx, ty, qx, qy) = random_problem(5, 19, 3, 9);
+        let reference = sti_knn(&tx, &ty, 3, &qx, &qy, &StiParams::new(4));
+        let mut s = ValuationSession::new(tx, ty, 3, SessionConfig::new(4)).unwrap();
+        for (lo, hi) in [(0usize, 2usize), (2, 3), (3, 9)] {
+            s.ingest(&qx[lo * 3..hi * 3], &qy[lo..hi]).unwrap();
+        }
+        assert_eq!(s.tests_seen(), 9);
+        assert_eq!(s.ledger().len(), 3);
+        let live = s.matrix().unwrap();
+        for (a, b) in reference.data().iter().zip(live.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // cell/row agree with the full matrix, including the mirrored side
+        assert_eq!(s.cell(7, 2).unwrap().to_bits(), live.get(7, 2).to_bits());
+        assert_eq!(s.cell(2, 7), s.cell(7, 2));
+        for (j, v) in s.row(5).unwrap().iter().enumerate() {
+            assert_eq!(v.to_bits(), live.get(5, j).to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_ingest_path_is_bit_identical_to_sequential() {
+        let (tx, ty, qx, qy) = random_problem(23, 31, 2, 20);
+        let mut seq = ValuationSession::new(
+            tx.clone(), ty.clone(), 2,
+            SessionConfig::new(5).with_parallel_min(1000),
+        ).unwrap();
+        let mut par = ValuationSession::new(
+            tx, ty, 2,
+            SessionConfig::new(5).with_parallel_min(1).with_workers(3).with_block_size(4),
+        ).unwrap();
+        for (lo, hi) in [(0usize, 11usize), (11, 20)] {
+            seq.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+            par.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+        }
+        let (a, b) = (seq.matrix().unwrap(), par.matrix().unwrap());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_is_bit_identical_and_resumable() {
+        let (tx, ty, qx, qy) = random_problem(41, 15, 2, 8);
+        let reference = sti_knn(&tx, &ty, 2, &qx, &qy, &StiParams::new(3));
+
+        let mut s = ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(3)).unwrap();
+        s.ingest(&qx[..5 * 2], &qy[..5]).unwrap();
+        let path = temp_path("roundtrip");
+        s.save(&path).unwrap();
+
+        let mut restored =
+            ValuationSession::restore(&path, tx, ty, 2, SessionConfig::new(3)).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(restored.tests_seen(), 5);
+        assert_eq!(restored.ledger(), s.ledger());
+        restored.ingest(&qx[5 * 2..], &qy[5..]).unwrap();
+        // ledger sequence continues across the restore
+        assert_eq!(restored.ledger().last().unwrap().seq, 1);
+
+        let live = restored.matrix().unwrap();
+        for (a, b) in reference.data().iter().zip(live.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatches() {
+        let (tx, ty, qx, qy) = random_problem(77, 12, 2, 4);
+        let mut s = ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(3)).unwrap();
+        s.ingest(&qx, &qy).unwrap();
+        let path = temp_path("mismatch");
+        s.save(&path).unwrap();
+
+        // wrong k
+        let err = ValuationSession::restore(&path, tx.clone(), ty.clone(), 2, SessionConfig::new(4))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("k="), "{err}");
+        // wrong metric
+        let err = ValuationSession::restore(
+            &path, tx.clone(), ty.clone(), 2,
+            SessionConfig::new(3).with_metric(Metric::Manhattan),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("metric"), "{err}");
+        // different training data
+        let mut tx2 = tx.clone();
+        tx2[0] += 1.0;
+        let err = ValuationSession::restore(&path, tx2, ty, 2, SessionConfig::new(3))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_session_queries_are_none_and_stats_zero() {
+        let (tx, ty, _, _) = random_problem(9, 10, 2, 1);
+        let s = ValuationSession::new(tx, ty, 2, SessionConfig::new(2)).unwrap();
+        assert!(s.cell(0, 1).is_none());
+        assert!(s.row(0).is_none());
+        assert!(s.matrix().is_none());
+        assert!(s.top_k(3, TopBy::Main).is_none());
+        let st = s.stats();
+        assert_eq!(st.tests, 0);
+        assert_eq!(st.trace, 0.0);
+        assert_eq!(st.mean_offdiag, 0.0);
+        // empty ingest is a no-op, not an error
+        let mut s = s;
+        assert_eq!(s.ingest(&[], &[]).unwrap(), 0);
+        assert_eq!(s.ledger().len(), 0);
+    }
+
+    #[test]
+    fn out_of_range_queries_are_none() {
+        let (tx, ty, qx, qy) = random_problem(13, 8, 2, 3);
+        let mut s = ValuationSession::new(tx, ty, 2, SessionConfig::new(2)).unwrap();
+        s.ingest(&qx, &qy).unwrap();
+        assert!(s.cell(0, 8).is_none());
+        assert!(s.cell(8, 0).is_none());
+        assert!(s.row(8).is_none());
+        assert!(s.cell(0, 7).is_some());
+    }
+
+    #[test]
+    fn topk_and_stats_agree_with_matrix() {
+        let (tx, ty, qx, qy) = random_problem(31, 14, 3, 6);
+        let mut s = ValuationSession::new(tx, ty, 3, SessionConfig::new(4)).unwrap();
+        s.ingest(&qx, &qy).unwrap();
+        let m = s.matrix().unwrap();
+
+        let top = s.top_k(14, TopBy::Main).unwrap();
+        assert_eq!(top.len(), 14);
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1, "not descending: {top:?}");
+        }
+        for &(i, v) in &top {
+            assert_eq!(v.to_bits(), m.get(i, i).to_bits());
+        }
+
+        let rowsum = s.point_values(TopBy::RowSum).unwrap();
+        for i in 0..14 {
+            let direct: f64 = (0..14).map(|j| m.get(i, j)).sum::<f64>();
+            assert!((rowsum[i] - direct).abs() < 1e-12, "row {i}");
+        }
+
+        let st = s.stats();
+        assert_eq!(st.tests, 6);
+        assert_eq!(st.batches, 1);
+        assert!((st.trace - m.diagonal().iter().sum::<f64>()).abs() < 1e-12);
+        assert!((st.upper_sum - m.upper_triangle_sum()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_construction_is_rejected() {
+        assert!(ValuationSession::new(vec![0.0; 4], vec![0, 1], 2, SessionConfig::new(3)).is_err(),
+            "k > n");
+        assert!(ValuationSession::new(vec![0.0; 3], vec![0, 1], 2, SessionConfig::new(1)).is_err(),
+            "shape mismatch");
+        assert!(ValuationSession::new(vec![0.0; 2], vec![0], 2, SessionConfig::new(1)).is_err(),
+            "n < 2");
+        let mut s =
+            ValuationSession::new(vec![0.0, 0.1, 1.0, 1.1], vec![0, 1], 2, SessionConfig::new(1))
+                .unwrap();
+        assert!(s.ingest(&[0.5], &[0]).is_err(), "batch shape mismatch");
+    }
+
+    #[test]
+    fn ledger_compaction_bounds_state_and_preserves_invariants() {
+        let (tx, ty, qx, qy) = random_problem(61, 6, 1, 1);
+        let reference_batches = (LEDGER_COMPACT_AT as u64) + 50;
+        let mut s = ValuationSession::new(tx, ty, 1, SessionConfig::new(2)).unwrap();
+        for _ in 0..reference_batches {
+            s.ingest(&qx, &qy).unwrap();
+        }
+        // compaction kept the ledger bounded...
+        assert!(s.ledger().len() < LEDGER_COMPACT_AT, "{}", s.ledger().len());
+        // ...while the batch count and the Σ len == tests invariant hold
+        assert_eq!(s.batches_ingested(), reference_batches);
+        assert_eq!(s.stats().batches, reference_batches);
+        assert_eq!(s.tests_seen(), reference_batches);
+        let total: u64 = s.ledger().iter().map(|b| b.len).sum();
+        assert_eq!(total, s.tests_seen());
+        // a snapshot of the compacted ledger round-trips (decode re-checks
+        // the sum invariant) and the restored session keeps counting
+        let path = temp_path("compaction");
+        s.save(&path).unwrap();
+        let (tx, ty, qx, qy) = random_problem(61, 6, 1, 1);
+        let mut restored = ValuationSession::restore(&path, tx, ty, 1, SessionConfig::new(2))
+            .unwrap();
+        let _ = std::fs::remove_file(&path);
+        restored.ingest(&qx, &qy).unwrap();
+        assert_eq!(restored.batches_ingested(), reference_batches + 1);
+    }
+
+    #[test]
+    fn top_k_of_truncates_and_tiebreaks_by_index() {
+        let top = top_k_of(&[1.0, 3.0, 3.0, -1.0], 3);
+        assert_eq!(top, vec![(1, 3.0), (2, 3.0), (0, 1.0)]);
+        assert_eq!(top_k_of(&[1.0], 5), vec![(0, 1.0)]);
+    }
+
+    #[test]
+    fn implicit_session_values_match_dense_session() {
+        let (tx, ty, qx, qy) = random_problem(71, 18, 2, 9);
+        let mut dense =
+            ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(4)).unwrap();
+        let mut imp = ValuationSession::new(
+            tx, ty, 2,
+            SessionConfig::new(4).with_engine(Engine::Implicit),
+        )
+        .unwrap();
+        assert_eq!(imp.engine(), Engine::Implicit);
+        assert!(!imp.supports_matrix_queries());
+        for (lo, hi) in [(0usize, 4usize), (4, 9)] {
+            dense.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+            imp.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+        }
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = dense.point_values(by).unwrap();
+            let b = imp.point_values(by).unwrap();
+            for i in 0..18 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "{by:?}[{i}]");
+            }
+        }
+        // diagonal cells answerable without retained rows; pairs are not
+        assert!(imp.cell(3, 3).is_some());
+        assert!((imp.cell(3, 3).unwrap() - dense.cell(3, 3).unwrap()).abs() < 1e-12);
+        assert!(imp.cell(0, 1).is_none());
+        assert!(imp.row(0).is_none());
+        assert!(imp.matrix().is_none());
+        // stats agree across engines
+        let (sd, si) = (dense.stats(), imp.stats());
+        assert_eq!(si.tests, sd.tests);
+        assert!((sd.trace - si.trace).abs() < 1e-12);
+        assert!((sd.mean_offdiag - si.mean_offdiag).abs() < 1e-12);
+        assert!((sd.upper_sum - si.upper_sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retained_rows_answer_cells_and_rows() {
+        let (tx, ty, qx, qy) = random_problem(83, 15, 3, 7);
+        let mut dense =
+            ValuationSession::new(tx.clone(), ty.clone(), 3, SessionConfig::new(3)).unwrap();
+        let mut imp = ValuationSession::new(
+            tx, ty, 3,
+            SessionConfig::new(3)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true),
+        )
+        .unwrap();
+        assert!(imp.retains_rows());
+        assert!(imp.supports_matrix_queries());
+        for (lo, hi) in [(0usize, 2usize), (2, 7)] {
+            dense.ingest(&qx[lo * 3..hi * 3], &qy[lo..hi]).unwrap();
+            imp.ingest(&qx[lo * 3..hi * 3], &qy[lo..hi]).unwrap();
+        }
+        for i in 0..15 {
+            for j in 0..15 {
+                let a = dense.cell(i, j).unwrap();
+                let b = imp.cell(i, j).unwrap();
+                assert!((a - b).abs() < 1e-12, "cell({i},{j}): {a} vs {b}");
+            }
+            let (ra, rb) = (dense.row(i).unwrap(), imp.row(i).unwrap());
+            for j in 0..15 {
+                assert!((ra[j] - rb[j]).abs() < 1e-12, "row({i})[{j}]");
+            }
+        }
+        // symmetric by construction
+        assert_eq!(imp.cell(2, 9), imp.cell(9, 2));
+    }
+
+    #[test]
+    fn implicit_snapshot_roundtrip_is_bit_identical_and_resumable() {
+        let (tx, ty, qx, qy) = random_problem(97, 14, 2, 8);
+        let config = SessionConfig::new(3).with_engine(Engine::Implicit);
+        let mut reference =
+            ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap();
+        reference.ingest(&qx, &qy).unwrap();
+
+        let mut s = ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap();
+        s.ingest(&qx[..5 * 2], &qy[..5]).unwrap();
+        let path = temp_path("implicit_roundtrip");
+        s.save(&path).unwrap();
+        let mut restored =
+            ValuationSession::restore(&path, tx.clone(), ty.clone(), 2, config).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(restored.engine(), Engine::Implicit);
+        assert_eq!(restored.tests_seen(), 5);
+        restored.ingest(&qx[5 * 2..], &qy[5..]).unwrap();
+
+        // bit-identical to the uninterrupted session, both rankings
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = reference.point_values(by).unwrap();
+            let b = restored.point_values(by).unwrap();
+            for i in 0..14 {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "{by:?}[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_mismatched_restores_are_refused_or_migrated() {
+        let (tx, ty, qx, qy) = random_problem(103, 12, 2, 5);
+        // implicit snapshot → dense session: refused
+        let mut imp = ValuationSession::new(
+            tx.clone(), ty.clone(), 2,
+            SessionConfig::new(3).with_engine(Engine::Implicit),
+        )
+        .unwrap();
+        imp.ingest(&qx, &qy).unwrap();
+        let path = temp_path("engine_mismatch");
+        imp.save(&path).unwrap();
+        let err = ValuationSession::restore(
+            &path, tx.clone(), ty.clone(), 2, SessionConfig::new(3),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("implicit"), "{err}");
+        // non-empty restore with retain_rows: refused (rows not persisted)
+        let err = ValuationSession::restore(
+            &path, tx.clone(), ty.clone(), 2,
+            SessionConfig::new(3)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("retain_rows"), "{err}");
+        let _ = std::fs::remove_file(&path);
+
+        // dense snapshot → implicit session: migrates (values derived)
+        let mut dense =
+            ValuationSession::new(tx.clone(), ty.clone(), 2, SessionConfig::new(3)).unwrap();
+        dense.ingest(&qx, &qy).unwrap();
+        let path = temp_path("dense_to_implicit");
+        dense.save(&path).unwrap();
+        let migrated = ValuationSession::restore(
+            &path, tx, ty, 2,
+            SessionConfig::new(3).with_engine(Engine::Implicit),
+        )
+        .unwrap();
+        let _ = std::fs::remove_file(&path);
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = dense.point_values(by).unwrap();
+            let b = migrated.point_values(by).unwrap();
+            for i in 0..12 {
+                assert!((a[i] - b[i]).abs() < 1e-12, "{by:?}[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn implicit_parallel_ingest_is_bit_identical_to_sequential() {
+        let (tx, ty, qx, qy) = random_problem(109, 26, 2, 20);
+        let base = SessionConfig::new(5).with_engine(Engine::Implicit);
+        let mut seq = ValuationSession::new(
+            tx.clone(), ty.clone(), 2, base.with_parallel_min(1000),
+        )
+        .unwrap();
+        let mut par = ValuationSession::new(
+            tx, ty, 2,
+            base.with_parallel_min(1).with_workers(3).with_block_size(4),
+        )
+        .unwrap();
+        for (lo, hi) in [(0usize, 11usize), (11, 20)] {
+            seq.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+            par.ingest(&qx[lo * 2..hi * 2], &qy[lo..hi]).unwrap();
+        }
+        for by in [TopBy::Main, TopBy::RowSum] {
+            let a = seq.point_values(by).unwrap();
+            let b = par.point_values(by).unwrap();
+            for i in 0..26 {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "{by:?}[{i}]");
+            }
+        }
+    }
+}

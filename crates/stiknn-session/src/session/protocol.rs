@@ -1,0 +1,977 @@
+//! NDJSON command protocol backing `stiknn serve` (DESIGN.md §9).
+//!
+//! One JSON object per input line, one JSON response per output line,
+//! flushed after every response so a fronting service can drive the
+//! session over a pipe without buffering games. Malformed input and
+//! failed commands produce `{"ok":false,"error":...}` and the loop keeps
+//! serving — only `shutdown` (or EOF on stdin) ends it.
+//!
+//! Commands:
+//!
+//! ```text
+//! {"cmd":"ping"}                     → {"ok":true,"engine":...,"n":...,"t":...}
+//!                                      (health check — NEVER mutates state)
+//! {"cmd":"ingest","x":[...flattened features...],"y":[...labels...]}
+//! {"cmd":"query","i":0,"j":1}        → one averaged cell
+//! {"cmd":"query","i":0}              → one averaged row
+//! {"cmd":"values"}                   → per-point main + rowsum arrays
+//! {"cmd":"values","i":3}             → one point's (main, rowsum) pair
+//! {"cmd":"values","raw":true}        → UNNORMALIZED per-point sums plus
+//!                                      the test count they cover — the
+//!                                      shard-merge fetch (DESIGN.md §13);
+//!                                      works on an EMPTY session (zeros)
+//! {"cmd":"query",...,"raw":true}     → unnormalized cell/row + tests
+//! {"cmd":"topk","k":10,"by":"main"}  → top-k point values (by: main|rowsum)
+//! {"cmd":"stats"}                    → summary statistics (incl. engine)
+//! {"cmd":"add_train","x":[...d features...],"y":label}
+//!                                    → {"index":new id,"n":...} (mutable only)
+//! {"cmd":"remove_train","i":3}       → remove a train point (mutable only)
+//! {"cmd":"relabel","i":3,"y":1}      → change a train label (mutable only)
+//! {"cmd":"snapshot","path":"x.snap"} → persist the session (store.rs)
+//! {"cmd":"shutdown"}                 → acknowledge and exit
+//! ```
+//!
+//! Engine interaction (DESIGN.md §10): an implicit-engine session
+//! without retained rows has no pair-level state, so off-diagonal `query`
+//! cells and full `query` rows are REJECTED with
+//! `{"ok":false,"reason":"engine",...}` — a distinct, machine-checkable
+//! reason (vs the empty-session error), so a fronting service can route
+//! such queries to a dense deployment instead of retrying. `values`,
+//! `topk`, `stats`, diagonal cells, `ingest` and `snapshot` work in every
+//! engine.
+//!
+//! Mutation commands (DESIGN.md §11) are the protocol face of the delta
+//! subsystem: on a `serve --mutable` session they apply exact O(t·(d+n))
+//! edits and answer with the new point id / updated counts. On an
+//! immutable session they are rejected with
+//! `{"ok":false,"reason":"mutable",...}` — again machine-checkable, so a
+//! router can direct writes to the mutable deployment.
+//!
+//! Every successful state-changing response (`ingest`, `add_train`,
+//! `remove_train`, `relabel`) carries `"rev"` — the session's monotone
+//! write revision AFTER the command applied. Under the concurrent server
+//! ([`crate::server`], DESIGN.md §12) sorting a session's write
+//! responses by `rev` reconstructs the exact order that session applied
+//! them in; the multi-session verbs (`open`/`close`/`use`/`list`) live
+//! in the server layer, not here.
+
+use super::{TopBy, ValuationSession};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Drive `session` from NDJSON commands on `input`, writing NDJSON
+/// responses to `output`, until `shutdown` or EOF.
+///
+/// Reads lines as BYTES (not `BufRead::lines`): a non-UTF-8 byte from a
+/// buggy client must produce an `{"ok":false}` response like any other
+/// malformed input, not an io error that kills the session. Real I/O
+/// failures (broken pipe, closed fd) still end the loop via `Err`.
+pub fn serve<R: BufRead, W: Write>(
+    session: &mut ValuationSession,
+    mut input: R,
+    mut output: W,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    loop {
+        buf.clear();
+        if input.read_until(b'\n', &mut buf)? == 0 {
+            break; // EOF
+        }
+        // Lossy conversion: invalid bytes become U+FFFD, which then fails
+        // JSON parsing and is answered as a per-line error.
+        let line = String::from_utf8_lossy(&buf);
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (response, shutdown) = handle(session, trimmed);
+        writeln!(output, "{response}")?;
+        output.flush()?;
+        if shutdown {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// A failed command: the message plus an optional machine-checkable
+/// reason tag (`"engine"` for queries the session's engine cannot
+/// answer). `From<String>` keeps the plain-`?` call sites terse.
+pub(crate) struct Fail {
+    pub(crate) msg: String,
+    pub(crate) reason: Option<&'static str>,
+}
+
+impl From<String> for Fail {
+    fn from(msg: String) -> Self {
+        Fail { msg, reason: None }
+    }
+}
+
+fn engine_fail(what: &str, session: &ValuationSession) -> Fail {
+    Fail {
+        msg: format!(
+            "{what} requires pair-level state the '{}' engine does not keep \
+             (run the session with --engine dense, or implicit with retained rows)",
+            session.engine().label()
+        ),
+        reason: Some("engine"),
+    }
+}
+
+fn mutable_fail(what: &str) -> Fail {
+    Fail {
+        msg: format!(
+            "{what} requires a mutable session (run `stiknn serve --mutable`)"
+        ),
+        reason: Some("mutable"),
+    }
+}
+
+/// How a single-session command touches session state. The concurrent
+/// server (DESIGN.md §12) routes `Read` commands through the session's
+/// RwLock read guard — so they run concurrently with each other — and
+/// `Write` commands through the write guard, serializing them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Access {
+    Read,
+    Write,
+}
+
+/// Classify a single-session command name. `None` for unknown commands
+/// and for connection-level verbs (`shutdown`, and the server layer's
+/// `open`/`close`/`use`/`list`) that never touch a session directly.
+pub(crate) fn access_of(cmd: &str) -> Option<Access> {
+    match cmd {
+        // `snapshot` is a read: `ValuationSession::save` takes &self,
+        // so checkpoints run concurrently with queries.
+        "ping" | "query" | "values" | "topk" | "stats" | "snapshot" => Some(Access::Read),
+        "ingest" | "add_train" | "remove_train" | "relabel" => Some(Access::Write),
+        _ => None,
+    }
+}
+
+/// Execute one read-class command against a shared session reference.
+/// `cmd` must be `Access::Read`-classified; anything else is a bug in
+/// the caller's routing, not in client input.
+pub(crate) fn dispatch_read(
+    session: &ValuationSession,
+    cmd: &str,
+    v: &Json,
+) -> Result<Json, Fail> {
+    match cmd {
+        "ping" => Ok(ping_json(session)),
+        "query" => do_query(session, v),
+        "values" => do_values(session, v),
+        "topk" => do_topk(session, v),
+        "stats" => Ok(stats_json(session)),
+        "snapshot" => do_snapshot(session, v),
+        other => unreachable!("dispatch_read routed non-read command '{other}'"),
+    }
+}
+
+/// Execute one write-class command against an exclusive session
+/// reference.
+pub(crate) fn dispatch_write(
+    session: &mut ValuationSession,
+    cmd: &str,
+    v: &Json,
+) -> Result<Json, Fail> {
+    match cmd {
+        "ingest" => do_ingest(session, v),
+        "add_train" => do_add_train(session, v),
+        "remove_train" => do_remove_train(session, v),
+        "relabel" => do_relabel(session, v),
+        other => unreachable!("dispatch_write routed non-write command '{other}'"),
+    }
+}
+
+/// The single-session unknown-command message (the server layer appends
+/// its registry verbs to its own copy).
+pub(crate) const KNOWN_COMMANDS: &str = "ping|ingest|query|values|topk|stats|\
+     add_train|remove_train|relabel|snapshot|shutdown";
+
+/// Execute one command line → (response, shutdown?). Never panics on
+/// untrusted input; every failure is a `{"ok":false}` response.
+pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
+    let v = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return (err(format!("bad json: {e}")), false),
+    };
+    let Some(cmd) = v.get("cmd").and_then(Json::as_str).map(str::to_string) else {
+        return (err("missing string field 'cmd'"), false);
+    };
+    if cmd == "shutdown" {
+        return (ok("shutdown", vec![("shutdown", Json::Bool(true))]), true);
+    }
+    let result = match access_of(&cmd) {
+        Some(Access::Read) => dispatch_read(session, &cmd, &v),
+        Some(Access::Write) => dispatch_write(session, &cmd, &v),
+        None => Err(Fail::from(format!(
+            "unknown command '{cmd}' (expected {KNOWN_COMMANDS})"
+        ))),
+    };
+    match result {
+        Ok(j) => (j, false),
+        Err(fail) => (fail_json(fail), false),
+    }
+}
+
+pub(crate) fn err(msg: impl Into<String>) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg.into())),
+    ])
+}
+
+pub(crate) fn fail_json(f: Fail) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(f.msg)),
+    ];
+    if let Some(reason) = f.reason {
+        fields.push(("reason", Json::str(reason)));
+    }
+    Json::obj(fields)
+}
+
+pub(crate) fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut all = vec![("ok", Json::Bool(true)), ("cmd", Json::str(cmd))];
+    all.extend(fields);
+    Json::obj(all)
+}
+
+const EMPTY: &str = "no test points ingested yet or index out of range";
+
+/// Parse the optional `"raw":true` flag: shard coordinators fetch
+/// UNNORMALIZED sums and normalize once after the cross-shard fold
+/// (DESIGN.md §13).
+fn parse_raw(v: &Json) -> Result<bool, Fail> {
+    match v.get("raw") {
+        None => Ok(false),
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| Fail::from("'raw' must be a boolean".to_string())),
+    }
+}
+
+/// Parse a JSON array of features into f32s. Rejects rather than
+/// narrows: "1e400" parses to f64 ∞, and finite f64s beyond f32 range
+/// cast to ∞ — either would fold garbage distances into the shared
+/// state forever while the command answered ok:true.
+fn parse_features(xs: &[Json]) -> Result<Vec<f32>, Fail> {
+    let mut out = Vec::with_capacity(xs.len());
+    for e in xs {
+        let f = e
+            .as_f64()
+            .ok_or_else(|| "non-numeric entry in 'x'".to_string())?;
+        if !f.is_finite() || f.abs() > f32::MAX as f64 {
+            return Err("entry in 'x' is not a finite f32-range number"
+                .to_string()
+                .into());
+        }
+        out.push(f as f32);
+    }
+    Ok(out)
+}
+
+/// Parse one JSON value as an i32 label. `as i32` would saturate
+/// out-of-range labels to ±i32::MAX and silently misclassify the point —
+/// reject instead.
+fn parse_label(e: &Json) -> Result<i32, Fail> {
+    let f = e
+        .as_f64()
+        .filter(|f| f.fract() == 0.0 && *f >= i32::MIN as f64 && *f <= i32::MAX as f64)
+        .ok_or_else(|| "'y' must be an integer label in i32 range".to_string())?;
+    Ok(f as i32)
+}
+
+fn do_ingest(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
+    let xs = v
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "ingest needs a numeric array 'x' (flattened features)".to_string())?;
+    let ys = v
+        .get("y")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "ingest needs an integer array 'y' (labels)".to_string())?;
+    let test_x = parse_features(xs)?;
+    let mut test_y = Vec::with_capacity(ys.len());
+    for e in ys {
+        test_y.push(
+            parse_label(e)
+                .map_err(|_| Fail::from("entry in 'y' must be an integer label in i32 range".to_string()))?,
+        );
+    }
+    let ingested = session
+        .ingest(&test_x, &test_y)
+        .map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "ingest",
+        vec![
+            ("ingested", Json::num(ingested as f64)),
+            ("tests", Json::num(session.tests_seen() as f64)),
+            ("batches", Json::num(session.batches_ingested() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
+        ],
+    ))
+}
+
+fn do_query(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
+    let i = v
+        .get("i")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "query needs a train index 'i'".to_string())?;
+    let raw = parse_raw(v)?;
+    let raw_fields = |fields: &mut Vec<(&str, Json)>| {
+        fields.push(("raw", Json::Bool(true)));
+        fields.push(("tests", Json::num(session.tests_seen() as f64)));
+    };
+    match v.get("j") {
+        Some(j) => {
+            let j = j
+                .as_usize()
+                .ok_or_else(|| "'j' must be a train index".to_string())?;
+            // Off-diagonal cells need pair-level state; reject with the
+            // machine-checkable `engine` reason BEFORE the empty/range
+            // check so callers can tell a capability gap from bad input.
+            // Diagonal cells are per-point values and always answerable.
+            if i != j && !session.supports_matrix_queries() {
+                return Err(engine_fail("an off-diagonal cell query", session));
+            }
+            let value = if raw {
+                session.raw_cell(i, j)
+            } else {
+                session.cell(i, j)
+            }
+            .ok_or_else(|| EMPTY.to_string())?;
+            let mut fields = vec![
+                ("i", Json::num(i as f64)),
+                ("j", Json::num(j as f64)),
+                ("value", Json::num(value)),
+            ];
+            if raw {
+                raw_fields(&mut fields);
+            }
+            Ok(ok("query", fields))
+        }
+        None => {
+            if !session.supports_matrix_queries() {
+                return Err(engine_fail("a full matrix-row query", session));
+            }
+            let row = if raw {
+                session.raw_row(i)
+            } else {
+                session.row(i)
+            }
+            .ok_or_else(|| EMPTY.to_string())?;
+            let mut fields = vec![
+                ("i", Json::num(i as f64)),
+                ("row", Json::arr(row.into_iter().map(Json::num))),
+            ];
+            if raw {
+                raw_fields(&mut fields);
+            }
+            Ok(ok("query", fields))
+        }
+    }
+}
+
+fn do_values(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
+    if parse_raw(v)? {
+        if v.get("i").is_some() {
+            return Err(Fail::from(
+                "'raw' applies to the full-array values form only (drop 'i')".to_string(),
+            ));
+        }
+        // Raw sums are answerable even on an EMPTY session (all zeros):
+        // a zero-test shard must still contribute its exact additive
+        // identity to a cross-shard merge.
+        let (main, rowsum) = session.raw_point_sums();
+        return Ok(ok(
+            "values",
+            vec![
+                ("raw", Json::Bool(true)),
+                ("tests", Json::num(session.tests_seen() as f64)),
+                ("main", Json::arr(main.into_iter().map(Json::num))),
+                ("rowsum", Json::arr(rowsum.into_iter().map(Json::num))),
+            ],
+        ));
+    }
+    match v.get("i") {
+        // Single point: O(1)/O(n) via point_value_at — a hot polling
+        // path must not rebuild full value vectors (the dense rowsum
+        // vector costs an O(n²) matrix reduction).
+        Some(x) => {
+            let i = x
+                .as_usize()
+                .filter(|&i| i < session.n())
+                .ok_or_else(|| "'i' must be a train index".to_string())?;
+            let (main, rowsum) = session
+                .point_value_at(i)
+                .ok_or_else(|| "no test points ingested yet".to_string())?;
+            Ok(ok(
+                "values",
+                vec![
+                    ("i", Json::num(i as f64)),
+                    ("main", Json::num(main)),
+                    ("rowsum", Json::num(rowsum)),
+                ],
+            ))
+        }
+        None => {
+            let main = session
+                .point_values(TopBy::Main)
+                .ok_or_else(|| "no test points ingested yet".to_string())?;
+            let rowsum = session
+                .point_values(TopBy::RowSum)
+                .ok_or_else(|| "no test points ingested yet".to_string())?;
+            Ok(ok(
+                "values",
+                vec![
+                    ("main", Json::arr(main.into_iter().map(Json::num))),
+                    ("rowsum", Json::arr(rowsum.into_iter().map(Json::num))),
+                ],
+            ))
+        }
+    }
+}
+
+fn do_topk(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
+    let k = match v.get("k") {
+        None => 10,
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| "'k' must be a non-negative integer".to_string())?,
+    };
+    let by = match v.get("by") {
+        None => TopBy::Main,
+        Some(x) => x
+            .as_str()
+            .and_then(TopBy::parse)
+            .ok_or_else(|| "'by' must be main or rowsum".to_string())?,
+    };
+    let entries = session
+        .top_k(k, by)
+        .ok_or_else(|| "no test points ingested yet".to_string())?;
+    Ok(ok(
+        "topk",
+        vec![
+            ("by", Json::str(by.label())),
+            (
+                "points",
+                Json::arr(entries.iter().map(|&(index, value)| {
+                    Json::obj(vec![
+                        ("index", Json::num(index as f64)),
+                        ("value", Json::num(value)),
+                    ])
+                })),
+            ),
+        ],
+    ))
+}
+
+fn stats_json(session: &ValuationSession) -> Json {
+    let st = session.stats();
+    ok(
+        "stats",
+        vec![
+            ("n", Json::num(st.n as f64)),
+            ("k", Json::num(st.k as f64)),
+            ("engine", Json::str(session.engine().label())),
+            ("tests", Json::num(st.tests as f64)),
+            ("batches", Json::num(st.batches as f64)),
+            ("trace", Json::num(st.trace)),
+            ("mean_offdiag", Json::num(st.mean_offdiag)),
+            ("upper_sum", Json::num(st.upper_sum)),
+        ],
+    )
+}
+
+/// Health-check response: engine, train size, tests ingested. Reads
+/// nothing mutable and allocates O(1) — safe for a load balancer to
+/// fire at any rate against a live `serve`.
+fn ping_json(session: &ValuationSession) -> Json {
+    ok(
+        "ping",
+        vec![
+            ("engine", Json::str(session.engine().label())),
+            ("mutable", Json::Bool(session.is_mutable())),
+            ("n", Json::num(session.n() as f64)),
+            ("t", Json::num(session.tests_seen() as f64)),
+        ],
+    )
+}
+
+fn do_add_train(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
+    if !session.is_mutable() {
+        return Err(mutable_fail("add_train"));
+    }
+    let xs = v
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "add_train needs a numeric array 'x' (d features)".to_string())?;
+    let y = parse_label(
+        v.get("y")
+            .ok_or_else(|| "add_train needs an integer label 'y'".to_string())?,
+    )?;
+    let x = parse_features(xs)?;
+    let index = session.add_train(&x, y).map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "add_train",
+        vec![
+            ("index", Json::num(index as f64)),
+            ("n", Json::num(session.n() as f64)),
+            ("mutations", Json::num(session.mutations().len() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
+        ],
+    ))
+}
+
+fn do_remove_train(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
+    if !session.is_mutable() {
+        return Err(mutable_fail("remove_train"));
+    }
+    let i = v
+        .get("i")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "remove_train needs a train index 'i'".to_string())?;
+    session.remove_train(i).map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "remove_train",
+        vec![
+            ("i", Json::num(i as f64)),
+            ("n", Json::num(session.n() as f64)),
+            ("mutations", Json::num(session.mutations().len() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
+        ],
+    ))
+}
+
+fn do_relabel(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
+    if !session.is_mutable() {
+        return Err(mutable_fail("relabel"));
+    }
+    let i = v
+        .get("i")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "relabel needs a train index 'i'".to_string())?;
+    let y = parse_label(
+        v.get("y")
+            .ok_or_else(|| "relabel needs an integer label 'y'".to_string())?,
+    )?;
+    session.relabel_train(i, y).map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "relabel",
+        vec![
+            ("i", Json::num(i as f64)),
+            ("y", Json::num(y as f64)),
+            ("n", Json::num(session.n() as f64)),
+            ("mutations", Json::num(session.mutations().len() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
+        ],
+    ))
+}
+
+fn do_snapshot(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
+    let path = v
+        .get("path")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "snapshot needs a string 'path'".to_string())?;
+    let bytes = session
+        .save(Path::new(path))
+        .map_err(|e| format!("{e:#}"))?;
+    Ok(ok(
+        "snapshot",
+        vec![
+            ("path", Json::str(path)),
+            ("bytes", Json::num(bytes as f64)),
+        ],
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Engine, SessionConfig};
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::io::Cursor;
+
+    fn tiny_session() -> ValuationSession {
+        tiny_session_with(SessionConfig::new(3))
+    }
+
+    fn tiny_session_with(config: SessionConfig) -> ValuationSession {
+        let mut rng = Rng::new(3);
+        let n = 8;
+        let d = 2;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        ValuationSession::new(train_x, train_y, d, config).unwrap()
+    }
+
+    fn responses(input: &str) -> Vec<Json> {
+        let mut session = tiny_session();
+        let mut out = Vec::new();
+        serve(&mut session, Cursor::new(input.as_bytes().to_vec()), &mut out).unwrap();
+        String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).expect("every response line is valid JSON"))
+            .collect()
+    }
+
+    #[test]
+    fn full_round_trip() {
+        let snap = std::env::temp_dir().join(format!(
+            "stiknn_protocol_{}_roundtrip.snap",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&snap);
+        let input = format!(
+            concat!(
+                r#"{{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}}"#, "\n",
+                r#"{{"cmd":"query","i":0,"j":1}}"#, "\n",
+                r#"{{"cmd":"query","i":2}}"#, "\n",
+                r#"{{"cmd":"topk","k":3,"by":"rowsum"}}"#, "\n",
+                r#"{{"cmd":"stats"}}"#, "\n",
+                r#"{{"cmd":"snapshot","path":"{}"}}"#, "\n",
+                r#"{{"cmd":"shutdown"}}"#, "\n",
+            ),
+            snap.display()
+        );
+        let rs = responses(&input);
+        assert_eq!(rs.len(), 7);
+        for r in &rs {
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        }
+        assert_eq!(rs[0].get("ingested").unwrap().as_usize(), Some(2));
+        assert_eq!(rs[0].get("tests").unwrap().as_usize(), Some(2));
+        assert!(rs[1].get("value").unwrap().as_f64().is_some());
+        assert_eq!(rs[2].get("row").unwrap().as_arr().unwrap().len(), 8);
+        assert_eq!(rs[3].get("points").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(rs[4].get("tests").unwrap().as_usize(), Some(2));
+        assert!(snap.exists(), "snapshot file written");
+        assert_eq!(rs[6].get("shutdown").unwrap().as_bool(), Some(true));
+        let _ = std::fs::remove_file(&snap);
+    }
+
+    #[test]
+    fn errors_do_not_kill_the_loop() {
+        let input = concat!(
+            "this is not json\n",
+            r#"{"nocmd":1}"#, "\n",
+            r#"{"cmd":"frobnicate"}"#, "\n",
+            r#"{"cmd":"query","i":0,"j":1}"#, "\n", // empty session → error
+            r#"{"cmd":"ingest","x":[0.1,0.2],"y":[0.5]}"#, "\n", // non-integer label
+            r#"{"cmd":"ingest","x":[0.1],"y":[0]}"#, "\n", // shape mismatch
+            r#"{"cmd":"stats"}"#, "\n",
+        );
+        let rs = responses(input);
+        assert_eq!(rs.len(), 7);
+        for r in &rs[..6] {
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+            assert!(r.get("error").unwrap().as_str().is_some());
+        }
+        // the loop survived everything above
+        assert_eq!(rs[6].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(rs[6].get("tests").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn ingest_rejects_out_of_range_input_without_corrupting_state() {
+        let input = concat!(
+            // f64 infinity via over-range literal
+            r#"{"cmd":"ingest","x":[1e400,0.0],"y":[0]}"#, "\n",
+            // finite f64 beyond f32 range would cast to f32 ∞
+            r#"{"cmd":"ingest","x":[1e39,0.0],"y":[0]}"#, "\n",
+            // integer label outside i32 range would saturate
+            r#"{"cmd":"ingest","x":[0.1,0.2],"y":[3000000000]}"#, "\n",
+            r#"{"cmd":"stats"}"#, "\n",
+        );
+        let rs = responses(input);
+        assert_eq!(rs.len(), 4);
+        for r in &rs[..3] {
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+        }
+        // nothing leaked into the accumulator
+        assert_eq!(rs[3].get("tests").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn shutdown_stops_processing_later_lines() {
+        let input = concat!(
+            r#"{"cmd":"shutdown"}"#, "\n",
+            r#"{"cmd":"stats"}"#, "\n",
+        );
+        let rs = responses(input);
+        assert_eq!(rs.len(), 1, "nothing after shutdown is answered");
+    }
+
+    #[test]
+    fn blank_lines_are_skipped() {
+        let rs = responses("\n   \n{\"cmd\":\"stats\"}\n");
+        assert_eq!(rs.len(), 1);
+    }
+
+    #[test]
+    fn invalid_utf8_input_gets_an_error_response_not_a_dead_session() {
+        let mut input: Vec<u8> = Vec::new();
+        input.extend_from_slice(b"\xff\xfe not utf8 \xff\n");
+        input.extend_from_slice(b"{\"cmd\":\"stats\"}\n");
+        let mut session = tiny_session();
+        let mut out = Vec::new();
+        serve(&mut session, Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let rs: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(rs.len(), 2, "{text}");
+        assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(rs[1].get("ok").unwrap().as_bool(), Some(true), "loop survived");
+    }
+
+    #[test]
+    fn implicit_engine_rejects_matrix_queries_with_engine_reason() {
+        let mut s = tiny_session_with(SessionConfig::new(3).with_engine(Engine::Implicit));
+        let (r, _) = handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        // off-diagonal cell and full row: rejected with reason "engine"
+        for q in [r#"{"cmd":"query","i":0,"j":1}"#, r#"{"cmd":"query","i":2}"#] {
+            let (r, _) = handle(&mut s, q);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+            assert_eq!(r.get("reason").unwrap().as_str(), Some("engine"), "{r}");
+        }
+        // diagonal cell, values, topk, stats all still work
+        let (r, _) = handle(&mut s, r#"{"cmd":"query","i":2,"j":2}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (r, _) = handle(&mut s, r#"{"cmd":"values","i":0}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert!(r.get("rowsum").unwrap().as_f64().is_some());
+        let (r, _) = handle(&mut s, r#"{"cmd":"topk","k":3,"by":"rowsum"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (r, _) = handle(&mut s, r#"{"cmd":"stats"}"#);
+        assert_eq!(r.get("engine").unwrap().as_str(), Some("implicit"), "{r}");
+        // empty-session errors do NOT carry the engine reason
+        let mut empty = tiny_session();
+        let (r, _) = handle(&mut empty, r#"{"cmd":"query","i":0,"j":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert!(r.get("reason").is_none(), "{r}");
+    }
+
+    #[test]
+    fn implicit_with_retained_rows_answers_matrix_queries() {
+        let mut dense = tiny_session();
+        let mut imp = tiny_session_with(
+            SessionConfig::new(3)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true),
+        );
+        let ingest = r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#;
+        handle(&mut dense, ingest);
+        handle(&mut imp, ingest);
+        let (a, _) = handle(&mut dense, r#"{"cmd":"query","i":0,"j":1}"#);
+        let (b, _) = handle(&mut imp, r#"{"cmd":"query","i":0,"j":1}"#);
+        assert_eq!(b.get("ok").unwrap().as_bool(), Some(true), "{b}");
+        let (av, bv) = (
+            a.get("value").unwrap().as_f64().unwrap(),
+            b.get("value").unwrap().as_f64().unwrap(),
+        );
+        assert!((av - bv).abs() < 1e-12, "{av} vs {bv}");
+        let (r, _) = handle(&mut imp, r#"{"cmd":"query","i":2}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("row").unwrap().as_arr().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn values_command_matches_topk_ranking() {
+        let mut s = tiny_session();
+        handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        let (all, _) = handle(&mut s, r#"{"cmd":"values"}"#);
+        assert_eq!(all.get("ok").unwrap().as_bool(), Some(true), "{all}");
+        let main = all.get("main").unwrap().as_arr().unwrap();
+        let rowsum = all.get("rowsum").unwrap().as_arr().unwrap();
+        assert_eq!(main.len(), 8);
+        assert_eq!(rowsum.len(), 8);
+        // single-point form agrees with the arrays
+        let (one, _) = handle(&mut s, r#"{"cmd":"values","i":5}"#);
+        assert_eq!(
+            one.get("main").unwrap().as_f64().unwrap().to_bits(),
+            main[5].as_f64().unwrap().to_bits()
+        );
+        // out-of-range index is a clean error
+        let (bad, _) = handle(&mut s, r#"{"cmd":"values","i":8}"#);
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+    }
+
+    #[test]
+    fn ping_reports_state_and_never_mutates() {
+        let mut s = tiny_session();
+        let (r, shutdown) = handle(&mut s, r#"{"cmd":"ping"}"#);
+        assert!(!shutdown);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("engine").unwrap().as_str(), Some("dense"));
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(8));
+        assert_eq!(r.get("t").unwrap().as_usize(), Some(0));
+        assert_eq!(r.get("mutable").unwrap().as_bool(), Some(false));
+        // still answers (and counts) correctly after an ingest
+        handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        let (r, _) = handle(&mut s, r#"{"cmd":"ping"}"#);
+        assert_eq!(r.get("t").unwrap().as_usize(), Some(2));
+        assert_eq!(s.tests_seen(), 2, "ping must not touch state");
+    }
+
+    fn mutable_session() -> ValuationSession {
+        tiny_session_with(
+            SessionConfig::new(3)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true)
+                .with_mutable(true),
+        )
+    }
+
+    #[test]
+    fn mutation_commands_edit_a_mutable_session() {
+        let mut s = mutable_session();
+        handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        // add → new id 8, n grows to 9
+        let (r, _) = handle(&mut s, r#"{"cmd":"add_train","x":[0.1,-0.2],"y":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("index").unwrap().as_usize(), Some(8));
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(9));
+        assert_eq!(r.get("mutations").unwrap().as_usize(), Some(1));
+        // relabel
+        let (r, _) = handle(&mut s, r#"{"cmd":"relabel","i":0,"y":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(9));
+        // remove → n shrinks back to 8
+        let (r, _) = handle(&mut s, r#"{"cmd":"remove_train","i":8}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("n").unwrap().as_usize(), Some(8));
+        assert_eq!(r.get("mutations").unwrap().as_usize(), Some(3));
+        // queries still served from the repaired state
+        let (r, _) = handle(&mut s, r#"{"cmd":"query","i":0,"j":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (r, _) = handle(&mut s, r#"{"cmd":"values","i":0}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        // bad edits are clean per-line errors: out-of-range, bad label
+        for bad in [
+            r#"{"cmd":"remove_train","i":99}"#,
+            r#"{"cmd":"relabel","i":0,"y":0.5}"#,
+            r#"{"cmd":"add_train","x":[0.1],"y":0}"#,
+        ] {
+            let (r, _) = handle(&mut s, bad);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+        }
+    }
+
+    #[test]
+    fn mutation_commands_rejected_on_immutable_sessions_with_reason() {
+        let mut s = tiny_session();
+        for cmd in [
+            r#"{"cmd":"add_train","x":[0.1,-0.2],"y":1}"#,
+            r#"{"cmd":"remove_train","i":0}"#,
+            r#"{"cmd":"relabel","i":0,"y":1}"#,
+        ] {
+            let (r, _) = handle(&mut s, cmd);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+            assert_eq!(r.get("reason").unwrap().as_str(), Some("mutable"), "{r}");
+        }
+    }
+
+    #[test]
+    fn raw_fetches_are_unnormalized_and_transport_exact() {
+        let mut s = tiny_session();
+        // raw works on an EMPTY session (zeros, tests 0) — a zero-test
+        // shard must contribute its exact additive identity to a merge
+        let (r, _) = handle(&mut s, r#"{"cmd":"values","raw":true}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("tests").unwrap().as_usize(), Some(0));
+        assert!(r
+            .get("main")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .all(|x| x.as_f64() == Some(0.0)));
+        handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        let (raw, _) = handle(&mut s, r#"{"cmd":"values","raw":true}"#);
+        let (norm, _) = handle(&mut s, r#"{"cmd":"values"}"#);
+        let inv = 1.0 / raw.get("tests").unwrap().as_f64().unwrap();
+        // raw × 1/t reproduces the normalized answers TO THE BIT — this
+        // is both the Eq. 8 identity and the transport-exactness check
+        // (finite f64 round-trips NDJSON unchanged)
+        for key in ["main", "rowsum"] {
+            let rs = raw.get(key).unwrap().as_arr().unwrap();
+            let ns = norm.get(key).unwrap().as_arr().unwrap();
+            for (a, b) in rs.iter().zip(ns) {
+                assert_eq!(
+                    (a.as_f64().unwrap() * inv).to_bits(),
+                    b.as_f64().unwrap().to_bits()
+                );
+            }
+        }
+        let (c, _) = handle(&mut s, r#"{"cmd":"query","i":0,"j":1,"raw":true}"#);
+        assert_eq!(c.get("tests").unwrap().as_usize(), Some(2));
+        let (cn, _) = handle(&mut s, r#"{"cmd":"query","i":0,"j":1}"#);
+        assert_eq!(
+            (c.get("value").unwrap().as_f64().unwrap() * inv).to_bits(),
+            cn.get("value").unwrap().as_f64().unwrap().to_bits()
+        );
+        let (row, _) = handle(&mut s, r#"{"cmd":"query","i":2,"raw":true}"#);
+        let (rown, _) = handle(&mut s, r#"{"cmd":"query","i":2}"#);
+        for (a, b) in row
+            .get("row")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .zip(rown.get("row").unwrap().as_arr().unwrap())
+        {
+            assert_eq!(
+                (a.as_f64().unwrap() * inv).to_bits(),
+                b.as_f64().unwrap().to_bits()
+            );
+        }
+        // raw + single-point form, and a non-boolean raw: clean errors
+        for bad in [
+            r#"{"cmd":"values","i":0,"raw":true}"#,
+            r#"{"cmd":"values","raw":1}"#,
+        ] {
+            let (r, _) = handle(&mut s, bad);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+        }
+    }
+
+    #[test]
+    fn ingested_values_match_direct_session_use() {
+        let mut a = tiny_session();
+        let mut b = tiny_session();
+        let qx = [0.5f32, 0.5, -1.0, 0.25];
+        let qy = [0i32, 1];
+        a.ingest(&qx, &qy).unwrap();
+        let (resp, _) = handle(
+            &mut b,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        let (cell, _) = handle(&mut b, r#"{"cmd":"query","i":0,"j":1}"#);
+        let via_protocol = cell.get("value").unwrap().as_f64().unwrap();
+        assert_eq!(via_protocol.to_bits(), a.cell(0, 1).unwrap().to_bits());
+    }
+}

@@ -1,0 +1,911 @@
+//! Multi-node test-set sharding — exact fan-out of one valuation across
+//! N serve processes (DESIGN.md §13).
+//!
+//! STI-KNN's interaction matrix is a weighted average over test points
+//! (Eq. 8/9): Φ = (1/t)·Σ_τ Φ_τ. The session layer already exploits the
+//! sum's additivity across BATCHES (streaming ingest); this module
+//! exploits it across PROCESSES. A [`ShardPlan`] partitions the global
+//! test stream into contiguous index ranges, a [`ShardedSession`] opens
+//! the same valuation on one endpoint per range, routes every ingest
+//! batch by global test index, and answers merged queries by folding the
+//! shards' RAW (unnormalized) sums in fixed shard order and normalizing
+//! ONCE by the total test count.
+//!
+//! # Exactness (the honest version)
+//!
+//! * Each shard's raw sums are **bit-identical** to a single process
+//!   that ingested only that shard's slice — that is the session layer's
+//!   contiguous-partition contract, and the NDJSON transport preserves
+//!   it (finite f64 round-trips the wire unchanged: integral values
+//!   print as integers, everything else via Rust's shortest round-trip
+//!   `Display`).
+//! * For N = 1 the merge is a plain copy, so every merged answer is
+//!   **bit-identical** to the single-process session.
+//! * For N > 1 the cross-shard fold regroups f64 additions, so merged
+//!   answers agree with the single-process session to ≤ 1e-12 — the
+//!   same caveat [`ValueVector::add_assign`](crate::shapley::values::ValueVector::add_assign)
+//!   documents, and the reason the fold order is FIXED (shard 0 first):
+//!   the same deployment always produces the same bits.
+//! * **Bit-identity across N is recovered by rescatter**: mutable shard
+//!   sessions retain their test slices in v3 snapshots
+//!   ([`store::MutablePayload`](crate::session::store)), so
+//!   [`rescatter`] reconstructs the global stream in order and re-ingests
+//!   it onto M fresh sessions. M = 1 reproduces the one-shot/
+//!   single-process result bit-for-bit (`tests/shard_equivalence.rs`).
+//!
+//! # Transport
+//!
+//! [`ShardLink`] abstracts the endpoint: [`TcpLink`] speaks NDJSON to a
+//! `stiknn serve --listen --shard-of J/N` server, [`SessionLink`] drives
+//! an in-process [`ValuationSession`] through the identical protocol
+//! code path (`protocol::handle`) — which is what makes the equivalence
+//! properties testable without sockets while exercising every byte of
+//! the command layer.
+
+use crate::session::protocol;
+use crate::session::{store, SessionConfig, SnapshotPayload, TopBy, ValuationSession};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::Path;
+
+/// A contiguous partition of the global test-index stream: shard `s`
+/// owns `[start(s), end(s))`, with the LAST shard unbounded (it absorbs
+/// any tests beyond the expected total, so a plan never drops data).
+/// Zero-test shards (empty ranges) are legal — they contribute exact
+/// additive identities to every merge.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// `starts[s]` = first global test index of shard s; `starts[0] == 0`
+    /// and the sequence is non-decreasing.
+    starts: Vec<u64>,
+}
+
+impl ShardPlan {
+    /// Even contiguous split of `expected_total` tests over `n_shards`,
+    /// remainder spread one-per-shard from the front (the same split the
+    /// coordinator's banded assembly uses for rows). Tests beyond
+    /// `expected_total` land on the last shard.
+    pub fn contiguous(expected_total: u64, n_shards: usize) -> ShardPlan {
+        assert!(n_shards >= 1, "a shard plan needs at least 1 shard");
+        let n = n_shards as u64;
+        let base = expected_total / n;
+        let rem = expected_total % n;
+        let mut starts = Vec::with_capacity(n_shards);
+        let mut at = 0u64;
+        for s in 0..n {
+            starts.push(at);
+            at += base + u64::from(s < rem);
+        }
+        ShardPlan { starts }
+    }
+
+    /// A plan from explicit shard start indices (`starts[0]` must be 0,
+    /// non-decreasing; equal consecutive starts make a zero-test shard).
+    pub fn from_starts(starts: Vec<u64>) -> Result<ShardPlan> {
+        ensure!(!starts.is_empty(), "a shard plan needs at least 1 shard");
+        ensure!(
+            starts[0] == 0,
+            "shard 0 must start at global test index 0 (got {})",
+            starts[0]
+        );
+        ensure!(
+            starts.windows(2).all(|w| w[0] <= w[1]),
+            "shard start indices must be non-decreasing"
+        );
+        Ok(ShardPlan { starts })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// First global test index of shard `s`.
+    pub fn start(&self, s: usize) -> u64 {
+        self.starts[s]
+    }
+
+    /// One-past-last global test index of shard `s`; `None` for the last
+    /// shard (unbounded).
+    pub fn end(&self, s: usize) -> Option<u64> {
+        self.starts.get(s + 1).copied()
+    }
+
+    /// Which shard owns global test index `g`.
+    pub fn shard_of(&self, g: u64) -> usize {
+        // starts[0] == 0 <= g, so the partition point is always >= 1.
+        self.starts.partition_point(|&st| st <= g) - 1
+    }
+}
+
+/// One NDJSON request/response exchange with a shard endpoint. The
+/// response is the raw protocol object — `{"ok":false}` command failures
+/// come back as `Ok(json)` (the coordinator turns them into errors with
+/// shard context); `Err` means the TRANSPORT failed.
+pub trait ShardLink {
+    fn call(&mut self, request: &Json) -> Result<Json>;
+}
+
+/// In-process shard endpoint: drives an owned [`ValuationSession`]
+/// through [`protocol::handle`] — the exact code path a remote server
+/// runs per line, minus the socket. The equivalence tests shard through
+/// these, so the property covers the full command layer.
+pub struct SessionLink {
+    session: ValuationSession,
+}
+
+impl SessionLink {
+    pub fn new(session: ValuationSession) -> Self {
+        SessionLink { session }
+    }
+
+    pub fn session(&self) -> &ValuationSession {
+        &self.session
+    }
+
+    pub fn into_session(self) -> ValuationSession {
+        self.session
+    }
+}
+
+impl ShardLink for SessionLink {
+    fn call(&mut self, request: &Json) -> Result<Json> {
+        let (response, _shutdown) = protocol::handle(&mut self.session, &request.to_string());
+        Ok(response)
+    }
+}
+
+/// TCP shard endpoint: one NDJSON line out, one line back, against a
+/// `stiknn serve --listen` process (connections start on the server's
+/// default session, so no `open` is needed before routing commands).
+pub struct TcpLink {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpLink {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<TcpLink> {
+        let writer = TcpStream::connect(addr).context("connecting to shard server")?;
+        let reader = BufReader::new(writer.try_clone().context("cloning shard socket")?);
+        Ok(TcpLink { reader, writer })
+    }
+}
+
+impl ShardLink for TcpLink {
+    fn call(&mut self, request: &Json) -> Result<Json> {
+        writeln!(self.writer, "{request}").context("writing to shard server")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading shard reply")?;
+        ensure!(n > 0, "shard server closed the connection");
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad shard response: {e}"))
+    }
+}
+
+/// Merged per-point values across every shard (normalized by the TOTAL
+/// test count — see the module doc for the exactness contract).
+#[derive(Clone, Debug)]
+pub struct MergedValues {
+    /// Total tests across all shards (the normalization weight).
+    pub tests: u64,
+    /// Averaged main terms φ_ii.
+    pub main: Vec<f64>,
+    /// Averaged total row sums φ_ii + Σ_{j≠i} φ_ij.
+    pub rowsum: Vec<f64>,
+}
+
+/// Merged summary statistics (derived from the merged raw sums, so they
+/// carry the same exactness contract as [`ShardedSession::values`]).
+#[derive(Clone, Debug)]
+pub struct MergedStats {
+    pub n: usize,
+    pub tests: u64,
+    /// Tests resident on each shard, in shard order.
+    pub per_shard_tests: Vec<u64>,
+    pub trace: f64,
+    pub mean_offdiag: f64,
+    pub upper_sum: f64,
+}
+
+/// A client-side valuation fanned out over N shard endpoints: routes
+/// ingest batches by global test index per the [`ShardPlan`], replicates
+/// training-set edits to every shard, and merges reads by the raw-sum
+/// fold described in the module doc. `links[s]` IS shard `s` — order is
+/// the identity.
+pub struct ShardedSession<L: ShardLink> {
+    links: Vec<L>,
+    plan: ShardPlan,
+    d: usize,
+    n: usize,
+    next_global: u64,
+}
+
+impl<L: ShardLink> ShardedSession<L> {
+    /// Open a FRESH sharded valuation: every endpoint must be empty
+    /// (t = 0). Endpoints are pinged (train sizes must agree) and, where
+    /// the endpoint speaks the server's `shard` verb, their identity is
+    /// verified: shard index J must match the link's position, the group
+    /// size N must match `links.len()`, and every member must serve the
+    /// same train-set fingerprint. Plain single-session endpoints (no
+    /// `shard` verb) are accepted as-is.
+    pub fn open(links: Vec<L>, plan: ShardPlan, d: usize) -> Result<Self> {
+        let (s, _shard_tests) = Self::attach(links, plan, d)?;
+        ensure!(
+            s.next_global == 0,
+            "ShardedSession::open requires empty shards, but {} tests are already \
+             resident (use ShardedSession::resume to attach to live shards)",
+            s.next_global
+        );
+        Ok(s)
+    }
+
+    /// Attach to shards that already hold data (a restart of the
+    /// coordinator, or sessions produced by [`rescatter`]): the routed
+    /// count resumes at the shards' total test count, which must be
+    /// distributed exactly as the plan would have routed it — otherwise
+    /// future batches would interleave differently than a from-scratch
+    /// run and the exactness contract would silently break.
+    pub fn resume(links: Vec<L>, plan: ShardPlan, d: usize) -> Result<Self> {
+        let (s, shard_tests) = Self::attach(links, plan, d)?;
+        let routed = s.next_global;
+        for (idx, &held) in shard_tests.iter().enumerate() {
+            let lo = s.plan.start(idx).min(routed);
+            let hi = s.plan.end(idx).unwrap_or(u64::MAX).min(routed);
+            let expected = hi - lo;
+            ensure!(
+                held == expected,
+                "shard {idx} holds {held} tests but the plan routes {expected} of \
+                 the first {routed} there — these shards were not filled by this \
+                 plan"
+            );
+        }
+        Ok(s)
+    }
+
+    /// Shared open/resume plumbing; also returns the per-shard test
+    /// counts so `resume` can check the distribution without re-pinging.
+    fn attach(mut links: Vec<L>, plan: ShardPlan, d: usize) -> Result<(Self, Vec<u64>)> {
+        ensure!(
+            links.len() == plan.n_shards(),
+            "{} shard links for a {}-shard plan",
+            links.len(),
+            plan.n_shards()
+        );
+        ensure!(d >= 1, "need at least 1 feature dimension");
+        let count = links.len();
+        let mut n = None;
+        let mut shard_tests = Vec::with_capacity(count);
+        let mut fingerprint: Option<String> = None;
+        for (idx, link) in links.iter_mut().enumerate() {
+            let ping = expect_ok(link.call(&cmd("ping"))?, idx, "ping")?;
+            let shard_n = field_usize(&ping, "n", idx, "ping")?;
+            match n {
+                None => n = Some(shard_n),
+                Some(n0) => ensure!(
+                    n0 == shard_n,
+                    "shard {idx} serves n={shard_n} train points but shard 0 serves \
+                     n={n0} — every member must serve the same train set"
+                ),
+            }
+            shard_tests.push(field_usize(&ping, "t", idx, "ping")? as u64);
+            // Identity check, where the endpoint can answer it: the
+            // single-session protocol has no `shard` verb and answers
+            // ok:false — those endpoints are accepted unverified.
+            let id = link.call(&cmd("shard"))?;
+            if id.get("ok").and_then(Json::as_bool) == Some(true) {
+                if let Some(j) = id.get("shard").and_then(Json::as_usize) {
+                    let of = field_usize(&id, "of", idx, "shard")?;
+                    ensure!(
+                        j == idx && of == count,
+                        "endpoint {idx} identifies as shard {j}/{of}, but this \
+                         coordinator is routing to it as shard {idx}/{count}"
+                    );
+                }
+                if let Some(fp) = id.get("fingerprint").and_then(Json::as_str) {
+                    match &fingerprint {
+                        None => fingerprint = Some(fp.to_string()),
+                        Some(fp0) => ensure!(
+                            fp0 == fp,
+                            "shard {idx} serves train-set fingerprint {fp} but an \
+                             earlier shard serves {fp0} — members disagree on the \
+                             training data"
+                        ),
+                    }
+                }
+            }
+        }
+        let next_global = shard_tests.iter().sum();
+        Ok((
+            ShardedSession {
+                links,
+                plan,
+                d,
+                n: n.expect("at least one link was pinged"),
+                next_global,
+            },
+            shard_tests,
+        ))
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Global test indices routed so far (== the merge's total weight).
+    pub fn tests_routed(&self) -> u64 {
+        self.next_global
+    }
+
+    /// Tear down the coordinator and hand back the links (e.g. to
+    /// recover the sessions inside [`SessionLink`]s).
+    pub fn into_links(self) -> Vec<L> {
+        self.links
+    }
+
+    /// Ingest one test batch: global indices `tests_routed()..+len`,
+    /// split into contiguous runs and routed to their owning shards in
+    /// order. Exactly the bytes a single-process session would see, cut
+    /// at shard boundaries — which is why each shard's state stays
+    /// bit-identical to a solo session over its slice.
+    pub fn ingest(&mut self, test_x: &[f32], test_y: &[i32]) -> Result<usize> {
+        ensure!(
+            test_x.len() == test_y.len() * self.d,
+            "test batch shape mismatch: {} features for {} labels (d={})",
+            test_x.len(),
+            test_y.len(),
+            self.d
+        );
+        let len = test_y.len() as u64;
+        let mut cursor = 0u64;
+        while cursor < len {
+            let g = self.next_global + cursor;
+            let s = self.plan.shard_of(g);
+            let run_end = match self.plan.end(s) {
+                Some(end) => (end - self.next_global).min(len),
+                None => len,
+            };
+            let (lo, hi) = (cursor as usize, run_end as usize);
+            let xs = &test_x[lo * self.d..hi * self.d];
+            let ys = &test_y[lo..hi];
+            let req = Json::obj(vec![
+                ("cmd", Json::str("ingest")),
+                ("x", Json::arr(xs.iter().map(|&f| Json::num(f as f64)))),
+                ("y", Json::arr(ys.iter().map(|&y| Json::num(y as f64)))),
+            ]);
+            expect_ok(self.links[s].call(&req)?, s, "ingest")?;
+            cursor = run_end;
+        }
+        self.next_global += len;
+        Ok(test_y.len())
+    }
+
+    /// Fetch every shard's raw sums and fold them in shard order.
+    /// Returns (total tests, per-shard tests, raw main, raw rowsum).
+    fn fetch_raw(&mut self) -> Result<(u64, Vec<u64>, Vec<f64>, Vec<f64>)> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("values")),
+            ("raw", Json::Bool(true)),
+        ]);
+        let mut total = 0u64;
+        let mut per_shard = Vec::with_capacity(self.links.len());
+        let mut main: Option<Vec<f64>> = None;
+        let mut rowsum: Option<Vec<f64>> = None;
+        for (idx, link) in self.links.iter_mut().enumerate() {
+            let resp = expect_ok(link.call(&req)?, idx, "values")?;
+            let tests = field_usize(&resp, "tests", idx, "values")? as u64;
+            total += tests;
+            per_shard.push(tests);
+            let m = f64_array(&resp, "main", idx)?;
+            let r = f64_array(&resp, "rowsum", idx)?;
+            ensure!(
+                m.len() == self.n && r.len() == self.n,
+                "shard {idx} returned {} values for n={}",
+                m.len(),
+                self.n
+            );
+            // First shard by MOVE, not fold-into-zeros: for N = 1 the
+            // merge must be a bit-level copy, and 0.0 + x is not always
+            // x's bits (negative zero).
+            match (&mut main, &mut rowsum) {
+                (None, _) => {
+                    main = Some(m);
+                    rowsum = Some(r);
+                }
+                (Some(am), Some(ar)) => {
+                    add_assign(am, &m);
+                    add_assign(ar, &r);
+                }
+                _ => unreachable!("main and rowsum are set together"),
+            }
+        }
+        Ok((
+            total,
+            per_shard,
+            main.expect("plans have at least one shard"),
+            rowsum.expect("plans have at least one shard"),
+        ))
+    }
+
+    /// Merged per-point values (see the module doc's exactness
+    /// contract). Fails while every shard is empty — same contract as
+    /// [`ValuationSession::point_values`].
+    pub fn values(&mut self) -> Result<MergedValues> {
+        let (tests, _, mut main, mut rowsum) = self.fetch_raw()?;
+        ensure!(tests > 0, "no test points ingested on any shard yet");
+        let inv_w = 1.0 / tests as f64;
+        for v in &mut main {
+            *v *= inv_w;
+        }
+        for v in &mut rowsum {
+            *v *= inv_w;
+        }
+        Ok(MergedValues {
+            tests,
+            main,
+            rowsum,
+        })
+    }
+
+    /// Merged top-k (index, value), descending with index tiebreak —
+    /// identical ranking semantics to [`ValuationSession::top_k`].
+    pub fn top_k(&mut self, k: usize, by: TopBy) -> Result<Vec<(usize, f64)>> {
+        let merged = self.values()?;
+        let values = match by {
+            TopBy::Main => &merged.main,
+            TopBy::RowSum => &merged.rowsum,
+        };
+        Ok(crate::session::top_k_of(values, k))
+    }
+
+    /// Merged summary statistics, derived from the merged raw sums with
+    /// the same expressions the implicit engine's `stats` uses.
+    pub fn stats(&mut self) -> Result<MergedStats> {
+        let (tests, per_shard_tests, main, rowsum) = self.fetch_raw()?;
+        let inv_w = if tests == 0 { 0.0 } else { 1.0 / tests as f64 };
+        let n = self.n;
+        let pairs = (n * (n - 1) / 2) as f64;
+        let trace_raw: f64 = main.iter().sum();
+        let strict_upper_raw: f64 =
+            main.iter().zip(&rowsum).map(|(&m, &r)| r - m).sum::<f64>() / 2.0;
+        Ok(MergedStats {
+            n,
+            tests,
+            per_shard_tests,
+            trace: trace_raw * inv_w,
+            mean_offdiag: if pairs > 0.0 {
+                strict_upper_raw * inv_w / pairs
+            } else {
+                0.0
+            },
+            upper_sum: (trace_raw + strict_upper_raw) * inv_w,
+        })
+    }
+
+    /// Merged averaged cell φ_ij: Σ_shards raw_cell / Σ_shards tests.
+    /// Engine restrictions are the shards' own (a dense or retained-rows
+    /// deployment answers everything; a bare implicit one rejects
+    /// off-diagonals with reason `engine`, which surfaces here as an
+    /// error naming the shard).
+    pub fn cell(&mut self, i: usize, j: usize) -> Result<f64> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("query")),
+            ("i", Json::num(i as f64)),
+            ("j", Json::num(j as f64)),
+            ("raw", Json::Bool(true)),
+        ]);
+        let mut total = 0u64;
+        let mut sum: Option<f64> = None;
+        for (idx, link) in self.links.iter_mut().enumerate() {
+            let resp = expect_ok(link.call(&req)?, idx, "query")?;
+            total += field_usize(&resp, "tests", idx, "query")? as u64;
+            let v = resp
+                .get("value")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("shard {idx} query response missing 'value'"))?;
+            sum = Some(match sum {
+                None => v,
+                Some(acc) => acc + v,
+            });
+        }
+        ensure!(total > 0, "no test points ingested on any shard yet");
+        let sum = sum.expect("plans have at least one shard");
+        Ok(sum * (1.0 / total as f64))
+    }
+
+    /// Merged averaged row i (diagonal included) — the row-level twin of
+    /// [`Self::cell`].
+    pub fn row(&mut self, i: usize) -> Result<Vec<f64>> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("query")),
+            ("i", Json::num(i as f64)),
+            ("raw", Json::Bool(true)),
+        ]);
+        let mut total = 0u64;
+        let mut sum: Option<Vec<f64>> = None;
+        for (idx, link) in self.links.iter_mut().enumerate() {
+            let resp = expect_ok(link.call(&req)?, idx, "query")?;
+            total += field_usize(&resp, "tests", idx, "query")? as u64;
+            let row = f64_array(&resp, "row", idx)?;
+            ensure!(
+                row.len() == self.n,
+                "shard {idx} returned a row of {} for n={}",
+                row.len(),
+                self.n
+            );
+            match &mut sum {
+                None => sum = Some(row),
+                Some(acc) => add_assign(acc, &row),
+            }
+        }
+        ensure!(total > 0, "no test points ingested on any shard yet");
+        let inv_w = 1.0 / total as f64;
+        let mut row = sum.expect("plans have at least one shard");
+        for v in &mut row {
+            *v *= inv_w;
+        }
+        Ok(row)
+    }
+
+    /// Replicate a training-set edit to EVERY shard (the train set is
+    /// replicated; only the test stream is sharded). All members must be
+    /// mutable deployments; the new point's id (= previous n) is
+    /// identical on every shard because their train sets are identical.
+    pub fn add_train(&mut self, x: &[f32], y: i32) -> Result<usize> {
+        ensure!(
+            x.len() == self.d,
+            "new train point has {} features but the coordinator's d is {}",
+            x.len(),
+            self.d
+        );
+        let req = Json::obj(vec![
+            ("cmd", Json::str("add_train")),
+            ("x", Json::arr(x.iter().map(|&f| Json::num(f as f64)))),
+            ("y", Json::num(y as f64)),
+        ]);
+        let index = self.fan_edit(&req, "add_train")?;
+        self.n += 1;
+        Ok(index)
+    }
+
+    /// Replicate `remove_train` to every shard (indices above `i` shift
+    /// down by one everywhere, keeping the shards' numbering aligned).
+    pub fn remove_train(&mut self, i: usize) -> Result<()> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("remove_train")),
+            ("i", Json::num(i as f64)),
+        ]);
+        self.fan_edit(&req, "remove_train")?;
+        self.n -= 1;
+        Ok(())
+    }
+
+    /// Replicate `relabel` to every shard.
+    pub fn relabel_train(&mut self, i: usize, y: i32) -> Result<()> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("relabel")),
+            ("i", Json::num(i as f64)),
+            ("y", Json::num(y as f64)),
+        ]);
+        self.fan_edit(&req, "relabel")?;
+        Ok(())
+    }
+
+    /// Fan one edit to all shards; returns the (agreeing) `index` field
+    /// when present (add_train), else 0.
+    fn fan_edit(&mut self, req: &Json, what: &str) -> Result<usize> {
+        let mut index = 0usize;
+        for (idx, link) in self.links.iter_mut().enumerate() {
+            let resp = expect_ok(link.call(req)?, idx, what)?;
+            if let Some(i) = resp.get("index").and_then(Json::as_usize) {
+                index = i;
+            }
+        }
+        Ok(index)
+    }
+
+    /// Snapshot every shard session to its own path (one per shard, in
+    /// shard order; paths resolve on the SERVER side — co-locate the
+    /// processes or point them at a shared filesystem). Returns total
+    /// bytes written. Feed the files to [`rescatter`] to rebuild the
+    /// valuation on a different shard count.
+    pub fn snapshot_all<P: AsRef<Path>>(&mut self, paths: &[P]) -> Result<u64> {
+        ensure!(
+            paths.len() == self.links.len(),
+            "{} snapshot paths for {} shards",
+            paths.len(),
+            self.links.len()
+        );
+        let mut bytes = 0u64;
+        for (idx, (link, path)) in self.links.iter_mut().zip(paths).enumerate() {
+            let req = Json::obj(vec![
+                ("cmd", Json::str("snapshot")),
+                ("path", Json::str(path.as_ref().display().to_string())),
+            ]);
+            let resp = expect_ok(link.call(&req)?, idx, "snapshot")?;
+            bytes += field_usize(&resp, "bytes", idx, "snapshot")? as u64;
+        }
+        Ok(bytes)
+    }
+}
+
+/// The rebalance path: rebuild a sharded valuation from per-shard v3
+/// snapshots onto a DIFFERENT shard count (failover: N → N-1 after
+/// losing a machine; scale-out: N → 2N; consolidation: N → 1).
+///
+/// Only MUTABLE shard deployments can rescatter — their snapshots retain
+/// the test slices ([`store::MutablePayload`]). The global test stream
+/// is reconstructed by concatenating the slices in shard order (exactly
+/// the order the coordinator routed them), then re-ingested onto fresh
+/// sessions under an even contiguous plan. Because re-ingest IS the
+/// session layer's contiguous-partition contract, `new_shards = 1`
+/// reproduces the single-process session — and a one-shot run — to the
+/// bit, for ANY source shard count: rescatter is how a sharded
+/// deployment recovers bit-identity, not just ≤ 1e-12 agreement.
+///
+/// `config` is the configuration for the REBUILT sessions; its k and
+/// metric must match the snapshots' (the valuation semantics), while
+/// engine/retention/mutability are free — rescattering into plain dense
+/// sessions for a consolidation report is as valid as rescattering into
+/// mutable ones to keep serving edits.
+pub fn rescatter<P: AsRef<Path>>(
+    snapshots: &[P],
+    new_shards: usize,
+    config: SessionConfig,
+) -> Result<Rescattered> {
+    ensure!(!snapshots.is_empty(), "rescatter needs at least 1 snapshot");
+    ensure!(new_shards >= 1, "rescatter needs at least 1 target shard");
+    let mut train: Option<(Vec<f32>, Vec<i32>, usize)> = None;
+    let mut fingerprint = None;
+    let mut test_x = Vec::new();
+    let mut test_y = Vec::new();
+    for (idx, path) in snapshots.iter().enumerate() {
+        let path = path.as_ref();
+        let snap = store::read_snapshot(path)
+            .with_context(|| format!("reading shard {idx} snapshot {}", path.display()))?;
+        let h = &snap.header;
+        let SnapshotPayload::Mutable(payload) = snap.payload else {
+            bail!(
+                "shard {idx} snapshot {} was taken by an immutable '{}' session, \
+                 which does not retain its test slice — only mutable shard \
+                 deployments (serve --mutable) can rescatter",
+                path.display(),
+                h.engine.label()
+            );
+        };
+        ensure!(
+            h.k as usize == config.k,
+            "shard {idx} snapshot was taken with k={} but the rebuilt sessions \
+             are configured with k={}",
+            h.k,
+            config.k
+        );
+        ensure!(
+            h.metric == config.metric,
+            "shard {idx} snapshot metric {:?} != rebuilt session metric {:?}",
+            h.metric,
+            config.metric
+        );
+        match fingerprint {
+            None => fingerprint = Some(h.fingerprint),
+            Some(fp) => ensure!(
+                fp == h.fingerprint,
+                "shard {idx} snapshot fingerprint {:016x} != shard 0's {fp:016x} — \
+                 the shards hold different train sets (edits must be replicated \
+                 to every member)",
+                h.fingerprint
+            ),
+        }
+        if train.is_none() {
+            let d = h.d as usize;
+            train = Some((payload.train_x.clone(), payload.train_y.clone(), d));
+        }
+        test_x.extend_from_slice(&payload.test_x);
+        test_y.extend_from_slice(&payload.test_y);
+    }
+    let (train_x, train_y, d) = train.expect("at least one snapshot was read");
+    ensure!(
+        test_x.len() == test_y.len() * d,
+        "shard snapshots carry inconsistent test slices ({} features for {} \
+         labels, d={d})",
+        test_x.len(),
+        test_y.len()
+    );
+    let total = test_y.len() as u64;
+    let plan = ShardPlan::contiguous(total, new_shards);
+    let mut sessions = Vec::with_capacity(new_shards);
+    for s in 0..new_shards {
+        let lo = plan.start(s) as usize;
+        let hi = plan.end(s).unwrap_or(total) as usize;
+        let mut session = ValuationSession::new(train_x.clone(), train_y.clone(), d, config)
+            .with_context(|| format!("building rescatter target shard {s}"))?;
+        session
+            .ingest(&test_x[lo * d..hi * d], &test_y[lo..hi])
+            .with_context(|| format!("re-ingesting slice [{lo}, {hi}) onto shard {s}"))?;
+        sessions.push(session);
+    }
+    Ok(Rescattered { plan, sessions })
+}
+
+/// What [`rescatter`] rebuilds: the new plan plus one live session per
+/// new shard (wrap them in [`SessionLink`]s and
+/// [`ShardedSession::resume`] to keep serving, or snapshot them for the
+/// replacement processes to restore).
+pub struct Rescattered {
+    pub plan: ShardPlan,
+    pub sessions: Vec<ValuationSession>,
+}
+
+fn cmd(name: &str) -> Json {
+    Json::obj(vec![("cmd", Json::str(name))])
+}
+
+/// Protocol-level failure → coordinator error with shard context.
+fn expect_ok(resp: Json, shard: usize, what: &str) -> Result<Json> {
+    if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+        return Ok(resp);
+    }
+    bail!(
+        "shard {shard} {what} failed: {}",
+        resp.get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("(no error message)")
+    )
+}
+
+fn field_usize(resp: &Json, key: &str, shard: usize, what: &str) -> Result<usize> {
+    resp.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("shard {shard} {what} response missing numeric '{key}'"))
+}
+
+fn f64_array(resp: &Json, key: &str, shard: usize) -> Result<Vec<f64>> {
+    let arr = resp
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("shard {shard} response missing array '{key}'"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| anyhow!("shard {shard} response has a non-numeric '{key}' entry"))
+        })
+        .collect()
+}
+
+fn add_assign(acc: &mut [f64], other: &[f64]) {
+    for (a, b) in acc.iter_mut().zip(other) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::Engine;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn contiguous_plans_split_evenly_with_front_loaded_remainder() {
+        let plan = ShardPlan::contiguous(10, 3);
+        assert_eq!(plan.n_shards(), 3);
+        // 10 over 3: 4, 3, 3
+        assert_eq!((plan.start(0), plan.end(0)), (0, Some(4)));
+        assert_eq!((plan.start(1), plan.end(1)), (4, Some(7)));
+        assert_eq!((plan.start(2), plan.end(2)), (7, None));
+        assert_eq!(plan.shard_of(0), 0);
+        assert_eq!(plan.shard_of(3), 0);
+        assert_eq!(plan.shard_of(4), 1);
+        assert_eq!(plan.shard_of(6), 1);
+        assert_eq!(plan.shard_of(7), 2);
+        // the last shard is unbounded: overflow tests land there
+        assert_eq!(plan.shard_of(999), 2);
+    }
+
+    #[test]
+    fn zero_test_shards_are_legal_and_skipped_by_routing() {
+        let plan = ShardPlan::from_starts(vec![0, 2, 2, 5]).unwrap();
+        assert_eq!(plan.shard_of(1), 0);
+        // index 2 belongs to shard 2, not the empty shard 1 ([2, 2))
+        assert_eq!(plan.shard_of(2), 2);
+        assert_eq!(plan.shard_of(5), 3);
+        // fewer tests than shards: trailing shards get nothing
+        let tiny = ShardPlan::contiguous(2, 4);
+        assert_eq!((tiny.start(2), tiny.end(2)), (2, Some(2)));
+        assert!(ShardPlan::from_starts(vec![1, 2]).is_err());
+        assert!(ShardPlan::from_starts(vec![0, 3, 2]).is_err());
+        assert!(ShardPlan::from_starts(Vec::new()).is_err());
+    }
+
+    fn tiny_problem(
+        seed: u64,
+        n: usize,
+        d: usize,
+        t: usize,
+    ) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+            (0..n).map(|_| rng.below(2) as i32).collect(),
+            (0..t * d).map(|_| rng.normal() as f32).collect(),
+            (0..t).map(|_| rng.below(2) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn single_shard_merge_is_bitwise_the_solo_session() {
+        let (tx, ty, qx, qy) = tiny_problem(11, 9, 2, 6);
+        let config = SessionConfig::new(3);
+        let mut solo = ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap();
+        solo.ingest(&qx, &qy).unwrap();
+
+        let link = SessionLink::new(ValuationSession::new(tx, ty, 2, config).unwrap());
+        let plan = ShardPlan::contiguous(6, 1);
+        let mut sharded = ShardedSession::open(vec![link], plan, 2).unwrap();
+        sharded.ingest(&qx, &qy).unwrap();
+
+        let merged = sharded.values().unwrap();
+        let main = solo.point_values(TopBy::Main).unwrap();
+        let rowsum = solo.point_values(TopBy::RowSum).unwrap();
+        for i in 0..9 {
+            assert_eq!(merged.main[i].to_bits(), main[i].to_bits());
+            assert_eq!(merged.rowsum[i].to_bits(), rowsum[i].to_bits());
+        }
+        assert_eq!(
+            sharded.cell(0, 1).unwrap().to_bits(),
+            solo.cell(0, 1).unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn open_rejects_mismatched_plan_and_nonempty_shards() {
+        let (tx, ty, qx, qy) = tiny_problem(13, 8, 2, 4);
+        let config = SessionConfig::new(2);
+        let empty = ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap();
+        let links = vec![SessionLink::new(empty)];
+        let plan = ShardPlan::contiguous(4, 2);
+        assert!(ShardedSession::open(links, plan, 2).is_err());
+
+        let mut pre = ValuationSession::new(tx, ty, 2, config).unwrap();
+        pre.ingest(&qx, &qy).unwrap();
+        let links = vec![SessionLink::new(pre)];
+        let plan = ShardPlan::contiguous(4, 1);
+        assert!(ShardedSession::open(links, plan, 2).is_err());
+    }
+
+    #[test]
+    fn resume_checks_the_plan_distribution() {
+        let (tx, ty, qx, qy) = tiny_problem(17, 8, 2, 6);
+        let config = SessionConfig::new(2).with_engine(Engine::Implicit);
+        let plan = ShardPlan::contiguous(6, 2);
+        let make = || {
+            let s = ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap();
+            SessionLink::new(s)
+        };
+
+        // fill two shards per the plan (3 + 3), then resume onto them
+        let mut a = make();
+        let mut b = make();
+        a.session.ingest(&qx[..3 * 2], &qy[..3]).unwrap();
+        b.session.ingest(&qx[3 * 2..], &qy[3..]).unwrap();
+        let resumed = ShardedSession::resume(vec![a, b], plan.clone(), 2).unwrap();
+        assert_eq!(resumed.tests_routed(), 6);
+
+        // a distribution the plan could not have produced is rejected
+        let mut lopsided = make();
+        let empty = make();
+        lopsided.session.ingest(&qx, &qy).unwrap(); // all 6 on shard 0
+        let links = vec![lopsided, empty];
+        assert!(ShardedSession::resume(links, plan, 2).is_err());
+    }
+}

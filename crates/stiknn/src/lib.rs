@@ -1,0 +1,169 @@
+//! # stiknn — exact pair-interaction Data Shapley for KNN in O(t·n²)
+//!
+//! Production-grade reproduction of Belaid, ElMekki, Rabus & Hüllermeier
+//! (2023), *"Optimizing Data Shapley Interaction Calculation from O(2ⁿ)
+//! to O(tn²) for KNN models"* (STI-KNN), as a three-layer Rust + JAX +
+//! Pallas system: Pallas kernels (L1) and the JAX pipeline (L2) are AOT
+//! compiled to HLO artifacts at build time; the Rust layer (L3) loads
+//! them via PJRT (behind the `xla` feature) and coordinates sharded
+//! valuation jobs — Python never runs on the request path.
+//!
+//! # Crate map (DESIGN.md §13)
+//!
+//! This is the FACADE crate of a four-layer workspace. It contains no
+//! algorithm code of its own — it re-exports the stack under the module
+//! paths the original monolith used, so `use stiknn::...` is stable
+//! across the split:
+//!
+//! ```text
+//! stiknn-core     pure algorithms: shapley (engines + delta), knn,
+//!                 data, analysis, coordinator, runtime, util,
+//!                 report (tables/heatmaps), bench harness
+//!    ▲
+//! stiknn-session  ValuationSession + snapshot store + NDJSON protocol
+//!    |            + shard fan-out (ShardedSession) + iterative removal
+//!    ▲
+//! stiknn-server   SessionRegistry, TCP listener, LRU spill, autosave
+//!    ▲
+//! stiknn          this facade (old paths + report::session rendering)
+//!    ▲
+//! stiknn-cli      the `stiknn` binary, benches/, examples/
+//! ```
+//!
+//! `stiknn-core` depends on no other workspace crate (enforced per crate
+//! in CI), so the shard coordinator can ride on `stiknn-session` without
+//! dragging in the TCP server or CLI.
+//!
+//! # Engines
+//!
+//! Two complementary engines expose Algorithm 1's results (DESIGN.md
+//! §4/§10):
+//!
+//! * **Dense** — the full n×n interaction matrix, O(t·n²) time / O(n²)
+//!   memory. A two-phase hot path ([`shapley::sti_knn::prepare_batch`] →
+//!   [`shapley::sti_knn::sweep_band`]); the coordinator's default
+//!   row-banded assembly parallelizes the sweep over disjoint row bands
+//!   of ONE shared accumulator — peak memory O(n²) at any worker count,
+//!   bit-identical to the single-threaded engine (DESIGN.md §7).
+//! * **Implicit** — exact per-point values (diagonal mains + interaction
+//!   row sums, the aggregates every serving workload actually consumes)
+//!   via the rank-space suffix-sum identity
+//!   `rowsum_i = r_i·c[r_i] + suffix(c, r_i+1)` ([`shapley::values`]),
+//!   O(t·n log n) time / O(n) state, no matrix anywhere — which reaches
+//!   n where the dense matrix cannot even be allocated (n=100k → 80 GB).
+//!   Agrees with the dense `diag + rowsums` to ≤ 1e-12 and is
+//!   bit-reproducible over any contiguous ingest partition
+//!   (`tests/values_equivalence.rs`); parallelized by the coordinator's
+//!   value-sharded path ([`coordinator::run_values_job`]).
+//!
+//! On top of the one-shot pipeline sits the **session layer**
+//! ([`session`], DESIGN.md §9): a [`session::ValuationSession`] holds the
+//! unnormalized engine state between requests — the matrix accumulator
+//! or, with `SessionConfig::with_engine(Engine::Implicit)`, the O(n)
+//! value vector — ingests test batches incrementally (Eq. 9 is additive
+//! over test points, so streaming is exact — bit-identical to a one-shot
+//! run over the same stream), snapshots/restores through a versioned
+//! binary store ([`session::store`], v3 carries any payload kind; v1/v2
+//! files still restore), and serves NDJSON commands via `stiknn serve`
+//! ([`session::protocol`]; queries the implicit engine cannot answer are
+//! rejected with `"reason":"engine"`).
+//!
+//! # Live training-set mutations ([`delta`], DESIGN.md §11)
+//!
+//! A mutable session (`SessionConfig::with_mutable(true)`, CLI
+//! `serve --mutable` / `stiknn mutate`) makes the TRAINING set itself a
+//! live object: `add_train`/`remove_train`/`relabel_train` apply exact
+//! edits in **O(t·(d + n)) per edit** instead of the full
+//! O(t·(n·d + n log n)) recompute — an edit only shifts ranks locally,
+//! so the retained per-test rank-space rows are repaired in place
+//! (binary-search insert, O(n) rank shift, superdiagonal rebuild) and
+//! the value vector re-folded, landing bit-identical to a from-scratch
+//! session over the edited train set (`tests/delta_equivalence.rs`).
+//! Every edit is recorded in a mutation ledger that v3 snapshots persist
+//! together with the train set and rows, so mutable sessions restore
+//! completely and their data provenance stays auditable. The exact
+//! iterative removal curve (`analysis::removal::
+//! sti_iterative_removal_order`) is built on the same repairs:
+//! remove-best → repair → re-rank, per step in O(t·n).
+//!
+//! # Concurrent serving ([`server`], DESIGN.md §12)
+//!
+//! Above the single-session protocol sits the multi-session server: a
+//! [`server::SessionRegistry`] hosts many named sessions in one process,
+//! `stiknn serve --listen ADDR` multiplexes TCP clients onto them
+//! (thread per connection, `open`/`use`/`close`/`list` verbs; stdio
+//! still works and speaks the identical protocol), and a per-session
+//! RwLock lets read queries run concurrently while writes serialize —
+//! with the property that ANY interleaving of client traffic leaves each
+//! session bit-identical to a serialized replay of its own write
+//! commands in revision order (`tests/server_concurrency.rs`). An LRU
+//! cap spills cold sessions to the v3 snapshot store and reloads them
+//! transparently on next touch; a background autosave thread checkpoints
+//! dirty sessions so the process survives restarts.
+//!
+//! # Multi-node sharding ([`coordinator::shard`], DESIGN.md §13)
+//!
+//! STI-KNN's utility is a sum over test points (Eq. 8), so the test set
+//! partitions across PROCESSES as exactly as it does across threads:
+//! `stiknn serve --shard-of J/N` gives a server a shard identity, and a
+//! [`coordinator::shard::ShardedSession`] opens the same session on N
+//! shard servers, routes each ingest batch by global test index, and
+//! merges per-shard raw (unnormalized) sums in fixed shard order.
+//! `snapshot_all` collects per-shard v3 snapshots, and `rescatter`
+//! re-opens them on a DIFFERENT shard count — mutable shard snapshots
+//! retain their test slices, so rebalance re-ingests the global stream
+//! in order (M=1 reproduces the single-process session bit-for-bit;
+//! `tests/shard_equivalence.rs`).
+//!
+//! Quick start:
+//! ```no_run
+//! use stiknn::data::load_dataset;
+//! use stiknn::shapley::{sti_knn, sti_values, StiParams};
+//!
+//! let ds = load_dataset("circle", 120, 30, 42).unwrap();
+//! let phi = sti_knn(&ds.train_x, &ds.train_y, ds.d,
+//!                   &ds.test_x, &ds.test_y, &StiParams::new(5));
+//! println!("interaction of points 0,1: {}", phi.get(0, 1));
+//! // per-point values without materializing phi at all:
+//! let pv = sti_values(&ds.train_x, &ds.train_y, ds.d,
+//!                     &ds.test_x, &ds.test_y, &StiParams::new(5));
+//! println!("point 0 total value: {}", pv.rowsum[0]);
+//! ```
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for reproduction results.
+
+pub use stiknn_core::{bench, data, knn, runtime, shapley, util};
+pub use stiknn_server::server;
+pub use stiknn_session::session;
+
+pub use stiknn_core::shapley::delta;
+
+/// Analysis suite (`stiknn-core`), plus the session-backed iterative
+/// removal curve stitched back into its pre-split path.
+pub mod analysis {
+    pub use stiknn_core::analysis::*;
+
+    /// Removal orders and curves; `sti_iterative_removal_order` comes
+    /// from `stiknn-session` (it drives a live mutable session).
+    pub mod removal {
+        pub use stiknn_core::analysis::removal::*;
+        pub use stiknn_session::removal::sti_iterative_removal_order;
+    }
+}
+
+/// Parallel coordination (`stiknn-core`), plus the multi-node shard
+/// fan-out from `stiknn-session` at the path the issue tracker and docs
+/// use (`coordinator::shard`).
+pub mod coordinator {
+    pub use stiknn_core::coordinator::*;
+    pub use stiknn_session::shard;
+}
+
+/// Reporting (`stiknn-core` tables/heatmaps) plus the session/server
+/// rendering helpers that live in this facade crate.
+pub mod report {
+    pub use stiknn_core::report::*;
+
+    pub mod session;
+}

@@ -1,0 +1,397 @@
+//! Shard-merge equivalence properties (ISSUE 6 / DESIGN.md §13): a
+//! [`ShardedSession`] fanned over N members answers the SAME valuation
+//! as one process over the whole test stream.
+//!
+//! The contract under test, in decreasing strictness:
+//!
+//! * N = 1: the merge is a copy — every answer is **bit-identical** to
+//!   the single-process session (and therefore to one-shot `sti_knn`,
+//!   by `tests/session_equivalence.rs`).
+//! * N > 1: the cross-shard fold regroups f64 additions, so merged
+//!   answers agree to ≤ 1e-12 relative — never worse, at every shard
+//!   count, for uneven partitions and zero-test shards alike.
+//! * rescatter to M = 1: **bit-identity is recovered** — concatenating
+//!   the shards' retained test slices in shard order and re-ingesting
+//!   reproduces the single-process session exactly, for ANY source N.
+//!
+//! The fan-out runs over in-process [`SessionLink`]s (the same
+//! `protocol::handle` code path a TCP server executes per line, so the
+//! whole command layer is covered) plus one real-TCP test against
+//! `server::listen` with `--shard-of`-style registries.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use stiknn::coordinator::shard::{rescatter, SessionLink, ShardPlan, ShardedSession, TcpLink};
+use stiknn::server::{self, RegistryConfig, SessionRegistry, ShardIdentity, TrainData};
+use stiknn::session::{Engine, SessionConfig, TopBy, ValuationSession};
+use stiknn::util::prop::{check, Gen};
+use stiknn::util::rng::Rng;
+
+static SNAP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+fn temp_snapshot_path() -> PathBuf {
+    let unique = SNAP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let name = format!("stiknn_shard_equiv_{}_{unique}.snap", std::process::id());
+    std::env::temp_dir().join(name)
+}
+
+struct Problem {
+    n: usize,
+    d: usize,
+    t: usize,
+    k: usize,
+    train_x: Vec<f32>,
+    train_y: Vec<i32>,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+}
+
+fn random_problem(g: &mut Gen) -> Problem {
+    let n = 2 + g.usize_in(2, 30);
+    let d = 1 + g.usize_in(0, 3);
+    let t = 1 + g.usize_in(0, 20);
+    let k = 1 + g.usize_in(0, n - 1);
+    let classes = 2 + g.usize_in(0, 2);
+    Problem {
+        n,
+        d,
+        t,
+        k,
+        train_x: g.features(n, d),
+        train_y: g.labels(n, classes),
+        test_x: g.features(t, d),
+        test_y: g.labels(t, classes),
+    }
+}
+
+fn session(p: &Problem, config: SessionConfig) -> ValuationSession {
+    ValuationSession::new(p.train_x.clone(), p.train_y.clone(), p.d, config).unwrap()
+}
+
+/// N links over fresh sessions with identical config — `links[s]` is
+/// shard s.
+fn links(p: &Problem, config: SessionConfig, n_shards: usize) -> Vec<SessionLink> {
+    (0..n_shards).map(|_| SessionLink::new(session(p, config))).collect()
+}
+
+/// A random contiguous partition of [0, t) into non-empty batches.
+fn random_batches(g: &mut Gen, t: usize) -> Vec<(usize, usize)> {
+    let mut cuts = vec![0, t];
+    for _ in 0..g.usize_in(0, 4) {
+        cuts.push(g.usize_in(0, t));
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+fn ingest_batched(
+    sharded: &mut ShardedSession<SessionLink>,
+    p: &Problem,
+    batches: &[(usize, usize)],
+) {
+    for &(lo, hi) in batches {
+        let (xs, ys) = (&p.test_x[lo * p.d..hi * p.d], &p.test_y[lo..hi]);
+        sharded.ingest(xs, ys).unwrap();
+    }
+}
+
+fn assert_close(a: f64, b: f64, ctx: &str) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!((a - b).abs() <= 1e-12 * scale, "{ctx}: {a:e} vs {b:e}");
+}
+
+#[test]
+fn merged_values_match_the_single_process_session_at_every_shard_count() {
+    check("shard merge equivalence", 25, |g| {
+        let p = random_problem(g);
+        let config = if g.usize_in(0, 1) == 0 {
+            SessionConfig::new(p.k)
+        } else {
+            SessionConfig::new(p.k).with_engine(Engine::Implicit)
+        };
+        let mut solo = session(&p, config);
+        solo.ingest(&p.test_x, &p.test_y).unwrap();
+        let solo_main = solo.point_values(TopBy::Main).unwrap();
+        let solo_rowsum = solo.point_values(TopBy::RowSum).unwrap();
+
+        for n_shards in [1usize, 2, 3, 7] {
+            // t < n_shards leaves trailing shards with zero tests — the
+            // merge must absorb them as exact additive identities
+            let plan = ShardPlan::contiguous(p.t as u64, n_shards);
+            let members = links(&p, config, n_shards);
+            let mut sharded = ShardedSession::open(members, plan, p.d).unwrap();
+            let batches = random_batches(g, p.t);
+            ingest_batched(&mut sharded, &p, &batches);
+            assert_eq!(sharded.tests_routed(), p.t as u64);
+
+            let merged = sharded.values().unwrap();
+            assert_eq!(merged.tests, p.t as u64);
+            for i in 0..p.n {
+                if n_shards == 1 {
+                    // single member: the fold is a copy — bit-identical
+                    let (a, b) = (merged.main[i], solo_main[i]);
+                    assert_eq!(a.to_bits(), b.to_bits(), "main[{i}]");
+                    let (a, b) = (merged.rowsum[i], solo_rowsum[i]);
+                    assert_eq!(a.to_bits(), b.to_bits(), "rowsum[{i}]");
+                } else {
+                    assert_close(merged.main[i], solo_main[i], "main");
+                    assert_close(merged.rowsum[i], solo_rowsum[i], "rowsum");
+                }
+            }
+
+            // top-k ranks the merged values with the session's semantics
+            let k_top = 1 + g.usize_in(0, p.n - 1);
+            let top = sharded.top_k(k_top, TopBy::RowSum).unwrap();
+            assert_eq!(top.len(), k_top.min(p.n));
+
+            // summary statistics derive from the same merged raw sums
+            let solo_stats = solo.stats();
+            let merged_stats = sharded.stats().unwrap();
+            assert_eq!(merged_stats.tests, solo_stats.tests);
+            assert_eq!(merged_stats.per_shard_tests.len(), n_shards);
+            let routed: u64 = merged_stats.per_shard_tests.iter().sum();
+            assert_eq!(routed, p.t as u64);
+            assert_close(merged_stats.trace, solo_stats.trace, "trace");
+            assert_close(merged_stats.upper_sum, solo_stats.upper_sum, "upper_sum");
+            assert_close(
+                merged_stats.mean_offdiag,
+                solo_stats.mean_offdiag,
+                "mean_offdiag",
+            );
+        }
+    });
+}
+
+#[test]
+fn single_shard_fan_out_answers_dense_cells_and_rows_bitwise() {
+    check("single-shard dense queries", 20, |g| {
+        let p = random_problem(g);
+        let config = SessionConfig::new(p.k);
+        let mut solo = session(&p, config);
+        solo.ingest(&p.test_x, &p.test_y).unwrap();
+
+        let plan = ShardPlan::contiguous(p.t as u64, 1);
+        let mut sharded = ShardedSession::open(links(&p, config, 1), plan, p.d).unwrap();
+        sharded.ingest(&p.test_x, &p.test_y).unwrap();
+
+        let i = g.usize_in(0, p.n - 1);
+        let j = g.usize_in(0, p.n - 1);
+        assert_eq!(
+            sharded.cell(i, j).unwrap().to_bits(),
+            solo.cell(i, j).unwrap().to_bits()
+        );
+        let merged_row = sharded.row(i).unwrap();
+        let solo_row = solo.row(i).unwrap();
+        for (a, b) in merged_row.iter().zip(&solo_row) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    });
+}
+
+#[test]
+fn uneven_partitions_and_zero_test_shards_merge_exactly() {
+    // Hand-built plan: shard 1 is deliberately EMPTY ([2, 2)) and the
+    // split is uneven — routing must skip the empty member and the merge
+    // must still match the single process.
+    let mut g = Gen {
+        rng: Rng::new(0x5AD5),
+        size: 24,
+    };
+    let mut p = random_problem(&mut g);
+    p.t = 7;
+    p.test_x = g.features(p.t, p.d);
+    p.test_y = g.labels(p.t, 2);
+    let config = SessionConfig::new(p.k);
+
+    let mut solo = session(&p, config);
+    solo.ingest(&p.test_x, &p.test_y).unwrap();
+
+    let plan = ShardPlan::from_starts(vec![0, 2, 2, 6]).unwrap();
+    let mut sharded = ShardedSession::open(links(&p, config, 4), plan, p.d).unwrap();
+    // one batch that straddles every boundary
+    sharded.ingest(&p.test_x, &p.test_y).unwrap();
+
+    let stats = sharded.stats().unwrap();
+    assert_eq!(stats.per_shard_tests, vec![2, 0, 4, 1]);
+
+    let merged = sharded.values().unwrap();
+    let solo_main = solo.point_values(TopBy::Main).unwrap();
+    for i in 0..p.n {
+        assert_close(merged.main[i], solo_main[i], "uneven main");
+    }
+}
+
+#[test]
+fn mutations_fan_out_to_every_member() {
+    let mut g = Gen {
+        rng: Rng::new(0xED17),
+        size: 24,
+    };
+    let p = random_problem(&mut g);
+    let config = SessionConfig::new(p.k.min(p.n - 1))
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true);
+
+    let mut solo = session(&p, config);
+    solo.ingest(&p.test_x, &p.test_y).unwrap();
+
+    let plan = ShardPlan::contiguous(p.t as u64, 2);
+    let mut sharded = ShardedSession::open(links(&p, config, 2), plan, p.d).unwrap();
+    sharded.ingest(&p.test_x, &p.test_y).unwrap();
+
+    // the same edit script on both sides
+    let new_x = g.features(1, p.d);
+    let added = sharded.add_train(&new_x, 1).unwrap();
+    assert_eq!(added, p.n);
+    assert_eq!(sharded.n(), p.n + 1);
+    solo.add_train(&new_x, 1).unwrap();
+    sharded.relabel_train(0, 0).unwrap();
+    solo.relabel_train(0, 0).unwrap();
+    sharded.remove_train(1).unwrap();
+    solo.remove_train(1).unwrap();
+    assert_eq!(sharded.n(), p.n);
+
+    let merged = sharded.values().unwrap();
+    let solo_main = solo.point_values(TopBy::Main).unwrap();
+    for i in 0..sharded.n() {
+        assert_close(merged.main[i], solo_main[i], "post-edit main");
+    }
+}
+
+#[test]
+fn rescatter_onto_one_shard_recovers_bit_identity() {
+    check("rescatter bit-identity", 15, |g| {
+        let p = random_problem(g);
+        // mutable members: their snapshots retain the test slices
+        let member = SessionConfig::new(p.k)
+            .with_engine(Engine::Implicit)
+            .with_retained_rows(true)
+            .with_mutable(true);
+        let n_shards = 1 + g.usize_in(0, 2);
+        let plan = ShardPlan::contiguous(p.t as u64, n_shards);
+        let members = links(&p, member, n_shards);
+        let mut sharded = ShardedSession::open(members, plan, p.d).unwrap();
+        let batches = random_batches(g, p.t);
+        ingest_batched(&mut sharded, &p, &batches);
+
+        let paths: Vec<PathBuf> = (0..n_shards).map(|_| temp_snapshot_path()).collect();
+        let bytes = sharded.snapshot_all(&paths).unwrap();
+        assert!(bytes > 0);
+
+        // M = 1, rebuilt DENSE: bitwise vs a fresh single dense session
+        // over the same stream, whatever the source shard count was
+        let rebuilt = rescatter(&paths, 1, SessionConfig::new(p.k)).unwrap();
+        assert_eq!(rebuilt.sessions.len(), 1);
+        let mut solo = session(&p, SessionConfig::new(p.k));
+        solo.ingest(&p.test_x, &p.test_y).unwrap();
+        let a = rebuilt.sessions[0].point_values(TopBy::RowSum).unwrap();
+        let b = solo.point_values(TopBy::RowSum).unwrap();
+        for i in 0..p.n {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "rescattered rowsum[{i}]");
+        }
+
+        // M = 2, rebuilt MUTABLE: resume a coordinator on the rebuilt
+        // members and keep serving — merged answers stay within 1e-12
+        let rebuilt = rescatter(&paths, 2, member).unwrap();
+        let relinked: Vec<SessionLink> =
+            rebuilt.sessions.into_iter().map(SessionLink::new).collect();
+        let mut resumed = ShardedSession::resume(relinked, rebuilt.plan, p.d).unwrap();
+        assert_eq!(resumed.tests_routed(), p.t as u64);
+        let merged = resumed.values().unwrap();
+        for i in 0..p.n {
+            assert_close(merged.rowsum[i], b[i], "resumed rowsum");
+        }
+
+        for path in &paths {
+            let _ = std::fs::remove_file(path);
+        }
+    });
+}
+
+#[test]
+fn rescatter_rejects_immutable_member_snapshots() {
+    let mut g = Gen {
+        rng: Rng::new(0xA11C),
+        size: 24,
+    };
+    let p = random_problem(&mut g);
+    let config = SessionConfig::new(p.k);
+    let mut solo = session(&p, config);
+    solo.ingest(&p.test_x, &p.test_y).unwrap();
+    let path = temp_snapshot_path();
+    solo.save(&path).unwrap();
+    let err = rescatter(&[&path], 1, config).unwrap_err().to_string();
+    assert!(err.contains("does not retain its test slice"), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// One TCP shard server: a registry with a shard identity behind a real
+/// listener on a loopback port, accept loop detached (it serves until
+/// the test process exits).
+fn spawn_shard_server(train: TrainData, config: SessionConfig, id: ShardIdentity) -> String {
+    let registry = SessionRegistry::new(
+        train,
+        RegistryConfig {
+            base: config,
+            max_resident: 0,
+            state_dir: None,
+        },
+    )
+    .unwrap()
+    .with_shard(id);
+    let registry = Arc::new(registry);
+    registry.open("default", None, None).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let _ = server::listen(registry, listener, Some("default".to_string()));
+    });
+    addr
+}
+
+#[test]
+fn tcp_shard_servers_merge_like_one_process() {
+    let mut g = Gen {
+        rng: Rng::new(0x7C9),
+        size: 24,
+    };
+    let p = random_problem(&mut g);
+    let config = SessionConfig::new(p.k);
+    let train = TrainData {
+        name: "shard-equiv".to_string(),
+        x: p.train_x.clone(),
+        y: p.train_y.clone(),
+        d: p.d,
+    };
+
+    let addrs: Vec<String> = (0..2)
+        .map(|j| spawn_shard_server(train.clone(), config, ShardIdentity::new(j, 2).unwrap()))
+        .collect();
+
+    let plan = ShardPlan::contiguous(p.t as u64, 2);
+    let links: Vec<TcpLink> = addrs.iter().map(|a| TcpLink::connect(a).unwrap()).collect();
+    let mut sharded = ShardedSession::open(links, plan.clone(), p.d).unwrap();
+    sharded.ingest(&p.test_x, &p.test_y).unwrap();
+
+    let mut solo = session(&p, config);
+    solo.ingest(&p.test_x, &p.test_y).unwrap();
+    let merged = sharded.values().unwrap();
+    let solo_main = solo.point_values(TopBy::Main).unwrap();
+    for i in 0..p.n {
+        assert_close(merged.main[i], solo_main[i], "tcp main");
+    }
+
+    // the shard verb catches a miswired deployment: connecting the same
+    // members in the WRONG order must fail open()
+    let swapped: Vec<TcpLink> = addrs
+        .iter()
+        .rev()
+        .map(|a| TcpLink::connect(a).unwrap())
+        .collect();
+    let err = ShardedSession::open(swapped, plan, p.d).unwrap_err().to_string();
+    assert!(err.contains("identifies as shard"), "{err}");
+}
