@@ -7,8 +7,12 @@
 //! commands/second across a client-count × read/write-mix grid (every
 //! client drives its own [`Connection`] against one shared registry,
 //! round-robin over 4 sessions), plus the LRU spill→reload cycle cost,
-//! and writes the trajectory artifact `BENCH_server.json` at the REPO
-//! ROOT (CI uploads it per commit).
+//! an obs off/on A/B pair on the same cell (the DESIGN.md §14 overhead
+//! budget is < 2%), and writes the trajectory artifact
+//! `BENCH_server.json` at the REPO ROOT (CI uploads it per commit) —
+//! including the end-of-run process-wide `metrics` snapshot, so the
+//! trajectory records behavior (spills, lock waits, per-command
+//! latencies), not just wall-clock.
 //!
 //!     cargo bench --bench server              # full size (n=600)
 //!     cargo bench --bench server -- --quick   # CI size   (n=200)
@@ -18,6 +22,7 @@ use std::sync::Arc;
 
 use stiknn::bench::{quick, Suite};
 use stiknn::data::load_dataset;
+use stiknn::obs::ObsHandle;
 use stiknn::server::{Connection, RegistryConfig, SessionRegistry, TrainData};
 use stiknn::session::{Engine, SessionConfig};
 use stiknn::util::json::Json;
@@ -31,22 +36,25 @@ fn registry(
     train: &TrainData,
     config: SessionConfig,
     state: Option<(usize, &Path)>,
+    obs: bool,
 ) -> Arc<SessionRegistry> {
     let (max_resident, state_dir) = match state {
         Some((cap, dir)) => (cap, Some(dir.to_path_buf())),
         None => (0, None),
     };
-    let reg = Arc::new(
-        SessionRegistry::new(
-            train.clone(),
-            RegistryConfig {
-                base: config,
-                max_resident,
-                state_dir,
-            },
-        )
-        .unwrap(),
-    );
+    let mut reg = SessionRegistry::new(
+        train.clone(),
+        RegistryConfig {
+            base: config,
+            max_resident,
+            state_dir,
+        },
+    )
+    .unwrap();
+    if obs {
+        reg = reg.with_obs(ObsHandle::enabled("bench"));
+    }
+    let reg = Arc::new(reg);
     for s in 0..SESSIONS {
         reg.open(&format!("s{s}"), None, None).unwrap();
     }
@@ -121,7 +129,10 @@ fn main() {
     let mut grid = Vec::new();
     for &clients in client_counts {
         for &(write_every, label) in mixes {
-            let reg = registry(&train, config, None);
+            // obs ON: grid numbers stay comparable to the production
+            // default, and any regression against the prior trajectory
+            // artifact is telemetry cost showing up where it matters
+            let reg = registry(&train, config, None, true);
             let m = suite.bench(&format!("{label} x{clients}"), || {
                 drive(&reg, ds.d, clients, write_every)
             });
@@ -130,13 +141,28 @@ fn main() {
         }
     }
 
+    // obs A/B — the same mixed cell with telemetry off vs on, isolating
+    // what the instrumentation itself costs (DESIGN.md §14 budget: <2%)
+    let ab_clients = *client_counts.last().unwrap();
+    let reg_off = registry(&train, config, None, false);
+    let ab_off = suite.bench(&format!("mixed x{ab_clients} obs=off"), || {
+        drive(&reg_off, ds.d, ab_clients, 4)
+    });
+    let reg_on = registry(&train, config, None, true);
+    let ab_on = suite.bench(&format!("mixed x{ab_clients} obs=on"), || {
+        drive(&reg_on, ds.d, ab_clients, 4)
+    });
+    let off_cps = (ab_clients * CMDS) as f64 / ab_off.mean_secs();
+    let on_cps = (ab_clients * CMDS) as f64 / ab_on.mean_secs();
+    let overhead_pct = (off_cps - on_cps) / off_cps * 100.0;
+
     // LRU spill→reload cycle: 4 sessions behind a 2-slot cap, touched
     // round-robin — every touch beyond the cap evicts one session and
     // restores another (the save amortizes away once sessions are clean,
     // so steady state measures the reload side)
     let state = std::env::temp_dir().join(format!("stiknn_bench_server_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&state);
-    let reg = registry(&train, config, Some((2, state.as_path())));
+    let reg = registry(&train, config, Some((2, state.as_path())), true);
     let spill = suite.bench("lru spill+reload touch", || {
         let mut conn = Connection::new(Arc::clone(&reg), None);
         for s in 0..SESSIONS {
@@ -146,12 +172,25 @@ fn main() {
             assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
         }
     });
+    // End-of-run telemetry from the LRU registry (the richest one:
+    // per-command histograms, lock wait/hold, spill and reload counts)
+    // rides along in the artifact.
+    let metrics_snap = {
+        let mut conn = Connection::new(Arc::clone(&reg), None);
+        let (r, _) = conn.execute(r#"{"cmd":"metrics","scope":"process"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        r.get("metrics").cloned().unwrap_or(Json::Null)
+    };
     let _ = std::fs::remove_dir_all(&state);
 
     println!("{}", suite.render());
     for (clients, label, cmds_per_sec, _) in &grid {
         println!("{label:>6} x{clients}: {cmds_per_sec:.0} cmds/s");
     }
+    println!(
+        "obs A/B (mixed x{ab_clients}): off {off_cps:.0} cmds/s, on {on_cps:.0} cmds/s \
+         ({overhead_pct:+.2}% overhead)"
+    );
 
     let artifact = Json::obj(vec![
         ("bench", Json::str("server")),
@@ -175,6 +214,17 @@ fn main() {
             "lru_cycle_secs",
             Json::num(spill.mean_secs() / SESSIONS as f64),
         ),
+        (
+            "obs_ab",
+            Json::obj(vec![
+                ("clients", Json::num(ab_clients as f64)),
+                ("mix", Json::str("mixed")),
+                ("obs_off_cmds_per_sec", Json::num(off_cps)),
+                ("obs_on_cmds_per_sec", Json::num(on_cps)),
+                ("overhead_pct", Json::num(overhead_pct)),
+            ]),
+        ),
+        ("metrics", metrics_snap),
         ("suite", suite.to_json()),
     ]);
     // Repo root, not CWD (same rationale as BENCH_session.json).

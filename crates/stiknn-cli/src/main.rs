@@ -7,6 +7,7 @@
 //!   ksens     k-sensitivity sweep (§3.2, Figs. 7–10)
 //!   mislabel  flip labels and detect them from interaction patterns (Fig. 5)
 //!   serve     concurrent multi-session NDJSON server: stdio or --listen TCP; --shard-of J/N (§9/§12/§13)
+//!   metrics   fetch telemetry from a running server, Prometheus text or JSON (§14)
 //!   mutate    live training-set edits with exact O(t·n) repairs (§11)
 //!   session   inspect a session snapshot file (§9/§11)
 //!   datasets  list the Table-1 dataset registry
@@ -28,6 +29,7 @@ use stiknn::analysis::structure::block_structure;
 use stiknn::coordinator::{run_job_with_engine, run_values_job, Assembly, ValuationJob};
 use stiknn::data::{corrupt, csv, load_dataset_any, registry_names};
 use stiknn::knn::distance::Metric;
+use stiknn::obs::{prometheus_text, ObsHandle};
 use stiknn::report::heatmap::render_heatmap;
 use stiknn::report::session::{registry_table, snapshot_info_table, topk_table};
 use stiknn::report::table::Table;
@@ -38,6 +40,7 @@ use stiknn::shapley::axioms;
 use stiknn::shapley::values::{sti_point_values, Engine as ValueEngine, PointValues};
 use stiknn::shapley::StiParams;
 use stiknn::util::cli::{wants_help, Args, Command};
+use stiknn::util::json::Json;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -48,6 +51,7 @@ fn main() {
         Some("ksens") => cmd_ksens(&argv[1..]),
         Some("mislabel") => cmd_mislabel(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("metrics") => cmd_metrics(&argv[1..]),
         Some("mutate") => cmd_mutate(&argv[1..]),
         Some("session") => cmd_session(&argv[1..]),
         Some("datasets") => cmd_datasets(&argv[1..]),
@@ -83,6 +87,7 @@ fn print_help() {
            ksens      k-sensitivity sweep (paper §3.2)\n\
            mislabel   mislabel-detection experiment (paper Fig. 5)\n\
            serve      concurrent valuation server (NDJSON on stdio or --listen TCP)\n\
+           metrics    telemetry snapshot from a running server (Prometheus text)\n\
            mutate     live training-set edits (add/remove/relabel) with exact repairs\n\
            session    inspect a session snapshot file\n\
            datasets   list the dataset registry (paper Table 1)\n\
@@ -102,6 +107,7 @@ fn usage_for(name: &str) -> Option<String> {
         "ksens" => Some(ksens_cmd().usage()),
         "mislabel" => Some(mislabel_cmd().usage()),
         "serve" => Some(serve_cmd().usage()),
+        "metrics" => Some(metrics_cmd().usage()),
         "mutate" => Some(mutate_cmd().usage()),
         "session" => Some(session_cmd().usage()),
         "datasets" => Some("datasets — list the dataset registry (no options)\n".to_string()),
@@ -502,6 +508,20 @@ fn serve_cmd() -> Command {
          by --max-resident and --autosave)",
         "",
     )
+    .opt(
+        "obs",
+        "metrics collection (DESIGN.md §14): on = counters/histograms/events \
+         behind the `metrics` verb and `stiknn metrics`; off = every hook is a \
+         no-op and `metrics` reports disabled",
+        "on",
+    )
+    .opt(
+        "slow-ms",
+        "log commands slower than MS milliseconds to stderr as structured \
+         slow-query events, counted in server.slow_queries ('' = off; 0 logs \
+         every command)",
+        "",
+    )
     .opt("dataset", "training dataset name (see `stiknn datasets`) or csv:PATH", "circle")
     .opt("n-train", "training points (0 = registry default)", "0")
     .opt(
@@ -613,6 +633,16 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         autosave_secs == 0 || state_dir.is_some(),
         "--autosave needs --state-dir (checkpoints are written there)"
     );
+    let obs_on = match args.get_or("obs", "on").as_str() {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("--obs must be on or off, got '{other}'"),
+    };
+    let slow_ms_raw = args.get_or("slow-ms", "");
+    let slow_ms: Option<u64> = (!slow_ms_raw.is_empty())
+        .then(|| slow_ms_raw.parse())
+        .transpose()
+        .map_err(|_| anyhow::anyhow!("--slow-ms expects milliseconds, got '{slow_ms_raw}'"))?;
 
     let mut registry = SessionRegistry::new(
         TrainData::from_dataset(&ds),
@@ -625,6 +655,10 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     if let Some(id) = shard {
         registry = registry.with_shard(id);
     }
+    if obs_on {
+        registry = registry.with_obs(ObsHandle::enabled("server"));
+    }
+    registry = registry.with_slow_ms(slow_ms);
     let registry = Arc::new(registry);
     // The default session: fresh, or restored with the CLI-derived config
     // (exactly the old single-session `--restore` semantics — mismatched
@@ -688,6 +722,97 @@ fn parse_shard_of(s: &str) -> anyhow::Result<server::ShardIdentity> {
         .parse()
         .map_err(|_| anyhow::anyhow!("--shard-of group size '{n}' is not a number"))?;
     server::ShardIdentity::new(j, n)
+}
+
+fn metrics_cmd() -> Command {
+    Command::new(
+        "metrics",
+        "fetch a telemetry snapshot from a running `stiknn serve --listen` server \
+         over NDJSON and render it as Prometheus-style text (DESIGN.md §14)",
+    )
+    .req("connect", "server address HOST:PORT (printed on the serve banner)")
+    .opt(
+        "session",
+        "fetch the named session's snapshot instead of the process-wide one",
+        "",
+    )
+    .opt(
+        "metric",
+        "print one metric's value by exact name instead of a full snapshot",
+        "",
+    )
+    .flag("json", "print the raw JSON snapshot instead of Prometheus text")
+}
+
+fn cmd_metrics(argv: &[String]) -> anyhow::Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let cmd = metrics_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let addr = args.require::<String>("connect")?;
+    let session = args.get_or("session", "");
+    let metric = args.get_or("metric", "");
+
+    let stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut round = |req: Json| -> anyhow::Result<Json> {
+        writeln!(writer, "{req}")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.trim().is_empty(), "server closed the connection");
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad server response: {e}"))
+    };
+    let fail_of = |resp: &Json, what: &str| {
+        anyhow::anyhow!(
+            "{}",
+            resp.get("error")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{what} failed"))
+        )
+    };
+
+    if !session.is_empty() {
+        // Session scope: point the connection at the session first, then
+        // ask without "scope" so protocol-level dispatch answers.
+        let r = round(Json::obj(vec![
+            ("cmd", Json::str("use")),
+            ("name", Json::str(session.as_str())),
+        ]))?;
+        if r.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(fail_of(&r, "use"));
+        }
+    }
+    let mut fields = vec![("cmd", Json::str("metrics"))];
+    if session.is_empty() {
+        fields.push(("scope", Json::str("process")));
+    }
+    if !metric.is_empty() {
+        fields.push(("metric", Json::str(metric.as_str())));
+    }
+    let resp = round(Json::obj(fields))?;
+    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+        return Err(fail_of(&resp, "metrics"));
+    }
+    if !metric.is_empty() {
+        // Single-metric form: the bare value (counter/gauge number, or a
+        // histogram object) — handy for scripts either way.
+        println!("{}", resp.get("value").cloned().unwrap_or(Json::Null));
+        return Ok(());
+    }
+    let snap = resp.get("metrics").cloned().unwrap_or(Json::Null);
+    if args.flag("json") {
+        println!("{snap}");
+    } else {
+        print!("{}", prometheus_text(&snap));
+    }
+    Ok(())
 }
 
 fn mutate_cmd() -> Command {

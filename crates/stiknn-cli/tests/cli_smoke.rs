@@ -31,8 +31,8 @@ fn help_lists_subcommands() {
     let (stdout, _, ok) = run(&["--help"]);
     assert!(ok);
     for sub in [
-        "value", "values", "analyze", "ksens", "mislabel", "serve", "mutate", "session",
-        "datasets", "artifacts",
+        "value", "values", "analyze", "ksens", "mislabel", "serve", "metrics", "mutate",
+        "session", "datasets", "artifacts",
     ] {
         assert!(stdout.contains(sub), "help missing {sub}: {stdout}");
     }
@@ -86,6 +86,7 @@ fn help_serve_documents_the_session_options() {
     for opt in [
         "NDJSON", "--restore", "--parallel-min", "--metric", "--engine", "--retain-rows",
         "--mutable", "--listen", "--session", "--max-resident", "--autosave", "--state-dir",
+        "--obs", "--slow-ms",
     ] {
         assert!(stdout.contains(opt), "help serve missing {opt}: {stdout}");
     }
@@ -816,6 +817,180 @@ fn serve_listen_accepts_concurrent_clients_and_survives_bad_ones() {
     drop(a);
     let r = b.send(r#"{"cmd":"ping"}"#);
     assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+
+    child.kill().expect("kill serve");
+    let _ = child.wait();
+}
+
+#[test]
+fn serve_stdio_metrics_verb_snapshot_lookup_and_disabled_answers() {
+    use std::io::Write;
+    use stiknn::util::json::Json;
+
+    // obs on (the default) with every command slow-logged
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--slow-ms", "0",
+        ])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --slow-ms 0");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(stdin, r#"{{"cmd":"ingest","x":[0.1,0.2,1.0,-0.3],"y":[0,1]}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"metrics"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"metrics","metric":"session.ingest_points"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"metrics","metric":"no.such.metric"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let rs: Vec<Json> = stdout.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(rs.len(), 5, "{stdout}");
+    // full session-scope snapshot: enabled, with the ingest counted
+    assert_eq!(rs[1].get("ok").unwrap().as_bool(), Some(true), "{}", rs[1]);
+    assert_eq!(rs[1].get("scope").unwrap().as_str(), Some("session"), "{}", rs[1]);
+    assert_eq!(rs[1].get("enabled").unwrap().as_bool(), Some(true), "{}", rs[1]);
+    let counters = rs[1].get("metrics").unwrap().get("counters").unwrap();
+    assert_eq!(
+        counters.get("session.ingest_batches").unwrap().as_usize(),
+        Some(1),
+        "{}",
+        rs[1]
+    );
+    // single-metric lookup answers with just that value
+    assert_eq!(rs[2].get("ok").unwrap().as_bool(), Some(true), "{}", rs[2]);
+    assert_eq!(rs[2].get("value").unwrap().as_usize(), Some(2), "{}", rs[2]);
+    // unknown names answer cleanly
+    assert_eq!(rs[3].get("ok").unwrap().as_bool(), Some(false), "{}", rs[3]);
+    assert!(
+        rs[3].get("error").unwrap().as_str().unwrap().contains("unknown metric"),
+        "{}",
+        rs[3]
+    );
+    // --slow-ms 0 slow-logged the traffic on stderr
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("slow-query cmd=ingest"), "{stderr}");
+    assert!(stderr.contains("session=default"), "{stderr}");
+
+    // --obs off: snapshot answers with enabled=false, lookups explain
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--obs", "off",
+        ])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --obs off");
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(stdin, r#"{{"cmd":"metrics"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"metrics","metric":"session.ingest_points"}}"#).unwrap();
+        writeln!(stdin, r#"{{"cmd":"shutdown"}}"#).unwrap();
+    }
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let rs: Vec<Json> = stdout.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(rs.len(), 3, "{stdout}");
+    assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(true), "{}", rs[0]);
+    assert_eq!(rs[0].get("enabled").unwrap().as_bool(), Some(false), "{}", rs[0]);
+    assert!(matches!(rs[0].get("metrics"), Some(Json::Null)), "{}", rs[0]);
+    assert_eq!(rs[1].get("ok").unwrap().as_bool(), Some(false), "{}", rs[1]);
+    assert!(
+        rs[1].get("error").unwrap().as_str().unwrap().contains("disabled"),
+        "{}",
+        rs[1]
+    );
+}
+
+#[test]
+fn serve_listen_metrics_process_scope_and_metrics_cli() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+    use stiknn::util::json::Json;
+
+    let mut child = Command::new(bin())
+        .args([
+            "serve", "--dataset", "moon", "--n-train", "30", "--k", "3",
+            "--listen", "127.0.0.1:0", "--slow-ms", "0",
+        ])
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .spawn()
+        .expect("spawn stiknn serve --listen");
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        if stderr.read_line(&mut line).unwrap() == 0 {
+            let _ = child.kill();
+            panic!("serve exited before reporting a listen address");
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+
+    // raw protocol: process-wide scope over TCP
+    let writer = TcpStream::connect(&addr).expect("connect");
+    writer.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(writer.try_clone().unwrap());
+    let mut writer = writer;
+    let mut send = |line: &str| -> Json {
+        writeln!(writer, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}"))
+    };
+    let r = send(r#"{"cmd":"ingest","x":[0.1,0.2,1.0,-0.3],"y":[0,1]}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let r = send(r#"{"cmd":"metrics","scope":"process"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("scope").unwrap().as_str(), Some("process"), "{r}");
+    assert_eq!(r.get("enabled").unwrap().as_bool(), Some(true), "{r}");
+    assert!(!r.get("sessions").unwrap().as_arr().unwrap().is_empty(), "{r}");
+    let commands = r
+        .get("metrics").unwrap()
+        .get("counters").unwrap()
+        .get("server.commands").unwrap()
+        .as_usize()
+        .unwrap();
+    assert!(commands >= 2, "{r}");
+
+    // the `stiknn metrics` CLI scrapes the same server as Prometheus text …
+    let (prom, stderr_cli, ok) = run(&["metrics", "--connect", &addr]);
+    assert!(ok, "stderr: {stderr_cli}");
+    assert!(prom.contains("# TYPE stiknn_server_commands counter"), "{prom}");
+    assert!(prom.contains("stiknn_server_cmd_ingest_ns_count"), "{prom}");
+    // … or as the raw JSON snapshot …
+    let (json_out, _, ok) = run(&["metrics", "--connect", &addr, "--json"]);
+    assert!(ok);
+    let snap = Json::parse(json_out.trim()).expect("valid snapshot json");
+    assert!(snap.get("counters").is_some(), "{json_out}");
+    // … or a single metric, session-scoped
+    let (one, _, ok) = run(&[
+        "metrics", "--connect", &addr, "--session", "default",
+        "--metric", "session.ingest_points",
+    ]);
+    assert!(ok);
+    assert_eq!(one.trim(), "2", "{one}");
+    // unknown names fail with the server's explanation
+    let (_, stderr_cli, ok) = run(&["metrics", "--connect", &addr, "--metric", "no.such"]);
+    assert!(!ok);
+    assert!(stderr_cli.contains("unknown metric"), "{stderr_cli}");
 
     child.kill().expect("kill serve");
     let _ = child.wait();

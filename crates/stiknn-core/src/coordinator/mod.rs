@@ -35,7 +35,9 @@
 //! * [`job`]     — job/result types, sharding and band plans
 //! * [`merge`]   — deterministic partial reduction / weight bookkeeping
 //! * [`pipeline`] — the orchestrator wiring it all together
-//! * [`progress`] — atomic counters / throughput metrics
+//! * [`progress`] — per-job counters over the [`crate::obs`] primitives
+//!   (prep/sweep phase split, utilization), rolling up into a metrics
+//!   registry when one is attached (DESIGN.md §14)
 //! * [`repair`]  — delta-repair chunk fan-out
 
 pub mod job;
@@ -46,5 +48,8 @@ pub mod progress;
 pub mod repair;
 
 pub use job::{Assembly, ValuationJob, ValuationResult, ValuesResult};
-pub use pipeline::{ingest_banded, ingest_values, run_job, run_job_with_engine, run_values_job};
+pub use pipeline::{
+    ingest_banded, ingest_banded_with, ingest_values, ingest_values_with, run_job,
+    run_job_with_engine, run_values_job,
+};
 pub use repair::{repair_rows, RepairedRows};

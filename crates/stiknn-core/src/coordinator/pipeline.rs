@@ -227,6 +227,33 @@ pub fn ingest_banded(
     job: &ValuationJob,
     acc: &mut Matrix,
 ) -> Result<f64> {
+    ingest_banded_with(
+        train_x,
+        train_y,
+        d,
+        test_x,
+        test_y,
+        job,
+        acc,
+        &Progress::new(),
+    )
+}
+
+/// [`ingest_banded`] with a caller-owned [`Progress`] — the session
+/// layer passes `Progress::with_obs(...)` here so batch ingests roll up
+/// into its metrics registry (DESIGN.md §14) without changing a single
+/// accumulated bit.
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_banded_with(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    acc: &mut Matrix,
+    progress: &Progress,
+) -> Result<f64> {
     let n = train_y.len();
     anyhow::ensure!(
         acc.rows() == n && acc.cols() == n,
@@ -249,9 +276,8 @@ pub fn ingest_banded(
         test_x.len(),
         test_y.len()
     );
-    let progress = Progress::new();
     let (weight, _blocks) =
-        banded_accumulate(train_x, train_y, d, test_x, test_y, job, acc, &progress)?;
+        banded_accumulate(train_x, train_y, d, test_x, test_y, job, acc, progress)?;
     Ok(weight)
 }
 
@@ -270,6 +296,7 @@ fn banded_accumulate(
     acc: &mut Matrix,
     progress: &Progress,
 ) -> Result<(f64, usize)> {
+    let wall = std::time::Instant::now();
     let params = StiParams {
         k: job.k,
         metric: job.metric,
@@ -346,11 +373,14 @@ fn banded_accumulate(
                 };
                 let rows = slice;
                 while let Some(batch) = q.recv() {
+                    let t0 = std::time::Instant::now();
                     sweep_band(&batch, train_y, r_lo, r_hi, rows);
+                    progress.record_sweep(t0.elapsed().as_nanos() as u64);
                 }
             });
         }
     });
+    progress.record_wall(job.workers, wall.elapsed().as_nanos() as u64);
 
     let weight = merger.into_inner().unwrap().finalize();
     Ok((weight, n_blocks))
@@ -381,6 +411,31 @@ pub fn ingest_values(
     job: &ValuationJob,
     vv: &mut ValueVector,
 ) -> Result<f64> {
+    ingest_values_with(
+        train_x,
+        train_y,
+        d,
+        test_x,
+        test_y,
+        job,
+        vv,
+        &Progress::new(),
+    )
+}
+
+/// [`ingest_values`] with a caller-owned [`Progress`] — the obs twin of
+/// [`ingest_banded_with`] for the implicit engine.
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_values_with(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    job: &ValuationJob,
+    vv: &mut ValueVector,
+    progress: &Progress,
+) -> Result<f64> {
     let n = train_y.len();
     anyhow::ensure!(
         vv.n() == n,
@@ -399,9 +454,8 @@ pub fn ingest_values(
         test_x.len(),
         test_y.len()
     );
-    let progress = Progress::new();
     let (weight, _blocks) =
-        values_pipeline(train_x, train_y, d, test_x, test_y, job, vv, &progress)?;
+        values_pipeline(train_x, train_y, d, test_x, test_y, job, vv, progress)?;
     Ok(weight)
 }
 
@@ -418,6 +472,7 @@ fn values_pipeline(
     vv: &mut ValueVector,
     progress: &Progress,
 ) -> Result<(f64, usize)> {
+    let wall = std::time::Instant::now();
     let params = StiParams {
         k: job.k,
         metric: job.metric,
@@ -474,11 +529,14 @@ fn values_pipeline(
                 };
                 let mut scratch = ValuesScratch::new();
                 while let Some(batch) = q.recv() {
+                    let t0 = std::time::Instant::now();
                     sweep_values(&batch, train_y, sweeper_vv, &mut scratch);
+                    progress.record_sweep(t0.elapsed().as_nanos() as u64);
                 }
             });
         }
     });
+    progress.record_wall(job.workers, wall.elapsed().as_nanos() as u64);
 
     let weight = merger.into_inner().unwrap().finalize();
     Ok((weight, n_blocks))

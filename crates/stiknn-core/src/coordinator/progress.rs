@@ -1,38 +1,129 @@
-//! Pipeline metrics: atomic counters sampled by the orchestrator, giving
-//! throughput (test points/s) and per-phase accounting without locks on
-//! the hot path.
+//! Pipeline progress: per-job counters built on the obs primitives.
+//!
+//! Since DESIGN.md §14 there is ONE atomic-counter vocabulary in the
+//! workspace — [`crate::obs`] — and this module is a thin per-job view
+//! over it: the fields ARE [`obs::Counter`]s, and a `Progress` built
+//! with [`Progress::with_obs`] additionally rolls every record up into
+//! the attached registry under the `coord.*` names (blocks, points,
+//! busy/wall nanoseconds, and the prep-vs-sweep phase histograms).
+//! Workers only ever touch pre-resolved handles, so the hot path stays
+//! relaxed atomic adds whether or not a registry is attached.
+//!
+//! [`obs::Counter`]: crate::obs::Counter
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::obs::{Counter, Histogram, ObsHandle};
+use std::sync::Arc;
 use std::time::Instant;
 
-/// Shared progress state between workers and the orchestrator.
+/// Global roll-up handles, resolved once at job start so workers never
+/// touch the registry's name maps.
+struct Sinks {
+    blocks: Arc<Counter>,
+    points: Arc<Counter>,
+    busy_ns: Arc<Counter>,
+    wall_ns: Arc<Counter>,
+    worker_ns: Arc<Counter>,
+    prep_ns: Arc<Histogram>,
+    sweep_ns: Arc<Histogram>,
+}
+
+/// Shared progress state between workers and the orchestrator: Phase-1
+/// (prep) blocks/points/busy time, Phase-2 (sweep) busy time, and —
+/// when a registry is attached — the `coord.*` global metrics.
 #[derive(Default)]
 pub struct Progress {
-    blocks_done: AtomicUsize,
-    points_done: AtomicUsize,
-    /// Cumulative busy time across workers, nanoseconds.
-    busy_ns: AtomicU64,
+    blocks_done: Counter,
+    points_done: Counter,
+    prep_ns: Counter,
+    sweep_ns: Counter,
+    wall_ns: Counter,
+    worker_ns: Counter,
+    sinks: Option<Sinks>,
 }
 
 impl Progress {
+    /// Job-local progress with no global roll-up (the default for
+    /// one-shot jobs and for sessions with observability disabled).
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Record one finished block of `points` test points that took `ns`
-    /// busy-nanoseconds.
+    /// Progress that also rolls up into `obs`'s registry under the
+    /// `coord.*` metric names. A disabled handle behaves like
+    /// [`Progress::new`].
+    pub fn with_obs(obs: &ObsHandle) -> Self {
+        let sinks = obs.registry().map(|reg| Sinks {
+            blocks: reg.counter("coord.blocks"),
+            points: reg.counter("coord.points"),
+            busy_ns: reg.counter("coord.busy_ns"),
+            wall_ns: reg.counter("coord.wall_ns"),
+            worker_ns: reg.counter("coord.worker_ns"),
+            prep_ns: reg.histogram("coord.prep_ns"),
+            sweep_ns: reg.histogram("coord.sweep_ns"),
+        });
+        Progress {
+            sinks,
+            ..Self::default()
+        }
+    }
+
+    /// Record one finished Phase-1 block of `points` test points that
+    /// took `ns` busy-nanoseconds.
     pub fn record_block(&self, points: usize, ns: u64) {
-        self.blocks_done.fetch_add(1, Ordering::Relaxed);
-        self.points_done.fetch_add(points, Ordering::Relaxed);
-        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+        self.blocks_done.inc();
+        self.points_done.add(points as u64);
+        self.prep_ns.add(ns);
+        if let Some(s) = &self.sinks {
+            s.blocks.inc();
+            s.points.add(points as u64);
+            s.busy_ns.add(ns);
+            s.prep_ns.record_ns(ns);
+        }
+    }
+
+    /// Record one Phase-2 sweep (a matrix band or a value fold) of `ns`
+    /// busy-nanoseconds.
+    pub fn record_sweep(&self, ns: u64) {
+        self.sweep_ns.add(ns);
+        if let Some(s) = &self.sinks {
+            s.busy_ns.add(ns);
+            s.sweep_ns.record_ns(ns);
+        }
+    }
+
+    /// Record the job's wall time once, at orchestrator exit: `ns` of
+    /// wall clock with `workers` prep workers configured. Worker-time
+    /// (`wall × workers`) is what busy time divides by for utilization.
+    pub fn record_wall(&self, workers: usize, ns: u64) {
+        self.wall_ns.add(ns);
+        self.worker_ns.add(ns * workers as u64);
+        if let Some(s) = &self.sinks {
+            s.wall_ns.add(ns);
+            s.worker_ns.add(ns * workers as u64);
+        }
     }
 
     pub fn blocks(&self) -> usize {
-        self.blocks_done.load(Ordering::Relaxed)
+        self.blocks_done.get() as usize
     }
 
     pub fn points(&self) -> usize {
-        self.points_done.load(Ordering::Relaxed)
+        self.points_done.get() as usize
+    }
+
+    /// Cumulative Phase-1 busy time across workers, nanoseconds.
+    pub fn prep_ns(&self) -> u64 {
+        self.prep_ns.get()
+    }
+
+    /// Cumulative Phase-2 busy time across workers, nanoseconds.
+    pub fn sweep_ns(&self) -> u64 {
+        self.sweep_ns.get()
+    }
+
+    /// Total busy time across both phases, nanoseconds.
+    pub fn busy_ns(&self) -> u64 {
+        self.prep_ns() + self.sweep_ns()
     }
 
     /// Mean busy time per test point in nanoseconds (0 if none yet).
@@ -41,7 +132,18 @@ impl Progress {
         if pts == 0 {
             return 0.0;
         }
-        self.busy_ns.load(Ordering::Relaxed) as f64 / pts as f64
+        self.busy_ns() as f64 / pts as f64
+    }
+
+    /// Busy time over configured worker time: ~1.0 means the prep pool
+    /// never starved, ~0 means workers mostly idled. 0 before
+    /// [`Progress::record_wall`].
+    pub fn utilization(&self) -> f64 {
+        let denom = self.worker_ns.get();
+        if denom == 0 {
+            return 0.0;
+        }
+        self.busy_ns() as f64 / denom as f64
     }
 }
 
@@ -103,6 +205,47 @@ mod tests {
         let p = Progress::new();
         assert_eq!(p.ns_per_point(), 0.0);
         assert_eq!(p.points(), 0);
+        assert_eq!(p.utilization(), 0.0);
+    }
+
+    #[test]
+    fn sweep_and_wall_fold_into_busy_and_utilization() {
+        let p = Progress::new();
+        p.record_block(4, 600);
+        p.record_sweep(400);
+        assert_eq!(p.prep_ns(), 600);
+        assert_eq!(p.sweep_ns(), 400);
+        assert_eq!(p.busy_ns(), 1000);
+        p.record_wall(2, 1000); // 2 workers × 1000ns wall = 2000ns capacity
+        assert!((p.utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn with_obs_rolls_up_into_the_registry() {
+        let obs = ObsHandle::enabled("coord-test");
+        let p = Progress::with_obs(&obs);
+        p.record_block(8, 1_500);
+        p.record_sweep(2_500);
+        p.record_wall(3, 10_000);
+        let reg = obs.registry().unwrap();
+        assert_eq!(reg.counter("coord.blocks").get(), 1);
+        assert_eq!(reg.counter("coord.points").get(), 8);
+        assert_eq!(reg.counter("coord.busy_ns").get(), 4_000);
+        assert_eq!(reg.counter("coord.wall_ns").get(), 10_000);
+        assert_eq!(reg.counter("coord.worker_ns").get(), 30_000);
+        assert_eq!(reg.histogram("coord.prep_ns").count(), 1);
+        assert_eq!(reg.histogram("coord.sweep_ns").count(), 1);
+        // The job-local view is unaffected by the roll-up.
+        assert_eq!(p.blocks(), 1);
+        assert_eq!(p.busy_ns(), 4_000);
+    }
+
+    #[test]
+    fn disabled_obs_behaves_like_plain_progress() {
+        let p = Progress::with_obs(&ObsHandle::disabled());
+        p.record_block(2, 100);
+        assert_eq!(p.blocks(), 1);
+        assert_eq!(p.points(), 2);
     }
 
     #[test]

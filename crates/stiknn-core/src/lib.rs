@@ -6,8 +6,10 @@
 //! ([`knn`]), dataset generators and loaders ([`data`]), the analysis
 //! suite ([`analysis`], §3.2/§4), the in-process parallel coordinator
 //! ([`coordinator`], §7), the AOT artifact runtime ([`runtime`], behind
-//! the `xla` feature), and the report/bench utilities shared by every
-//! layer above.
+//! the `xla` feature), the unified observability layer ([`obs`], §14:
+//! atomic counters/gauges, fixed-bucket latency histograms, and a
+//! bounded event ring behind a no-op-when-disabled `ObsHandle`), and
+//! the report/bench utilities shared by every layer above.
 //!
 //! **Layering contract (CI-enforced per crate):** `stiknn-core` depends
 //! on NO other workspace crate. The session layer (`stiknn-session`),
@@ -26,6 +28,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod data;
 pub mod knn;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod shapley;

@@ -1,0 +1,671 @@
+//! `stiknn::obs` — unified runtime telemetry (DESIGN.md §14).
+//!
+//! One vocabulary for every layer's metrics: lock-free atomic
+//! [`Counter`]s and [`Gauge`]s, fixed-bucket latency [`Histogram`]s, and
+//! a bounded structured [`Event`] ring, all owned by a named
+//! [`MetricsRegistry`]. Layers never hold the registry directly — they
+//! hold an [`ObsHandle`], a cheap clone that degrades to a no-op when
+//! observability is disabled:
+//!
+//! * **disabled** (the default everywhere): every hook is a branch on
+//!   `None` — no clock read, no allocation, no atomic traffic. This is
+//!   the zero-overhead argument: the instrumented binary with obs off
+//!   executes the same loads/stores as an uninstrumented one, so
+//!   results are bit-identical by construction (`tests/obs_invariants.rs`
+//!   property-tests this end to end).
+//! * **enabled**: hot-path hooks are relaxed atomic adds; the only
+//!   locks live on the cold paths (metric registration — amortized by
+//!   cached `Arc` handles — event append, and snapshotting).
+//!
+//! Snapshots serialize deterministically (`BTreeMap` ordering) to the
+//! repo's own [`Json`], which is what the `metrics` protocol verb ships
+//! over NDJSON; [`prometheus_text`] renders any snapshot — local or
+//! fetched over the wire — as Prometheus-style text exposition for the
+//! `stiknn metrics` CLI.
+
+mod prometheus;
+
+pub use prometheus::prometheus_text;
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A monotone event count. All operations are relaxed: counters are
+/// statistics, never synchronization.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// A signed instantaneous level (e.g. active connections).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Relaxed);
+    }
+
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Number of finite histogram buckets; one implicit overflow bucket
+/// follows. Bucket `i` counts samples with `ns <= 1000 << i`, so the
+/// finite range spans 1µs .. ~8.4s in exact powers of two — wide enough
+/// for a lock acquisition and a full-session recompute to land in the
+/// same vocabulary.
+pub const HIST_BUCKETS: usize = 24;
+
+/// Upper bound (inclusive, nanoseconds) of finite bucket `i`.
+pub fn bucket_bound_ns(i: usize) -> u64 {
+    1_000u64 << i
+}
+
+/// A fixed-bucket latency histogram over nanoseconds. Recording is a
+/// handful of relaxed atomic adds — no locks, no allocation — so it is
+/// safe on every hot path. Quantiles are bucket-resolution estimates
+/// (reported as the bucket's upper bound), which is all a powers-of-two
+/// layout can promise and all operators need.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    overflow: AtomicU64,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            overflow: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        match Self::bucket_of(ns) {
+            Some(i) => self.buckets[i].fetch_add(1, Relaxed),
+            None => self.overflow.fetch_add(1, Relaxed),
+        };
+        self.count.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(ns, Relaxed);
+        self.max_ns.fetch_max(ns, Relaxed);
+    }
+
+    /// Index of the finite bucket for `ns`, or `None` for overflow.
+    fn bucket_of(ns: u64) -> Option<usize> {
+        if ns <= 1_000 {
+            return Some(0);
+        }
+        // Smallest i with 1000 << i >= ns, i.e. ceil(log2(ns / 1000)).
+        let i = 64 - ns.div_ceil(1_000).leading_zeros() as usize
+            - usize::from(ns.div_ceil(1_000).is_power_of_two());
+        (i < HIST_BUCKETS).then_some(i)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Relaxed)
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns() as f64 / c as f64
+    }
+
+    /// Bucket-resolution quantile estimate: the upper bound of the first
+    /// bucket whose cumulative count reaches `q·count` (the observed max
+    /// for the overflow bucket). 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Relaxed);
+            if cum >= target {
+                return bucket_bound_ns(i);
+            }
+        }
+        self.max_ns()
+    }
+
+    /// Per-bucket counts: the `HIST_BUCKETS` finite buckets followed by
+    /// the overflow bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
+        out.push(self.overflow.load(Relaxed));
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("sum_ns", Json::num(self.sum_ns() as f64)),
+            ("mean_ns", Json::num(self.mean_ns())),
+            ("p50_ns", Json::num(self.quantile_ns(0.50) as f64)),
+            ("p99_ns", Json::num(self.quantile_ns(0.99) as f64)),
+            ("max_ns", Json::num(self.max_ns() as f64)),
+            (
+                "buckets",
+                Json::arr(self.bucket_counts().into_iter().map(|c| Json::num(c as f64))),
+            ),
+        ])
+    }
+}
+
+/// Capacity of the structured event ring: old events are dropped (and
+/// counted) once this many are pending, so a flapping error can never
+/// grow memory or a snapshot without bound.
+pub const EVENT_RING_CAP: usize = 256;
+
+/// One structured trace event: a kind, key/value context fields, and
+/// when it happened relative to registry creation.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub seq: u64,
+    pub elapsed_ms: u64,
+    pub kind: String,
+    pub fields: Vec<(String, String)>,
+}
+
+impl Event {
+    fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("elapsed_ms", Json::num(self.elapsed_ms as f64)),
+            ("kind", Json::str(self.kind.clone())),
+        ];
+        let ctx: BTreeMap<String, Json> = self
+            .fields
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+            .collect();
+        fields.push(("fields", Json::Obj(ctx)));
+        Json::obj(fields)
+    }
+}
+
+struct Ring {
+    next_seq: u64,
+    dropped: u64,
+    buf: VecDeque<Event>,
+}
+
+/// A named family of metrics. Registration (name → metric) takes a
+/// short-lived lock; the returned `Arc` handles are meant to be cached
+/// by hot loops so steady-state recording never touches the maps.
+pub struct MetricsRegistry {
+    name: String,
+    start: Instant,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    ring: Mutex<Ring>,
+}
+
+impl MetricsRegistry {
+    pub fn new(name: &str) -> Arc<Self> {
+        Arc::new(MetricsRegistry {
+            name: name.to_string(),
+            start: Instant::now(),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+            ring: Mutex::new(Ring {
+                next_seq: 0,
+                dropped: 0,
+                buf: VecDeque::new(),
+            }),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Get-or-create a counter by name.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        map.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Append a structured event, evicting the oldest past
+    /// [`EVENT_RING_CAP`].
+    pub fn event(&self, kind: &str, fields: &[(&str, String)]) {
+        let elapsed_ms = self.start.elapsed().as_millis().min(u64::MAX as u128) as u64;
+        let mut ring = self.ring.lock().unwrap();
+        let seq = ring.next_seq;
+        ring.next_seq += 1;
+        if ring.buf.len() == EVENT_RING_CAP {
+            ring.buf.pop_front();
+            ring.dropped += 1;
+        }
+        ring.buf.push_back(Event {
+            seq,
+            elapsed_ms,
+            kind: kind.to_string(),
+            fields: fields
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        });
+    }
+
+    /// The buffered events, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        self.ring.lock().unwrap().buf.iter().cloned().collect()
+    }
+
+    /// A single metric's current value by name, if it exists (counters,
+    /// then gauges, then histograms — names are expected to be unique
+    /// across kinds by convention).
+    pub fn lookup(&self, name: &str) -> Option<Json> {
+        if let Some(c) = self.counters.lock().unwrap().get(name) {
+            return Some(Json::num(c.get() as f64));
+        }
+        if let Some(g) = self.gauges.lock().unwrap().get(name) {
+            return Some(Json::num(g.get() as f64));
+        }
+        if let Some(h) = self.histograms.lock().unwrap().get(name) {
+            return Some(h.to_json());
+        }
+        None
+    }
+
+    /// The full registry state as deterministic JSON — the payload of
+    /// the `metrics` protocol verb and the input to [`prometheus_text`].
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(v.get() as f64)))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        let (events, dropped) = {
+            let ring = self.ring.lock().unwrap();
+            (
+                Json::arr(ring.buf.iter().map(|e| e.to_json())),
+                ring.dropped,
+            )
+        };
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "uptime_ms",
+                Json::num(self.start.elapsed().as_millis() as f64),
+            ),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+            ("events", events),
+            ("events_dropped", Json::num(dropped as f64)),
+        ])
+    }
+}
+
+/// The handle every layer holds: either a live registry or nothing.
+/// Cloning is a pointer copy. Every recording method is a no-op when
+/// disabled — no clock reads, no allocation, no atomics — which is what
+/// makes default-off instrumentation free.
+#[derive(Clone, Default)]
+pub struct ObsHandle {
+    reg: Option<Arc<MetricsRegistry>>,
+}
+
+impl ObsHandle {
+    /// The no-op handle (also `Default`).
+    pub fn disabled() -> Self {
+        ObsHandle { reg: None }
+    }
+
+    /// A handle over a fresh registry with the given name.
+    pub fn enabled(name: &str) -> Self {
+        ObsHandle {
+            reg: Some(MetricsRegistry::new(name)),
+        }
+    }
+
+    /// A handle sharing an existing registry.
+    pub fn with_registry(reg: Arc<MetricsRegistry>) -> Self {
+        ObsHandle { reg: Some(reg) }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.reg.is_some()
+    }
+
+    pub fn registry(&self) -> Option<&Arc<MetricsRegistry>> {
+        self.reg.as_ref()
+    }
+
+    pub fn inc(&self, name: &str) {
+        if let Some(reg) = &self.reg {
+            reg.counter(name).inc();
+        }
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        if let Some(reg) = &self.reg {
+            reg.counter(name).add(n);
+        }
+    }
+
+    pub fn gauge_add(&self, name: &str, delta: i64) {
+        if let Some(reg) = &self.reg {
+            reg.gauge(name).add(delta);
+        }
+    }
+
+    pub fn observe_ns(&self, name: &str, ns: u64) {
+        if let Some(reg) = &self.reg {
+            reg.histogram(name).record_ns(ns);
+        }
+    }
+
+    pub fn event(&self, kind: &str, fields: &[(&str, String)]) {
+        if let Some(reg) = &self.reg {
+            reg.event(kind, fields);
+        }
+    }
+
+    /// Cached-handle accessors for hot loops: resolve once, record many.
+    pub fn counter(&self, name: &str) -> Option<Arc<Counter>> {
+        self.reg.as_ref().map(|r| r.counter(name))
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<Arc<Histogram>> {
+        self.reg.as_ref().map(|r| r.histogram(name))
+    }
+
+    /// Start timing toward histogram `name`. Disabled handles return an
+    /// inert timer without reading the clock.
+    pub fn timer(&self, name: &str) -> ObsTimer {
+        ObsTimer {
+            inner: self
+                .reg
+                .as_ref()
+                .map(|r| (Instant::now(), name.to_string(), r.clone())),
+        }
+    }
+
+    /// The registry snapshot, or `Json::Null` when disabled.
+    pub fn snapshot_json(&self) -> Json {
+        match &self.reg {
+            Some(reg) => reg.snapshot(),
+            None => Json::Null,
+        }
+    }
+}
+
+/// A scope timer from [`ObsHandle::timer`]: records the elapsed time
+/// into its histogram when dropped (or explicitly via [`ObsTimer::stop`],
+/// which also reports the measured nanoseconds).
+pub struct ObsTimer {
+    inner: Option<(Instant, String, Arc<MetricsRegistry>)>,
+}
+
+impl ObsTimer {
+    /// Record now and return the elapsed nanoseconds (0 when disabled).
+    pub fn stop(mut self) -> u64 {
+        self.finish()
+    }
+
+    /// Abandon the measurement without recording anything.
+    pub fn discard(mut self) {
+        self.inner = None;
+    }
+
+    fn finish(&mut self) -> u64 {
+        match self.inner.take() {
+            Some((t0, name, reg)) => {
+                let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                reg.histogram(&name).record_ns(ns);
+                ns
+            }
+            None => 0,
+        }
+    }
+}
+
+impl Drop for ObsTimer {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate_across_threads() {
+        let reg = MetricsRegistry::new("test");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let reg = &reg;
+                s.spawn(move || {
+                    let c = reg.counter("hits");
+                    let g = reg.gauge("level");
+                    for _ in 0..1000 {
+                        c.inc();
+                        g.add(1);
+                    }
+                    g.add(-1000);
+                });
+            }
+        });
+        assert_eq!(reg.counter("hits").get(), 4000);
+        assert_eq!(reg.gauge("level").get(), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_powers_of_two_microseconds() {
+        let h = Histogram::new();
+        h.record_ns(1); // bucket 0 (<= 1µs)
+        h.record_ns(1_000); // bucket 0 boundary
+        h.record_ns(1_001); // bucket 1
+        h.record_ns(2_000); // bucket 1 boundary
+        h.record_ns(2_001); // bucket 2
+        h.record_ns(u64::MAX); // overflow
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), HIST_BUCKETS + 1);
+        assert_eq!(counts[0], 2);
+        assert_eq!(counts[1], 2);
+        assert_eq!(counts[2], 1);
+        assert_eq!(counts[HIST_BUCKETS], 1);
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max_ns(), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_bucket_of_matches_bounds_exhaustively() {
+        for i in 0..HIST_BUCKETS {
+            let bound = bucket_bound_ns(i);
+            assert_eq!(Histogram::bucket_of(bound), Some(i), "at bound {bound}");
+            if i + 1 < HIST_BUCKETS {
+                assert_eq!(Histogram::bucket_of(bound + 1), Some(i + 1));
+            }
+        }
+        assert_eq!(Histogram::bucket_of(bucket_bound_ns(HIST_BUCKETS - 1) + 1), None);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_resolution() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record_ns(500); // bucket 0, bound 1µs
+        }
+        h.record_ns(1_000_000); // ~1ms
+        assert_eq!(h.quantile_ns(0.5), 1_000);
+        assert!(h.quantile_ns(1.0) >= 1_000_000);
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile_ns(0.99), 0);
+    }
+
+    #[test]
+    fn event_ring_is_bounded_and_counts_drops() {
+        let reg = MetricsRegistry::new("ring");
+        for i in 0..(EVENT_RING_CAP + 10) {
+            reg.event("tick", &[("i", i.to_string())]);
+        }
+        let events = reg.events();
+        assert_eq!(events.len(), EVENT_RING_CAP);
+        // Oldest 10 evicted: the ring starts at seq 10.
+        assert_eq!(events[0].seq, 10);
+        assert_eq!(events.last().unwrap().seq, (EVENT_RING_CAP + 9) as u64);
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap.get("events_dropped").unwrap().as_usize(),
+            Some(10)
+        );
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_json() {
+        let reg = MetricsRegistry::new("snap");
+        reg.counter("b").add(2);
+        reg.counter("a").inc();
+        reg.histogram("lat_ns").record_ns(5_000);
+        reg.gauge("active").set(3);
+        reg.event("boom", &[("why", "test".to_string())]);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("name").unwrap().as_str(), Some("snap"));
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("a").unwrap().as_usize(), Some(1));
+        assert_eq!(counters.get("b").unwrap().as_usize(), Some(2));
+        let hist = snap.get("histograms").unwrap().get("lat_ns").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_usize(), Some(1));
+        let text = snap.to_string();
+        // Round-trips through the parser, and map order is stable.
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+
+    #[test]
+    fn lookup_finds_each_kind_and_misses_cleanly() {
+        let reg = MetricsRegistry::new("lookup");
+        reg.counter("c").inc();
+        reg.gauge("g").set(-2);
+        reg.histogram("h").record_ns(10);
+        assert_eq!(reg.lookup("c").unwrap().as_usize(), Some(1));
+        assert_eq!(reg.lookup("g").unwrap().as_f64(), Some(-2.0));
+        assert!(reg.lookup("h").unwrap().get("count").is_some());
+        assert!(reg.lookup("nope").is_none());
+    }
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let obs = ObsHandle::disabled();
+        assert!(!obs.is_enabled());
+        obs.inc("x");
+        obs.observe_ns("y", 123);
+        obs.event("z", &[]);
+        let t = obs.timer("t");
+        assert_eq!(t.stop(), 0);
+        assert!(obs.counter("x").is_none());
+        assert!(matches!(obs.snapshot_json(), Json::Null));
+    }
+
+    #[test]
+    fn timer_records_on_stop_and_drop() {
+        let obs = ObsHandle::enabled("timers");
+        let ns = obs.timer("op_ns").stop();
+        assert!(ns > 0);
+        {
+            let _t = obs.timer("op_ns"); // records on drop
+        }
+        let h = obs.histogram("op_ns").unwrap();
+        assert_eq!(h.count(), 2);
+        let t = obs.timer("op_ns");
+        t.discard();
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn handles_share_one_registry() {
+        let obs = ObsHandle::enabled("shared");
+        let clone = obs.clone();
+        clone.inc("n");
+        obs.inc("n");
+        assert_eq!(obs.registry().unwrap().counter("n").get(), 2);
+    }
+}

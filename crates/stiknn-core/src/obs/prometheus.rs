@@ -1,0 +1,131 @@
+//! Prometheus-style text exposition for obs snapshots.
+//!
+//! Renders the JSON produced by [`MetricsRegistry::snapshot`] — whether
+//! taken locally or fetched over the NDJSON `metrics` verb — so the
+//! `stiknn metrics` CLI can scrape a running server without the server
+//! speaking HTTP. Names are prefixed `stiknn_` and sanitized to the
+//! Prometheus charset; histogram buckets keep their nanosecond `le`
+//! bounds (every histogram here is named `*_ns`, so the unit is in the
+//! name, as the exposition format expects).
+//!
+//! [`MetricsRegistry::snapshot`]: super::MetricsRegistry::snapshot
+
+use super::{bucket_bound_ns, HIST_BUCKETS};
+use crate::util::json::Json;
+
+/// Metric name → exposition name: `stiknn_` prefix, every character
+/// outside `[a-zA-Z0-9_]` folded to `_`.
+fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 7);
+    out.push_str("stiknn_");
+    for ch in name.chars() {
+        out.push(if ch.is_ascii_alphanumeric() || ch == '_' {
+            ch
+        } else {
+            '_'
+        });
+    }
+    out
+}
+
+fn num(j: &Json) -> String {
+    // Json renders integral values without a decimal point already.
+    j.to_string()
+}
+
+/// Render a snapshot (see module docs). `Json::Null` — a disabled
+/// handle's snapshot — renders as a single explanatory comment.
+pub fn prometheus_text(snapshot: &Json) -> String {
+    let mut out = String::new();
+    let Some(obj) = snapshot.as_obj() else {
+        out.push_str("# observability disabled (no metrics registry)\n");
+        return out;
+    };
+    if let Some(name) = obj.get("name").and_then(|j| j.as_str()) {
+        out.push_str(&format!("# stiknn metrics registry: {name}\n"));
+    }
+    if let Some(up) = obj.get("uptime_ms") {
+        out.push_str(&format!("# uptime_ms: {}\n", num(up)));
+    }
+    if let Some(counters) = obj.get("counters").and_then(|j| j.as_obj()) {
+        for (k, v) in counters {
+            let name = sanitize(k);
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", num(v)));
+        }
+    }
+    if let Some(gauges) = obj.get("gauges").and_then(|j| j.as_obj()) {
+        for (k, v) in gauges {
+            let name = sanitize(k);
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", num(v)));
+        }
+    }
+    if let Some(hists) = obj.get("histograms").and_then(|j| j.as_obj()) {
+        for (k, h) in hists {
+            let name = sanitize(k);
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let counts: Vec<u64> = h
+                .get("buckets")
+                .and_then(|b| b.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .map(|c| c.as_f64().unwrap_or(0.0) as u64)
+                        .collect()
+                })
+                .unwrap_or_default();
+            let mut cum = 0u64;
+            for (i, c) in counts.iter().enumerate() {
+                cum += c;
+                if i < HIST_BUCKETS {
+                    out.push_str(&format!(
+                        "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                        bucket_bound_ns(i)
+                    ));
+                } else {
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                }
+            }
+            if let Some(sum) = h.get("sum_ns") {
+                out.push_str(&format!("{name}_sum {}\n", num(sum)));
+            }
+            if let Some(count) = h.get("count") {
+                out.push_str(&format!("{name}_count {}\n", num(count)));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::MetricsRegistry;
+    use super::*;
+
+    #[test]
+    fn renders_counters_gauges_and_histograms() {
+        let reg = MetricsRegistry::new("prom");
+        reg.counter("server.commands").add(7);
+        reg.gauge("server.connections_active").set(2);
+        reg.histogram("cmd.query_ns").record_ns(1_500);
+        let text = prometheus_text(&reg.snapshot());
+        assert!(text.contains("# TYPE stiknn_server_commands counter"));
+        assert!(text.contains("stiknn_server_commands 7"));
+        assert!(text.contains("stiknn_server_connections_active 2"));
+        assert!(text.contains("# TYPE stiknn_cmd_query_ns histogram"));
+        // 1500ns lands in the 2µs bucket; cumulative counts reach 1.
+        assert!(text.contains("stiknn_cmd_query_ns_bucket{le=\"2000\"} 1"));
+        assert!(text.contains("stiknn_cmd_query_ns_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("stiknn_cmd_query_ns_sum 1500"));
+        assert!(text.contains("stiknn_cmd_query_ns_count 1"));
+    }
+
+    #[test]
+    fn null_snapshot_renders_disabled_comment() {
+        let text = prometheus_text(&Json::Null);
+        assert!(text.contains("disabled"));
+    }
+
+    #[test]
+    fn sanitizes_metric_names() {
+        assert_eq!(sanitize("a.b-c d"), "stiknn_a_b_c_d");
+    }
+}

@@ -1,6 +1,14 @@
 //! Wall-clock timing helpers used by the bench harness and the pipeline
 //! metrics.
+//!
+//! Since DESIGN.md §14 the [`Stopwatch`] is a thin recorder into the
+//! obs layer: build one with [`Stopwatch::recording`] and every lap
+//! also lands in the registry histogram `<prefix>.<lap>_ns`, so ad-hoc
+//! phase timings share the metrics vocabulary instead of living in a
+//! parallel one. `Stopwatch::new` keeps the old standalone behavior
+//! (a disabled handle records nothing).
 
+use crate::obs::ObsHandle;
 use std::time::{Duration, Instant};
 
 /// Measure the wall time of a closure, returning (result, elapsed).
@@ -15,6 +23,8 @@ pub struct Stopwatch {
     start: Instant,
     last: Instant,
     laps: Vec<(String, Duration)>,
+    obs: ObsHandle,
+    prefix: String,
 }
 
 impl Default for Stopwatch {
@@ -25,11 +35,19 @@ impl Default for Stopwatch {
 
 impl Stopwatch {
     pub fn new() -> Self {
+        Self::recording(ObsHandle::disabled(), "stopwatch")
+    }
+
+    /// A stopwatch whose laps also record into obs histograms named
+    /// `<prefix>.<lap>_ns` (no-op with a disabled handle).
+    pub fn recording(obs: ObsHandle, prefix: &str) -> Self {
         let now = Instant::now();
         Stopwatch {
             start: now,
             last: now,
             laps: Vec::new(),
+            obs,
+            prefix: prefix.to_string(),
         }
     }
 
@@ -38,6 +56,12 @@ impl Stopwatch {
         let now = Instant::now();
         let d = now - self.last;
         self.last = now;
+        if self.obs.is_enabled() {
+            self.obs.observe_ns(
+                &format!("{}.{name}_ns", self.prefix),
+                d.as_nanos().min(u64::MAX as u128) as u64,
+            );
+        }
         self.laps.push((name.to_string(), d));
         d
     }
@@ -85,6 +109,20 @@ mod tests {
         sw.lap("b");
         assert_eq!(sw.laps().len(), 2);
         assert!(sw.total() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn stopwatch_laps_record_into_obs() {
+        let obs = ObsHandle::enabled("sw");
+        let mut sw = Stopwatch::recording(obs.clone(), "phase");
+        sw.lap("prep");
+        sw.lap("prep");
+        sw.lap("sweep");
+        let reg = obs.registry().unwrap();
+        assert_eq!(reg.histogram("phase.prep_ns").count(), 2);
+        assert_eq!(reg.histogram("phase.sweep_ns").count(), 1);
+        // The in-memory lap log still works alongside the roll-up.
+        assert_eq!(sw.laps().len(), 3);
     }
 
     #[test]

@@ -13,5 +13,5 @@
 
 pub mod server;
 
-pub use stiknn_core::{analysis, coordinator, data, knn, shapley, util};
+pub use stiknn_core::{analysis, coordinator, data, knn, obs, shapley, util};
 pub use stiknn_session::{session, shard};

@@ -79,26 +79,96 @@ impl Connection {
     /// Execute one NDJSON command line → (response, end-connection?).
     /// Never panics on untrusted input; every failure is an
     /// `{"ok":false}` response and the connection keeps serving.
+    ///
+    /// With observability attached to the registry (DESIGN.md §14),
+    /// every command is counted (`server.commands` / `server.errors`)
+    /// and timed into a per-command histogram
+    /// (`server.cmd.<cmd>_ns`; unknown command names share one
+    /// `server.cmd.unknown_ns` bucket so clients cannot inflate metric
+    /// cardinality). With `serve --slow-ms N`, commands at or over the
+    /// threshold additionally log one structured stderr record.
     pub fn execute(&mut self, line: &str) -> (Json, bool) {
+        let slow_ms = self.registry.slow_ms();
+        let timed = self.registry.obs().is_enabled() || slow_ms.is_some();
+        let t0 = timed.then(std::time::Instant::now);
         let v = match Json::parse(line) {
             Ok(v) => v,
-            Err(e) => return (protocol::err(format!("bad json: {e}")), false),
+            Err(e) => {
+                let obs = self.registry.obs();
+                obs.inc("server.commands");
+                obs.inc("server.errors");
+                return (protocol::err(format!("bad json: {e}")), false);
+            }
         };
         let Some(cmd) = v.get("cmd").and_then(Json::as_str).map(str::to_string) else {
+            let obs = self.registry.obs();
+            obs.inc("server.commands");
+            obs.inc("server.errors");
             return (protocol::err("missing string field 'cmd'"), false);
         };
-        match cmd.as_str() {
+        let (response, shutdown) = self.dispatch(&cmd, &v);
+        let obs = self.registry.obs();
+        obs.inc("server.commands");
+        if response.get("ok").and_then(Json::as_bool) == Some(false) {
+            obs.inc("server.errors");
+        }
+        if let Some(t0) = t0 {
+            let ns = t0.elapsed().as_nanos() as u64;
+            let known = matches!(
+                cmd.as_str(),
+                "shutdown" | "open" | "use" | "close" | "list" | "shard" | "metrics"
+            ) || protocol::access_of(&cmd).is_some();
+            let label = if known { cmd.as_str() } else { "unknown" };
+            obs.observe_ns(&format!("server.cmd.{label}_ns"), ns);
+            if let Some(limit) = slow_ms {
+                let ms = ns / 1_000_000;
+                if ms >= limit {
+                    obs.inc("server.slow_queries");
+                    let session = self.current.as_deref().unwrap_or("-");
+                    let rev = response
+                        .get("rev")
+                        .and_then(Json::as_f64)
+                        .map_or_else(|| "-".to_string(), |r| format!("{r}"));
+                    obs.event(
+                        "slow_query",
+                        &[
+                            ("cmd", label.to_string()),
+                            ("session", session.to_string()),
+                            ("rev", rev.clone()),
+                            ("elapsed_ms", ms.to_string()),
+                        ],
+                    );
+                    eprintln!(
+                        "stiknn serve: slow-query cmd={label} session={session} \
+                         rev={rev} elapsed_ms={ms}"
+                    );
+                }
+            }
+        }
+        (response, shutdown)
+    }
+
+    /// Route one parsed command (the uninstrumented core of
+    /// [`Self::execute`]).
+    fn dispatch(&mut self, cmd: &str, v: &Json) -> (Json, bool) {
+        match cmd {
             "shutdown" => (
                 protocol::ok("shutdown", vec![("shutdown", Json::Bool(true))]),
                 true,
             ),
-            "open" => (self.do_open(&v), false),
-            "use" => (self.do_use(&v), false),
-            "close" => (self.do_close(&v), false),
+            "open" => (self.do_open(v), false),
+            "use" => (self.do_use(v), false),
+            "close" => (self.do_close(v), false),
             "list" => (self.do_list(), false),
             "shard" => (self.do_shard(), false),
-            _ => match protocol::access_of(&cmd) {
-                Some(access) => (self.route(&cmd, &v, access), false),
+            // Process-wide telemetry is a registry-level question; the
+            // per-session form (no "scope", or "scope":"session") routes
+            // to the current session like any read.
+            "metrics" if v.get("scope").and_then(Json::as_str) == Some("process") => {
+                (self.do_metrics_process(v), false)
+            }
+            _ => match protocol::access_of(cmd) {
+                Some(access) => (self.route(cmd, v, access), false),
                 None => (
                     protocol::err(format!(
                         "unknown command '{cmd}' \
@@ -223,6 +293,61 @@ impl Connection {
         protocol::ok("shard", fields)
     }
 
+    /// Process-wide telemetry (`{"cmd":"metrics","scope":"process"}`,
+    /// DESIGN.md §14): the server registry's full snapshot plus one
+    /// summary row per session — revision, tests, and `rev_lag` (writes
+    /// a crash right now would lose, i.e. live revision minus the last
+    /// checkpointed one). Optional `"metric":"name"` looks up a single
+    /// server-level metric instead.
+    fn do_metrics_process(&self, v: &Json) -> Json {
+        let obs = self.registry.obs();
+        if let Some(m) = v.get("metric") {
+            let Some(name) = m.as_str() else {
+                return protocol::err("'metric' must be a string name");
+            };
+            let Some(reg) = obs.registry() else {
+                return protocol::err(format!(
+                    "metrics are disabled on this server; '{name}' is not being \
+                     collected (serve with --obs on)"
+                ));
+            };
+            return match reg.lookup(name) {
+                Some(value) => protocol::ok(
+                    "metrics",
+                    vec![("metric", Json::str(name)), ("value", value)],
+                ),
+                None => protocol::err(format!("unknown metric '{name}'")),
+            };
+        }
+        let lags: std::collections::BTreeMap<String, u64> =
+            self.registry.revision_lag().into_iter().collect();
+        let infos = self.registry.list();
+        protocol::ok(
+            "metrics",
+            vec![
+                ("scope", Json::str("process")),
+                ("enabled", Json::Bool(obs.is_enabled())),
+                (
+                    "sessions",
+                    Json::arr(infos.iter().map(|i| {
+                        Json::obj(vec![
+                            ("name", Json::str(i.name.as_str())),
+                            ("resident", Json::Bool(i.resident)),
+                            ("dirty", Json::Bool(i.dirty)),
+                            ("tests", Json::num(i.tests as f64)),
+                            ("rev", Json::num(i.revision as f64)),
+                            (
+                                "rev_lag",
+                                Json::num(lags.get(&i.name).copied().unwrap_or(0) as f64),
+                            ),
+                        ])
+                    })),
+                ),
+                ("metrics", obs.snapshot_json()),
+            ],
+        )
+    }
+
     fn do_list(&self) -> Json {
         let infos = self.registry.list();
         protocol::ok(
@@ -343,13 +468,17 @@ pub fn listen(
         let stream = match stream {
             Ok(s) => s,
             Err(e) => {
-                eprintln!("stiknn serve: accept failed: {e}");
+                let obs = registry.obs();
+                obs.inc("server.accept_failed");
+                obs.event("accept_failed", &[("error", e.to_string())]);
+                eprintln!("stiknn serve: event=accept_failed error={e}");
                 continue;
             }
         };
         let registry = Arc::clone(&registry);
         let default_session = default_session.clone();
         std::thread::spawn(move || {
+            let obs = registry.obs().clone();
             let peer = stream
                 .peer_addr()
                 .map(|a| a.to_string())
@@ -357,16 +486,30 @@ pub fn listen(
             let reader = match stream.try_clone() {
                 Ok(s) => std::io::BufReader::new(s),
                 Err(e) => {
-                    eprintln!("stiknn serve: [{peer}] socket clone failed: {e}");
+                    obs.inc("server.clone_failed");
+                    obs.event(
+                        "clone_failed",
+                        &[("peer", peer.clone()), ("error", e.to_string())],
+                    );
+                    eprintln!("stiknn serve: event=clone_failed peer={peer} error={e}");
                     return;
                 }
             };
+            obs.inc("server.connections_opened");
+            obs.gauge_add("server.connections_active", 1);
             let mut conn = Connection::new(registry, default_session);
             if let Err(e) = serve_connection(&mut conn, reader, &stream) {
                 // a half-closed or reset client is business as usual for
                 // a server — log and move on, the registry is untouched
-                eprintln!("stiknn serve: [{peer}] connection ended: {e:#}");
+                obs.inc("server.conn_errors");
+                obs.event(
+                    "conn_ended",
+                    &[("peer", peer.clone()), ("error", format!("{e:#}"))],
+                );
+                eprintln!("stiknn serve: event=conn_ended peer={peer} error={e:#}");
             }
+            obs.gauge_add("server.connections_active", -1);
+            obs.inc("server.connections_closed");
         });
     }
     Ok(())

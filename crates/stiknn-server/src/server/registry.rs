@@ -44,13 +44,14 @@
 //! panicked mid-mutation) refuse all further commands and are never
 //! persisted — their in-memory state cannot be trusted.
 
+use crate::obs::ObsHandle;
 use crate::session::{store, Engine, SessionConfig, ValuationSession};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// The training set every fresh session in a registry is built over
 /// (mutable sessions diverge from it as they edit; their snapshots carry
@@ -165,6 +166,10 @@ struct Entry {
     /// `Some` while resident, `None` while spilled.
     slot: Option<Arc<Slot>>,
     config: SessionConfig,
+    /// The session's own metrics handle (DESIGN.md §14) — kept HERE so
+    /// its registry survives spill/reload cycles (the live session is
+    /// dropped on spill; its counters must not be).
+    obs: ObsHandle,
     /// Last snapshot written for this session (spill or autosave).
     snapshot: Option<PathBuf>,
     /// Session revision covered by that snapshot (dirtiness = live
@@ -193,6 +198,14 @@ pub struct SessionRegistry {
     train: TrainData,
     config: RegistryConfig,
     shard: Option<ShardIdentity>,
+    /// Server-wide telemetry (DESIGN.md §14): lock wait/hold, spill and
+    /// autosave accounting, command latency. Disabled unless attached
+    /// via [`Self::with_obs`] — every hook degrades to a no-op.
+    obs: ObsHandle,
+    /// Slow-query threshold in milliseconds (`serve --slow-ms N`):
+    /// commands taking `>= N` ms log a structured stderr record. `None`
+    /// = off; `Some(0)` logs every command (deterministic for tests).
+    slow_ms: Option<u64>,
     inner: Mutex<Inner>,
 }
 
@@ -210,11 +223,40 @@ impl SessionRegistry {
             train,
             config,
             shard: None,
+            obs: ObsHandle::disabled(),
+            slow_ms: None,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 clock: 0,
             }),
         })
+    }
+
+    /// Attach the server-wide metrics registry (DESIGN.md §14).
+    /// Builder-style, like [`Self::with_shard`]: set it before the
+    /// registry is shared across connection threads. Sessions opened
+    /// afterwards each get their OWN enabled handle (named after the
+    /// session), which answers the per-session `metrics` verb.
+    pub fn with_obs(mut self, obs: ObsHandle) -> Self {
+        self.obs = obs;
+        self
+    }
+
+    /// The server-wide metrics handle (disabled unless [`Self::with_obs`]
+    /// attached one).
+    pub fn obs(&self) -> &ObsHandle {
+        &self.obs
+    }
+
+    /// Set the slow-query threshold (`serve --slow-ms N`); `Some(0)`
+    /// logs every command.
+    pub fn with_slow_ms(mut self, slow_ms: Option<u64>) -> Self {
+        self.slow_ms = slow_ms;
+        self
+    }
+
+    pub fn slow_ms(&self) -> Option<u64> {
+        self.slow_ms
     }
 
     /// Stamp this registry with a shard identity (`serve --shard-of J/N`).
@@ -293,7 +335,7 @@ impl SessionRegistry {
             (None, Some(path)) => config_from_header(&store::read_header(path)?, self.config.base),
             (None, None) => self.config.base,
         };
-        let session = match snapshot {
+        let mut session = match snapshot {
             Some(path) if config.mutable => ValuationSession::restore_mutable(path, config)?,
             Some(path) => ValuationSession::restore(
                 path,
@@ -309,6 +351,14 @@ impl SessionRegistry {
                 config,
             )?,
         };
+        // With server-wide observability on, each session gets its own
+        // named handle — the per-session `metrics` verb answers from it.
+        let session_obs = if self.obs.is_enabled() {
+            ObsHandle::enabled(name)
+        } else {
+            ObsHandle::disabled()
+        };
+        session.set_obs(session_obs.clone());
         let stamp = inner.tick();
         let summary = summarize(&session);
         inner.map.insert(
@@ -319,6 +369,7 @@ impl SessionRegistry {
                     evicted: AtomicBool::new(false),
                 })),
                 config,
+                obs: session_obs,
                 snapshot: None,
                 saved_rev: summary.revision,
                 last_touch: stamp,
@@ -378,6 +429,7 @@ impl SessionRegistry {
             .clone()
             .expect("a spilled session always has a snapshot");
         let config = entry.config;
+        let session_obs = entry.obs.clone();
         let revision = entry.summary.revision;
         let mut session = if config.mutable {
             ValuationSession::restore_mutable(&path, config)
@@ -392,6 +444,10 @@ impl SessionRegistry {
         }
         .with_context(|| format!("reloading spilled session '{name}' from {}", path.display()))?;
         session.set_revision(revision);
+        // Re-attach the SAME per-session metrics handle: a spill/reload
+        // cycle must be invisible to the session's counters too.
+        session.set_obs(session_obs);
+        self.obs.inc("registry.reloads");
         let slot = Arc::new(Slot {
             lock: RwLock::new(session),
             evicted: AtomicBool::new(false),
@@ -459,10 +515,19 @@ impl SessionRegistry {
         if entry.snapshot.as_deref() != Some(path.as_path())
             || entry.saved_rev != session.revision()
         {
-            session
+            let bytes = session
                 .save(&path)
                 .with_context(|| format!("spilling session '{name}' to {}", path.display()))?;
+            self.obs.add("registry.spill_bytes", bytes);
         }
+        self.obs.inc("registry.spills");
+        self.obs.event(
+            "spill",
+            &[
+                ("session", name.to_string()),
+                ("rev", session.revision().to_string()),
+            ],
+        );
         entry.saved_rev = session.revision();
         entry.snapshot = Some(path);
         entry.summary = summarize(&session);
@@ -487,14 +552,25 @@ impl SessionRegistry {
         let mut f = Some(f);
         loop {
             let slot = self.acquire(name)?;
+            let t_wait = self.obs.is_enabled().then(Instant::now);
             let Ok(guard) = slot.lock.read() else {
                 bail!("{}", poisoned_msg(name));
             };
             if slot.evicted.load(Ordering::Acquire) {
                 continue; // raced a spill/close — re-route
             }
+            if let Some(t) = t_wait {
+                self.obs
+                    .observe_ns("registry.lock_wait_ns", t.elapsed().as_nanos() as u64);
+            }
+            let t_hold = self.obs.is_enabled().then(Instant::now);
             let f = f.take().expect("loop exits after the first call");
-            return Ok(f(&guard));
+            let out = f(&guard);
+            if let Some(t) = t_hold {
+                self.obs
+                    .observe_ns("registry.lock_hold_ns", t.elapsed().as_nanos() as u64);
+            }
+            return Ok(out);
         }
     }
 
@@ -508,14 +584,25 @@ impl SessionRegistry {
         let mut f = Some(f);
         loop {
             let slot = self.acquire(name)?;
+            let t_wait = self.obs.is_enabled().then(Instant::now);
             let Ok(mut guard) = slot.lock.write() else {
                 bail!("{}", poisoned_msg(name));
             };
             if slot.evicted.load(Ordering::Acquire) {
                 continue;
             }
+            if let Some(t) = t_wait {
+                self.obs
+                    .observe_ns("registry.lock_wait_ns", t.elapsed().as_nanos() as u64);
+            }
+            let t_hold = self.obs.is_enabled().then(Instant::now);
             let f = f.take().expect("loop exits after the first call");
-            return Ok(f(&mut guard));
+            let out = f(&mut guard);
+            if let Some(t) = t_hold {
+                self.obs
+                    .observe_ns("registry.lock_hold_ns", t.elapsed().as_nanos() as u64);
+            }
+            return Ok(out);
         }
     }
 
@@ -569,6 +656,7 @@ impl SessionRegistry {
         let Some(dir) = self.config.state_dir.clone() else {
             return Ok(0);
         };
+        self.obs.inc("registry.autosave_runs");
         let names: Vec<String> = {
             let inner = self.inner();
             inner
@@ -607,12 +695,15 @@ impl SessionRegistry {
                 if rev == saved_rev {
                     continue;
                 }
-                session
+                let bytes = session
                     .save(&path)
                     .with_context(|| format!("autosaving session '{name}'"))?;
+                self.obs.inc("registry.autosave_saved");
+                self.obs.add("registry.autosave_bytes", bytes);
                 (rev, summarize(&session))
             };
             written += 1;
+            self.obs.event("autosave", &[("session", name.clone())]);
             // Record what the snapshot covers — but ONLY on the same slot
             // we saved (ptr_eq): the name may have been closed and reopened
             // as a brand-new session in the window where no lock is held,
@@ -634,6 +725,34 @@ impl SessionRegistry {
             }
         }
         Ok(written)
+    }
+
+    /// Per-session revision lag, name-sorted: live write revision minus
+    /// the revision the last checkpoint covers (how many writes a crash
+    /// right now would lose). Resident-but-busy sessions fall back to
+    /// their last recorded summary, like [`Self::list`].
+    pub fn revision_lag(&self) -> Vec<(String, u64)> {
+        let inner = self.inner();
+        let mut rows: Vec<(String, u64)> = inner
+            .map
+            .iter()
+            .map(|(name, e)| {
+                let live = e
+                    .slot
+                    .as_ref()
+                    .and_then(|s| s.lock.try_read().ok().map(|g| g.revision()))
+                    .unwrap_or(e.summary.revision);
+                (name.clone(), live.saturating_sub(e.saved_rev))
+            })
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    /// The named session's own metrics handle (the one its `metrics`
+    /// verb answers from); `None` for unknown names.
+    pub fn session_obs(&self, name: &str) -> Option<ObsHandle> {
+        self.inner().map.get(name).map(|e| e.obs.clone())
     }
 }
 
@@ -705,7 +824,11 @@ pub fn start_autosave(registry: Arc<SessionRegistry>, interval: Duration) -> Aut
             }
             drop(stopped); // never checkpoint while holding the stop flag
             if let Err(e) = registry.checkpoint_dirty() {
-                eprintln!("stiknn serve: autosave failed: {e:#}");
+                registry.obs().inc("registry.autosave_failures");
+                registry
+                    .obs()
+                    .event("autosave_failed", &[("error", format!("{e:#}"))]);
+                eprintln!("stiknn serve: event=autosave_failed error={e:#}");
             }
             stopped = flag.lock().unwrap_or_else(PoisonError::into_inner);
         }

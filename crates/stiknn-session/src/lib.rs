@@ -28,4 +28,4 @@ pub mod removal;
 pub mod session;
 pub mod shard;
 
-pub use stiknn_core::{analysis, coordinator, data, knn, shapley, util};
+pub use stiknn_core::{analysis, coordinator, data, knn, obs, shapley, util};

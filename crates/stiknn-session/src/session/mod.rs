@@ -68,9 +68,11 @@ pub use crate::shapley::delta::{MutationOp, MutationRecord};
 pub use crate::shapley::values::Engine;
 pub use store::{dataset_fingerprint, Snapshot, SnapshotHeader, SnapshotPayload};
 
-use crate::coordinator::{ingest_banded, ingest_values, repair_rows, ValuationJob};
+use crate::coordinator::progress::Progress;
+use crate::coordinator::{ingest_banded_with, ingest_values_with, repair_rows, ValuationJob};
 use crate::data::Dataset;
 use crate::knn::distance::Metric;
+use crate::obs::ObsHandle;
 use crate::shapley::delta::{self, Edit, MutableRows, RepairCtx, RetainedRows};
 use crate::shapley::sti_knn::{
     prepare_batch_scratch, sti_knn_accumulate, PrepScratch, StiParams, PREP_BATCH,
@@ -277,6 +279,10 @@ pub struct ValuationSession {
     /// ([`Self::set_revision`], which the server registry uses to keep
     /// the count monotone across an LRU spill/reload cycle).
     revision: u64,
+    /// Telemetry handle (DESIGN.md §14). Disabled by default — every
+    /// hook is then a no-op, so results are bit-identical with metrics
+    /// on or off (`tests/obs_invariants.rs`). Never serialized.
+    obs: ObsHandle,
 }
 
 impl ValuationSession {
@@ -330,6 +336,7 @@ impl ValuationSession {
             tests_seen: 0,
             fingerprint: Some(fingerprint),
             revision: 0,
+            obs: ObsHandle::disabled(),
         })
     }
 
@@ -579,6 +586,7 @@ impl ValuationSession {
             tests_seen: h.tests,
             fingerprint: Some(fingerprint),
             revision: 0,
+            obs: ObsHandle::disabled(),
         })
     }
 
@@ -654,6 +662,20 @@ impl ValuationSession {
         self.revision = revision;
     }
 
+    /// Attach a telemetry handle (DESIGN.md §14): ingest/edit timings
+    /// and the coordinator's `coord.*` roll-up start landing in its
+    /// registry. Sessions start with a disabled handle, and the hooks
+    /// never influence results either way (`tests/obs_invariants.rs`).
+    pub fn set_obs(&mut self, obs: ObsHandle) {
+        self.obs = obs;
+    }
+
+    /// The session's telemetry handle (disabled unless [`Self::set_obs`]
+    /// was called — e.g. by `serve` with observability on).
+    pub fn obs(&self) -> &ObsHandle {
+        &self.obs
+    }
+
     /// Current training labels (live view — edits change it).
     pub fn train_labels(&self) -> &[i32] {
         &self.train_y
@@ -701,6 +723,9 @@ impl ValuationSession {
         if test_y.is_empty() {
             return Ok(0);
         }
+        // Owned timer (no borrow of self): records into
+        // `session.ingest_ns` when it drops at function exit.
+        let _ingest_timer = self.obs.timer("session.ingest_ns");
         let params = StiParams {
             k: self.config.k,
             metric: self.config.metric,
@@ -710,10 +735,13 @@ impl ValuationSession {
             .with_workers(self.config.workers)
             .with_block_size(self.config.block_size);
         job.metric = self.config.metric;
+        // Coordinator roll-up sinks resolved once per batch; disabled
+        // obs makes this a plain job-local Progress.
+        let progress = Progress::with_obs(&self.obs);
         match &mut self.state {
             EngineState::Dense { acc } => {
                 if parallel {
-                    ingest_banded(
+                    ingest_banded_with(
                         &self.train_x,
                         &self.train_y,
                         self.d,
@@ -721,6 +749,7 @@ impl ValuationSession {
                         test_y,
                         &job,
                         acc,
+                        &progress,
                     )?;
                 } else {
                     sti_knn_accumulate(
@@ -779,7 +808,7 @@ impl ValuationSession {
                         }
                     }
                     None if parallel => {
-                        ingest_values(
+                        ingest_values_with(
                             &self.train_x,
                             &self.train_y,
                             self.d,
@@ -787,6 +816,7 @@ impl ValuationSession {
                             test_y,
                             &job,
                             values,
+                            &progress,
                         )?;
                     }
                     None => {
@@ -822,6 +852,8 @@ impl ValuationSession {
         }
         self.tests_seen += test_y.len() as u64;
         self.revision += 1;
+        self.obs.inc("session.ingest_batches");
+        self.obs.add("session.ingest_points", test_y.len() as u64);
         Ok(test_y.len())
     }
 
@@ -939,6 +971,8 @@ impl ValuationSession {
     /// append the ledger record. Called AFTER `train_x`/`train_y` hold
     /// the post-edit data.
     fn repair_after_edit(&mut self, edit: Edit<'_>, old_n: usize, record: MutationRecord) {
+        let _edit_timer = self.obs.timer("session.edit_ns");
+        self.obs.inc("session.edits");
         let new_n = self.train_y.len();
         let EngineState::Implicit { values, rows, live } = &mut self.state else {
             unreachable!("mutable sessions are always implicit (enforced at construction)");

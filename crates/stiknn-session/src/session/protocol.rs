@@ -23,6 +23,9 @@
 //! {"cmd":"query",...,"raw":true}     → unnormalized cell/row + tests
 //! {"cmd":"topk","k":10,"by":"main"}  → top-k point values (by: main|rowsum)
 //! {"cmd":"stats"}                    → summary statistics (incl. engine)
+//! {"cmd":"metrics"}                  → the session's telemetry snapshot
+//!                                      (DESIGN.md §14); "metric":"name"
+//!                                      looks up one metric by name
 //! {"cmd":"add_train","x":[...d features...],"y":label}
 //!                                    → {"index":new id,"n":...} (mutable only)
 //! {"cmd":"remove_train","i":3}       → remove a train point (mutable only)
@@ -99,7 +102,7 @@ pub fn serve<R: BufRead, W: Write>(
 /// A failed command: the message plus an optional machine-checkable
 /// reason tag (`"engine"` for queries the session's engine cannot
 /// answer). `From<String>` keeps the plain-`?` call sites terse.
-pub(crate) struct Fail {
+pub struct Fail {
     pub(crate) msg: String,
     pub(crate) reason: Option<&'static str>,
 }
@@ -135,7 +138,7 @@ fn mutable_fail(what: &str) -> Fail {
 /// RwLock read guard — so they run concurrently with each other — and
 /// `Write` commands through the write guard, serializing them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub(crate) enum Access {
+pub enum Access {
     Read,
     Write,
 }
@@ -143,11 +146,13 @@ pub(crate) enum Access {
 /// Classify a single-session command name. `None` for unknown commands
 /// and for connection-level verbs (`shutdown`, and the server layer's
 /// `open`/`close`/`use`/`list`) that never touch a session directly.
-pub(crate) fn access_of(cmd: &str) -> Option<Access> {
+pub fn access_of(cmd: &str) -> Option<Access> {
     match cmd {
         // `snapshot` is a read: `ValuationSession::save` takes &self,
         // so checkpoints run concurrently with queries.
-        "ping" | "query" | "values" | "topk" | "stats" | "snapshot" => Some(Access::Read),
+        "ping" | "query" | "values" | "topk" | "stats" | "snapshot" | "metrics" => {
+            Some(Access::Read)
+        }
         "ingest" | "add_train" | "remove_train" | "relabel" => Some(Access::Write),
         _ => None,
     }
@@ -156,7 +161,7 @@ pub(crate) fn access_of(cmd: &str) -> Option<Access> {
 /// Execute one read-class command against a shared session reference.
 /// `cmd` must be `Access::Read`-classified; anything else is a bug in
 /// the caller's routing, not in client input.
-pub(crate) fn dispatch_read(
+pub fn dispatch_read(
     session: &ValuationSession,
     cmd: &str,
     v: &Json,
@@ -167,6 +172,7 @@ pub(crate) fn dispatch_read(
         "values" => do_values(session, v),
         "topk" => do_topk(session, v),
         "stats" => Ok(stats_json(session)),
+        "metrics" => do_metrics(session, v),
         "snapshot" => do_snapshot(session, v),
         other => unreachable!("dispatch_read routed non-read command '{other}'"),
     }
@@ -174,7 +180,7 @@ pub(crate) fn dispatch_read(
 
 /// Execute one write-class command against an exclusive session
 /// reference.
-pub(crate) fn dispatch_write(
+pub fn dispatch_write(
     session: &mut ValuationSession,
     cmd: &str,
     v: &Json,
@@ -190,7 +196,7 @@ pub(crate) fn dispatch_write(
 
 /// The single-session unknown-command message (the server layer appends
 /// its registry verbs to its own copy).
-pub(crate) const KNOWN_COMMANDS: &str = "ping|ingest|query|values|topk|stats|\
+pub const KNOWN_COMMANDS: &str = "ping|ingest|query|values|topk|stats|metrics|\
      add_train|remove_train|relabel|snapshot|shutdown";
 
 /// Execute one command line → (response, shutdown?). Never panics on
@@ -219,14 +225,14 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
     }
 }
 
-pub(crate) fn err(msg: impl Into<String>) -> Json {
+pub fn err(msg: impl Into<String>) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg.into())),
     ])
 }
 
-pub(crate) fn fail_json(f: Fail) -> Json {
+pub fn fail_json(f: Fail) -> Json {
     let mut fields = vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(f.msg)),
@@ -237,7 +243,7 @@ pub(crate) fn fail_json(f: Fail) -> Json {
     Json::obj(fields)
 }
 
-pub(crate) fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
+pub fn ok(cmd: &str, fields: Vec<(&str, Json)>) -> Json {
     let mut all = vec![("ok", Json::Bool(true)), ("cmd", Json::str(cmd))];
     all.extend(fields);
     Json::obj(all)
@@ -503,6 +509,47 @@ fn ping_json(session: &ValuationSession) -> Json {
             ("t", Json::num(session.tests_seen() as f64)),
         ],
     )
+}
+
+/// `metrics`: the session's telemetry snapshot (DESIGN.md §14). Always
+/// answers — a session without an attached registry reports
+/// `"enabled":false` with a null `"metrics"` payload, so an operator can
+/// tell "observability off" from "no traffic yet". With an optional
+/// `"metric":"name"` field it returns that one metric's value instead of
+/// the full snapshot; unknown names are a clean per-line error.
+fn do_metrics(session: &ValuationSession, v: &Json) -> Result<Json, Fail> {
+    let obs = session.obs();
+    if let Some(m) = v.get("metric") {
+        let name = m
+            .as_str()
+            .ok_or_else(|| "'metric' must be a string name".to_string())?;
+        let Some(reg) = obs.registry() else {
+            return Err(Fail::from(format!(
+                "metrics are disabled on this session; '{name}' is not being \
+                 collected (serve with --obs on)"
+            )));
+        };
+        let value = reg
+            .lookup(name)
+            .ok_or_else(|| format!("unknown metric '{name}'"))?;
+        return Ok(ok(
+            "metrics",
+            vec![("metric", Json::str(name)), ("value", value)],
+        ));
+    }
+    Ok(ok(
+        "metrics",
+        vec![
+            ("scope", Json::str("session")),
+            ("enabled", Json::Bool(obs.is_enabled())),
+            ("n", Json::num(session.n() as f64)),
+            ("tests", Json::num(session.tests_seen() as f64)),
+            ("batches", Json::num(session.batches_ingested() as f64)),
+            ("mutations", Json::num(session.mutations().len() as f64)),
+            ("rev", Json::num(session.revision() as f64)),
+            ("metrics", obs.snapshot_json()),
+        ],
+    ))
 }
 
 fn do_add_train(session: &mut ValuationSession, v: &Json) -> Result<Json, Fail> {
@@ -956,6 +1003,66 @@ mod tests {
             let (r, _) = handle(&mut s, bad);
             assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
         }
+    }
+
+    #[test]
+    fn metrics_on_a_disabled_session_still_answers() {
+        let mut s = tiny_session();
+        let (r, _) = handle(&mut s, r#"{"cmd":"metrics"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("enabled").unwrap().as_bool(), Some(false));
+        assert_eq!(r.get("scope").unwrap().as_str(), Some("session"));
+        assert!(matches!(r.get("metrics"), Some(Json::Null)), "{r}");
+        // single-metric lookup on a disabled session is a clean error
+        let (r, _) = handle(&mut s, r#"{"cmd":"metrics","metric":"session.edits"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+        assert!(
+            r.get("error").unwrap().as_str().unwrap().contains("disabled"),
+            "{r}"
+        );
+    }
+
+    #[test]
+    fn metrics_snapshot_reflects_traffic_and_lookup_finds_one_metric() {
+        use crate::obs::ObsHandle;
+        let mut s = tiny_session();
+        s.set_obs(ObsHandle::enabled("proto-test"));
+        handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        let (r, _) = handle(&mut s, r#"{"cmd":"metrics"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(r.get("tests").unwrap().as_usize(), Some(2));
+        let snap = r.get("metrics").unwrap();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(
+            counters.get("session.ingest_batches").and_then(Json::as_usize),
+            Some(1),
+            "{snap}"
+        );
+        assert_eq!(
+            counters.get("session.ingest_points").and_then(Json::as_usize),
+            Some(2)
+        );
+        let hist = snap.get("histograms").unwrap().get("session.ingest_ns");
+        assert_eq!(
+            hist.and_then(|h| h.get("count")).and_then(Json::as_usize),
+            Some(1),
+            "{snap}"
+        );
+        // single-metric lookup answers with just that value
+        let (one, _) = handle(&mut s, r#"{"cmd":"metrics","metric":"session.ingest_points"}"#);
+        assert_eq!(one.get("ok").unwrap().as_bool(), Some(true), "{one}");
+        assert_eq!(one.get("value").unwrap().as_usize(), Some(2));
+        // unknown metric → clean per-line error naming the metric
+        let (bad, _) = handle(&mut s, r#"{"cmd":"metrics","metric":"no.such"}"#);
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        assert!(
+            bad.get("error").unwrap().as_str().unwrap().contains("unknown metric"),
+            "{bad}"
+        );
     }
 
     #[test]

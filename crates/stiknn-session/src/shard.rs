@@ -42,6 +42,7 @@
 //! properties testable without sockets while exercising every byte of
 //! the command layer.
 
+use crate::obs::ObsHandle;
 use crate::session::protocol;
 use crate::session::{store, SessionConfig, SnapshotPayload, TopBy, ValuationSession};
 use crate::util::json::Json;
@@ -218,6 +219,10 @@ pub struct ShardedSession<L: ShardLink> {
     d: usize,
     n: usize,
     next_global: u64,
+    /// Coordinator-side telemetry (DESIGN.md §14): per-shard exchange
+    /// latency (`shard.s<idx>.call_ns`) and raw-fold merge time
+    /// (`shard.merge_ns`). Disabled by default; attach with [`Self::set_obs`].
+    obs: ObsHandle,
 }
 
 impl<L: ShardLink> ShardedSession<L> {
@@ -322,9 +327,21 @@ impl<L: ShardLink> ShardedSession<L> {
                 d,
                 n: n.expect("at least one link was pinged"),
                 next_global,
+                obs: ObsHandle::disabled(),
             },
             shard_tests,
         ))
+    }
+
+    /// Attach a metrics registry: every subsequent shard exchange records
+    /// its round-trip latency into `shard.s<idx>.call_ns` and every raw
+    /// fold records `shard.merge_ns` (DESIGN.md §14).
+    pub fn set_obs(&mut self, obs: ObsHandle) {
+        self.obs = obs;
+    }
+
+    pub fn obs(&self) -> &ObsHandle {
+        &self.obs
     }
 
     pub fn n(&self) -> usize {
@@ -384,7 +401,7 @@ impl<L: ShardLink> ShardedSession<L> {
                 ("x", Json::arr(xs.iter().map(|&f| Json::num(f as f64)))),
                 ("y", Json::arr(ys.iter().map(|&y| Json::num(y as f64)))),
             ]);
-            expect_ok(self.links[s].call(&req)?, s, "ingest")?;
+            expect_ok(timed_call(&self.obs, s, &mut self.links[s], &req)?, s, "ingest")?;
             cursor = run_end;
         }
         self.next_global += len;
@@ -402,8 +419,9 @@ impl<L: ShardLink> ShardedSession<L> {
         let mut per_shard = Vec::with_capacity(self.links.len());
         let mut main: Option<Vec<f64>> = None;
         let mut rowsum: Option<Vec<f64>> = None;
+        let mut merge_ns = 0u64;
         for (idx, link) in self.links.iter_mut().enumerate() {
-            let resp = expect_ok(link.call(&req)?, idx, "values")?;
+            let resp = expect_ok(timed_call(&self.obs, idx, link, &req)?, idx, "values")?;
             let tests = field_usize(&resp, "tests", idx, "values")? as u64;
             total += tests;
             per_shard.push(tests);
@@ -424,12 +442,19 @@ impl<L: ShardLink> ShardedSession<L> {
                     rowsum = Some(r);
                 }
                 (Some(am), Some(ar)) => {
+                    let t0 = self.obs.is_enabled().then(std::time::Instant::now);
                     add_assign(am, &m);
                     add_assign(ar, &r);
+                    if let Some(t0) = t0 {
+                        merge_ns += t0.elapsed().as_nanos() as u64;
+                    }
                 }
                 _ => unreachable!("main and rowsum are set together"),
             }
         }
+        // One observation per fetch (the cross-shard fold as a whole);
+        // for N = 1 the "merge" is the move and records 0.
+        self.obs.observe_ns("shard.merge_ns", merge_ns);
         Ok((
             total,
             per_shard,
@@ -508,7 +533,7 @@ impl<L: ShardLink> ShardedSession<L> {
         let mut total = 0u64;
         let mut sum: Option<f64> = None;
         for (idx, link) in self.links.iter_mut().enumerate() {
-            let resp = expect_ok(link.call(&req)?, idx, "query")?;
+            let resp = expect_ok(timed_call(&self.obs, idx, link, &req)?, idx, "query")?;
             total += field_usize(&resp, "tests", idx, "query")? as u64;
             let v = resp
                 .get("value")
@@ -535,7 +560,7 @@ impl<L: ShardLink> ShardedSession<L> {
         let mut total = 0u64;
         let mut sum: Option<Vec<f64>> = None;
         for (idx, link) in self.links.iter_mut().enumerate() {
-            let resp = expect_ok(link.call(&req)?, idx, "query")?;
+            let resp = expect_ok(timed_call(&self.obs, idx, link, &req)?, idx, "query")?;
             total += field_usize(&resp, "tests", idx, "query")? as u64;
             let row = f64_array(&resp, "row", idx)?;
             ensure!(
@@ -607,7 +632,7 @@ impl<L: ShardLink> ShardedSession<L> {
     fn fan_edit(&mut self, req: &Json, what: &str) -> Result<usize> {
         let mut index = 0usize;
         for (idx, link) in self.links.iter_mut().enumerate() {
-            let resp = expect_ok(link.call(req)?, idx, what)?;
+            let resp = expect_ok(timed_call(&self.obs, idx, link, req)?, idx, what)?;
             if let Some(i) = resp.get("index").and_then(Json::as_usize) {
                 index = i;
             }
@@ -633,7 +658,7 @@ impl<L: ShardLink> ShardedSession<L> {
                 ("cmd", Json::str("snapshot")),
                 ("path", Json::str(path.as_ref().display().to_string())),
             ]);
-            let resp = expect_ok(link.call(&req)?, idx, "snapshot")?;
+            let resp = expect_ok(timed_call(&self.obs, idx, link, &req)?, idx, "snapshot")?;
             bytes += field_usize(&resp, "bytes", idx, "snapshot")? as u64;
         }
         Ok(bytes)
@@ -751,6 +776,23 @@ fn cmd(name: &str) -> Json {
     Json::obj(vec![("cmd", Json::str(name))])
 }
 
+/// One shard exchange, timed into `shard.s<idx>.call_ns` when the
+/// coordinator has an attached registry. Only the `call` itself is
+/// inside the window — request building and merging are excluded, so the
+/// histogram isolates transport plus remote work.
+fn timed_call<L: ShardLink>(obs: &ObsHandle, idx: usize, link: &mut L, req: &Json) -> Result<Json> {
+    if !obs.is_enabled() {
+        return link.call(req);
+    }
+    let t0 = std::time::Instant::now();
+    let resp = link.call(req);
+    obs.observe_ns(
+        &format!("shard.s{idx}.call_ns"),
+        t0.elapsed().as_nanos() as u64,
+    );
+    resp
+}
+
 /// Protocol-level failure → coordinator error with shard context.
 fn expect_ok(resp: Json, shard: usize, what: &str) -> Result<Json> {
     if resp.get("ok").and_then(Json::as_bool) == Some(true) {
@@ -865,6 +907,34 @@ mod tests {
             sharded.cell(0, 1).unwrap().to_bits(),
             solo.cell(0, 1).unwrap().to_bits()
         );
+    }
+
+    #[test]
+    fn obs_times_every_shard_call_and_the_merge() {
+        let (tx, ty, qx, qy) = tiny_problem(19, 8, 2, 6);
+        let config = SessionConfig::new(2);
+        let make = || {
+            SessionLink::new(ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap())
+        };
+        let plan = ShardPlan::contiguous(6, 2);
+        let mut sharded = ShardedSession::open(vec![make(), make()], plan, 2).unwrap();
+        let obs = ObsHandle::enabled("shard-test");
+        sharded.set_obs(obs.clone());
+        sharded.ingest(&qx, &qy).unwrap();
+        let with_obs = sharded.values().unwrap();
+        let reg = obs.registry().unwrap();
+        // the 6-test batch split into one run per shard; the values
+        // merge fetched raw sums from both
+        assert_eq!(reg.histogram("shard.s0.call_ns").count(), 2);
+        assert_eq!(reg.histogram("shard.s1.call_ns").count(), 2);
+        assert_eq!(reg.histogram("shard.merge_ns").count(), 1);
+        // instrumentation must not perturb the merged answers
+        let mut plain =
+            ShardedSession::resume(sharded.into_links(), ShardPlan::contiguous(6, 2), 2).unwrap();
+        let without = plain.values().unwrap();
+        for (a, b) in with_obs.main.iter().zip(&without.main) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

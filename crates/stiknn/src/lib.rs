@@ -130,10 +130,24 @@
 //! println!("point 0 total value: {}", pv.rowsum[0]);
 //! ```
 //!
+//! # Observability ([`obs`], DESIGN.md §14)
+//!
+//! One telemetry vocabulary spans every layer: lock-free counters,
+//! gauges and fixed-bucket latency histograms in a named
+//! [`obs::MetricsRegistry`], plus a bounded structured event ring —
+//! all behind an [`obs::ObsHandle`] that degrades to no-ops when
+//! disabled, so instrumented hot paths cost nothing unless a registry
+//! is attached. The server exposes it as the `metrics` protocol verb
+//! (per-session and process-wide JSON snapshots), `stiknn metrics`
+//! renders Prometheus-style text against a live server, and
+//! `serve --slow-ms N` logs structured slow-query records
+//! (`tests/obs_invariants.rs` proves enabling metrics leaves every
+//! result bit-identical).
+//!
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for reproduction results.
 
-pub use stiknn_core::{bench, data, knn, runtime, shapley, util};
+pub use stiknn_core::{bench, data, knn, obs, runtime, shapley, util};
 pub use stiknn_server::server;
 pub use stiknn_session::session;
 

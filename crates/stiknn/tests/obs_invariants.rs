@@ -1,0 +1,214 @@
+//! Observability must be free of observable effect (DESIGN.md §14).
+//!
+//! The zero-overhead contract has two halves, and this file proves the
+//! half that matters for correctness: attaching a metrics registry to
+//! any layer NEVER changes a computed result. Identical deterministic
+//! traffic is driven through a pair of identically-seeded instances —
+//! one with obs disabled, one enabled (and, for the server, with the
+//! slow-query log firing on every command) — and every piece of engine
+//! state is compared TO THE BIT: train labels, point values, dense
+//! matrix cells, mutable pair cells, and the serialized protocol
+//! responses themselves. Property-style: the comparison runs across
+//! engine configs (dense / implicit / mutable) × seeds.
+//!
+//! The sharded fan-out path has the same on/off comparison next to its
+//! fixture in `stiknn-session/src/shard.rs`; the timer/registry
+//! micro-semantics live in `stiknn-core/src/obs/mod.rs`.
+
+use std::sync::Arc;
+
+use stiknn::data::load_dataset;
+use stiknn::obs::ObsHandle;
+use stiknn::server::{Connection, RegistryConfig, SessionRegistry, TrainData};
+use stiknn::session::{Engine, SessionConfig, TopBy, ValuationSession};
+use stiknn::util::json::Json;
+use stiknn::util::rng::Rng;
+
+const K: usize = 3;
+
+fn train_data() -> TrainData {
+    let ds = load_dataset("circle", 24, 6, 11).unwrap();
+    TrainData::from_dataset(&ds)
+}
+
+fn configs() -> Vec<(&'static str, SessionConfig)> {
+    vec![
+        ("dense", SessionConfig::new(K)),
+        ("implicit", SessionConfig::new(K).with_engine(Engine::Implicit)),
+        (
+            "mutable",
+            SessionConfig::new(K)
+                .with_engine(Engine::Implicit)
+                .with_retained_rows(true)
+                .with_mutable(true),
+        ),
+    ]
+}
+
+/// Deterministic mixed traffic: ingest batches, and for mutable
+/// sessions the full edit vocabulary. Driven twice from the same seed,
+/// it takes the exact same branch at every step on both instances (the
+/// states are identical by induction), so tolerated failures fail on
+/// both or neither.
+fn drive_session(session: &mut ValuationSession, seed: u64, mutable: bool) {
+    let mut rng = Rng::new(seed);
+    for step in 0..16 {
+        let op = if mutable { step % 4 } else { 0 };
+        match op {
+            1 => {
+                let x = [rng.f32() - 0.5, rng.f32() - 0.5];
+                let y = rng.below(2) as i32;
+                session.add_train(&x, y).unwrap();
+            }
+            2 => {
+                let i = rng.below(session.n());
+                let y = rng.below(2) as i32;
+                session.relabel_train(i, y).unwrap();
+            }
+            3 => {
+                // may legitimately fail near the k floor — identically
+                // on both instances
+                let i = rng.below(session.n() + 1);
+                let _ = session.remove_train(i);
+            }
+            _ => {
+                let xs = [
+                    rng.f32() - 0.5,
+                    rng.f32() - 0.5,
+                    rng.f32() - 0.5,
+                    rng.f32() - 0.5,
+                ];
+                let ys = [rng.below(2) as i32, rng.below(2) as i32];
+                session.ingest(&xs, &ys).unwrap();
+            }
+        }
+    }
+}
+
+fn assert_sessions_bit_identical(name: &str, seed: u64, off: &ValuationSession, on: &ValuationSession) {
+    assert_eq!(off.n(), on.n(), "{name}/{seed}: train size");
+    assert_eq!(off.tests_seen(), on.tests_seen(), "{name}/{seed}: test count");
+    assert_eq!(off.revision(), on.revision(), "{name}/{seed}: revision");
+    assert_eq!(off.train_labels(), on.train_labels(), "{name}/{seed}: labels");
+    for by in [TopBy::Main, TopBy::RowSum] {
+        let a = off.point_values(by).unwrap();
+        let b = on.point_values(by).unwrap();
+        for i in 0..a.len() {
+            assert_eq!(
+                a[i].to_bits(),
+                b[i].to_bits(),
+                "{name}/{seed}: {by:?}[{i}] diverged with obs on: {} vs {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+    if let (Some(a), Some(b)) = (off.matrix(), on.matrix()) {
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}/{seed}: matrix cell");
+        }
+    }
+    if let (Some(a), Some(b)) = (off.cell(0, 1), on.cell(0, 1)) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{name}/{seed}: cell(0,1)");
+    }
+}
+
+#[test]
+fn session_results_are_bit_identical_with_metrics_on_and_off() {
+    let td = train_data();
+    for (name, config) in configs() {
+        for seed in [7u64, 1234, 0xDEAD] {
+            let mut off =
+                ValuationSession::new(td.x.clone(), td.y.clone(), td.d, config).unwrap();
+            let mut on =
+                ValuationSession::new(td.x.clone(), td.y.clone(), td.d, config).unwrap();
+            on.set_obs(ObsHandle::enabled("invariants"));
+            let mutable = name == "mutable";
+            drive_session(&mut off, seed, mutable);
+            drive_session(&mut on, seed, mutable);
+            assert_sessions_bit_identical(name, seed, &off, &on);
+            // and the enabled side actually measured the work it did
+            let reg = on.obs().registry().unwrap();
+            assert!(reg.counter("session.ingest_batches").get() > 0, "{name}");
+            assert!(reg.histogram("session.ingest_ns").count() > 0, "{name}");
+            if mutable {
+                assert!(reg.counter("session.edits").get() > 0);
+                assert!(reg.histogram("session.edit_ns").count() > 0);
+            }
+        }
+    }
+}
+
+/// The protocol command lines for one server run: registry verbs plus
+/// mixed reads and writes over two sessions, one of them mutable.
+fn server_script() -> Vec<String> {
+    let mut rng = Rng::new(0x0B5);
+    let mut lines = vec![
+        r#"{"cmd":"open","name":"plain"}"#.to_string(),
+        r#"{"cmd":"open","name":"edits","mutable":true,"k":3}"#.to_string(),
+    ];
+    for step in 0..24 {
+        let session = if step % 2 == 0 { "plain" } else { "edits" };
+        lines.push(format!(r#"{{"cmd":"use","name":"{session}"}}"#));
+        let a = (rng.below(64) as f64) * 0.125 - 4.0;
+        let b = (rng.below(64) as f64) * 0.125 - 4.0;
+        let y = rng.below(2);
+        lines.push(match step % 6 {
+            0 | 1 => format!(r#"{{"cmd":"ingest","x":[{a},{b}],"y":[{y}]}}"#),
+            2 => format!(r#"{{"cmd":"add_train","x":[{a},{b}],"y":{y}}}"#),
+            3 => r#"{"cmd":"stats"}"#.to_string(),
+            4 => r#"{"cmd":"topk","k":5,"by":"rowsum"}"#.to_string(),
+            _ => r#"{"cmd":"values"}"#.to_string(),
+        });
+    }
+    lines.push(r#"{"cmd":"list"}"#.to_string());
+    lines
+}
+
+#[test]
+fn server_responses_are_bit_identical_with_metrics_on_and_off() {
+    // `add_train` lines hit the dense "plain" session too and fail there
+    // (not mutable) — identically on both runs; serialized responses
+    // carry every served float, so string equality IS bit equality.
+    let run = |obs: bool| -> (Arc<SessionRegistry>, Vec<String>) {
+        let mut reg = SessionRegistry::new(
+            train_data(),
+            RegistryConfig {
+                base: SessionConfig::new(K),
+                max_resident: 0,
+                state_dir: None,
+            },
+        )
+        .unwrap();
+        if obs {
+            // slow_ms = 0 logs EVERY command: the slow-query path itself
+            // is part of what must not perturb results
+            reg = reg
+                .with_obs(ObsHandle::enabled("invariants"))
+                .with_slow_ms(Some(0));
+        }
+        let reg = Arc::new(reg);
+        let mut conn = Connection::new(Arc::clone(&reg), None);
+        let responses = server_script()
+            .iter()
+            .map(|line| {
+                let (r, shutdown) = conn.execute(line);
+                assert!(!shutdown);
+                r.to_string()
+            })
+            .collect();
+        (reg, responses)
+    };
+    let (_off_reg, off) = run(false);
+    let (on_reg, on) = run(true);
+    assert_eq!(off.len(), on.len());
+    for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+        assert_eq!(a, b, "response {i} diverged with obs on");
+    }
+    // the enabled run measured every command, and logged each as slow
+    let total = server_script().len() as u64;
+    let reg = on_reg.obs().registry().unwrap();
+    assert_eq!(reg.counter("server.commands").get(), total);
+    assert_eq!(reg.counter("server.slow_queries").get(), total);
+    assert!(reg.histogram("registry.lock_hold_ns").count() > 0);
+}

@@ -383,6 +383,52 @@ fn autosave_checkpoints_dirty_sessions_and_snapshots_restore() {
 }
 
 #[test]
+fn command_counters_equal_commands_sent_across_concurrent_clients() {
+    use stiknn::obs::ObsHandle;
+    let registry = Arc::new(
+        SessionRegistry::new(
+            train_data(),
+            RegistryConfig {
+                base: dense_config(),
+                max_resident: 0,
+                state_dir: None,
+            },
+        )
+        .unwrap()
+        .with_obs(ObsHandle::enabled("concurrency")),
+    );
+    for name in ["dense", "imp", "mut"] {
+        assert!(registry.open(name, None, Some(config_of(name))).unwrap());
+    }
+    let (clients, steps) = (4usize, 18usize);
+    let writes = run_traffic(&registry, &["dense", "imp", "mut"], clients, steps);
+    assert!(!writes.is_empty());
+    // run_traffic sends exactly 2 commands per step per client (a `use`
+    // plus one read/write line): the relaxed counters must lose none of
+    // them under concurrency
+    let total = (clients * steps * 2) as u64;
+    let reg = registry.obs().registry().unwrap();
+    assert_eq!(reg.counter("server.commands").get(), total);
+    // the per-command latency histograms partition that same total …
+    let snap = registry.obs().snapshot_json();
+    let hists = snap.get("histograms").unwrap().as_obj().unwrap();
+    let hist_total: u64 = hists
+        .iter()
+        .filter(|(name, _)| name.starts_with("server.cmd."))
+        .map(|(_, h)| h.get("count").unwrap().as_usize().unwrap() as u64)
+        .sum();
+    assert_eq!(hist_total, total, "histogram counts must partition commands");
+    // … with the `use` verb accounting for exactly half of it
+    assert_eq!(
+        reg.histogram("server.cmd.use_ns").count(),
+        (clients * steps) as u64
+    );
+    // tolerated failures (raced edits, early reads) were counted as
+    // errors, never dropped; every `use` succeeds, bounding them
+    assert!(reg.counter("server.errors").get() <= (clients * steps) as u64);
+}
+
+#[test]
 fn connection_verbs_open_use_close_list() {
     let registry = Arc::new(
         SessionRegistry::new(
