@@ -1,0 +1,128 @@
+//! §KERNEL — SIMD distance kernels vs the scalar seed loop
+//! (EXPERIMENTS.md §KERNEL, DESIGN.md §15).
+//!
+//! Phase 1 of Algorithm 1 is distance-bound: every test point scans all
+//! n train rows before it can rank them. This bench measures the three
+//! prep-path variants over an n × d × metric grid:
+//!
+//! * `scalar`  — the seed loop (`knn::distance::distances_into`),
+//! * `kernel`  — the runtime-dispatched kernel with a prebuilt norm
+//!   cache (`knn::kernel::distances_into_kernel`),
+//! * `block B` — the cache-blocked batched API (`distances_block`)
+//!   amortizing each train tile over B queries (reported per query).
+//!
+//! The acceptance cell is SqEuclidean at n=32k, d=64 (kept in quick
+//! mode): kernel ≥ 3× over scalar under AVX2, blocked ≥ 1.5× more at
+//! B ≥ 8. Writes `BENCH_distance.json` at the repo root.
+//!
+//!     cargo bench --bench distance            # full grid
+//!     cargo bench --bench distance -- --quick # CI subset
+
+use stiknn::bench::{BenchConfig, Suite};
+use stiknn::knn::distance::{distances_into, Metric};
+use stiknn::knn::kernel::{distances_block, distances_into_kernel, Kernel, NormCache};
+use stiknn::util::json::Json;
+use stiknn::util::rng::Rng;
+
+fn main() {
+    let quick_mode = std::env::args().any(|a| a == "--quick")
+        || std::env::var_os("STIKNN_BENCH_QUICK").is_some();
+    let shapes: Vec<(usize, usize)> = if quick_mode {
+        // keep (32k, 64): the ≥3× / ≥1.5× acceptance claims live there
+        vec![(2_000, 16), (32_000, 64)]
+    } else {
+        vec![(2_000, 16), (8_000, 64), (32_000, 64), (32_000, 256)]
+    };
+    let metrics = [
+        ("sqeuclidean", Metric::SqEuclidean),
+        ("manhattan", Metric::Manhattan),
+        ("cosine", Metric::Cosine),
+    ];
+    const BLOCKS: [usize; 2] = [8, 64];
+
+    let mut suite = Suite::new(&format!(
+        "distance kernels (active kernel: {})",
+        Kernel::active().name()
+    ));
+    suite = suite.with_config(BenchConfig {
+        min_time: std::time::Duration::from_millis(if quick_mode { 80 } else { 250 }),
+        max_iters: 2_000,
+        warmup_iters: 3,
+    });
+
+    let mut cells = Vec::new();
+    for &(n, d) in &shapes {
+        let mut rng = Rng::new((n * 31 + d) as u64);
+        let points: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let queries: Vec<f32> = (0..64 * d).map(|_| rng.normal() as f32).collect();
+        let q = &queries[..d];
+        let mut out = vec![0.0f64; n];
+        let mut out_blk = vec![0.0f64; 64 * n];
+        for (mname, metric) in metrics {
+            let norms = NormCache::build(&points, d, metric);
+            let scalar = suite.bench(&format!("scalar {mname} n={n} d={d}"), || {
+                distances_into(q, &points, d, metric, &mut out);
+                out[n - 1]
+            });
+            let kernel = suite.bench(&format!("kernel {mname} n={n} d={d}"), || {
+                distances_into_kernel(q, &points, d, metric, &norms, &mut out);
+                out[n - 1]
+            });
+            let mut entry = vec![
+                ("n", Json::num(n as f64)),
+                ("d", Json::num(d as f64)),
+                ("metric", Json::str(mname)),
+                ("scalar_secs", Json::num(scalar.mean_secs())),
+                ("kernel_secs", Json::num(kernel.mean_secs())),
+                (
+                    "speedup_kernel_over_scalar",
+                    Json::num(scalar.mean_secs() / kernel.mean_secs()),
+                ),
+            ];
+            let mut per_query_b8 = kernel.mean_secs();
+            for b in BLOCKS {
+                let blk = suite.bench(&format!("block B={b} {mname} n={n} d={d}"), || {
+                    let qs = &queries[..b * d];
+                    distances_block(qs, &points, d, metric, &norms, &mut out_blk[..b * n]);
+                    out_blk[b * n - 1]
+                });
+                let per_query = blk.mean_secs() / b as f64;
+                if b == 8 {
+                    per_query_b8 = per_query;
+                }
+                entry.push((
+                    match b {
+                        8 => "block8_secs_per_query",
+                        _ => "block64_secs_per_query",
+                    },
+                    Json::num(per_query),
+                ));
+            }
+            entry.push((
+                "speedup_block8_over_kernel",
+                Json::num(kernel.mean_secs() / per_query_b8),
+            ));
+            println!(
+                "{mname} n={n} d={d}: scalar/kernel {:.2}x, kernel/block8 {:.2}x",
+                scalar.mean_secs() / kernel.mean_secs(),
+                kernel.mean_secs() / per_query_b8
+            );
+            cells.push(Json::obj(entry));
+        }
+    }
+
+    println!("{}", suite.render());
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::str("distance")),
+        ("quick", Json::Bool(quick_mode)),
+        ("kernel", Json::str(Kernel::active().name())),
+        ("cells", Json::arr(cells)),
+        ("suite", suite.to_json()),
+    ]);
+    let out = stiknn::bench::artifact_path(env!("CARGO_MANIFEST_DIR"), "BENCH_distance.json");
+    match std::fs::write(&out, artifact.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

@@ -3,8 +3,10 @@
 //!
 //! Engine dispatch:
 //! * `Engine::Rust` — two assembly strategies (see [`Assembly`]):
-//!   - `RowBanded` (default): Phase 1 (`prepare_batch`, O(n log n) per
-//!     test point) is parallelized over test blocks by a prep pool; each
+//!   - `RowBanded` (default): Phase 1 (`prepare_batch_cached` over the
+//!     SIMD distance kernels with one shared per-job norm cache,
+//!     O(n log n) per test point) is parallelized over test blocks by a
+//!     prep pool; each
 //!     prepared block is published IN BLOCK ORDER to every band worker,
 //!     which sweeps it (`sweep_band`, O(block·band·n)) into its own
 //!     disjoint row band of ONE shared n×n accumulator. Peak memory is
@@ -30,8 +32,11 @@ use super::pool::{run_workers, Bounded};
 
 use super::progress::{Progress, ThroughputMeter};
 use crate::data::Dataset;
+use crate::knn::kernel::NormCache;
 use crate::runtime::{executor_for, Engine, Manifest, StiExecutor};
-use crate::shapley::sti_knn::{prepare_batch, sti_knn_partial, sweep_band, PreparedBatch, StiParams};
+use crate::shapley::sti_knn::{
+    prepare_batch_cached, sti_knn_partial, sweep_band, PrepScratch, PreparedBatch, StiParams,
+};
 use crate::shapley::values::{sweep_values, ValueVector, ValuesScratch};
 use crate::util::matrix::Matrix;
 use anyhow::{Context, Result};
@@ -121,6 +126,7 @@ fn prep_worker_loop(
     test_x: &[f32],
     test_y: &[i32],
     params: &StiParams,
+    norms: &NormCache,
     prep_queue: &Bounded<Shard>,
     band_queues: &[Bounded<Arc<PreparedBatch>>],
     reorder: &Mutex<Reorder>,
@@ -136,6 +142,7 @@ fn prep_worker_loop(
         reorder,
         reorder_cv,
     };
+    let mut scratch = PrepScratch::new();
     'blocks: while let Some(shard) = prep_queue.recv() {
         // Reorder-buffer backpressure: don't prepare (and allocate) a
         // block far ahead of the oldest unpublished one.
@@ -153,8 +160,11 @@ fn prep_worker_loop(
             &test_x[shard.lo * d..shard.hi * d],
             &test_y[shard.lo..shard.hi],
         );
-        let batch = Arc::new(prepare_batch(train_x, train_y, d, tx, ty, params));
+        let batch = Arc::new(prepare_batch_cached(
+            train_x, train_y, d, tx, ty, params, norms, &mut scratch,
+        ));
         progress.record_block(shard.hi - shard.lo, t0.elapsed().as_nanos() as u64);
+        progress.record_kernel(batch.kernel_ns());
         merger.lock().unwrap().push(shard.index, batch.weight());
         // Publish every newly in-order block to all consumers; the
         // reorder lock serializes publication, keeping each queue in
@@ -301,6 +311,8 @@ fn banded_accumulate(
         k: job.k,
         metric: job.metric,
     };
+    // One norm cache per job, shared read-only by every prep worker.
+    let norms = NormCache::build(train_x, d, params.metric);
     let n = train_y.len();
     let shards = shards_for_len(job, test_y.len());
     let n_blocks = shards.len();
@@ -351,8 +363,8 @@ fn banded_accumulate(
         for _w in 0..job.workers {
             s.spawn(|| {
                 prep_worker_loop(
-                    train_x, train_y, d, test_x, test_y, &params, &prep_queue, &band_queues,
-                    &reorder, &reorder_cv, &merger, progress, window, n_blocks,
+                    train_x, train_y, d, test_x, test_y, &params, &norms, &prep_queue,
+                    &band_queues, &reorder, &reorder_cv, &merger, progress, window, n_blocks,
                 );
             });
         }
@@ -477,6 +489,7 @@ fn values_pipeline(
         k: job.k,
         metric: job.metric,
     };
+    let norms = NormCache::build(train_x, d, params.metric);
     let shards = shards_for_len(job, test_y.len());
     let n_blocks = shards.len();
     let merger = Mutex::new(WeightMerger::new(n_blocks));
@@ -507,8 +520,8 @@ fn values_pipeline(
         for _w in 0..job.workers {
             s.spawn(|| {
                 prep_worker_loop(
-                    train_x, train_y, d, test_x, test_y, &params, &prep_queue, &band_queues,
-                    &reorder, &reorder_cv, &merger, progress, window, n_blocks,
+                    train_x, train_y, d, test_x, test_y, &params, &norms, &prep_queue,
+                    &band_queues, &reorder, &reorder_cv, &merger, progress, window, n_blocks,
                 );
             });
         }

@@ -11,6 +11,7 @@
 //!
 //! [`obs::Counter`]: crate::obs::Counter
 
+use crate::knn::kernel::Kernel;
 use crate::obs::{Counter, Histogram, ObsHandle};
 use std::sync::Arc;
 use std::time::Instant;
@@ -25,6 +26,7 @@ struct Sinks {
     worker_ns: Arc<Counter>,
     prep_ns: Arc<Histogram>,
     sweep_ns: Arc<Histogram>,
+    kernel_ns: Arc<Histogram>,
 }
 
 /// Shared progress state between workers and the orchestrator: Phase-1
@@ -36,6 +38,7 @@ pub struct Progress {
     points_done: Counter,
     prep_ns: Counter,
     sweep_ns: Counter,
+    kernel_ns: Counter,
     wall_ns: Counter,
     worker_ns: Counter,
     sinks: Option<Sinks>,
@@ -52,14 +55,20 @@ impl Progress {
     /// `coord.*` metric names. A disabled handle behaves like
     /// [`Progress::new`].
     pub fn with_obs(obs: &ObsHandle) -> Self {
-        let sinks = obs.registry().map(|reg| Sinks {
-            blocks: reg.counter("coord.blocks"),
-            points: reg.counter("coord.points"),
-            busy_ns: reg.counter("coord.busy_ns"),
-            wall_ns: reg.counter("coord.wall_ns"),
-            worker_ns: reg.counter("coord.worker_ns"),
-            prep_ns: reg.histogram("coord.prep_ns"),
-            sweep_ns: reg.histogram("coord.sweep_ns"),
+        let sinks = obs.registry().map(|reg| {
+            // Snapshot readers see which distance kernel served this
+            // process's prep path (DESIGN.md §15).
+            reg.set_label("kernel", Kernel::active().name());
+            Sinks {
+                blocks: reg.counter("coord.blocks"),
+                points: reg.counter("coord.points"),
+                busy_ns: reg.counter("coord.busy_ns"),
+                wall_ns: reg.counter("coord.wall_ns"),
+                worker_ns: reg.counter("coord.worker_ns"),
+                prep_ns: reg.histogram("coord.prep_ns"),
+                sweep_ns: reg.histogram("coord.sweep_ns"),
+                kernel_ns: reg.histogram("coord.prep.kernel_ns"),
+            }
         });
         Progress {
             sinks,
@@ -78,6 +87,18 @@ impl Progress {
             s.points.add(points as u64);
             s.busy_ns.add(ns);
             s.prep_ns.record_ns(ns);
+        }
+    }
+
+    /// Record the distance-kernel slice of one finished Phase-1 block:
+    /// `ns` nanoseconds spent inside `distances_block`. This is a
+    /// sub-slice of the time already counted by [`Progress::record_block`],
+    /// so it does NOT feed busy time — only the kernel counter and the
+    /// `coord.prep.kernel_ns` histogram.
+    pub fn record_kernel(&self, ns: u64) {
+        self.kernel_ns.add(ns);
+        if let Some(s) = &self.sinks {
+            s.kernel_ns.record_ns(ns);
         }
     }
 
@@ -119,6 +140,12 @@ impl Progress {
     /// Cumulative Phase-2 busy time across workers, nanoseconds.
     pub fn sweep_ns(&self) -> u64 {
         self.sweep_ns.get()
+    }
+
+    /// Cumulative time inside the distance kernel across workers,
+    /// nanoseconds (a sub-slice of [`Progress::prep_ns`]).
+    pub fn kernel_ns(&self) -> u64 {
+        self.kernel_ns.get()
     }
 
     /// Total busy time across both phases, nanoseconds.
@@ -225,6 +252,7 @@ mod tests {
         let obs = ObsHandle::enabled("coord-test");
         let p = Progress::with_obs(&obs);
         p.record_block(8, 1_500);
+        p.record_kernel(900);
         p.record_sweep(2_500);
         p.record_wall(3, 10_000);
         let reg = obs.registry().unwrap();
@@ -235,8 +263,11 @@ mod tests {
         assert_eq!(reg.counter("coord.worker_ns").get(), 30_000);
         assert_eq!(reg.histogram("coord.prep_ns").count(), 1);
         assert_eq!(reg.histogram("coord.sweep_ns").count(), 1);
-        // The job-local view is unaffected by the roll-up.
+        assert_eq!(reg.histogram("coord.prep.kernel_ns").count(), 1);
+        // The job-local view is unaffected by the roll-up; kernel time
+        // stays out of busy time (it is a sub-slice of prep time).
         assert_eq!(p.blocks(), 1);
+        assert_eq!(p.kernel_ns(), 900);
         assert_eq!(p.busy_ns(), 4_000);
     }
 

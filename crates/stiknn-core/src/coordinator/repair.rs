@@ -101,6 +101,7 @@ pub fn repair_rows(
 mod tests {
     use super::*;
     use crate::knn::distance::Metric;
+    use crate::knn::kernel::NormCache;
     use crate::shapley::delta::{ingest_rows, MutableRows, RetainedRows};
     use crate::shapley::values::ValueVector;
     use crate::shapley::StiParams;
@@ -117,8 +118,10 @@ mod tests {
         let mut rows = RetainedRows::new(n);
         let mut mrows = MutableRows::new(n, d);
         let mut vv = ValueVector::zeros(n);
+        let params = StiParams::new(k);
+        let norms = NormCache::build(&tx, d, params.metric);
         ingest_rows(
-            &tx, &ty, d, &qx, &qy, &StiParams::new(k), &mut rows, &mut mrows, &mut vv,
+            &tx, &ty, d, &qx, &qy, &params, &norms, &mut rows, &mut mrows, &mut vv,
         );
         let new_x: Vec<f32> = tx[0..d].to_vec();
         let mut new_ty = ty.clone();

@@ -76,6 +76,7 @@ impl Metric {
 /// Distances from `query` (length d) to all rows of `points` (n×d,
 /// row-major). Output length n.
 pub fn distances(query: &[f32], points: &[f32], d: usize, metric: Metric) -> Vec<f64> {
+    assert!(d > 0, "distances: d must be positive");
     assert_eq!(query.len(), d);
     assert_eq!(points.len() % d, 0, "points not a multiple of d");
     points
@@ -93,6 +94,9 @@ pub fn distances_into(
     metric: Metric,
     out: &mut [f64],
 ) {
+    // d == 0 would make the row-count assert below pass vacuously for
+    // ANY out length and leave `out` untouched — reject it loudly.
+    assert!(d > 0, "distances_into: d must be positive");
     assert_eq!(query.len(), d);
     assert_eq!(out.len() * d, points.len());
     for (o, row) in out.iter_mut().zip(points.chunks_exact(d)) {
@@ -114,17 +118,18 @@ pub fn argsort_by_distance(dists: &[f64]) -> Vec<usize> {
 /// variant: the prep loop sorts one order per TEST POINT, so a fresh
 /// `Vec<usize>` per call is a measurable allocation cost on
 /// small-n/large-t streams). Same stable ordering contract.
+///
+/// Ordering is `total_cmp` + index tiebreak — the repo-wide NaN
+/// convention: NaN sorts as a definite value (positive NaN after
+/// +inf) instead of `partial_cmp().unwrap_or(Equal)`'s silent
+/// "incomparable means equal", which made the final order depend on
+/// the sort algorithm's visit pattern whenever a NaN was present.
 pub fn argsort_by_distance_into(dists: &[f64], order: &mut [usize]) {
     assert_eq!(order.len(), dists.len(), "order buffer length mismatch");
     for (pos, slot) in order.iter_mut().enumerate() {
         *slot = pos;
     }
-    order.sort_by(|&a, &b| {
-        dists[a]
-            .partial_cmp(&dists[b])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| dists[a].total_cmp(&dists[b]).then(a.cmp(&b)));
 }
 
 /// Packed-key argsort — the prep hot loop's fast path. For NON-NEGATIVE
@@ -293,6 +298,40 @@ mod tests {
         // and NaN inputs still propagate (not masked to 0 by the clamp)
         let d = Metric::Cosine.dist(&[f32::NAN, 1.0], &[1.0, 1.0]);
         assert!(d.is_nan(), "NaN must propagate, got {d}");
+    }
+
+    // The comparator fallback's NaN order is PINNED: total_cmp sorts
+    // positive NaN after +inf, ties (including NaN==NaN) break by
+    // index. This is the order the keyed path's release fallback
+    // takes after its debug-assert contract rejects such input in
+    // debug builds — never `unwrap_or(Equal)`'s visit-pattern roulette.
+    #[test]
+    fn argsort_nan_order_is_total_and_deterministic() {
+        let dists = [f64::NAN, 1.0, f64::NAN, 0.5];
+        let order = argsort_by_distance(&dists);
+        assert_eq!(order, vec![3, 1, 0, 2]);
+        // idempotent: a second sort over the same buffer agrees
+        let mut again = vec![7usize; 4];
+        argsort_by_distance_into(&dists, &mut again);
+        assert_eq!(again, order);
+        // negative infinities and negatives order below all finites
+        let order = argsort_by_distance(&[0.0, f64::NEG_INFINITY, -3.0, f64::INFINITY]);
+        assert_eq!(order, vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "distances_into: d must be positive")]
+    fn distances_into_rejects_zero_dimension() {
+        // with d == 0 the out.len()*d == points.len() assert passes
+        // VACUOUSLY for any out length and the buffer stays unwritten
+        let mut out = vec![0.0f64; 2];
+        distances_into(&[], &[], 0, Metric::SqEuclidean, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "distances: d must be positive")]
+    fn distances_rejects_zero_dimension() {
+        distances(&[], &[], 0, Metric::SqEuclidean);
     }
 
     #[test]

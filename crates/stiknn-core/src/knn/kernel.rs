@@ -1,0 +1,901 @@
+//! Runtime-dispatched SIMD distance kernels with norm caching and
+//! cache-blocked batched prep (DESIGN.md §15).
+//!
+//! Every engine pays O(n·d) per test point in the distance loop before
+//! the O(n log n) argsort even starts; at realistic d that loop
+//! dominates prep wall time. This module replaces the scalar
+//! [`Metric::dist`] left-fold on the prep hot path with three pieces:
+//!
+//! * **SIMD kernels** — AVX2+FMA when the host has them (checked once
+//!   via `is_x86_feature_detected!`), with a portable-scalar fallback
+//!   that computes the SAME fixed 8-lane accumulation tree: element `i`
+//!   lands in lane `i % 8` (the portable path uses `f64::mul_add`,
+//!   which is the correctly-rounded FMA the hardware executes), lanes
+//!   reduce pairwise in one fixed order. SIMD and fallback are therefore
+//!   **bit-identical** — property-tested, not assumed — so a resultset
+//!   never depends on which machine computed it.
+//! * **Norm caching** — [`NormCache`] holds per-train-row ‖x‖² (one
+//!   fused dot per row, computed once per session and repaired on
+//!   `add_train`/`remove_train`), turning squared euclidean into
+//!   dot-product form `‖q‖² − 2⟨q,x⟩ + ‖x‖²` and cosine into a single
+//!   fused dot per pair. The cache stores values of the same shared
+//!   `⟨x,x⟩` kernel the per-pair path computes, so caching never
+//!   changes a bit.
+//! * **Blocked batched prep** — [`distances_block`] computes a B×n
+//!   distance tile by walking train rows in L1-sized tiles and
+//!   revisiting each tile for all B queries, so one train-row load from
+//!   memory is amortized over B dot products.
+//!
+//! The lane-tree reduction order differs from the scalar left-fold, so
+//! kernel distances are not bit-equal to [`Metric::dist`] — they agree
+//! to ≤ 1e-12 relative, and (the property the pipeline actually
+//! consumes) produce IDENTICAL rankings under the stable argsort, ties
+//! included. Since every downstream value depends on distances only
+//! through the ranking, values are unchanged wherever rankings are.
+//! [`Kernel::Reference`] keeps the old scalar loop selectable
+//! (`STIKNN_KERNEL=reference`) for A/B against the seed path.
+//!
+//! Squared-euclidean dot form can go negative by an ulp when `q ≈ x`
+//! (catastrophic cancellation); like cosine, it clamps to exactly 0.0
+//! because every metric promises the non-negative domain the packed-key
+//! argsort sorts in. NaN survives the clamp comparison and propagates.
+
+use std::sync::OnceLock;
+
+use crate::knn::distance::{distances_into, Metric};
+
+/// Which distance kernel implementation to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Pick the fastest implementation the host supports (the default).
+    Auto,
+    /// AVX2+FMA lanes (x86-64 hosts that pass feature detection).
+    Avx2,
+    /// Scalar twin of the SIMD path — same 8-lane tree, bit-identical.
+    Portable,
+    /// The seed scalar loop ([`Metric::dist`] left-fold), kept
+    /// selectable for A/B; prep and delta-repair stay in lockstep
+    /// under it because every distance routes through this module.
+    Reference,
+}
+
+impl Kernel {
+    /// Parse a kernel name (case-insensitive); `None` for unknown.
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(Kernel::Auto),
+            "avx2" => Some(Kernel::Avx2),
+            "portable" => Some(Kernel::Portable),
+            "reference" => Some(Kernel::Reference),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (the `kernel` label in metrics snapshots).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Auto => "auto",
+            Kernel::Avx2 => "avx2",
+            Kernel::Portable => "portable",
+            Kernel::Reference => "reference",
+        }
+    }
+
+    /// The kernel this process runs: `STIKNN_KERNEL` (unknown values
+    /// fall back to `auto`) resolved against host capabilities, cached
+    /// for the process lifetime. Never returns [`Kernel::Auto`].
+    pub fn active() -> Kernel {
+        static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            let requested = std::env::var("STIKNN_KERNEL")
+                .ok()
+                .and_then(|v| Kernel::parse(&v))
+                .unwrap_or(Kernel::Auto);
+            resolve(requested)
+        })
+    }
+}
+
+/// Resolve a requested kernel against what the host can actually run.
+fn resolve(requested: Kernel) -> Kernel {
+    match requested {
+        Kernel::Portable | Kernel::Reference => requested,
+        Kernel::Auto | Kernel::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+                {
+                    return Kernel::Avx2;
+                }
+            }
+            Kernel::Portable
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The 8-lane accumulation tree.
+//
+// Contract shared by the AVX2 and portable paths: element i accumulates
+// into lane (i % 8) in increasing-i order with a fused multiply-add
+// (dot) or an add of |a−b| (manhattan); after the main loop the tail
+// (from the largest multiple of 8) runs the SAME scalar loop in both
+// paths; the 8 lanes reduce as ((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7)).
+// Every operation is correctly rounded and executed in the same order,
+// which is what makes the two paths bit-identical.
+// ---------------------------------------------------------------------
+
+/// Fixed final reduction of the 8 accumulator lanes.
+#[inline]
+fn reduce8(lanes: &[f64; 8]) -> f64 {
+    let s0 = lanes[0] + lanes[4];
+    let s1 = lanes[1] + lanes[5];
+    let s2 = lanes[2] + lanes[6];
+    let s3 = lanes[3] + lanes[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Scalar tail of the dot lane tree, from `start` (a multiple of 8 —
+/// the AVX2 path hands over here so element i still maps to lane i%8).
+#[inline]
+fn dot_tail(a: &[f32], b: &[f32], start: usize, lanes: &mut [f64; 8]) {
+    for i in start..a.len() {
+        lanes[i % 8] = (a[i] as f64).mul_add(b[i] as f64, lanes[i % 8]);
+    }
+}
+
+/// Scalar tail of the manhattan lane tree (same start contract).
+#[inline]
+fn manhattan_tail(a: &[f32], b: &[f32], start: usize, lanes: &mut [f64; 8]) {
+    for i in start..a.len() {
+        lanes[i % 8] += ((a[i] as f64) - (b[i] as f64)).abs();
+    }
+}
+
+/// Portable ⟨a,b⟩: the full lane tree run in scalar code.
+/// `f64::mul_add` is the correctly-rounded FMA, so each lane's value is
+/// bit-identical to the AVX2 `vfmadd` sequence.
+fn dot_portable(a: &[f32], b: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; 8];
+    dot_tail(a, b, 0, &mut lanes);
+    reduce8(&lanes)
+}
+
+/// Portable Σ|a−b| with the same lane tree.
+fn manhattan_portable(a: &[f32], b: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; 8];
+    manhattan_tail(a, b, 0, &mut lanes);
+    reduce8(&lanes)
+}
+
+/// AVX2+FMA ⟨a,b⟩. 8 f32 per iteration, widened to two f64×4 vectors;
+/// `acc0` holds lanes 0–3, `acc1` lanes 4–7, so lane j accumulates
+/// exactly the elements with i % 8 == j — the portable tree.
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` via feature detection.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let chunks = a.len() / 8;
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let pa = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+        let pb = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+        let a_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(pa));
+        let a_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(pa));
+        let b_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(pb));
+        let b_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(pb));
+        acc0 = _mm256_fmadd_pd(a_lo, b_lo, acc0);
+        acc1 = _mm256_fmadd_pd(a_hi, b_hi, acc1);
+    }
+    let mut lanes = [0.0f64; 8];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+    dot_tail(a, b, chunks * 8, &mut lanes);
+    reduce8(&lanes)
+}
+
+/// AVX2 Σ|a−b|; abs is the sign-bit mask, identical to `f64::abs`.
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` via feature detection.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn manhattan_avx2(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let chunks = a.len() / 8;
+    let abs_mask = _mm256_castsi256_pd(_mm256_set1_epi64x(i64::MAX));
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let pa = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+        let pb = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+        let a_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(pa));
+        let a_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(pa));
+        let b_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(pb));
+        let b_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(pb));
+        acc0 = _mm256_add_pd(acc0, _mm256_and_pd(_mm256_sub_pd(a_lo, b_lo), abs_mask));
+        acc1 = _mm256_add_pd(acc1, _mm256_and_pd(_mm256_sub_pd(a_hi, b_hi), abs_mask));
+    }
+    let mut lanes = [0.0f64; 8];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+    manhattan_tail(a, b, chunks * 8, &mut lanes);
+    reduce8(&lanes)
+}
+
+/// Dispatch ⟨a,b⟩ on an already-resolved kernel.
+#[inline]
+fn dot_with(kernel: Kernel, a: &[f32], b: &[f32]) -> f64 {
+    match kernel {
+        // SAFETY: `Kernel::Avx2` is only produced by `resolve` after
+        // feature detection confirmed avx2+fma (tests gate likewise).
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { dot_avx2(a, b) },
+        _ => dot_portable(a, b),
+    }
+}
+
+/// Dispatch Σ|a−b| on an already-resolved kernel.
+#[inline]
+fn manhattan_with(kernel: Kernel, a: &[f32], b: &[f32]) -> f64 {
+    match kernel {
+        // SAFETY: as for `dot_with`.
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { manhattan_avx2(a, b) },
+        _ => manhattan_portable(a, b),
+    }
+}
+
+/// Clamp FP-noise negatives to exactly 0.0 (the packed-key argsort's
+/// non-negative domain); NaN fails the comparison and propagates.
+#[inline]
+fn clamp_non_negative(v: f64) -> f64 {
+    if v < 0.0 {
+        0.0
+    } else {
+        v
+    }
+}
+
+/// True when the metric consumes cached squared norms.
+#[inline]
+fn uses_norms(metric: Metric) -> bool {
+    matches!(metric, Metric::SqEuclidean | Metric::Cosine)
+}
+
+/// Norm-form distance for the metrics that have one. `nq`/`nx` MUST be
+/// the shared `dot_with(kernel, v, v)` of the two operands — the cache
+/// stores exactly that, which is why caching never changes a bit.
+#[inline]
+fn norm_form(kernel: Kernel, metric: Metric, q: &[f32], x: &[f32], nq: f64, nx: f64) -> f64 {
+    match metric {
+        Metric::SqEuclidean => {
+            let dot = dot_with(kernel, q, x);
+            clamp_non_negative((nq - 2.0 * dot) + nx)
+        }
+        Metric::Cosine => {
+            // Zero-vector convention matches `Metric::dist`: distance 1.
+            // NaN norms fail both == tests and propagate through the dot.
+            if nq == 0.0 || nx == 0.0 {
+                1.0
+            } else {
+                let dot = dot_with(kernel, q, x);
+                clamp_non_negative(1.0 - dot / (nq.sqrt() * nx.sqrt()))
+            }
+        }
+        Metric::Manhattan => unreachable!("manhattan has no norm form"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Norm cache
+// ---------------------------------------------------------------------
+
+/// Per-train-row squared norms ‖x‖², computed once and kept in sync
+/// with live train-set edits. A pure performance cache: it stores the
+/// same `⟨x,x⟩` the per-pair path would compute, so results are
+/// bit-identical with or without it. Manhattan needs no norms; its
+/// cache is an empty vector that only tracks the row count.
+#[derive(Clone, Debug)]
+pub struct NormCache {
+    d: usize,
+    rows: usize,
+    metric: Metric,
+    sq: Vec<f64>,
+}
+
+impl NormCache {
+    /// Build the cache for `points` (n×d row-major).
+    pub fn build(points: &[f32], d: usize, metric: Metric) -> NormCache {
+        assert!(d > 0, "NormCache::build: d must be positive");
+        assert_eq!(
+            points.len() % d,
+            0,
+            "NormCache::build: points not a multiple of d"
+        );
+        let rows = points.len() / d;
+        let kernel = Kernel::active();
+        let sq = if uses_norms(metric) {
+            points
+                .chunks_exact(d)
+                .map(|row| dot_with(kernel, row, row))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        NormCache { d, rows, metric, sq }
+    }
+
+    /// Append one row's norm (mirrors `train_x.extend_from_slice(row)`).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "NormCache::push_row: wrong dimension");
+        if uses_norms(self.metric) {
+            self.sq.push(dot_with(Kernel::active(), row, row));
+        }
+        self.rows += 1;
+    }
+
+    /// Drop one row's norm, shifting the tail down (mirrors
+    /// `train_x.drain(index*d..(index+1)*d)`).
+    pub fn remove_row(&mut self, index: usize) {
+        assert!(index < self.rows, "NormCache::remove_row: out of range");
+        if uses_norms(self.metric) {
+            self.sq.remove(index);
+        }
+        self.rows -= 1;
+    }
+
+    /// Number of cached rows.
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Assert the cache matches the train set a caller is about to use
+    /// it against — a stale cache is corrupted state, fail loudly.
+    fn check(&self, d: usize, metric: Metric, rows: usize) {
+        assert_eq!(self.d, d, "NormCache: dimension mismatch");
+        assert_eq!(self.metric, metric, "NormCache: metric mismatch");
+        assert_eq!(self.rows, rows, "NormCache: row-count mismatch");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public distance entry points
+// ---------------------------------------------------------------------
+
+/// Single-pair distance under the active kernel (norms computed on the
+/// fly). The delta-repair path uses this for its O(d) edit distance,
+/// which keeps repaired rows bit-identical to from-scratch prep: both
+/// evaluate the same norm-form expression on the same operands.
+pub fn pair_dist(metric: Metric, q: &[f32], x: &[f32]) -> f64 {
+    pair_dist_with(Kernel::active(), metric, q, x)
+}
+
+fn pair_dist_with(kernel: Kernel, metric: Metric, q: &[f32], x: &[f32]) -> f64 {
+    assert_eq!(q.len(), x.len(), "pair_dist: dimension mismatch");
+    assert!(!q.is_empty(), "pair_dist: d must be positive");
+    if kernel == Kernel::Reference {
+        return metric.dist(q, x);
+    }
+    match metric {
+        Metric::Manhattan => manhattan_with(kernel, q, x),
+        Metric::SqEuclidean | Metric::Cosine => {
+            let nq = dot_with(kernel, q, q);
+            let nx = dot_with(kernel, x, x);
+            norm_form(kernel, metric, q, x, nq, nx)
+        }
+    }
+}
+
+/// Kernel twin of [`distances_into`]: distances from `query` to every
+/// row of `points`, reading per-row norms from the cache.
+pub fn distances_into_kernel(
+    query: &[f32],
+    points: &[f32],
+    d: usize,
+    metric: Metric,
+    norms: &NormCache,
+    out: &mut [f64],
+) {
+    distances_into_with(Kernel::active(), query, points, d, metric, norms, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn distances_into_with(
+    kernel: Kernel,
+    query: &[f32],
+    points: &[f32],
+    d: usize,
+    metric: Metric,
+    norms: &NormCache,
+    out: &mut [f64],
+) {
+    assert!(d > 0, "distances_into_kernel: d must be positive");
+    assert_eq!(query.len(), d, "distances_into_kernel: query length");
+    assert_eq!(
+        out.len() * d,
+        points.len(),
+        "distances_into_kernel: out/points mismatch"
+    );
+    norms.check(d, metric, out.len());
+    if kernel == Kernel::Reference {
+        distances_into(query, points, d, metric, out);
+        return;
+    }
+    match metric {
+        Metric::Manhattan => {
+            for (o, row) in out.iter_mut().zip(points.chunks_exact(d)) {
+                *o = manhattan_with(kernel, query, row);
+            }
+        }
+        Metric::SqEuclidean | Metric::Cosine => {
+            let nq = dot_with(kernel, query, query);
+            for ((o, row), &nx) in out
+                .iter_mut()
+                .zip(points.chunks_exact(d))
+                .zip(norms.sq.iter())
+            {
+                *o = norm_form(kernel, metric, query, row, nq, nx);
+            }
+        }
+    }
+}
+
+/// L1 row-tile budget for [`distances_block`]: a tile of train rows
+/// that stays resident while all B queries revisit it.
+const TILE_BYTES: usize = 32 * 1024;
+
+#[inline]
+fn tile_rows(d: usize) -> usize {
+    (TILE_BYTES / (4 * d)).clamp(8, 1024)
+}
+
+/// Cache-blocked batched prep: distances from B queries (`queries`,
+/// B×d row-major) to all n rows of `points`, written to `out` (B×n
+/// row-major, `out[qi*n + i]`). Train rows are walked once per L1-sized
+/// tile and revisited for every query, amortizing each row load over B
+/// dot products. Tiling only reorders WHICH (query, row) pair is
+/// computed when — each pair's arithmetic is untouched — so the output
+/// is bitwise identical to B calls of [`distances_into_kernel`].
+pub fn distances_block(
+    queries: &[f32],
+    points: &[f32],
+    d: usize,
+    metric: Metric,
+    norms: &NormCache,
+    out: &mut [f64],
+) {
+    distances_block_with(Kernel::active(), queries, points, d, metric, norms, out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn distances_block_with(
+    kernel: Kernel,
+    queries: &[f32],
+    points: &[f32],
+    d: usize,
+    metric: Metric,
+    norms: &NormCache,
+    out: &mut [f64],
+) {
+    assert!(d > 0, "distances_block: d must be positive");
+    assert_eq!(
+        queries.len() % d,
+        0,
+        "distances_block: queries not a multiple of d"
+    );
+    let b = queries.len() / d;
+    assert_eq!(
+        points.len() % d,
+        0,
+        "distances_block: points not a multiple of d"
+    );
+    let n = points.len() / d;
+    assert_eq!(out.len(), b * n, "distances_block: out length mismatch");
+    norms.check(d, metric, n);
+    if kernel == Kernel::Reference {
+        for (q, orow) in queries.chunks_exact(d).zip(out.chunks_exact_mut(n)) {
+            distances_into(q, points, d, metric, orow);
+        }
+        return;
+    }
+    // Per-query norms once per block (empty for manhattan).
+    let nq: Vec<f64> = if uses_norms(metric) {
+        queries
+            .chunks_exact(d)
+            .map(|q| dot_with(kernel, q, q))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let tile = tile_rows(d);
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + tile).min(n);
+        let rows = &points[lo * d..hi * d];
+        for (qi, q) in queries.chunks_exact(d).enumerate() {
+            let orow = &mut out[qi * n + lo..qi * n + hi];
+            match metric {
+                Metric::Manhattan => {
+                    for (o, row) in orow.iter_mut().zip(rows.chunks_exact(d)) {
+                        *o = manhattan_with(kernel, q, row);
+                    }
+                }
+                Metric::SqEuclidean | Metric::Cosine => {
+                    let qn = nq[qi];
+                    for ((o, row), &nx) in orow
+                        .iter_mut()
+                        .zip(rows.chunks_exact(d))
+                        .zip(norms.sq[lo..hi].iter())
+                    {
+                        *o = norm_form(kernel, metric, q, row, qn, nx);
+                    }
+                }
+            }
+        }
+        lo = hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::distance::{argsort_by_distance, distances};
+    use crate::util::rng::Rng;
+
+    /// Odd tails exercise the remainder loop; 8/16 the pure-SIMD path.
+    const DIMS: [usize; 7] = [1, 3, 7, 8, 16, 100, 301];
+    const METRICS: [Metric; 3] = [Metric::SqEuclidean, Metric::Manhattan, Metric::Cosine];
+
+    #[cfg(target_arch = "x86_64")]
+    fn avx2_available() -> bool {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn avx2_available() -> bool {
+        false
+    }
+
+    fn random_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn simd_and_portable_primitives_are_bit_identical() {
+        if !avx2_available() {
+            return; // host cannot run the SIMD side of the comparison
+        }
+        let mut rng = Rng::new(41);
+        for d in DIMS {
+            for _ in 0..8 {
+                let a = random_vec(&mut rng, d);
+                let b = random_vec(&mut rng, d);
+                let sp = dot_with(Kernel::Portable, &a, &b);
+                let sv = dot_with(Kernel::Avx2, &a, &b);
+                assert_eq!(sp.to_bits(), sv.to_bits(), "dot d={d}");
+                let mp = manhattan_with(Kernel::Portable, &a, &b);
+                let mv = manhattan_with(Kernel::Avx2, &a, &b);
+                assert_eq!(mp.to_bits(), mv.to_bits(), "manhattan d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_and_portable_distances_are_bit_identical() {
+        if !avx2_available() {
+            return;
+        }
+        let mut rng = Rng::new(42);
+        let n = 37;
+        for d in DIMS {
+            let points = random_vec(&mut rng, n * d);
+            let q = random_vec(&mut rng, d);
+            for metric in METRICS {
+                let norms = NormCache::build(&points, d, metric);
+                let mut a = vec![0.0f64; n];
+                let mut b = vec![0.0f64; n];
+                distances_into_with(Kernel::Portable, &q, &points, d, metric, &norms, &mut a);
+                distances_into_with(Kernel::Avx2, &q, &points, d, metric, &norms, &mut b);
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "d={d} metric={metric:?}");
+                }
+                let dist = pair_dist_with(Kernel::Portable, metric, &q, &points[..d]);
+                let dist_v = pair_dist_with(Kernel::Avx2, metric, &q, &points[..d]);
+                assert_eq!(dist.to_bits(), dist_v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_unblocked_bitwise() {
+        let mut rng = Rng::new(43);
+        // d=301 shrinks the tile below n, exercising the tile seams.
+        for (n, d) in [(1usize, 3usize), (17, 8), (100, 301)] {
+            let points = random_vec(&mut rng, n * d);
+            for b in [1usize, 3, 8] {
+                let queries = random_vec(&mut rng, b * d);
+                for metric in METRICS {
+                    let norms = NormCache::build(&points, d, metric);
+                    let mut blocked = vec![0.0f64; b * n];
+                    distances_block(&queries, &points, d, metric, &norms, &mut blocked);
+                    let mut single = vec![0.0f64; n];
+                    for qi in 0..b {
+                        let q = &queries[qi * d..(qi + 1) * d];
+                        distances_into_kernel(q, &points, d, metric, &norms, &mut single);
+                        for (x, y) in blocked[qi * n..(qi + 1) * n].iter().zip(&single) {
+                            assert_eq!(x.to_bits(), y.to_bits(), "n={n} d={d} b={b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn norm_cache_edits_match_rebuild_bitwise() {
+        let mut rng = Rng::new(44);
+        let (n, d) = (23usize, 16usize);
+        let points = random_vec(&mut rng, n * d);
+        let extra = random_vec(&mut rng, d);
+        for metric in METRICS {
+            let mut cache = NormCache::build(&points, d, metric);
+            // push == rebuild over the extended set
+            let mut extended = points.clone();
+            extended.extend_from_slice(&extra);
+            cache.push_row(&extra);
+            let rebuilt = NormCache::build(&extended, d, metric);
+            assert_eq!(cache.len(), rebuilt.len());
+            assert_eq!(cache.sq.len(), rebuilt.sq.len());
+            for (a, b) in cache.sq.iter().zip(&rebuilt.sq) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            // remove == rebuild over the drained set
+            cache.remove_row(5);
+            let mut drained = extended.clone();
+            drained.drain(5 * d..6 * d);
+            let rebuilt = NormCache::build(&drained, d, metric);
+            assert_eq!(cache.len(), rebuilt.len());
+            for (a, b) in cache.sq.iter().zip(&rebuilt.sq) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    // The lane tree reorders the reduction, so kernel distances differ
+    // from the scalar left-fold only by accumulated rounding: ≤ 1e-12
+    // relative on well-scaled data — the documented envelope.
+    #[test]
+    fn kernel_distances_match_scalar_within_envelope() {
+        let mut rng = Rng::new(45);
+        let n = 41;
+        for d in DIMS {
+            let points = random_vec(&mut rng, n * d);
+            let q = random_vec(&mut rng, d);
+            for metric in METRICS {
+                let norms = NormCache::build(&points, d, metric);
+                let mut got = vec![0.0f64; n];
+                distances_into_kernel(&q, &points, d, metric, &norms, &mut got);
+                let want = distances(&q, &points, d, metric);
+                for (g, w) in got.iter().zip(&want) {
+                    let tol = 1e-12 * w.abs().max(1.0);
+                    assert!(
+                        (g - w).abs() <= tol,
+                        "d={d} metric={metric:?} got={g} want={w}"
+                    );
+                }
+            }
+        }
+    }
+
+    // What the pipeline actually consumes is the RANKING. Deliberate
+    // exact ties (duplicated train rows) must keep their stable
+    // index order, and untied points must not cross.
+    #[test]
+    fn rankings_match_scalar_path_under_deliberate_ties() {
+        let mut rng = Rng::new(46);
+        let d = 8;
+        let base: Vec<Vec<f32>> = (0..20).map(|_| random_vec(&mut rng, d)).collect();
+        // each base row appears 3x => 3-way exact distance ties
+        let mut points = Vec::new();
+        for _rep in 0..3 {
+            for row in &base {
+                points.extend_from_slice(row);
+            }
+        }
+        let n = 60;
+        let q = random_vec(&mut rng, d);
+        for metric in METRICS {
+            let norms = NormCache::build(&points, d, metric);
+            let mut kd = vec![0.0f64; n];
+            distances_into_kernel(&q, &points, d, metric, &norms, &mut kd);
+            let sd = distances(&q, &points, d, metric);
+            let k_order = argsort_by_distance(&kd);
+            let s_order = argsort_by_distance(&sd);
+            assert_eq!(k_order, s_order, "metric={metric:?}");
+            // the three copies of each base row rank adjacently in
+            // ascending index order (stability preserved)
+            for w in k_order.chunks_exact(3) {
+                assert_eq!(w[0] % 20, w[1] % 20);
+                assert_eq!(w[1] % 20, w[2] % 20);
+                assert!(w[0] < w[1] && w[1] < w[2], "tie order broken: {w:?}");
+            }
+        }
+    }
+
+    // Every kernel distance on finite input must live in the packed-key
+    // argsort's domain: non-NaN, sign bit clear (clamp guarantees it
+    // even when the dot form cancels below zero).
+    #[test]
+    fn kernel_distances_stay_in_keyed_argsort_domain() {
+        let mut rng = Rng::new(47);
+        for d in DIMS {
+            let n = 29;
+            let mut points = random_vec(&mut rng, n * d);
+            // adversarial rows for cancellation: the query itself,
+            // a scaled copy (cosine-parallel), and an all-zero row
+            let q = random_vec(&mut rng, d);
+            points[..d].copy_from_slice(&q);
+            for (i, v) in q.iter().enumerate() {
+                points[d + i] = v * 2.0;
+            }
+            for v in &mut points[2 * d..3 * d] {
+                *v = 0.0;
+            }
+            for metric in METRICS {
+                let norms = NormCache::build(&points, d, metric);
+                let mut dists = vec![0.0f64; n];
+                distances_into_kernel(&q, &points, d, metric, &norms, &mut dists);
+                for (i, dist) in dists.iter().enumerate() {
+                    assert!(!dist.is_nan(), "row {i} metric={metric:?}");
+                    assert_eq!(dist.to_bits() >> 63, 0, "negative bits: row {i} {dist:e}");
+                }
+                // the self-row is an exact or clamped zero under sqeuclidean
+                if metric == Metric::SqEuclidean {
+                    assert_eq!(dists[0], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nan_propagates_like_the_scalar_path() {
+        let mut rng = Rng::new(48);
+        let (n, d) = (9usize, 13usize);
+        let mut points = random_vec(&mut rng, n * d);
+        points[4 * d + 2] = f32::NAN; // poison row 4
+        let mut q = random_vec(&mut rng, d);
+        for metric in METRICS {
+            let norms = NormCache::build(&points, d, metric);
+            let mut dists = vec![0.0f64; n];
+            distances_into_kernel(&q, &points, d, metric, &norms, &mut dists);
+            for (i, dist) in dists.iter().enumerate() {
+                assert_eq!(dist.is_nan(), i == 4, "metric={metric:?} row {i}");
+            }
+        }
+        // poisoned QUERY propagates to every row
+        q[0] = f32::NAN;
+        for metric in METRICS {
+            let norms = NormCache::build(&points, d, metric);
+            let mut dists = vec![0.0f64; n];
+            distances_into_kernel(&q, &points, d, metric, &norms, &mut dists);
+            assert!(dists.iter().all(|v| v.is_nan()), "metric={metric:?}");
+        }
+    }
+
+    #[test]
+    fn cosine_zero_vector_and_clamp_match_convention() {
+        let mut rng = Rng::new(49);
+        let d = 7;
+        let q = random_vec(&mut rng, d);
+        // train rows: zero vector, 2q (parallel), −q (antiparallel)
+        let mut points = vec![0.0f32; d];
+        points.extend(q.iter().map(|v| v * 2.0));
+        points.extend(q.iter().map(|v| -v));
+        let norms = NormCache::build(&points, d, Metric::Cosine);
+        let mut dists = vec![0.0f64; 3];
+        distances_into_kernel(&q, &points, d, Metric::Cosine, &norms, &mut dists);
+        assert_eq!(dists[0], 1.0, "zero train row => distance exactly 1");
+        assert!(dists[1] >= 0.0 && dists[1] < 1e-12, "parallel: {:e}", dists[1]);
+        assert!((dists[2] - 2.0).abs() < 1e-12, "antiparallel: {}", dists[2]);
+        // zero QUERY: every distance is exactly 1
+        let zq = vec![0.0f32; d];
+        distances_into_kernel(&zq, &points, d, Metric::Cosine, &norms, &mut dists);
+        assert!(dists.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn reference_kernel_reproduces_the_seed_loop_bitwise() {
+        let mut rng = Rng::new(50);
+        let (n, d) = (19usize, 11usize);
+        let points = random_vec(&mut rng, n * d);
+        let queries = random_vec(&mut rng, 3 * d);
+        let q = &queries[..d];
+        for metric in METRICS {
+            let norms = NormCache::build(&points, d, metric);
+            let want = distances(q, &points, d, metric);
+            let mut got = vec![0.0f64; n];
+            distances_into_with(Kernel::Reference, q, &points, d, metric, &norms, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+            let pd = pair_dist_with(Kernel::Reference, metric, q, &points[..d]);
+            assert_eq!(pd.to_bits(), metric.dist(q, &points[..d]).to_bits());
+            let mut blocked = vec![0.0f64; 3 * n];
+            distances_block_with(
+                Kernel::Reference,
+                &queries,
+                &points,
+                d,
+                metric,
+                &norms,
+                &mut blocked,
+            );
+            for qi in 0..3 {
+                let want = distances(&queries[qi * d..(qi + 1) * d], &points, d, metric);
+                for (g, w) in blocked[qi * n..(qi + 1) * n].iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_parse_and_active_resolution() {
+        assert_eq!(Kernel::parse("avx2"), Some(Kernel::Avx2));
+        assert_eq!(Kernel::parse("AVX2"), Some(Kernel::Avx2));
+        assert_eq!(Kernel::parse("portable"), Some(Kernel::Portable));
+        assert_eq!(Kernel::parse("reference"), Some(Kernel::Reference));
+        assert_eq!(Kernel::parse("auto"), Some(Kernel::Auto));
+        assert_eq!(Kernel::parse("nope"), None);
+        for k in [Kernel::Auto, Kernel::Avx2, Kernel::Portable, Kernel::Reference] {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        // the resolved kernel is never Auto and never an unsupported Avx2
+        let active = Kernel::active();
+        assert_ne!(active, Kernel::Auto);
+        if active == Kernel::Avx2 {
+            assert!(avx2_available());
+        }
+        // resolution honors explicit fallbacks and host capabilities
+        assert_eq!(resolve(Kernel::Portable), Kernel::Portable);
+        assert_eq!(resolve(Kernel::Reference), Kernel::Reference);
+        let auto = resolve(Kernel::Auto);
+        assert_eq!(auto == Kernel::Avx2, avx2_available());
+    }
+
+    #[test]
+    #[should_panic(expected = "d must be positive")]
+    fn norm_cache_rejects_zero_dimension() {
+        NormCache::build(&[], 0, Metric::SqEuclidean);
+    }
+
+    #[test]
+    #[should_panic(expected = "d must be positive")]
+    fn pair_dist_rejects_empty_vectors() {
+        pair_dist(Metric::SqEuclidean, &[], &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row-count mismatch")]
+    fn stale_norm_cache_fails_loudly() {
+        let points = [1.0f32, 2.0, 3.0, 4.0];
+        let norms = NormCache::build(&points, 2, Metric::SqEuclidean);
+        let bigger = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = vec![0.0f64; 3];
+        distances_into_kernel(&[0.0, 0.0], &bigger, 2, Metric::SqEuclidean, &norms, &mut out);
+    }
+}

@@ -1,10 +1,13 @@
 //! KNN model substrate: distance metrics, neighbor ordering, the
-//! classifier, and the paper's valuation function (Eqs. 1–2).
+//! SIMD distance kernels with norm caching, the classifier, and the
+//! paper's valuation function (Eqs. 1–2).
 
 pub mod classifier;
 pub mod distance;
+pub mod kernel;
 pub mod valuation;
 
 pub use classifier::KnnClassifier;
 pub use distance::{argsort_by_distance, distances, Metric};
+pub use kernel::{distances_block, distances_into_kernel, pair_dist, Kernel, NormCache};
 pub use valuation::{likelihood_score, u_single, u_subset};

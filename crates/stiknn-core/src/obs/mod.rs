@@ -255,6 +255,7 @@ pub struct MetricsRegistry {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    labels: Mutex<BTreeMap<String, String>>,
     ring: Mutex<Ring>,
 }
 
@@ -266,6 +267,7 @@ impl MetricsRegistry {
             counters: Mutex::new(BTreeMap::new()),
             gauges: Mutex::new(BTreeMap::new()),
             histograms: Mutex::new(BTreeMap::new()),
+            labels: Mutex::new(BTreeMap::new()),
             ring: Mutex::new(Ring {
                 next_seq: 0,
                 dropped: 0,
@@ -276,6 +278,17 @@ impl MetricsRegistry {
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Set a static string label on the registry (e.g. which distance
+    /// kernel serves this process). Labels are cold-path metadata —
+    /// written at setup, carried verbatim in every snapshot — not
+    /// metrics; setting one again overwrites it.
+    pub fn set_label(&self, name: &str, value: &str) {
+        self.labels
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), value.to_string());
     }
 
     /// Get-or-create a counter by name.
@@ -361,6 +374,13 @@ impl MetricsRegistry {
             .iter()
             .map(|(k, v)| (k.clone(), v.to_json()))
             .collect();
+        let labels: BTreeMap<String, Json> = self
+            .labels
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+            .collect();
         let (events, dropped) = {
             let ring = self.ring.lock().unwrap();
             (
@@ -374,6 +394,7 @@ impl MetricsRegistry {
                 "uptime_ms",
                 Json::num(self.start.elapsed().as_millis() as f64),
             ),
+            ("labels", Json::Obj(labels)),
             ("counters", Json::Obj(counters)),
             ("gauges", Json::Obj(gauges)),
             ("histograms", Json::Obj(histograms)),
@@ -618,6 +639,20 @@ mod tests {
         let text = snap.to_string();
         // Round-trips through the parser, and map order is stable.
         assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+    }
+
+    #[test]
+    fn labels_are_carried_in_snapshots_and_overwrite() {
+        let reg = MetricsRegistry::new("labels");
+        reg.set_label("kernel", "portable");
+        reg.set_label("kernel", "avx2");
+        reg.set_label("host", "ci");
+        let labels = reg.snapshot().get("labels").unwrap().clone();
+        assert_eq!(labels.get("kernel").unwrap().as_str(), Some("avx2"));
+        assert_eq!(labels.get("host").unwrap().as_str(), Some("ci"));
+        // A fresh registry snapshots an empty (but present) label map.
+        let empty = MetricsRegistry::new("bare").snapshot();
+        assert!(empty.get("labels").is_some());
     }
 
     #[test]

@@ -57,7 +57,8 @@
 //!   snapshots (reproducibility: the edit sequence that produced the
 //!   current train set, in order).
 
-use crate::knn::distance::{argsort_by_distance_keyed, distances_into, Metric};
+use crate::knn::distance::{argsort_by_distance_keyed, Metric};
+use crate::knn::kernel::{distances_into_kernel, pair_dist, NormCache};
 use crate::shapley::sti_knn::{superdiagonal_into, PreparedBatch, StiParams};
 use crate::shapley::values::ValueVector;
 
@@ -314,11 +315,12 @@ pub fn repair_chunk(
 
         match edit {
             Edit::Add { x, .. } => {
-                // Distance computed exactly as prep's distances_into
-                // would: metric.dist(query, train_row) — so the stored
-                // value bit-matches a from-scratch run.
+                // Distance computed exactly as kernel prep would:
+                // `pair_dist` evaluates the same norm-form expression on
+                // the same operands as `distances_into_kernel`, so the
+                // stored value bit-matches a from-scratch run.
                 let q = &ctx.test_x[g * ctx.d..(g + 1) * ctx.d];
-                let dnew = ctx.metric.dist(q, x);
+                let dnew = pair_dist(ctx.metric, q, x);
                 // Stable tie-break: the new point has the largest index,
                 // so it goes AFTER every equal distance — upper bound.
                 let r = od.partition_point(|&dv| dv <= dnew);
@@ -418,11 +420,12 @@ pub fn refold_values(
 /// stable argsort ONCE, retain (dist, pos) in [`MutableRows`] and
 /// (rank, colval) in [`RetainedRows`], and fold the per-point values
 /// into `vv`. Bit-identical to the plain retained implicit path
-/// (`prepare_batch_scratch` + `sweep_values`): the same distance calls,
-/// the same keyed argsort, the same `superdiagonal_into` on the same
-/// u_p, and the same fold expressions per element in test order.
-/// O(t·(n·d + n log n)) — the same as any ingest; the delta savings are
-/// on EDITS, not ingests.
+/// (`prepare_batch_cached` + `sweep_values`): the same kernel distance
+/// calls against the same [`NormCache`], the same keyed argsort, the
+/// same `superdiagonal_into` on the same u_p, and the same fold
+/// expressions per element in test order. `norms` is the session's
+/// long-lived cache over `train_x`. O(t·(n·d + n log n)) — the same as
+/// any ingest; the delta savings are on EDITS, not ingests.
 #[allow(clippy::too_many_arguments)]
 pub fn ingest_rows(
     train_x: &[f32],
@@ -431,6 +434,7 @@ pub fn ingest_rows(
     test_x: &[f32],
     test_y: &[i32],
     params: &StiParams,
+    norms: &NormCache,
     rows: &mut RetainedRows,
     mrows: &mut MutableRows,
     vv: &mut ValueVector,
@@ -451,7 +455,7 @@ pub fn ingest_rows(
     let mut suffix = vec![0.0f64; n + 1];
 
     for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
-        distances_into(q, train_x, d, params.metric, &mut dists);
+        distances_into_kernel(q, train_x, d, params.metric, norms, &mut dists);
         argsort_by_distance_keyed(&dists, &mut keys, &mut order);
         // u_p in rank order, exactly as prepare builds it.
         for (r, &orig) in order.iter().enumerate() {
@@ -522,13 +526,16 @@ mod tests {
         let mut rows = RetainedRows::new(n);
         let mut mrows = MutableRows::new(n, d);
         let mut vv = ValueVector::zeros(n);
+        let params = StiParams::new(k);
+        let norms = NormCache::build(tx, d, params.metric);
         ingest_rows(
             tx,
             ty,
             d,
             qx,
             qy,
-            &StiParams::new(k),
+            &params,
+            &norms,
             &mut rows,
             &mut mrows,
             &mut vv,

@@ -18,8 +18,8 @@ pub mod sti_knn;
 pub mod values;
 
 pub use sti_knn::{
-    prepare_batch, prepare_batch_scratch, sti_knn, sti_knn_accumulate, sti_knn_partial,
-    sweep_band, PREP_BATCH, PrepScratch, PreparedBatch, StiParams,
+    prepare_batch, prepare_batch_cached, prepare_batch_scratch, sti_knn, sti_knn_accumulate,
+    sti_knn_partial, sweep_band, PREP_BATCH, PrepScratch, PreparedBatch, StiParams,
 };
 pub use values::{
     sti_point_values, sti_values, sweep_values, values_accumulate, PointValues, ValueVector,

@@ -41,7 +41,10 @@
 //! [`sti_knn_partial`] is the single-threaded composition of the two
 //! phases over the full band `[0, n)`.
 
-use crate::knn::distance::{argsort_by_distance_keyed, distances_into, Metric};
+use std::time::Instant;
+
+use crate::knn::distance::{argsort_by_distance_keyed, Metric};
+use crate::knn::kernel::{distances_block, NormCache};
 use crate::util::matrix::Matrix;
 
 /// Parameters for an STI-KNN run.
@@ -92,6 +95,10 @@ pub struct PreparedBatch {
     n: usize,
     len: usize,
     inv_k: f64,
+    /// Wall nanoseconds spent inside the distance kernel
+    /// ([`distances_block`]) while preparing this batch — the
+    /// `coord.prep.kernel_ns` observability slice.
+    kernel_ns: u64,
     /// rank as f64, `len` rows of n, original train order — f64 operands
     /// let LLVM lower the inner select to vcmppd + vblendvpd + vaddpd.
     rankf: Vec<f64>,
@@ -144,6 +151,11 @@ impl PreparedBatch {
     pub fn test_label(&self, p: usize) -> i32 {
         self.test_y[p]
     }
+
+    /// Nanoseconds this batch spent in the distance kernel.
+    pub fn kernel_ns(&self) -> u64 {
+        self.kernel_ns
+    }
 }
 
 /// Reusable scratch for [`prepare_batch_scratch`]: the per-test distance,
@@ -154,7 +166,9 @@ impl PreparedBatch {
 /// performs no per-test allocations at all.
 #[derive(Default)]
 pub struct PrepScratch {
-    dists: Vec<f64>,
+    /// B×n distance tile filled by [`distances_block`] for one
+    /// QUERY_BLOCK of test points at a time.
+    dists_blk: Vec<f64>,
     c: Vec<f64>,
     order: Vec<usize>,
     keys: Vec<u128>,
@@ -166,11 +180,19 @@ impl PrepScratch {
     }
 
     fn resize(&mut self, n: usize) {
-        self.dists.resize(n, 0.0);
         self.c.resize(n, 0.0);
         self.order.resize(n, 0);
     }
 }
+
+/// Test points per blocked distance call inside prep: B queries share
+/// each L1-resident tile of train rows ([`distances_block`]), so one
+/// train-row load from memory feeds B dot products. 8 keeps the B×n
+/// f64 tile small (n=32k → 2 MB) while capturing most of the reuse;
+/// the acceptance bench (`benches/distance.rs`) measures the win at
+/// B ∈ {8, 64}. Like [`PREP_BATCH`], a pure perf knob: block
+/// boundaries cannot change any distance, rank, or column value.
+const QUERY_BLOCK: usize = 8;
 
 /// Lines 3–10 of Algorithm 1: the superdiagonal, indexed by RANK.
 ///
@@ -225,10 +247,13 @@ pub fn prepare_batch(
 }
 
 /// [`prepare_batch`] with caller-owned scratch: zero per-test allocations
-/// (the distance / superdiagonal / argsort-order buffers live in
-/// `scratch` and are reused across calls). The output batch is
-/// bit-identical to [`prepare_batch`]'s — scratch reuse cannot change a
-/// single rank or column value.
+/// (the distance-tile / superdiagonal / argsort-order buffers live in
+/// `scratch` and are reused across calls). Builds a throwaway
+/// [`NormCache`] internally; streaming callers that prepare many batches
+/// against the SAME train set should build the cache once and call
+/// [`prepare_batch_cached`]. The output batch is bit-identical to
+/// [`prepare_batch`]'s — scratch reuse cannot change a single rank or
+/// column value.
 pub fn prepare_batch_scratch(
     train_x: &[f32],
     train_y: &[i32],
@@ -236,6 +261,28 @@ pub fn prepare_batch_scratch(
     test_x: &[f32],
     test_y: &[i32],
     params: &StiParams,
+    scratch: &mut PrepScratch,
+) -> PreparedBatch {
+    let norms = NormCache::build(train_x, d, params.metric);
+    prepare_batch_cached(train_x, train_y, d, test_x, test_y, params, &norms, scratch)
+}
+
+/// The prep primitive every hot path bottoms out in: distances through
+/// the active SIMD kernel with cached per-train-row norms, computed in
+/// [`QUERY_BLOCK`]-sized blocked tiles ([`distances_block`]), then the
+/// packed-key argsort and superdiagonal per test point. `norms` MUST
+/// describe `train_x` (checked); build it once per session / job and
+/// reuse it across every batch. Kernel time is measured into the
+/// batch's [`PreparedBatch::kernel_ns`].
+#[allow(clippy::too_many_arguments)]
+pub fn prepare_batch_cached(
+    train_x: &[f32],
+    train_y: &[i32],
+    d: usize,
+    test_x: &[f32],
+    test_y: &[i32],
+    params: &StiParams,
+    norms: &NormCache,
     scratch: &mut PrepScratch,
 ) -> PreparedBatch {
     let n = train_y.len();
@@ -249,38 +296,54 @@ pub fn prepare_batch_scratch(
     let mut rankf = vec![0.0f64; len * n];
     let mut colval = vec![0.0f64; len * n];
     scratch.resize(n);
-    let PrepScratch {
-        dists,
-        c,
-        order,
-        keys,
-    } = scratch;
+    let mut kernel_ns = 0u64;
 
-    for (slot, (q, &y)) in test_x.chunks_exact(d).zip(test_y).enumerate() {
-        distances_into(q, train_x, d, params.metric, dists);
-        // Packed-key sort: identical order to argsort_by_distance (the
-        // metrics are non-negative), measurably faster prep.
-        argsort_by_distance_keyed(dists, keys, order);
+    let mut lo = 0usize;
+    while lo < len {
+        let hi = (lo + QUERY_BLOCK).min(len);
+        let b = hi - lo;
+        scratch.dists_blk.resize(b * n, 0.0);
+        let t0 = Instant::now();
+        distances_block(
+            &test_x[lo * d..hi * d],
+            train_x,
+            d,
+            params.metric,
+            norms,
+            &mut scratch.dists_blk[..b * n],
+        );
+        kernel_ns += t0.elapsed().as_nanos() as u64;
 
-        let rank_row = &mut rankf[slot * n..(slot + 1) * n];
-        let col_row = &mut colval[slot * n..(slot + 1) * n];
-        // u in sorted order (reuse col_row as the temp buffer), then the
-        // superdiagonal by rank (Eq. 6/7).
-        for (r, &orig) in order.iter().enumerate() {
-            col_row[r] = if train_y[orig] == y { inv_k } else { 0.0 };
+        for slot in lo..hi {
+            let dists = &scratch.dists_blk[(slot - lo) * n..(slot - lo + 1) * n];
+            // Packed-key sort: identical order to argsort_by_distance
+            // (the metrics are non-negative), measurably faster prep.
+            argsort_by_distance_keyed(dists, &mut scratch.keys, &mut scratch.order);
+
+            let y = test_y[slot];
+            let rank_row = &mut rankf[slot * n..(slot + 1) * n];
+            let col_row = &mut colval[slot * n..(slot + 1) * n];
+            // u in sorted order (reuse col_row as the temp buffer), then
+            // the superdiagonal by rank (Eq. 6/7).
+            for (r, &orig) in scratch.order.iter().enumerate() {
+                col_row[r] = if train_y[orig] == y { inv_k } else { 0.0 };
+            }
+            superdiagonal_into(&col_row[..n], k, &mut scratch.c);
+            // Scatter to original order so the O(n²) loop is a pure
+            // select-add.
+            for (r, &orig) in scratch.order.iter().enumerate() {
+                rank_row[orig] = r as f64;
+                col_row[orig] = scratch.c[r];
+            }
         }
-        superdiagonal_into(&col_row[..n], k, c);
-        // Scatter to original order so the O(n²) loop is a pure select-add.
-        for (r, &orig) in order.iter().enumerate() {
-            rank_row[orig] = r as f64;
-            col_row[orig] = c[r];
-        }
+        lo = hi;
     }
 
     PreparedBatch {
         n,
         len,
         inv_k,
+        kernel_ns,
         rankf,
         colval,
         test_y: test_y.to_vec(),
@@ -369,12 +432,14 @@ pub fn sti_knn_accumulate(
         "accumulator shape mismatch"
     );
     let mut scratch = PrepScratch::new();
+    let norms = NormCache::build(train_x, d, params.metric);
     for (chunk_x, chunk_y) in test_x
         .chunks(PREP_BATCH * d)
         .zip(test_y.chunks(PREP_BATCH))
     {
-        let batch =
-            prepare_batch_scratch(train_x, train_y, d, chunk_x, chunk_y, params, &mut scratch);
+        let batch = prepare_batch_cached(
+            train_x, train_y, d, chunk_x, chunk_y, params, &norms, &mut scratch,
+        );
         sweep_band(&batch, train_y, 0, n, acc.data_mut());
     }
     test_y.len() as f64
@@ -674,6 +739,90 @@ mod tests {
                     );
                 }
                 assert_eq!(fresh.test_label(p), reused.test_label(p));
+            }
+        }
+    }
+
+    // The kernel prep path (blocked SIMD distances + cached norms) must
+    // reproduce a hand-built construction over SCALAR Metric::dist
+    // distances bit-for-bit: the lane-tree distances differ from scalar
+    // by rounding, but the stable argsort orders them identically (ties
+    // from duplicated train rows included), and every rank / column
+    // value downstream depends on distances only through that order.
+    #[test]
+    fn kernel_prep_bit_matches_scalar_reference_construction() {
+        use crate::knn::distance::{argsort_by_distance, distances};
+        let mut rng = Rng::new(63);
+        let d = 5;
+        let base: Vec<f32> = (0..10 * d).map(|_| rng.normal() as f32).collect();
+        // 3 copies of each base row => deliberate exact distance ties
+        let mut train_x = Vec::new();
+        for _ in 0..3 {
+            train_x.extend_from_slice(&base);
+        }
+        let n = 30;
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let t = 11; // not a multiple of QUERY_BLOCK: exercises the tail block
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let k = 4;
+        let inv_k = 1.0 / k as f64;
+
+        for metric in [Metric::SqEuclidean, Metric::Manhattan, Metric::Cosine] {
+            let params = StiParams { k, metric };
+            let batch = prepare_batch(&train_x, &train_y, d, &test_x, &test_y, &params);
+            assert_eq!(batch.len(), t);
+            for (slot, q) in test_x.chunks_exact(d).enumerate() {
+                let order = argsort_by_distance(&distances(q, &train_x, d, metric));
+                let mut u = vec![0.0f64; n];
+                for (r, &orig) in order.iter().enumerate() {
+                    u[r] = if train_y[orig] == test_y[slot] { inv_k } else { 0.0 };
+                }
+                let mut c = vec![0.0f64; n];
+                superdiagonal_into(&u, k, &mut c);
+                for (r, &orig) in order.iter().enumerate() {
+                    assert_eq!(
+                        batch.rank_row(slot)[orig].to_bits(),
+                        (r as f64).to_bits(),
+                        "metric={metric:?} slot={slot}"
+                    );
+                    assert_eq!(
+                        batch.colval_row(slot)[orig].to_bits(),
+                        c[r].to_bits(),
+                        "metric={metric:?} slot={slot}"
+                    );
+                }
+            }
+        }
+    }
+
+    // QUERY_BLOCK sub-blocking is a pure perf knob: a cached prep over
+    // one shared NormCache bit-matches the throwaway-cache wrapper.
+    #[test]
+    fn cached_prep_is_bit_identical_to_wrapper() {
+        let mut rng = Rng::new(71);
+        let n = 19;
+        let d = 4;
+        let t = 13;
+        let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+        let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+        let params = StiParams::new(3);
+        let norms = NormCache::build(&train_x, d, params.metric);
+        let mut scratch = PrepScratch::new();
+        let cached = prepare_batch_cached(
+            &train_x, &train_y, d, &test_x, &test_y, &params, &norms, &mut scratch,
+        );
+        let fresh = prepare_batch(&train_x, &train_y, d, &test_x, &test_y, &params);
+        assert_eq!(cached.len(), fresh.len());
+        for p in 0..t {
+            for i in 0..n {
+                assert_eq!(cached.rank_row(p)[i].to_bits(), fresh.rank_row(p)[i].to_bits());
+                assert_eq!(
+                    cached.colval_row(p)[i].to_bits(),
+                    fresh.colval_row(p)[i].to_bits()
+                );
             }
         }
     }

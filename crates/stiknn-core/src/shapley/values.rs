@@ -47,8 +47,9 @@
 //! asserts both sides.
 
 use super::sti_knn::{
-    prepare_batch_scratch, PrepScratch, PreparedBatch, StiParams, PREP_BATCH,
+    prepare_batch_cached, PrepScratch, PreparedBatch, StiParams, PREP_BATCH,
 };
+use crate::knn::kernel::NormCache;
 use crate::util::matrix::Matrix;
 
 /// Which value engine computes per-point aggregates.
@@ -270,12 +271,14 @@ pub fn values_accumulate(
     assert_eq!(vv.n, n, "value vector shape mismatch");
     let mut prep = PrepScratch::new();
     let mut scratch = ValuesScratch::new();
+    let norms = NormCache::build(train_x, d, params.metric);
     for (chunk_x, chunk_y) in test_x
         .chunks(PREP_BATCH * d)
         .zip(test_y.chunks(PREP_BATCH))
     {
-        let batch =
-            prepare_batch_scratch(train_x, train_y, d, chunk_x, chunk_y, params, &mut prep);
+        let batch = prepare_batch_cached(
+            train_x, train_y, d, chunk_x, chunk_y, params, &norms, &mut prep,
+        );
         sweep_values(&batch, train_y, vv, &mut scratch);
     }
     test_y.len() as f64
@@ -375,12 +378,14 @@ pub fn class_interaction_sums(
     let mut counts = vec![0.0f64; classes];
     let t = test_y.len() as f64;
 
+    let norms = NormCache::build(train_x, d, params.metric);
     for (chunk_x, chunk_y) in test_x
         .chunks(PREP_BATCH * d)
         .zip(test_y.chunks(PREP_BATCH))
     {
-        let batch =
-            prepare_batch_scratch(train_x, train_y, d, chunk_x, chunk_y, params, &mut prep);
+        let batch = prepare_batch_cached(
+            train_x, train_y, d, chunk_x, chunk_y, params, &norms, &mut prep,
+        );
         for p in 0..batch.len() {
             let rank = batch.rank_row(p);
             let colval = batch.colval_row(p);

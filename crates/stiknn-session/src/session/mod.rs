@@ -72,10 +72,11 @@ use crate::coordinator::progress::Progress;
 use crate::coordinator::{ingest_banded_with, ingest_values_with, repair_rows, ValuationJob};
 use crate::data::Dataset;
 use crate::knn::distance::Metric;
+use crate::knn::kernel::NormCache;
 use crate::obs::ObsHandle;
 use crate::shapley::delta::{self, Edit, MutableRows, RepairCtx, RetainedRows};
 use crate::shapley::sti_knn::{
-    prepare_batch_scratch, sti_knn_accumulate, PrepScratch, StiParams, PREP_BATCH,
+    prepare_batch_cached, sti_knn_accumulate, PrepScratch, StiParams, PREP_BATCH,
 };
 use crate::shapley::values::{sweep_values, values_accumulate, ValueVector, ValuesScratch};
 use crate::util::matrix::Matrix;
@@ -262,6 +263,12 @@ pub struct ValuationSession {
     train_x: Vec<f32>,
     train_y: Vec<i32>,
     d: usize,
+    /// Per-train-row norm cache for the SIMD distance kernels
+    /// (DESIGN.md §15). Pure performance state — every distance is
+    /// bit-identical with or without it — kept in lockstep with
+    /// `train_x` by `add_train`/`remove_train` and rebuilt (never
+    /// serialized) on construction and restore.
+    norms: NormCache,
     config: SessionConfig,
     state: EngineState,
     ledger: Vec<BatchRecord>,
@@ -315,6 +322,7 @@ impl ValuationSession {
              repairs read and rewrite the per-test rank-space rows"
         );
         let fingerprint = dataset_fingerprint(&train_x, &train_y, d);
+        let norms = NormCache::build(&train_x, d, config.metric);
         let state = match config.engine {
             Engine::Dense => EngineState::Dense {
                 acc: Matrix::zeros(n, n),
@@ -329,6 +337,7 @@ impl ValuationSession {
             train_x,
             train_y,
             d,
+            norms,
             config,
             state,
             ledger: Vec::new(),
@@ -571,10 +580,12 @@ impl ValuationSession {
             dist,
             pos,
         };
+        let norms = NormCache::build(&train_x, d, config.metric);
         Ok(ValuationSession {
             train_x,
             train_y,
             d,
+            norms,
             config,
             state: EngineState::Implicit {
                 values: ValueVector::from_raw_parts(main, inter),
@@ -778,6 +789,7 @@ impl ValuationSession {
                             test_x,
                             test_y,
                             &params,
+                            &self.norms,
                             retained,
                             live.as_mut().expect("checked by the guard"),
                             values,
@@ -794,13 +806,14 @@ impl ValuationSession {
                             .chunks(PREP_BATCH * self.d)
                             .zip(test_y.chunks(PREP_BATCH))
                         {
-                            let batch = prepare_batch_scratch(
+                            let batch = prepare_batch_cached(
                                 &self.train_x,
                                 &self.train_y,
                                 self.d,
                                 chunk_x,
                                 chunk_y,
                                 &params,
+                                &self.norms,
                                 &mut prep,
                             );
                             sweep_values(&batch, &self.train_y, values, &mut scratch);
@@ -883,6 +896,7 @@ impl ValuationSession {
         let old_n = self.n();
         self.train_x.extend_from_slice(x);
         self.train_y.push(y);
+        self.norms.push_row(x);
         let record = MutationRecord {
             seq: self.next_mutation_seq(),
             op: MutationOp::Add,
@@ -920,6 +934,7 @@ impl ValuationSession {
         );
         self.train_x.drain(index * self.d..(index + 1) * self.d);
         self.train_y.remove(index);
+        self.norms.remove_row(index);
         let record = MutationRecord {
             seq: self.next_mutation_seq(),
             op: MutationOp::Remove,

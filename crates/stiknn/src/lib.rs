@@ -40,11 +40,19 @@
 //! §4/§10):
 //!
 //! * **Dense** — the full n×n interaction matrix, O(t·n²) time / O(n²)
-//!   memory. A two-phase hot path ([`shapley::sti_knn::prepare_batch`] →
-//!   [`shapley::sti_knn::sweep_band`]); the coordinator's default
-//!   row-banded assembly parallelizes the sweep over disjoint row bands
-//!   of ONE shared accumulator — peak memory O(n²) at any worker count,
-//!   bit-identical to the single-threaded engine (DESIGN.md §7).
+//!   memory. A two-phase hot path: Phase 1
+//!   ([`shapley::sti_knn::prepare_batch_cached`]) computes distances
+//!   through runtime-dispatched SIMD kernels ([`knn::kernel`],
+//!   DESIGN.md §15 — AVX2+FMA when detected, a bit-identical portable
+//!   tree otherwise, `STIKNN_KERNEL` to override) with per-train-row
+//!   norms cached once and test points batched through the
+//!   cache-blocked [`knn::kernel::distances_block`], then ranks and
+//!   folds each test's superdiagonal; Phase 2
+//!   ([`shapley::sti_knn::sweep_band`]) scatters prepared rows into the
+//!   accumulator. The coordinator's default row-banded assembly
+//!   parallelizes the sweep over disjoint row bands of ONE shared
+//!   accumulator — peak memory O(n²) at any worker count, bit-identical
+//!   to the single-threaded engine (DESIGN.md §7).
 //! * **Implicit** — exact per-point values (diagonal mains + interaction
 //!   row sums, the aggregates every serving workload actually consumes)
 //!   via the rank-space suffix-sum identity
