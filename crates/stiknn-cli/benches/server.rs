@@ -7,8 +7,8 @@
 //! commands/second across a client-count × read/write-mix grid (every
 //! client drives its own [`Connection`] against one shared registry,
 //! round-robin over 4 sessions), plus the LRU spill→reload cycle cost,
-//! an obs off/on A/B pair on the same cell (the DESIGN.md §14 overhead
-//! budget is < 2%), and writes the trajectory artifact
+//! an obs off/on/on+trace A/B/C on the same cell (the DESIGN.md §14/§16
+//! overhead budget is < 2% per layer), and writes the trajectory artifact
 //! `BENCH_server.json` at the REPO ROOT (CI uploads it per commit) —
 //! including the end-of-run process-wide `metrics` snapshot, so the
 //! trajectory records behavior (spills, lock waits, per-command
@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use stiknn::bench::{quick, Suite};
 use stiknn::data::load_dataset;
-use stiknn::obs::ObsHandle;
+use stiknn::obs::{ObsHandle, TraceHandle};
 use stiknn::server::{Connection, RegistryConfig, SessionRegistry, TrainData};
 use stiknn::session::{Engine, SessionConfig};
 use stiknn::util::json::Json;
@@ -37,6 +37,7 @@ fn registry(
     config: SessionConfig,
     state: Option<(usize, &Path)>,
     obs: bool,
+    traced: bool,
 ) -> Arc<SessionRegistry> {
     let (max_resident, state_dir) = match state {
         Some((cap, dir)) => (cap, Some(dir.to_path_buf())),
@@ -53,6 +54,9 @@ fn registry(
     .unwrap();
     if obs {
         reg = reg.with_obs(ObsHandle::enabled("bench"));
+    }
+    if traced {
+        reg = reg.with_trace(TraceHandle::enabled());
     }
     let reg = Arc::new(reg);
     for s in 0..SESSIONS {
@@ -132,7 +136,7 @@ fn main() {
             // obs ON: grid numbers stay comparable to the production
             // default, and any regression against the prior trajectory
             // artifact is telemetry cost showing up where it matters
-            let reg = registry(&train, config, None, true);
+            let reg = registry(&train, config, None, true, false);
             let m = suite.bench(&format!("{label} x{clients}"), || {
                 drive(&reg, ds.d, clients, write_every)
             });
@@ -141,20 +145,27 @@ fn main() {
         }
     }
 
-    // obs A/B — the same mixed cell with telemetry off vs on, isolating
-    // what the instrumentation itself costs (DESIGN.md §14 budget: <2%)
+    // obs A/B/C — the same mixed cell with telemetry off vs on vs
+    // on+tracing, isolating what the instrumentation itself costs
+    // (DESIGN.md §14/§16 budget: <2% per layer)
     let ab_clients = *client_counts.last().unwrap();
-    let reg_off = registry(&train, config, None, false);
+    let reg_off = registry(&train, config, None, false, false);
     let ab_off = suite.bench(&format!("mixed x{ab_clients} obs=off"), || {
         drive(&reg_off, ds.d, ab_clients, 4)
     });
-    let reg_on = registry(&train, config, None, true);
+    let reg_on = registry(&train, config, None, true, false);
     let ab_on = suite.bench(&format!("mixed x{ab_clients} obs=on"), || {
         drive(&reg_on, ds.d, ab_clients, 4)
     });
+    let reg_traced = registry(&train, config, None, true, true);
+    let ab_traced = suite.bench(&format!("mixed x{ab_clients} obs=on trace=on"), || {
+        drive(&reg_traced, ds.d, ab_clients, 4)
+    });
     let off_cps = (ab_clients * CMDS) as f64 / ab_off.mean_secs();
     let on_cps = (ab_clients * CMDS) as f64 / ab_on.mean_secs();
+    let traced_cps = (ab_clients * CMDS) as f64 / ab_traced.mean_secs();
     let overhead_pct = (off_cps - on_cps) / off_cps * 100.0;
+    let trace_overhead_pct = (off_cps - traced_cps) / off_cps * 100.0;
 
     // LRU spill→reload cycle: 4 sessions behind a 2-slot cap, touched
     // round-robin — every touch beyond the cap evicts one session and
@@ -162,7 +173,7 @@ fn main() {
     // so steady state measures the reload side)
     let state = std::env::temp_dir().join(format!("stiknn_bench_server_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&state);
-    let reg = registry(&train, config, Some((2, state.as_path())), true);
+    let reg = registry(&train, config, Some((2, state.as_path())), true, false);
     let spill = suite.bench("lru spill+reload touch", || {
         let mut conn = Connection::new(Arc::clone(&reg), None);
         for s in 0..SESSIONS {
@@ -189,7 +200,8 @@ fn main() {
     }
     println!(
         "obs A/B (mixed x{ab_clients}): off {off_cps:.0} cmds/s, on {on_cps:.0} cmds/s \
-         ({overhead_pct:+.2}% overhead)"
+         ({overhead_pct:+.2}% overhead), on+trace {traced_cps:.0} cmds/s \
+         ({trace_overhead_pct:+.2}% overhead)"
     );
 
     let artifact = Json::obj(vec![
@@ -222,6 +234,8 @@ fn main() {
                 ("obs_off_cmds_per_sec", Json::num(off_cps)),
                 ("obs_on_cmds_per_sec", Json::num(on_cps)),
                 ("overhead_pct", Json::num(overhead_pct)),
+                ("traced_cmds_per_sec", Json::num(traced_cps)),
+                ("trace_overhead_pct", Json::num(trace_overhead_pct)),
             ]),
         ),
         ("metrics", metrics_snap),

@@ -8,6 +8,7 @@
 //!   mislabel  flip labels and detect them from interaction patterns (Fig. 5)
 //!   serve     concurrent multi-session NDJSON server: stdio or --listen TCP; --shard-of J/N (§9/§12/§13)
 //!   metrics   fetch telemetry from a running server, Prometheus text or JSON (§14)
+//!   trace     span trees from a running server; --fanout runs a traced sharded query (§16)
 //!   mutate    live training-set edits with exact O(t·n) repairs (§11)
 //!   session   inspect a session snapshot file (§9/§11)
 //!   datasets  list the Table-1 dataset registry
@@ -29,7 +30,8 @@ use stiknn::analysis::structure::block_structure;
 use stiknn::coordinator::{run_job_with_engine, run_values_job, Assembly, ValuationJob};
 use stiknn::data::{corrupt, csv, load_dataset_any, registry_names};
 use stiknn::knn::distance::Metric;
-use stiknn::obs::{prometheus_text, ObsHandle};
+use stiknn::obs::trace::{hex_id, render_tree};
+use stiknn::obs::{prometheus_text, ObsHandle, SpanRecord, TraceHandle, TraceMode};
 use stiknn::report::heatmap::render_heatmap;
 use stiknn::report::session::{registry_table, snapshot_info_table, topk_table};
 use stiknn::report::table::Table;
@@ -52,6 +54,7 @@ fn main() {
         Some("mislabel") => cmd_mislabel(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("metrics") => cmd_metrics(&argv[1..]),
+        Some("trace") => cmd_trace(&argv[1..]),
         Some("mutate") => cmd_mutate(&argv[1..]),
         Some("session") => cmd_session(&argv[1..]),
         Some("datasets") => cmd_datasets(&argv[1..]),
@@ -88,6 +91,7 @@ fn print_help() {
            mislabel   mislabel-detection experiment (paper Fig. 5)\n\
            serve      concurrent valuation server (NDJSON on stdio or --listen TCP)\n\
            metrics    telemetry snapshot from a running server (Prometheus text)\n\
+           trace      request span trees from a running server (--fanout: sharded smoke)\n\
            mutate     live training-set edits (add/remove/relabel) with exact repairs\n\
            session    inspect a session snapshot file\n\
            datasets   list the dataset registry (paper Table 1)\n\
@@ -108,6 +112,7 @@ fn usage_for(name: &str) -> Option<String> {
         "mislabel" => Some(mislabel_cmd().usage()),
         "serve" => Some(serve_cmd().usage()),
         "metrics" => Some(metrics_cmd().usage()),
+        "trace" => Some(trace_cmd().usage()),
         "mutate" => Some(mutate_cmd().usage()),
         "session" => Some(session_cmd().usage()),
         "datasets" => Some("datasets — list the dataset registry (no options)\n".to_string()),
@@ -522,6 +527,20 @@ fn serve_cmd() -> Command {
          every command)",
         "",
     )
+    .opt(
+        "trace",
+        "request tracing (DESIGN.md §16): on = every command gets a span tree \
+         behind the `trace` verb and `stiknn trace`; sampled:N = every N-th \
+         root (propagated shard context is always recorded); off = zero \
+         overhead, results bit-identical",
+        "off",
+    )
+    .opt(
+        "event-ring",
+        "events retained in the bounded telemetry ring before the oldest are \
+         dropped (drops are counted and reported on exit)",
+        "256",
+    )
     .opt("dataset", "training dataset name (see `stiknn datasets`) or csv:PATH", "circle")
     .opt("n-train", "training points (0 = registry default)", "0")
     .opt(
@@ -643,6 +662,9 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .then(|| slow_ms_raw.parse())
         .transpose()
         .map_err(|_| anyhow::anyhow!("--slow-ms expects milliseconds, got '{slow_ms_raw}'"))?;
+    let trace_mode = TraceMode::parse(&args.get_or("trace", "off"))
+        .map_err(|e| anyhow::anyhow!("--trace: {e}"))?;
+    let event_ring: usize = args.require("event-ring")?;
 
     let mut registry = SessionRegistry::new(
         TrainData::from_dataset(&ds),
@@ -656,7 +678,10 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         registry = registry.with_shard(id);
     }
     if obs_on {
-        registry = registry.with_obs(ObsHandle::enabled("server"));
+        registry = registry.with_obs(ObsHandle::enabled_with_cap("server", event_ring));
+    }
+    if trace_mode != TraceMode::Off {
+        registry = registry.with_trace(TraceHandle::with_mode(trace_mode));
     }
     registry = registry.with_slow_ms(slow_ms);
     let registry = Arc::new(registry);
@@ -697,7 +722,10 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         // accept loop below runs until the process is killed, where the
         // last autosave checkpoint (atomic-by-rename) is the durable
         // record instead.
-        eprintln!("{}", registry_table(&registry.list()));
+        eprintln!(
+            "{}",
+            registry_table(&registry.list(), registry.obs().events_dropped())
+        );
     } else {
         let listener = std::net::TcpListener::bind(&listen)
             .map_err(|e| anyhow::anyhow!("binding --listen {listen}: {e}"))?;
@@ -811,6 +839,179 @@ fn cmd_metrics(argv: &[String]) -> anyhow::Result<()> {
         println!("{snap}");
     } else {
         print!("{}", prometheus_text(&snap));
+    }
+    Ok(())
+}
+
+fn trace_cmd() -> Command {
+    Command::new(
+        "trace",
+        "inspect distributed request traces (DESIGN.md §16): list a running \
+         server's recent root spans, render one trace's span tree by id, or \
+         (--fanout) drive a traced sharded `values` across member servers and \
+         render the tree assembled from every member's echoed spans",
+    )
+    .opt(
+        "connect",
+        "server address HOST:PORT (the span store lives server-side)",
+        "",
+    )
+    .opt(
+        "id",
+        "16-hex-digit trace id (as printed by root listings and slow-query \
+         lines): render that trace's full span tree",
+        "",
+    )
+    .opt("limit", "recent root spans listed without --id", "16")
+    .opt(
+        "fanout",
+        "comma-separated member addresses HOST:PORT,HOST:PORT,…: attach a \
+         sharded coordinator, ingest the dataset's test split, run one traced \
+         `values`, and render the assembled cross-process tree (the CI smoke \
+         path; ignores --connect/--id)",
+        "",
+    )
+    .opt("dataset", "--fanout: dataset the members were started with", "circle")
+    .opt("n-train", "--fanout: members' --n-train (0 = registry default)", "0")
+    .opt(
+        "n-test",
+        "--fanout: test points generated and ingested (0 = registry default)",
+        "0",
+    )
+    .opt("seed", "--fanout: dataset seed (must match the members')", "42")
+    .flag("json", "raw JSON spans instead of rendered trees")
+}
+
+fn cmd_trace(argv: &[String]) -> anyhow::Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let cmd = trace_cmd();
+    if wants_help(argv) {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let args = cmd.parse(argv)?;
+    let fanout = args.get_or("fanout", "");
+    if !fanout.is_empty() {
+        return trace_fanout(&args, &fanout);
+    }
+    let addr = args.get_or("connect", "");
+    anyhow::ensure!(
+        !addr.is_empty(),
+        "trace needs --connect HOST:PORT (or --fanout to drive a sharded query)"
+    );
+    let stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let id = args.get_or("id", "");
+    let mut fields = vec![("cmd", Json::str("trace"))];
+    if id.is_empty() {
+        fields.push(("limit", Json::num(args.require::<usize>("limit")? as f64)));
+    } else {
+        fields.push(("id", Json::str(id.as_str())));
+    }
+    writeln!(writer, "{}", Json::obj(fields))?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    anyhow::ensure!(!line.trim().is_empty(), "server closed the connection");
+    let resp = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad server response: {e}"))?;
+    if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+        anyhow::bail!(
+            "{}",
+            resp.get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("trace failed")
+        );
+    }
+    if resp.get("enabled").and_then(Json::as_bool) == Some(false) {
+        anyhow::bail!("tracing is disabled on this server (start it with `serve --trace on`)");
+    }
+    let key = if id.is_empty() { "roots" } else { "spans" };
+    let records: Vec<SpanRecord> = resp
+        .get(key)
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(SpanRecord::from_json)
+        .collect();
+    if args.flag("json") {
+        match resp.get(key) {
+            Some(v) => println!("{v}"),
+            None => println!("[]"),
+        }
+        return Ok(());
+    }
+    if id.is_empty() {
+        if records.is_empty() {
+            println!("no root spans recorded yet");
+            return Ok(());
+        }
+        // One line per recent root, newest first — feed an id back via
+        // --id for the full tree.
+        for r in &records {
+            let dur = format!("{:.3}ms", r.dur_ns as f64 / 1e6);
+            println!("{}  {dur:>10}  {}", hex_id(r.trace_id), r.name);
+        }
+        if let Some(d) = resp.get("dropped").and_then(Json::as_f64) {
+            if d > 0.0 {
+                eprintln!("(span store evicted {d} span(s); older traces may be partial)");
+            }
+        }
+    } else {
+        anyhow::ensure!(!records.is_empty(), "no spans stored for trace {id}");
+        print!("{}", render_tree(&records));
+    }
+    Ok(())
+}
+
+/// `stiknn trace --fanout A,B`: the coordinator side of the distributed
+/// tracing smoke — run ONE traced sharded `values` and show the stitched
+/// tree (root + per-member round-trips + each member's echoed server and
+/// session spans + the merge fold).
+fn trace_fanout(args: &Args, fanout: &str) -> anyhow::Result<()> {
+    use stiknn::coordinator::shard::{ShardPlan, ShardedSession, TcpLink};
+    let addrs: Vec<&str> = fanout
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(
+        addrs.len() >= 2,
+        "--fanout needs at least two member addresses (got {})",
+        addrs.len()
+    );
+    let name = args.get_or("dataset", "circle");
+    let n_train: usize = args.require("n-train")?;
+    let n_test: usize = args.require("n-test")?;
+    let seed: u64 = args.require("seed")?;
+    let ds = load_dataset_any(&name, n_train, n_test, seed)?;
+    let links: Vec<TcpLink> = addrs
+        .iter()
+        .map(|a| TcpLink::connect(*a))
+        .collect::<anyhow::Result<_>>()?;
+    let plan = ShardPlan::contiguous(ds.test_y.len() as u64, addrs.len());
+    let mut sharded = ShardedSession::open(links, plan, ds.d)?;
+    sharded.set_trace(TraceHandle::enabled());
+    sharded.ingest(&ds.test_x, &ds.test_y)?;
+    let merged = sharded.values()?;
+    let trace = sharded.trace().clone();
+    let root = trace
+        .recent_roots(8)
+        .into_iter()
+        .find(|r| r.name == "shard.values")
+        .ok_or_else(|| anyhow::anyhow!("no shard.values root span was recorded"))?;
+    let spans = trace.spans_of(root.trace_id);
+    if args.flag("json") {
+        println!("{}", Json::arr(spans.iter().map(SpanRecord::to_json)));
+    } else {
+        eprintln!(
+            "traced `values` across {} member(s): {} test(s) merged over n={}",
+            addrs.len(),
+            merged.tests,
+            merged.main.len()
+        );
+        print!("{}", render_tree(&spans));
     }
     Ok(())
 }

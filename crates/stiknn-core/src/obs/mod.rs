@@ -22,10 +22,19 @@
 //! over NDJSON; [`prometheus_text`] renders any snapshot — local or
 //! fetched over the wire — as Prometheus-style text exposition for the
 //! `stiknn metrics` CLI.
+//!
+//! Request-scoped *tracing* lives next door in [`trace`] (DESIGN.md
+//! §16): the same disabled-by-default handle discipline
+//! ([`trace::TraceHandle`]), but recording spans — trace/span/parent
+//! ids, durations, fields — into a bounded span store, with context
+//! propagation over the NDJSON protocol so one sharded request renders
+//! as one tree.
 
 mod prometheus;
+pub mod trace;
 
 pub use prometheus::prometheus_text;
+pub use trace::{Span, SpanCtx, SpanRecord, TraceHandle, TraceMode};
 
 use crate::util::json::Json;
 use std::collections::{BTreeMap, VecDeque};
@@ -208,9 +217,11 @@ impl Histogram {
     }
 }
 
-/// Capacity of the structured event ring: old events are dropped (and
-/// counted) once this many are pending, so a flapping error can never
-/// grow memory or a snapshot without bound.
+/// Default capacity of the structured event ring: old events are
+/// dropped (and counted) once this many are pending, so a flapping
+/// error can never grow memory or a snapshot without bound. Configure
+/// per registry with [`MetricsRegistry::with_event_cap`] (CLI:
+/// `serve --event-ring N`).
 pub const EVENT_RING_CAP: usize = 256;
 
 /// One structured trace event: a kind, key/value context fields, and
@@ -241,6 +252,7 @@ impl Event {
 }
 
 struct Ring {
+    cap: usize,
     next_seq: u64,
     dropped: u64,
     buf: VecDeque<Event>,
@@ -261,6 +273,12 @@ pub struct MetricsRegistry {
 
 impl MetricsRegistry {
     pub fn new(name: &str) -> Arc<Self> {
+        Self::with_event_cap(name, EVENT_RING_CAP)
+    }
+
+    /// A registry whose event ring retains at most `cap` events
+    /// (`serve --event-ring N`; [`EVENT_RING_CAP`] is the default).
+    pub fn with_event_cap(name: &str, cap: usize) -> Arc<Self> {
         Arc::new(MetricsRegistry {
             name: name.to_string(),
             start: Instant::now(),
@@ -269,6 +287,7 @@ impl MetricsRegistry {
             histograms: Mutex::new(BTreeMap::new()),
             labels: Mutex::new(BTreeMap::new()),
             ring: Mutex::new(Ring {
+                cap: cap.max(1),
                 next_seq: 0,
                 dropped: 0,
                 buf: VecDeque::new(),
@@ -307,14 +326,14 @@ impl MetricsRegistry {
         map.entry(name.to_string()).or_default().clone()
     }
 
-    /// Append a structured event, evicting the oldest past
-    /// [`EVENT_RING_CAP`].
+    /// Append a structured event, evicting the oldest past the ring's
+    /// configured capacity.
     pub fn event(&self, kind: &str, fields: &[(&str, String)]) {
         let elapsed_ms = self.start.elapsed().as_millis().min(u64::MAX as u128) as u64;
         let mut ring = self.ring.lock().unwrap();
         let seq = ring.next_seq;
         ring.next_seq += 1;
-        if ring.buf.len() == EVENT_RING_CAP {
+        if ring.buf.len() == ring.cap {
             ring.buf.pop_front();
             ring.dropped += 1;
         }
@@ -332,6 +351,12 @@ impl MetricsRegistry {
     /// The buffered events, oldest first.
     pub fn events(&self) -> Vec<Event> {
         self.ring.lock().unwrap().buf.iter().cloned().collect()
+    }
+
+    /// Events evicted from the ring so far (the exit report surfaces
+    /// this so silent truncation is visible).
+    pub fn events_dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped
     }
 
     /// A single metric's current value by name, if it exists (counters,
@@ -424,6 +449,19 @@ impl ObsHandle {
         ObsHandle {
             reg: Some(MetricsRegistry::new(name)),
         }
+    }
+
+    /// [`Self::enabled`] with an explicit event-ring capacity
+    /// (`serve --event-ring N`).
+    pub fn enabled_with_cap(name: &str, event_cap: usize) -> Self {
+        ObsHandle {
+            reg: Some(MetricsRegistry::with_event_cap(name, event_cap)),
+        }
+    }
+
+    /// Events evicted across the registry's ring (0 when disabled).
+    pub fn events_dropped(&self) -> u64 {
+        self.reg.as_ref().map_or(0, |r| r.events_dropped())
     }
 
     /// A handle sharing an existing registry.
@@ -601,6 +639,83 @@ mod tests {
         assert!(h.quantile_ns(1.0) >= 1_000_000);
         let empty = Histogram::new();
         assert_eq!(empty.quantile_ns(0.99), 0);
+    }
+
+    #[test]
+    fn quantile_at_exact_bucket_boundaries() {
+        // One sample per finite bucket, recorded AT each bucket's upper
+        // bound: quantile q must return the bound of the ceil(q·24)-th
+        // occupied bucket exactly.
+        let h = Histogram::new();
+        for i in 0..HIST_BUCKETS {
+            h.record_ns(bucket_bound_ns(i));
+        }
+        assert_eq!(h.count(), HIST_BUCKETS as u64);
+        // A target of exactly k samples resolves to bucket k-1's bound
+        // (q placed mid-step so f64 rounding cannot tip ceil() over).
+        for k in 1..=HIST_BUCKETS {
+            let q = (k as f64 - 0.5) / HIST_BUCKETS as f64;
+            assert_eq!(h.quantile_ns(q), bucket_bound_ns(k - 1), "q={q}");
+        }
+        // And the absolute edge: q=1.0 is the last occupied bucket.
+        assert_eq!(h.quantile_ns(1.0), bucket_bound_ns(HIST_BUCKETS - 1));
+    }
+
+    #[test]
+    fn quantile_overflow_bucket_reports_observed_max() {
+        let h = Histogram::new();
+        let beyond = bucket_bound_ns(HIST_BUCKETS - 1) + 1; // > ~8.4s
+        h.record_ns(500);
+        h.record_ns(beyond);
+        h.record_ns(beyond + 7);
+        // p50 target = 2 of 3 → still... cumulative finite count is 1,
+        // so any q putting the target past the finite buckets falls
+        // through to max_ns.
+        assert_eq!(h.quantile_ns(0.5), beyond + 7);
+        assert_eq!(h.quantile_ns(1.0), beyond + 7);
+        assert_eq!(h.max_ns(), beyond + 7);
+        // A quantile small enough to stay finite still resolves a bound.
+        assert_eq!(h.quantile_ns(0.1), 1_000);
+    }
+
+    #[test]
+    fn quantile_q0_and_q1_edges() {
+        let h = Histogram::new();
+        h.record_ns(1_500); // bucket 1 (bound 2µs)
+        h.record_ns(3_000); // bucket 2 (bound 4µs)
+        // q=0 clamps to a target of 1 sample — the first occupied bucket.
+        assert_eq!(h.quantile_ns(0.0), 2_000);
+        assert_eq!(h.quantile_ns(-3.0), 2_000); // clamped below
+        // q=1 is the last occupied finite bucket's bound.
+        assert_eq!(h.quantile_ns(1.0), 4_000);
+        assert_eq!(h.quantile_ns(7.5), 4_000); // clamped above
+        // Empty histogram: every quantile is 0.
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile_ns(0.0), 0);
+        assert_eq!(empty.quantile_ns(1.0), 0);
+    }
+
+    #[test]
+    fn event_ring_capacity_is_configurable() {
+        let reg = MetricsRegistry::with_event_cap("smallring", 3);
+        for i in 0..5 {
+            reg.event("tick", &[("i", i.to_string())]);
+        }
+        let events = reg.events();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].seq, 2);
+        assert_eq!(reg.events_dropped(), 2);
+        // Degenerate cap clamps to 1 instead of panicking.
+        let one = MetricsRegistry::with_event_cap("one", 0);
+        one.event("a", &[]);
+        one.event("b", &[]);
+        assert_eq!(one.events().len(), 1);
+        assert_eq!(one.events_dropped(), 1);
+        // Handle-level accessor mirrors the registry (and is 0 disabled).
+        let h = ObsHandle::enabled_with_cap("h", 2);
+        h.event("x", &[]);
+        assert_eq!(h.events_dropped(), 0);
+        assert_eq!(ObsHandle::disabled().events_dropped(), 0);
     }
 
     #[test]

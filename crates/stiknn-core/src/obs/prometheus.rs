@@ -18,19 +18,44 @@ use crate::util::json::Json;
 fn sanitize(name: &str) -> String {
     let mut out = String::with_capacity(name.len() + 7);
     out.push_str("stiknn_");
-    for ch in name.chars() {
-        out.push(if ch.is_ascii_alphanumeric() || ch == '_' {
-            ch
-        } else {
-            '_'
-        });
-    }
+    out.push_str(&label_name(name));
     out
+}
+
+/// Label NAME sanitizer (no prefix): the exposition charset for label
+/// names is the same `[a-zA-Z0-9_]` fold, but values keep their text and
+/// are escaped instead ([`escape_label_value`]).
+fn label_name(name: &str) -> String {
+    name.chars()
+        .map(|ch| {
+            if ch.is_ascii_alphanumeric() || ch == '_' {
+                ch
+            } else {
+                '_'
+            }
+        })
+        .collect()
 }
 
 fn num(j: &Json) -> String {
     // Json renders integral values without a decimal point already.
     j.to_string()
+}
+
+/// Label VALUE escaping per the exposition format: backslash, double
+/// quote, and line feed are the three characters with escape sequences
+/// (`\\`, `\"`, `\n`); everything else passes through verbatim.
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(ch),
+        }
+    }
+    out
 }
 
 /// Render a snapshot (see module docs). `Json::Null` — a disabled
@@ -47,21 +72,42 @@ pub fn prometheus_text(snapshot: &Json) -> String {
     if let Some(up) = obj.get("uptime_ms") {
         out.push_str(&format!("# uptime_ms: {}\n", num(up)));
     }
+    // Registry labels render as a Prometheus info-style metric (constant
+    // 1 with one label pair per registry label), with label VALUES
+    // escaped per the exposition format — a kernel name or hostname
+    // containing `"`, `\` or a newline must not corrupt the scrape.
+    if let Some(labels) = obj.get("labels").and_then(|j| j.as_obj()) {
+        if !labels.is_empty() {
+            let pairs: Vec<String> = labels
+                .iter()
+                .filter_map(|(k, v)| {
+                    let v = v.as_str()?;
+                    Some(format!("{}=\"{}\"", label_name(k), escape_label_value(v)))
+                })
+                .collect();
+            out.push_str("# HELP stiknn_registry_info static registry labels\n");
+            out.push_str("# TYPE stiknn_registry_info gauge\n");
+            out.push_str(&format!("stiknn_registry_info{{{}}} 1\n", pairs.join(",")));
+        }
+    }
     if let Some(counters) = obj.get("counters").and_then(|j| j.as_obj()) {
         for (k, v) in counters {
             let name = sanitize(k);
+            out.push_str(&format!("# HELP {name} counter {k}\n"));
             out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", num(v)));
         }
     }
     if let Some(gauges) = obj.get("gauges").and_then(|j| j.as_obj()) {
         for (k, v) in gauges {
             let name = sanitize(k);
+            out.push_str(&format!("# HELP {name} gauge {k}\n"));
             out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", num(v)));
         }
     }
     if let Some(hists) = obj.get("histograms").and_then(|j| j.as_obj()) {
         for (k, h) in hists {
             let name = sanitize(k);
+            out.push_str(&format!("# HELP {name} latency histogram {k} (ns)\n"));
             out.push_str(&format!("# TYPE {name} histogram\n"));
             let counts: Vec<u64> = h
                 .get("buckets")
@@ -127,5 +173,64 @@ mod tests {
     #[test]
     fn sanitizes_metric_names() {
         assert_eq!(sanitize("a.b-c d"), "stiknn_a_b_c_d");
+    }
+
+    #[test]
+    fn help_and_type_lines_precede_every_metric() {
+        let reg = MetricsRegistry::new("prom");
+        reg.counter("server.commands").add(1);
+        reg.gauge("lvl").set(0);
+        reg.histogram("cmd.query_ns").record_ns(1);
+        let text = prometheus_text(&reg.snapshot());
+        for metric in [
+            "stiknn_server_commands",
+            "stiknn_lvl",
+            "stiknn_cmd_query_ns",
+        ] {
+            let help = text.lines().position(|l| l.starts_with(&format!("# HELP {metric} ")));
+            let typ = text.lines().position(|l| l.starts_with(&format!("# TYPE {metric} ")));
+            assert!(help.is_some(), "no HELP for {metric}");
+            assert!(typ.is_some(), "no TYPE for {metric}");
+            assert!(help < typ, "HELP must precede TYPE for {metric}");
+        }
+        assert!(text.contains("# TYPE stiknn_cmd_query_ns histogram"));
+    }
+
+    #[test]
+    fn label_values_with_quotes_backslashes_newlines_are_escaped() {
+        // Regression: a label value containing `"` (set via set_label)
+        // used to be impossible to render safely — labels were silently
+        // dropped from the exposition. Now they ship escaped.
+        let reg = MetricsRegistry::new("esc");
+        reg.set_label("kernel", "avx2 \"fma\"");
+        reg.set_label("path", "C:\\bin");
+        reg.set_label("note", "two\nlines");
+        let text = prometheus_text(&reg.snapshot());
+        assert!(text.contains("# TYPE stiknn_registry_info gauge"));
+        assert!(text.contains("kernel=\"avx2 \\\"fma\\\"\""));
+        assert!(text.contains("path=\"C:\\\\bin\""));
+        assert!(text.contains("note=\"two\\nlines\""));
+        // The info line stays a single line: the raw newline never leaks.
+        let info = text
+            .lines()
+            .find(|l| l.starts_with("stiknn_registry_info{"))
+            .unwrap();
+        assert!(info.ends_with("} 1"));
+    }
+
+    #[test]
+    fn escape_label_value_is_exhaustive_over_the_three_escapes() {
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\"b"), "a\\\"b");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("a\nb"), "a\\nb");
+        assert_eq!(escape_label_value("\\\"\n"), "\\\\\\\"\\n");
+    }
+
+    #[test]
+    fn registries_without_labels_emit_no_info_metric() {
+        let reg = MetricsRegistry::new("bare");
+        reg.counter("c").inc();
+        assert!(!prometheus_text(&reg.snapshot()).contains("registry_info"));
     }
 }

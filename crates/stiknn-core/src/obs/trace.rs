@@ -1,0 +1,758 @@
+//! Request-scoped distributed tracing (DESIGN.md §16).
+//!
+//! A [`Span`] is one timed unit of work: a trace id shared by every span
+//! of one request, its own span id, an optional parent span id, a
+//! monotonic start offset and duration, and free-form string fields
+//! (engine, command, session, …). Finished spans land in a bounded span
+//! store inside the process's [`TraceHandle`] — a fixed slot ring
+//! indexed by an atomic cursor, so recording a span is one relaxed
+//! `fetch_add` plus an uncontended per-slot lock (writers only meet on a
+//! slot after the ring wraps a full capacity, and never block each
+//! other's cursor).
+//!
+//! Distribution works by value, not by collector: trace context travels
+//! as an optional `"trace": {"id","parent"}` object on NDJSON request
+//! frames, the remote side runs its spans under the caller's ids, and
+//! echoes the finished spans back on the response (`"spans": [...]`) so
+//! a `ShardedSession` fan-out re-imports every member's subtree into the
+//! coordinator's own store — ONE tree under the coordinator's root span,
+//! assembled without any shared backend.
+//!
+//! # Sampling
+//!
+//! [`TraceMode::Sampled(n)`] admits every n-th ROOT span; the decision
+//! is made once where the trace starts. Child and adopted (propagated)
+//! spans always record — by the time context reaches a member, the root
+//! already paid for the trace.
+//!
+//! # Zero overhead when off
+//!
+//! The same contract as [`ObsHandle`](super::ObsHandle): a disabled
+//! handle is `None` inside, every operation is a branch on that option —
+//! no clock reads, no id allocation, and the span store is never even
+//! constructed. `tests/obs_invariants.rs` proves results are
+//! bit-identical with tracing off, on, and sampled.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default bounded span-store capacity (spans retained per process).
+pub const SPAN_STORE_CAP: usize = 2048;
+
+/// Span ids must be unique across every process that contributes to one
+/// tree, without coordination: low 24 bits of the pid in the high half,
+/// a process-wide counter in the low half.
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_id() -> u64 {
+    let pid = (std::process::id() as u64) & 0xFF_FFFF;
+    (pid << 40) | (NEXT_ID.fetch_add(1, Ordering::Relaxed) & 0xFF_FFFF_FFFF)
+}
+
+/// Render a span/trace id the way the protocol and logs spell it.
+pub fn hex_id(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+/// Parse a [`hex_id`]-formatted id.
+pub fn parse_hex_id(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// The coordinates a span hands to its children (and to remote members
+/// via the `"trace"` request field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+/// One finished span as stored and shipped.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Store-local arrival order (NOT shipped; reassigned on import).
+    pub seq: u64,
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: Option<u64>,
+    pub name: String,
+    /// Microseconds since the recording store's epoch — comparable
+    /// within one process, ordering-only across processes.
+    pub start_us: u64,
+    pub dur_ns: u64,
+    pub fields: Vec<(String, String)>,
+}
+
+impl SpanRecord {
+    /// Wire form (ids as 16-hex strings: u64 does not survive f64 JSON).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("trace", Json::str(hex_id(self.trace_id))),
+            ("span", Json::str(hex_id(self.span_id))),
+            ("name", Json::str(self.name.clone())),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("dur_ns", Json::num(self.dur_ns as f64)),
+        ];
+        if let Some(p) = self.parent_id {
+            pairs.push(("parent", Json::str(hex_id(p))));
+        }
+        if !self.fields.is_empty() {
+            pairs.push((
+                "fields",
+                Json::obj(
+                    self.fields
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Json::str(v.clone())))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Inverse of [`Self::to_json`]; `seq` comes back 0 (the importing
+    /// store assigns its own arrival order).
+    pub fn from_json(v: &Json) -> Option<SpanRecord> {
+        let trace_id = parse_hex_id(v.get("trace")?.as_str()?)?;
+        let span_id = parse_hex_id(v.get("span")?.as_str()?)?;
+        let parent_id = match v.get("parent") {
+            Some(p) => Some(parse_hex_id(p.as_str()?)?),
+            None => None,
+        };
+        let name = v.get("name")?.as_str()?.to_string();
+        let start_us = v.get("start_us")?.as_f64()? as u64;
+        let dur_ns = v.get("dur_ns")?.as_f64()? as u64;
+        let mut fields = Vec::new();
+        if let Some(obj) = v.get("fields").and_then(Json::as_obj) {
+            for (k, val) in obj {
+                fields.push((k.clone(), val.as_str()?.to_string()));
+            }
+        }
+        Some(SpanRecord {
+            seq: 0,
+            trace_id,
+            span_id,
+            parent_id,
+            name,
+            start_us,
+            dur_ns,
+            fields,
+        })
+    }
+}
+
+/// Whether (and how often) root spans are admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceMode {
+    Off,
+    On,
+    /// Admit every n-th root span (n ≥ 1; 1 behaves like [`TraceMode::On`]).
+    Sampled(u64),
+}
+
+impl TraceMode {
+    /// Parse the `serve --trace` / protocol spelling: `on`, `off`, or
+    /// `sampled:N`.
+    pub fn parse(s: &str) -> Result<TraceMode, String> {
+        match s {
+            "on" => Ok(TraceMode::On),
+            "off" => Ok(TraceMode::Off),
+            _ => match s.strip_prefix("sampled:") {
+                Some(n) => match n.parse::<u64>() {
+                    Ok(n) if n >= 1 => Ok(TraceMode::Sampled(n)),
+                    _ => Err(format!("sampled:N needs an integer N >= 1 (got '{n}')")),
+                },
+                None => Err(format!("expected on|off|sampled:N (got '{s}')")),
+            },
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            TraceMode::Off => "off".to_string(),
+            TraceMode::On => "on".to_string(),
+            TraceMode::Sampled(n) => format!("sampled:{n}"),
+        }
+    }
+}
+
+/// The per-process recording state behind an enabled handle.
+struct Tracer {
+    epoch: Instant,
+    mode: TraceMode,
+    /// Fixed slot ring: `cursor` counts every record ever pushed; a push
+    /// writes slot `cursor % cap`, so the newest `cap` spans survive.
+    slots: Box<[Mutex<Option<SpanRecord>>]>,
+    cursor: AtomicU64,
+    /// Root-span attempts, for the every-n-th sampling decision.
+    roots_seen: AtomicU64,
+}
+
+impl Tracer {
+    fn push(&self, mut rec: SpanRecord) {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        rec.seq = seq;
+        let slot = (seq % self.slots.len() as u64) as usize;
+        *self.slots[slot].lock().unwrap() = Some(rec);
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn collect<F: Fn(&SpanRecord) -> bool>(&self, keep: F) -> Vec<SpanRecord> {
+        let mut out: Vec<SpanRecord> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .filter(|r| keep(r))
+            .collect();
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+}
+
+/// Cloneable tracing handle: `None` inside when disabled (the
+/// zero-overhead default), a shared [`Tracer`] when enabled. Clones
+/// share the same span store, which is how the server registry, every
+/// session, and the shard coordinator all record into one tree.
+#[derive(Clone, Default)]
+pub struct TraceHandle {
+    tracer: Option<Arc<Tracer>>,
+}
+
+impl TraceHandle {
+    /// The no-op handle: never reads a clock, never touches a store.
+    pub fn disabled() -> TraceHandle {
+        TraceHandle { tracer: None }
+    }
+
+    /// Record every root span, default store capacity.
+    pub fn enabled() -> TraceHandle {
+        Self::with_mode(TraceMode::On)
+    }
+
+    /// Handle for a parsed `--trace` mode ([`TraceMode::Off`] yields the
+    /// disabled handle).
+    pub fn with_mode(mode: TraceMode) -> TraceHandle {
+        Self::with_mode_and_cap(mode, SPAN_STORE_CAP)
+    }
+
+    /// [`Self::with_mode`] with an explicit span-store capacity.
+    pub fn with_mode_and_cap(mode: TraceMode, cap: usize) -> TraceHandle {
+        if mode == TraceMode::Off {
+            return Self::disabled();
+        }
+        let cap = cap.max(1);
+        TraceHandle {
+            tracer: Some(Arc::new(Tracer {
+                epoch: Instant::now(),
+                mode,
+                slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+                cursor: AtomicU64::new(0),
+                roots_seen: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// The configured mode ([`TraceMode::Off`] when disabled).
+    pub fn mode(&self) -> TraceMode {
+        self.tracer.as_ref().map_or(TraceMode::Off, |t| t.mode)
+    }
+
+    /// Start a new trace: a root span, subject to the sampling mode.
+    pub fn root(&self, name: &str) -> Span {
+        let Some(t) = &self.tracer else {
+            return Span { inner: None };
+        };
+        let k = t.roots_seen.fetch_add(1, Ordering::Relaxed);
+        if let TraceMode::Sampled(n) = t.mode {
+            if k % n != 0 {
+                return Span { inner: None };
+            }
+        }
+        self.start(t.clone(), fresh_id(), None, name)
+    }
+
+    /// Start a span under `parent` when the caller is inside a sampled
+    /// trace, or a fresh (sampling-gated) root when it is not — the
+    /// one-liner for layers that run both standalone and per-request.
+    pub fn span_under(&self, parent: Option<SpanCtx>, name: &str) -> Span {
+        match parent {
+            Some(p) => self.child(p, name),
+            None => self.root(name),
+        }
+    }
+
+    /// Start a child span. Always records (the sampling decision was
+    /// made at the root that produced `parent`).
+    pub fn child(&self, parent: SpanCtx, name: &str) -> Span {
+        let Some(t) = &self.tracer else {
+            return Span { inner: None };
+        };
+        self.start_ids(t.clone(), parent.trace_id, Some(parent.span_id), name)
+    }
+
+    /// Join a trace that arrived over the wire: run `name` under the
+    /// remote caller's trace and parent-span ids. Always records.
+    pub fn adopt(&self, trace_id: u64, parent_id: u64, name: &str) -> Span {
+        let Some(t) = &self.tracer else {
+            return Span { inner: None };
+        };
+        self.start_ids(t.clone(), trace_id, Some(parent_id), name)
+    }
+
+    fn start(&self, t: Arc<Tracer>, trace_id: u64, parent_id: Option<u64>, name: &str) -> Span {
+        Span {
+            inner: Some(SpanInner {
+                start_us: t.now_us(),
+                tracer: t,
+                trace_id,
+                span_id: trace_id,
+                parent_id,
+                name: name.to_string(),
+                start: Instant::now(),
+                fields: Vec::new(),
+            }),
+        }
+    }
+
+    fn start_ids(&self, t: Arc<Tracer>, trace_id: u64, parent_id: Option<u64>, name: &str) -> Span {
+        Span {
+            inner: Some(SpanInner {
+                start_us: t.now_us(),
+                tracer: t,
+                trace_id,
+                span_id: fresh_id(),
+                parent_id,
+                name: name.to_string(),
+                start: Instant::now(),
+                fields: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record a pre-measured span (the coordinator pipeline's phase
+    /// spans carry cumulative cross-worker busy time measured by
+    /// [`Progress`](crate::coordinator::progress::Progress), not a live
+    /// clock window). Returns the new span's id so callers can nest
+    /// further synthetic children (`coord.prep.kernel` under
+    /// `coord.prep`); 0 when disabled.
+    pub fn record_synth(
+        &self,
+        trace_id: u64,
+        parent_id: u64,
+        name: &str,
+        dur_ns: u64,
+        fields: &[(&str, String)],
+    ) -> u64 {
+        let Some(t) = &self.tracer else { return 0 };
+        let span_id = fresh_id();
+        let now = t.now_us();
+        t.push(SpanRecord {
+            seq: 0,
+            trace_id,
+            span_id,
+            parent_id: Some(parent_id),
+            name: name.to_string(),
+            start_us: now.saturating_sub(dur_ns / 1_000),
+            dur_ns,
+            fields: fields
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        });
+        span_id
+    }
+
+    /// Import a span that finished in ANOTHER process (a member's echo):
+    /// ids are preserved — that is what stitches the tree — while the
+    /// arrival order is local.
+    pub fn import(&self, rec: SpanRecord) {
+        if let Some(t) = &self.tracer {
+            t.push(rec);
+        }
+    }
+
+    /// Store watermark: records pushed so far. `spans_since(id, mark)`
+    /// with a mark taken before a command isolates that command's spans.
+    pub fn seq(&self) -> u64 {
+        self.tracer
+            .as_ref()
+            .map_or(0, |t| t.cursor.load(Ordering::Relaxed))
+    }
+
+    /// Spans recorded past the ring's capacity (oldest-evicted count).
+    pub fn dropped(&self) -> u64 {
+        self.tracer.as_ref().map_or(0, |t| {
+            t.cursor
+                .load(Ordering::Relaxed)
+                .saturating_sub(t.slots.len() as u64)
+        })
+    }
+
+    /// Every retained span of one trace, in arrival order.
+    pub fn spans_of(&self, trace_id: u64) -> Vec<SpanRecord> {
+        self.tracer
+            .as_ref()
+            .map_or(Vec::new(), |t| t.collect(|r| r.trace_id == trace_id))
+    }
+
+    /// [`Self::spans_of`] restricted to records pushed at or after a
+    /// [`Self::seq`] watermark.
+    pub fn spans_since(&self, trace_id: u64, mark: u64) -> Vec<SpanRecord> {
+        self.tracer.as_ref().map_or(Vec::new(), |t| {
+            t.collect(|r| r.trace_id == trace_id && r.seq >= mark)
+        })
+    }
+
+    /// The newest retained root spans (no parent), newest first, at most
+    /// `limit`.
+    pub fn recent_roots(&self, limit: usize) -> Vec<SpanRecord> {
+        let Some(t) = &self.tracer else {
+            return Vec::new();
+        };
+        let mut roots = t.collect(|r| r.parent_id.is_none());
+        roots.reverse();
+        roots.truncate(limit);
+        roots
+    }
+}
+
+struct SpanInner {
+    tracer: Arc<Tracer>,
+    trace_id: u64,
+    span_id: u64,
+    parent_id: Option<u64>,
+    name: String,
+    start: Instant,
+    start_us: u64,
+    fields: Vec<(String, String)>,
+}
+
+/// A live span: records itself into the store when finished or dropped.
+/// A span from a disabled handle (or a sampled-out root) is inert —
+/// every method is a no-op and nothing is ever recorded.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+impl Span {
+    /// An inert span that records nothing — for call sites that need a
+    /// span variable on paths where no parent context exists (a child
+    /// position must never fall back to starting a fresh root).
+    pub fn noop() -> Span {
+        Span { inner: None }
+    }
+
+    /// Is this span actually recording (enabled handle, sampled in)?
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The coordinates children and remote members record under.
+    pub fn ctx(&self) -> Option<SpanCtx> {
+        self.inner.as_ref().map(|i| SpanCtx {
+            trace_id: i.trace_id,
+            span_id: i.span_id,
+        })
+    }
+
+    /// Attach a string field (engine, command, session, …). No-op on an
+    /// inert span.
+    pub fn field(&mut self, key: &str, value: impl Into<String>) {
+        if let Some(i) = &mut self.inner {
+            i.fields.push((key.to_string(), value.into()));
+        }
+    }
+
+    /// Finish now (Drop does the same; this spells out intent at the
+    /// end of a measured window).
+    pub fn finish(self) {}
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(i) = self.inner.take() {
+            let dur_ns = i.start.elapsed().as_nanos() as u64;
+            i.tracer.push(SpanRecord {
+                seq: 0,
+                trace_id: i.trace_id,
+                span_id: i.span_id,
+                parent_id: i.parent_id,
+                name: i.name,
+                start_us: i.start_us,
+                dur_ns,
+                fields: i.fields,
+            });
+        }
+    }
+}
+
+fn fmt_dur(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Render spans as an indented tree with per-span self-time (duration
+/// minus DIRECT children, clamped at zero — coordinator phase spans
+/// carry cumulative busy time across workers, which can exceed the
+/// parent's wall clock). Spans whose parent is not in the set (e.g. a
+/// member store queried for a trace rooted elsewhere) print at top
+/// level.
+pub fn render_tree(spans: &[SpanRecord]) -> String {
+    let present: std::collections::BTreeSet<u64> = spans.iter().map(|r| r.span_id).collect();
+    let mut children: std::collections::BTreeMap<u64, Vec<&SpanRecord>> =
+        std::collections::BTreeMap::new();
+    let mut tops: Vec<&SpanRecord> = Vec::new();
+    for r in spans {
+        match r.parent_id {
+            Some(p) if present.contains(&p) && p != r.span_id => {
+                children.entry(p).or_default().push(r)
+            }
+            _ => tops.push(r),
+        }
+    }
+    let order = |v: &mut Vec<&SpanRecord>| v.sort_by_key(|r| (r.start_us, r.seq, r.span_id));
+    tops.sort_by_key(|r| (r.start_us, r.seq, r.span_id));
+    for v in children.values_mut() {
+        order(v);
+    }
+    let mut out = String::new();
+    fn walk(
+        r: &SpanRecord,
+        depth: usize,
+        children: &std::collections::BTreeMap<u64, Vec<&SpanRecord>>,
+        out: &mut String,
+    ) {
+        let kids = children.get(&r.span_id);
+        let child_ns: u64 = kids
+            .map(|v| v.iter().map(|c| c.dur_ns).sum())
+            .unwrap_or(0);
+        let self_ns = r.dur_ns.saturating_sub(child_ns);
+        let mut line = format!(
+            "{}{}  {}  self={}",
+            "  ".repeat(depth),
+            r.name,
+            fmt_dur(r.dur_ns),
+            fmt_dur(self_ns)
+        );
+        if depth == 0 {
+            line.push_str(&format!("  trace={}", hex_id(r.trace_id)));
+        }
+        for (k, v) in &r.fields {
+            line.push_str(&format!("  {k}={v}"));
+        }
+        line.push('\n');
+        out.push_str(&line);
+        if let Some(kids) = kids {
+            for c in kids {
+                walk(c, depth + 1, children, out);
+            }
+        }
+    }
+    for r in &tops {
+        walk(r, 0, &children, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_records_nothing() {
+        let t = TraceHandle::disabled();
+        assert!(!t.is_enabled());
+        assert_eq!(t.mode(), TraceMode::Off);
+        let mut s = t.root("anything");
+        assert!(!s.is_recording());
+        assert!(s.ctx().is_none());
+        s.field("k", "v");
+        s.finish();
+        assert_eq!(t.seq(), 0);
+        assert!(t.recent_roots(10).is_empty());
+    }
+
+    #[test]
+    fn off_mode_is_the_disabled_handle() {
+        assert!(!TraceHandle::with_mode(TraceMode::Off).is_enabled());
+    }
+
+    #[test]
+    fn root_child_share_a_trace_and_nest() {
+        let t = TraceHandle::enabled();
+        let root = t.root("req");
+        let rc = root.ctx().unwrap();
+        let child = t.child(rc, "work");
+        let cc = child.ctx().unwrap();
+        assert_eq!(cc.trace_id, rc.trace_id);
+        assert_ne!(cc.span_id, rc.span_id);
+        child.finish();
+        root.finish();
+        let spans = t.spans_of(rc.trace_id);
+        assert_eq!(spans.len(), 2);
+        // Child finished first, so it arrives first.
+        assert_eq!(spans[0].name, "work");
+        assert_eq!(spans[0].parent_id, Some(rc.span_id));
+        assert_eq!(spans[1].name, "req");
+        assert_eq!(spans[1].parent_id, None);
+    }
+
+    #[test]
+    fn sampled_admits_every_nth_root_but_every_child() {
+        let t = TraceHandle::with_mode(TraceMode::Sampled(3));
+        let recorded: Vec<bool> = (0..9).map(|_| t.root("r").is_recording()).collect();
+        assert_eq!(
+            recorded,
+            [true, false, false, true, false, false, true, false, false]
+        );
+        // Adopted spans ignore sampling: the root already decided.
+        assert!(t.adopt(7, 9, "member").is_recording());
+    }
+
+    #[test]
+    fn span_store_is_bounded_and_counts_drops() {
+        let t = TraceHandle::with_mode_and_cap(TraceMode::On, 4);
+        let root = t.root("keeper");
+        let ctx = root.ctx().unwrap();
+        root.finish();
+        for i in 0..10 {
+            t.root(&format!("r{i}")).finish();
+        }
+        assert_eq!(t.seq(), 11);
+        assert_eq!(t.dropped(), 7);
+        // The keeper was evicted; only the newest 4 remain.
+        assert!(t.spans_of(ctx.trace_id).is_empty());
+        let roots = t.recent_roots(100);
+        assert_eq!(roots.len(), 4);
+        assert_eq!(roots[0].name, "r9"); // newest first
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let t = TraceHandle::enabled();
+        let mut s = t.root("req");
+        s.field("session", "plain");
+        s.field("engine", "dense");
+        let ctx = s.ctx().unwrap();
+        s.finish();
+        let rec = &t.spans_of(ctx.trace_id)[0];
+        let back = SpanRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back.trace_id, rec.trace_id);
+        assert_eq!(back.span_id, rec.span_id);
+        assert_eq!(back.parent_id, rec.parent_id);
+        assert_eq!(back.name, rec.name);
+        assert_eq!(back.start_us, rec.start_us);
+        assert_eq!(back.dur_ns, rec.dur_ns);
+        // The wire form is a sorted map, so compare fields order-free.
+        let (mut a, mut b) = (back.fields.clone(), rec.fields.clone());
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn import_preserves_ids_and_spans_since_isolates() {
+        let t = TraceHandle::enabled();
+        let root = t.root("req");
+        let ctx = root.ctx().unwrap();
+        let mark = t.seq();
+        t.import(SpanRecord {
+            seq: 999, // overwritten by the importing store
+            trace_id: ctx.trace_id,
+            span_id: 0xabc,
+            parent_id: Some(ctx.span_id),
+            name: "remote".into(),
+            start_us: 5,
+            dur_ns: 1_000,
+            fields: vec![("member".into(), "1".into())],
+        });
+        root.finish();
+        let since = t.spans_since(ctx.trace_id, mark);
+        assert_eq!(since.len(), 2);
+        assert_eq!(since[0].span_id, 0xabc);
+        assert_eq!(since[0].parent_id, Some(ctx.span_id));
+    }
+
+    #[test]
+    fn synth_spans_nest_under_their_parent() {
+        let t = TraceHandle::enabled();
+        let root = t.root("ingest");
+        let ctx = root.ctx().unwrap();
+        let prep = t.record_synth(ctx.trace_id, ctx.span_id, "coord.prep", 5_000, &[]);
+        assert_ne!(prep, 0);
+        t.record_synth(ctx.trace_id, prep, "coord.prep.kernel", 2_000, &[]);
+        root.finish();
+        let spans = t.spans_of(ctx.trace_id);
+        assert_eq!(spans.len(), 3);
+        let kernel = spans.iter().find(|s| s.name == "coord.prep.kernel").unwrap();
+        assert_eq!(kernel.parent_id, Some(prep));
+        assert_eq!(kernel.dur_ns, 2_000);
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        assert_eq!(TraceMode::parse("on").unwrap(), TraceMode::On);
+        assert_eq!(TraceMode::parse("off").unwrap(), TraceMode::Off);
+        assert_eq!(TraceMode::parse("sampled:5").unwrap(), TraceMode::Sampled(5));
+        assert!(TraceMode::parse("sampled:0").is_err());
+        assert!(TraceMode::parse("sampled:x").is_err());
+        assert!(TraceMode::parse("maybe").is_err());
+        assert_eq!(TraceMode::Sampled(5).label(), "sampled:5");
+    }
+
+    #[test]
+    fn render_tree_indents_and_reports_self_time() {
+        let spans = vec![
+            SpanRecord {
+                seq: 0,
+                trace_id: 1,
+                span_id: 10,
+                parent_id: None,
+                name: "root".into(),
+                start_us: 0,
+                dur_ns: 10_000,
+                fields: vec![("cmd".into(), "values".into())],
+            },
+            SpanRecord {
+                seq: 1,
+                trace_id: 1,
+                span_id: 11,
+                parent_id: Some(10),
+                name: "kid".into(),
+                start_us: 1,
+                dur_ns: 4_000,
+                fields: vec![],
+            },
+        ];
+        let out = render_tree(&spans);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("root  10.0us  self=6.0us"));
+        assert!(lines[0].contains("trace=0000000000000001"));
+        assert!(lines[0].contains("cmd=values"));
+        assert!(lines[1].starts_with("  kid  4.0us  self=4.0us"));
+    }
+
+    #[test]
+    fn hex_ids_roundtrip() {
+        let id = fresh_id();
+        assert_eq!(parse_hex_id(&hex_id(id)), Some(id));
+        assert!(parse_hex_id("zz").is_none());
+    }
+}

@@ -49,6 +49,8 @@ pub use registry::{
     TrainData,
 };
 
+use crate::obs::trace::{hex_id, parse_hex_id};
+use crate::obs::{SpanCtx, SpanRecord};
 use crate::session::protocol::{self, Access, KNOWN_COMMANDS};
 use crate::session::{Engine, SessionConfig};
 use crate::util::json::Json;
@@ -106,7 +108,37 @@ impl Connection {
             obs.inc("server.errors");
             return (protocol::err("missing string field 'cmd'"), false);
         };
-        let (response, shutdown) = self.dispatch(&cmd, &v);
+        let known = matches!(
+            cmd.as_str(),
+            "shutdown" | "open" | "use" | "close" | "list" | "shard" | "metrics" | "trace"
+        ) || protocol::access_of(&cmd).is_some();
+        let label = if known { cmd.as_str() } else { "unknown" };
+        // Per-command span (DESIGN.md §16): a request carrying `"trace"`
+        // context ADOPTS the caller's trace (always recorded — sampling
+        // is the root's decision) and gets its spans echoed back as
+        // `"spans"`; otherwise this is a (sampling-gated) root span.
+        // With `--trace off` every branch is a no-op and responses are
+        // byte-identical.
+        let trace = self.registry.trace().clone();
+        let ctx = protocol::parse_trace_ctx(&v);
+        let mark = if ctx.is_some() { trace.seq() } else { 0 };
+        let mut span = match ctx {
+            Some(c) => trace.adopt(c.trace_id, c.span_id, &format!("member.{label}")),
+            None => trace.root(&format!("cmd.{label}")),
+        };
+        if span.is_recording() {
+            span.field("cmd", label);
+            if let Some(name) = self.current.as_deref() {
+                span.field("session", name);
+            }
+        }
+        let span_ctx = span.ctx();
+        let trace_tag = span_ctx.map_or_else(|| "-".to_string(), |c| hex_id(c.trace_id));
+        let (mut response, shutdown) = self.dispatch(&cmd, &v, span_ctx);
+        if let Some(c) = ctx {
+            span.finish(); // record BEFORE collecting the echo
+            protocol::attach_spans(&mut response, &trace.spans_since(c.trace_id, mark));
+        }
         let obs = self.registry.obs();
         obs.inc("server.commands");
         if response.get("ok").and_then(Json::as_bool) == Some(false) {
@@ -114,11 +146,6 @@ impl Connection {
         }
         if let Some(t0) = t0 {
             let ns = t0.elapsed().as_nanos() as u64;
-            let known = matches!(
-                cmd.as_str(),
-                "shutdown" | "open" | "use" | "close" | "list" | "shard" | "metrics"
-            ) || protocol::access_of(&cmd).is_some();
-            let label = if known { cmd.as_str() } else { "unknown" };
             obs.observe_ns(&format!("server.cmd.{label}_ns"), ns);
             if let Some(limit) = slow_ms {
                 let ms = ns / 1_000_000;
@@ -136,11 +163,12 @@ impl Connection {
                             ("session", session.to_string()),
                             ("rev", rev.clone()),
                             ("elapsed_ms", ms.to_string()),
+                            ("trace", trace_tag.clone()),
                         ],
                     );
                     eprintln!(
                         "stiknn serve: slow-query cmd={label} session={session} \
-                         rev={rev} elapsed_ms={ms}"
+                         rev={rev} elapsed_ms={ms} trace={trace_tag}"
                     );
                 }
             }
@@ -149,8 +177,9 @@ impl Connection {
     }
 
     /// Route one parsed command (the uninstrumented core of
-    /// [`Self::execute`]).
-    fn dispatch(&mut self, cmd: &str, v: &Json) -> (Json, bool) {
+    /// [`Self::execute`]). `scope` is the enclosing command span, passed
+    /// through to write commands so session-level spans nest under it.
+    fn dispatch(&mut self, cmd: &str, v: &Json, scope: Option<SpanCtx>) -> (Json, bool) {
         match cmd {
             "shutdown" => (
                 protocol::ok("shutdown", vec![("shutdown", Json::Bool(true))]),
@@ -161,6 +190,7 @@ impl Connection {
             "close" => (self.do_close(v), false),
             "list" => (self.do_list(), false),
             "shard" => (self.do_shard(), false),
+            "trace" => (self.do_trace(v), false),
             // Process-wide telemetry is a registry-level question; the
             // per-session form (no "scope", or "scope":"session") routes
             // to the current session like any read.
@@ -168,11 +198,11 @@ impl Connection {
                 (self.do_metrics_process(v), false)
             }
             _ => match protocol::access_of(cmd) {
-                Some(access) => (self.route(cmd, v, access), false),
+                Some(access) => (self.route(cmd, v, access, scope), false),
                 None => (
                     protocol::err(format!(
                         "unknown command '{cmd}' \
-                         (expected open|use|close|list|shard|{KNOWN_COMMANDS})"
+                         (expected open|use|close|list|shard|trace|{KNOWN_COMMANDS})"
                     )),
                     false,
                 ),
@@ -183,7 +213,10 @@ impl Connection {
     /// Route a single-session command to the current session under the
     /// appropriate lock mode. Registry-level failures (unknown session,
     /// spill reload errors) and command failures are both `{"ok":false}`.
-    fn route(&self, cmd: &str, v: &Json, access: Access) -> Json {
+    /// Write commands run with the session's trace scope set to the
+    /// command span (bracketed under the write guard, so concurrent
+    /// writers cannot observe each other's scope).
+    fn route(&self, cmd: &str, v: &Json, access: Access, scope: Option<SpanCtx>) -> Json {
         let Some(name) = self.current.as_deref() else {
             return protocol::err(
                 "no session selected on this connection (send \
@@ -195,10 +228,57 @@ impl Connection {
                 protocol::dispatch_read(s, cmd, v).unwrap_or_else(protocol::fail_json)
             }),
             Access::Write => self.registry.with_session_write(name, |s| {
-                protocol::dispatch_write(s, cmd, v).unwrap_or_else(protocol::fail_json)
+                s.set_trace_scope(scope);
+                let resp = protocol::dispatch_write(s, cmd, v).unwrap_or_else(protocol::fail_json);
+                s.set_trace_scope(None);
+                resp
             }),
         };
         result.unwrap_or_else(|e| protocol::err(format!("{e:#}")))
+    }
+
+    /// The `trace` verb (DESIGN.md §16) — process scope, like
+    /// `metrics scope=process`: the span store lives on the registry.
+    /// `{"cmd":"trace"}` lists recent ROOT spans (newest first, `"limit"`
+    /// caps the count, default 16); `{"cmd":"trace","id":"<hex16>"}`
+    /// returns every stored span of that trace, wire-formatted exactly
+    /// like the `"spans"` echo so one renderer serves both.
+    fn do_trace(&self, v: &Json) -> Json {
+        let trace = self.registry.trace();
+        if !trace.is_enabled() {
+            return protocol::ok(
+                "trace",
+                vec![
+                    ("enabled", Json::Bool(false)),
+                    ("mode", Json::str(trace.mode().label())),
+                ],
+            );
+        }
+        if let Some(idv) = v.get("id") {
+            let Some(id) = idv.as_str().and_then(parse_hex_id) else {
+                return protocol::err("'id' must be a 16-hex-digit trace id");
+            };
+            let spans = trace.spans_of(id);
+            return protocol::ok(
+                "trace",
+                vec![
+                    ("enabled", Json::Bool(true)),
+                    ("id", Json::str(hex_id(id))),
+                    ("spans", Json::arr(spans.iter().map(SpanRecord::to_json))),
+                ],
+            );
+        }
+        let limit = v.get("limit").and_then(Json::as_usize).unwrap_or(16);
+        let roots = trace.recent_roots(limit);
+        protocol::ok(
+            "trace",
+            vec![
+                ("enabled", Json::Bool(true)),
+                ("mode", Json::str(trace.mode().label())),
+                ("dropped", Json::num(trace.dropped() as f64)),
+                ("roots", Json::arr(roots.iter().map(SpanRecord::to_json))),
+            ],
+        )
     }
 
     fn do_open(&mut self, v: &Json) -> Json {

@@ -44,7 +44,7 @@
 //! panicked mid-mutation) refuse all further commands and are never
 //! persisted — their in-memory state cannot be trusted.
 
-use crate::obs::ObsHandle;
+use crate::obs::{ObsHandle, TraceHandle};
 use crate::session::{store, Engine, SessionConfig, ValuationSession};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
@@ -206,6 +206,11 @@ pub struct SessionRegistry {
     /// commands taking `>= N` ms log a structured stderr record. `None`
     /// = off; `Some(0)` logs every command (deterministic for tests).
     slow_ms: Option<u64>,
+    /// Process-wide span store (DESIGN.md §16, `serve --trace`). ONE
+    /// store per server — every session records into it, so a trace that
+    /// crosses sessions (and the spans members echo back to a
+    /// coordinating request) lands in one place for the `trace` verb.
+    trace: TraceHandle,
     inner: Mutex<Inner>,
 }
 
@@ -225,6 +230,7 @@ impl SessionRegistry {
             shard: None,
             obs: ObsHandle::disabled(),
             slow_ms: None,
+            trace: TraceHandle::disabled(),
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 clock: 0,
@@ -253,6 +259,21 @@ impl SessionRegistry {
     pub fn with_slow_ms(mut self, slow_ms: Option<u64>) -> Self {
         self.slow_ms = slow_ms;
         self
+    }
+
+    /// Attach the process-wide tracing handle (`serve --trace`,
+    /// DESIGN.md §16). Builder-style, like [`Self::with_obs`]: set it
+    /// before the registry is shared. Every session opened or reloaded
+    /// afterwards records into this one span store.
+    pub fn with_trace(mut self, trace: TraceHandle) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// The server-wide tracing handle (disabled unless
+    /// [`Self::with_trace`] attached one).
+    pub fn trace(&self) -> &TraceHandle {
+        &self.trace
     }
 
     pub fn slow_ms(&self) -> Option<u64> {
@@ -359,6 +380,7 @@ impl SessionRegistry {
             ObsHandle::disabled()
         };
         session.set_obs(session_obs.clone());
+        session.set_trace(self.trace.clone());
         let stamp = inner.tick();
         let summary = summarize(&session);
         inner.map.insert(
@@ -445,8 +467,10 @@ impl SessionRegistry {
         .with_context(|| format!("reloading spilled session '{name}' from {}", path.display()))?;
         session.set_revision(revision);
         // Re-attach the SAME per-session metrics handle: a spill/reload
-        // cycle must be invisible to the session's counters too.
+        // cycle must be invisible to the session's counters too. The
+        // trace handle likewise (all sessions share the process store).
         session.set_obs(session_obs);
+        session.set_trace(self.trace.clone());
         self.obs.inc("registry.reloads");
         let slot = Arc::new(Slot {
             lock: RwLock::new(session),

@@ -73,7 +73,7 @@ use crate::coordinator::{ingest_banded_with, ingest_values_with, repair_rows, Va
 use crate::data::Dataset;
 use crate::knn::distance::Metric;
 use crate::knn::kernel::NormCache;
-use crate::obs::ObsHandle;
+use crate::obs::{ObsHandle, SpanCtx, TraceHandle};
 use crate::shapley::delta::{self, Edit, MutableRows, RepairCtx, RetainedRows};
 use crate::shapley::sti_knn::{
     prepare_batch_cached, sti_knn_accumulate, PrepScratch, StiParams, PREP_BATCH,
@@ -290,6 +290,15 @@ pub struct ValuationSession {
     /// hook is then a no-op, so results are bit-identical with metrics
     /// on or off (`tests/obs_invariants.rs`). Never serialized.
     obs: ObsHandle,
+    /// Tracing handle (DESIGN.md §16). Same zero-overhead contract as
+    /// `obs`: disabled by default, and a disabled handle never reads the
+    /// clock or touches the span store. Never serialized.
+    trace: TraceHandle,
+    /// The enclosing request span, if any — set by the protocol/server
+    /// layer around a dispatched command so the session's ingest/edit
+    /// spans (and the synthesized coordinator phase spans) parent under
+    /// the command's span instead of starting parallel roots.
+    trace_scope: Option<SpanCtx>,
 }
 
 impl ValuationSession {
@@ -346,6 +355,8 @@ impl ValuationSession {
             fingerprint: Some(fingerprint),
             revision: 0,
             obs: ObsHandle::disabled(),
+            trace: TraceHandle::disabled(),
+            trace_scope: None,
         })
     }
 
@@ -598,6 +609,8 @@ impl ValuationSession {
             fingerprint: Some(fingerprint),
             revision: 0,
             obs: ObsHandle::disabled(),
+            trace: TraceHandle::disabled(),
+            trace_scope: None,
         })
     }
 
@@ -687,6 +700,26 @@ impl ValuationSession {
         &self.obs
     }
 
+    /// Attach a tracing handle (DESIGN.md §16): ingest/edit spans and
+    /// the synthesized coordinator phase spans start recording into its
+    /// span store. Disabled by default, same zero-overhead contract as
+    /// [`Self::set_obs`].
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.trace = trace;
+    }
+
+    /// The session's tracing handle.
+    pub fn trace(&self) -> &TraceHandle {
+        &self.trace
+    }
+
+    /// Set (or clear) the enclosing request span the next operations
+    /// should parent under. The protocol/server layer brackets each
+    /// dispatched command with this; it is NOT cleared automatically.
+    pub fn set_trace_scope(&mut self, scope: Option<SpanCtx>) {
+        self.trace_scope = scope;
+    }
+
     /// Current training labels (live view — edits change it).
     pub fn train_labels(&self) -> &[i32] {
         &self.train_y
@@ -737,6 +770,15 @@ impl ValuationSession {
         // Owned timer (no borrow of self): records into
         // `session.ingest_ns` when it drops at function exit.
         let _ingest_timer = self.obs.timer("session.ingest_ns");
+        // Request-scoped span (DESIGN.md §16): a child of the enclosing
+        // command span when the protocol layer set one, else a
+        // (sampling-gated) root for directly-driven sessions. With
+        // tracing off this is a no-op that never reads the clock.
+        let mut ingest_span = self.trace.span_under(self.trace_scope, "session.ingest");
+        if ingest_span.is_recording() {
+            ingest_span.field("engine", self.config.engine.label());
+            ingest_span.field("points", test_y.len().to_string());
+        }
         let params = StiParams {
             k: self.config.k,
             metric: self.config.metric,
@@ -844,6 +886,38 @@ impl ValuationSession {
                         );
                     }
                 }
+            }
+        }
+        // Coordinator phase spans, synthesized from the Progress roll-up
+        // the parallel pipeline already keeps — threading a live span
+        // through the worker pool would put trace plumbing on the hot
+        // path. Busy time sums across workers, so a phase can "outlast"
+        // the batch's wall time; the renderer clamps self-time at zero.
+        if let Some(ctx) = ingest_span.ctx() {
+            let prep_ns = progress.prep_ns();
+            if prep_ns > 0 {
+                let prep_id =
+                    self.trace
+                        .record_synth(ctx.trace_id, ctx.span_id, "coord.prep", prep_ns, &[]);
+                let kernel_ns = progress.kernel_ns();
+                if kernel_ns > 0 {
+                    self.trace.record_synth(
+                        ctx.trace_id,
+                        prep_id,
+                        "coord.prep.kernel",
+                        kernel_ns,
+                        &[],
+                    );
+                }
+            }
+            let sweep_ns = progress.sweep_ns();
+            if sweep_ns > 0 {
+                let phase = match self.config.engine {
+                    Engine::Dense => "coord.sweep",
+                    Engine::Implicit => "coord.fold",
+                };
+                self.trace
+                    .record_synth(ctx.trace_id, ctx.span_id, phase, sweep_ns, &[]);
             }
         }
         let seq = self.ledger.last().map(|b| b.seq + 1).unwrap_or(0);
@@ -988,6 +1062,10 @@ impl ValuationSession {
     fn repair_after_edit(&mut self, edit: Edit<'_>, old_n: usize, record: MutationRecord) {
         let _edit_timer = self.obs.timer("session.edit_ns");
         self.obs.inc("session.edits");
+        let mut edit_span = self.trace.span_under(self.trace_scope, "session.edit");
+        if edit_span.is_recording() {
+            edit_span.field("op", record.op.label());
+        }
         let new_n = self.train_y.len();
         let EngineState::Implicit { values, rows, live } = &mut self.state else {
             unreachable!("mutable sessions are always implicit (enforced at construction)");

@@ -59,6 +59,8 @@
 //! in the server layer, not here.
 
 use super::{TopBy, ValuationSession};
+use crate::obs::trace::parse_hex_id;
+use crate::obs::{SpanCtx, SpanRecord};
 use crate::util::json::Json;
 use anyhow::Result;
 use std::io::{BufRead, Write};
@@ -199,8 +201,48 @@ pub fn dispatch_write(
 pub const KNOWN_COMMANDS: &str = "ping|ingest|query|values|topk|stats|metrics|\
      add_train|remove_train|relabel|snapshot|shutdown";
 
+/// Parse the optional `"trace"` REQUEST field — the NDJSON trace-context
+/// carrier (DESIGN.md §16): `{"trace":{"id":<hex16>,"parent":<hex16>}}`.
+/// Returns `None` when absent or malformed: trace context is best-effort
+/// telemetry, so a bad carrier must never fail the command it rode on.
+/// (Responses never use the `"trace"` key — the `stats` response already
+/// carries a numeric matrix `trace` — member spans echo back as
+/// `"spans"` instead.)
+pub fn parse_trace_ctx(v: &Json) -> Option<SpanCtx> {
+    let t = v.get("trace")?;
+    let trace_id = parse_hex_id(t.get("id")?.as_str()?)?;
+    let parent_id = parse_hex_id(t.get("parent")?.as_str()?)?;
+    Some(SpanCtx {
+        trace_id,
+        span_id: parent_id,
+    })
+}
+
+/// Attach finished member spans to a response as `"spans":[...]`. Only
+/// called for requests that CARRIED trace context, so an untraced
+/// script's responses stay byte-identical with tracing on or off.
+pub fn attach_spans(resp: &mut Json, spans: &[SpanRecord]) {
+    if spans.is_empty() {
+        return;
+    }
+    if let Json::Obj(m) = resp {
+        m.insert(
+            "spans".to_string(),
+            Json::arr(spans.iter().map(SpanRecord::to_json)),
+        );
+    }
+}
+
 /// Execute one command line → (response, shutdown?). Never panics on
 /// untrusted input; every failure is a `{"ok":false}` response.
+///
+/// A request carrying `"trace"` context joins the caller's trace: the
+/// command runs under an ADOPTED `member.<cmd>` span (always recorded —
+/// sampling is decided at the trace root, so a member's own sampling
+/// setting can never fracture a coordinator's tree), the session's
+/// ingest/edit spans nest under it via the trace scope, and every span
+/// this command produced is echoed back on the response as `"spans"`
+/// for the caller to import into its own store.
 pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
     let v = match Json::parse(line) {
         Ok(v) => v,
@@ -212,6 +254,16 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
     if cmd == "shutdown" {
         return (ok("shutdown", vec![("shutdown", Json::Bool(true))]), true);
     }
+    let ctx = parse_trace_ctx(&v);
+    let trace = session.trace().clone();
+    let mut member_span = None;
+    let mut mark = 0;
+    if let Some(c) = ctx {
+        mark = trace.seq();
+        let span = trace.adopt(c.trace_id, c.span_id, &format!("member.{cmd}"));
+        session.set_trace_scope(span.ctx());
+        member_span = Some(span);
+    }
     let result = match access_of(&cmd) {
         Some(Access::Read) => dispatch_read(session, &cmd, &v),
         Some(Access::Write) => dispatch_write(session, &cmd, &v),
@@ -219,10 +271,17 @@ pub fn handle(session: &mut ValuationSession, line: &str) -> (Json, bool) {
             "unknown command '{cmd}' (expected {KNOWN_COMMANDS})"
         ))),
     };
-    match result {
-        Ok(j) => (j, false),
-        Err(fail) => (fail_json(fail), false),
+    let mut resp = match result {
+        Ok(j) => j,
+        Err(fail) => fail_json(fail),
+    };
+    if let Some(span) = member_span {
+        session.set_trace_scope(None);
+        span.finish(); // records on drop, BEFORE the echo collection
+        let c = ctx.expect("member_span implies ctx");
+        attach_spans(&mut resp, &trace.spans_since(c.trace_id, mark));
     }
+    (resp, false)
 }
 
 pub fn err(msg: impl Into<String>) -> Json {
@@ -1063,6 +1122,75 @@ mod tests {
             bad.get("error").unwrap().as_str().unwrap().contains("unknown metric"),
             "{bad}"
         );
+    }
+
+    #[test]
+    fn traced_requests_echo_member_spans_untraced_do_not() {
+        use crate::obs::TraceHandle;
+        let mut s = tiny_session();
+        s.set_trace(TraceHandle::enabled());
+        // Untraced request: NO "spans" key, even with tracing enabled —
+        // the echo only rides on requests that carried context.
+        let (r, _) = handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5,-1.0,0.25],"y":[0,1]}"#,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert!(r.get("spans").is_none(), "{r}");
+        // Traced request: member.<cmd> (adopted under the carried parent)
+        // plus the nested session.ingest span echo back.
+        let (r, _) = handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.25,-0.5],"y":[1],"trace":{"id":"00000000000000aa","parent":"00000000000000aa"}}"#,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let spans = r.get("spans").unwrap().as_arr().unwrap();
+        assert!(spans.len() >= 2, "{r}");
+        for sp in spans {
+            assert_eq!(sp.get("trace").unwrap().as_str(), Some("00000000000000aa"));
+        }
+        let member = spans
+            .iter()
+            .find(|sp| sp.get("name").unwrap().as_str() == Some("member.ingest"))
+            .expect("member span echoed");
+        assert_eq!(
+            member.get("parent").unwrap().as_str(),
+            Some("00000000000000aa")
+        );
+        let ingest = spans
+            .iter()
+            .find(|sp| sp.get("name").unwrap().as_str() == Some("session.ingest"))
+            .expect("session span echoed");
+        assert_eq!(
+            ingest.get("parent").unwrap().as_str(),
+            member.get("span").unwrap().as_str(),
+            "session span nests under the member span"
+        );
+        // The sticky scope was cleared: a later untraced ingest's span is
+        // a fresh ROOT, not a child of the finished member span.
+        let (r, _) = handle(&mut s, r#"{"cmd":"ingest","x":[0.0,1.0],"y":[0]}"#);
+        assert!(r.get("spans").is_none(), "{r}");
+        let roots = s.trace().recent_roots(16);
+        assert!(
+            roots.iter().any(|sp| sp.name == "session.ingest"),
+            "untraced ingest after a traced one starts its own root"
+        );
+    }
+
+    #[test]
+    fn trace_context_on_a_trace_disabled_session_is_harmless() {
+        let mut s = tiny_session();
+        let (r, _) = handle(
+            &mut s,
+            r#"{"cmd":"ingest","x":[0.5,0.5],"y":[0],"trace":{"id":"0000000000000001","parent":"0000000000000001"}}"#,
+        );
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        assert!(r.get("spans").is_none(), "no store, nothing to echo: {r}");
+        // Malformed carriers are ignored, never an error.
+        let (r, _) = handle(&mut s, r#"{"cmd":"stats","trace":"not an object"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+        let (r, _) = handle(&mut s, r#"{"cmd":"stats","trace":{"id":"xyz"}}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
     }
 
     #[test]

@@ -42,7 +42,8 @@
 //! properties testable without sockets while exercising every byte of
 //! the command layer.
 
-use crate::obs::ObsHandle;
+use crate::obs::trace::hex_id;
+use crate::obs::{ObsHandle, Span, SpanCtx, SpanRecord, TraceHandle};
 use crate::session::protocol;
 use crate::session::{store, SessionConfig, SnapshotPayload, TopBy, ValuationSession};
 use crate::util::json::Json;
@@ -223,6 +224,13 @@ pub struct ShardedSession<L: ShardLink> {
     /// latency (`shard.s<idx>.call_ns`) and raw-fold merge time
     /// (`shard.merge_ns`). Disabled by default; attach with [`Self::set_obs`].
     obs: ObsHandle,
+    /// Coordinator-side tracing (DESIGN.md §16): `shard.values` /
+    /// `shard.ingest` roots, one `shard.s<idx>.call` child per member
+    /// exchange (the request then carries the `"trace"` context field and
+    /// the member's echoed spans are imported back here), and a
+    /// `shard.merge` child around the raw fold. Disabled by default;
+    /// attach with [`Self::set_trace`].
+    trace: TraceHandle,
 }
 
 impl<L: ShardLink> ShardedSession<L> {
@@ -328,6 +336,7 @@ impl<L: ShardLink> ShardedSession<L> {
                 n: n.expect("at least one link was pinged"),
                 next_global,
                 obs: ObsHandle::disabled(),
+                trace: TraceHandle::disabled(),
             },
             shard_tests,
         ))
@@ -342,6 +351,20 @@ impl<L: ShardLink> ShardedSession<L> {
 
     pub fn obs(&self) -> &ObsHandle {
         &self.obs
+    }
+
+    /// Attach a tracing handle: subsequent `values`/`stats`/`top_k`
+    /// fetches and `ingest` fan-outs each record one span tree (see the
+    /// `trace` field docs). Disabled by default — and with tracing off,
+    /// requests never gain the `"trace"` field, so every shard exchange
+    /// is byte-identical to an untraced coordinator's.
+    pub fn set_trace(&mut self, trace: TraceHandle) {
+        self.trace = trace;
+    }
+
+    /// The coordinator's tracing handle (where assembled trees live).
+    pub fn trace(&self) -> &TraceHandle {
+        &self.trace
     }
 
     pub fn n(&self) -> usize {
@@ -385,6 +408,11 @@ impl<L: ShardLink> ShardedSession<L> {
             self.d
         );
         let len = test_y.len() as u64;
+        let mut root = self.trace.root("shard.ingest");
+        if root.is_recording() {
+            root.field("points", test_y.len().to_string());
+        }
+        let root_ctx = root.ctx();
         let mut cursor = 0u64;
         while cursor < len {
             let g = self.next_global + cursor;
@@ -401,7 +429,11 @@ impl<L: ShardLink> ShardedSession<L> {
                 ("x", Json::arr(xs.iter().map(|&f| Json::num(f as f64)))),
                 ("y", Json::arr(ys.iter().map(|&y| Json::num(y as f64)))),
             ]);
-            expect_ok(timed_call(&self.obs, s, &mut self.links[s], &req)?, s, "ingest")?;
+            expect_ok(
+                traced_call(&self.obs, &self.trace, root_ctx, s, &mut self.links[s], &req)?,
+                s,
+                "ingest",
+            )?;
             cursor = run_end;
         }
         self.next_global += len;
@@ -410,23 +442,45 @@ impl<L: ShardLink> ShardedSession<L> {
 
     /// Fetch every shard's raw sums and fold them in shard order.
     /// Returns (total tests, per-shard tests, raw main, raw rowsum).
+    ///
+    /// Collect-then-fold: every member exchange completes first (one
+    /// `shard.s<idx>.call` span each when traced), then the whole fold
+    /// runs under one `shard.merge` span. The fold still walks the
+    /// responses in shard order, first shard by move, so the folded
+    /// bits are identical to the interleaved form this replaced — and
+    /// the merge span's wall clock necessarily bounds the narrower
+    /// `shard.merge_ns` add-only metric measured inside it.
     fn fetch_raw(&mut self) -> Result<(u64, Vec<u64>, Vec<f64>, Vec<f64>)> {
         let req = Json::obj(vec![
             ("cmd", Json::str("values")),
             ("raw", Json::Bool(true)),
         ]);
+        let root = self.trace.root("shard.values");
+        let root_ctx = root.ctx();
+        let mut responses = Vec::with_capacity(self.links.len());
+        for (idx, link) in self.links.iter_mut().enumerate() {
+            let resp = expect_ok(
+                traced_call(&self.obs, &self.trace, root_ctx, idx, link, &req)?,
+                idx,
+                "values",
+            )?;
+            responses.push(resp);
+        }
+        let merge_span = match root_ctx {
+            Some(ctx) => self.trace.child(ctx, "shard.merge"),
+            None => Span::noop(),
+        };
         let mut total = 0u64;
-        let mut per_shard = Vec::with_capacity(self.links.len());
+        let mut per_shard = Vec::with_capacity(responses.len());
         let mut main: Option<Vec<f64>> = None;
         let mut rowsum: Option<Vec<f64>> = None;
         let mut merge_ns = 0u64;
-        for (idx, link) in self.links.iter_mut().enumerate() {
-            let resp = expect_ok(timed_call(&self.obs, idx, link, &req)?, idx, "values")?;
-            let tests = field_usize(&resp, "tests", idx, "values")? as u64;
+        for (idx, resp) in responses.iter().enumerate() {
+            let tests = field_usize(resp, "tests", idx, "values")? as u64;
             total += tests;
             per_shard.push(tests);
-            let m = f64_array(&resp, "main", idx)?;
-            let r = f64_array(&resp, "rowsum", idx)?;
+            let m = f64_array(resp, "main", idx)?;
+            let r = f64_array(resp, "rowsum", idx)?;
             ensure!(
                 m.len() == self.n && r.len() == self.n,
                 "shard {idx} returned {} values for n={}",
@@ -452,6 +506,7 @@ impl<L: ShardLink> ShardedSession<L> {
                 _ => unreachable!("main and rowsum are set together"),
             }
         }
+        merge_span.finish();
         // One observation per fetch (the cross-shard fold as a whole);
         // for N = 1 the "merge" is the move and records 0.
         self.obs.observe_ns("shard.merge_ns", merge_ns);
@@ -630,9 +685,18 @@ impl<L: ShardLink> ShardedSession<L> {
     /// Fan one edit to all shards; returns the (agreeing) `index` field
     /// when present (add_train), else 0.
     fn fan_edit(&mut self, req: &Json, what: &str) -> Result<usize> {
+        let mut root = self.trace.root("shard.edit");
+        if root.is_recording() {
+            root.field("op", what);
+        }
+        let root_ctx = root.ctx();
         let mut index = 0usize;
         for (idx, link) in self.links.iter_mut().enumerate() {
-            let resp = expect_ok(timed_call(&self.obs, idx, link, req)?, idx, what)?;
+            let resp = expect_ok(
+                traced_call(&self.obs, &self.trace, root_ctx, idx, link, req)?,
+                idx,
+                what,
+            )?;
             if let Some(i) = resp.get("index").and_then(Json::as_usize) {
                 index = i;
             }
@@ -793,6 +857,50 @@ fn timed_call<L: ShardLink>(obs: &ObsHandle, idx: usize, link: &mut L, req: &Jso
     resp
 }
 
+/// One shard exchange under a coordinator span. With no parent context
+/// (tracing off, or a sampled-out root) this IS `timed_call` — the
+/// request bytes are untouched, so untraced traffic stays byte-identical.
+/// Otherwise a `shard.s<idx>.call` child span brackets the exchange, the
+/// request CLONE gains the `"trace"` context carrier, and any member
+/// spans echoed back as `"spans"` are imported into the coordinator's
+/// store — that import is what stitches the fan-out into one tree.
+fn traced_call<L: ShardLink>(
+    obs: &ObsHandle,
+    trace: &TraceHandle,
+    parent: Option<SpanCtx>,
+    idx: usize,
+    link: &mut L,
+    req: &Json,
+) -> Result<Json> {
+    let Some(parent) = parent else {
+        return timed_call(obs, idx, link, req);
+    };
+    let span = trace.child(parent, &format!("shard.s{idx}.call"));
+    let Some(ctx) = span.ctx() else {
+        return timed_call(obs, idx, link, req);
+    };
+    let mut traced_req = req.clone();
+    if let Json::Obj(m) = &mut traced_req {
+        m.insert(
+            "trace".to_string(),
+            Json::obj(vec![
+                ("id", Json::str(hex_id(ctx.trace_id))),
+                ("parent", Json::str(hex_id(ctx.span_id))),
+            ]),
+        );
+    }
+    let resp = timed_call(obs, idx, link, &traced_req)?;
+    span.finish();
+    if let Some(arr) = resp.get("spans").and_then(Json::as_arr) {
+        for sp in arr {
+            if let Some(rec) = SpanRecord::from_json(sp) {
+                trace.import(rec);
+            }
+        }
+    }
+    Ok(resp)
+}
+
 /// Protocol-level failure → coordinator error with shard context.
 fn expect_ok(resp: Json, shard: usize, what: &str) -> Result<Json> {
     if resp.get("ok").and_then(Json::as_bool) == Some(true) {
@@ -935,6 +1043,60 @@ mod tests {
         for (a, b) in with_obs.main.iter().zip(&without.main) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn traced_values_fanout_assembles_one_tree() {
+        let (tx, ty, qx, qy) = tiny_problem(23, 8, 2, 6);
+        let config = SessionConfig::new(2);
+        let make = || {
+            let mut s = ValuationSession::new(tx.clone(), ty.clone(), 2, config).unwrap();
+            s.set_trace(TraceHandle::enabled());
+            SessionLink::new(s)
+        };
+        let plan = ShardPlan::contiguous(6, 2);
+        let mut sharded = ShardedSession::open(vec![make(), make()], plan, 2).unwrap();
+        let trace = TraceHandle::enabled();
+        sharded.set_trace(trace.clone());
+        sharded.ingest(&qx, &qy).unwrap();
+        sharded.values().unwrap();
+        let root = trace
+            .recent_roots(8)
+            .into_iter()
+            .find(|r| r.name == "shard.values")
+            .expect("the values fetch recorded a root");
+        let spans = trace.spans_of(root.trace_id);
+        // ONE tree: exactly one parentless span in the whole trace
+        assert_eq!(
+            spans.iter().filter(|s| s.parent_id.is_none()).count(),
+            1,
+            "{spans:?}"
+        );
+        // one client-side call span per member, each under the root
+        let calls: Vec<_> = spans
+            .iter()
+            .filter(|s| s.name == "shard.s0.call" || s.name == "shard.s1.call")
+            .collect();
+        assert_eq!(calls.len(), 2, "{spans:?}");
+        for c in &calls {
+            assert_eq!(c.parent_id, Some(root.span_id));
+        }
+        // one ECHOED member span per member, stitched under its call span
+        let members: Vec<_> = spans.iter().filter(|s| s.name == "member.values").collect();
+        assert_eq!(members.len(), 2, "{spans:?}");
+        for m in &members {
+            assert_eq!(m.trace_id, root.trace_id);
+            assert!(
+                calls.iter().any(|c| Some(c.span_id) == m.parent_id),
+                "member span parents under a call span: {m:?}"
+            );
+        }
+        // the merge span sits under the root
+        let merge = spans
+            .iter()
+            .find(|s| s.name == "shard.merge")
+            .expect("merge span recorded");
+        assert_eq!(merge.parent_id, Some(root.span_id));
     }
 
     #[test]

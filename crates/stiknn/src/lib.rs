@@ -138,19 +138,31 @@
 //! println!("point 0 total value: {}", pv.rowsum[0]);
 //! ```
 //!
-//! # Observability ([`obs`], DESIGN.md §14)
+//! # Observability ([`obs`], DESIGN.md §14–16)
 //!
 //! One telemetry vocabulary spans every layer: lock-free counters,
 //! gauges and fixed-bucket latency histograms in a named
-//! [`obs::MetricsRegistry`], plus a bounded structured event ring —
-//! all behind an [`obs::ObsHandle`] that degrades to no-ops when
-//! disabled, so instrumented hot paths cost nothing unless a registry
-//! is attached. The server exposes it as the `metrics` protocol verb
-//! (per-session and process-wide JSON snapshots), `stiknn metrics`
-//! renders Prometheus-style text against a live server, and
-//! `serve --slow-ms N` logs structured slow-query records
-//! (`tests/obs_invariants.rs` proves enabling metrics leaves every
-//! result bit-identical).
+//! [`obs::MetricsRegistry`], plus a bounded structured event ring
+//! (`serve --event-ring N` sets its capacity; drops are counted and
+//! surfaced in the exit report) — all behind an [`obs::ObsHandle`]
+//! that degrades to no-ops when disabled, so instrumented hot paths
+//! cost nothing unless a registry is attached. The server exposes it
+//! as the `metrics` protocol verb (per-session and process-wide JSON
+//! snapshots), `stiknn metrics` renders Prometheus-style text against
+//! a live server, and `serve --slow-ms N` logs structured slow-query
+//! records.
+//!
+//! Request tracing rides the same philosophy one level up
+//! ([`obs::TraceHandle`], DESIGN.md §16): `serve --trace
+//! on|off|sampled:N` records per-command span trees — server command
+//! roots, session ingest/edit spans, synthesized coordinator phase
+//! spans — into a bounded per-process span store, and a sharded
+//! fan-out stitches every member's spans into ONE tree by propagating
+//! `"trace"` context on request frames and echoing finished spans
+//! back on responses. Inspect via the `trace` protocol verb or
+//! `stiknn trace --connect HOST:PORT [--id T]`
+//! (`tests/obs_invariants.rs` proves enabling metrics OR tracing, at
+//! any sampling rate, leaves every result bit-identical).
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for reproduction results.

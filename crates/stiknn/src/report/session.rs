@@ -37,8 +37,11 @@ pub fn snapshot_info_table(snap: &Snapshot) -> String {
 /// The server registry inspector: one row per named session —
 /// resident/spilled, engine, mutability, live sizes, write revision and
 /// dirtiness (`stiknn serve` prints this on the way out; `list` carries
-/// the same fields as JSON).
-pub fn registry_table(infos: &[SessionInfo]) -> String {
+/// the same fields as JSON). `events_dropped` is the count of events
+/// evicted from the bounded event ring (`serve --event-ring N`); a
+/// non-zero count gets a footer line so truncated telemetry is never
+/// silent.
+pub fn registry_table(infos: &[SessionInfo], events_dropped: u64) -> String {
     let mut t = Table::new(&[
         "session", "state", "engine", "mutable", "n", "tests", "rev", "dirty",
     ]);
@@ -54,7 +57,17 @@ pub fn registry_table(infos: &[SessionInfo]) -> String {
             (if i.dirty { "yes" } else { "no" }).to_string(),
         ]);
     }
-    format!("session registry ({} session(s)):\n{}", infos.len(), t.render())
+    let mut out = format!(
+        "session registry ({} session(s)):\n{}",
+        infos.len(),
+        t.render()
+    );
+    if events_dropped > 0 {
+        out.push_str(&format!(
+            "\nevent ring: {events_dropped} event(s) dropped (raise --event-ring to keep more)"
+        ));
+    }
+    out
 }
 
 /// Ranked top-k point values as an aligned table.
@@ -169,13 +182,17 @@ mod tests {
                 revision: 9,
             },
         ];
-        let s = registry_table(&infos);
+        let s = registry_table(&infos, 0);
         for needle in [
             "session registry (2 session(s))",
             "hot", "cold", "resident", "spilled", "dense", "implicit", "30", "31",
         ] {
             assert!(s.contains(needle), "missing {needle}:\n{s}");
         }
+        // A clean ring adds no footer; a lossy one is called out.
+        assert!(!s.contains("event ring"), "{s}");
+        let lossy = registry_table(&infos, 7);
+        assert!(lossy.contains("event ring: 7 event(s) dropped"), "{lossy}");
     }
 
     #[test]

@@ -11,15 +11,23 @@
 //! responses themselves. Property-style: the comparison runs across
 //! engine configs (dense / implicit / mutable) × seeds.
 //!
+//! Request tracing (DESIGN.md §16) extends the same contract: the
+//! trace-off / trace-on / sampled comparisons below prove the span
+//! store never changes a result either, and the TCP fan-out test
+//! asserts the ISSUE 9 acceptance tree — one traced sharded `values`
+//! stitches every member's echoed spans into one tree under the
+//! coordinator's root.
+//!
 //! The sharded fan-out path has the same on/off comparison next to its
 //! fixture in `stiknn-session/src/shard.rs`; the timer/registry
 //! micro-semantics live in `stiknn-core/src/obs/mod.rs`.
 
 use std::sync::Arc;
 
+use stiknn::coordinator::shard::{ShardPlan, ShardedSession, TcpLink};
 use stiknn::data::load_dataset;
-use stiknn::obs::ObsHandle;
-use stiknn::server::{Connection, RegistryConfig, SessionRegistry, TrainData};
+use stiknn::obs::{ObsHandle, TraceHandle, TraceMode};
+use stiknn::server::{self, Connection, RegistryConfig, SessionRegistry, ShardIdentity, TrainData};
 use stiknn::session::{Engine, SessionConfig, TopBy, ValuationSession};
 use stiknn::util::json::Json;
 use stiknn::util::rng::Rng;
@@ -211,4 +219,255 @@ fn server_responses_are_bit_identical_with_metrics_on_and_off() {
     assert_eq!(reg.counter("server.commands").get(), total);
     assert_eq!(reg.counter("server.slow_queries").get(), total);
     assert!(reg.histogram("registry.lock_hold_ns").count() > 0);
+}
+
+/// The tracing half of the zero-overhead contract (DESIGN.md §16): a
+/// span store attached to a session NEVER changes a computed result, at
+/// any sampling rate. Same instance pairing as the metrics test above,
+/// across dense / implicit / mutable × seeds × {on, sampled}.
+#[test]
+fn session_results_are_bit_identical_with_tracing_off_on_and_sampled() {
+    let td = train_data();
+    for (name, config) in configs() {
+        let mutable = name == "mutable";
+        for seed in [3u64, 0xBEEF] {
+            let mut off =
+                ValuationSession::new(td.x.clone(), td.y.clone(), td.d, config).unwrap();
+            drive_session(&mut off, seed, mutable);
+            for (mode, handle) in [
+                ("on", TraceHandle::enabled()),
+                ("sampled", TraceHandle::with_mode(TraceMode::Sampled(2))),
+            ] {
+                let mut on =
+                    ValuationSession::new(td.x.clone(), td.y.clone(), td.d, config).unwrap();
+                on.set_trace(handle);
+                drive_session(&mut on, seed, mutable);
+                assert_sessions_bit_identical(&format!("{name}/trace={mode}"), seed, &off, &on);
+                // the traced side really recorded spans — with no server
+                // scope set, each ingest opens its own root
+                assert!(
+                    !on.trace().recent_roots(64).is_empty(),
+                    "{name}/{mode}: no spans recorded"
+                );
+            }
+        }
+    }
+}
+
+/// Same contract one layer up: the full server script replayed with
+/// tracing off / on / sampled serves byte-identical response lines —
+/// span recording must never leak into a response a client didn't ask
+/// to carry trace context.
+#[test]
+fn server_responses_are_bit_identical_with_tracing_off_on_and_sampled() {
+    let run = |trace: Option<TraceHandle>| -> (Arc<SessionRegistry>, Vec<String>) {
+        let mut reg = SessionRegistry::new(
+            train_data(),
+            RegistryConfig {
+                base: SessionConfig::new(K),
+                max_resident: 0,
+                state_dir: None,
+            },
+        )
+        .unwrap()
+        .with_obs(ObsHandle::enabled("invariants"));
+        if let Some(t) = trace {
+            reg = reg.with_trace(t);
+        }
+        let reg = Arc::new(reg);
+        let mut conn = Connection::new(Arc::clone(&reg), None);
+        let responses = server_script()
+            .iter()
+            .map(|line| {
+                let (r, shutdown) = conn.execute(line);
+                assert!(!shutdown);
+                r.to_string()
+            })
+            .collect();
+        (reg, responses)
+    };
+    let (_off_reg, off) = run(None);
+    for (mode, handle) in [
+        ("on", TraceHandle::enabled()),
+        ("sampled", TraceHandle::with_mode(TraceMode::Sampled(3))),
+    ] {
+        let (reg, on) = run(Some(handle));
+        assert_eq!(off.len(), on.len());
+        for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+            assert_eq!(a, b, "response {i} diverged with trace={mode}");
+        }
+        // every admitted root is a cmd.* span; sampling admits a strict
+        // subset but never zero over a 27-command script at rate 3
+        let roots = reg.trace().recent_roots(256);
+        assert!(!roots.is_empty(), "trace={mode}: no roots recorded");
+        assert!(
+            roots.iter().all(|r| r.name.starts_with("cmd.")),
+            "trace={mode}: {roots:?}"
+        );
+        if mode == "sampled" {
+            assert!(
+                roots.len() < server_script().len(),
+                "sampled mode admitted every root"
+            );
+        }
+    }
+}
+
+/// One TCP shard member with tracing enabled on its registry (the
+/// `serve --trace on --shard-of J/N` configuration).
+fn spawn_traced_shard_server(train: TrainData, config: SessionConfig, id: ShardIdentity) -> String {
+    let registry = SessionRegistry::new(
+        train,
+        RegistryConfig {
+            base: config,
+            max_resident: 0,
+            state_dir: None,
+        },
+    )
+    .unwrap()
+    .with_shard(id)
+    .with_trace(TraceHandle::enabled());
+    let registry = Arc::new(registry);
+    registry.open("default", None, None).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let _ = server::listen(registry, listener, Some("default".to_string()));
+    });
+    addr
+}
+
+/// The acceptance tree (ISSUE 9): one traced sharded `values` across
+/// two real TCP members stitches into ONE tree on the coordinator —
+/// exactly one root, a per-shard round-trip span each carrying the
+/// member's echoed server span, every span under the root's trace id,
+/// and a merge span whose wall clock bounds the measured fold work.
+#[test]
+fn traced_sharded_values_assembles_one_tree_across_tcp_members() {
+    let td = train_data();
+    let config = SessionConfig::new(K);
+    let addrs: Vec<String> = (0..2)
+        .map(|j| {
+            spawn_traced_shard_server(td.clone(), config, ShardIdentity::new(j, 2).unwrap())
+        })
+        .collect();
+    let links: Vec<TcpLink> = addrs.iter().map(|a| TcpLink::connect(a).unwrap()).collect();
+    let plan = ShardPlan::contiguous(4, 2);
+    let mut sharded = ShardedSession::open(links, plan, td.d).unwrap();
+    sharded.set_obs(ObsHandle::enabled("shard"));
+    sharded.set_trace(TraceHandle::enabled());
+    let test_x = [0.1f32, -0.2, 0.3, 0.4, -0.5, 0.6, 0.7, -0.8];
+    let test_y = [0i32, 1, 0, 1];
+    sharded.ingest(&test_x, &test_y).unwrap();
+    sharded.values().unwrap();
+
+    let trace = sharded.trace().clone();
+    let root = trace
+        .recent_roots(8)
+        .into_iter()
+        .find(|r| r.name == "shard.values")
+        .expect("shard.values root span");
+    let spans = trace.spans_of(root.trace_id);
+    // exactly one root, and every span belongs to its trace
+    let tops: Vec<_> = spans.iter().filter(|s| s.parent_id.is_none()).collect();
+    assert_eq!(tops.len(), 1, "{spans:?}");
+    assert_eq!(tops[0].span_id, root.span_id);
+    assert!(spans.iter().all(|s| s.trace_id == root.trace_id));
+    // one echoed member span per shard, each under its round-trip span
+    let members: Vec<_> = spans.iter().filter(|s| s.name == "member.values").collect();
+    assert_eq!(members.len(), 2, "{spans:?}");
+    for m in &members {
+        let call = spans
+            .iter()
+            .find(|s| Some(s.span_id) == m.parent_id)
+            .expect("member span's round-trip parent");
+        assert!(call.name.starts_with("shard.s"), "{}", call.name);
+        assert_eq!(call.parent_id, Some(root.span_id));
+    }
+    // the merge span wraps the whole fold, so its wall clock bounds the
+    // add-only shard.merge_ns accumulation
+    let merge = spans
+        .iter()
+        .find(|s| s.name == "shard.merge")
+        .expect("shard.merge span");
+    assert_eq!(merge.parent_id, Some(root.span_id));
+    let fold_ns = sharded
+        .obs()
+        .registry()
+        .unwrap()
+        .histogram("shard.merge_ns")
+        .sum_ns();
+    assert!(
+        merge.dur_ns >= fold_ns,
+        "merge span {}ns shorter than fold work {fold_ns}ns",
+        merge.dur_ns
+    );
+}
+
+/// The server's trace surface at the [`Connection`] level: adopted
+/// context is echoed as `"spans"` (and only then), the `trace` verb
+/// lists recent roots and fetches one trace by id, and a malformed id
+/// is a protocol error, not a panic.
+#[test]
+fn server_trace_verb_lists_roots_and_fetches_by_id() {
+    let reg = SessionRegistry::new(
+        train_data(),
+        RegistryConfig {
+            base: SessionConfig::new(K),
+            max_resident: 0,
+            state_dir: None,
+        },
+    )
+    .unwrap()
+    .with_trace(TraceHandle::enabled());
+    let reg = Arc::new(reg);
+    reg.open("default", None, None).unwrap();
+    let mut conn = Connection::new(Arc::clone(&reg), Some("default".to_string()));
+
+    // untraced command: recorded as a root, NO "spans" on the response
+    let (r, _) = conn.execute(r#"{"cmd":"ingest","x":[0.1,0.2],"y":[1]}"#);
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r}");
+    assert!(r.get("spans").is_none(), "{r}");
+
+    // traced command: the server adopts the caller's ids and echoes
+    // every span the command produced (member + session at least)
+    let (r, _) = conn.execute(
+        r#"{"cmd":"ingest","x":[0.3,0.4],"y":[0],"trace":{"id":"00000000000000ab","parent":"00000000000000ab"}}"#,
+    );
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r}");
+    let spans = r.get("spans").and_then(Json::as_arr).expect("span echo");
+    assert!(
+        spans
+            .iter()
+            .any(|s| s.get("name").and_then(Json::as_str) == Some("member.ingest")),
+        "{spans:?}"
+    );
+    assert!(
+        spans
+            .iter()
+            .any(|s| s.get("name").and_then(Json::as_str) == Some("session.ingest")),
+        "{spans:?}"
+    );
+    assert!(spans
+        .iter()
+        .all(|s| s.get("trace").and_then(Json::as_str) == Some("00000000000000ab")));
+
+    // the trace verb lists the untraced command's root...
+    let (r, _) = conn.execute(r#"{"cmd":"trace"}"#);
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r}");
+    let roots = r.get("roots").and_then(Json::as_arr).unwrap();
+    let root_id = roots
+        .iter()
+        .find_map(|s| {
+            (s.get("name").and_then(Json::as_str) == Some("cmd.ingest"))
+                .then(|| s.get("trace").and_then(Json::as_str).unwrap().to_string())
+        })
+        .expect("cmd.ingest root listed");
+    // ...and fetching that id returns its spans
+    let (r, _) = conn.execute(&format!(r#"{{"cmd":"trace","id":"{root_id}"}}"#));
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "{r}");
+    assert!(!r.get("spans").and_then(Json::as_arr).unwrap().is_empty());
+    // a malformed id fails as a protocol error
+    let (r, _) = conn.execute(r#"{"cmd":"trace","id":"xyz"}"#);
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false), "{r}");
 }
