@@ -7,7 +7,7 @@ use crate::report::table::Table;
 use crate::util::json::Json;
 use crate::util::timer::fmt_duration;
 use std::path::{Path, PathBuf};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Workspace root resolved from a crate manifest directory: the first
 /// ancestor containing `ROADMAP.md` (the repo's root marker). Falls back
@@ -126,14 +126,14 @@ impl Suite {
             std::hint::black_box(f());
         }
         let mut samples: Vec<Duration> = Vec::new();
-        let start = Instant::now();
+        let start = crate::obs::now();
         while start.elapsed() < self.config.min_time && samples.len() < self.config.max_iters {
-            let t0 = Instant::now();
+            let t0 = crate::obs::now();
             std::hint::black_box(f());
             samples.push(t0.elapsed());
         }
         if samples.is_empty() {
-            let t0 = Instant::now();
+            let t0 = crate::obs::now();
             std::hint::black_box(f());
             samples.push(t0.elapsed());
         }
@@ -147,6 +147,8 @@ impl Suite {
             p99: samples[(samples.len() * 99) / 100],
             min: samples[0],
         };
+        // lint: allow(bare-eprintln) — bench progress is operator
+        // console output by design, not an operational event.
         eprintln!(
             "  {name}: mean {} (median {}, p99 {}, {} iters)",
             fmt_duration(m.mean),

@@ -155,7 +155,7 @@ fn prep_worker_loop(
                 break 'blocks;
             }
         }
-        let t0 = std::time::Instant::now();
+        let t0 = crate::obs::now();
         let (tx, ty) = (
             &test_x[shard.lo * d..shard.hi * d],
             &test_y[shard.lo..shard.hi],
@@ -306,7 +306,7 @@ fn banded_accumulate(
     acc: &mut Matrix,
     progress: &Progress,
 ) -> Result<(f64, usize)> {
-    let wall = std::time::Instant::now();
+    let wall = crate::obs::now();
     let params = StiParams {
         k: job.k,
         metric: job.metric,
@@ -385,7 +385,7 @@ fn banded_accumulate(
                 };
                 let rows = slice;
                 while let Some(batch) = q.recv() {
-                    let t0 = std::time::Instant::now();
+                    let t0 = crate::obs::now();
                     sweep_band(&batch, train_y, r_lo, r_hi, rows);
                     progress.record_sweep(t0.elapsed().as_nanos() as u64);
                 }
@@ -484,7 +484,7 @@ fn values_pipeline(
     vv: &mut ValueVector,
     progress: &Progress,
 ) -> Result<(f64, usize)> {
-    let wall = std::time::Instant::now();
+    let wall = crate::obs::now();
     let params = StiParams {
         k: job.k,
         metric: job.metric,
@@ -542,7 +542,7 @@ fn values_pipeline(
                 };
                 let mut scratch = ValuesScratch::new();
                 while let Some(batch) = q.recv() {
-                    let t0 = std::time::Instant::now();
+                    let t0 = crate::obs::now();
                     sweep_values(&batch, train_y, sweeper_vv, &mut scratch);
                     progress.record_sweep(t0.elapsed().as_nanos() as u64);
                 }
@@ -608,7 +608,7 @@ fn run_rust_test_sharded(ds: &Dataset, job: &ValuationJob) -> Result<ValuationRe
             queue.close();
         });
         run_workers(&queue, job.workers, |_w, shard: Shard| {
-            let t0 = std::time::Instant::now();
+            let t0 = crate::obs::now();
             let (tx, ty) = ds.test_slice(shard.lo, shard.hi);
             let (phi_sum, weight) =
                 sti_knn_partial(&ds.train_x, &ds.train_y, ds.d, tx, ty, &params);
@@ -688,7 +688,7 @@ fn run_xla(ds: &Dataset, job: &ValuationJob, artifacts_dir: &Path) -> Result<Val
                         }
                     };
                 while let Some(shard) = queue.recv() {
-                    let t0 = std::time::Instant::now();
+                    let t0 = crate::obs::now();
                     let (tx, ty) = ds.test_slice(shard.lo, shard.hi);
                     match exec.run_block(&ds.train_x, &ds.train_y, tx, ty) {
                         Ok((phi_sum, weight)) => {

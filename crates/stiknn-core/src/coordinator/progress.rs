@@ -188,7 +188,7 @@ impl Default for ThroughputMeter {
 impl ThroughputMeter {
     pub fn new() -> Self {
         ThroughputMeter {
-            start: Instant::now(),
+            start: crate::obs::now(),
         }
     }
 

@@ -161,9 +161,13 @@ impl Dataset {
                 let ra = self.train_row(a);
                 let rb = self.train_row(b);
                 for (x, y) in ra.iter().zip(rb) {
-                    match x.partial_cmp(y) {
-                        Some(std::cmp::Ordering::Equal) | None => continue,
-                        Some(o) => return o,
+                    // total_cmp (repo convention, clippy.toml): a NaN
+                    // feature sorts deterministically instead of
+                    // silently comparing "equal" as partial_cmp's None
+                    // arm used to.
+                    match x.total_cmp(y) {
+                        std::cmp::Ordering::Equal => continue,
+                        o => return o,
                     }
                 }
                 std::cmp::Ordering::Equal

@@ -23,6 +23,11 @@
 //! at its old `analysis::removal` path); everything else in [`analysis`]
 //! is matrix/value-vector pure and stays here.
 
+// Every `unsafe` block in this crate (they all live in `knn::kernel`)
+// must carry a `// SAFETY:` comment; `cargo xtask lint` enforces the
+// same contract textually across the whole workspace (DESIGN.md §17).
+#![deny(clippy::undocumented_unsafe_blocks)]
+
 pub mod analysis;
 pub mod bench;
 pub mod coordinator;

@@ -1,0 +1,189 @@
+//! The lock-free metric primitives: [`Counter`], [`Gauge`],
+//! [`Histogram`].
+//!
+//! Extracted from `obs/mod.rs` so the loom harness (`verify/loom`, see
+//! [`super::sync`]) can include this file verbatim and model-check every
+//! interleaving of concurrent writers. Everything here must stay
+//! dependency-free (std + the sync shim only) and free of `#[cfg(test)]`
+//! modules — unit tests live in `obs/mod.rs`, loom models in
+//! `verify/loom/tests/models.rs`.
+
+use super::sync::{fetch_max_relaxed, AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+/// A monotone event count. All operations are relaxed: counters are
+/// statistics, never synchronization.
+pub struct Counter(AtomicU64);
+
+impl Default for Counter {
+    // Manual impl: loom's atomics do not implement `Default`, and this
+    // file compiles against both arms of the sync shim.
+    fn default() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// A signed instantaneous level (e.g. active connections).
+pub struct Gauge(AtomicI64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Relaxed);
+    }
+
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Number of finite histogram buckets; one implicit overflow bucket
+/// follows. Bucket `i` counts samples with `ns <= 1000 << i`, so the
+/// finite range spans 1µs .. ~8.4s in exact powers of two — wide enough
+/// for a lock acquisition and a full-session recompute to land in the
+/// same vocabulary.
+pub const HIST_BUCKETS: usize = 24;
+
+/// Upper bound (inclusive, nanoseconds) of finite bucket `i`.
+pub fn bucket_bound_ns(i: usize) -> u64 {
+    1_000u64 << i
+}
+
+/// A fixed-bucket latency histogram over nanoseconds. Recording is a
+/// handful of relaxed atomic adds — no locks, no allocation — so it is
+/// safe on every hot path. Quantiles are bucket-resolution estimates
+/// (reported as the bucket's upper bound), which is all a powers-of-two
+/// layout can promise and all operators need.
+///
+/// The five fields update independently (no lock couples them), so a
+/// concurrent reader can observe e.g. a bucket increment before the
+/// matching `count` — every read-side consumer tolerates that, which is
+/// exactly what the loom model asserts.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    overflow: AtomicU64,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            overflow: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        match Self::bucket_of(ns) {
+            Some(i) => self.buckets[i].fetch_add(1, Relaxed),
+            None => self.overflow.fetch_add(1, Relaxed),
+        };
+        self.count.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(ns, Relaxed);
+        fetch_max_relaxed(&self.max_ns, ns);
+    }
+
+    /// Index of the finite bucket for `ns`, or `None` for overflow.
+    pub(crate) fn bucket_of(ns: u64) -> Option<usize> {
+        if ns <= 1_000 {
+            return Some(0);
+        }
+        // Smallest i with 1000 << i >= ns, i.e. ceil(log2(ns / 1000)).
+        let i = 64 - ns.div_ceil(1_000).leading_zeros() as usize
+            - usize::from(ns.div_ceil(1_000).is_power_of_two());
+        (i < HIST_BUCKETS).then_some(i)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Relaxed)
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns() as f64 / c as f64
+    }
+
+    /// Bucket-resolution quantile estimate: the upper bound of the first
+    /// bucket whose cumulative count reaches `q·count` (the observed max
+    /// for the overflow bucket). 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Relaxed);
+            if cum >= target {
+                return bucket_bound_ns(i);
+            }
+        }
+        self.max_ns()
+    }
+
+    /// Per-bucket counts: the `HIST_BUCKETS` finite buckets followed by
+    /// the overflow bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
+        out.push(self.overflow.load(Relaxed));
+        out
+    }
+}

@@ -29,178 +29,50 @@
 //! ids, durations, fields — into a bounded span store, with context
 //! propagation over the NDJSON protocol so one sharded request renders
 //! as one tree.
+//!
+//! ## Verified concurrency core (DESIGN.md §17)
+//!
+//! The lock-free/lossy structures underneath this module — the metric
+//! primitives ([`counters`](self), re-exported here), the event ring
+//! ([`ring::EventRing`]) and the span slot ring ([`slots::SlotRing`]) —
+//! live in self-contained files that import their sync primitives
+//! through the [`sync`](self) shim. The `verify/loom` harness (a
+//! CI-only crate excluded from the workspace) `#[path]`-includes those
+//! files verbatim and model-checks every interleaving with
+//! [loom](https://docs.rs/loom); nothing in the main workspace ever
+//! compiles the loom arm.
 
+mod counters;
 mod prometheus;
+pub mod ring;
+pub mod slots;
+pub(crate) mod sync;
 pub mod trace;
 
+pub use counters::{bucket_bound_ns, Counter, Gauge, Histogram, HIST_BUCKETS};
 pub use prometheus::prometheus_text;
 pub use trace::{Span, SpanCtx, SpanRecord, TraceHandle, TraceMode};
 
 use crate::util::json::Json;
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
+use ring::EventRing;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-/// A monotone event count. All operations are relaxed: counters are
-/// statistics, never synchronization.
-#[derive(Default)]
-pub struct Counter(AtomicU64);
-
-impl Counter {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn inc(&self) {
-        self.0.fetch_add(1, Relaxed);
-    }
-
-    pub fn add(&self, n: u64) {
-        self.0.fetch_add(n, Relaxed);
-    }
-
-    pub fn get(&self) -> u64 {
-        self.0.load(Relaxed)
-    }
-}
-
-/// A signed instantaneous level (e.g. active connections).
-#[derive(Default)]
-pub struct Gauge(AtomicI64);
-
-impl Gauge {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn set(&self, v: i64) {
-        self.0.store(v, Relaxed);
-    }
-
-    pub fn add(&self, delta: i64) {
-        self.0.fetch_add(delta, Relaxed);
-    }
-
-    pub fn get(&self) -> i64 {
-        self.0.load(Relaxed)
-    }
-}
-
-/// Number of finite histogram buckets; one implicit overflow bucket
-/// follows. Bucket `i` counts samples with `ns <= 1000 << i`, so the
-/// finite range spans 1µs .. ~8.4s in exact powers of two — wide enough
-/// for a lock acquisition and a full-session recompute to land in the
-/// same vocabulary.
-pub const HIST_BUCKETS: usize = 24;
-
-/// Upper bound (inclusive, nanoseconds) of finite bucket `i`.
-pub fn bucket_bound_ns(i: usize) -> u64 {
-    1_000u64 << i
-}
-
-/// A fixed-bucket latency histogram over nanoseconds. Recording is a
-/// handful of relaxed atomic adds — no locks, no allocation — so it is
-/// safe on every hot path. Quantiles are bucket-resolution estimates
-/// (reported as the bucket's upper bound), which is all a powers-of-two
-/// layout can promise and all operators need.
-pub struct Histogram {
-    buckets: [AtomicU64; HIST_BUCKETS],
-    overflow: AtomicU64,
-    count: AtomicU64,
-    sum_ns: AtomicU64,
-    max_ns: AtomicU64,
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Histogram {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            overflow: AtomicU64::new(0),
-            count: AtomicU64::new(0),
-            sum_ns: AtomicU64::new(0),
-            max_ns: AtomicU64::new(0),
-        }
-    }
+/// The observability clock: the one sanctioned way to read monotonic
+/// time outside this module. Library code calls `obs::now()` instead of
+/// `Instant::now()` directly (enforced by `cargo xtask lint`, rule
+/// `raw-clock`) so there is a single seam for every timestamp the
+/// system takes — one place to audit, and one place to hook if a future
+/// PR wants a virtual clock for deterministic tests.
+#[inline]
+pub fn now() -> Instant {
+    Instant::now()
 }
 
 impl Histogram {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn record(&self, d: Duration) {
-        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
-    }
-
-    pub fn record_ns(&self, ns: u64) {
-        match Self::bucket_of(ns) {
-            Some(i) => self.buckets[i].fetch_add(1, Relaxed),
-            None => self.overflow.fetch_add(1, Relaxed),
-        };
-        self.count.fetch_add(1, Relaxed);
-        self.sum_ns.fetch_add(ns, Relaxed);
-        self.max_ns.fetch_max(ns, Relaxed);
-    }
-
-    /// Index of the finite bucket for `ns`, or `None` for overflow.
-    fn bucket_of(ns: u64) -> Option<usize> {
-        if ns <= 1_000 {
-            return Some(0);
-        }
-        // Smallest i with 1000 << i >= ns, i.e. ceil(log2(ns / 1000)).
-        let i = 64 - ns.div_ceil(1_000).leading_zeros() as usize
-            - usize::from(ns.div_ceil(1_000).is_power_of_two());
-        (i < HIST_BUCKETS).then_some(i)
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Relaxed)
-    }
-
-    pub fn sum_ns(&self) -> u64 {
-        self.sum_ns.load(Relaxed)
-    }
-
-    pub fn max_ns(&self) -> u64 {
-        self.max_ns.load(Relaxed)
-    }
-
-    pub fn mean_ns(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            return 0.0;
-        }
-        self.sum_ns() as f64 / c as f64
-    }
-
-    /// Bucket-resolution quantile estimate: the upper bound of the first
-    /// bucket whose cumulative count reaches `q·count` (the observed max
-    /// for the overflow bucket). 0 when empty.
-    pub fn quantile_ns(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
-        }
-        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
-        let mut cum = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            cum += b.load(Relaxed);
-            if cum >= target {
-                return bucket_bound_ns(i);
-            }
-        }
-        self.max_ns()
-    }
-
-    /// Per-bucket counts: the `HIST_BUCKETS` finite buckets followed by
-    /// the overflow bucket.
-    pub fn bucket_counts(&self) -> Vec<u64> {
-        let mut out: Vec<u64> = self.buckets.iter().map(|b| b.load(Relaxed)).collect();
-        out.push(self.overflow.load(Relaxed));
-        out
-    }
-
+    /// JSON rendering lives here (not in `counters.rs`) so the extracted
+    /// core stays dependency-free for the loom harness.
     fn to_json(&self) -> Json {
         Json::obj(vec![
             ("count", Json::num(self.count() as f64)),
@@ -251,13 +123,6 @@ impl Event {
     }
 }
 
-struct Ring {
-    cap: usize,
-    next_seq: u64,
-    dropped: u64,
-    buf: VecDeque<Event>,
-}
-
 /// A named family of metrics. Registration (name → metric) takes a
 /// short-lived lock; the returned `Arc` handles are meant to be cached
 /// by hot loops so steady-state recording never touches the maps.
@@ -268,7 +133,7 @@ pub struct MetricsRegistry {
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
     labels: Mutex<BTreeMap<String, String>>,
-    ring: Mutex<Ring>,
+    ring: EventRing<Event>,
 }
 
 impl MetricsRegistry {
@@ -281,17 +146,12 @@ impl MetricsRegistry {
     pub fn with_event_cap(name: &str, cap: usize) -> Arc<Self> {
         Arc::new(MetricsRegistry {
             name: name.to_string(),
-            start: Instant::now(),
+            start: now(),
             counters: Mutex::new(BTreeMap::new()),
             gauges: Mutex::new(BTreeMap::new()),
             histograms: Mutex::new(BTreeMap::new()),
             labels: Mutex::new(BTreeMap::new()),
-            ring: Mutex::new(Ring {
-                cap: cap.max(1),
-                next_seq: 0,
-                dropped: 0,
-                buf: VecDeque::new(),
-            }),
+            ring: EventRing::new(cap),
         })
     }
 
@@ -330,14 +190,7 @@ impl MetricsRegistry {
     /// configured capacity.
     pub fn event(&self, kind: &str, fields: &[(&str, String)]) {
         let elapsed_ms = self.start.elapsed().as_millis().min(u64::MAX as u128) as u64;
-        let mut ring = self.ring.lock().unwrap();
-        let seq = ring.next_seq;
-        ring.next_seq += 1;
-        if ring.buf.len() == ring.cap {
-            ring.buf.pop_front();
-            ring.dropped += 1;
-        }
-        ring.buf.push_back(Event {
+        self.ring.push_with(|seq| Event {
             seq,
             elapsed_ms,
             kind: kind.to_string(),
@@ -350,13 +203,13 @@ impl MetricsRegistry {
 
     /// The buffered events, oldest first.
     pub fn events(&self) -> Vec<Event> {
-        self.ring.lock().unwrap().buf.iter().cloned().collect()
+        self.ring.items()
     }
 
     /// Events evicted from the ring so far (the exit report surfaces
     /// this so silent truncation is visible).
     pub fn events_dropped(&self) -> u64 {
-        self.ring.lock().unwrap().dropped
+        self.ring.dropped()
     }
 
     /// A single metric's current value by name, if it exists (counters,
@@ -406,13 +259,7 @@ impl MetricsRegistry {
             .iter()
             .map(|(k, v)| (k.clone(), Json::str(v.clone())))
             .collect();
-        let (events, dropped) = {
-            let ring = self.ring.lock().unwrap();
-            (
-                Json::arr(ring.buf.iter().map(|e| e.to_json())),
-                ring.dropped,
-            )
-        };
+        let (events, dropped) = self.ring.snapshot();
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
             (
@@ -423,7 +270,7 @@ impl MetricsRegistry {
             ("counters", Json::Obj(counters)),
             ("gauges", Json::Obj(gauges)),
             ("histograms", Json::Obj(histograms)),
-            ("events", events),
+            ("events", Json::arr(events.iter().map(|e| e.to_json()))),
             ("events_dropped", Json::num(dropped as f64)),
         ])
     }
@@ -507,6 +354,26 @@ impl ObsHandle {
         }
     }
 
+    /// Record a structured event AND mirror it to stderr as
+    /// `"{prefix}: event={kind} k1=v1 k2=v2"`. This is the one
+    /// sanctioned operational logger for library crates (`cargo xtask
+    /// lint` rejects bare `eprintln!` elsewhere): the stderr line is
+    /// unconditional — operators watching a console still see failures
+    /// when obs is disabled — while the structured copy lands in the
+    /// event ring whenever a registry is attached.
+    pub fn event_logged(&self, prefix: &str, kind: &str, fields: &[(&str, String)]) {
+        self.event(kind, fields);
+        let mut line = format!("{prefix}: event={kind}");
+        for (k, v) in fields {
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            line.push_str(v);
+        }
+        // lint: allow(bare-eprintln) — the sanctioned printer itself.
+        eprintln!("{line}");
+    }
+
     /// Cached-handle accessors for hot loops: resolve once, record many.
     pub fn counter(&self, name: &str) -> Option<Arc<Counter>> {
         self.reg.as_ref().map(|r| r.counter(name))
@@ -523,7 +390,7 @@ impl ObsHandle {
             inner: self
                 .reg
                 .as_ref()
-                .map(|r| (Instant::now(), name.to_string(), r.clone())),
+                .map(|r| (now(), name.to_string(), r.clone())),
         }
     }
 
@@ -734,6 +601,55 @@ mod tests {
             snap.get("events_dropped").unwrap().as_usize(),
             Some(10)
         );
+    }
+
+    #[test]
+    fn generic_event_ring_snapshot_is_consistent() {
+        let ring: EventRing<u64> = EventRing::new(4);
+        for _ in 0..11 {
+            ring.push_with(|seq| seq * 10);
+        }
+        let (items, dropped) = ring.snapshot();
+        assert_eq!(dropped, 7);
+        assert_eq!(items, vec![70, 80, 90, 100]);
+        assert_eq!(ring.pushed(), 11);
+        assert_eq!(ring.seqs(), vec![7, 8, 9, 10]);
+        assert_eq!(ring.pushed(), ring.dropped() + ring.items().len() as u64);
+    }
+
+    #[test]
+    fn generic_slot_ring_retains_last_cap_items() {
+        use slots::SlotRing;
+        let ring: SlotRing<u64> = SlotRing::new(4);
+        assert_eq!(ring.capacity(), 4);
+        for _ in 0..11 {
+            ring.push_with(|seq| seq * 10);
+        }
+        assert_eq!(ring.pushed(), 11);
+        assert_eq!(ring.dropped(), 7);
+        // Exactly the last 4 survive, in seq order.
+        assert_eq!(ring.collect(|_| true), vec![70, 80, 90, 100]);
+        // Filtered collect preserves order.
+        assert_eq!(ring.collect(|v| v % 20 == 0), vec![80, 100]);
+        // Degenerate cap clamps to 1.
+        let one: SlotRing<u8> = SlotRing::new(0);
+        one.push_with(|_| 1);
+        one.push_with(|_| 2);
+        assert_eq!(one.collect(|_| true), vec![2]);
+        assert_eq!(one.dropped(), 1);
+    }
+
+    #[test]
+    fn event_logged_mirrors_into_the_ring() {
+        let obs = ObsHandle::enabled("logged");
+        obs.event_logged("test", "conn_ended", &[("peer", "p1".to_string())]);
+        let events = obs.registry().unwrap().events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, "conn_ended");
+        assert_eq!(events[0].fields[0], ("peer".to_string(), "p1".to_string()));
+        // Disabled: prints (untestable here) but records nothing, and
+        // must not panic.
+        ObsHandle::disabled().event_logged("test", "x", &[]);
     }
 
     #[test]

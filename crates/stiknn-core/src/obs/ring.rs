@@ -1,0 +1,87 @@
+//! A bounded, sequence-stamped event ring behind one mutex.
+//!
+//! The generic core of the [`MetricsRegistry`](super::MetricsRegistry)
+//! structured-event buffer, extracted so the loom harness
+//! (`verify/loom`, see [`super::sync`]) can include this file verbatim
+//! and model-check concurrent push vs. eviction vs. snapshot. Must stay
+//! dependency-free (std + the sync shim only) and `#[cfg(test)]`-free —
+//! unit tests live in `obs/mod.rs`, loom models in `verify/loom`.
+
+use super::sync::Mutex;
+use std::collections::VecDeque;
+
+/// Invariants (loom-checked in `verify/loom/tests/models.rs`):
+///
+/// * every push gets a unique, strictly increasing sequence number;
+/// * at most `cap` items are retained — the oldest is evicted and
+///   counted, so `pushed == dropped + len` at every observable point;
+/// * a snapshot is internally consistent (items + drop count are read
+///   under one lock acquisition).
+pub struct EventRing<T> {
+    inner: Mutex<RingState<T>>,
+}
+
+struct RingState<T> {
+    cap: usize,
+    next_seq: u64,
+    dropped: u64,
+    buf: VecDeque<(u64, T)>,
+}
+
+impl<T: Clone> EventRing<T> {
+    /// A ring retaining at most `cap` items (a degenerate cap of 0
+    /// clamps to 1 instead of panicking).
+    pub fn new(cap: usize) -> Self {
+        EventRing {
+            inner: Mutex::new(RingState {
+                cap: cap.max(1),
+                next_seq: 0,
+                dropped: 0,
+                buf: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Claim the next sequence number and append `make(seq)`, evicting
+    /// (and counting) the oldest item past capacity. Returns the seq.
+    pub fn push_with<F: FnOnce(u64) -> T>(&self, make: F) -> u64 {
+        let mut st = self.inner.lock().unwrap();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        if st.buf.len() == st.cap {
+            st.buf.pop_front();
+            st.dropped += 1;
+        }
+        let item = make(seq);
+        st.buf.push_back((seq, item));
+        seq
+    }
+
+    /// The retained items, oldest first.
+    pub fn items(&self) -> Vec<T> {
+        self.snapshot().0
+    }
+
+    /// Items ever evicted.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Items ever pushed (the next sequence number).
+    pub fn pushed(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Retained items (oldest first) and the drop count, read under ONE
+    /// lock acquisition so the pair is consistent.
+    pub fn snapshot(&self) -> (Vec<T>, u64) {
+        let st = self.inner.lock().unwrap();
+        (st.buf.iter().map(|(_, e)| e.clone()).collect(), st.dropped)
+    }
+
+    /// Sequence numbers of the retained items, oldest first (the loom
+    /// models assert these stay strictly increasing mid-eviction).
+    pub fn seqs(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().buf.iter().map(|(s, _)| *s).collect()
+    }
+}

@@ -1,0 +1,90 @@
+//! A fixed-capacity, lossy slot ring: lock-free sequence claim, per-slot
+//! mutexes, wrap-around overwrite.
+//!
+//! The generic core of the tracer's span store ([`super::trace`]),
+//! extracted so the loom harness (`verify/loom`, see [`super::sync`]) can
+//! include this file verbatim and model-check concurrent record vs.
+//! eviction vs. snapshot. Must stay dependency-free (std + the sync shim
+//! only) and `#[cfg(test)]`-free — unit tests live in `obs/trace.rs`,
+//! loom models in `verify/loom/tests/models.rs`.
+
+use super::sync::{AtomicU64, Mutex, Ordering::Relaxed};
+
+/// Writers claim a globally unique sequence number with one relaxed
+/// `fetch_add`, then write `(seq, item)` into slot `seq % capacity` under
+/// that slot's mutex. Old items are overwritten, never blocked on — a
+/// busy ring loses history, not throughput.
+///
+/// Invariants (loom-checked in `verify/loom/tests/models.rs`):
+///
+/// * sequence numbers are unique and dense (0, 1, 2, …);
+/// * a slot always holds an internally consistent `(seq, item)` pair —
+///   never a torn mix of two writers;
+/// * at most `capacity` items are retained and every retained pair was
+///   genuinely pushed. (Two writers racing the SAME slot may land in
+///   either order — the ring is lossy by design, so a slow writer can
+///   overwrite a newer seq; what can never happen is a torn pair.)
+/// * a concurrent `collect` sees only whole pairs, in seq order.
+pub struct SlotRing<T> {
+    slots: Box<[Mutex<Option<(u64, T)>>]>,
+    cursor: AtomicU64,
+}
+
+impl<T: Clone> SlotRing<T> {
+    /// A ring with `cap` slots (a degenerate cap of 0 clamps to 1
+    /// instead of panicking).
+    pub fn new(cap: usize) -> Self {
+        SlotRing {
+            slots: (0..cap.max(1)).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim the next sequence number and store `make(seq)` in its slot,
+    /// overwriting whatever was there. Returns the seq.
+    pub fn push_with<F: FnOnce(u64) -> T>(&self, make: F) -> u64 {
+        let seq = self.cursor.fetch_add(1, Relaxed);
+        let slot = (seq % self.slots.len() as u64) as usize;
+        let item = make(seq);
+        *self.slots[slot].lock().unwrap() = Some((seq, item));
+        seq
+    }
+
+    /// Items ever pushed (the next sequence number).
+    pub fn pushed(&self) -> u64 {
+        self.cursor.load(Relaxed)
+    }
+
+    /// Items pushed beyond capacity, i.e. overwritten at least once.
+    pub fn dropped(&self) -> u64 {
+        self.pushed().saturating_sub(self.slots.len() as u64)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Clone every retained `(seq, item)` pair, sorted by sequence
+    /// number (oldest first). Slots are locked one at a time, so a
+    /// concurrent writer can slip between slots — each pair is still
+    /// whole, which is the contract callers (and the loom models,
+    /// which assert item-against-seq consistency) rely on.
+    pub fn pairs(&self) -> Vec<(u64, T)> {
+        let mut pairs: Vec<(u64, T)> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        pairs.sort_by_key(|(seq, _)| *seq);
+        pairs
+    }
+
+    /// Retained items passing `keep`, in seq order.
+    pub fn collect<F: Fn(&T) -> bool>(&self, keep: F) -> Vec<T> {
+        self.pairs()
+            .into_iter()
+            .filter(|(_, item)| keep(item))
+            .map(|(_, item)| item)
+            .collect()
+    }
+}

@@ -1,0 +1,52 @@
+//! Synchronization-primitive shim for the obs concurrency core.
+//!
+//! The event ring ([`super::ring`]), the span slot ring
+//! ([`super::slots`]) and the atomic metric primitives
+//! ([`super::counters`]) import every atomic/lock through this module
+//! instead of naming `std::sync` directly. Under a normal build the shim
+//! is a zero-cost re-export of `std`; under `--cfg loom` it re-exports
+//! [loom](https://docs.rs/loom)'s model-checked doubles, which is what
+//! lets `verify/loom` (a CI-only harness crate, excluded from the
+//! workspace so the offline tier-1 build never resolves the loom
+//! dependency) include these files verbatim via `#[path]` and explore
+//! every interleaving of their lock-free cores exhaustively.
+//!
+//! The `loom` arm is never compiled inside `stiknn-core` itself: nothing
+//! in the main workspace passes `--cfg loom`, so the crate keeps its
+//! zero-dependency layering contract.
+//!
+//! Keep this module (and the three modules above) dependency-free — no
+//! `crate::` imports — or the `#[path]` inclusion breaks.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::Mutex;
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+#[cfg(loom)]
+pub use loom::sync::Mutex;
+
+/// `fetch_max` with relaxed ordering, spelled as a named helper so the
+/// one call site (histogram max tracking) reads its ordering contract in
+/// the function name. Loom models RMW ops through `compare_exchange`, so
+/// the loom arm is the CAS loop the native instruction means anyway.
+#[cfg(not(loom))]
+pub fn fetch_max_relaxed(a: &AtomicU64, val: u64) -> u64 {
+    a.fetch_max(val, Ordering::Relaxed)
+}
+
+#[cfg(loom)]
+pub fn fetch_max_relaxed(a: &AtomicU64, val: u64) -> u64 {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        if cur >= val {
+            return cur;
+        }
+        match a.compare_exchange_weak(cur, val, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(prev) => return prev,
+            Err(next) => cur = next,
+        }
+    }
+}

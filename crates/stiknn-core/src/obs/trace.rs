@@ -33,9 +33,10 @@
 //! constructed. `tests/obs_invariants.rs` proves results are
 //! bit-identical with tracing off, on, and sampled.
 
+use super::slots::SlotRing;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Default bounded span-store capacity (spans retained per process).
@@ -44,6 +45,11 @@ pub const SPAN_STORE_CAP: usize = 2048;
 /// Span ids must be unique across every process that contributes to one
 /// tree, without coordination: low 24 bits of the pid in the high half,
 /// a process-wide counter in the low half.
+///
+/// Stays a `std` atomic (not the [`super::sync`] shim): loom atomics
+/// have no `const fn new`, and this global id well is trivially a single
+/// `fetch_add` — the loom models cover the span *store* ([`SlotRing`]),
+/// which is where the interesting interleavings live.
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 fn fresh_id() -> u64 {
@@ -182,20 +188,20 @@ impl TraceMode {
 struct Tracer {
     epoch: Instant,
     mode: TraceMode,
-    /// Fixed slot ring: `cursor` counts every record ever pushed; a push
-    /// writes slot `cursor % cap`, so the newest `cap` spans survive.
-    slots: Box<[Mutex<Option<SpanRecord>>]>,
-    cursor: AtomicU64,
+    /// The loom-modeled slot ring ([`super::slots`]): an atomic cursor
+    /// claims a seq, slot `seq % cap` holds the record, so the newest
+    /// `cap` spans survive.
+    store: SlotRing<SpanRecord>,
     /// Root-span attempts, for the every-n-th sampling decision.
     roots_seen: AtomicU64,
 }
 
 impl Tracer {
     fn push(&self, mut rec: SpanRecord) {
-        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
-        rec.seq = seq;
-        let slot = (seq % self.slots.len() as u64) as usize;
-        *self.slots[slot].lock().unwrap() = Some(rec);
+        self.store.push_with(|seq| {
+            rec.seq = seq;
+            rec
+        });
     }
 
     fn now_us(&self) -> u64 {
@@ -203,14 +209,7 @@ impl Tracer {
     }
 
     fn collect<F: Fn(&SpanRecord) -> bool>(&self, keep: F) -> Vec<SpanRecord> {
-        let mut out: Vec<SpanRecord> = self
-            .slots
-            .iter()
-            .filter_map(|s| s.lock().unwrap().clone())
-            .filter(|r| keep(r))
-            .collect();
-        out.sort_by_key(|r| r.seq);
-        out
+        self.store.collect(keep)
     }
 }
 
@@ -245,13 +244,11 @@ impl TraceHandle {
         if mode == TraceMode::Off {
             return Self::disabled();
         }
-        let cap = cap.max(1);
         TraceHandle {
             tracer: Some(Arc::new(Tracer {
-                epoch: Instant::now(),
+                epoch: super::now(),
                 mode,
-                slots: (0..cap).map(|_| Mutex::new(None)).collect(),
-                cursor: AtomicU64::new(0),
+                store: SlotRing::new(cap),
                 roots_seen: AtomicU64::new(0),
             })),
         }
@@ -317,7 +314,7 @@ impl TraceHandle {
                 span_id: trace_id,
                 parent_id,
                 name: name.to_string(),
-                start: Instant::now(),
+                start: super::now(),
                 fields: Vec::new(),
             }),
         }
@@ -332,7 +329,7 @@ impl TraceHandle {
                 span_id: fresh_id(),
                 parent_id,
                 name: name.to_string(),
-                start: Instant::now(),
+                start: super::now(),
                 fields: Vec::new(),
             }),
         }
@@ -383,18 +380,12 @@ impl TraceHandle {
     /// Store watermark: records pushed so far. `spans_since(id, mark)`
     /// with a mark taken before a command isolates that command's spans.
     pub fn seq(&self) -> u64 {
-        self.tracer
-            .as_ref()
-            .map_or(0, |t| t.cursor.load(Ordering::Relaxed))
+        self.tracer.as_ref().map_or(0, |t| t.store.pushed())
     }
 
     /// Spans recorded past the ring's capacity (oldest-evicted count).
     pub fn dropped(&self) -> u64 {
-        self.tracer.as_ref().map_or(0, |t| {
-            t.cursor
-                .load(Ordering::Relaxed)
-                .saturating_sub(t.slots.len() as u64)
-        })
+        self.tracer.as_ref().map_or(0, |t| t.store.dropped())
     }
 
     /// Every retained span of one trace, in arrival order.

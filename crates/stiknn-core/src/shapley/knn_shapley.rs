@@ -62,6 +62,9 @@ pub fn knn_shapley_partial(
     let mut dists = vec![0.0f64; n];
     let mut labels_sorted = vec![0i32; n];
     for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        // lint: allow(raw-distance) — KNN-Shapley baseline oracle stays on the
+        // reference loop on purpose: it must not share the kernel
+        // dispatch path it is used to validate.
         distances_into(q, train_x, d, Metric::SqEuclidean, &mut dists);
         let order = argsort_by_distance(&dists);
         for (r, &o) in order.iter().enumerate() {

@@ -27,6 +27,9 @@ pub fn loo(
     let mut acc = vec![0.0f64; n];
     let mut dists = vec![0.0f64; n];
     for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        // lint: allow(raw-distance) — LOO baseline oracle stays on the
+        // reference loop on purpose: it must not share the kernel
+        // dispatch path it is used to validate.
         distances_into(q, train_x, d, Metric::SqEuclidean, &mut dists);
         let order = argsort_by_distance(&dists);
         let kk = k.min(n);

@@ -101,6 +101,9 @@ pub fn mc_sti(
     let mut acc = Matrix::zeros(n, n);
     let mut dists = vec![0.0f64; n];
     for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        // lint: allow(raw-distance) — Monte-Carlo STI estimator oracle stays on the
+        // reference loop on purpose: it must not share the kernel
+        // dispatch path it is used to validate.
         distances_into(q, train_x, d, Metric::SqEuclidean, &mut dists);
         let order = argsort_by_distance(&dists);
         let bits = order

@@ -105,6 +105,9 @@ pub fn sii_knn(
     let mut dists = vec![0.0f64; n];
     let mut labels_sorted = vec![0i32; n];
     for (q, &y) in test_x.chunks_exact(d).zip(test_y) {
+        // lint: allow(raw-distance) — reference oracle for the exact SII path stays on the
+        // reference loop on purpose: it must not share the kernel
+        // dispatch path it is used to validate.
         distances_into(q, train_x, d, Metric::SqEuclidean, &mut dists);
         let order = argsort_by_distance(&dists);
         for (r, &o) in order.iter().enumerate() {

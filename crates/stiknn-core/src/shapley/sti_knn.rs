@@ -41,7 +41,6 @@
 //! [`sti_knn_partial`] is the single-threaded composition of the two
 //! phases over the full band `[0, n)`.
 
-use std::time::Instant;
 
 use crate::knn::distance::{argsort_by_distance_keyed, Metric};
 use crate::knn::kernel::{distances_block, NormCache};
@@ -303,7 +302,7 @@ pub fn prepare_batch_cached(
         let hi = (lo + QUERY_BLOCK).min(len);
         let b = hi - lo;
         scratch.dists_blk.resize(b * n, 0.0);
-        let t0 = Instant::now();
+        let t0 = crate::obs::now();
         distances_block(
             &test_x[lo * d..hi * d],
             train_x,

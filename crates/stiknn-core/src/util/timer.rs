@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 
 /// Measure the wall time of a closure, returning (result, elapsed).
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
-    let start = Instant::now();
+    let start = crate::obs::now();
     let out = f();
     (out, start.elapsed())
 }
@@ -41,7 +41,7 @@ impl Stopwatch {
     /// A stopwatch whose laps also record into obs histograms named
     /// `<prefix>.<lap>_ns` (no-op with a disabled handle).
     pub fn recording(obs: ObsHandle, prefix: &str) -> Self {
-        let now = Instant::now();
+        let now = crate::obs::now();
         Stopwatch {
             start: now,
             last: now,
@@ -53,7 +53,7 @@ impl Stopwatch {
 
     /// Record a lap since the previous lap (or start).
     pub fn lap(&mut self, name: &str) -> Duration {
-        let now = Instant::now();
+        let now = crate::obs::now();
         let d = now - self.last;
         self.last = now;
         if self.obs.is_enabled() {

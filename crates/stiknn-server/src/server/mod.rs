@@ -92,7 +92,7 @@ impl Connection {
     pub fn execute(&mut self, line: &str) -> (Json, bool) {
         let slow_ms = self.registry.slow_ms();
         let timed = self.registry.obs().is_enabled() || slow_ms.is_some();
-        let t0 = timed.then(std::time::Instant::now);
+        let t0 = timed.then(crate::obs::now);
         let v = match Json::parse(line) {
             Ok(v) => v,
             Err(e) => {
@@ -166,6 +166,8 @@ impl Connection {
                             ("trace", trace_tag.clone()),
                         ],
                     );
+                    // lint: allow(bare-eprintln) — the `slow-query` line
+                    // format (not `event=`) is pinned by cli_smoke.rs.
                     eprintln!(
                         "stiknn serve: slow-query cmd={label} session={session} \
                          rev={rev} elapsed_ms={ms} trace={trace_tag}"
@@ -550,8 +552,7 @@ pub fn listen(
             Err(e) => {
                 let obs = registry.obs();
                 obs.inc("server.accept_failed");
-                obs.event("accept_failed", &[("error", e.to_string())]);
-                eprintln!("stiknn serve: event=accept_failed error={e}");
+                obs.event_logged("stiknn serve", "accept_failed", &[("error", e.to_string())]);
                 continue;
             }
         };
@@ -567,11 +568,11 @@ pub fn listen(
                 Ok(s) => std::io::BufReader::new(s),
                 Err(e) => {
                     obs.inc("server.clone_failed");
-                    obs.event(
+                    obs.event_logged(
+                        "stiknn serve",
                         "clone_failed",
                         &[("peer", peer.clone()), ("error", e.to_string())],
                     );
-                    eprintln!("stiknn serve: event=clone_failed peer={peer} error={e}");
                     return;
                 }
             };
@@ -582,11 +583,11 @@ pub fn listen(
                 // a half-closed or reset client is business as usual for
                 // a server — log and move on, the registry is untouched
                 obs.inc("server.conn_errors");
-                obs.event(
+                obs.event_logged(
+                    "stiknn serve",
                     "conn_ended",
                     &[("peer", peer.clone()), ("error", format!("{e:#}"))],
                 );
-                eprintln!("stiknn serve: event=conn_ended peer={peer} error={e:#}");
             }
             obs.gauge_add("server.connections_active", -1);
             obs.inc("server.connections_closed");

@@ -51,7 +51,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// The training set every fresh session in a registry is built over
 /// (mutable sessions diverge from it as they edit; their snapshots carry
@@ -576,7 +576,7 @@ impl SessionRegistry {
         let mut f = Some(f);
         loop {
             let slot = self.acquire(name)?;
-            let t_wait = self.obs.is_enabled().then(Instant::now);
+            let t_wait = self.obs.is_enabled().then(crate::obs::now);
             let Ok(guard) = slot.lock.read() else {
                 bail!("{}", poisoned_msg(name));
             };
@@ -587,7 +587,7 @@ impl SessionRegistry {
                 self.obs
                     .observe_ns("registry.lock_wait_ns", t.elapsed().as_nanos() as u64);
             }
-            let t_hold = self.obs.is_enabled().then(Instant::now);
+            let t_hold = self.obs.is_enabled().then(crate::obs::now);
             let f = f.take().expect("loop exits after the first call");
             let out = f(&guard);
             if let Some(t) = t_hold {
@@ -608,7 +608,7 @@ impl SessionRegistry {
         let mut f = Some(f);
         loop {
             let slot = self.acquire(name)?;
-            let t_wait = self.obs.is_enabled().then(Instant::now);
+            let t_wait = self.obs.is_enabled().then(crate::obs::now);
             let Ok(mut guard) = slot.lock.write() else {
                 bail!("{}", poisoned_msg(name));
             };
@@ -619,7 +619,7 @@ impl SessionRegistry {
                 self.obs
                     .observe_ns("registry.lock_wait_ns", t.elapsed().as_nanos() as u64);
             }
-            let t_hold = self.obs.is_enabled().then(Instant::now);
+            let t_hold = self.obs.is_enabled().then(crate::obs::now);
             let f = f.take().expect("loop exits after the first call");
             let out = f(&mut guard);
             if let Some(t) = t_hold {
@@ -849,10 +849,11 @@ pub fn start_autosave(registry: Arc<SessionRegistry>, interval: Duration) -> Aut
             drop(stopped); // never checkpoint while holding the stop flag
             if let Err(e) = registry.checkpoint_dirty() {
                 registry.obs().inc("registry.autosave_failures");
-                registry
-                    .obs()
-                    .event("autosave_failed", &[("error", format!("{e:#}"))]);
-                eprintln!("stiknn serve: event=autosave_failed error={e:#}");
+                registry.obs().event_logged(
+                    "stiknn serve",
+                    "autosave_failed",
+                    &[("error", format!("{e:#}"))],
+                );
             }
             stopped = flag.lock().unwrap_or_else(PoisonError::into_inner);
         }

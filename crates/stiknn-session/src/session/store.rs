@@ -739,7 +739,10 @@ pub fn read_header(path: &Path) -> Result<SnapshotHeader> {
         .with_context(|| format!("decoding snapshot header {}", path.display()))
 }
 
-fn decode_header(bytes: &[u8]) -> Result<SnapshotHeader> {
+/// Byte-level twin of [`read_header`] — public so the fuzz harness
+/// (`stiknn::verify`) can drive the header parser on raw untrusted
+/// bytes without touching the filesystem.
+pub fn decode_header(bytes: &[u8]) -> Result<SnapshotHeader> {
     let mut rd = Rd { bytes, pos: 0 };
     let magic = rd.take(8)?;
     ensure!(magic == &MAGIC[..], "bad snapshot magic {:02x?}", magic);

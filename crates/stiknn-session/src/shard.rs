@@ -496,7 +496,7 @@ impl<L: ShardLink> ShardedSession<L> {
                     rowsum = Some(r);
                 }
                 (Some(am), Some(ar)) => {
-                    let t0 = self.obs.is_enabled().then(std::time::Instant::now);
+                    let t0 = self.obs.is_enabled().then(crate::obs::now);
                     add_assign(am, &m);
                     add_assign(ar, &r);
                     if let Some(t0) = t0 {
@@ -848,7 +848,7 @@ fn timed_call<L: ShardLink>(obs: &ObsHandle, idx: usize, link: &mut L, req: &Jso
     if !obs.is_enabled() {
         return link.call(req);
     }
-    let t0 = std::time::Instant::now();
+    let t0 = crate::obs::now();
     let resp = link.call(req);
     obs.observe_ns(
         &format!("shard.s{idx}.call_ns"),

@@ -194,6 +194,11 @@ pub mod coordinator {
     pub use stiknn_session::shard;
 }
 
+/// Fuzz-harness entry points (DESIGN.md §17): the properties the
+/// `fuzz/` targets drive, as ordinary library code so the checked-in
+/// corpus replays under plain `cargo test`.
+pub mod verify;
+
 /// Reporting (`stiknn-core` tables/heatmaps) plus the session/server
 /// rendering helpers that live in this facade crate.
 pub mod report {

@@ -1,0 +1,184 @@
+//! Fuzz-harness entry points (DESIGN.md §17).
+//!
+//! The `fuzz/` workspace's libfuzzer targets are deliberately thin —
+//! one `fuzz_target!` line each — and call into this module, so the
+//! properties being fuzzed are ordinary library code: compiled by the
+//! tier-1 build, replayable against the checked-in corpus by
+//! `tests/fuzz_corpus_replay.rs` without any fuzzer toolchain, and
+//! reusable from a plain unit test when a crasher is promoted to a
+//! named regression.
+//!
+//! Each `check_*` function takes raw untrusted bytes and PANICS iff the
+//! property it guards is violated; returning normally means "this input
+//! is handled correctly" (whether it was accepted or cleanly rejected).
+//!
+//! Properties:
+//!
+//! * [`check_header_bytes`] — the snapshot header parser never panics,
+//!   whatever the bytes.
+//! * [`check_snapshot_bytes`] — full snapshot restore never panics; an
+//!   accepted snapshot is internally consistent (header ↔ ledger ↔
+//!   payload agree) and its read accessors are total.
+//! * [`check_protocol_line`] — NDJSON dispatch against a live session
+//!   never panics, always answers well-formed JSON with an `ok` bool,
+//!   and a rejected frame leaves the session state untouched.
+
+use crate::session::protocol::handle;
+use crate::session::store::{decode, decode_header};
+use crate::session::{Engine, SessionConfig, SnapshotPayload, TopBy, ValuationSession};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Snapshot header parsing on raw bytes must reject garbage with an
+/// error, never a panic. (The server registry runs this parser on the
+/// first 58 bytes of arbitrary files to describe spilled sessions.)
+pub fn check_header_bytes(bytes: &[u8]) {
+    let _ = decode_header(bytes);
+}
+
+/// Full snapshot restore on raw bytes: decoding must never panic, and
+/// when it succeeds the result must be internally consistent — the
+/// cheap header peek agrees with the full decode, the batch ledger sums
+/// to the recorded test count, the payload matches the declared shape,
+/// and every read accessor is total on it.
+pub fn check_snapshot_bytes(bytes: &[u8]) {
+    let Ok(snap) = decode(bytes) else {
+        return; // clean rejection is a correct outcome
+    };
+    let h = snap.header;
+
+    // The registry's header peek and the full decode must agree.
+    let peek = decode_header(bytes).expect("decode accepted, header peek must too");
+    assert_eq!(peek, h, "header peek disagrees with full decode");
+
+    // Ledger ↔ header agreement.
+    assert_eq!(snap.ledger.len() as u64, h.batches, "ledger length vs header");
+    let total: u64 = snap.ledger.iter().map(|b| b.len).sum();
+    assert_eq!(total, h.tests, "ledger sum vs recorded tests");
+
+    // Payload ↔ header agreement.
+    let (n, d, t) = (h.n as usize, h.d as usize, h.tests as usize);
+    match &snap.payload {
+        SnapshotPayload::Dense(m) => {
+            assert!(!h.mutable, "dense payload flagged mutable");
+            assert_eq!(m.len(), n * n, "dense payload shape");
+            assert!(snap.mutations.is_empty(), "dense payload with mutations");
+        }
+        SnapshotPayload::Implicit { main, inter } => {
+            assert_eq!(main.len(), n, "implicit main shape");
+            assert_eq!(inter.len(), n, "implicit inter shape");
+            if !h.mutable {
+                assert!(snap.mutations.is_empty(), "implicit payload with mutations");
+            }
+        }
+        SnapshotPayload::Mutable(p) => {
+            assert!(h.mutable, "mutable payload without the header flag");
+            assert_eq!(p.main.len(), n, "mutable main shape");
+            assert_eq!(p.inter.len(), n, "mutable inter shape");
+            assert_eq!(p.train_x.len(), n * d, "mutable train_x shape");
+            assert_eq!(p.train_y.len(), n, "mutable train_y shape");
+            assert_eq!(p.test_x.len(), t * d, "mutable test_x shape");
+            assert_eq!(p.test_y.len(), t, "mutable test_y shape");
+            for rows in [p.rank.len(), p.pos.len()] {
+                assert_eq!(rows, t * n, "mutable rank/pos shape");
+            }
+            for rows in [p.colval.len(), p.dist.len()] {
+                assert_eq!(rows, t * n, "mutable colval/dist shape");
+            }
+        }
+    }
+
+    // Read accessors are total on any accepted snapshot.
+    let _ = snap.averaged_matrix();
+    let _ = snap.point_values(TopBy::Main);
+    let _ = snap.point_values(TopBy::RowSum);
+    let _ = snap.top_k(3, TopBy::RowSum);
+}
+
+/// The deterministic session every protocol-fuzz input is dispatched
+/// against: small (n=8, d=2, t=4 ingested), mutable, implicit engine
+/// with retained rows — the configuration that accepts the widest
+/// command surface (ingest, queries, values, topk, stats, metrics, AND
+/// the three train-set edits), so the fuzzer can reach every dispatch
+/// arm. Seeded, so a crasher file reproduces bit-identically.
+pub fn baseline_session() -> ValuationSession {
+    let (n, d, t) = (8usize, 2usize, 4usize);
+    let mut rng = Rng::new(3);
+    let train_x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let train_y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+    let test_x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+    let test_y: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+    let cfg = SessionConfig::new(3)
+        .with_engine(Engine::Implicit)
+        .with_retained_rows(true)
+        .with_mutable(true);
+    let mut session =
+        ValuationSession::new(train_x, train_y, d, cfg).expect("baseline session must build");
+    session.ingest(&test_x, &test_y).expect("baseline ingest must succeed");
+    session
+}
+
+/// Everything a protocol command can observably change, captured as
+/// plain data so "rejected frames leave the session untouched" is one
+/// equality. Values are compared bit-for-bit: an untouched session is
+/// IDENTICAL, not merely equivalent.
+fn observable_state(s: &ValuationSession) -> (Vec<u64>, Vec<i32>, Vec<u64>, Vec<u64>) {
+    let scalars = vec![
+        s.n() as u64,
+        s.d() as u64,
+        s.tests_seen(),
+        s.revision(),
+        s.fingerprint(),
+        s.batches_ingested(),
+        s.mutations().len() as u64,
+    ];
+    let (main, inter) = s.raw_point_sums();
+    (
+        scalars,
+        s.train_labels().to_vec(),
+        main.iter().map(|v| v.to_bits()).collect(),
+        inter.iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+/// One NDJSON frame against a fresh [`baseline_session`]: dispatch must
+/// not panic, the response must render as parseable JSON carrying an
+/// `ok` boolean, and an `ok:false` response implies the session state
+/// is bit-identical to before the frame.
+///
+/// Mirrors `protocol::serve`'s framing exactly: lossy UTF-8, trimmed,
+/// blank lines skipped. The `snapshot` command is skipped — it writes
+/// to a caller-supplied path, and a fuzzer must not get filesystem
+/// reach (its file I/O is covered by `tests/store_corruption.rs`).
+pub fn check_protocol_line(raw: &[u8]) {
+    let line = String::from_utf8_lossy(raw);
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return;
+    }
+    if let Ok(v) = Json::parse(trimmed) {
+        if v.get("cmd").and_then(Json::as_str) == Some("snapshot") {
+            return;
+        }
+    }
+
+    let mut session = baseline_session();
+    let before = observable_state(&session);
+    let (response, _shutdown) = handle(&mut session, trimmed);
+
+    let rendered = response.to_string();
+    let reparsed = Json::parse(&rendered)
+        .unwrap_or_else(|e| panic!("response is not valid JSON ({e}): {rendered}"));
+    let ok = reparsed
+        .get("ok")
+        .and_then(Json::as_bool)
+        .unwrap_or_else(|| panic!("response lacks an 'ok' bool: {rendered}"));
+
+    if !ok {
+        assert_eq!(
+            before,
+            observable_state(&session),
+            "rejected frame mutated session state: {trimmed}"
+        );
+    }
+}

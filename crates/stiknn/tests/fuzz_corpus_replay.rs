@@ -1,0 +1,235 @@
+//! Replay the checked-in fuzz corpus (`fuzz/corpus/**`) through the
+//! same `stiknn::verify` entry points the libfuzzer targets call — so
+//! every seed and every promoted crasher runs under plain `cargo test`,
+//! with no fuzzer toolchain, on every tier-1 run (DESIGN.md §17).
+//!
+//! The named tests below are the regression half of the contract: each
+//! pins one corruption class with bytes built in-process (so they hold
+//! even if the corpus directory is pruned), asserting not just
+//! "no panic" but the specific rejection decode must produce.
+
+use std::path::{Path, PathBuf};
+
+use stiknn::bench::workspace_root_from;
+use stiknn::session::store::{decode, fnv1a, MAGIC};
+use stiknn::session::{SessionConfig, ValuationSession};
+use stiknn::util::rng::Rng;
+use stiknn::verify::{baseline_session, check_protocol_line, check_snapshot_bytes};
+
+fn corpus_dir(target: &str) -> PathBuf {
+    workspace_root_from(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .join("fuzz")
+        .join("corpus")
+        .join(target)
+}
+
+fn corpus_files(target: &str) -> Vec<(String, Vec<u8>)> {
+    let dir = corpus_dir(target);
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("fuzz corpus dir {} must exist: {e}", dir.display()));
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_file() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let bytes = std::fs::read(&path).unwrap();
+            out.push((name, bytes));
+        }
+    }
+    out.sort();
+    assert!(
+        out.len() >= 10,
+        "{target} corpus looks gutted ({} files) — the fuzz smoke leg \
+         depends on these seeds",
+        out.len()
+    );
+    out
+}
+
+#[test]
+fn snapshot_corpus_replays_clean() {
+    for (name, bytes) in corpus_files("snapshot_restore") {
+        // A panic here is the failure; names make the culprit obvious.
+        println!("replaying snapshot seed {name} ({} bytes)", bytes.len());
+        check_snapshot_bytes(&bytes);
+        // Seeds are named valid-* iff decode must accept them.
+        let accepted = decode(&bytes).is_ok();
+        assert_eq!(
+            accepted,
+            name.starts_with("valid-"),
+            "{name}: decode accepted={accepted} disagrees with the seed's name"
+        );
+    }
+}
+
+#[test]
+fn protocol_corpus_replays_clean() {
+    for (name, bytes) in corpus_files("protocol_dispatch") {
+        println!("replaying protocol seed {name} ({} bytes)", bytes.len());
+        check_protocol_line(&bytes);
+    }
+}
+
+/// A real snapshot to corrupt: the same shape the corpus generator
+/// uses, but produced by the actual encoder so these tests stay valid
+/// if the wire format ever moves.
+fn real_snapshot_bytes() -> Vec<u8> {
+    let (n, d, t) = (6usize, 2usize, 3usize);
+    let mut rng = Rng::new(11);
+    let tx: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let ty: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+    let qx: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32).collect();
+    let qy: Vec<i32> = (0..t).map(|_| rng.below(2) as i32).collect();
+    let mut s = ValuationSession::new(tx, ty, d, SessionConfig::new(2)).unwrap();
+    s.ingest(&qx, &qy).unwrap();
+    let path = std::env::temp_dir().join(format!("stiknn_replay_{}.snap", std::process::id()));
+    s.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+/// Re-seal a corrupted body with a fresh FNV trailer so decode gets
+/// past the checksum and exercises the deeper validation under test.
+fn reseal(mut body: Vec<u8>) -> Vec<u8> {
+    let sum = fnv1a(&body);
+    body.extend_from_slice(&sum.to_le_bytes());
+    body
+}
+
+#[test]
+fn regression_truncation_is_rejected_at_every_length() {
+    let bytes = real_snapshot_bytes();
+    for keep in [0, 5, 30, 56, 64, bytes.len() / 2, bytes.len() - 1] {
+        let cut = &bytes[..keep];
+        check_snapshot_bytes(cut);
+        let err = format!("{:#}", decode(cut).unwrap_err());
+        assert!(
+            err.contains("short") || err.contains("checksum") || err.contains("truncated"),
+            "truncation to {keep} gave an unhelpful error: {err}"
+        );
+    }
+}
+
+#[test]
+fn regression_flipped_byte_fails_the_checksum() {
+    let bytes = real_snapshot_bytes();
+    for at in [8, bytes.len() / 2, bytes.len() - 1] {
+        let mut bad = bytes.clone();
+        bad[at] ^= 0x40;
+        check_snapshot_bytes(&bad);
+        let err = format!("{:#}", decode(&bad).unwrap_err());
+        assert!(
+            err.contains("checksum"),
+            "flip@{at} should fail the checksum, got: {err}"
+        );
+    }
+}
+
+#[test]
+fn regression_wrong_magic_is_rejected_after_the_checksum() {
+    let bytes = real_snapshot_bytes();
+    let mut body = bytes[..bytes.len() - 8].to_vec();
+    body[..8].copy_from_slice(b"NOTASNAP");
+    let bad = reseal(body);
+    check_snapshot_bytes(&bad);
+    let err = format!("{:#}", decode(&bad).unwrap_err());
+    assert!(err.contains("magic"), "expected a magic error, got: {err}");
+}
+
+#[test]
+fn regression_future_version_is_rejected() {
+    let bytes = real_snapshot_bytes();
+    let mut body = bytes[..bytes.len() - 8].to_vec();
+    body[8..12].copy_from_slice(&9u32.to_le_bytes());
+    let bad = reseal(body);
+    check_snapshot_bytes(&bad);
+    let err = format!("{:#}", decode(&bad).unwrap_err());
+    assert!(err.contains("version"), "expected a version error, got: {err}");
+}
+
+#[test]
+fn regression_unknown_tags_are_rejected() {
+    let bytes = real_snapshot_bytes();
+    // metric tag (offset 16) and payload kind (offset 17) — v2+ layout.
+    for (offset, what) in [(16usize, "metric"), (17usize, "payload kind")] {
+        let mut body = bytes[..bytes.len() - 8].to_vec();
+        body[offset] = 7;
+        let bad = reseal(body);
+        check_snapshot_bytes(&bad);
+        let err = format!("{:#}", decode(&bad).unwrap_err());
+        assert!(
+            err.contains("unknown"),
+            "{what} tag 7 should be an 'unknown' error, got: {err}"
+        );
+    }
+}
+
+#[test]
+fn regression_huge_shape_overflow_is_caught_before_allocation() {
+    // Header-only frame claiming n = d = 2^62: the checked_mul shape
+    // guard must reject it cleanly instead of wrapping (or trying to
+    // allocate exabytes).
+    let mut body = Vec::new();
+    body.extend_from_slice(&MAGIC);
+    body.extend_from_slice(&3u32.to_le_bytes()); // version
+    body.extend_from_slice(&3u32.to_le_bytes()); // k
+    body.push(0); // metric: sq-euclidean
+    body.push(0); // kind: dense
+    for v in [1u64 << 62, 1u64 << 62, 0, 3, 1] {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    body.extend_from_slice(&0u64.to_le_bytes()); // ledger seq
+    body.extend_from_slice(&3u64.to_le_bytes()); // ledger len
+    let bad = reseal(body);
+    check_snapshot_bytes(&bad);
+    let err = format!("{:#}", decode(&bad).unwrap_err());
+    assert!(err.contains("overflow"), "expected an overflow error, got: {err}");
+}
+
+#[test]
+fn regression_ledger_sum_mismatch_is_rejected() {
+    let bytes = real_snapshot_bytes();
+    // The tests count lives at header offset 42 (v2+: magic 8 + version
+    // 4 + k 4 + metric 1 + kind 1 + n 8 + d 8 + fingerprint 8). Bumping
+    // it breaks the ledger-sum agreement AND (for dense payloads whose
+    // size doesn't depend on t, like this one) leaves the body-size
+    // equation intact — so this exercises the ledger check, not the
+    // size check.
+    let mut body = bytes[..bytes.len() - 8].to_vec();
+    let mut tests = [0u8; 8];
+    tests.copy_from_slice(&body[42..50]);
+    let bumped = u64::from_le_bytes(tests) + 7;
+    body[42..50].copy_from_slice(&bumped.to_le_bytes());
+    let bad = reseal(body);
+    check_snapshot_bytes(&bad);
+    assert!(decode(&bad).is_err(), "inflated tests count must not decode");
+}
+
+#[test]
+fn regression_rejected_protocol_frames_leave_session_identical() {
+    // The property the protocol fuzz target enforces, pinned on the
+    // frames most likely to regress: failures that occur after argument
+    // parsing has already begun.
+    for frame in [
+        r#"{"cmd":"ingest","x":[0.5,1.0,2.0],"y":[0,1]}"#,
+        r#"{"cmd":"ingest","x":[1e400,0.0],"y":[1]}"#,
+        r#"{"cmd":"add_train","x":[0.5],"y":1}"#,
+        r#"{"cmd":"remove_train","i":12345}"#,
+        r#"{"cmd":"relabel","i":12345,"y":0}"#,
+        r#"{"cmd":"topk","k":2,"by":"sideways"}"#,
+    ] {
+        check_protocol_line(frame.as_bytes());
+    }
+}
+
+#[test]
+fn baseline_session_is_deterministic() {
+    // Crasher reproducibility depends on the fuzz baseline being
+    // bit-stable across runs (and across the fuzzer/test boundary).
+    let a = baseline_session();
+    let b = baseline_session();
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(a.tests_seen(), b.tests_seen());
+    assert_eq!(a.raw_point_sums().0, b.raw_point_sums().0);
+}

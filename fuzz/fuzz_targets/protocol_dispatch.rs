@@ -1,0 +1,12 @@
+//! Fuzz NDJSON protocol dispatch against a live in-process session:
+//! no panics, responses stay well-formed JSON, rejected frames leave
+//! the session bit-identical. The property lives in `stiknn::verify`
+//! (library code) — this target is just the libfuzzer adapter.
+//! Repro: `cargo fuzz run protocol_dispatch <crasher-file>`.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    stiknn::verify::check_protocol_line(data);
+});

@@ -1,0 +1,13 @@
+//! Fuzz the snapshot store's untrusted-byte surface: the cheap header
+//! peek and the full checksum-verified restore. The properties live in
+//! `stiknn::verify` (library code) — this target is just the libfuzzer
+//! adapter. Repro: `cargo fuzz run snapshot_restore <crasher-file>`,
+//! or promote the file into `tests/fuzz_corpus_replay.rs`.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    stiknn::verify::check_header_bytes(data);
+    stiknn::verify::check_snapshot_bytes(data);
+});

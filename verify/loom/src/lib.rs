@@ -1,0 +1,33 @@
+//! Loom harness over the obs concurrency core (DESIGN.md §17).
+//!
+//! This crate owns **zero logic**. It `#[path]`-includes the four
+//! dependency-free source files that make up stiknn-core's lock-free
+//! observability core, verbatim — the same bytes the production crate
+//! compiles. Built with `RUSTFLAGS="--cfg loom"`, the `sync` shim at the
+//! root of that file set swaps `std::sync` for loom's model-checked
+//! doubles, and the tests in `tests/models.rs` explore every
+//! interleaving of the cores exhaustively.
+//!
+//! The inclusion works because those files reference their siblings only
+//! as `use super::sync::…`, which resolves identically whether the
+//! parent module is `stiknn_core::obs` or this crate root. If a `use
+//! crate::…` ever sneaks into one of them, this crate stops compiling —
+//! which is the desired tripwire.
+//!
+//! Run locally (exhaustive, no preemption bound):
+//!
+//! ```text
+//! cd verify/loom && RUSTFLAGS="--cfg loom" cargo test --release
+//! ```
+
+#[path = "../../../crates/stiknn-core/src/obs/sync.rs"]
+pub mod sync;
+
+#[path = "../../../crates/stiknn-core/src/obs/counters.rs"]
+pub mod counters;
+
+#[path = "../../../crates/stiknn-core/src/obs/ring.rs"]
+pub mod ring;
+
+#[path = "../../../crates/stiknn-core/src/obs/slots.rs"]
+pub mod slots;

@@ -1,0 +1,183 @@
+//! Exhaustive loom models for the obs concurrency core (DESIGN.md §17).
+//!
+//! Each test wraps a small concurrent scenario in `loom::model`, which
+//! replays the body under **every** legal interleaving of its atomic
+//! and lock operations (including the weak-memory value choices relaxed
+//! loads permit). Assertions inside spawned threads check what a racing
+//! observer may see; assertions after `join` check the quiesced state
+//! exactly. The scenarios are deliberately tiny — two writers and one
+//! reader — because loom's guarantee is exhaustive only when the state
+//! space is; the generic cores under test are size-independent.
+//!
+//! Compiled only under `RUSTFLAGS="--cfg loom"` (the CI `loom` leg);
+//! without the cfg this file is empty and `cargo test` is a no-op.
+#![cfg(loom)]
+
+use loom::sync::Arc;
+use loom::thread;
+use stiknn_loom::counters::{Counter, Gauge, Histogram};
+use stiknn_loom::ring::EventRing;
+use stiknn_loom::slots::SlotRing;
+
+/// Two writers mixing `inc` and `add`: no update is lost.
+#[test]
+fn counter_concurrent_writers_lose_nothing() {
+    loom::model(|| {
+        let c = Arc::new(Counter::new());
+        let h: Vec<_> = (0..2)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                thread::spawn(move || {
+                    c.inc();
+                    c.add(2);
+                })
+            })
+            .collect();
+        for t in h {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 6);
+    });
+}
+
+/// A matched +1/−1 pair from racing threads always cancels.
+#[test]
+fn gauge_concurrent_deltas_cancel() {
+    loom::model(|| {
+        let g = Arc::new(Gauge::new());
+        let up = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || g.add(1))
+        };
+        let down = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || g.add(-1))
+        };
+        up.join().unwrap();
+        down.join().unwrap();
+        assert_eq!(g.get(), 0);
+    });
+}
+
+/// Two recording threads plus a racing reader. The histogram's fields
+/// update independently (documented contract: readers tolerate skew),
+/// so the racing reader only asserts bounds; after both writers join,
+/// every field — count, sum, max, per-bucket counts, quantiles — must
+/// be exact.
+#[test]
+fn histogram_concurrent_record_and_read() {
+    loom::model(|| {
+        let h = Arc::new(Histogram::new());
+        let w1 = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || h.record_ns(500))
+        };
+        let w2 = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || h.record_ns(1_500))
+        };
+        let r = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || {
+                // Mid-flight: partial sums are fine, torn values are not.
+                assert!(h.count() <= 2);
+                assert!(h.sum_ns() <= 2_000);
+                assert!(h.max_ns() == 0 || h.max_ns() == 500 || h.max_ns() == 1_500);
+                assert!(h.quantile_ns(1.0) <= 2_000);
+            })
+        };
+        w1.join().unwrap();
+        w2.join().unwrap();
+        r.join().unwrap();
+
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_ns(), 2_000);
+        assert_eq!(h.max_ns(), 1_500);
+        let buckets = h.bucket_counts();
+        assert_eq!(buckets[0], 1); // 500ns -> bucket 0 (<= 1µs)
+        assert_eq!(buckets[1], 1); // 1500ns -> bucket 1 (<= 2µs)
+        assert_eq!(h.quantile_ns(0.5), 1_000);
+        assert_eq!(h.quantile_ns(1.0), 2_000);
+    });
+}
+
+/// Two writers overflowing a cap-2 event ring while a third thread
+/// snapshots: sequence numbers stay unique and ordered at every
+/// observable instant, and the quiesced ring holds exactly the newest
+/// `cap` items with the eviction count balancing the books.
+#[test]
+fn event_ring_push_evict_snapshot() {
+    loom::model(|| {
+        let ring = Arc::new(EventRing::new(2));
+        let writers: Vec<_> = (0..2)
+            .map(|_| {
+                let ring = Arc::clone(&ring);
+                thread::spawn(move || {
+                    ring.push_with(|seq| seq * 10);
+                    ring.push_with(|seq| seq * 10);
+                })
+            })
+            .collect();
+        let reader = {
+            let ring = Arc::clone(&ring);
+            thread::spawn(move || {
+                let (items, dropped) = ring.snapshot();
+                assert!(items.len() <= 2);
+                assert!(dropped <= 2);
+                // Items are seq*10, so ordered-and-unique seqs show
+                // through as strictly increasing values.
+                assert!(items.windows(2).all(|w| w[0] < w[1]));
+            })
+        };
+        for t in writers {
+            t.join().unwrap();
+        }
+        reader.join().unwrap();
+
+        assert_eq!(ring.pushed(), 4);
+        assert_eq!(ring.dropped(), 2);
+        assert_eq!(ring.seqs(), vec![2, 3]);
+        assert_eq!(ring.items(), vec![20, 30]);
+    });
+}
+
+/// Two writers racing the SAME slot of a cap-1 slot ring while a reader
+/// collects. The ring is lossy — either writer may land last — but a
+/// pair is never torn: any observed `(seq, item)` satisfies
+/// `item == seq * 10`, and the claimed sequence numbers stay dense.
+#[test]
+fn slot_ring_same_slot_race_never_tears() {
+    loom::model(|| {
+        let ring = Arc::new(SlotRing::new(1));
+        let writers: Vec<_> = (0..2)
+            .map(|_| {
+                let ring = Arc::clone(&ring);
+                thread::spawn(move || {
+                    ring.push_with(|seq| seq * 10);
+                })
+            })
+            .collect();
+        let reader = {
+            let ring = Arc::clone(&ring);
+            thread::spawn(move || {
+                for (seq, item) in ring.pairs() {
+                    assert!(seq < 2);
+                    assert_eq!(item, seq * 10);
+                }
+            })
+        };
+        for t in writers {
+            t.join().unwrap();
+        }
+        reader.join().unwrap();
+
+        assert_eq!(ring.pushed(), 2);
+        assert_eq!(ring.dropped(), 1);
+        let pairs = ring.pairs();
+        assert_eq!(pairs.len(), 1);
+        let (seq, item) = pairs[0];
+        // Either writer may have landed last — but never a torn mix.
+        assert!(seq < 2);
+        assert_eq!(item, seq * 10);
+    });
+}

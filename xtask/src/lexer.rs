@@ -1,0 +1,286 @@
+//! A minimal Rust surface lexer for the repo lint (DESIGN.md §17).
+//!
+//! The lint rules ([`crate::rules`]) are token-pattern checks, so they
+//! need exactly one thing from a real parser: knowing which bytes are
+//! *code* and which are string literals or comments. This module splits
+//! a source file into per-line masked code (literals and comments
+//! blanked to spaces, so column positions survive) plus per-line
+//! comment text (for `// SAFETY:` and `// lint: allow(...)` lookups).
+//!
+//! Handled: line comments, nested block comments, string literals with
+//! escapes, raw strings (`r"…"`, `r#"…"#`, any hash depth), byte and
+//! byte-raw strings, char literals (including escapes), and the
+//! char-vs-lifetime ambiguity (`'a'` vs `'a`). That is the full set of
+//! Rust constructs that can make a token pattern appear where no token
+//! exists.
+
+/// One source file, split into parallel per-line views.
+pub struct Masked {
+    /// Code with every literal/comment byte replaced by a space.
+    pub code: Vec<String>,
+    /// Comment text (both `//…` and `/*…*/` bodies) per line.
+    pub comments: Vec<String>,
+}
+
+impl Masked {
+    /// True if the line holds no code tokens (blank or comment-only).
+    pub fn is_comment_only(&self, line: usize) -> bool {
+        self.code[line].trim().is_empty()
+    }
+}
+
+enum State {
+    Normal,
+    LineComment,
+    BlockComment { depth: usize },
+    Str,
+    RawStr { hashes: usize },
+    CharLit,
+}
+
+pub fn mask(src: &str) -> Masked {
+    let b: Vec<char> = src.chars().collect();
+    let mut code = Vec::new();
+    let mut comments = Vec::new();
+    let mut code_line = String::new();
+    let mut comment_line = String::new();
+    let mut state = State::Normal;
+    let mut prev_ident = false; // was the previous CODE char ident-ish?
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            // Line comments end here; multi-line states carry over.
+            if matches!(state, State::LineComment) {
+                state = State::Normal;
+            }
+            code.push(std::mem::take(&mut code_line));
+            comments.push(std::mem::take(&mut comment_line));
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                if c == '/' && b.get(i + 1) == Some(&'/') {
+                    state = State::LineComment;
+                    code_line.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && b.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment { depth: 1 };
+                    code_line.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = State::Str;
+                    code_line.push(' ');
+                    i += 1;
+                    continue;
+                }
+                // Raw / byte string starts: r" r#..." b" br" br#...",
+                // only when not glued onto a preceding identifier.
+                if (c == 'r' || c == 'b') && !prev_ident {
+                    let mut j = i + 1;
+                    if c == 'b' && b.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let raw = j > i + 1 || c == 'r';
+                    let mut hashes = 0;
+                    while raw && b.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) == Some(&'"') && (raw || c == 'b') {
+                        for _ in i..=j {
+                            code_line.push(' ');
+                        }
+                        state = if raw {
+                            State::RawStr { hashes }
+                        } else {
+                            State::Str
+                        };
+                        i = j + 1;
+                        prev_ident = false;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // Char literal vs lifetime: an escape, or a closing
+                    // quote two chars on, means literal (covers `b'"'`
+                    // byte chars too). `'a` (no close) is a lifetime
+                    // and stays as code.
+                    let is_char = match b.get(i + 1) {
+                        Some('\\') => true,
+                        Some(_) => b.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    if is_char {
+                        state = State::CharLit;
+                        code_line.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                }
+                code_line.push(c);
+                prev_ident = c.is_alphanumeric() || c == '_';
+                i += 1;
+            }
+            State::LineComment => {
+                comment_line.push(c);
+                code_line.push(' ');
+                i += 1;
+            }
+            State::BlockComment { depth } => {
+                if c == '/' && b.get(i + 1) == Some(&'*') {
+                    state = State::BlockComment { depth: depth + 1 };
+                    code_line.push_str("  ");
+                    i += 2;
+                } else if c == '*' && b.get(i + 1) == Some(&'/') {
+                    state = if depth == 1 {
+                        State::Normal
+                    } else {
+                        State::BlockComment { depth: depth - 1 }
+                    };
+                    code_line.push_str("  ");
+                    i += 2;
+                } else {
+                    comment_line.push(c);
+                    code_line.push(' ');
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // A `\<newline>` continuation: consume only the
+                    // backslash so the newline is processed normally
+                    // (line counts must survive).
+                    if b.get(i + 1) == Some(&'\n') {
+                        code_line.push(' ');
+                        i += 1;
+                    } else {
+                        code_line.push_str("  ");
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    state = State::Normal;
+                    code_line.push(' ');
+                    i += 1;
+                } else {
+                    code_line.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr { hashes } => {
+                if c == '"' && (i + 1..=i + hashes).all(|j| b.get(j) == Some(&'#')) {
+                    for _ in 0..=hashes {
+                        code_line.push(' ');
+                    }
+                    state = State::Normal;
+                    i += hashes + 1;
+                } else {
+                    code_line.push(' ');
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    code_line.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    state = State::Normal;
+                    code_line.push(' ');
+                    i += 1;
+                } else {
+                    code_line.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code_line.is_empty() || !comment_line.is_empty() {
+        code.push(code_line);
+        comments.push(comment_line);
+    }
+    Masked { code, comments }
+}
+
+/// Does `hay` contain `needle` as a whole word (not embedded in a
+/// longer identifier)? Used for token-ish matching on masked code.
+pub fn has_token(hay: &str, needle: &str) -> bool {
+    token_pos(hay, needle).is_some()
+}
+
+/// Byte offset of the first whole-word occurrence of `needle` in `hay`.
+pub fn token_pos(hay: &str, needle: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        let before_ok = at == 0
+            || !hay[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let end = at + needle.len();
+        let after_ok = end >= hay.len()
+            || !hay[end..]
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + needle.len().max(1);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_but_lines_survive() {
+        let m = mask("let a = \"eprintln!(x)\"; // eprintln! here\nlet b = 2;\n");
+        assert_eq!(m.code.len(), 2);
+        assert!(!m.code[0].contains("eprintln"));
+        assert!(m.comments[0].contains("eprintln! here"));
+        assert!(m.code[1].contains("let b = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_are_masked() {
+        let m = mask("let p = r#\"unsafe { }\"#; let c = '\"'; let l: &'a str = x;\n");
+        assert!(!m.code[0].contains("unsafe"));
+        // The lifetime survives as code; the char literal is blanked.
+        assert!(m.code[0].contains("&'a str"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let m = mask("a /* one /* two */ still */ b\n/* open\nunsafe {\n*/ c\n");
+        assert!(m.code[0].contains('a') && m.code[0].contains('b'));
+        assert!(m.code[1].trim().is_empty());
+        assert!(!m.code[2].contains("unsafe"));
+        assert!(m.comments[2].contains("unsafe"));
+        assert!(m.code[3].contains('c'));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let m = mask("let s = \"a\\\"b unsafe c\"; call();\n");
+        assert!(!m.code[0].contains("unsafe"));
+        assert!(m.code[0].contains("call();"));
+    }
+
+    #[test]
+    fn token_matching_respects_word_boundaries() {
+        assert!(has_token("distances_into(q)", "distances_into"));
+        assert!(!has_token("distances_into_kernel(q)", "distances_into"));
+        assert!(!has_token("xdistances_into(q)", "distances_into"));
+        assert!(has_token("x.load(Relaxed)", "load"));
+        assert!(!has_token("x.overload(3)", "load"));
+    }
+}

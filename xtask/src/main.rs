@@ -1,0 +1,132 @@
+//! `cargo xtask` — repo automation (DESIGN.md §17).
+//!
+//! The only subcommand today is `lint`: walk every workspace crate's
+//! sources and enforce the invariants in [`rules`]. Dependency-free on
+//! purpose — the lint must run wherever the workspace builds, including
+//! the offline tier-1 environment, so there is no syn/clap/walkdir.
+//!
+//! Exit status: 0 clean, 1 violations (printed one per line as
+//! `path:line: [rule] excerpt`), 2 usage/IO errors.
+
+mod lexer;
+mod rules;
+
+use rules::{lint_source, Scope, Violation};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("lint") => cmd_lint(&args[1..]),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--root DIR]");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Per-file rule scope (the policy layer over [`rules::lint_source`]):
+///
+/// * binary/tooling crates (`stiknn-cli`, `xtask`) keep console output
+///   and ad-hoc timing — library discipline off;
+/// * `knn/` IS the distance implementation — `raw-distance` off there;
+/// * `obs/` IS the clock — `raw-clock` off there;
+/// * everything else gets the full set.
+fn scope_of(rel: &str) -> Scope {
+    let tooling = rel.starts_with("crates/stiknn-cli/") || rel.starts_with("xtask/");
+    Scope {
+        library: !tooling,
+        distance: !tooling && !rel.starts_with("crates/stiknn-core/src/knn/"),
+        clock: !tooling && !rel.starts_with("crates/stiknn-core/src/obs/"),
+    }
+}
+
+fn cmd_lint(args: &[String]) -> i32 {
+    let mut root = workspace_root();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("--root needs a directory");
+                    return 2;
+                }
+            },
+            other => {
+                eprintln!("unknown lint flag '{other}'");
+                return 2;
+            }
+        }
+    }
+
+    let mut files = Vec::new();
+    for dir in ["crates", "xtask/src"] {
+        collect_rs(&root.join(dir), &mut files);
+    }
+    files.sort();
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut scanned = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        // Lint crate sources; leave integration tests, benches and
+        // examples to their own idioms.
+        let in_src = rel.contains("/src/") || rel.starts_with("xtask/src/");
+        if !in_src {
+            continue;
+        }
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("xtask lint: cannot read {rel}: {e}");
+                return 2;
+            }
+        };
+        scanned += 1;
+        violations.extend(lint_source(&rel, &src, scope_of(&rel)));
+    }
+
+    if violations.is_empty() {
+        println!("xtask lint: OK ({scanned} files, 6 rules)");
+        0
+    } else {
+        for v in &violations {
+            println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.excerpt);
+        }
+        println!("xtask lint: {} violation(s)", violations.len());
+        1
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            let name = entry.file_name();
+            if name != "target" {
+                collect_rs(&path, out);
+            }
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// The workspace root: walk up from this binary's manifest directory
+/// (compile-time, so `cargo xtask` works from any subdirectory).
+fn workspace_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or(manifest)
+}

@@ -1,0 +1,411 @@
+//! The repo lint rules (`cargo xtask lint`, DESIGN.md §17).
+//!
+//! Each rule encodes an invariant this codebase previously enforced by
+//! review alone:
+//!
+//! | rule                  | invariant                                                  |
+//! |-----------------------|------------------------------------------------------------|
+//! | `partial-cmp-unwrap`  | float ordering goes through `total_cmp` (+ index tiebreak) |
+//! | `bare-eprintln`       | library crates log via `ObsHandle::event_logged`           |
+//! | `undocumented-unsafe` | every `unsafe` carries a `SAFETY:` / `# Safety` rationale  |
+//! | `implicit-ordering`   | every atomic op names its `Ordering` explicitly            |
+//! | `raw-distance`        | distance math goes through the kernel dispatch             |
+//! | `raw-clock`           | timestamps go through `obs::now()`                         |
+//!
+//! Escape hatch: a `// lint: allow(<rule>)` comment on the same line or
+//! in the comment block directly above the flagged line, stating why
+//! the exception is deliberate. Scoping (which crates/rules pair up,
+//! and the kernel/obs home directories where the raw calls ARE the
+//! implementation) lives in [`crate::main`]'s file walk.
+
+use crate::lexer::{has_token, mask, token_pos, Masked};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub path: String,
+    pub line: usize, // 1-based
+    pub rule: &'static str,
+    pub excerpt: String,
+}
+
+/// Which rule families apply to a file (decided by the caller from the
+/// file's path — see `scope_of` in main.rs).
+#[derive(Clone, Copy)]
+pub struct Scope {
+    /// Library-crate discipline: bare-eprintln, raw-clock.
+    pub library: bool,
+    /// Distance calls must use the kernel (off inside knn/ itself).
+    pub distance: bool,
+    /// Clock reads must use obs::now (off inside obs/ itself).
+    pub clock: bool,
+}
+
+const ATOMIC_METHODS: [&str; 12] = [
+    "load",
+    "store",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+const ORDERING_TOKENS: [&str; 6] = [
+    "Relaxed", "Acquire", "Release", "AcqRel", "SeqCst", "Ordering",
+];
+
+/// Lint one file's source. `path` is used for labels only — scoping is
+/// the caller's `scope` — so this is directly unit-testable on fixture
+/// snippets.
+pub fn lint_source(path: &str, src: &str, scope: Scope) -> Vec<Violation> {
+    let m = mask(src);
+    let in_test = test_block_lines(&m);
+    let mut out = Vec::new();
+    let mut flag = |line: usize, rule: &'static str, src_lines: &[&str]| {
+        if !allowed(&m, line, rule) {
+            out.push(Violation {
+                path: path.to_string(),
+                line: line + 1,
+                rule,
+                excerpt: src_lines.get(line).map_or("", |l| l.trim()).to_string(),
+            });
+        }
+    };
+    let src_lines: Vec<&str> = src.lines().collect();
+
+    for (i, code) in m.code.iter().enumerate() {
+        let tests = in_test[i];
+
+        // partial-cmp-unwrap: any .partial_cmp( use. The clippy
+        // disallowed-methods list bans it too; this copy runs offline
+        // with the plain toolchain. (Applies in tests as well: tests
+        // set the conventions the next reader copies.)
+        if code.contains(".partial_cmp(") {
+            flag(i, "partial-cmp-unwrap", &src_lines);
+        }
+
+        // bare-eprintln: library crates must route operational output
+        // through ObsHandle::event_logged so every log line has a
+        // structured twin in the event ring.
+        if scope.library && !tests && code.contains("eprintln!") {
+            flag(i, "bare-eprintln", &src_lines);
+        }
+
+        // undocumented-unsafe: every unsafe block/fn carries a nearby
+        // SAFETY rationale (comment may sit above attributes).
+        if has_token(code, "unsafe") && !safety_documented(&m, i) {
+            flag(i, "undocumented-unsafe", &src_lines);
+        }
+
+        // implicit-ordering: atomic calls must name their Ordering in
+        // the argument list (no default-SeqCst helpers drifting in).
+        if atomic_call_without_ordering(&m, i).is_some() {
+            flag(i, "implicit-ordering", &src_lines);
+        }
+
+        // raw-distance: the scalar reference loop bypasses the SIMD
+        // dispatch; everything but knn/ itself and marked oracles must
+        // call distances_into_kernel / distances_block. Only CALLS
+        // count — `use` imports of the symbol are fine.
+        if scope.distance && !tests && is_called(code, "distances_into") {
+            flag(i, "raw-distance", &src_lines);
+        }
+
+        // raw-clock: timestamps go through obs::now() so there is one
+        // auditable clock seam.
+        if scope.clock && !tests && code.contains("Instant::now") {
+            flag(i, "raw-clock", &src_lines);
+        }
+    }
+    out
+}
+
+/// Is `name` used as a call on this line (token followed by `(`)?
+fn is_called(code: &str, name: &str) -> bool {
+    match token_pos(code, name) {
+        Some(at) => code[at + name.len()..].trim_start().starts_with('('),
+        None => false,
+    }
+}
+
+/// Is a `// lint: allow(rule)` marker on the flagged line or in the
+/// contiguous comment block directly above it?
+fn allowed(m: &Masked, line: usize, rule: &str) -> bool {
+    let needle = format!("lint: allow({rule})");
+    if m.comments[line].contains(&needle) {
+        return true;
+    }
+    let mut j = line;
+    while j > 0 && line - j < 10 {
+        j -= 1;
+        if !m.is_comment_only(j) {
+            return false;
+        }
+        if m.comments[j].contains(&needle) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is a SAFETY rationale within the 10 lines above (or on) `line`?
+/// Unlike [`allowed`], attributes and the `unsafe` line itself may sit
+/// between the comment and the flagged line — rustdoc `# Safety`
+/// sections precede `#[target_feature]` attributes.
+fn safety_documented(m: &Masked, line: usize) -> bool {
+    let lo = line.saturating_sub(10);
+    (lo..=line).any(|j| m.comments[j].contains("SAFETY:") || m.comments[j].contains("# Safety"))
+}
+
+/// Find an atomic-method call on `line` whose argument list (up to 4
+/// lines, for rustfmt-wrapped calls) contains no Ordering token.
+fn atomic_call_without_ordering(m: &Masked, line: usize) -> Option<&'static str> {
+    let code = &m.code[line];
+    for method in ATOMIC_METHODS {
+        let pat = format!(".{method}(");
+        let Some(at) = code.find(&pat) else { continue };
+        // Word-boundary check on the method name (".load(" can suffix
+        // ".overload(" textually).
+        if token_pos(&code[at + 1..], method) != Some(0) {
+            continue;
+        }
+        let open = at + pat.len() - 1;
+        let mut args = String::new();
+        let mut depth = 0usize;
+        'scan: for (li, text) in m.code.iter().enumerate().skip(line).take(4) {
+            let s = if li == line { &text[open..] } else { &text[..] };
+            for c in s.chars() {
+                match c {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break 'scan;
+                        }
+                    }
+                    _ => {}
+                }
+                if depth > 0 {
+                    args.push(c);
+                }
+            }
+            args.push(' ');
+        }
+        if !ORDERING_TOKENS.iter().any(|t| has_token(&args, t)) {
+            return Some(method);
+        }
+    }
+    None
+}
+
+/// Mark every line inside `#[cfg(test)] mod … { … }` blocks, by brace
+/// matching on masked code. Test modules keep their own idioms (oracle
+/// distance loops, raw timing in assertions) without markers.
+fn test_block_lines(m: &Masked) -> Vec<bool> {
+    let mut flags = vec![false; m.code.len()];
+    let mut i = 0;
+    while i < m.code.len() {
+        if m.code[i].contains("#[cfg(test)]") {
+            // Find the mod line, then brace-match to its end.
+            let mut j = i;
+            while j < m.code.len() && !has_token(&m.code[j], "mod") {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            let mut started = false;
+            while j < m.code.len() {
+                for c in m.code[j].chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            started = true;
+                        }
+                        '}' => depth = depth.saturating_sub(1),
+                        _ => {}
+                    }
+                }
+                flags[j] = true;
+                if started && depth == 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: Scope = Scope {
+        library: true,
+        distance: true,
+        clock: true,
+    };
+
+    fn rules_hit(src: &str) -> Vec<&'static str> {
+        lint_source("fixture.rs", src, ALL)
+            .into_iter()
+            .map(|v| v.rule)
+            .collect()
+    }
+
+    #[test]
+    fn clean_source_passes() {
+        let src = r#"
+            pub fn tidy(xs: &mut [f64]) {
+                xs.sort_by(|a, b| a.total_cmp(b));
+                let t0 = crate::obs::now();
+                let _ = t0;
+            }
+        "#;
+        assert!(rules_hit(src).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_is_flagged_and_reported_with_position() {
+        let src = "fn f(a: f64, b: f64) {\n    let _ = a.partial_cmp(&b).unwrap();\n}\n";
+        let v = lint_source("fixture.rs", src, ALL);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "partial-cmp-unwrap");
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].excerpt.contains("partial_cmp"));
+    }
+
+    #[test]
+    fn bare_eprintln_flagged_only_in_library_scope() {
+        let src = "fn f() {\n    eprintln!(\"boom\");\n}\n";
+        assert_eq!(rules_hit(src), vec!["bare-eprintln"]);
+        let bin = Scope {
+            library: false,
+            ..ALL
+        };
+        assert!(lint_source("fixture.rs", src, bin).is_empty());
+    }
+
+    #[test]
+    fn eprintln_in_strings_comments_and_tests_is_ignored() {
+        let src = r#"
+            fn f() {
+                let tip = "try eprintln!(x)"; // or eprintln! by hand
+                let _ = tip;
+            }
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn t() {
+                    eprintln!("test diagnostics are fine");
+                    let _ = std::time::Instant::now();
+                }
+            }
+        "#;
+        assert!(rules_hit(src).is_empty());
+    }
+
+    #[test]
+    fn undocumented_unsafe_flagged_documented_passes() {
+        let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules_hit(bad), vec!["undocumented-unsafe"]);
+
+        let good = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        assert!(rules_hit(good).is_empty());
+
+        // Rustdoc `# Safety` above attributes also counts.
+        let attr = "/// # Safety\n/// Caller must check avx2.\n#[target_feature(enable = \"avx2\")]\nunsafe fn g() {}\n";
+        assert!(rules_hit(attr).is_empty());
+    }
+
+    #[test]
+    fn atomic_without_ordering_flagged_explicit_passes() {
+        let bad = "fn f(a: &AtomicU64) -> u64 {\n    a.fetch_add(1);\n    a.load()\n}\n";
+        assert_eq!(
+            rules_hit(bad),
+            vec!["implicit-ordering", "implicit-ordering"]
+        );
+
+        let good = "fn f(a: &AtomicU64) -> u64 {\n    a.fetch_add(1, Ordering::Relaxed);\n    a.load(Relaxed)\n}\n";
+        assert!(rules_hit(good).is_empty());
+
+        // Wrapped across lines (rustfmt style) still resolves: the
+        // argument scan window reaches the Ordering on line 4.
+        let wrapped =
+            "fn f(a: &AtomicU64) {\n    a.compare_exchange_weak(\n        0,\n        1,\n        Ordering::AcqRel,\n        Ordering::Relaxed,\n    );\n}\n";
+        assert!(rules_hit(wrapped).is_empty());
+
+        // Non-atomic .store( on some other type must name its ordering
+        // or get a marker — the rule is textual by design.
+        let other = "fn f(s: &Store) {\n    s.store(5);\n}\n";
+        assert_eq!(rules_hit(other), vec!["implicit-ordering"]);
+    }
+
+    #[test]
+    fn raw_distance_and_raw_clock_flagged_in_scope() {
+        let src = "fn f() {\n    distances_into(q, x, d, m, &mut out);\n    let t = std::time::Instant::now();\n}\n";
+        assert_eq!(rules_hit(src), vec!["raw-distance", "raw-clock"]);
+        // Kernel twin never matches the distance token.
+        let kernel = "fn f() {\n    distances_into_kernel(q, x, d, m, &n, &mut out);\n}\n";
+        assert!(rules_hit(kernel).is_empty());
+        // Home-directory scopes turn the rules off.
+        let home = Scope {
+            distance: false,
+            clock: false,
+            ..ALL
+        };
+        assert!(lint_source("fixture.rs", src, home).is_empty());
+    }
+
+    #[test]
+    fn allow_markers_suppress_same_line_and_comment_block_above() {
+        let same = "fn f() {\n    eprintln!(\"x\"); // lint: allow(bare-eprintln) — operator console\n}\n";
+        assert!(rules_hit(same).is_empty());
+
+        let above = "fn f() {\n    // lint: allow(raw-clock) — measuring the clock itself\n    // (second comment line between marker and code is fine)\n    let t = Instant::now();\n}\n";
+        assert!(rules_hit(above).is_empty());
+
+        // The marker names ONE rule; others on the line still fire.
+        let wrong = "fn f() {\n    // lint: allow(raw-clock)\n    eprintln!(\"x\");\n}\n";
+        assert_eq!(rules_hit(wrong), vec!["bare-eprintln"]);
+
+        // A marker does not leak past intervening code.
+        let stale = "fn f() {\n    // lint: allow(bare-eprintln)\n    let x = 1;\n    eprintln!(\"{x}\");\n}\n";
+        assert_eq!(rules_hit(stale), vec!["bare-eprintln"]);
+    }
+
+    #[test]
+    fn seeded_violations_in_realistic_snippet_all_fire() {
+        // The acceptance fixture: one snippet seeding every rule.
+        let src = r#"
+            fn seeded(a: &AtomicU64, xs: &mut [f64]) {
+                xs.sort_by(|p, q| p.partial_cmp(q).unwrap());
+                eprintln!("oops");
+                let _ = unsafe { *xs.as_ptr() };
+                a.fetch_add(1);
+                distances_into(q, x, d, m, &mut out);
+                let _t = std::time::Instant::now();
+            }
+        "#;
+        let mut rules = rules_hit(src);
+        rules.sort();
+        assert_eq!(
+            rules,
+            vec![
+                "bare-eprintln",
+                "implicit-ordering",
+                "partial-cmp-unwrap",
+                "raw-clock",
+                "raw-distance",
+                "undocumented-unsafe",
+            ]
+        );
+    }
+}
